@@ -1,0 +1,43 @@
+//! Ablation (§VII-A, MG spike): the 512-process congestion threshold. The
+//! paper saw +33% on MG at 256 comp + 256 rep (=512 procs) and only +12%
+//! with 255 reps — a knee in the interconnect, reproduced here by the
+//! fabric's congestion model.
+
+mod common;
+
+use partreper::apps::AppKind;
+use partreper::config::JobConfig;
+use partreper::harness::{run_app, Backend};
+
+fn main() {
+    common::hr("Ablation — MG congestion threshold at 512 processes");
+    // Scaled-down knee: congestion at 16 procs so 8comp+8rep trips it.
+    let knee = if common::full() { 512 } else { 16 };
+    let ncomp = knee / 2;
+    let mut cfg = JobConfig::new(ncomp, 100.0);
+    cfg.set("net.inject", "true").unwrap();
+    cfg.set("net.congestion_procs", &knee.to_string()).unwrap();
+    cfg.set("net.congestion_factor", "2.5").unwrap();
+    let iters = 6;
+
+    let base = run_app(&cfg, AppKind::Mg, Backend::EmpiBaseline, iters, None);
+    println!("baseline ({} procs): {:?}", ncomp, base.wall);
+
+    // 100% replication: ncomp+nrep == knee -> congested.
+    let at_knee = run_app(&cfg, AppKind::Mg, Backend::PartReper, iters, None);
+    let o_knee = (at_knee.wall.as_secs_f64() / base.wall.as_secs_f64() - 1.0) * 100.0;
+    println!("partreper @ {} procs (knee hit): {:?} ({o_knee:+.1}%)", knee, at_knee.wall);
+
+    // One fewer replica: just below the knee (the paper's 256c+255r probe).
+    let mut cfg2 = cfg.clone();
+    let pct_minus_one = 100.0 * (ncomp as f64 - 1.0) / ncomp as f64;
+    cfg2.set("rdegree", &pct_minus_one.to_string()).unwrap();
+    let below = run_app(&cfg2, AppKind::Mg, Backend::PartReper, iters, None);
+    let o_below = (below.wall.as_secs_f64() / base.wall.as_secs_f64() - 1.0) * 100.0;
+    println!(
+        "partreper @ {} procs (below knee): {:?} ({o_below:+.1}%)",
+        knee - 1,
+        below.wall
+    );
+    println!("shape: knee overhead {o_knee:+.1}% >> below-knee {o_below:+.1}% (paper: 33% vs 12%)");
+}

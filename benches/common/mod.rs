@@ -1,0 +1,50 @@
+//! Shared scaffolding for the harness=false bench targets.
+//!
+//! Scale control: benches default to laptop-scale (8-16 ranks) so
+//! `cargo bench` finishes in minutes; set `PARTREPER_BENCH_FULL=1` for the
+//! paper-scale sweep (64/128/256 computational processes).
+
+#![allow(dead_code)]
+
+use partreper::config::JobConfig;
+use partreper::runtime::ComputeEngine;
+
+pub fn full() -> bool {
+    std::env::var_os("PARTREPER_BENCH_FULL").is_some()
+}
+
+pub fn ncomps() -> Vec<usize> {
+    if full() {
+        vec![64, 128, 256]
+    } else {
+        vec![8]
+    }
+}
+
+pub fn reps() -> usize {
+    if full() {
+        5
+    } else {
+        2
+    }
+}
+
+/// Engine if artifacts are built; benches degrade to native compute
+/// gracefully (the comparison is overhead-shaped either way).
+pub fn engine() -> Option<ComputeEngine> {
+    match ComputeEngine::start(ComputeEngine::default_dir(), 2) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("[bench] no PJRT artifacts ({e}); using native compute");
+            None
+        }
+    }
+}
+
+pub fn base_cfg() -> JobConfig {
+    JobConfig::default()
+}
+
+pub fn hr(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,24 @@
+//! Fig 8 (applications): failure-free overheads for CloverLeaf and the
+//! PIC skeleton. Paper shape: ≤ ~9.7%, flat in the replication degree.
+
+mod common;
+
+use partreper::apps::AppKind;
+use partreper::config::ReplicationDegree;
+use partreper::harness::experiments::{fig8, format_fig8};
+
+fn main() {
+    common::hr("Fig 8 — failure-free overheads, scientific applications");
+    let eng = common::engine();
+    let cells = fig8(
+        &[AppKind::CloverLeaf, AppKind::Pic],
+        &common::ncomps(),
+        &ReplicationDegree::PAPER_SWEEP,
+        if common::full() { 1.0 } else { 0.5 },
+        common::reps(),
+        eng,
+        &common::base_cfg(),
+    );
+    print!("{}", format_fig8(&cells));
+    assert!(cells.iter().all(|c| c.verified), "checksum mismatch");
+}

@@ -1,0 +1,48 @@
+//! Fig 8 (NPB grid): failure-free overhead of PartRePer vs the native
+//! baseline, swept over process counts and replication degrees.
+//! Paper shape to reproduce: overheads ≤ ~6.4% with a low skew, IS
+//! *negative* (−14..−74%), no trend in the replication degree.
+
+mod common;
+
+use partreper::apps::AppKind;
+use partreper::config::ReplicationDegree;
+use partreper::harness::experiments::{fig8, format_fig8};
+
+fn main() {
+    common::hr("Fig 8 — failure-free overheads, NAS Parallel Benchmarks");
+    let eng = common::engine();
+    let cells = fig8(
+        &AppKind::NPB,
+        &common::ncomps(),
+        &ReplicationDegree::PAPER_SWEEP,
+        if common::full() { 1.0 } else { 0.5 },
+        common::reps(),
+        eng,
+        &common::base_cfg(),
+    );
+    print!("{}", format_fig8(&cells));
+    // Paper-shape summary.
+    let npb_non_is: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.app != AppKind::Is)
+        .map(|c| c.overhead_norm_pct)
+        .collect();
+    let med = {
+        let mut v = npb_non_is.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let is_med = {
+        let mut v: Vec<f64> = cells
+            .iter()
+            .filter(|c| c.app == AppKind::Is)
+            .map(|c| c.overhead_norm_pct)
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    println!("\nshape: median non-IS normalized overhead {med:+.2}% (paper: low, ≤6.4%)");
+    println!("shape: median IS overhead {is_med:+.2}% (paper: negative)");
+    assert!(cells.iter().all(|c| c.verified), "checksum mismatch");
+}

@@ -1,0 +1,30 @@
+//! Fig 9(a): overheads in the presence of failures (CG, BT, LU; full
+//! replication; Weibull fault injector), split into error-handler time vs
+//! the rest. Paper shape: total 11–40% vs the failure-free baseline, most
+//! of it attributable to the error handler; LU worst.
+
+mod common;
+
+use partreper::apps::AppKind;
+use partreper::harness::experiments::{fig9a, format_fig9a};
+
+fn main() {
+    common::hr("Fig 9(a) — overheads under injected failures");
+    let eng = common::engine();
+    let mut cfg = common::base_cfg();
+    // Injector tuned so a handful of failures strike within the run.
+    cfg.faults.weibull_shape = 0.9;
+    cfg.faults.weibull_scale_s = if common::full() { 1.0 } else { 0.15 };
+    cfg.faults.max_failures = 3;
+    let ncomp = if common::full() { 256 } else { 8 };
+    let iters = if common::full() { 40 } else { 25 };
+    let rows = fig9a(
+        &[AppKind::Cg, AppKind::Bt, AppKind::Lu],
+        ncomp,
+        iters,
+        common::reps().max(3),
+        eng,
+        &cfg,
+    );
+    print!("{}", format_fig9a(&rows));
+}

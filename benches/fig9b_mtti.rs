@@ -1,0 +1,47 @@
+//! Fig 9(b): Mean Time To Interruption vs replication degree (CG, BT, LU).
+//! Paper shape: MTTI grows with the degree; 100% replication runs complete
+//! (MTTI is a lower bound); 50% roughly doubles CG's MTTI.
+
+mod common;
+
+use partreper::apps::AppKind;
+use partreper::config::ReplicationDegree;
+use partreper::harness::experiments::{fig9b, format_fig9b};
+
+fn main() {
+    common::hr("Fig 9(b) — MTTI vs replication degree");
+    let eng = common::engine();
+    let mut cfg = common::base_cfg();
+    cfg.faults.weibull_shape = 0.9;
+    cfg.faults.weibull_scale_s = if common::full() { 0.5 } else { 0.05 };
+    cfg.faults.max_failures = 16;
+    let ncomp = if common::full() { 256 } else { 8 };
+    let iters = if common::full() { 60 } else { 40 };
+    let runs = if common::full() { 10 } else { 4 };
+    let rows = fig9b(
+        &[AppKind::Cg, AppKind::Bt, AppKind::Lu],
+        ncomp,
+        &ReplicationDegree::PAPER_SWEEP,
+        iters,
+        runs,
+        eng,
+        &cfg,
+    );
+    print!("{}", format_fig9b(&rows));
+    // Shape check per app: MTTI at 100% ≥ MTTI at 0%.
+    for app in [AppKind::Cg, AppKind::Bt, AppKind::Lu] {
+        let at = |d: f64| {
+            rows.iter()
+                .find(|r| r.app == app && r.rdegree == d)
+                .map(|r| r.mtti_s)
+                .unwrap()
+        };
+        println!(
+            "shape {}: MTTI 0%={:.4}s -> 100%={:.4}s ({}x)",
+            app.name(),
+            at(0.0),
+            at(100.0),
+            at(100.0) / at(0.0)
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Microbench: the EMPI-vs-OMPI performance gap the paper's design
+//! exploits (bulk data on the tuned library, control on the FT one), plus
+//! p2p latency and collective scaling on the simulated interconnect.
+
+mod common;
+
+use std::time::Instant;
+
+use partreper::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
+use partreper::fabric::{Fabric, NetModel, ProcSet};
+use partreper::util::{f32s_to_bytes, Summary};
+
+fn p2p_roundtrip(model: NetModel, bytes: usize, iters: usize) -> f64 {
+    let procs = ProcSet::new(2);
+    let fabric = Fabric::new("mb", procs, model.with_inject(true));
+    let ctx = fabric.alloc_ctx();
+    let f2 = fabric.clone();
+    let h = std::thread::spawn(move || {
+        let comm = Comm::world(f2, ctx, 1);
+        for _ in 0..iters {
+            let m = comm.recv(Src::Rank(0), Tag::Tag(1)).unwrap();
+            comm.send(0, 2, &m.data).unwrap();
+        }
+    });
+    let comm = Comm::world(fabric, ctx, 0);
+    let payload = vec![0u8; bytes];
+    let t = Instant::now();
+    for _ in 0..iters {
+        comm.send(1, 1, &payload).unwrap();
+        comm.recv(Src::Rank(1), Tag::Tag(2)).unwrap();
+    }
+    let dt = t.elapsed().as_secs_f64() / iters as f64 / 2.0;
+    h.join().unwrap();
+    dt
+}
+
+fn allreduce_time(n: usize, elems: usize, iters: usize) -> f64 {
+    let procs = ProcSet::new(n);
+    let fabric = Fabric::new("mb", procs, NetModel::empi_tuned().with_inject(true));
+    let ctx = fabric.alloc_ctx();
+    let hs: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || {
+                let comm = Comm::world(fabric, ctx, r);
+                let data = f32s_to_bytes(&vec![1.0f32; elems]);
+                let t = Instant::now();
+                for _ in 0..iters {
+                    coll::allreduce(&comm, DType::F32, ReduceOp::Sum, &data).unwrap();
+                }
+                t.elapsed().as_secs_f64() / iters as f64
+            })
+        })
+        .collect();
+    let mut s = Summary::new();
+    for h in hs {
+        s.add(h.join().unwrap());
+    }
+    s.mean()
+}
+
+fn main() {
+    common::hr("Micro — fabric p2p latency (EMPI vs OMPI profiles)");
+    println!("bytes     EMPI one-way    OMPI one-way    ratio");
+    for bytes in [0usize, 1024, 65536, 1 << 20] {
+        let e = p2p_roundtrip(NetModel::empi_tuned(), bytes, 200);
+        let o = p2p_roundtrip(NetModel::ompi_generic(), bytes, 200);
+        println!(
+            "{:>8} {:>12.2}us {:>12.2}us {:>8.2}x",
+            bytes,
+            e * 1e6,
+            o * 1e6,
+            o / e
+        );
+    }
+
+    common::hr("Micro — EMPI allreduce scaling (recursive doubling)");
+    println!("ranks   f32 elems   time/op");
+    for n in [4usize, 8, 16, 32] {
+        for elems in [16usize, 4096] {
+            let t = allreduce_time(n, elems, 50);
+            println!("{:>5} {:>10} {:>9.2}us", n, elems, t * 1e6);
+        }
+    }
+}

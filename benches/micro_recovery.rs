@@ -1,0 +1,48 @@
+//! Microbench: §VI failure management — error-handler latency by failure
+//! kind (replica death / promotion / multiple failures), and recovery work
+//! (resends, replays) under a p2p+collective workload.
+
+mod common;
+
+use partreper::apps::AppKind;
+use partreper::config::JobConfig;
+use partreper::harness::{run_app, Backend};
+use partreper::util::Summary;
+
+fn main() {
+    common::hr("Micro — recovery cost by failure kind");
+    let ncomp = if common::full() { 64 } else { 8 };
+    println!("scenario            handler_s/rank  resends  replays  promotions");
+    for (label, seed, maxf) in [
+        ("one failure", 11u64, 1usize),
+        ("two failures", 12, 2),
+        ("four failures", 13, 4),
+    ] {
+        let mut handler = Summary::new();
+        let mut resends = 0;
+        let mut replays = 0;
+        let mut promos = 0;
+        for rep in 0..3 {
+            let mut cfg = JobConfig::new(ncomp, 100.0);
+            cfg.faults.enabled = true;
+            cfg.faults.weibull_shape = 1.0;
+            cfg.faults.weibull_scale_s = 0.03;
+            cfg.faults.max_failures = maxf;
+            cfg.faults.seed = seed + rep;
+            let r = run_app(&cfg, AppKind::Lu, Backend::PartReper, 20, None);
+            if r.completed() {
+                handler.add(r.error_handler_s / (2 * ncomp) as f64);
+                resends += r.resends;
+                replays += r.replays;
+                promos += r.promotions;
+            }
+        }
+        println!(
+            "{label:<19} {:>14.4} {:>8} {:>8} {:>11}",
+            handler.mean(),
+            resends,
+            replays,
+            promos
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Microbench: §III-A process-image replication — transfer cost vs image
+//! size and chunk count, plus the repair-branch costs (count/size
+//! mismatches).
+
+mod common;
+
+use std::time::Instant;
+
+use partreper::procimg::{transfer, ProcessImage};
+use partreper::util::Summary;
+
+fn image_with(chunks: usize, chunk_bytes: usize) -> ProcessImage {
+    let mut img = ProcessImage::new();
+    img.data.define("iter", &0u64.to_le_bytes());
+    for i in 0..chunks {
+        let a = img.heap.alloc(0x1000 + i as u64 * 8, chunk_bytes);
+        img.heap.chunk_mut(a).data.fill((i & 0xFF) as u8);
+    }
+    img.stack.bytes = vec![0x5; 4096];
+    img.stack.setjmp(0, 0);
+    img
+}
+
+fn main() {
+    common::hr("Micro — process-image replication (§III-A)");
+    println!("chunks  chunk_KiB  serialize(us)  transfer(us)  MB/s");
+    for &(chunks, kib) in &[(8usize, 64usize), (64, 64), (8, 1024), (64, 256)] {
+        let src = image_with(chunks, kib * 1024);
+        let mut ser = Summary::new();
+        let mut tr = Summary::new();
+        for _ in 0..20 {
+            let t = Instant::now();
+            let bytes = src.to_bytes();
+            ser.add(t.elapsed().as_secs_f64() * 1e6);
+            let restored = ProcessImage::from_bytes(&bytes);
+            let mut tgt = ProcessImage::new();
+            let t = Instant::now();
+            transfer(&restored, &mut tgt);
+            tr.add(t.elapsed().as_secs_f64() * 1e6);
+        }
+        let total_mb = (chunks * kib) as f64 / 1024.0;
+        println!(
+            "{:>6} {:>10} {:>14.1} {:>13.1} {:>7.0}",
+            chunks,
+            kib,
+            ser.median(),
+            tr.median(),
+            total_mb / (tr.median() / 1e6)
+        );
+    }
+
+    common::hr("Micro — repair branches (count/size matching)");
+    let src = image_with(32, 64 * 1024);
+    for (label, tgt_chunks) in [("equal", 32usize), ("target short", 8), ("target long", 64)] {
+        let mut s = Summary::new();
+        for _ in 0..20 {
+            let mut tgt = image_with(tgt_chunks, 64 * 1024);
+            let t = Instant::now();
+            let stats = transfer(&src, &mut tgt);
+            s.add(t.elapsed().as_secs_f64() * 1e6);
+            assert_eq!(stats.heap_bytes, 32 * 64 * 1024);
+        }
+        println!("{label:>13}: {:>8.1}us", s.median());
+    }
+}

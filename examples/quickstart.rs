@@ -1,0 +1,37 @@
+//! Quickstart: launch a PartRePer job (8 computational ranks, 50%
+//! replication), run a CG mini-benchmark, inject one failure mid-run, and
+//! watch the library survive it.
+//!
+//!     cargo run --release --example quickstart
+
+use partreper::apps::AppKind;
+use partreper::config::JobConfig;
+use partreper::harness::{run_app, Backend};
+use partreper::runtime::ComputeEngine;
+
+fn main() {
+    let mut cfg = JobConfig::new(8, 50.0);
+    cfg.faults.enabled = true;
+    cfg.faults.weibull_shape = 1.0;
+    cfg.faults.weibull_scale_s = 0.05;
+    cfg.faults.max_failures = 1;
+
+    let eng = ComputeEngine::start(ComputeEngine::default_dir(), 1).ok();
+    println!(
+        "launching CG: {} comp + {} replicas, PJRT artifacts: {}",
+        cfg.ncomp,
+        cfg.nrep(),
+        if eng.is_some() { "loaded" } else { "absent (native compute)" },
+    );
+
+    let r = run_app(&cfg, AppKind::Cg, Backend::PartReper, 25, eng);
+    println!("wall time:          {:?}", r.wall);
+    println!("completed ranks:    {}", r.done);
+    println!("killed by injector: {} {:?}", r.killed, r.injections);
+    println!("replica promotions: {}", r.promotions);
+    println!("handler entries:    {}", r.handler_entries);
+    println!("recovery resends:   {}", r.resends);
+    println!("checksum:           {:?}", r.checksum);
+    assert!(r.completed(), "job should survive one failure at 50% replication of rank 0..4");
+    println!("OK — survived the failure and completed.");
+}

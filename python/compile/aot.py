@@ -1,0 +1,65 @@
+"""AOT lowering: every L2 graph in `model.SPECS` → HLO **text** artifacts
+the Rust runtime loads via `HloModuleProto::from_text_file`.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits protos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowered with `return_tuple=True`; the Rust side unwraps with
+`to_tuple1()`/element indexing.
+
+Also writes `manifest.txt`: one line per artifact with the input/output
+shapes, parsed by rust/src/runtime/.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import SPECS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_spec(s) -> str:
+    dt = {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+    dims = "x".join(str(d) for d in s.shape)
+    return f"{dt}[{dims}]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, (fn, example_args) in sorted(SPECS.items()):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *example_args)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        ins = " ".join(_fmt_spec(s) for s in example_args)
+        os_ = " ".join(_fmt_spec(s) for s in outs)
+        manifest_lines.append(f"{name} | in: {ins} | out: {os_}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

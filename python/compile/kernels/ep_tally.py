@@ -1,0 +1,56 @@
+"""Pallas kernel: NPB EP tally — Marsaglia polar acceptance over uniform
+pairs, reduced to (sum_x, sum_y, accepted_count).
+
+TPU mapping: a pure VPU streaming reduction. The pair stream is tiled into
+VMEM chunks (grid dim 0); each program folds its partial sums into a
+3-element accumulator that stays resident across grid steps (the classic
+Pallas accumulate-across-grid pattern with an init on program 0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ep_kernel(u1_ref, u2_ref, o_ref, *, chunk: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u1 = u1_ref[pl.dslice(i * chunk, chunk)]
+    u2 = u2_ref[pl.dslice(i * chunk, chunk)]
+    x = 2.0 * u1 - 1.0
+    y = 2.0 * u2 - 1.0
+    t = x * x + y * y
+    accept = (t <= 1.0) & (t > 0.0)
+    safe_t = jnp.where(accept, t, 1.0)
+    fac = jnp.where(accept, jnp.sqrt(-2.0 * jnp.log(safe_t) / safe_t), 0.0)
+    gx = x * fac
+    gy = y * fac
+    part = jnp.stack(
+        [jnp.sum(gx), jnp.sum(gy), jnp.sum(accept.astype(u1.dtype))]
+    )
+    o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ep_tally(u1, u2, chunk=2048):
+    """Returns f32[3] = (sum gx, sum gy, n_accepted)."""
+    n = u1.shape[0]
+    chunk = min(chunk, n)
+    assert n % chunk == 0
+    return pl.pallas_call(
+        functools.partial(_ep_kernel, chunk=chunk),
+        grid=(n // chunk,),
+        in_specs=[
+            pl.BlockSpec(u1.shape, lambda i: (0,)),
+            pl.BlockSpec(u2.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((3,), u1.dtype),
+        interpret=True,
+    )(u1, u2)

@@ -1,0 +1,67 @@
+"""Pallas kernel: CloverLeaf-like explicit hydro step (ideal-gas EOS +
+conservative diffusion flux) on a 2-D grid.
+
+TPU mapping: row-slab tiling (grid dim 0) over the padded fields, one
+plane of halo per slab — the intra-rank mirror of CloverLeaf's inter-rank
+halo exchange. Three fields move HBM→VMEM per program; all math is VPU
+element-wise, so the kernel is bandwidth-bound and the slab size is picked
+to amortise DMA latency.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GAMMA = 1.4
+
+
+def _hydro_kernel(rhop_ref, ep_ref, dt_ref, rho_o, e_o, p_o, *, slab: int):
+    i = pl.program_id(0)
+    dt = dt_ref[0]
+    rb = rhop_ref[pl.dslice(i * slab, slab + 2), :]
+    eb = ep_ref[pl.dslice(i * slab, slab + 2), :]
+    rho = rb[1:-1, 1:-1]
+    e = eb[1:-1, 1:-1]
+    p = (GAMMA - 1.0) * rho * e
+
+    def diffuse(qb):
+        q = qb[1:-1, 1:-1]
+        return q + dt * (
+            qb[:-2, 1:-1] + qb[2:, 1:-1] + qb[1:-1, :-2] + qb[1:-1, 2:] - 4.0 * q
+        )
+
+    rho_new = diffuse(rb)
+    e_new = diffuse(eb) - dt * p / jnp.maximum(rho_new, 1e-6)
+    rho_o[pl.dslice(i * slab, slab), :] = rho_new
+    e_o[pl.dslice(i * slab, slab), :] = e_new
+    p_o[pl.dslice(i * slab, slab), :] = (GAMMA - 1.0) * rho_new * e_new
+
+
+@functools.partial(jax.jit, static_argnames=("slab",))
+def hydro2d(rho, e, dt, slab=16):
+    """One hydro step. rho, e: (nx, ny) f32; dt: f32[1]. Returns
+    (rho', e', p')."""
+    nx, ny = rho.shape
+    slab = min(slab, nx)
+    assert nx % slab == 0
+    rhop = jnp.pad(rho, 1, mode="edge")
+    ep = jnp.pad(e, 1, mode="edge")
+    out = jax.ShapeDtypeStruct((nx, ny), rho.dtype)
+    return pl.pallas_call(
+        functools.partial(_hydro_kernel, slab=slab),
+        grid=(nx // slab,),
+        in_specs=[
+            pl.BlockSpec(rhop.shape, lambda i: (0, 0)),
+            pl.BlockSpec(ep.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nx, ny), lambda i: (0, 0)),
+            pl.BlockSpec((nx, ny), lambda i: (0, 0)),
+            pl.BlockSpec((nx, ny), lambda i: (0, 0)),
+        ],
+        out_shape=[out, out, out],
+        interpret=True,
+    )(rhop, ep, dt)

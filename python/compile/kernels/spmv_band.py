@@ -1,0 +1,57 @@
+"""Pallas kernel: banded SpMV — the compute hot spot of NPB CG.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the output vector is tiled
+into VMEM-resident row blocks (grid dimension 0); the source vector is
+kept whole in VMEM (CG-class problems: n per rank is tens of KiB, far
+under the ~16 MiB scratchpad), so each program is one DMA-in + fused
+multiply-accumulate over the bands — VPU work, no MXU.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through this path (see
+python/tests/test_kernels.py) and the TPU-perf estimate lives in
+DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(bands_ref, x_ref, off_ref, o_ref, *, block: int):
+    i = pl.program_id(0)
+    n = x_ref.shape[0]
+    nb = bands_ref.shape[0]
+    row0 = i * block
+    rows = row0 + jax.lax.iota(jnp.int32, block)
+    acc = jnp.zeros((block,), dtype=x_ref.dtype)
+    for b in range(nb):
+        off = off_ref[b]
+        src = rows + off
+        mask = (src >= 0) & (src < n)
+        vals = x_ref[jnp.clip(src, 0, n - 1)]
+        bvals = bands_ref[b, pl.dslice(row0, block)]
+        acc = acc + bvals * jnp.where(mask, vals, 0.0)
+    o_ref[pl.dslice(row0, block)] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def spmv_band(bands, x, offsets, block=512):
+    """y = A @ x for banded A. bands: (nb, n); offsets: (nb,) i32."""
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0, "n must be a multiple of the row block"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(bands.shape, lambda i: (0, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+            pl.BlockSpec(offsets.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(bands, x, offsets)

@@ -1,0 +1,50 @@
+"""Pallas kernel: 7-point 3-D stencil — MG's smoother and the sweep body we
+reuse for the BT/SP/LU line-solve analogues (coefficients differ per app).
+
+TPU mapping: the domain is sliced into x-slabs (grid dim 0); each program
+DMAs its slab plus a one-plane halo from the padded source into VMEM and
+writes one output slab. Slab size is chosen so (slab+2)·(ny+2)·(nz+2)·4 B
+fits VMEM with double-buffering headroom — the BlockSpec-level expression
+of what the paper's MPI ranks do with halo exchange across nodes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(up_ref, coeff_ref, o_ref, *, slab: int):
+    i = pl.program_id(0)
+    # Load my slab + halo from the padded array: [i*slab, i*slab+slab+2).
+    blk = up_ref[pl.dslice(i * slab, slab + 2), :, :]
+    c = blk[1:-1, 1:-1, 1:-1]
+    out = (
+        coeff_ref[0] * c
+        + coeff_ref[1] * (blk[:-2, 1:-1, 1:-1] + blk[2:, 1:-1, 1:-1])
+        + coeff_ref[2] * (blk[1:-1, :-2, 1:-1] + blk[1:-1, 2:, 1:-1])
+        + coeff_ref[3] * (blk[1:-1, 1:-1, :-2] + blk[1:-1, 1:-1, 2:])
+    )
+    o_ref[pl.dslice(i * slab, slab), :, :] = out
+
+
+@functools.partial(jax.jit, static_argnames=("slab",))
+def stencil7(u, coeff, slab=8):
+    """One stencil sweep over u (nx, ny, nz) with Dirichlet-zero halo."""
+    nx, ny, nz = u.shape
+    slab = min(slab, nx)
+    assert nx % slab == 0, "nx must be a multiple of the slab size"
+    up = jnp.pad(u, 1)
+    grid = (nx // slab,)
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, slab=slab),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(up.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(coeff.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((nx, ny, nz), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), u.dtype),
+        interpret=True,
+    )(up, coeff)

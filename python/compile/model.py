@@ -1,0 +1,93 @@
+"""L2: the rank-local compute graphs of every benchmark, as jitted JAX
+functions calling the L1 Pallas kernels.
+
+Each `*_local` function is the per-MPI-rank compute that happens *between*
+communication phases in the Rust apps; `aot.py` lowers each once to HLO
+text and the Rust runtime executes them via PJRT. Python never runs on the
+request path.
+
+Export shapes (one compiled executable per shape) are defined in SPECS —
+the Rust side reads the generated manifest to know them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ep_tally import ep_tally
+from .kernels.hydro2d import hydro2d
+from .kernels.is_hist import is_hist
+from .kernels.pic_push import pic_push
+from .kernels.spmv_band import spmv_band
+from .kernels.stencil7 import stencil7
+
+
+def cg_local(bands, x, offsets):
+    """CG: q = A·x plus the local dot products the allreduce combines."""
+    q = spmv_band(bands, x, offsets)
+    return q, jnp.dot(x, q), jnp.dot(x, x)
+
+
+def mg_local(u, coeff):
+    """MG (also BT/SP/LU with app-specific coefficients): one smoother
+    sweep plus the local residual norm."""
+    v = stencil7(u, coeff)
+    r = u - v
+    return v, jnp.sum(r * r)
+
+
+def ep_local(u1, u2):
+    """EP: gaussian-pair tally over a uniform stream."""
+    return ep_tally(u1, u2)
+
+
+def is_local(keys):
+    """IS: per-rank bucket histogram (bucket counts feed the alltoallv)."""
+    return is_hist(keys, NBUCKETS)
+
+
+def cl_local(rho, e, dt):
+    """CloverLeaf: one explicit hydro step plus the local energy sum the
+    global `field_summary` reduction combines."""
+    rho2, e2, p2 = hydro2d(rho, e, dt)
+    return rho2, e2, p2, jnp.sum(e2), jnp.sum(rho2)
+
+
+def pic_local(pos, vel, efield, dt):
+    """PIC: particle push + local charge deposition (scatter stays in L2,
+    where XLA's scatter is the right TPU lowering)."""
+    pos2, vel2 = pic_push(pos, vel, efield, dt, LENGTH)
+    ng = efield.shape[0]
+    cell = jnp.clip(pos2.astype(jnp.int32), 0, ng - 1)
+    rho = jnp.zeros(ng, dtype=pos.dtype).at[cell].add(1.0)
+    return pos2, vel2, rho
+
+
+# ---------------------------------------------------------------- shapes
+
+NBUCKETS = 256
+LENGTH = 128.0
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+#: name -> (callable, example_args) lowered by aot.py. One HLO artifact per
+#: entry; the manifest records the shapes for the Rust runtime.
+SPECS = {
+    # CG per-rank: n=2048 rows, 9 bands.
+    "cg_local": (cg_local, (_s((9, 2048)), _s((2048,)), _s((9,), I32))),
+    # MG/BT/SP/LU per-rank slab: 16^3, coeff supplied at run time.
+    "mg_local": (mg_local, (_s((16, 16, 16)), _s((4,)))),
+    # EP per-rank batch.
+    "ep_local": (ep_local, (_s((4096,)), _s((4096,)))),
+    # IS per-rank keys.
+    "is_local": (is_local, (_s((8192,), I32),)),
+    # CloverLeaf per-rank tile.
+    "cl_local": (cl_local, (_s((32, 32)), _s((32, 32)), _s((1,)))),
+    # PIC per-rank particles over a shared grid.
+    "pic_local": (pic_local, (_s((4096,)), _s((4096,)), _s((128,)), _s((1,)))),
+}

@@ -1,0 +1,354 @@
+//! Rank-local compute dispatch: PJRT artifacts when available, bit-faithful
+//! native Rust otherwise.
+//!
+//! The native paths replicate the L1 reference math (`ref.py`) so that a
+//! run without `make artifacts` exercises identical numerics (within f32
+//! reassociation tolerance). The PJRT paths require the shapes exported by
+//! `python/compile/model.py::SPECS`.
+
+use crate::runtime::{ComputeEngine, Value};
+
+/// Export shapes (must match `model.SPECS`).
+pub const CG_N: usize = 2048;
+pub const CG_NB: usize = 9;
+pub const MG_DIM: usize = 16;
+pub const EP_N: usize = 4096;
+pub const IS_N: usize = 8192;
+pub const IS_BUCKETS: usize = 256;
+pub const CL_DIM: usize = 32;
+pub const PIC_NP: usize = 4096;
+pub const PIC_NG: usize = 128;
+pub const PIC_LENGTH: f32 = 128.0;
+
+/// Compute dispatcher handed to every app.
+pub struct Compute<'a> {
+    pub eng: Option<&'a ComputeEngine>,
+}
+
+impl<'a> Compute<'a> {
+    pub fn new(eng: Option<&'a ComputeEngine>) -> Self {
+        Self { eng }
+    }
+
+    /// CG: q = A·x (banded), plus local dots (x·q, x·x).
+    pub fn cg_local(&self, bands: &[f32], x: &[f32], offsets: &[i32]) -> (Vec<f32>, f32, f32) {
+        if let Some(eng) = self.eng {
+            if x.len() == CG_N && offsets.len() == CG_NB {
+                let out = eng
+                    .run(
+                        "cg_local",
+                        vec![
+                            Value::f32(bands.to_vec(), &[CG_NB, CG_N]),
+                            Value::f32(x.to_vec(), &[CG_N]),
+                            Value::i32(offsets.to_vec(), &[CG_NB]),
+                        ],
+                    )
+                    .expect("cg_local");
+                return (
+                    out[0].as_f32().to_vec(),
+                    out[1].to_scalar_f32(),
+                    out[2].to_scalar_f32(),
+                );
+            }
+        }
+        let n = x.len() as i64;
+        let mut q = vec![0f32; x.len()];
+        for (b, &off) in offsets.iter().enumerate() {
+            let row = &bands[b * x.len()..(b + 1) * x.len()];
+            for i in 0..x.len() {
+                let j = i as i64 + off as i64;
+                if j >= 0 && j < n {
+                    q[i] += row[i] * x[j as usize];
+                }
+            }
+        }
+        let xq = x.iter().zip(&q).map(|(a, b)| a * b).sum();
+        let xx = x.iter().map(|a| a * a).sum();
+        (q, xq, xx)
+    }
+
+    /// MG/BT/SP/LU: one 7-point stencil sweep + residual norm.
+    /// `u` is `dim^3` row-major; returns (v, sum((u-v)^2)).
+    pub fn stencil_local(&self, u: &[f32], dim: usize, coeff: [f32; 4]) -> (Vec<f32>, f32) {
+        if let Some(eng) = self.eng {
+            if dim == MG_DIM {
+                let out = eng
+                    .run(
+                        "mg_local",
+                        vec![
+                            Value::f32(u.to_vec(), &[dim, dim, dim]),
+                            Value::f32(coeff.to_vec(), &[4]),
+                        ],
+                    )
+                    .expect("mg_local");
+                return (out[0].as_f32().to_vec(), out[1].to_scalar_f32());
+            }
+        }
+        let at = |x: i64, y: i64, z: i64| -> f32 {
+            let d = dim as i64;
+            if x < 0 || y < 0 || z < 0 || x >= d || y >= d || z >= d {
+                0.0
+            } else {
+                u[((x * d + y) * d + z) as usize]
+            }
+        };
+        let mut v = vec![0f32; u.len()];
+        let d = dim as i64;
+        for x in 0..d {
+            for y in 0..d {
+                for z in 0..d {
+                    v[((x * d + y) * d + z) as usize] = coeff[0] * at(x, y, z)
+                        + coeff[1] * (at(x - 1, y, z) + at(x + 1, y, z))
+                        + coeff[2] * (at(x, y - 1, z) + at(x, y + 1, z))
+                        + coeff[3] * (at(x, y, z - 1) + at(x, y, z + 1));
+                }
+            }
+        }
+        let rnorm = u.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum();
+        (v, rnorm)
+    }
+
+    /// EP: Marsaglia tally → [sum_gx, sum_gy, n_accept].
+    pub fn ep_local(&self, u1: &[f32], u2: &[f32]) -> [f32; 3] {
+        if let Some(eng) = self.eng {
+            if u1.len() == EP_N {
+                let out = eng
+                    .run(
+                        "ep_local",
+                        vec![
+                            Value::f32(u1.to_vec(), &[EP_N]),
+                            Value::f32(u2.to_vec(), &[EP_N]),
+                        ],
+                    )
+                    .expect("ep_local");
+                let t = out[0].as_f32();
+                return [t[0], t[1], t[2]];
+            }
+        }
+        let mut sx = 0f32;
+        let mut sy = 0f32;
+        let mut cnt = 0f32;
+        for (&a, &b) in u1.iter().zip(u2) {
+            let x = 2.0 * a - 1.0;
+            let y = 2.0 * b - 1.0;
+            let t = x * x + y * y;
+            if t <= 1.0 && t > 0.0 {
+                let fac = (-2.0 * t.ln() / t).sqrt();
+                sx += x * fac;
+                sy += y * fac;
+                cnt += 1.0;
+            }
+        }
+        [sx, sy, cnt]
+    }
+
+    /// IS: bucket histogram.
+    pub fn is_local(&self, keys: &[i32]) -> Vec<i32> {
+        if let Some(eng) = self.eng {
+            if keys.len() == IS_N {
+                let out = eng
+                    .run("is_local", vec![Value::i32(keys.to_vec(), &[IS_N])])
+                    .expect("is_local");
+                return out[0].as_i32().to_vec();
+            }
+        }
+        let mut hist = vec![0i32; IS_BUCKETS];
+        for &k in keys {
+            hist[(k.clamp(0, IS_BUCKETS as i32 - 1)) as usize] += 1;
+        }
+        hist
+    }
+
+    /// CloverLeaf: one hydro step → (rho', e', p', sum e', sum rho').
+    pub fn cl_local(
+        &self,
+        rho: &[f32],
+        e: &[f32],
+        dim: usize,
+        dt: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32, f32) {
+        if let Some(eng) = self.eng {
+            if dim == CL_DIM {
+                let out = eng
+                    .run(
+                        "cl_local",
+                        vec![
+                            Value::f32(rho.to_vec(), &[dim, dim]),
+                            Value::f32(e.to_vec(), &[dim, dim]),
+                            Value::f32(vec![dt], &[1]),
+                        ],
+                    )
+                    .expect("cl_local");
+                return (
+                    out[0].as_f32().to_vec(),
+                    out[1].as_f32().to_vec(),
+                    out[2].as_f32().to_vec(),
+                    out[3].to_scalar_f32(),
+                    out[4].to_scalar_f32(),
+                );
+            }
+        }
+        const GAMMA: f32 = 1.4;
+        let d = dim;
+        // edge-padded neighbour access
+        let at = |q: &[f32], x: i64, y: i64| -> f32 {
+            let xc = x.clamp(0, d as i64 - 1) as usize;
+            let yc = y.clamp(0, d as i64 - 1) as usize;
+            q[xc * d + yc]
+        };
+        let diffuse = |q: &[f32]| -> Vec<f32> {
+            let mut o = vec![0f32; q.len()];
+            for x in 0..d as i64 {
+                for y in 0..d as i64 {
+                    let c = at(q, x, y);
+                    o[x as usize * d + y as usize] = c
+                        + dt * (at(q, x - 1, y) + at(q, x + 1, y) + at(q, x, y - 1)
+                            + at(q, x, y + 1)
+                            - 4.0 * c);
+                }
+            }
+            o
+        };
+        let p: Vec<f32> = rho
+            .iter()
+            .zip(e)
+            .map(|(&r, &en)| (GAMMA - 1.0) * r * en)
+            .collect();
+        let rho2 = diffuse(rho);
+        let e_dif = diffuse(e);
+        let e2: Vec<f32> = e_dif
+            .iter()
+            .zip(&p)
+            .zip(&rho2)
+            .map(|((&ed, &pp), &r2)| ed - dt * pp / r2.max(1e-6))
+            .collect();
+        let p2: Vec<f32> = rho2
+            .iter()
+            .zip(&e2)
+            .map(|(&r, &en)| (GAMMA - 1.0) * r * en)
+            .collect();
+        let esum = e2.iter().sum();
+        let rsum = rho2.iter().sum();
+        (rho2, e2, p2, esum, rsum)
+    }
+
+    /// PIC: push + deposit → (pos', vel', rho_local).
+    pub fn pic_local(
+        &self,
+        pos: &[f32],
+        vel: &[f32],
+        efield: &[f32],
+        dt: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        if let Some(eng) = self.eng {
+            if pos.len() == PIC_NP && efield.len() == PIC_NG {
+                let out = eng
+                    .run(
+                        "pic_local",
+                        vec![
+                            Value::f32(pos.to_vec(), &[PIC_NP]),
+                            Value::f32(vel.to_vec(), &[PIC_NP]),
+                            Value::f32(efield.to_vec(), &[PIC_NG]),
+                            Value::f32(vec![dt], &[1]),
+                        ],
+                    )
+                    .expect("pic_local");
+                return (
+                    out[0].as_f32().to_vec(),
+                    out[1].as_f32().to_vec(),
+                    out[2].as_f32().to_vec(),
+                );
+            }
+        }
+        let ng = efield.len();
+        let mut pos2 = Vec::with_capacity(pos.len());
+        let mut vel2 = Vec::with_capacity(vel.len());
+        let mut rho = vec![0f32; ng];
+        for (&p, &v) in pos.iter().zip(vel) {
+            let cell = (p as i32).clamp(0, ng as i32 - 1) as usize;
+            let vn = v + dt * efield[cell];
+            let pn = (p + dt * vn).rem_euclid(PIC_LENGTH);
+            let c2 = (pn as i32).clamp(0, ng as i32 - 1) as usize;
+            rho[c2] += 1.0;
+            pos2.push(pn);
+            vel2.push(vn);
+        }
+        (pos2, vel2, rho)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_cg_identity() {
+        let c = Compute::new(None);
+        let n = 64;
+        let mut bands = vec![0f32; 3 * n];
+        bands[n..2 * n].fill(3.0); // center band
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let (q, xq, xx) = c.cg_local(&bands, &x, &[-1, 0, 1]);
+        for i in 0..n {
+            assert_eq!(q[i], 3.0 * i as f32);
+        }
+        let want_xx: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(xx, want_xx);
+        assert_eq!(xq, 3.0 * want_xx);
+    }
+
+    #[test]
+    fn native_stencil_constant() {
+        let c = Compute::new(None);
+        let u = vec![1f32; 8 * 8 * 8];
+        let (v, rnorm) = c.stencil_local(&u, 8, [-6.0, 1.0, 1.0, 1.0]);
+        // interior zero
+        assert_eq!(v[(4 * 8 + 4) * 8 + 4], 0.0);
+        assert!(rnorm > 0.0);
+    }
+
+    #[test]
+    fn native_ep_acceptance() {
+        let c = Compute::new(None);
+        let mut rng = crate::util::Xoshiro256::seeded(3);
+        let n = 1 << 14;
+        let u1: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let u2: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let t = c.ep_local(&u1, &u2);
+        let rate = t[2] / n as f32;
+        assert!((rate - std::f32::consts::FRAC_PI_4).abs() < 0.02);
+    }
+
+    #[test]
+    fn native_is_hist_total() {
+        let c = Compute::new(None);
+        let keys: Vec<i32> = (0..1000).map(|i| i % 256).collect();
+        let h = c.is_local(&keys);
+        assert_eq!(h.iter().sum::<i32>(), 1000);
+    }
+
+    #[test]
+    fn native_cl_conserves_density() {
+        let c = Compute::new(None);
+        let d = 16;
+        let rho = vec![2.0f32; d * d];
+        let e = vec![3.0f32; d * d];
+        let (rho2, _e2, _p2, esum, rsum) = c.cl_local(&rho, &e, d, 0.01);
+        assert!((rsum - 2.0 * (d * d) as f32).abs() < 1e-2);
+        assert!(rho2.iter().all(|&v| (v - 2.0).abs() < 1e-5));
+        assert!(esum < 3.0 * (d * d) as f32);
+    }
+
+    #[test]
+    fn native_pic_charge_conserved() {
+        let c = Compute::new(None);
+        let n = 512;
+        let pos: Vec<f32> = (0..n).map(|i| i as f32 * 128.0 / n as f32).collect();
+        let vel = vec![0.5f32; n];
+        let ef = vec![0.1f32; 128];
+        let (p2, v2, rho) = c.pic_local(&pos, &vel, &ef, 0.5);
+        assert_eq!(p2.len(), n);
+        assert!(v2.iter().all(|&v| (v - 0.55).abs() < 1e-6));
+        assert!((rho.iter().sum::<f32>() - n as f32).abs() < 0.5);
+    }
+}

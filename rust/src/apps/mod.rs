@@ -1,0 +1,228 @@
+//! Benchmark applications: communication-faithful mini versions of the
+//! paper's nine workloads (NPB CG/MG/EP/IS/BT/SP/LU, CloverLeaf, PIC).
+//!
+//! Every app is written against the [`Mpi`] trait and runs unchanged on:
+//! * [`EmpiWorld`] — the baseline: plain tuned EMPI, *blocking* collectives
+//!   (MVAPICH2 semantics — including the blocking `alltoallv` whose IS
+//!   behaviour the paper measured), zero fault tolerance;
+//! * [`crate::partreper::PartReper`] — the paper's library.
+//!
+//! Rank-local compute dispatches to the AOT PJRT kernels via
+//! [`crate::runtime::ComputeEngine`]; without built artifacts it falls back
+//! to bit-equivalent native Rust (`compute`), so the communication-layer
+//! tests don't require `make artifacts`.
+
+pub mod cloverleaf;
+pub mod compute;
+pub mod npb;
+pub mod pic;
+
+use crate::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
+use crate::partreper::PartReper;
+use crate::runtime::ComputeEngine;
+
+/// The MPI surface the benchmarks need (object-safe).
+pub trait Mpi {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    fn send(&self, dst: usize, tag: i64, data: &[u8]);
+    fn recv(&self, src: usize, tag: i64) -> Vec<u8>;
+    fn barrier(&self);
+    fn bcast(&self, root: usize, data: &mut Vec<u8>);
+    fn allreduce(&self, dtype: DType, op: ReduceOp, data: &[u8]) -> Vec<u8>;
+    fn allgather(&self, data: &[u8]) -> Vec<Vec<u8>>;
+    fn alltoallv(&self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>>;
+    fn finalize(&self);
+}
+
+impl Mpi for PartReper {
+    fn rank(&self) -> usize {
+        PartReper::rank(self)
+    }
+    fn size(&self) -> usize {
+        PartReper::size(self)
+    }
+    fn send(&self, dst: usize, tag: i64, data: &[u8]) {
+        PartReper::send(self, dst, tag, data)
+    }
+    fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
+        PartReper::recv(self, src, tag)
+    }
+    fn barrier(&self) {
+        PartReper::barrier(self)
+    }
+    fn bcast(&self, root: usize, data: &mut Vec<u8>) {
+        PartReper::bcast(self, root, data)
+    }
+    fn allreduce(&self, dtype: DType, op: ReduceOp, data: &[u8]) -> Vec<u8> {
+        PartReper::allreduce(self, dtype, op, data)
+    }
+    fn allgather(&self, data: &[u8]) -> Vec<Vec<u8>> {
+        PartReper::allgather(self, data)
+    }
+    fn alltoallv(&self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        PartReper::alltoallv(self, blocks)
+    }
+    fn finalize(&self) {
+        PartReper::finalize(self)
+    }
+}
+
+/// Baseline: the native library alone, used exactly the way an application
+/// links MVAPICH2 — blocking collectives, no failure handling of any kind.
+pub struct EmpiWorld {
+    pub comm: Comm,
+}
+
+impl EmpiWorld {
+    pub fn new(comm: Comm) -> Self {
+        Self { comm }
+    }
+}
+
+impl Mpi for EmpiWorld {
+    fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+    fn size(&self) -> usize {
+        self.comm.size()
+    }
+    fn send(&self, dst: usize, tag: i64, data: &[u8]) {
+        self.comm.send(dst, tag, data).expect("empi send");
+    }
+    fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
+        self.comm
+            .recv(Src::Rank(src), Tag::Tag(tag))
+            .expect("empi recv")
+            .data
+            .to_vec()
+    }
+    fn barrier(&self) {
+        coll::barrier(&self.comm).expect("empi barrier");
+    }
+    fn bcast(&self, root: usize, data: &mut Vec<u8>) {
+        coll::bcast(&self.comm, root, data).expect("empi bcast");
+    }
+    fn allreduce(&self, dtype: DType, op: ReduceOp, data: &[u8]) -> Vec<u8> {
+        coll::allreduce(&self.comm, dtype, op, data).expect("empi allreduce")
+    }
+    fn allgather(&self, data: &[u8]) -> Vec<Vec<u8>> {
+        coll::allgather(&self.comm, data).expect("empi allgather")
+    }
+    fn alltoallv(&self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        // Blocking pairwise schedule — MVAPICH2's MPI_Alltoallv analogue.
+        coll::alltoallv(&self.comm, &blocks).expect("empi alltoallv")
+    }
+    fn finalize(&self) {}
+}
+
+/// The nine workloads of §VII.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppKind {
+    Cg,
+    Mg,
+    Ep,
+    Is,
+    Bt,
+    Sp,
+    Lu,
+    CloverLeaf,
+    Pic,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 9] = [
+        AppKind::Cg,
+        AppKind::Mg,
+        AppKind::Ep,
+        AppKind::Is,
+        AppKind::Bt,
+        AppKind::Sp,
+        AppKind::Lu,
+        AppKind::CloverLeaf,
+        AppKind::Pic,
+    ];
+
+    /// The seven NPB kernels (Fig 8 top grid).
+    pub const NPB: [AppKind; 7] = [
+        AppKind::Cg,
+        AppKind::Mg,
+        AppKind::Ep,
+        AppKind::Is,
+        AppKind::Bt,
+        AppKind::Sp,
+        AppKind::Lu,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Cg => "CG",
+            AppKind::Mg => "MG",
+            AppKind::Ep => "EP",
+            AppKind::Is => "IS",
+            AppKind::Bt => "BT",
+            AppKind::Sp => "SP",
+            AppKind::Lu => "LU",
+            AppKind::CloverLeaf => "CL",
+            AppKind::Pic => "PIC",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppKind> {
+        Self::ALL
+            .into_iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Default iteration count per app (scaled-down class sizes).
+    pub fn default_iters(&self) -> usize {
+        match self {
+            AppKind::Cg => 15,
+            AppKind::Mg => 8,
+            AppKind::Ep => 12,
+            AppKind::Is => 10,
+            AppKind::Bt => 8,
+            AppKind::Sp => 12,
+            AppKind::Lu => 12,
+            AppKind::CloverLeaf => 15,
+            AppKind::Pic => 12,
+        }
+    }
+
+    /// Run the app and return its verification checksum (identical on all
+    /// ranks and across backends for the same seed/iters/size).
+    pub fn run(
+        &self,
+        mpi: &dyn Mpi,
+        eng: Option<&ComputeEngine>,
+        iters: usize,
+        seed: u64,
+    ) -> f64 {
+        match self {
+            AppKind::Cg => npb::cg(mpi, eng, iters, seed),
+            AppKind::Mg => npb::mg(mpi, eng, iters, seed),
+            AppKind::Ep => npb::ep(mpi, eng, iters, seed),
+            AppKind::Is => npb::is(mpi, eng, iters, seed),
+            AppKind::Bt => npb::bt(mpi, eng, iters, seed),
+            AppKind::Sp => npb::sp(mpi, eng, iters, seed),
+            AppKind::Lu => npb::lu(mpi, eng, iters, seed),
+            AppKind::CloverLeaf => cloverleaf::run(mpi, eng, iters, seed),
+            AppKind::Pic => pic::run(mpi, eng, iters, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appkind_parse_roundtrip() {
+        for k in AppKind::ALL {
+            assert_eq!(AppKind::parse(k.name()), Some(k));
+            assert_eq!(AppKind::parse(&k.name().to_lowercase()), Some(k));
+        }
+        assert_eq!(AppKind::parse("nope"), None);
+        assert_eq!(AppKind::NPB.len(), 7);
+    }
+}

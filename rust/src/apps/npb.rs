@@ -1,0 +1,292 @@
+//! The seven NAS Parallel Benchmark mini-apps (§VII).
+//!
+//! Each preserves its benchmark's *communication pattern* — that is what
+//! determines PartRePer's overhead profile — while the rank-local math runs
+//! through the AOT kernels (or their native fallbacks):
+//!
+//! * **CG** — neighbour halo exchange + two allreduces per iteration
+//!   around a banded SpMV.
+//! * **MG** — V-cycle over 3 levels: face halo exchanges that shrink with
+//!   the level, one residual allreduce per level.
+//! * **EP** — embarrassingly parallel tallies, one small allreduce per
+//!   batch.
+//! * **IS** — bucket histogram + key redistribution via **alltoallv** (the
+//!   benchmark where the paper saw large *negative* overheads, §VII-A).
+//! * **BT** — three directional sweeps with large, infrequent face
+//!   messages.
+//! * **SP** — like BT but more, smaller messages per sweep.
+//! * **LU** — forward+backward wavefront pipelining with many small
+//!   messages (the benchmark with the heaviest recovery cost in Fig 9a).
+//!
+//! All state generation is keyed by (seed, app rank), so a replica builds
+//! exactly its mirror's data and checksums agree across backends,
+//! replication degrees and failure schedules.
+
+use crate::empi::{DType, ReduceOp};
+use crate::runtime::ComputeEngine;
+use crate::util::{f32s_from_bytes, f32s_to_bytes, u64s_from_bytes, u64s_to_bytes, Xoshiro256};
+
+use super::compute::{Compute, CG_N, CG_NB, IS_BUCKETS, IS_N, MG_DIM};
+use super::Mpi;
+
+fn rank_rng(seed: u64, rank: usize, salt: u64) -> Xoshiro256 {
+    Xoshiro256::seeded(
+        seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ salt.wrapping_mul(0xA076_1D64),
+    )
+}
+
+fn allreduce_f32(mpi: &dyn Mpi, vals: &[f32]) -> Vec<f32> {
+    f32s_from_bytes(&mpi.allreduce(DType::F32, ReduceOp::Sum, &f32s_to_bytes(vals)))
+}
+
+fn allreduce_u64(mpi: &dyn Mpi, vals: &[u64]) -> Vec<u64> {
+    u64s_from_bytes(&mpi.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(vals)))
+}
+
+// ------------------------------------------------------------------- CG
+
+pub fn cg(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    let comp = Compute::new(eng);
+    let me = mpi.rank();
+    let n = mpi.size();
+    let mut rng = rank_rng(seed, me, 1);
+    let offsets: Vec<i32> = (-(CG_NB as i32) / 2..=(CG_NB as i32) / 2).collect();
+    let bands: Vec<f32> = (0..CG_NB * CG_N)
+        .map(|i| {
+            if i / CG_N == CG_NB / 2 {
+                4.0 // diagonally dominant center band
+            } else {
+                0.5 * rng.next_f32()
+            }
+        })
+        .collect();
+    let mut x: Vec<f32> = (0..CG_N).map(|_| rng.next_f32()).collect();
+    let halo = CG_NB / 2;
+    let mut checksum = 0f64;
+
+    for _ in 0..iters {
+        // Halo exchange with both neighbours (non-periodic), as the
+        // distributed matvec would require for the boundary rows.
+        let mut bc = 0f32;
+        if me + 1 < n {
+            mpi.send(me + 1, 101, &f32s_to_bytes(&x[CG_N - halo..]));
+        }
+        if me > 0 {
+            mpi.send(me - 1, 102, &f32s_to_bytes(&x[..halo]));
+            let left = f32s_from_bytes(&mpi.recv(me - 1, 101));
+            bc += left.iter().sum::<f32>();
+        }
+        if me + 1 < n {
+            let right = f32s_from_bytes(&mpi.recv(me + 1, 102));
+            bc += right.iter().sum::<f32>();
+        }
+
+        let (q, xq, xx) = comp.cg_local(&bands, &x, &offsets);
+        // Two allreduces per iteration (alpha and the norm), like NPB CG.
+        let g = allreduce_f32(mpi, &[xq + bc, xx]);
+        let alpha = g[1] / g[0].max(1e-6);
+        for (xi, qi) in x.iter_mut().zip(&q) {
+            *xi = 0.5 * *xi + alpha * 0.1 * qi;
+        }
+        checksum += g[0] as f64 / (n as f64);
+    }
+    mpi.finalize();
+    checksum
+}
+
+// ------------------------------------------------------------------- MG
+
+pub fn mg(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    let comp = Compute::new(eng);
+    let me = mpi.rank();
+    let n = mpi.size();
+    let mut rng = rank_rng(seed, me, 2);
+    // Three grid levels: finest uses the PJRT kernel; coarser are native.
+    let dims = [MG_DIM, MG_DIM / 2, MG_DIM / 4];
+    let mut grids: Vec<Vec<f32>> = dims
+        .iter()
+        .map(|&d| (0..d * d * d).map(|_| rng.next_f32()).collect())
+        .collect();
+    let coeff = [-0.6f32, 0.1, 0.1, 0.1];
+    let mut checksum = 0f64;
+
+    for _ in 0..iters {
+        for (lvl, &d) in dims.iter().enumerate() {
+            // Face halo exchange with ring neighbours; message size shrinks
+            // with the level (d^2 floats).
+            let face = vec![grids[lvl][0]; d * d];
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            if n > 1 {
+                mpi.send(next, 200 + lvl as i64, &f32s_to_bytes(&face));
+                let _ = mpi.recv(prev, 200 + lvl as i64);
+            }
+            let (v, rnorm) = comp.stencil_local(&grids[lvl], d, coeff);
+            grids[lvl] = v;
+            let g = allreduce_f32(mpi, &[rnorm]);
+            checksum += (g[0] as f64).sqrt() / dims.len() as f64;
+        }
+    }
+    mpi.finalize();
+    checksum
+}
+
+// ------------------------------------------------------------------- EP
+
+pub fn ep(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    let comp = Compute::new(eng);
+    let me = mpi.rank();
+    let mut checksum = 0f64;
+    for it in 0..iters {
+        let mut rng = rank_rng(seed, me, 1000 + it as u64);
+        let u1: Vec<f32> = (0..super::compute::EP_N).map(|_| rng.next_f32()).collect();
+        let u2: Vec<f32> = (0..super::compute::EP_N).map(|_| rng.next_f32()).collect();
+        let t = comp.ep_local(&u1, &u2);
+        let g = allreduce_f32(mpi, &t);
+        checksum += (g[0] + g[1]) as f64 + g[2] as f64 * 1e-6;
+    }
+    mpi.finalize();
+    checksum
+}
+
+// ------------------------------------------------------------------- IS
+
+pub fn is(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    let comp = Compute::new(eng);
+    let me = mpi.rank();
+    let n = mpi.size();
+    let buckets_per_rank = IS_BUCKETS.div_ceil(n);
+    let mut checksum = 0f64;
+
+    for it in 0..iters {
+        let mut rng = rank_rng(seed, me, 2000 + it as u64);
+        let keys: Vec<i32> = (0..IS_N)
+            .map(|_| (rng.next_below(IS_BUCKETS as u64)) as i32)
+            .collect();
+        // Local histogram (kernel) + global bucket sizes (allreduce).
+        let hist = comp.is_local(&keys);
+        let hist_u64: Vec<u64> = hist.iter().map(|&c| c as u64).collect();
+        let global = allreduce_u64(mpi, &hist_u64);
+        // Key redistribution: bucket b belongs to rank b / buckets_per_rank.
+        // This alltoallv is the operation whose blocking-vs-nonblocking
+        // implementation difference produced the paper's IS anomaly.
+        let mut blocks: Vec<Vec<i32>> = vec![Vec::new(); n];
+        for &k in &keys {
+            let owner = (k as usize / buckets_per_rank).min(n - 1);
+            blocks[owner].push(k);
+        }
+        let wire: Vec<Vec<u8>> = blocks
+            .into_iter()
+            .map(|b| crate::util::bytes::i32s_to_bytes(&b))
+            .collect();
+        let recvd = mpi.alltoallv(wire);
+        let mine: usize = recvd.iter().map(|b| b.len() / 4).sum();
+        // Verification: my received count must equal the global histogram
+        // over my bucket range.
+        let lo = me * buckets_per_rank;
+        let hi = ((me + 1) * buckets_per_rank).min(IS_BUCKETS);
+        let want: u64 = global[lo..hi].iter().sum();
+        debug_assert_eq!(mine as u64, want, "IS bucket routing broken");
+        checksum += want as f64 + mine as f64 * 1e-9;
+    }
+    mpi.finalize();
+    checksum
+}
+
+// --------------------------------------------------------- BT / SP / LU
+
+/// Shared sweep skeleton: `phases` pipelined neighbour exchanges per
+/// iteration, with `face_elems`-float messages, stencil compute between.
+fn sweep_app(
+    mpi: &dyn Mpi,
+    eng: Option<&ComputeEngine>,
+    iters: usize,
+    seed: u64,
+    salt: u64,
+    coeff: [f32; 4],
+    phases: usize,
+    face_elems: usize,
+    bidirectional: bool,
+) -> f64 {
+    let comp = Compute::new(eng);
+    let me = mpi.rank();
+    let n = mpi.size();
+    let mut rng = rank_rng(seed, me, salt);
+    let mut u: Vec<f32> = (0..MG_DIM * MG_DIM * MG_DIM).map(|_| rng.next_f32()).collect();
+    let mut checksum = 0f64;
+
+    for _ in 0..iters {
+        let mut rtot = 0f32;
+        for ph in 0..phases {
+            let tag = 300 + salt as i64 * 16 + ph as i64;
+            // Forward pipeline: recv from the left, compute, send right.
+            if me > 0 {
+                let _ = mpi.recv(me - 1, tag);
+            }
+            let (v, rnorm) = comp.stencil_local(&u, MG_DIM, coeff);
+            u = v;
+            rtot += rnorm;
+            if me + 1 < n {
+                mpi.send(me + 1, tag, &f32s_to_bytes(&u[..face_elems]));
+            }
+            if bidirectional {
+                // Backward wavefront (LU's second sweep).
+                if me + 1 < n {
+                    let _ = mpi.recv(me + 1, tag + 8);
+                }
+                if me > 0 {
+                    mpi.send(me - 1, tag + 8, &f32s_to_bytes(&u[..face_elems]));
+                }
+            }
+        }
+        let g = allreduce_f32(mpi, &[rtot]);
+        checksum += (g[0] as f64).sqrt();
+    }
+    mpi.finalize();
+    checksum
+}
+
+/// BT: 3 directional sweeps, large faces (dim² floats), one per direction.
+pub fn bt(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    sweep_app(
+        mpi,
+        eng,
+        iters,
+        seed,
+        3,
+        [-0.4, 0.12, 0.12, 0.12],
+        3,
+        MG_DIM * MG_DIM,
+        false,
+    )
+}
+
+/// SP: 6 phases with small faces (dim floats) — more, smaller messages.
+pub fn sp(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    sweep_app(
+        mpi,
+        eng,
+        iters,
+        seed,
+        4,
+        [-0.5, 0.15, 0.1, 0.05],
+        6,
+        MG_DIM,
+        false,
+    )
+}
+
+/// LU: bidirectional wavefront, 4 phases of dim²-float messages each way.
+pub fn lu(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -> f64 {
+    sweep_app(
+        mpi,
+        eng,
+        iters,
+        seed,
+        5,
+        [-0.55, 0.1, 0.15, 0.1],
+        4,
+        MG_DIM * MG_DIM,
+        true,
+    )
+}

@@ -1,0 +1,184 @@
+//! Coordinated checkpoint/restart — the mechanism replication *composes
+//! with* in the paper.
+//!
+//! PartRePer's stated objective (§VII-B) is not to replace C/R but to raise
+//! the application's MTTI so that checkpoint intervals can stretch and
+//! restarts become rarer. This module supplies that surrounding machinery:
+//! an in-memory/disk checkpoint store for process images, and the classic
+//! Young/Daly optimal-interval analysis the harness uses to translate a
+//! measured MTTI into checkpoint-overhead savings (the paper's "reduced
+//! checkpoint recovery overheads").
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::procimg::ProcessImage;
+
+/// A coordinated checkpoint: one image per computational rank, tagged with
+/// the application step it was taken at.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub step: u64,
+    images: HashMap<usize, Vec<u8>>,
+}
+
+impl Checkpoint {
+    pub fn nranks(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.images.values().map(|v| v.len()).sum()
+    }
+
+    pub fn image_for(&self, rank: usize) -> Option<ProcessImage> {
+        self.images.get(&rank).map(|b| ProcessImage::from_bytes(b))
+    }
+}
+
+/// Shared checkpoint store (stand-in for the parallel filesystem).
+#[derive(Default)]
+pub struct CheckpointStore {
+    slots: Mutex<Vec<Checkpoint>>,
+    /// Pending contributions for the in-progress coordinated checkpoint.
+    pending: Mutex<HashMap<u64, Checkpoint>>,
+    expected_ranks: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(expected_ranks: usize) -> Arc<Self> {
+        Arc::new(Self {
+            slots: Mutex::new(Vec::new()),
+            pending: Mutex::new(HashMap::new()),
+            expected_ranks,
+        })
+    }
+
+    /// A rank contributes its image to the checkpoint at `step`. When the
+    /// last rank arrives the checkpoint is sealed (coordinated semantics:
+    /// all ranks checkpoint the same step, between collectives).
+    pub fn contribute(&self, step: u64, rank: usize, image: &ProcessImage) -> bool {
+        let mut pending = self.pending.lock().unwrap();
+        let cp = pending.entry(step).or_insert_with(|| Checkpoint {
+            step,
+            images: HashMap::new(),
+        });
+        cp.images.insert(rank, image.to_bytes());
+        if cp.images.len() == self.expected_ranks {
+            let cp = pending.remove(&step).unwrap();
+            self.slots.lock().unwrap().push(cp);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Latest sealed checkpoint, if any.
+    pub fn latest(&self) -> Option<Checkpoint> {
+        self.slots.lock().unwrap().last().cloned()
+    }
+
+    /// Latest sealed checkpoint at or before `step`.
+    pub fn latest_at_or_before(&self, step: u64) -> Option<Checkpoint> {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|c| c.step <= step)
+            .max_by_key(|c| c.step)
+            .cloned()
+    }
+
+    pub fn count(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+}
+
+/// Young's first-order optimal checkpoint interval: `sqrt(2 * C * MTTI)`
+/// where `C` is the checkpoint cost. The harness uses it to convert the
+/// Fig 9(b) MTTI gains into interval stretch (the paper's motivating
+/// arithmetic).
+pub fn young_interval(checkpoint_cost_s: f64, mtti_s: f64) -> f64 {
+    (2.0 * checkpoint_cost_s * mtti_s).sqrt()
+}
+
+/// Daly's higher-order refinement (valid for C < 2*MTTI).
+pub fn daly_interval(checkpoint_cost_s: f64, mtti_s: f64) -> f64 {
+    let c = checkpoint_cost_s;
+    let m = mtti_s;
+    if c < 2.0 * m {
+        (2.0 * c * m).sqrt() * (1.0 + (1.0 / 3.0) * (c / (2.0 * m)).sqrt() + (c / (9.0 * 2.0 * m)))
+            - c
+    } else {
+        m
+    }
+}
+
+/// Expected fraction of time lost to checkpointing + rework, for interval
+/// `tau` (first-order model). Used in EXPERIMENTS.md to report the savings
+/// implied by an MTTI improvement.
+pub fn waste_fraction(checkpoint_cost_s: f64, mtti_s: f64, tau_s: f64) -> f64 {
+    checkpoint_cost_s / tau_s + tau_s / (2.0 * mtti_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(step: u64) -> ProcessImage {
+        let mut i = ProcessImage::new();
+        i.data.define("step", &step.to_le_bytes());
+        i.stack.setjmp(step, 0);
+        i
+    }
+
+    #[test]
+    fn coordinated_seal_on_last_contribution() {
+        let store = CheckpointStore::new(3);
+        assert!(!store.contribute(10, 0, &img(10)));
+        assert!(!store.contribute(10, 1, &img(10)));
+        assert!(store.latest().is_none());
+        assert!(store.contribute(10, 2, &img(10)));
+        let cp = store.latest().unwrap();
+        assert_eq!(cp.step, 10);
+        assert_eq!(cp.nranks(), 3);
+        assert_eq!(cp.image_for(1).unwrap().stack.longjmp(), (10, 0));
+    }
+
+    #[test]
+    fn latest_at_or_before_picks_right_slot() {
+        let store = CheckpointStore::new(1);
+        store.contribute(5, 0, &img(5));
+        store.contribute(10, 0, &img(10));
+        store.contribute(15, 0, &img(15));
+        assert_eq!(store.latest_at_or_before(12).unwrap().step, 10);
+        assert!(store.latest_at_or_before(4).is_none());
+        assert_eq!(store.count(), 3);
+    }
+
+    #[test]
+    fn young_interval_scales_with_sqrt_mtti() {
+        let i1 = young_interval(10.0, 3600.0);
+        let i2 = young_interval(10.0, 4.0 * 3600.0);
+        assert!((i2 / i1 - 2.0).abs() < 1e-9);
+        assert!((i1 - (2.0f64 * 10.0 * 3600.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn doubling_mtti_cuts_waste() {
+        // The paper's argument: replication raises MTTI, so at the (new)
+        // optimal interval the total waste drops.
+        let c = 30.0;
+        let w1 = waste_fraction(c, 3600.0, young_interval(c, 3600.0));
+        let w2 = waste_fraction(c, 7200.0, young_interval(c, 7200.0));
+        assert!(w2 < w1);
+        assert!((w1 / w2 - 2f64.sqrt()).abs() < 0.01);
+    }
+
+    #[test]
+    fn daly_close_to_young_for_small_cost() {
+        let y = young_interval(1.0, 10_000.0);
+        let d = daly_interval(1.0, 10_000.0);
+        assert!((y - d).abs() / y < 0.02);
+    }
+}

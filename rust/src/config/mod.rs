@@ -1,0 +1,231 @@
+//! Job/experiment configuration.
+//!
+//! A [`JobConfig`] describes one launched job the way the paper's `mpirun`
+//! invocation does: how many computational processes, the replication
+//! degree, the node layout, the network profiles of the two libraries, and
+//! the fault-injection parameters. Configs can be built programmatically,
+//! parsed from a small `key = value` file format (serde is unavailable
+//! offline), or overridden from CLI `key=value` pairs.
+
+mod parse;
+
+pub use parse::{parse_kv, ParseError};
+
+use crate::fabric::NetModel;
+
+/// Replication degree: the *percentage of computational processes that have
+/// replicas* (paper §VII-A). The paper sweeps {0, 6.25, 12.5, 25, 50, 100}.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicationDegree(pub f64);
+
+impl ReplicationDegree {
+    pub const PAPER_SWEEP: [f64; 6] = [0.0, 6.25, 12.5, 25.0, 50.0, 100.0];
+
+    /// Number of replica processes for `ncomp` computational processes.
+    /// Replica `i` mirrors computational rank `i`; the first
+    /// `nrep` computational ranks are the replicated ones.
+    pub fn nrep(self, ncomp: usize) -> usize {
+        ((self.0 / 100.0) * ncomp as f64).round() as usize
+    }
+}
+
+/// Fault injection parameters (paper §VII-B: Weibull inter-failure times,
+/// random victim).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub enabled: bool,
+    /// Weibull shape k (k < 1 = infant-mortality-heavy, the usual HPC fit).
+    pub weibull_shape: f64,
+    /// Weibull scale λ in seconds of *wall time*.
+    pub weibull_scale_s: f64,
+    /// PRNG seed for injection timings and victim choice.
+    pub seed: u64,
+    /// Upper bound on injected failures (safety for tests).
+    pub max_failures: usize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            weibull_shape: 0.7,
+            weibull_scale_s: 0.5,
+            seed: 0xFA_17,
+            max_failures: 64,
+        }
+    }
+}
+
+/// Everything needed to launch one job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    /// Computational processes (the paper's 64/128/256).
+    pub ncomp: usize,
+    /// Replication degree in percent.
+    pub rdegree: ReplicationDegree,
+    /// Cores per node — 48 on the paper's cluster; node count is derived.
+    pub cores_per_node: usize,
+    /// Native-library network profile.
+    pub empi_net: NetModel,
+    /// FT-library network profile.
+    pub ompi_net: NetModel,
+    /// Fault injection.
+    pub faults: FaultPlan,
+    /// Workload seed (problem generation).
+    pub seed: u64,
+    /// How many EMPI test-loop polls between ULFM failure/revoke checks on
+    /// the PartRePer hot path (paper: interleaved; stride amortises cost).
+    pub failure_check_stride: u32,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            ncomp: 8,
+            rdegree: ReplicationDegree(0.0),
+            cores_per_node: 48,
+            empi_net: NetModel::empi_tuned(),
+            ompi_net: NetModel::ompi_generic(),
+            faults: FaultPlan::default(),
+            seed: 42,
+            failure_check_stride: 8,
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn new(ncomp: usize, rdegree_pct: f64) -> Self {
+        Self {
+            ncomp,
+            rdegree: ReplicationDegree(rdegree_pct),
+            ..Default::default()
+        }
+    }
+
+    /// Number of replica processes.
+    pub fn nrep(&self) -> usize {
+        self.rdegree.nrep(self.ncomp)
+    }
+
+    /// Total processes launched (`eworld` size).
+    pub fn nprocs(&self) -> usize {
+        self.ncomp + self.nrep()
+    }
+
+    /// Nodes needed at `cores_per_node` density.
+    pub fn nnodes(&self) -> usize {
+        self.nprocs().div_ceil(self.cores_per_node)
+    }
+
+    /// Apply one `key=value` override; unknown keys error.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ParseError> {
+        let bad = |k: &str, v: &str| ParseError::BadValue {
+            key: k.to_string(),
+            value: v.to_string(),
+        };
+        match key {
+            "ncomp" => self.ncomp = value.parse().map_err(|_| bad(key, value))?,
+            "rdegree" => {
+                self.rdegree = ReplicationDegree(value.parse().map_err(|_| bad(key, value))?)
+            }
+            "cores_per_node" => {
+                self.cores_per_node = value.parse().map_err(|_| bad(key, value))?
+            }
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            "failure_check_stride" => {
+                self.failure_check_stride = value.parse().map_err(|_| bad(key, value))?
+            }
+            "faults.enabled" => {
+                self.faults.enabled = value.parse().map_err(|_| bad(key, value))?
+            }
+            "faults.weibull_shape" => {
+                self.faults.weibull_shape = value.parse().map_err(|_| bad(key, value))?
+            }
+            "faults.weibull_scale_s" => {
+                self.faults.weibull_scale_s = value.parse().map_err(|_| bad(key, value))?
+            }
+            "faults.seed" => self.faults.seed = value.parse().map_err(|_| bad(key, value))?,
+            "faults.max_failures" => {
+                self.faults.max_failures = value.parse().map_err(|_| bad(key, value))?
+            }
+            "net.inject" => {
+                let inject: bool = value.parse().map_err(|_| bad(key, value))?;
+                self.empi_net.inject = inject;
+                self.ompi_net.inject = inject;
+            }
+            "net.congestion_procs" => {
+                let p: usize = value.parse().map_err(|_| bad(key, value))?;
+                self.empi_net.congestion_procs = p;
+                self.ompi_net.congestion_procs = p;
+            }
+            "net.congestion_factor" => {
+                let f: f64 = value.parse().map_err(|_| bad(key, value))?;
+                self.empi_net.congestion_factor = f;
+                self.ompi_net.congestion_factor = f;
+            }
+            _ => return Err(ParseError::UnknownKey(key.to_string())),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file body (`key = value` lines, `#` comments).
+    pub fn from_str_overrides(&self, body: &str) -> Result<Self, ParseError> {
+        let mut cfg = self.clone();
+        for (k, v) in parse_kv(body)? {
+            cfg.set(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rdegree_counts_match_paper_table() {
+        // 256 computational processes, paper's sweep.
+        let cases = [
+            (0.0, 0),
+            (6.25, 16),
+            (12.5, 32),
+            (25.0, 64),
+            (50.0, 128),
+            (100.0, 256),
+        ];
+        for (pct, want) in cases {
+            assert_eq!(ReplicationDegree(pct).nrep(256), want, "pct={pct}");
+        }
+    }
+
+    #[test]
+    fn nprocs_and_nodes() {
+        let cfg = JobConfig::new(256, 100.0);
+        assert_eq!(cfg.nprocs(), 512);
+        assert_eq!(cfg.nnodes(), 11); // ceil(512/48)
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut cfg = JobConfig::default();
+        cfg.set("ncomp", "64").unwrap();
+        cfg.set("rdegree", "25").unwrap();
+        cfg.set("faults.enabled", "true").unwrap();
+        assert_eq!(cfg.ncomp, 64);
+        assert_eq!(cfg.nrep(), 16);
+        assert!(cfg.faults.enabled);
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("ncomp", "abc").is_err());
+    }
+
+    #[test]
+    fn file_body_parsing() {
+        let base = JobConfig::default();
+        let cfg = base
+            .from_str_overrides("# comment\nncomp = 32\nrdegree = 50\n\nfaults.seed = 7\n")
+            .unwrap();
+        assert_eq!(cfg.ncomp, 32);
+        assert_eq!(cfg.nrep(), 16);
+        assert_eq!(cfg.faults.seed, 7);
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal `key = value` config parser (serde/toml are unavailable in the
+//! offline build image; the format is a strict subset of TOML's top level).
+
+use thiserror::Error;
+
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    #[error("line {line}: expected `key = value`, got `{text}`")]
+    Malformed { line: usize, text: String },
+    #[error("unknown config key `{0}`")]
+    UnknownKey(String),
+    #[error("bad value for `{key}`: `{value}`")]
+    BadValue { key: String, value: String },
+}
+
+/// Parse `key = value` lines. `#` starts a comment; blank lines are skipped;
+/// values may be quoted.
+pub fn parse_kv(body: &str) -> Result<Vec<(String, String)>, ParseError> {
+    let mut out = Vec::new();
+    for (i, raw) in body.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(p) => &raw[..p],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or(ParseError::Malformed {
+            line: i + 1,
+            text: raw.to_string(),
+        })?;
+        let key = k.trim().to_string();
+        let mut val = v.trim();
+        if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            val = &val[1..val.len() - 1];
+        }
+        if key.is_empty() {
+            return Err(ParseError::Malformed {
+                line: i + 1,
+                text: raw.to_string(),
+            });
+        }
+        out.push((key, val.to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_lines() {
+        let kv = parse_kv("a = 1\nb=two\nc = \"three four\"\n").unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("a".into(), "1".into()),
+                ("b".into(), "two".into()),
+                ("c".into(), "three four".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let kv = parse_kv("# header\n\n  x = 5 # trailing\n").unwrap();
+        assert_eq!(kv, vec![("x".into(), "5".into())]);
+    }
+
+    #[test]
+    fn malformed_reports_line() {
+        let err = parse_kv("ok = 1\nnot a pair\n").unwrap_err();
+        assert!(matches!(err, ParseError::Malformed { line: 2, .. }));
+    }
+}

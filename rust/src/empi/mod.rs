@@ -1,0 +1,608 @@
+//! **EMPI** — the "external/native" MPI library (MVAPICH2 in the paper).
+//!
+//! This is the fast, platform-tuned library that carries *all* application
+//! data in PartRePer-MPI (§IV). Crucially it has **no fault tolerance**:
+//! nothing in this module ever looks at the failed-process set. A peer dying
+//! mid-operation manifests as a silent non-completion (send to nowhere,
+//! receive that never matches) exactly like a real native MPI — surviving
+//! that is entirely the job of the PartRePer layer above.
+//!
+//! Layout:
+//! * [`Comm`] — intracommunicator: p2p (blocking + nonblocking) and the
+//!   tuned collectives in [`coll`].
+//! * [`InterComm`] — intercommunicator between disjoint groups (used by
+//!   PartRePer for computational↔replica traffic).
+//! * [`reduce`] — dtype/op combine kernels shared with the OMPI layer.
+
+pub mod coll;
+pub mod nbc;
+pub mod reduce;
+
+pub use nbc::IAlltoallv;
+pub use reduce::{DType, ReduceOp};
+
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::CommError;
+use crate::fabric::{Envelope, Fabric, MatchSpec};
+
+/// Deadline for internal blocking receives. Generous: it only fires on
+/// protocol bugs or "native MPI would have hung here" situations, which we
+/// want to surface loudly in tests.
+pub const RECV_DEADLINE: Duration = Duration::from_secs(60);
+
+/// MPI_ANY_SOURCE analogue at the comm-rank level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    Rank(usize),
+    Any,
+}
+
+/// MPI_ANY_TAG analogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tag {
+    Tag(i64),
+    Any,
+}
+
+/// A completed receive, with the source translated back to a comm rank.
+#[derive(Clone, Debug)]
+pub struct Recvd {
+    pub src: usize,
+    pub tag: i64,
+    pub send_id: u64,
+    pub data: Arc<Vec<u8>>,
+}
+
+/// Pending nonblocking receive (MPI_Request for receives).
+#[derive(Clone, Debug)]
+pub struct RecvReq {
+    spec: MatchSpec,
+    done: Option<Recvd>,
+}
+
+/// An intracommunicator handle, local to one rank's thread.
+///
+/// Collective context-id derivation and the collective sequence number are
+/// kept in lock-free `Cell`s: MPI already requires every member to call
+/// collectives in the same order, so per-rank counters stay in agreement
+/// without communication.
+pub struct Comm {
+    pub fabric: Arc<Fabric>,
+    /// Context id separating this comm's traffic.
+    pub ctx: u64,
+    /// comm rank -> fabric rank.
+    pub group: Arc<Vec<usize>>,
+    /// My rank within this comm.
+    pub myrank: usize,
+    /// Per-rank collective sequence; advances identically on all members.
+    coll_seq: Cell<u64>,
+    /// Per-rank derived-context counter for dup/split.
+    derive_seq: Cell<u64>,
+}
+
+impl Comm {
+    /// Build the world communicator over all fabric ranks. `ctx` must be
+    /// pre-agreed (the launcher allocates it before spawning rank threads).
+    pub fn world(fabric: Arc<Fabric>, ctx: u64, myrank: usize) -> Self {
+        let n = fabric.len();
+        Self::from_group(fabric, ctx, (0..n).collect(), myrank)
+    }
+
+    /// Build a communicator from an explicit fabric-rank group. `myrank` is
+    /// the index of the calling rank inside `group`.
+    pub fn from_group(fabric: Arc<Fabric>, ctx: u64, group: Vec<usize>, myrank: usize) -> Self {
+        debug_assert!(myrank < group.len());
+        Self {
+            fabric,
+            ctx,
+            group: Arc::new(group),
+            myrank,
+            coll_seq: Cell::new(0),
+            derive_seq: Cell::new(0),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.group.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.myrank
+    }
+
+    /// Fabric rank of a comm rank.
+    #[inline]
+    pub fn fabric_rank(&self, r: usize) -> usize {
+        self.group[r]
+    }
+
+    /// My fabric rank.
+    #[inline]
+    pub fn my_fabric_rank(&self) -> usize {
+        self.group[self.myrank]
+    }
+
+    /// Translate a fabric rank back to a comm rank (receives).
+    pub fn comm_rank_of(&self, fabric_rank: usize) -> Option<usize> {
+        self.group.iter().position(|&f| f == fabric_rank)
+    }
+
+    fn spec(&self, src: Src, tag: Tag) -> MatchSpec {
+        MatchSpec {
+            ctx: self.ctx,
+            src: match src {
+                Src::Rank(r) => Some(self.group[r]),
+                Src::Any => None,
+            },
+            tag: match tag {
+                Tag::Tag(t) => Some(t),
+                Tag::Any => None,
+            },
+        }
+    }
+
+    fn translate(&self, e: Envelope) -> Recvd {
+        Recvd {
+            src: self.comm_rank_of(e.src).expect("sender not in comm group"),
+            tag: e.tag,
+            send_id: e.send_id,
+            data: e.data,
+        }
+    }
+
+    // ---------------------------------------------------------------- p2p
+
+    /// Eager send (EMPI_Send). Completes locally; delivery is the fabric's
+    /// problem — matching native-MPI eager semantics for our message sizes.
+    pub fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
+        self.send_with_id(dst, tag, 0, data)
+    }
+
+    /// Send with an explicit piggybacked send-id (PartRePer logging, §V-B).
+    pub fn send_with_id(
+        &self,
+        dst: usize,
+        tag: i64,
+        send_id: u64,
+        data: &[u8],
+    ) -> Result<(), CommError> {
+        self.fabric.send(Envelope::new(
+            self.my_fabric_rank(),
+            self.group[dst],
+            self.ctx,
+            tag,
+            send_id,
+            data.to_vec(),
+        ))
+    }
+
+    /// Zero-copy variant used on fan-out paths.
+    pub fn send_shared(
+        &self,
+        dst: usize,
+        tag: i64,
+        send_id: u64,
+        data: Arc<Vec<u8>>,
+    ) -> Result<(), CommError> {
+        self.fabric.send(Envelope {
+            src: self.my_fabric_rank(),
+            dst: self.group[dst],
+            ctx: self.ctx,
+            tag,
+            send_id,
+            data,
+        })
+    }
+
+    /// Nonblocking send — identical to `send` under eager delivery; kept as
+    /// a distinct name so protocol code reads like the paper's pseudocode.
+    pub fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
+        self.send(dst, tag, data)
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, CommError> {
+        let spec = self.spec(src, tag);
+        let e = self
+            .fabric
+            .recv(self.my_fabric_rank(), &spec, RECV_DEADLINE)?;
+        Ok(self.translate(e))
+    }
+
+    /// Post a nonblocking receive.
+    pub fn irecv(&self, src: Src, tag: Tag) -> RecvReq {
+        RecvReq {
+            spec: self.spec(src, tag),
+            done: None,
+        }
+    }
+
+    /// EMPI_Test: poll a pending receive. Returns the message once.
+    pub fn test(&self, req: &mut RecvReq) -> Result<Option<Recvd>, CommError> {
+        if let Some(d) = req.done.take() {
+            return Ok(Some(d));
+        }
+        match self.fabric.try_recv(self.my_fabric_rank(), &req.spec)? {
+            Some(e) => Ok(Some(self.translate(e))),
+            None => Ok(None),
+        }
+    }
+
+    /// EMPI_Probe analogue.
+    pub fn probe(&self, src: Src, tag: Tag) -> Result<bool, CommError> {
+        self.fabric.probe(self.my_fabric_rank(), &self.spec(src, tag))
+    }
+
+    // ------------------------------------------------------- comm surgery
+
+    /// Internal: next collective round tag. Negative tags are reserved for
+    /// collectives; `op` spaces algorithms apart, the sequence number spaces
+    /// successive collectives on the same comm.
+    pub(crate) fn coll_tag(&self, op: i64) -> i64 {
+        let seq = self.coll_seq.get();
+        self.coll_seq.set(seq + 1);
+        -(op * 0x1_0000_0000 + (seq as i64 & 0xFFFF_FFFF) + 1)
+    }
+
+    /// Deterministically derive a child context id. All members derive the
+    /// same value without communication because they share (ctx, seq, salt).
+    pub(crate) fn derive_ctx(&self, salt: u64) -> u64 {
+        let seq = self.derive_seq.get();
+        self.derive_seq.set(seq + 1);
+        let mut s = self
+            .ctx
+            .wrapping_mul(0x2545F4914F6CDD1D)
+            .wrapping_add(seq)
+            .wrapping_add(salt.wrapping_mul(0x9E3779B97F4A7C15));
+        crate::util::prng::splitmix64(&mut s)
+    }
+
+    /// MPI_Comm_dup.
+    pub fn dup(&self) -> Comm {
+        let ctx = self.derive_ctx(0);
+        Comm::from_group(
+            self.fabric.clone(),
+            ctx,
+            self.group.as_ref().clone(),
+            self.myrank,
+        )
+    }
+
+    /// MPI_Comm_split. Requires an allgather of (color, key); returns `None`
+    /// for `color == UNDEFINED` (`u64::MAX`).
+    pub fn split(&self, color: u64, key: i64) -> Result<Option<Comm>, CommError> {
+        let mine = [color, key as u64, self.myrank as u64];
+        let all = coll::allgather(self, &crate::util::u64s_to_bytes(&mine))?;
+        let mut members: Vec<(i64, usize)> = Vec::new();
+        for bytes in &all {
+            let v = crate::util::u64s_from_bytes(bytes);
+            if v[0] == color {
+                members.push((v[1] as i64, v[2] as usize));
+            }
+        }
+        if color == u64::MAX {
+            return Ok(None);
+        }
+        members.sort();
+        let group: Vec<usize> = members.iter().map(|&(_, r)| self.group[r]).collect();
+        let myrank = members
+            .iter()
+            .position(|&(_, r)| r == self.myrank)
+            .expect("caller must be in its own color group");
+        let ctx = self.derive_ctx(color.wrapping_add(1));
+        Ok(Some(Comm::from_group(
+            self.fabric.clone(),
+            ctx,
+            group,
+            myrank,
+        )))
+    }
+}
+
+/// An intercommunicator between two disjoint groups (computational and
+/// replica processes in PartRePer: `EMPI_CMP_REP_INTERCOMM`, §V).
+pub struct InterComm {
+    pub fabric: Arc<Fabric>,
+    pub ctx: u64,
+    pub local: Arc<Vec<usize>>,
+    pub remote: Arc<Vec<usize>>,
+    pub my_local_rank: usize,
+}
+
+impl InterComm {
+    pub fn new(
+        fabric: Arc<Fabric>,
+        ctx: u64,
+        local: Vec<usize>,
+        remote: Vec<usize>,
+        my_local_rank: usize,
+    ) -> Self {
+        Self {
+            fabric,
+            ctx,
+            local: Arc::new(local),
+            remote: Arc::new(remote),
+            my_local_rank,
+        }
+    }
+
+    pub fn local_size(&self) -> usize {
+        self.local.len()
+    }
+
+    pub fn remote_size(&self) -> usize {
+        self.remote.len()
+    }
+
+    fn my_fabric_rank(&self) -> usize {
+        self.local[self.my_local_rank]
+    }
+
+    /// Send to a rank of the *remote* group.
+    pub fn send(&self, remote_rank: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
+        self.send_with_id(remote_rank, tag, 0, data)
+    }
+
+    pub fn send_with_id(
+        &self,
+        remote_rank: usize,
+        tag: i64,
+        send_id: u64,
+        data: &[u8],
+    ) -> Result<(), CommError> {
+        self.fabric.send(Envelope::new(
+            self.my_fabric_rank(),
+            self.remote[remote_rank],
+            self.ctx,
+            tag,
+            send_id,
+            data.to_vec(),
+        ))
+    }
+
+    pub fn send_shared(
+        &self,
+        remote_rank: usize,
+        tag: i64,
+        send_id: u64,
+        data: Arc<Vec<u8>>,
+    ) -> Result<(), CommError> {
+        self.fabric.send(Envelope {
+            src: self.my_fabric_rank(),
+            dst: self.remote[remote_rank],
+            ctx: self.ctx,
+            tag,
+            send_id,
+            data,
+        })
+    }
+
+    /// Blocking receive from a rank of the remote group.
+    pub fn recv(&self, remote_rank: Src, tag: Tag) -> Result<Recvd, CommError> {
+        let spec = MatchSpec {
+            ctx: self.ctx,
+            src: match remote_rank {
+                Src::Rank(r) => Some(self.remote[r]),
+                Src::Any => None,
+            },
+            tag: match tag {
+                Tag::Tag(t) => Some(t),
+                Tag::Any => None,
+            },
+        };
+        let e = self
+            .fabric
+            .recv(self.my_fabric_rank(), &spec, RECV_DEADLINE)?;
+        let src = self
+            .remote
+            .iter()
+            .position(|&f| f == e.src)
+            .expect("intercomm sender not in remote group");
+        Ok(Recvd {
+            src,
+            tag: e.tag,
+            send_id: e.send_id,
+            data: e.data,
+        })
+    }
+
+    /// Post a nonblocking receive from the remote group.
+    pub fn irecv(&self, remote_rank: Src, tag: Tag) -> RecvReq {
+        RecvReq {
+            spec: MatchSpec {
+                ctx: self.ctx,
+                src: match remote_rank {
+                    Src::Rank(r) => Some(self.remote[r]),
+                    Src::Any => None,
+                },
+                tag: match tag {
+                    Tag::Tag(t) => Some(t),
+                    Tag::Any => None,
+                },
+            },
+            done: None,
+        }
+    }
+
+    /// Poll a pending intercomm receive.
+    pub fn test(&self, req: &mut RecvReq) -> Result<Option<Recvd>, CommError> {
+        if let Some(d) = req.done.take() {
+            return Ok(Some(d));
+        }
+        match self.fabric.try_recv(self.my_fabric_rank(), &req.spec)? {
+            Some(e) => {
+                let src = self
+                    .remote
+                    .iter()
+                    .position(|&f| f == e.src)
+                    .expect("intercomm sender not in remote group");
+                Ok(Some(Recvd {
+                    src,
+                    tag: e.tag,
+                    send_id: e.send_id,
+                    data: e.data,
+                }))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{NetModel, ProcSet};
+    use std::thread;
+
+    /// Run `f(rank, comm)` on `n` threads over a fresh world comm.
+    pub(crate) fn run_ranks<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let procs = ProcSet::new(n);
+        let fabric = Fabric::new("empi-test", procs, NetModel::instant());
+        let ctx = fabric.alloc_ctx();
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let fabric = fabric.clone();
+                let f = f.clone();
+                thread::spawn(move || f(r, Comm::world(fabric, ctx, r)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn p2p_ring() {
+        let out = run_ranks(4, |r, comm| {
+            let next = (r + 1) % 4;
+            let prev = (r + 3) % 4;
+            comm.send(next, 1, &[r as u8]).unwrap();
+            let m = comm.recv(Src::Rank(prev), Tag::Tag(1)).unwrap();
+            m.data[0]
+        });
+        assert_eq!(out, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn irecv_test_loop() {
+        let out = run_ranks(2, |r, comm| {
+            if r == 0 {
+                std::thread::sleep(Duration::from_millis(30));
+                comm.send(1, 5, b"later").unwrap();
+                Vec::new()
+            } else {
+                let mut req = comm.irecv(Src::Rank(0), Tag::Tag(5));
+                loop {
+                    if let Some(m) = comm.test(&mut req).unwrap() {
+                        return m.data.to_vec();
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        });
+        assert_eq!(out[1], b"later");
+    }
+
+    #[test]
+    fn any_source_any_tag() {
+        let out = run_ranks(3, |r, comm| {
+            if r > 0 {
+                comm.send(0, r as i64, &[r as u8]).unwrap();
+                0
+            } else {
+                let a = comm.recv(Src::Any, Tag::Any).unwrap();
+                let b = comm.recv(Src::Any, Tag::Any).unwrap();
+                (a.data[0] + b.data[0]) as i32
+            }
+        });
+        assert_eq!(out[0], 3);
+    }
+
+    #[test]
+    fn dup_separates_traffic() {
+        let out = run_ranks(2, |r, comm| {
+            let dup = comm.dup();
+            assert_ne!(dup.ctx, comm.ctx);
+            if r == 0 {
+                comm.send(1, 1, b"on-parent").unwrap();
+                dup.send(1, 1, b"on-dup").unwrap();
+                Vec::new()
+            } else {
+                // receive from the dup first: must NOT see the parent's msg
+                let d = dup.recv(Src::Rank(0), Tag::Tag(1)).unwrap();
+                let p = comm.recv(Src::Rank(0), Tag::Tag(1)).unwrap();
+                vec![d.data.to_vec(), p.data.to_vec()]
+            }
+        });
+        assert_eq!(out[1][0], b"on-dup");
+        assert_eq!(out[1][1], b"on-parent");
+    }
+
+    #[test]
+    fn split_even_odd() {
+        let out = run_ranks(6, |r, comm| {
+            let sub = comm.split((r % 2) as u64, r as i64).unwrap().unwrap();
+            (sub.size(), sub.rank())
+        });
+        for (r, &(size, rank)) in out.iter().enumerate() {
+            assert_eq!(size, 3);
+            assert_eq!(rank, r / 2);
+        }
+    }
+
+    #[test]
+    fn split_undefined_returns_none() {
+        let out = run_ranks(4, |r, comm| {
+            let color = if r == 0 { u64::MAX } else { 1 };
+            comm.split(color, r as i64).unwrap().is_none()
+        });
+        assert_eq!(out, vec![true, false, false, false]);
+    }
+
+    #[test]
+    fn intercomm_pairwise() {
+        let procs = ProcSet::new(4);
+        let fabric = Fabric::new("ic-test", procs, NetModel::instant());
+        let ctx = fabric.alloc_ctx();
+        // group A = {0,1}, group B = {2,3}
+        let handles: Vec<_> = (0..4usize)
+            .map(|r| {
+                let fabric = fabric.clone();
+                thread::spawn(move || {
+                    let (local, remote, lr): (Vec<usize>, Vec<usize>, usize) = if r < 2 {
+                        (vec![0, 1], vec![2, 3], r)
+                    } else {
+                        (vec![2, 3], vec![0, 1], r - 2)
+                    };
+                    let ic = InterComm::new(fabric, ctx, local, remote, lr);
+                    if r < 2 {
+                        ic.send(lr, 9, &[r as u8]).unwrap();
+                        0u8
+                    } else {
+                        let m = ic.recv(Src::Rank(lr), Tag::Tag(9)).unwrap();
+                        m.data[0]
+                    }
+                })
+            })
+            .collect();
+        let out: Vec<u8> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(out[2], 0);
+        assert_eq!(out[3], 1);
+    }
+
+    #[test]
+    fn derived_ctx_agrees_across_ranks() {
+        let out = run_ranks(4, |_r, comm| {
+            let d1 = comm.derive_ctx(7);
+            let d2 = comm.derive_ctx(7);
+            (d1, d2)
+        });
+        assert!(out.windows(2).all(|w| w[0] == w[1]));
+        assert_ne!(out[0].0, out[0].1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Nonblocking collectives, driven by an explicit `test()` progression —
+//! the shape PartRePer needs so it can interleave progress with ULFM
+//! failure checks (Fig 7), and the mechanism behind the paper's IS anomaly:
+//! `EMPI_Ialltoallv` + a test loop accepted blocks in arrival order and beat
+//! the blocking `EMPI_Alltoallv`'s fixed pairwise schedule (§VII-A).
+
+use super::coll::OP_IALLTOALLV;
+use super::{Comm, RecvReq, Src, Tag};
+use crate::error::CommError;
+
+/// In-flight nonblocking alltoallv.
+///
+/// All sends go out eagerly at creation; `test()` then drains whichever
+/// incoming blocks have arrived, in any order.
+pub struct IAlltoallv {
+    reqs: Vec<Option<RecvReq>>,
+    out: Vec<Option<Vec<u8>>>,
+    outstanding: usize,
+}
+
+impl IAlltoallv {
+    /// Start the collective: one block per destination rank.
+    pub fn start(comm: &Comm, blocks: &[Vec<u8>]) -> Result<Self, CommError> {
+        let n = comm.size();
+        assert_eq!(blocks.len(), n, "ialltoallv needs one block per rank");
+        let me = comm.rank();
+        let tag = comm.coll_tag(OP_IALLTOALLV);
+
+        let mut out: Vec<Option<Vec<u8>>> = vec![None; n];
+        out[me] = Some(blocks[me].clone());
+
+        // Eager sends, pairwise order for fabric fairness.
+        for i in 1..n {
+            let to = (me + i) % n;
+            comm.isend(to, tag, &blocks[to])?;
+        }
+
+        // Post one receive per source.
+        let mut reqs: Vec<Option<RecvReq>> = vec![None; n];
+        let mut outstanding = 0;
+        for (src, slot) in reqs.iter_mut().enumerate() {
+            if src != me {
+                *slot = Some(comm.irecv(Src::Rank(src), Tag::Tag(tag)));
+                outstanding += 1;
+            }
+        }
+        Ok(Self {
+            reqs,
+            out,
+            outstanding,
+        })
+    }
+
+    /// One progression step: poll every outstanding receive once. Returns
+    /// `true` when the collective is complete.
+    pub fn test(&mut self, comm: &Comm) -> Result<bool, CommError> {
+        if self.outstanding == 0 {
+            return Ok(true);
+        }
+        for (src, slot) in self.reqs.iter_mut().enumerate() {
+            if let Some(req) = slot {
+                if let Some(m) = comm.test(req)? {
+                    self.out[src] = Some(m.data.to_vec());
+                    *slot = None;
+                    self.outstanding -= 1;
+                }
+            }
+        }
+        Ok(self.outstanding == 0)
+    }
+
+    /// Spin `test()` to completion (blocking wait).
+    pub fn wait(mut self, comm: &Comm) -> Result<Vec<Vec<u8>>, CommError> {
+        while !self.test(comm)? {
+            std::thread::yield_now();
+        }
+        Ok(self.finish())
+    }
+
+    /// Consume the completed collective. Panics if still outstanding.
+    pub fn finish(self) -> Vec<Vec<u8>> {
+        assert_eq!(self.outstanding, 0, "ialltoallv not complete");
+        self.out.into_iter().map(|b| b.unwrap()).collect()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.outstanding == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::empi::tests::run_ranks;
+
+    #[test]
+    fn ialltoallv_matches_blocking_semantics() {
+        let n = 5usize;
+        let out = run_ranks(n, move |r, comm| {
+            let blocks: Vec<Vec<u8>> = (0..n).map(|d| vec![r as u8; d + 1]).collect();
+            let op = IAlltoallv::start(&comm, &blocks).unwrap();
+            op.wait(&comm).unwrap()
+        });
+        for per_rank in out.iter() {
+            for (s, b) in per_rank.iter().enumerate() {
+                assert_eq!(b, &vec![s as u8; per_rank.len() - per_rank.len() + b.len()]);
+                assert!(b.iter().all(|&x| x == s as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn accepts_blocks_in_any_arrival_order() {
+        // Rank 0 is slow to send; others must still complete among
+        // themselves before rank 0's blocks arrive.
+        let n = 4usize;
+        let out = run_ranks(n, move |r, comm| {
+            if r == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(40));
+            }
+            let blocks: Vec<Vec<u8>> = (0..n).map(|_| vec![r as u8]).collect();
+            let op = IAlltoallv::start(&comm, &blocks).unwrap();
+            op.wait(&comm).unwrap()
+        });
+        for per_rank in out.iter() {
+            for (s, b) in per_rank.iter().enumerate() {
+                assert_eq!(b, &vec![s as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn test_reports_progress_incrementally() {
+        let out = run_ranks(2, |r, comm| {
+            let blocks = vec![vec![r as u8], vec![r as u8]];
+            let mut op = IAlltoallv::start(&comm, &blocks).unwrap();
+            let mut polls = 0u32;
+            while !op.test(&comm).unwrap() {
+                polls += 1;
+                std::thread::yield_now();
+                if polls > 1_000_000 {
+                    panic!("never completed");
+                }
+            }
+            op.finish()
+        });
+        assert_eq!(out[0][1], vec![1]);
+        assert_eq!(out[1][0], vec![0]);
+    }
+
+    #[test]
+    fn single_rank_completes_immediately() {
+        let out = run_ranks(1, |_r, comm| {
+            let op = IAlltoallv::start(&comm, &[b"self".to_vec()]).unwrap();
+            assert!(op.is_complete());
+            op.finish()
+        });
+        assert_eq!(out[0][0], b"self");
+    }
+}

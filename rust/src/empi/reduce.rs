@@ -1,0 +1,138 @@
+//! Element-wise combine kernels for reduction collectives.
+//!
+//! Payloads on the wire are raw little-endian bytes; reductions interpret
+//! them according to a [`DType`] and fold with a [`ReduceOp`]. Shared by the
+//! tuned EMPI collectives and the generic OMPI ones.
+
+/// Element type of a reduction buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    F32,
+    I64,
+    U64,
+}
+
+impl DType {
+    pub fn width(self) -> usize {
+        match self {
+            DType::F64 | DType::I64 | DType::U64 => 8,
+            DType::F32 => 4,
+        }
+    }
+}
+
+/// Reduction operator (MPI_SUM / MPI_MIN / MPI_MAX / MPI_PROD).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+    Prod,
+}
+
+macro_rules! fold_typed {
+    ($ty:ty, $w:expr, $acc:expr, $inc:expr, $op:expr) => {{
+        for (a, b) in $acc.chunks_exact_mut($w).zip($inc.chunks_exact($w)) {
+            let x = <$ty>::from_le_bytes(a[..$w].try_into().unwrap());
+            let y = <$ty>::from_le_bytes(b[..$w].try_into().unwrap());
+            let z = match $op {
+                ReduceOp::Sum => x + y,
+                ReduceOp::Prod => x * y,
+                ReduceOp::Min => {
+                    if y < x {
+                        y
+                    } else {
+                        x
+                    }
+                }
+                ReduceOp::Max => {
+                    if y > x {
+                        y
+                    } else {
+                        x
+                    }
+                }
+            };
+            a.copy_from_slice(&z.to_le_bytes());
+        }
+    }};
+}
+
+/// `acc[i] = op(acc[i], inc[i])` element-wise over the typed view.
+///
+/// Panics on length mismatch or misaligned buffers — both indicate protocol
+/// bugs, never valid traffic.
+pub fn fold(dtype: DType, op: ReduceOp, acc: &mut [u8], inc: &[u8]) {
+    assert_eq!(
+        acc.len(),
+        inc.len(),
+        "reduce buffers must match: {} vs {}",
+        acc.len(),
+        inc.len()
+    );
+    assert!(acc.len() % dtype.width() == 0, "misaligned reduce buffer");
+    match dtype {
+        DType::F64 => fold_typed!(f64, 8, acc, inc, op),
+        DType::F32 => fold_typed!(f32, 4, acc, inc, op),
+        DType::I64 => fold_typed!(i64, 8, acc, inc, op),
+        DType::U64 => fold_typed!(u64, 8, acc, inc, op),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{f64s_from_bytes, f64s_to_bytes, u64s_from_bytes, u64s_to_bytes};
+
+    #[test]
+    fn sum_f64() {
+        let mut a = f64s_to_bytes(&[1.0, 2.0, 3.0]);
+        let b = f64s_to_bytes(&[0.5, -2.0, 10.0]);
+        fold(DType::F64, ReduceOp::Sum, &mut a, &b);
+        assert_eq!(f64s_from_bytes(&a), vec![1.5, 0.0, 13.0]);
+    }
+
+    #[test]
+    fn min_max_u64() {
+        let mut a = u64s_to_bytes(&[5, 5]);
+        let b = u64s_to_bytes(&[3, 9]);
+        let mut a2 = a.clone();
+        fold(DType::U64, ReduceOp::Min, &mut a, &b);
+        assert_eq!(u64s_from_bytes(&a), vec![3, 5]);
+        fold(DType::U64, ReduceOp::Max, &mut a2, &b);
+        assert_eq!(u64s_from_bytes(&a2), vec![5, 9]);
+    }
+
+    #[test]
+    fn prod_f32() {
+        let mut a = crate::util::f32s_to_bytes(&[2.0, -3.0]);
+        let b = crate::util::f32s_to_bytes(&[4.0, 0.5]);
+        fold(DType::F32, ReduceOp::Prod, &mut a, &b);
+        assert_eq!(crate::util::f32s_from_bytes(&a), vec![8.0, -1.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let mut a = vec![0u8; 8];
+        fold(DType::F64, ReduceOp::Sum, &mut a, &[0u8; 16]);
+    }
+
+    #[test]
+    fn fold_is_associative_over_chain() {
+        // (a+b)+c == a+(b+c) for integer sums — the property the tree
+        // algorithms rely on.
+        let a = u64s_to_bytes(&[1, 10]);
+        let b = u64s_to_bytes(&[2, 20]);
+        let c = u64s_to_bytes(&[3, 30]);
+        let mut left = a.clone();
+        fold(DType::U64, ReduceOp::Sum, &mut left, &b);
+        fold(DType::U64, ReduceOp::Sum, &mut left, &c);
+        let mut right_bc = b.clone();
+        fold(DType::U64, ReduceOp::Sum, &mut right_bc, &c);
+        let mut right = a.clone();
+        fold(DType::U64, ReduceOp::Sum, &mut right, &right_bc);
+        assert_eq!(left, right);
+    }
+}

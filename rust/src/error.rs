@@ -1,0 +1,96 @@
+//! Error taxonomy for the whole stack.
+//!
+//! Three families, mirroring the paper's layering:
+//! * [`CommError`] — raw fabric/EMPI-level failures (including the
+//!   cooperative-kill signal). The native library has **no** notion of peer
+//!   failure; its only failure modes are "I was killed" and "I waited too
+//!   long" (which in a real native MPI would be a hang).
+//! * [`UlfmError`] — the ULFM error classes of §III-B: `ProcFailed`
+//!   (MPI_ERR_PROC_FAILED) and `Revoked` (MPI_ERR_REVOKED).
+//! * [`JobError`] — what the application/driver ultimately sees.
+
+use thiserror::Error;
+
+#[derive(Error, Debug, Clone)]
+pub enum CommError {
+    /// The calling rank has been poisoned by the fault injector and must
+    /// unwind now (cooperative kill).
+    #[error("rank {rank} killed by fault injector")]
+    Killed { rank: usize },
+
+    /// A blocking fabric operation exceeded its deadline. For the
+    /// no-fault-tolerance native library this models a hang/abort.
+    #[error("rank {rank} timed out: {detail}")]
+    Timeout { rank: usize, detail: String },
+}
+
+/// ULFM error classes (§III-B).
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum UlfmError {
+    /// MPI_ERR_PROC_FAILED: a process involved in the operation is dead.
+    #[error("process failure detected (failed ranks in comm: {failed:?})")]
+    ProcFailed { failed: Vec<usize> },
+
+    /// MPI_ERR_REVOKED: the communicator was revoked by some process.
+    #[error("communicator revoked")]
+    Revoked,
+}
+
+/// Terminal outcome of a rank or the whole job.
+#[derive(Error, Debug, Clone)]
+pub enum JobError {
+    #[error(transparent)]
+    Comm(#[from] CommError),
+
+    /// A computational process with no (live) replica died: the job is
+    /// interrupted and must fall back to checkpoint/restart (§VII-B).
+    #[error("job interrupted: computational rank {rank} had no live replica")]
+    Interrupted { rank: usize },
+
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+/// Payload carried through `panic_any` when a rank thread must unwind
+/// because it was killed. The per-rank `catch_unwind` in the launcher turns
+/// this back into a structured outcome, never a crash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankKilled {
+    pub rank: usize,
+}
+
+/// Panic payload for a job interruption (comp process without replica died,
+/// §VII-B): every surviving rank unwinds and the driver reports MTTI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobInterrupted {
+    pub dead_rank: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_strings() {
+        let e = CommError::Killed { rank: 3 };
+        assert!(e.to_string().contains("rank 3"));
+        let u = UlfmError::ProcFailed { failed: vec![1, 2] };
+        assert!(u.to_string().contains("[1, 2]"));
+        assert_eq!(UlfmError::Revoked.to_string(), "communicator revoked");
+        let j = JobError::Interrupted { rank: 9 };
+        assert!(j.to_string().contains("rank 9"));
+    }
+
+    #[test]
+    fn comm_into_job() {
+        let j: JobError = CommError::Timeout {
+            rank: 0,
+            detail: "x".into(),
+        }
+        .into();
+        assert!(matches!(j, JobError::Comm(_)));
+    }
+}

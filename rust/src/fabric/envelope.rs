@@ -1,0 +1,117 @@
+//! Wire envelope and receive-side matching.
+
+use std::sync::Arc;
+
+/// One message on the simulated wire.
+///
+/// `send_id` is the piggybacked message id the paper attaches to every
+/// transmission for post-failure message recovery (§V-B, §VI-B); fabrics and
+/// the plain EMPI/OMPI layers carry it opaquely, only PartRePer assigns it.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub src: usize,
+    pub dst: usize,
+    /// Communicator context id — separates traffic of different comms the
+    /// same way an MPI context id does.
+    pub ctx: u64,
+    pub tag: i64,
+    pub send_id: u64,
+    pub data: Arc<Vec<u8>>,
+}
+
+impl Envelope {
+    pub fn new(src: usize, dst: usize, ctx: u64, tag: i64, send_id: u64, data: Vec<u8>) -> Self {
+        Self {
+            src,
+            dst,
+            ctx,
+            tag,
+            send_id,
+            data: Arc::new(data),
+        }
+    }
+
+    /// Share the payload without copying (used when one logical send fans
+    /// out to a computational destination and its replica in parallel).
+    pub fn fanout(&self, dst: usize) -> Self {
+        Self {
+            dst,
+            data: Arc::clone(&self.data),
+            ..*self
+        }
+    }
+}
+
+/// Receive-side matching: (ctx, optional src, optional tag).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatchSpec {
+    pub ctx: u64,
+    /// `None` = MPI_ANY_SOURCE.
+    pub src: Option<usize>,
+    /// `None` = MPI_ANY_TAG.
+    pub tag: Option<i64>,
+}
+
+impl MatchSpec {
+    pub fn exact(src: usize, ctx: u64, tag: i64) -> Self {
+        Self {
+            ctx,
+            src: Some(src),
+            tag: Some(tag),
+        }
+    }
+
+    pub fn any_source(ctx: u64, tag: i64) -> Self {
+        Self {
+            ctx,
+            src: None,
+            tag: Some(tag),
+        }
+    }
+
+    pub fn any(ctx: u64) -> Self {
+        Self {
+            ctx,
+            src: None,
+            tag: None,
+        }
+    }
+
+    #[inline]
+    pub fn matches(&self, e: &Envelope) -> bool {
+        self.ctx == e.ctx
+            && self.src.map_or(true, |s| s == e.src)
+            && self.tag.map_or(true, |t| t == e.tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_matching() {
+        let e = Envelope::new(1, 2, 7, 42, 0, vec![]);
+        assert!(MatchSpec::exact(1, 7, 42).matches(&e));
+        assert!(!MatchSpec::exact(0, 7, 42).matches(&e));
+        assert!(!MatchSpec::exact(1, 8, 42).matches(&e));
+        assert!(!MatchSpec::exact(1, 7, 41).matches(&e));
+    }
+
+    #[test]
+    fn wildcards() {
+        let e = Envelope::new(3, 0, 9, 5, 0, vec![]);
+        assert!(MatchSpec::any_source(9, 5).matches(&e));
+        assert!(MatchSpec::any(9).matches(&e));
+        assert!(!MatchSpec::any(10).matches(&e));
+    }
+
+    #[test]
+    fn fanout_shares_payload() {
+        let e = Envelope::new(0, 1, 1, 1, 77, vec![1, 2, 3]);
+        let f = e.fanout(5);
+        assert_eq!(f.dst, 5);
+        assert_eq!(f.send_id, 77);
+        assert!(Arc::ptr_eq(&e.data, &f.data));
+    }
+}

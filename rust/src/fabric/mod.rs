@@ -1,0 +1,335 @@
+//! The simulated interconnect.
+//!
+//! Every MPI process in the reproduction is an OS thread; the "wire" between
+//! them is this fabric: per-rank tag-matching mailboxes guarded by
+//! mutex+condvar, plus a cost model standing in for the Infiniband fabric of
+//! the paper's 29-node cluster.
+//!
+//! Two fabric instances exist per job — one with the **EMPI** (native,
+//! MVAPICH2-like) cost profile carrying all application data, and one with
+//! the **OMPI** (Open MPI + ULFM) profile carrying only fault-tolerance
+//! control traffic — mirroring the paper's dual-library design (§IV). Both
+//! share one [`ProcSet`] so a process death is a single event observed (or
+//! deliberately *not* observed, on the EMPI side) by both.
+
+pub mod envelope;
+pub mod netmodel;
+pub mod procset;
+
+pub use envelope::{Envelope, MatchSpec};
+pub use netmodel::NetModel;
+pub use procset::{ProcSet, ProcState};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::CommError;
+
+/// Per-rank mailbox: a FIFO of envelopes plus a condvar for blocked readers
+/// and a monotone arrival counter (lets pollers park until *new* mail
+/// instead of spinning — the §Perf fix for oversubscribed rank threads).
+struct Mailbox {
+    queue: Mutex<(VecDeque<Envelope>, u64)>,
+    bell: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Self {
+            queue: Mutex::new((VecDeque::new(), 0)),
+            bell: Condvar::new(),
+        }
+    }
+}
+
+/// Aggregate traffic counters for one fabric (used by the harness and the
+/// §Perf accounting).
+#[derive(Default)]
+pub struct FabricMetrics {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    /// Virtual wire time in nanoseconds according to the [`NetModel`];
+    /// accumulated even when no real delay is injected.
+    pub virtual_ns: AtomicU64,
+}
+
+impl FabricMetrics {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.messages.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.virtual_ns.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The interconnect: `n` mailboxes + shared process liveness + cost model.
+pub struct Fabric {
+    boxes: Vec<Mailbox>,
+    pub procs: Arc<ProcSet>,
+    pub model: NetModel,
+    pub metrics: FabricMetrics,
+    next_ctx: AtomicU64,
+    /// Human label ("empi" / "ompi") for diagnostics.
+    pub label: &'static str,
+}
+
+/// How long a blocking receive waits between liveness re-checks.
+const POLL_TICK: Duration = Duration::from_micros(200);
+
+impl Fabric {
+    pub fn new(label: &'static str, procs: Arc<ProcSet>, model: NetModel) -> Arc<Self> {
+        let n = procs.len();
+        Arc::new(Self {
+            boxes: (0..n).map(|_| Mailbox::new()).collect(),
+            procs,
+            model,
+            metrics: FabricMetrics::default(),
+            next_ctx: AtomicU64::new(1),
+            label,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.boxes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    /// Allocate a fresh communicator context id (unique per fabric).
+    pub fn alloc_ctx(&self) -> u64 {
+        self.next_ctx.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Deliver an envelope. Sends never fail at the fabric level: a message
+    /// to a dead rank is enqueued and simply never read — exactly how an
+    /// eager native-MPI send to a crashed peer behaves (the paper relies on
+    /// this: EMPI must stay oblivious to failures, §IV-C).
+    pub fn send(&self, env: Envelope) -> Result<(), CommError> {
+        self.procs.check_poison(env.src)?;
+        let nbytes = env.data.len() as u64;
+        self.metrics.messages.fetch_add(1, Ordering::Relaxed);
+        self.metrics.bytes.fetch_add(nbytes, Ordering::Relaxed);
+        let cost = self.model.wire_ns(nbytes as usize, self.boxes.len());
+        self.metrics.virtual_ns.fetch_add(cost, Ordering::Relaxed);
+        self.model.inject_delay(cost);
+
+        let mb = &self.boxes[env.dst];
+        let mut q = mb.queue.lock().unwrap();
+        q.0.push_back(env);
+        q.1 += 1;
+        drop(q);
+        mb.bell.notify_all();
+        Ok(())
+    }
+
+    /// Non-blocking matched receive: removes and returns the first envelope
+    /// matching `spec`, preserving FIFO order per (src, ctx, tag).
+    pub fn try_recv(&self, me: usize, spec: &MatchSpec) -> Result<Option<Envelope>, CommError> {
+        self.procs.check_poison(me)?;
+        let mut q = self.boxes[me].queue.lock().unwrap();
+        if let Some(pos) = q.0.iter().position(|e| spec.matches(e)) {
+            Ok(q.0.remove(pos))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Monotone count of envelopes ever delivered to `me` (arrival clock).
+    pub fn arrivals(&self, me: usize) -> u64 {
+        self.boxes[me].queue.lock().unwrap().1
+    }
+
+    /// Park until the arrival clock moves past `last` (new mail), the
+    /// fabric is woken (revoke/kill/finalize), or `timeout` expires.
+    /// Returns the current clock. Replaces hot-path spinning: pollers
+    /// alternate try_recv / failure-check / `wait_new_mail`.
+    pub fn wait_new_mail(&self, me: usize, last: u64, timeout: Duration) -> u64 {
+        let mb = &self.boxes[me];
+        let mut q = mb.queue.lock().unwrap();
+        if q.1 != last {
+            return q.1;
+        }
+        let (nq, _res) = mb.bell.wait_timeout(q, timeout).unwrap();
+        q = nq;
+        q.1
+    }
+
+    /// Blocking matched receive with a deadline. The deadline exists so that
+    /// protocol bugs (or EMPI-without-FT talking to a dead peer) surface as
+    /// loud `Timeout` errors in tests rather than hangs.
+    pub fn recv(
+        &self,
+        me: usize,
+        spec: &MatchSpec,
+        deadline: Duration,
+    ) -> Result<Envelope, CommError> {
+        let start = Instant::now();
+        let mb = &self.boxes[me];
+        let mut q = mb.queue.lock().unwrap();
+        loop {
+            self.procs.check_poison(me)?;
+            if let Some(pos) = q.0.iter().position(|e| spec.matches(e)) {
+                return Ok(q.0.remove(pos).unwrap());
+            }
+            if start.elapsed() > deadline {
+                return Err(CommError::Timeout {
+                    rank: me,
+                    detail: format!("{} recv {:?}", self.label, spec),
+                });
+            }
+            let (nq, _tm) = mb.bell.wait_timeout(q, POLL_TICK).unwrap();
+            q = nq;
+        }
+    }
+
+    /// Is a matching message already waiting? (MPI_Probe analogue.)
+    pub fn probe(&self, me: usize, spec: &MatchSpec) -> Result<bool, CommError> {
+        self.procs.check_poison(me)?;
+        let q = self.boxes[me].queue.lock().unwrap();
+        Ok(q.0.iter().any(|e| spec.matches(e)))
+    }
+
+    /// Number of queued envelopes (diagnostics only).
+    pub fn queued(&self, me: usize) -> usize {
+        self.boxes[me].queue.lock().unwrap().0.len()
+    }
+
+    /// Drop every queued message at `rank` (used when a rank is recycled in
+    /// tests; real ranks never reuse ids within a job).
+    pub fn purge(&self, rank: usize) {
+        self.boxes[rank].queue.lock().unwrap().0.clear();
+    }
+
+    /// Wake all blocked receivers (invoked by the kill path so poisoned
+    /// ranks notice promptly instead of waiting out their poll tick).
+    pub fn wake_all(&self) {
+        for mb in &self.boxes {
+            mb.bell.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::CommError;
+
+    fn tiny(n: usize) -> (Arc<ProcSet>, Arc<Fabric>) {
+        let procs = ProcSet::new(n);
+        let fabric = Fabric::new("test", procs.clone(), NetModel::instant());
+        (procs, fabric)
+    }
+
+    fn env(src: usize, dst: usize, ctx: u64, tag: i64, data: &[u8]) -> Envelope {
+        Envelope::new(src, dst, ctx, tag, 0, data.to_vec())
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (_p, f) = tiny(2);
+        f.send(env(0, 1, 1, 7, b"hi")).unwrap();
+        let got = f
+            .recv(1, &MatchSpec::exact(0, 1, 7), Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(&*got.data, b"hi");
+        assert_eq!(got.src, 0);
+    }
+
+    #[test]
+    fn fifo_order_per_channel() {
+        let (_p, f) = tiny(2);
+        for i in 0..10u8 {
+            f.send(env(0, 1, 1, 3, &[i])).unwrap();
+        }
+        for i in 0..10u8 {
+            let got = f.try_recv(1, &MatchSpec::exact(0, 1, 3)).unwrap().unwrap();
+            assert_eq!(got.data[0], i);
+        }
+    }
+
+    #[test]
+    fn tag_matching_skips_nonmatching() {
+        let (_p, f) = tiny(2);
+        f.send(env(0, 1, 1, 1, b"a")).unwrap();
+        f.send(env(0, 1, 1, 2, b"b")).unwrap();
+        let got = f.try_recv(1, &MatchSpec::exact(0, 1, 2)).unwrap().unwrap();
+        assert_eq!(&*got.data, b"b");
+        // the tag-1 message is still there
+        assert!(f.probe(1, &MatchSpec::exact(0, 1, 1)).unwrap());
+    }
+
+    #[test]
+    fn wildcard_source() {
+        let (_p, f) = tiny(3);
+        f.send(env(2, 0, 1, 5, b"x")).unwrap();
+        let got = f
+            .recv(0, &MatchSpec::any_source(1, 5), Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(got.src, 2);
+    }
+
+    #[test]
+    fn recv_times_out() {
+        let (_p, f) = tiny(2);
+        let err = f
+            .recv(1, &MatchSpec::exact(0, 1, 7), Duration::from_millis(10))
+            .unwrap_err();
+        assert!(matches!(err, CommError::Timeout { rank: 1, .. }));
+    }
+
+    #[test]
+    fn poisoned_rank_errors_on_ops() {
+        let (p, f) = tiny(2);
+        p.poison(1);
+        assert!(matches!(
+            f.try_recv(1, &MatchSpec::exact(0, 1, 7)),
+            Err(CommError::Killed { rank: 1 })
+        ));
+        assert!(matches!(
+            f.send(env(1, 0, 1, 1, b"z")),
+            Err(CommError::Killed { rank: 1 })
+        ));
+    }
+
+    #[test]
+    fn send_to_dead_rank_is_silent() {
+        // Native-MPI fidelity: the sender must NOT learn about the death.
+        let (p, f) = tiny(2);
+        p.poison(1);
+        p.mark_dead(1);
+        f.send(env(0, 1, 1, 1, b"lost")).unwrap();
+        assert_eq!(f.queued(1), 1);
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let (_p, f) = tiny(2);
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            f2.recv(1, &MatchSpec::exact(0, 1, 9), Duration::from_secs(5))
+                .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        f.send(env(0, 1, 1, 9, b"late")).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(&*got.data, b"late");
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let procs = ProcSet::new(2);
+        // Non-zero cost model so virtual time accrues (not injected).
+        let f = Fabric::new("test", procs, NetModel::empi_tuned());
+        f.send(env(0, 1, 1, 1, &[0u8; 100])).unwrap();
+        f.send(env(0, 1, 1, 1, &[0u8; 50])).unwrap();
+        let (m, b, v) = f.metrics.snapshot();
+        assert_eq!(m, 2);
+        assert_eq!(b, 150);
+        assert!(v >= 2 * 1_500);
+    }
+}

@@ -1,0 +1,163 @@
+//! Shared process liveness state.
+//!
+//! One `ProcSet` per job, shared by both fabrics, the process manager, the
+//! fault injector and the ULFM failure detector. A process death has two stages:
+//!
+//! 1. **poisoned** — the injector has decided this rank dies. The rank's own
+//!    thread discovers the poison at its next library call and unwinds
+//!    (cooperative kill: we cannot asynchronously kill an OS thread safely).
+//! 2. **dead** — the rank thread has actually exited; only now do node
+//!    daemons (and therefore ULFM) observe the failure, matching the
+//!    SIGCHLD-on-exit semantics of the paper (§IV-C).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::CommError;
+
+#[derive(Default)]
+pub struct ProcState {
+    poisoned: AtomicBool,
+    dead: AtomicBool,
+    /// Gracefully exited via `MPI_Finalize` (not a failure): the process is
+    /// gone but must be *skipped*, not repaired, by fault-tolerance
+    /// protocols.
+    finalized: AtomicBool,
+}
+
+pub struct ProcSet {
+    procs: Vec<ProcState>,
+    /// Bumped on every death; cheap generation check that lets hot paths
+    /// skip scanning the failed set when nothing changed.
+    epoch: AtomicU64,
+}
+
+impl ProcSet {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self {
+            procs: (0..n).map(|_| ProcState::default()).collect(),
+            epoch: AtomicU64::new(0),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.procs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.procs.is_empty()
+    }
+
+    /// Stage 1: schedule the death of `rank`.
+    pub fn poison(&self, rank: usize) {
+        self.procs[rank].poisoned.store(true, Ordering::SeqCst);
+    }
+
+    /// Stage 2: the rank thread has exited (or is unwinding).
+    pub fn mark_dead(&self, rank: usize) {
+        self.procs[rank].dead.store(true, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    #[inline]
+    pub fn is_poisoned(&self, rank: usize) -> bool {
+        self.procs[rank].poisoned.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.procs[rank].dead.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn is_alive(&self, rank: usize) -> bool {
+        !self.is_dead(rank)
+    }
+
+    /// Current death-epoch (monotone counter of observed deaths).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Error out of a library call if the calling rank has been poisoned —
+    /// the cooperative-kill hook on every fabric operation.
+    #[inline]
+    pub fn check_poison(&self, rank: usize) -> Result<(), CommError> {
+        if self.is_poisoned(rank) {
+            Err(CommError::Killed { rank })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Graceful exit (finalize): the rank is leaving the job on purpose.
+    pub fn set_finalized(&self, rank: usize) {
+        self.procs[rank].finalized.store(true, Ordering::SeqCst);
+    }
+
+    #[inline]
+    pub fn is_finalized(&self, rank: usize) -> bool {
+        self.procs[rank].finalized.load(Ordering::SeqCst)
+    }
+
+    /// All currently-dead ranks (ascending).
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&r| self.is_dead(r)).collect()
+    }
+
+    /// All currently-alive ranks (ascending).
+    pub fn alive_ranks(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&r| self.is_alive(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_set_is_all_alive() {
+        let p = ProcSet::new(4);
+        assert_eq!(p.alive_ranks(), vec![0, 1, 2, 3]);
+        assert!(p.dead_ranks().is_empty());
+        assert_eq!(p.epoch(), 0);
+    }
+
+    #[test]
+    fn poison_then_death_two_stage() {
+        let p = ProcSet::new(2);
+        p.poison(0);
+        assert!(p.is_poisoned(0));
+        // poisoned but not dead: the world has not observed it yet
+        assert!(p.is_alive(0));
+        assert_eq!(p.epoch(), 0);
+        p.mark_dead(0);
+        assert!(p.is_dead(0));
+        assert_eq!(p.epoch(), 1);
+        assert_eq!(p.dead_ranks(), vec![0]);
+    }
+
+    #[test]
+    fn check_poison_errors() {
+        let p = ProcSet::new(1);
+        assert!(p.check_poison(0).is_ok());
+        p.poison(0);
+        assert!(matches!(
+            p.check_poison(0),
+            Err(CommError::Killed { rank: 0 })
+        ));
+    }
+
+    #[test]
+    fn epoch_counts_every_death() {
+        let p = ProcSet::new(8);
+        for r in [3, 5, 7] {
+            p.poison(r);
+            p.mark_dead(r);
+        }
+        assert_eq!(p.epoch(), 3);
+        assert_eq!(p.dead_ranks(), vec![3, 5, 7]);
+        assert_eq!(p.alive_ranks(), vec![0, 1, 2, 4, 6]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Experiment harness: runs one (app × backend × config) job and collects
+//! the measurements every figure of §VII needs; the bench targets and the
+//! CLI drive these.
+
+pub mod experiments;
+
+use std::time::Duration;
+
+use crate::apps::{AppKind, EmpiWorld, Mpi};
+use crate::config::JobConfig;
+use crate::empi::Comm;
+use crate::error::JobError;
+use crate::faults::{FaultInjector, Injection};
+use crate::metrics::Phase;
+use crate::partreper::PartReper;
+use crate::procmgr::{launch_job, RankOutcome};
+use crate::runtime::ComputeEngine;
+
+/// Which library runs the app.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native EMPI only (the paper's MVAPICH2 baseline).
+    EmpiBaseline,
+    /// PartRePer-MPI (replication per the config's rdegree).
+    PartReper,
+}
+
+/// One job's measurements.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub app: AppKind,
+    pub backend: Backend,
+    pub wall: Duration,
+    /// Verification checksum (first completed rank).
+    pub checksum: Option<f64>,
+    /// Ranks that finished / were killed / interrupted / errored.
+    pub done: usize,
+    pub killed: usize,
+    pub interrupted: usize,
+    pub errors: Vec<String>,
+    /// Total seconds inside the error handler, summed over ranks.
+    pub error_handler_s: f64,
+    /// Total useful (application-phase) seconds, summed over ranks.
+    pub app_s: f64,
+    /// Mean per-rank useful seconds — the MTTI contribution of this run.
+    pub useful_s_per_rank: f64,
+    /// Injected failures (victim, time), when the injector ran.
+    pub injections: Vec<Injection>,
+    /// Protocol counters (resends, replays, promotions, ...).
+    pub resends: u64,
+    pub replays: u64,
+    pub promotions: u64,
+    pub handler_entries: u64,
+}
+
+impl RunResult {
+    pub fn completed(&self) -> bool {
+        self.done > 0 && self.errors.is_empty() && self.interrupted == 0
+    }
+
+    pub fn was_interrupted(&self) -> bool {
+        self.interrupted > 0
+    }
+}
+
+/// Run one job. `faults` in the config controls the injector; the engine
+/// handle (if any) is shared by all ranks.
+pub fn run_app(
+    cfg: &JobConfig,
+    app: AppKind,
+    backend: Backend,
+    iters: usize,
+    eng: Option<ComputeEngine>,
+) -> RunResult {
+    // The baseline launches exactly ncomp processes — no replicas exist.
+    let mut cfg = cfg.clone();
+    if backend == Backend::EmpiBaseline {
+        cfg.rdegree = crate::config::ReplicationDegree(0.0);
+    }
+    let faults = cfg.faults;
+    let seed = cfg.seed;
+
+    let injector: std::sync::Mutex<Option<FaultInjector>> = std::sync::Mutex::new(None);
+    let report = {
+        let injector = &injector;
+        // launch_job requires 'static closures; scope the borrow via a
+        // channel-free trick: move an Arc'd slot instead.
+        let slot: std::sync::Arc<std::sync::Mutex<Option<FaultInjector>>> =
+            std::sync::Arc::new(std::sync::Mutex::new(None));
+        let slot2 = slot.clone();
+        let report = launch_job(&cfg, move |ctx| -> Result<f64, JobError> {
+            // Rank 0 arms the injector once everything exists.
+            if ctx.rank == 0 && faults.enabled {
+                let inj = FaultInjector::start(
+                    faults,
+                    ctx.procs.clone(),
+                    vec![ctx.empi_fabric.clone(), ctx.ompi_fabric.clone()],
+                    (0..ctx.cfg.nprocs()).collect(),
+                );
+                *slot2.lock().unwrap() = Some(inj);
+            }
+            let checksum = match backend {
+                Backend::EmpiBaseline => {
+                    let world = EmpiWorld::new(Comm::world(
+                        ctx.empi_fabric.clone(),
+                        ctx.empi_world_ctx,
+                        ctx.rank,
+                    ));
+                    let eng = eng.clone();
+                    app.run(&world, eng.as_ref(), iters, seed)
+                }
+                Backend::PartReper => {
+                    let pr = PartReper::init(ctx);
+                    let eng = eng.clone();
+                    app.run(&pr, eng.as_ref(), iters, seed)
+                }
+            };
+            Ok(checksum)
+        });
+        *injector.lock().unwrap() = slot.lock().unwrap().take();
+        report
+    };
+
+    let injections = injector
+        .lock()
+        .unwrap()
+        .take()
+        .map(|i| i.stop())
+        .unwrap_or_default();
+
+    let mut done = 0;
+    let mut killed = 0;
+    let mut interrupted = 0;
+    let mut errors = Vec::new();
+    let mut checksum = None;
+    for o in &report.outcomes {
+        match o {
+            RankOutcome::Done(v) => {
+                done += 1;
+                checksum.get_or_insert(*v);
+            }
+            RankOutcome::Killed => killed += 1,
+            RankOutcome::Interrupted { .. } => interrupted += 1,
+            RankOutcome::Error(e) => errors.push(e.clone()),
+        }
+    }
+    let totals = report.total_counters();
+    let nranks = report.outcomes.len().max(1) as f64;
+    let app_s = report.phase_seconds(Phase::App);
+    RunResult {
+        app,
+        backend,
+        wall: report.wall,
+        checksum,
+        done,
+        killed,
+        interrupted,
+        errors,
+        error_handler_s: report.phase_seconds(Phase::ErrorHandler),
+        app_s,
+        useful_s_per_rank: app_s / nranks,
+        injections,
+        resends: crate::metrics::Counters::get(&totals.resends),
+        replays: crate::metrics::Counters::get(&totals.collective_replays),
+        promotions: crate::metrics::Counters::get(&totals.promotions),
+        handler_entries: crate::metrics::Counters::get(&totals.error_handler_entries),
+    }
+}
+
+/// Overhead of `pr` relative to `base` in percent (the paper's metric).
+pub fn overhead_pct(base: Duration, pr: Duration) -> f64 {
+    (pr.as_secs_f64() / base.as_secs_f64() - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_and_partreper_agree_on_checksum() {
+        let cfg = JobConfig::new(4, 50.0);
+        for app in [AppKind::Cg, AppKind::Ep] {
+            let base = run_app(&cfg, app, Backend::EmpiBaseline, 3, None);
+            let pr = run_app(&cfg, app, Backend::PartReper, 3, None);
+            assert!(base.completed(), "{app:?} base: {:?}", base.errors);
+            assert!(pr.completed(), "{app:?} pr: {:?}", pr.errors);
+            let (a, b) = (base.checksum.unwrap(), pr.checksum.unwrap());
+            assert!(
+                (a - b).abs() <= 1e-9 * a.abs().max(1.0),
+                "{app:?}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_pct_math() {
+        let base = Duration::from_millis(100);
+        assert!((overhead_pct(base, Duration::from_millis(106)) - 6.0).abs() < 1e-9);
+        assert!(overhead_pct(base, Duration::from_millis(90)) < 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! # PartRePer-MPI — reproduction library
+//!
+//! A production-shaped reproduction of *"PartRePer-MPI: Combining Fault
+//! Tolerance and Performance for MPI Applications"* (Joshi & Vadhiyar, 2023)
+//! as a Rust + JAX/Pallas three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's system: a simulated multi-node
+//!   cluster running two MPI personalities side by side (tuned native
+//!   [`empi`] for data, ULFM-capable [`ompi`] for fault tolerance), the
+//!   PartRePer library ([`partreper`]) with partial replication, message
+//!   logging and post-failure recovery, a Weibull [`faults`] injector, and
+//!   the benchmark [`apps`] + experiment [`harness`].
+//! * **L2/L1 (build-time Python)** — each benchmark's rank-local compute is
+//!   a JAX graph calling Pallas kernels, AOT-lowered to HLO text and
+//!   executed from [`runtime`] via PJRT. Python never runs at run time.
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod apps;
+pub mod checkpoint;
+pub mod config;
+pub mod empi;
+pub mod error;
+pub mod fabric;
+pub mod faults;
+pub mod harness;
+pub mod metrics;
+pub mod ompi;
+pub mod partreper;
+pub mod procimg;
+pub mod procmgr;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::JobConfig;
+    pub use crate::empi::{Comm, DType, ReduceOp, Src, Tag};
+    pub use crate::error::{CommError, JobError, UlfmError};
+    pub use crate::fabric::{Fabric, NetModel, ProcSet};
+    pub use crate::util::{Summary, Xoshiro256};
+}

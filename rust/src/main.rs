@@ -1,0 +1,163 @@
+//! `partreper` CLI — the leader entrypoint: run one app under either
+//! backend, or regenerate a paper figure.
+//!
+//! Usage:
+//!   partreper run <APP> [ncomp=8] [rdegree=25] [iters=N] [backend=partreper|baseline] [key=value...]
+//!   partreper fig8  [apps=CG,MG,...] [ncomps=8,16] [reps=2]
+//!   partreper fig9a [ncomp=8] [iters=25]
+//!   partreper fig9b [ncomp=8] [runs=4]
+//!   partreper list
+//!
+//! Any `key=value` accepted by `JobConfig::set` works as an override
+//! (e.g. `faults.enabled=true`, `net.congestion_procs=16`).
+
+use partreper::apps::AppKind;
+use partreper::config::{JobConfig, ReplicationDegree};
+use partreper::harness::experiments as exp;
+use partreper::harness::{run_app, Backend};
+use partreper::runtime::ComputeEngine;
+
+fn engine() -> Option<ComputeEngine> {
+    match ComputeEngine::start(ComputeEngine::default_dir(), 2) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("[cli] PJRT artifacts unavailable ({e}); native compute");
+            None
+        }
+    }
+}
+
+fn parse_overrides(cfg: &mut JobConfig, args: &[String]) -> Vec<(String, String)> {
+    let mut extra = Vec::new();
+    for a in args {
+        if let Some((k, v)) = a.split_once('=') {
+            if cfg.set(k, v).is_err() {
+                extra.push((k.to_string(), v.to_string()));
+            }
+        } else {
+            eprintln!("ignoring argument `{a}` (expected key=value)");
+        }
+    }
+    extra
+}
+
+fn get<'a>(extra: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    extra
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        eprintln!("usage: partreper <run|fig8|fig9a|fig9b|list> [args] (see --help in README)");
+        std::process::exit(2);
+    };
+
+    match cmd {
+        "list" => {
+            println!("apps: {}", AppKind::ALL.map(|a| a.name()).join(" "));
+            println!("artifacts dir: {}", ComputeEngine::default_dir().display());
+            if let Some(eng) = engine() {
+                println!("kernels: {:?}", eng.kernels());
+            }
+        }
+        "run" => {
+            let app = args
+                .get(1)
+                .and_then(|s| AppKind::parse(s))
+                .unwrap_or_else(|| {
+                    eprintln!("unknown app; use one of {:?}", AppKind::ALL.map(|a| a.name()));
+                    std::process::exit(2);
+                });
+            let mut cfg = JobConfig::default();
+            let extra = parse_overrides(&mut cfg, &args[2..]);
+            let iters = get(&extra, "iters")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| app.default_iters());
+            let backend = match get(&extra, "backend") {
+                Some("baseline") => Backend::EmpiBaseline,
+                _ => Backend::PartReper,
+            };
+            println!(
+                "running {} on {:?}: ncomp={} nrep={} iters={iters}",
+                app.name(),
+                backend,
+                cfg.ncomp,
+                cfg.nrep()
+            );
+            let r = run_app(&cfg, app, backend, iters, engine());
+            println!("wall: {:?}", r.wall);
+            println!(
+                "done={} killed={} interrupted={} errors={:?}",
+                r.done, r.killed, r.interrupted, r.errors
+            );
+            println!(
+                "handler_s={:.4} promotions={} resends={} replays={}",
+                r.error_handler_s, r.promotions, r.resends, r.replays
+            );
+            println!("checksum: {:?}", r.checksum);
+        }
+        "fig8" => {
+            let mut cfg = JobConfig::default();
+            let extra = parse_overrides(&mut cfg, &args[1..]);
+            let apps: Vec<AppKind> = get(&extra, "apps")
+                .map(|v| v.split(',').filter_map(AppKind::parse).collect())
+                .unwrap_or_else(|| AppKind::ALL.to_vec());
+            let ncomps: Vec<usize> = get(&extra, "ncomps")
+                .map(|v| v.split(',').filter_map(|s| s.parse().ok()).collect())
+                .unwrap_or_else(|| vec![8]);
+            let reps = get(&extra, "reps").and_then(|v| v.parse().ok()).unwrap_or(2);
+            let cells = exp::fig8(
+                &apps,
+                &ncomps,
+                &ReplicationDegree::PAPER_SWEEP,
+                1.0,
+                reps,
+                engine(),
+                &cfg,
+            );
+            print!("{}", exp::format_fig8(&cells));
+        }
+        "fig9a" => {
+            let mut cfg = JobConfig::default();
+            cfg.faults.weibull_shape = 0.9;
+            cfg.faults.weibull_scale_s = 0.15;
+            cfg.faults.max_failures = 3;
+            let extra = parse_overrides(&mut cfg, &args[1..]);
+            let iters = get(&extra, "iters").and_then(|v| v.parse().ok()).unwrap_or(25);
+            let rows = exp::fig9a(
+                &[AppKind::Cg, AppKind::Bt, AppKind::Lu],
+                cfg.ncomp,
+                iters,
+                3,
+                engine(),
+                &cfg,
+            );
+            print!("{}", exp::format_fig9a(&rows));
+        }
+        "fig9b" => {
+            let mut cfg = JobConfig::default();
+            cfg.faults.weibull_shape = 0.9;
+            cfg.faults.weibull_scale_s = 0.05;
+            cfg.faults.max_failures = 16;
+            let extra = parse_overrides(&mut cfg, &args[1..]);
+            let runs = get(&extra, "runs").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let rows = exp::fig9b(
+                &[AppKind::Cg, AppKind::Bt, AppKind::Lu],
+                cfg.ncomp,
+                &ReplicationDegree::PAPER_SWEEP,
+                40,
+                runs,
+                engine(),
+                &cfg,
+            );
+            print!("{}", exp::format_fig9b(&rows));
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            std::process::exit(2);
+        }
+    }
+}

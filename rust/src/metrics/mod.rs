@@ -1,0 +1,213 @@
+//! Per-rank and per-job metrics.
+//!
+//! The paper's Figure 9(a) splits run time into "error handler" time and
+//! everything else, and its MTTI metric counts only useful (non-handler)
+//! time. [`PhaseClock`] provides exactly that accounting; [`Counters`]
+//! aggregates protocol events (messages logged, replays, resends, ...) that
+//! the harness reports alongside.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Phases a rank can be in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Normal application execution (counts toward useful time / MTTI).
+    App,
+    /// Inside the PartRePer error handler (revoke/shrink/repair/recover).
+    ErrorHandler,
+    /// Initial replication of process images to replicas.
+    Replication,
+    /// Checkpoint write / restart read.
+    Checkpoint,
+}
+
+const NPHASE: usize = 4;
+
+fn idx(p: Phase) -> usize {
+    match p {
+        Phase::App => 0,
+        Phase::ErrorHandler => 1,
+        Phase::Replication => 2,
+        Phase::Checkpoint => 3,
+    }
+}
+
+/// Wall-clock accounting by phase. Thread-safe; one per rank, aggregated by
+/// the harness at join time.
+pub struct PhaseClock {
+    accum_ns: [AtomicU64; NPHASE],
+    current: std::sync::Mutex<(Phase, Instant)>,
+}
+
+impl Default for PhaseClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseClock {
+    pub fn new() -> Self {
+        Self {
+            accum_ns: Default::default(),
+            current: std::sync::Mutex::new((Phase::App, Instant::now())),
+        }
+    }
+
+    /// Switch to `phase`, attributing elapsed time to the previous phase.
+    pub fn enter(&self, phase: Phase) {
+        let mut cur = self.current.lock().unwrap();
+        let (prev, since) = *cur;
+        let elapsed = since.elapsed().as_nanos() as u64;
+        self.accum_ns[idx(prev)].fetch_add(elapsed, Ordering::Relaxed);
+        *cur = (phase, Instant::now());
+    }
+
+    /// Close out the currently-running phase (call at rank exit).
+    pub fn finish(&self) {
+        let phase = self.current.lock().unwrap().0;
+        self.enter(phase);
+    }
+
+    /// Accumulated nanoseconds in `phase` (excluding any open interval).
+    pub fn ns(&self, phase: Phase) -> u64 {
+        self.accum_ns[idx(phase)].load(Ordering::Relaxed)
+    }
+
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.ns(phase) as f64 / 1e9
+    }
+
+    /// Total across all phases.
+    pub fn total_seconds(&self) -> f64 {
+        (0..NPHASE)
+            .map(|i| self.accum_ns[i].load(Ordering::Relaxed))
+            .sum::<u64>() as f64
+            / 1e9
+    }
+
+    /// Scoped phase guard: restores the previous phase on drop.
+    pub fn scoped(self: &Arc<Self>, phase: Phase) -> PhaseGuard {
+        let prev = self.current.lock().unwrap().0;
+        self.enter(phase);
+        PhaseGuard {
+            clock: Arc::clone(self),
+            prev,
+        }
+    }
+}
+
+pub struct PhaseGuard {
+    clock: Arc<PhaseClock>,
+    prev: Phase,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        self.clock.enter(self.prev);
+    }
+}
+
+/// Monotone event counters shared across a rank's protocol layers.
+#[derive(Default)]
+pub struct Counters {
+    /// P2P sends logged for recovery.
+    pub sends_logged: AtomicU64,
+    /// Collectives logged.
+    pub collectives_logged: AtomicU64,
+    /// Messages resent during recovery.
+    pub resends: AtomicU64,
+    /// Received-but-not-sent ids marked to be skipped.
+    pub skips: AtomicU64,
+    /// Collectives replayed during recovery.
+    pub collective_replays: AtomicU64,
+    /// ULFM failure checks performed on the hot path.
+    pub failure_checks: AtomicU64,
+    /// Times the error handler ran.
+    pub error_handler_entries: AtomicU64,
+    /// Replica promotions (comp died, replica took over).
+    pub promotions: AtomicU64,
+    /// Replica drops (replica died).
+    pub replica_drops: AtomicU64,
+}
+
+impl Counters {
+    #[inline]
+    pub fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(field: &AtomicU64, n: u64) {
+        field.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(field: &AtomicU64) -> u64 {
+        field.load(Ordering::Relaxed)
+    }
+
+    /// Fold another rank's counters into this aggregate.
+    pub fn merge(&self, other: &Counters) {
+        macro_rules! m {
+            ($($f:ident),+) => {
+                $(self.$f.fetch_add(other.$f.load(Ordering::Relaxed), Ordering::Relaxed);)+
+            };
+        }
+        m!(
+            sends_logged,
+            collectives_logged,
+            resends,
+            skips,
+            collective_replays,
+            failure_checks,
+            error_handler_entries,
+            promotions,
+            replica_drops
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn phase_attribution() {
+        let clock = Arc::new(PhaseClock::new());
+        std::thread::sleep(Duration::from_millis(20));
+        clock.enter(Phase::ErrorHandler);
+        std::thread::sleep(Duration::from_millis(30));
+        clock.enter(Phase::App);
+        clock.finish();
+        assert!(clock.seconds(Phase::App) >= 0.018);
+        assert!(clock.seconds(Phase::ErrorHandler) >= 0.028);
+        assert!(clock.seconds(Phase::ErrorHandler) < 0.2);
+    }
+
+    #[test]
+    fn scoped_guard_restores() {
+        let clock = Arc::new(PhaseClock::new());
+        {
+            let _g = clock.scoped(Phase::Replication);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        clock.finish();
+        assert!(clock.seconds(Phase::Replication) >= 0.009);
+        assert!(clock.seconds(Phase::App) >= 0.004);
+    }
+
+    #[test]
+    fn counters_merge() {
+        let a = Counters::default();
+        let b = Counters::default();
+        Counters::add(&a.resends, 3);
+        Counters::add(&b.resends, 4);
+        Counters::bump(&b.promotions);
+        a.merge(&b);
+        assert_eq!(Counters::get(&a.resends), 7);
+        assert_eq!(Counters::get(&a.promotions), 1);
+    }
+}

@@ -1,0 +1,581 @@
+//! Revocable ULFM communicators and the fault-tolerant consensus that
+//! powers `shrink` and `agree`.
+//!
+//! The protocol layer here must keep working *while members die*, including
+//! the coordinator of the moment. Both `shrink` and `agree_min` are built on
+//! one leader-based consensus skeleton:
+//!
+//! 1. every member sends its contribution to the current leader — the
+//!    lowest group rank not known-failed;
+//! 2. the leader folds contributions from every member it believes alive,
+//!    skipping members whose death is published meanwhile;
+//! 3. the leader broadcasts the decision;
+//! 4. a member that observes the leader's death re-elects and resends.
+//!
+//! Detection knowledge comes from the shared [`FailureDetector`] (the PRRTE
+//! propagation path of §IV-D collapses to a job-wide view; the paper's
+//! per-process PMIx views converge through exactly such a broadcast).
+//!
+//! **Known simplification** (documented, tested-around): if a leader dies
+//! *between* sending its decision to different members, members can end one
+//! round with values folded over different contribution sets — real ULFM
+//! closes this window with a multi-phase agreement (MPIX_Comm_agree). The
+//! window here is a handful of enqueues; a divergence caused by a further
+//! failure re-enters the error handler and re-runs consensus, which is also
+//! how the paper's library converges under failure storms.
+
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::detector::FailureDetector;
+use crate::error::{CommError, UlfmError};
+use crate::fabric::{Envelope, Fabric, MatchSpec};
+use crate::util::{u64s_from_bytes, u64s_to_bytes};
+
+/// Revocation flags shared between every rank's handle of the same
+/// communicator. Keyed by context id; context derivation is deterministic
+/// across ranks, so all handles of one logical comm find the same flag.
+#[derive(Default)]
+pub struct CommRegistry {
+    revoked: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+}
+
+impl CommRegistry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn flag(&self, ctx: u64) -> Arc<AtomicBool> {
+        self.revoked
+            .lock()
+            .unwrap()
+            .entry(ctx)
+            .or_insert_with(|| Arc::new(AtomicBool::new(false)))
+            .clone()
+    }
+}
+
+/// Per-poll wait while blocked in consensus.
+const CONSENSUS_TICK: Duration = Duration::from_millis(1);
+/// Bound on consensus iterations before declaring a wedge (protocol bug or
+/// everything died) — surfaces as a loud timeout, not a hang.
+const MAX_SPINS: u64 = 30_000;
+
+// Tag layout for internal ops: op * 2^40 + seq. Negative space is fine —
+// this fabric carries only ULFM control traffic.
+const OP_PROPOSE: i64 = 1;
+const OP_DECIDE: i64 = 2;
+
+/// A ULFM communicator handle (one per member rank).
+pub struct UlfmComm {
+    pub fabric: Arc<Fabric>,
+    pub detector: Arc<FailureDetector>,
+    pub registry: Arc<CommRegistry>,
+    pub ctx: u64,
+    /// comm rank -> fabric rank.
+    pub group: Arc<Vec<usize>>,
+    pub myrank: usize,
+    revoked: Arc<AtomicBool>,
+    /// Acknowledged failure count (MPI_Comm_failure_ack semantics).
+    acked: Cell<usize>,
+    /// Consensus sequence number; advances identically on all members.
+    seq: Cell<u64>,
+    /// Derivation counter for child contexts.
+    derive_seq: Cell<u64>,
+    /// Detector epoch at the last `check` (fast-path cache).
+    check_epoch: Cell<u64>,
+}
+
+impl UlfmComm {
+    pub fn new(
+        fabric: Arc<Fabric>,
+        detector: Arc<FailureDetector>,
+        registry: Arc<CommRegistry>,
+        ctx: u64,
+        group: Vec<usize>,
+        myrank: usize,
+    ) -> Self {
+        let revoked = registry.flag(ctx);
+        Self {
+            fabric,
+            detector,
+            registry,
+            ctx,
+            group: Arc::new(group),
+            myrank,
+            revoked,
+            acked: Cell::new(0),
+            seq: Cell::new(0),
+            derive_seq: Cell::new(0),
+            check_epoch: Cell::new(u64::MAX),
+        }
+    }
+
+    /// World communicator over all fabric ranks.
+    pub fn world(
+        fabric: Arc<Fabric>,
+        detector: Arc<FailureDetector>,
+        registry: Arc<CommRegistry>,
+        ctx: u64,
+        myrank: usize,
+    ) -> Self {
+        let n = fabric.len();
+        Self::new(fabric, detector, registry, ctx, (0..n).collect(), myrank)
+    }
+
+    pub fn size(&self) -> usize {
+        self.group.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.myrank
+    }
+
+    fn my_fabric_rank(&self) -> usize {
+        self.group[self.myrank]
+    }
+
+    // ------------------------------------------------------------- ULFM
+
+    /// MPI_Comm_revoke: after this, every operation on the communicator at
+    /// every member returns `Revoked` — the paper's error-propagation tool.
+    pub fn revoke(&self) {
+        self.revoked.store(true, Ordering::SeqCst);
+        // Wake blocked members so they observe the revocation promptly.
+        self.fabric.wake_all();
+    }
+
+    /// MPI_Comm_is_revoked.
+    pub fn is_revoked(&self) -> bool {
+        self.revoked.load(Ordering::SeqCst)
+    }
+
+    /// MPI_Comm_failure_ack: mark the current failure set as acknowledged.
+    pub fn failure_ack(&self) {
+        self.acked
+            .set(self.detector.failed_in(&self.group).len());
+    }
+
+    /// MPI_Comm_failure_get_ack: acknowledged failed comm ranks.
+    pub fn failure_get_ack(&self) -> Vec<usize> {
+        let failed = self.detector.failed_in(&self.group);
+        failed.into_iter().take(self.acked.get()).collect()
+    }
+
+    /// The PartRePer hot-path check (Fig 7): revoked → `Revoked`; any known
+    /// failure in the group → `ProcFailed`. Epoch-cached so the common
+    /// nothing-changed case is two atomic loads.
+    #[inline]
+    pub fn check(&self) -> Result<(), UlfmError> {
+        if self.is_revoked() {
+            return Err(UlfmError::Revoked);
+        }
+        let ep = self.detector.epoch();
+        if ep == self.check_epoch.get() {
+            return Ok(());
+        }
+        let failed = self.detector.failed_in(&self.group);
+        if failed.is_empty() {
+            self.check_epoch.set(ep);
+            Ok(())
+        } else {
+            Err(UlfmError::ProcFailed { failed })
+        }
+    }
+
+    /// Are there any known failures in this comm (ignoring revocation)?
+    pub fn has_failures(&self) -> bool {
+        !self.detector.failed_in(&self.group).is_empty()
+    }
+
+    // ----------------------------------------------------- fabric helpers
+
+    fn tag(op: i64, seq: u64) -> i64 {
+        op * (1 << 40) + seq as i64
+    }
+
+    fn send_to(&self, dst_gi: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
+        self.fabric.send(Envelope::new(
+            self.my_fabric_rank(),
+            self.group[dst_gi],
+            self.ctx,
+            tag,
+            0,
+            data.to_vec(),
+        ))
+    }
+
+    fn try_recv_from_any(&self, tag: i64) -> Result<Option<Envelope>, CommError> {
+        self.fabric
+            .try_recv(self.my_fabric_rank(), &MatchSpec::any_source(self.ctx, tag))
+    }
+
+    fn try_recv_from(&self, src_gi: usize, tag: i64) -> Result<Option<Envelope>, CommError> {
+        self.fabric.try_recv(
+            self.my_fabric_rank(),
+            &MatchSpec::exact(self.group[src_gi], self.ctx, tag),
+        )
+    }
+
+    // --------------------------------------------------------- consensus
+
+    /// Fault-tolerant leader-based consensus among members not known-failed.
+    /// Folds every live member's `contribution` with `fold` and returns the
+    /// agreed value on every surviving member.
+    fn consensus(
+        &self,
+        contribution: Vec<u64>,
+        fold: impl Fn(&mut Vec<u64>, &[u64]),
+        // Folded by the leader immediately before deciding — lets shrink
+        // include failures *detected during* the consensus round (proposals
+        // carry each member's pre-round view only).
+        refresh: impl Fn(&mut Vec<u64>),
+    ) -> Result<Vec<u64>, CommError> {
+        let seq = self.seq.get();
+        self.seq.set(seq + 1);
+        let propose_tag = Self::tag(OP_PROPOSE, seq);
+        let decide_tag = Self::tag(OP_DECIDE, seq);
+        let me = self.myrank;
+        let n = self.size();
+
+        let mut sent_to: Option<usize> = None;
+        let mut acc: Option<Vec<u64>> = None;
+        let mut got_from: HashSet<usize> = HashSet::new();
+        let mut spins: u64 = 0;
+
+        loop {
+            self.fabric.procs.check_poison(self.my_fabric_rank())?;
+            spins += 1;
+            if spins > MAX_SPINS {
+                return Err(CommError::Timeout {
+                    rank: self.my_fabric_rank(),
+                    detail: format!("ulfm consensus seq={seq} wedged"),
+                });
+            }
+
+            // A member is a consensus participant iff it is neither
+            // known-failed nor gracefully finalized (MPI_Finalize'd
+            // processes are gone but are *not* failures).
+            let participant = |gi: usize| {
+                let f = self.group[gi];
+                !self.detector.is_known_failed(f) && !self.fabric.procs.is_finalized(f)
+            };
+            let leader = match (0..n).find(|&gi| participant(gi)) {
+                Some(l) => l,
+                None => {
+                    return Err(CommError::Timeout {
+                        rank: self.my_fabric_rank(),
+                        detail: "all comm members failed or finalized".into(),
+                    })
+                }
+            };
+
+            if leader == me {
+                // ---- leader: fold own + every live member's contribution.
+                let acc = acc.get_or_insert_with(|| {
+                    got_from.insert(me);
+                    contribution.clone()
+                });
+                while let Some(env) = self.try_recv_from_any(propose_tag)? {
+                    let gi = self
+                        .group
+                        .iter()
+                        .position(|&f| f == env.src)
+                        .expect("proposer not in group");
+                    if got_from.insert(gi) {
+                        fold(acc, &u64s_from_bytes(&env.data));
+                    }
+                }
+                let outstanding: Vec<usize> = (0..n)
+                    .filter(|&gi| !got_from.contains(&gi) && participant(gi))
+                    .collect();
+                if outstanding.is_empty() {
+                    // Decide: broadcast to everyone I heard from (and any
+                    // late resenders are covered by their own re-election
+                    // loop ending in a decide recv below — they resent to
+                    // me, so they are in got_from).
+                    refresh(acc);
+                    let payload = u64s_to_bytes(acc);
+                    for gi in 0..n {
+                        if gi != me && participant(gi) {
+                            self.send_to(gi, decide_tag, &payload)?;
+                        }
+                    }
+                    return Ok(acc.clone());
+                }
+                std::thread::sleep(CONSENSUS_TICK);
+            } else {
+                // ---- member: (re)send contribution, wait for decision.
+                if sent_to != Some(leader) {
+                    self.send_to(leader, propose_tag, &u64s_to_bytes(&contribution))?;
+                    sent_to = Some(leader);
+                }
+                if let Some(env) = self.try_recv_from(leader, decide_tag)? {
+                    return Ok(u64s_from_bytes(&env.data));
+                }
+                // A decision may arrive from a *previous* leader that died
+                // right after deciding; accept any decision for this seq.
+                if let Some(env) = self.try_recv_from_any(decide_tag)? {
+                    return Ok(u64s_from_bytes(&env.data));
+                }
+                std::thread::sleep(CONSENSUS_TICK);
+            }
+        }
+    }
+
+    /// MPIX_Comm_agree-style minimum agreement over a u64 (used by message
+    /// recovery to find the first collective not completed everywhere).
+    pub fn agree_min(&self, value: u64) -> Result<u64, CommError> {
+        let out = self.consensus(
+            vec![value],
+            |acc, inc| {
+                acc[0] = acc[0].min(inc[0]);
+            },
+            |_| {},
+        )?;
+        Ok(out[0])
+    }
+
+    /// Barrier over members not known-failed (used after repair, §V-A).
+    pub fn barrier_alive(&self) -> Result<(), CommError> {
+        self.consensus(vec![], |_acc, _inc| {}, |_| {})?;
+        Ok(())
+    }
+
+    /// MPI_Comm_shrink: agree on the failed set and return a new, smaller
+    /// communicator containing exactly the agreed survivors. The new comm's
+    /// context id is derived deterministically, so all survivors
+    /// reconstruct the same logical communicator without a name service.
+    pub fn shrink(&self) -> Result<UlfmComm, CommError> {
+        // Contribution: my view of failed fabric ranks in this group.
+        let my_failed: Vec<u64> = self
+            .detector
+            .failed_in(&self.group)
+            .into_iter()
+            .map(|gi| self.group[gi] as u64)
+            .collect();
+        let union = |acc: &mut Vec<u64>, inc: &[u64]| {
+            for &f in inc {
+                if !acc.contains(&f) {
+                    acc.push(f);
+                }
+            }
+        };
+        let detector = self.detector.clone();
+        let group = self.group.clone();
+        let agreed = self.consensus(my_failed, union, move |acc| {
+            // Fold the leader's decide-time view so failures detected
+            // mid-round are shrunk out too.
+            for gi in detector.failed_in(&group) {
+                let f = group[gi] as u64;
+                if !acc.contains(&f) {
+                    acc.push(f);
+                }
+            }
+        })?;
+        let dead: HashSet<usize> = agreed.into_iter().map(|f| f as usize).collect();
+        let new_group: Vec<usize> = self
+            .group
+            .iter()
+            .copied()
+            .filter(|f| !dead.contains(f))
+            .collect();
+        let myrank = new_group
+            .iter()
+            .position(|&f| f == self.my_fabric_rank())
+            .expect("shrink caller must survive");
+        let dseq = self.derive_seq.get();
+        self.derive_seq.set(dseq + 1);
+        let mut s = self
+            .ctx
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(dseq)
+            .wrapping_add(0x5D);
+        let ctx = crate::util::prng::splitmix64(&mut s);
+        Ok(UlfmComm::new(
+            self.fabric.clone(),
+            self.detector.clone(),
+            self.registry.clone(),
+            ctx,
+            new_group,
+            myrank,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{NetModel, ProcSet};
+    use std::thread;
+
+    fn setup(n: usize) -> (Arc<ProcSet>, Arc<Fabric>, Arc<FailureDetector>, Arc<CommRegistry>, u64) {
+        let procs = ProcSet::new(n);
+        let fabric = Fabric::new("ompi-test", procs.clone(), NetModel::instant());
+        let detector = FailureDetector::new();
+        let registry = CommRegistry::new();
+        let ctx = fabric.alloc_ctx();
+        (procs, fabric, detector, registry, ctx)
+    }
+
+    fn run_ulfm<T: Send + 'static>(
+        n: usize,
+        dead: &[usize],
+        f: impl Fn(usize, UlfmComm) -> T + Send + Sync + 'static,
+    ) -> Vec<Option<T>> {
+        let (procs, fabric, detector, registry, ctx) = setup(n);
+        for &d in dead {
+            procs.poison(d);
+            procs.mark_dead(d);
+            detector.publish(d);
+        }
+        let f = Arc::new(f);
+        let dead: HashSet<usize> = dead.iter().copied().collect();
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                if dead.contains(&r) {
+                    None
+                } else {
+                    let fabric = fabric.clone();
+                    let detector = detector.clone();
+                    let registry = registry.clone();
+                    let f = f.clone();
+                    Some(thread::spawn(move || {
+                        f(r, UlfmComm::world(fabric, detector, registry, ctx, r))
+                    }))
+                }
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.map(|h| h.join().unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn check_clean_comm_is_ok() {
+        let out = run_ulfm(3, &[], |_r, comm| comm.check().is_ok());
+        assert!(out.into_iter().all(|o| o.unwrap()));
+    }
+
+    #[test]
+    fn check_reports_proc_failed() {
+        let out = run_ulfm(3, &[1], |_r, comm| comm.check());
+        for o in out.into_iter().flatten() {
+            assert_eq!(o, Err(UlfmError::ProcFailed { failed: vec![1] }));
+        }
+    }
+
+    #[test]
+    fn revoke_propagates_to_all_handles() {
+        let out = run_ulfm(4, &[], |r, comm| {
+            if r == 2 {
+                comm.revoke();
+            } else {
+                while !comm.is_revoked() {
+                    std::thread::yield_now();
+                }
+            }
+            matches!(comm.check(), Err(UlfmError::Revoked))
+        });
+        assert!(out.into_iter().all(|o| o.unwrap()));
+    }
+
+    #[test]
+    fn failure_ack_get_ack() {
+        let out = run_ulfm(4, &[3], |_r, comm| {
+            assert!(comm.failure_get_ack().is_empty());
+            comm.failure_ack();
+            comm.failure_get_ack()
+        });
+        for o in out.into_iter().flatten() {
+            assert_eq!(o, vec![3]);
+        }
+    }
+
+    #[test]
+    fn agree_min_over_survivors() {
+        let out = run_ulfm(5, &[2], |r, comm| comm.agree_min(10 + r as u64).unwrap());
+        for (r, o) in out.into_iter().enumerate() {
+            if r != 2 {
+                assert_eq!(o.unwrap(), 10);
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_removes_failed_and_renumbers() {
+        let out = run_ulfm(5, &[1, 3], |_r, comm| {
+            let sh = comm.shrink().unwrap();
+            (sh.size(), sh.rank(), sh.group.as_ref().clone(), sh.ctx)
+        });
+        let survivors: Vec<_> = out.into_iter().flatten().collect();
+        assert_eq!(survivors.len(), 3);
+        for (size, _rank, group, _ctx) in &survivors {
+            assert_eq!(*size, 3);
+            assert_eq!(group, &vec![0, 2, 4]);
+        }
+        // ranks are dense and ordered; contexts agree
+        assert_eq!(survivors[0].1, 0);
+        assert_eq!(survivors[1].1, 1);
+        assert_eq!(survivors[2].1, 2);
+        assert!(survivors.windows(2).all(|w| w[0].3 == w[1].3));
+    }
+
+    #[test]
+    fn shrink_survives_leader_death_mid_protocol() {
+        // Rank 0 (initial leader) dies *during* consensus; the rest must
+        // re-elect rank 1 and finish.
+        let (procs, fabric, detector, registry, ctx) = setup(4);
+        let handles: Vec<_> = (0..4usize)
+            .map(|r| {
+                let procs = procs.clone();
+                let fabric = fabric.clone();
+                let detector = detector.clone();
+                let registry = registry.clone();
+                thread::spawn(move || {
+                    let comm = UlfmComm::world(fabric, detector.clone(), registry, ctx, r);
+                    if r == 0 {
+                        // Die silently before participating.
+                        std::thread::sleep(Duration::from_millis(5));
+                        procs.poison(0);
+                        procs.mark_dead(0);
+                        // Publication is the monitor's job.
+                        std::thread::sleep(Duration::from_millis(10));
+                        detector.publish(0);
+                        None
+                    } else {
+                        let sh = comm.shrink().unwrap();
+                        Some((sh.size(), sh.group.as_ref().clone()))
+                    }
+                })
+            })
+            .collect();
+        let out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for o in out.into_iter().flatten() {
+            assert_eq!(o.0, 3);
+            assert_eq!(o.1, vec![1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn sequential_consensus_rounds_do_not_cross() {
+        let out = run_ulfm(3, &[], |r, comm| {
+            let a = comm.agree_min(100 + r as u64).unwrap();
+            let b = comm.agree_min(200 + r as u64).unwrap();
+            (a, b)
+        });
+        for o in out.into_iter().flatten() {
+            assert_eq!(o, (100, 200));
+        }
+    }
+
+    #[test]
+    fn barrier_alive_with_dead_member() {
+        let out = run_ulfm(4, &[0], |_r, comm| comm.barrier_alive().is_ok());
+        assert!(out.into_iter().flatten().all(|b| b));
+    }
+}

@@ -1,0 +1,128 @@
+//! The ULFM failure detector: the OMPI runtime's *knowledge* of failures.
+//!
+//! Ground-truth liveness lives in [`crate::fabric::ProcSet`]; a process's
+//! death only becomes *known* here once the process manager's monitoring
+//! path (PRTED daemon → PRTE server → PMIx broadcast, §IV-C/§IV-D) has
+//! observed and propagated it. The gap between truth and knowledge is the
+//! detection latency the paper's test loops poll against.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Shared failure knowledge for one job.
+#[derive(Default)]
+pub struct FailureDetector {
+    known: RwLock<HashSet<usize>>,
+    /// Bumped on every newly-learned failure; lets hot paths use a cheap
+    /// epoch compare instead of set operations.
+    epoch: AtomicU64,
+}
+
+impl FailureDetector {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Publish a failure (called by the process manager's monitor when a
+    /// PRTED observes a child exit, or when a node failure wipes a whole
+    /// daemon).
+    pub fn publish(&self, rank: usize) {
+        let mut k = self.known.write().unwrap();
+        if k.insert(rank) {
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    pub fn publish_many(&self, ranks: &[usize]) {
+        let mut k = self.known.write().unwrap();
+        let mut newly = 0;
+        for &r in ranks {
+            if k.insert(r) {
+                newly += 1;
+            }
+        }
+        if newly > 0 {
+            self.epoch.fetch_add(newly, Ordering::SeqCst);
+        }
+    }
+
+    /// Detection epoch — monotone count of learned failures.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn is_known_failed(&self, rank: usize) -> bool {
+        self.known.read().unwrap().contains(&rank)
+    }
+
+    /// All known-failed fabric ranks (ascending, for determinism).
+    pub fn known_failed(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.known.read().unwrap().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Known-failed ranks within `group` (returned as *group indices*).
+    pub fn failed_in(&self, group: &[usize]) -> Vec<usize> {
+        let k = self.known.read().unwrap();
+        group
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| k.contains(f))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Lowest group index whose member is *not* known-failed (the leader
+    /// election rule used by shrink/agree).
+    pub fn lowest_alive_in(&self, group: &[usize]) -> Option<usize> {
+        let k = self.known.read().unwrap();
+        group.iter().position(|f| !k.contains(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_is_idempotent_on_epoch() {
+        let d = FailureDetector::new();
+        assert_eq!(d.epoch(), 0);
+        d.publish(3);
+        d.publish(3);
+        assert_eq!(d.epoch(), 1);
+        assert!(d.is_known_failed(3));
+        assert!(!d.is_known_failed(2));
+    }
+
+    #[test]
+    fn failed_in_returns_group_indices() {
+        let d = FailureDetector::new();
+        d.publish_many(&[10, 30]);
+        // group maps comm rank -> fabric rank
+        let group = [10usize, 20, 30, 40];
+        assert_eq!(d.failed_in(&group), vec![0, 2]);
+    }
+
+    #[test]
+    fn leader_election_skips_failed() {
+        let d = FailureDetector::new();
+        let group = [5usize, 6, 7];
+        assert_eq!(d.lowest_alive_in(&group), Some(0));
+        d.publish(5);
+        assert_eq!(d.lowest_alive_in(&group), Some(1));
+        d.publish_many(&[6, 7]);
+        assert_eq!(d.lowest_alive_in(&group), None);
+    }
+
+    #[test]
+    fn known_failed_sorted() {
+        let d = FailureDetector::new();
+        d.publish_many(&[9, 1, 4]);
+        assert_eq!(d.known_failed(), vec![1, 4, 9]);
+    }
+}

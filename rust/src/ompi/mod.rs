@@ -1,0 +1,21 @@
+//! **OMPI** — the fault-tolerant library (Open MPI + ULFM in the paper).
+//!
+//! PartRePer-MPI uses this library *only* for fault tolerance: failure
+//! detection, error propagation (revoke), and world repair (shrink/agree).
+//! All bulk application data stays on the tuned [`crate::empi`] fabric. To
+//! keep that trade-off measurable, this module's traffic runs on its own
+//! fabric instance with the slower `ompi_generic` cost profile and its
+//! collectives are deliberately generic (linear), like the untuned paths of
+//! a portable MPI build.
+//!
+//! * [`detector`] — what the OMPI runtime *knows* about failures (fed by the
+//!   process manager's PRTE daemons; distinct from ground truth liveness).
+//! * [`comm`] — revocable communicators with the ULFM operations of §III-B:
+//!   `revoke`, `is_revoked`, `failure_ack`/`failure_get_ack`, `shrink`, and
+//!   an `agree` consensus used by message recovery.
+
+pub mod comm;
+pub mod detector;
+
+pub use comm::{CommRegistry, UlfmComm};
+pub use detector::FailureDetector;

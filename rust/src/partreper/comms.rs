@@ -1,0 +1,477 @@
+//! World layout and the six EMPI communicators of §V, plus the §VI-A
+//! repair that regenerates them after a shrink.
+//!
+//! Layout invariant (kept across repairs): `assign` lists fabric ranks in
+//! eworld order — the first `ncomp` entries are the computational
+//! processes (app rank == position), the remaining entries are replicas;
+//! replica slot `j` mirrors computational rank `rep_mirror[j]`.
+//!
+//! Repair of an agreed dead set:
+//! * dead replica → slot dropped, maps updated;
+//! * dead computational with a live replica → the replica's fabric rank is
+//!   *promoted* into the computational position and its slot dropped
+//!   ("the newly shrunk communicator has its processes shuffled such that
+//!   the replica now becomes the computational process, following which it
+//!   is considered that the replica was the one that had failed");
+//! * dead computational without a replica → **job interruption** (§VII-B).
+//!
+//! All six EMPI communicators are regenerated from the shrunk oworld's
+//! context id, deterministically, so every survivor rebuilds the same
+//! logical communicators without negotiation.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::empi::{Comm, InterComm};
+use crate::fabric::Fabric;
+use crate::ompi::UlfmComm;
+use crate::util::prng::splitmix64;
+
+use super::log::Channel;
+
+/// Role of a process in the current world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Comp,
+    Rep,
+}
+
+/// The replica-aware world layout (shared maps; cheap to clone).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layout {
+    /// eworld position -> fabric rank.
+    pub assign: Vec<usize>,
+    /// Number of computational processes (== application world size).
+    pub ncomp: usize,
+    /// Replica slot j mirrors computational rank `rep_mirror[j]`.
+    pub rep_mirror: Vec<usize>,
+}
+
+impl Layout {
+    /// Initial layout: fabric ranks 0..ncomp are computational, the next
+    /// nrep are replicas, replica j mirrors comp j (§V: replicas are "the
+    /// last nRep processes"; the replica map starts as identity).
+    pub fn initial(ncomp: usize, nrep: usize) -> Self {
+        assert!(nrep <= ncomp, "cannot have more replicas than comps");
+        Self {
+            assign: (0..ncomp + nrep).collect(),
+            ncomp,
+            rep_mirror: (0..nrep).collect(),
+        }
+    }
+
+    pub fn nrep(&self) -> usize {
+        self.rep_mirror.len()
+    }
+
+    pub fn eworld_size(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Fabric rank of computational process `c`.
+    pub fn comp_fabric(&self, c: usize) -> usize {
+        self.assign[c]
+    }
+
+    /// Replica slot mirroring computational rank `c`, if any.
+    pub fn rep_slot_of(&self, c: usize) -> Option<usize> {
+        self.rep_mirror.iter().position(|&m| m == c)
+    }
+
+    /// Fabric rank of the replica of comp `c`, if any.
+    pub fn rep_fabric_of(&self, c: usize) -> Option<usize> {
+        self.rep_slot_of(c).map(|j| self.assign[self.ncomp + j])
+    }
+
+    pub fn has_rep(&self, c: usize) -> bool {
+        self.rep_slot_of(c).is_some()
+    }
+
+    /// (role, app rank) of a fabric rank, if it is in the world.
+    pub fn role_of_fabric(&self, fabric: usize) -> Option<(Role, usize)> {
+        let pos = self.assign.iter().position(|&f| f == fabric)?;
+        Some(if pos < self.ncomp {
+            (Role::Comp, pos)
+        } else {
+            (Role::Rep, self.rep_mirror[pos - self.ncomp])
+        })
+    }
+
+    /// eworld position of the (app rank, channel) incarnation.
+    pub fn epos(&self, app: usize, channel: Channel) -> Option<usize> {
+        match channel {
+            Channel::Comp => (app < self.ncomp).then_some(app),
+            Channel::Rep => self.rep_slot_of(app).map(|j| self.ncomp + j),
+        }
+    }
+
+    /// Apply the agreed dead set (fabric ranks). Returns the repaired
+    /// layout and the promotions performed `(comp rank, promoted fabric)`,
+    /// or `Err(comp rank)` when a computational rank without a live replica
+    /// is dead — the job-level interruption the paper's MTTI experiments
+    /// count (§VII-B).
+    pub fn repair(
+        &self,
+        dead: &HashSet<usize>,
+    ) -> Result<(Layout, Vec<(usize, usize)>), usize> {
+        let mut assign = self.assign.clone();
+        let mut rep_mirror = self.rep_mirror.clone();
+        let mut promotions = Vec::new();
+
+        // Promote replicas into dead computational slots (or interrupt).
+        for c in 0..self.ncomp {
+            if !dead.contains(&assign[c]) {
+                continue;
+            }
+            let slot = rep_mirror
+                .iter()
+                .position(|&m| m == c)
+                .filter(|&j| !dead.contains(&assign[self.ncomp + j]));
+            match slot {
+                Some(j) => {
+                    let promoted = assign[self.ncomp + j];
+                    assign[c] = promoted;
+                    promotions.push((c, promoted));
+                    // "it is considered that the replica was the one that
+                    // had failed" — the vacated slot goes away below.
+                    rep_mirror[j] = usize::MAX; // tombstone
+                }
+                None => return Err(c),
+            }
+        }
+
+        // Drop dead replica slots and tombstones, compacting the tail.
+        let mut new_assign: Vec<usize> = assign[..self.ncomp].to_vec();
+        let mut new_mirror = Vec::new();
+        for (j, &m) in rep_mirror.iter().enumerate() {
+            let fabric = assign[self.ncomp + j];
+            if m != usize::MAX && !dead.contains(&fabric) {
+                new_assign.push(fabric);
+                new_mirror.push(m);
+            }
+        }
+
+        Ok((
+            Layout {
+                assign: new_assign,
+                ncomp: self.ncomp,
+                rep_mirror: new_mirror,
+            },
+            promotions,
+        ))
+    }
+}
+
+/// The full communicator set of §V for one rank, regenerated on repair.
+pub struct WorldComms {
+    /// Repair generation (0 = initial world).
+    pub generation: u64,
+    pub layout: Layout,
+    /// My position in `layout.assign`.
+    pub my_pos: usize,
+    /// eworldComm: all processes, EMPI.
+    pub eworld: Comm,
+    /// EMPI_COMM_CMP — null (None) on replicas.
+    pub comm_cmp: Option<Comm>,
+    /// EMPI_COMM_REP — null on computational processes.
+    pub comm_rep: Option<Comm>,
+    /// EMPI_CMP_REP_INTERCOMM — null when no replicas are alive.
+    pub cmp_rep_inter: Option<InterComm>,
+    /// EMPI_CMP_NO_REP — null on replicas and on comps that have replicas.
+    pub cmp_no_rep: Option<Comm>,
+    /// EMPI_CMP_NO_REP_INTERCOMM — null when no replicas or all comps
+    /// replicated.
+    pub cmp_no_rep_inter: Option<InterComm>,
+}
+
+impl WorldComms {
+    /// My role in the current world.
+    pub fn role(&self) -> Role {
+        if self.my_pos < self.layout.ncomp {
+            Role::Comp
+        } else {
+            Role::Rep
+        }
+    }
+
+    /// My application-visible rank.
+    pub fn app_rank(&self) -> usize {
+        match self.role() {
+            Role::Comp => self.my_pos,
+            Role::Rep => self.layout.rep_mirror[self.my_pos - self.layout.ncomp],
+        }
+    }
+
+    /// Build the communicator set for `my_fabric` from an agreed layout.
+    /// `base_ctx` must be identical on every member (derived from the
+    /// shrunk oworld context); all six contexts are split from it.
+    pub fn build(
+        fabric: &Arc<Fabric>,
+        layout: Layout,
+        my_fabric: usize,
+        base_ctx: u64,
+        generation: u64,
+    ) -> Self {
+        let my_pos = layout
+            .assign
+            .iter()
+            .position(|&f| f == my_fabric)
+            .expect("caller must be in the world");
+        let ncomp = layout.ncomp;
+        let nrep = layout.nrep();
+        let ctx = |k: u64| {
+            let mut s = base_ctx ^ k.wrapping_mul(0xA076_1D64_78BD_642F);
+            splitmix64(&mut s)
+        };
+
+        let eworld = Comm::from_group(fabric.clone(), ctx(1), layout.assign.clone(), my_pos);
+
+        let comp_group: Vec<usize> = layout.assign[..ncomp].to_vec();
+        let rep_group: Vec<usize> = layout.assign[ncomp..].to_vec();
+        let is_comp = my_pos < ncomp;
+
+        let comm_cmp = is_comp.then(|| {
+            Comm::from_group(fabric.clone(), ctx(2), comp_group.clone(), my_pos)
+        });
+        let comm_rep = (!is_comp).then(|| {
+            Comm::from_group(fabric.clone(), ctx(3), rep_group.clone(), my_pos - ncomp)
+        });
+
+        let cmp_rep_inter = (nrep > 0).then(|| {
+            if is_comp {
+                InterComm::new(
+                    fabric.clone(),
+                    ctx(4),
+                    comp_group.clone(),
+                    rep_group.clone(),
+                    my_pos,
+                )
+            } else {
+                InterComm::new(
+                    fabric.clone(),
+                    ctx(4),
+                    rep_group.clone(),
+                    comp_group.clone(),
+                    my_pos - ncomp,
+                )
+            }
+        });
+
+        // Computational processes without replicas (ascending app rank).
+        let no_rep_group: Vec<usize> = (0..ncomp)
+            .filter(|&c| !layout.has_rep(c))
+            .map(|c| layout.assign[c])
+            .collect();
+        let my_no_rep_pos = no_rep_group.iter().position(|&f| f == my_fabric);
+        let cmp_no_rep = my_no_rep_pos.map(|pos| {
+            Comm::from_group(fabric.clone(), ctx(5), no_rep_group.clone(), pos)
+        });
+        let cmp_no_rep_inter = (nrep > 0 && !no_rep_group.is_empty()).then(|| {
+            if let Some(pos) = my_no_rep_pos {
+                Some(InterComm::new(
+                    fabric.clone(),
+                    ctx(6),
+                    no_rep_group.clone(),
+                    rep_group.clone(),
+                    pos,
+                ))
+            } else if !is_comp {
+                Some(InterComm::new(
+                    fabric.clone(),
+                    ctx(6),
+                    rep_group.clone(),
+                    no_rep_group.clone(),
+                    my_pos - ncomp,
+                ))
+            } else {
+                None // replicated comp: not a member of this intercomm
+            }
+        });
+
+        Self {
+            generation,
+            layout,
+            my_pos,
+            eworld,
+            comm_cmp,
+            comm_rep,
+            cmp_rep_inter,
+            cmp_no_rep,
+            cmp_no_rep_inter: cmp_no_rep_inter.flatten(),
+        }
+    }
+
+    /// Derive the base EMPI context from the (agreed) shrunk oworld ctx.
+    pub fn base_ctx_from_oworld(oworld: &UlfmComm, generation: u64) -> u64 {
+        let mut s = oworld
+            .ctx
+            .wrapping_mul(0xD6E8_FEB8_6659_FD93)
+            .wrapping_add(generation);
+        splitmix64(&mut s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_layout_paper_shape() {
+        // 256 comp + 25% replication = 64 reps, total 320.
+        let l = Layout::initial(256, 64);
+        assert_eq!(l.eworld_size(), 320);
+        assert_eq!(l.comp_fabric(10), 10);
+        assert_eq!(l.rep_fabric_of(10), Some(266));
+        assert!(l.has_rep(63));
+        assert!(!l.has_rep(64));
+        assert_eq!(l.role_of_fabric(5), Some((Role::Comp, 5)));
+        assert_eq!(l.role_of_fabric(300), Some((Role::Rep, 44)));
+        assert_eq!(l.role_of_fabric(999), None);
+    }
+
+    #[test]
+    fn epos_resolves_channels() {
+        let l = Layout::initial(4, 2);
+        assert_eq!(l.epos(1, Channel::Comp), Some(1));
+        assert_eq!(l.epos(1, Channel::Rep), Some(5));
+        assert_eq!(l.epos(3, Channel::Rep), None);
+    }
+
+    #[test]
+    fn repair_dead_replica_drops_slot() {
+        let l = Layout::initial(4, 2); // fabric: comps 0-3, reps 4,5
+        let dead: HashSet<usize> = [5].into_iter().collect(); // rep of comp 1
+        let (l2, promos) = l.repair(&dead).unwrap();
+        assert!(promos.is_empty());
+        assert_eq!(l2.ncomp, 4);
+        assert_eq!(l2.nrep(), 1);
+        assert!(l2.has_rep(0));
+        assert!(!l2.has_rep(1));
+        assert_eq!(l2.assign, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn repair_promotes_replica_for_dead_comp() {
+        let l = Layout::initial(4, 2);
+        let dead: HashSet<usize> = [1].into_iter().collect(); // comp 1 dies
+        let (l2, promos) = l.repair(&dead).unwrap();
+        assert_eq!(promos, vec![(1, 5)]); // rep fabric 5 takes comp slot 1
+        assert_eq!(l2.assign, vec![0, 5, 2, 3, 4]);
+        assert_eq!(l2.nrep(), 1);
+        assert!(!l2.has_rep(1), "promoted comp lost its replica");
+        assert!(l2.has_rep(0));
+        // app-rank view of the promoted process
+        assert_eq!(l2.role_of_fabric(5), Some((Role::Comp, 1)));
+    }
+
+    #[test]
+    fn repair_comp_and_its_rep_both_dead_interrupts() {
+        let l = Layout::initial(4, 2);
+        let dead: HashSet<usize> = [1, 5].into_iter().collect();
+        assert_eq!(l.repair(&dead).unwrap_err(), 1);
+    }
+
+    #[test]
+    fn repair_unreplicated_comp_death_interrupts() {
+        let l = Layout::initial(4, 1);
+        let dead: HashSet<usize> = [3].into_iter().collect(); // comp 3, no rep
+        assert_eq!(l.repair(&dead).unwrap_err(), 3);
+    }
+
+    #[test]
+    fn repair_multiple_failures_at_once() {
+        // Node failure killing comp 0, its rep (4), and rep of comp 1 (5):
+        // comp 0 has no live rep -> interruption.
+        let l = Layout::initial(4, 2);
+        let dead: HashSet<usize> = [0, 4, 5].into_iter().collect();
+        assert_eq!(l.repair(&dead).unwrap_err(), 0);
+
+        // Whereas comp 1 + rep-of-0 dying together is survivable.
+        let dead: HashSet<usize> = [1, 4].into_iter().collect();
+        let (l2, promos) = l.repair(&dead).unwrap();
+        assert_eq!(promos, vec![(1, 5)]);
+        assert_eq!(l2.assign, vec![0, 5, 2, 3]);
+        assert_eq!(l2.nrep(), 0);
+    }
+
+    #[test]
+    fn sequential_repairs_compose() {
+        let l = Layout::initial(4, 4);
+        // comp 2 dies -> rep 6 promoted
+        let (l1, _) = l.repair(&[2].into_iter().collect()).unwrap();
+        assert_eq!(l1.assign, vec![0, 1, 6, 3, 4, 5, 7]);
+        assert_eq!(l1.rep_mirror, vec![0, 1, 3]);
+        // then promoted comp 2 (fabric 6) dies again: no rep left for 2
+        assert_eq!(l1.repair(&[6].into_iter().collect()).unwrap_err(), 2);
+        // but comp 0 dying is fine
+        let (l2, promos) = l1.repair(&[0].into_iter().collect()).unwrap();
+        assert_eq!(promos, vec![(0, 4)]);
+        assert_eq!(l2.assign, vec![4, 1, 6, 3, 5, 7]);
+        assert_eq!(l2.rep_mirror, vec![1, 3]);
+    }
+
+    #[test]
+    fn comms_built_consistently_across_ranks() {
+        use crate::fabric::{NetModel, ProcSet};
+        let l = Layout::initial(3, 2); // fabric 0,1,2 comps; 3,4 reps
+        let procs = ProcSet::new(5);
+        let fabric = Fabric::new("t", procs, NetModel::instant());
+        let worlds: Vec<WorldComms> = (0..5)
+            .map(|f| WorldComms::build(&fabric, l.clone(), f, 777, 0))
+            .collect();
+        // Roles and app ranks.
+        assert_eq!(worlds[0].role(), Role::Comp);
+        assert_eq!(worlds[3].role(), Role::Rep);
+        assert_eq!(worlds[3].app_rank(), 0);
+        assert_eq!(worlds[4].app_rank(), 1);
+        // comm_cmp only on comps; comm_rep only on reps (nullability, §V).
+        assert!(worlds[0].comm_cmp.is_some() && worlds[0].comm_rep.is_none());
+        assert!(worlds[3].comm_cmp.is_none() && worlds[3].comm_rep.is_some());
+        // cmp_no_rep: only comp 2 (no replica).
+        assert!(worlds[2].cmp_no_rep.is_some());
+        assert!(worlds[0].cmp_no_rep.is_none());
+        assert!(worlds[3].cmp_no_rep.is_none());
+        // no-rep intercomm exists for comp 2 and the reps, not comp 0/1.
+        assert!(worlds[2].cmp_no_rep_inter.is_some());
+        assert!(worlds[3].cmp_no_rep_inter.is_some());
+        assert!(worlds[0].cmp_no_rep_inter.is_none());
+        // Context ids agree across ranks for the same logical comm.
+        assert_eq!(worlds[0].eworld.ctx, worlds[4].eworld.ctx);
+        assert_eq!(
+            worlds[0].comm_cmp.as_ref().unwrap().ctx,
+            worlds[1].comm_cmp.as_ref().unwrap().ctx
+        );
+        assert_eq!(
+            worlds[3].comm_rep.as_ref().unwrap().ctx,
+            worlds[4].comm_rep.as_ref().unwrap().ctx
+        );
+        // ...and differ between logical comms.
+        assert_ne!(worlds[0].eworld.ctx, worlds[0].comm_cmp.as_ref().unwrap().ctx);
+    }
+
+    #[test]
+    fn full_replication_has_no_norep_comms() {
+        use crate::fabric::{NetModel, ProcSet};
+        let l = Layout::initial(2, 2);
+        let procs = ProcSet::new(4);
+        let fabric = Fabric::new("t", procs, NetModel::instant());
+        for f in 0..4 {
+            let w = WorldComms::build(&fabric, l.clone(), f, 1, 0);
+            assert!(w.cmp_no_rep.is_none());
+            assert!(w.cmp_no_rep_inter.is_none());
+        }
+    }
+
+    #[test]
+    fn zero_replication_has_no_rep_comms() {
+        use crate::fabric::{NetModel, ProcSet};
+        let l = Layout::initial(3, 0);
+        let procs = ProcSet::new(3);
+        let fabric = Fabric::new("t", procs, NetModel::instant());
+        let w = WorldComms::build(&fabric, l.clone(), 1, 1, 0);
+        assert!(w.comm_rep.is_none());
+        assert!(w.cmp_rep_inter.is_none());
+        assert!(w.cmp_no_rep.is_some()); // every comp is replica-less
+        assert!(w.cmp_no_rep_inter.is_none());
+    }
+}

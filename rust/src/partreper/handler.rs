@@ -1,0 +1,261 @@
+//! The error handler (§VI-A) and message recovery (§VI-B).
+//!
+//! Flow on any ULFM error:
+//!
+//! 1. **Revoke** `oworldComm` (if not already revoked) so every process
+//!    converges into the handler.
+//! 2. **Shrink**: agree on the failed set, drop it from oworld.
+//! 3. **Repair the world**: dead replica → dropped; dead computational
+//!    with live replica → replica promoted into the computational slot;
+//!    dead computational without replica → job interruption. All six EMPI
+//!    communicators are regenerated from the shrunk oworld's context.
+//! 4. **Message recovery**:
+//!    a. allgather every process's `last_collective_id` (agreement on the
+//!       first collective not completed everywhere);
+//!    b. alltoallv of received send-ids — each process tells every other
+//!       incarnation which of its messages it received;
+//!    c. resend logged-but-unreceived messages (per current routing);
+//!       mark received-but-not-yet-sent ids to be skipped at the source;
+//!    d. replay logged collectives newer than the agreed floor, re-relaying
+//!       to replicas that had not seen them; processes with nothing left
+//!       to replay exit the handler immediately.
+//!
+//! Another failure striking during recovery simply re-enters the handler
+//! (the loop in [`PartReper::error_handler`]), as in the paper.
+
+use std::collections::HashSet;
+
+use crate::error::{CommError, RankKilled};
+use crate::metrics::{Counters, Phase};
+use crate::util::{u64s_from_bytes, u64s_to_bytes};
+
+use super::comms::{Role, WorldComms};
+use super::gcoll::{Guard, OpError};
+use super::log::{Channel, CollKind, CollRecord};
+use super::{CollResult, PartReper};
+
+impl PartReper {
+    /// §VI entry point. Returns only when the world is repaired and
+    /// recovery is complete (or unwinds on kill/interruption).
+    pub(crate) fn error_handler(&self) {
+        let _phase = self.ctx.clock.scoped(Phase::ErrorHandler);
+        Counters::bump(&self.ctx.counters.error_handler_entries);
+        loop {
+            // Job already aborted elsewhere: unwind with the same trigger.
+            if let Some(dead_rank) = self.ctx.abort.get() {
+                std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
+            }
+            // 1. Revoke so everyone converges here.
+            {
+                let st = self.state.borrow();
+                if !st.oworld.is_revoked() {
+                    st.oworld.revoke();
+                }
+            }
+            match self.repair_and_recover() {
+                Ok(()) => return,
+                // Another failure during repair/recovery: run it again.
+                Err(OpError::Ulfm(_)) => continue,
+                Err(OpError::Comm(CommError::Killed { rank })) => {
+                    std::panic::panic_any(RankKilled { rank })
+                }
+                Err(OpError::Comm(e @ CommError::Timeout { .. })) => {
+                    std::panic::panic_any(format!("wedged in error handler: {e}"))
+                }
+            }
+        }
+    }
+
+    fn repair_and_recover(&self) -> Result<(), OpError> {
+        // ---- 2+3: shrink and rebuild the world.
+        {
+            let mut st = self.state.borrow_mut();
+            let new_oworld = st.oworld.shrink()?;
+            let dead: HashSet<usize> = st
+                .oworld
+                .group
+                .iter()
+                .copied()
+                .filter(|f| !new_oworld.group.contains(f))
+                .collect();
+            // Unrecoverable: a computational process without a live
+            // replica died. Latch the job-wide abort (so every rank
+            // reports the same trigger) and unwind.
+            let (layout, promotions) = match st.comms.layout.repair(&dead) {
+                Ok(v) => v,
+                Err(dead_comp) => {
+                    let dead_rank = self.ctx.abort.trigger(dead_comp);
+                    std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
+                }
+            };
+            for &(_, fabric) in &promotions {
+                if fabric == self.ctx.rank {
+                    Counters::bump(&self.ctx.counters.promotions);
+                }
+            }
+            let dropped_reps = st.comms.layout.nrep() - layout.nrep() - promotions.len();
+            Counters::add(&self.ctx.counters.replica_drops, dropped_reps as u64);
+
+            let generation = st.generation + 1;
+            let base = WorldComms::base_ctx_from_oworld(&new_oworld, generation);
+            let comms = WorldComms::build(
+                &self.ctx.empi_fabric,
+                layout,
+                self.ctx.rank,
+                base,
+                generation,
+            );
+            st.oworld = new_oworld;
+            st.comms = comms;
+            st.generation = generation;
+        }
+
+        // ---- 4: message recovery on the repaired world.
+        self.recover()
+    }
+
+    /// §VI-B message recovery.
+    fn recover(&self) -> Result<(), OpError> {
+        let st = self.state.borrow();
+        let g = Guard {
+            oworld: &st.oworld,
+            counters: &self.ctx.counters,
+            stride: self.ctx.cfg.failure_check_stride,
+            abort: &self.ctx.abort,
+        };
+        let mut log = self.log.borrow_mut();
+        let eworld = &st.comms.eworld;
+        let layout = &st.comms.layout;
+        let n = eworld.size();
+        let me_pos = st.comms.my_pos;
+        let me_app = st.comms.app_rank();
+        let my_role = st.comms.role();
+
+        // (a) Exchange last completed collective ids.
+        let mine = log.last_coll_id();
+        let all_last_raw = g.allgather(eworld, &u64s_to_bytes(&[mine]))?;
+        let all_last: Vec<u64> = all_last_raw
+            .iter()
+            .map(|b| u64s_from_bytes(b)[0])
+            .collect();
+        let min_cid = all_last.iter().copied().min().unwrap_or(0);
+
+        // (b) Exchange received send-ids: to each incarnation, the ids I
+        // received from its logical rank.
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|epos| {
+                let app = if epos < layout.ncomp {
+                    epos
+                } else {
+                    layout.rep_mirror[epos - layout.ncomp]
+                };
+                let mut ids: Vec<u64> = log.received_from(app).into_iter().collect();
+                ids.sort_unstable();
+                u64s_to_bytes(&ids)
+            })
+            .collect();
+        let exchanged = g.alltoallv(eworld, &rows)?;
+
+        // (c) Resend + skip, per destination incarnation I route to.
+        for (epos, raw) in exchanged.iter().enumerate() {
+            if epos == me_pos {
+                continue;
+            }
+            let (d_role, d_app, d_channel) = if epos < layout.ncomp {
+                (Role::Comp, epos, Channel::Comp)
+            } else {
+                (Role::Rep, layout.rep_mirror[epos - layout.ncomp], Channel::Rep)
+            };
+            // Normal §V-B routing, evaluated on the *repaired* world.
+            let routes = match (my_role, d_role) {
+                (Role::Comp, Role::Comp) => true,
+                (Role::Comp, Role::Rep) => !layout.has_rep(me_app),
+                (Role::Rep, Role::Rep) => true,
+                (Role::Rep, Role::Comp) => false,
+            };
+            if !routes {
+                continue;
+            }
+            let received: HashSet<u64> = u64s_from_bytes(raw).into_iter().collect();
+            // Resend what the destination never received.
+            for rec in log.unreceived_sends(d_app, &received) {
+                g.check()?;
+                eworld.send_shared(epos, rec.tag, rec.id, rec.data.clone())?;
+                Counters::bump(&self.ctx.counters.resends);
+            }
+            // Skip what it already has but I have not issued yet.
+            log.mark_future_skips(d_app, d_channel, &received);
+        }
+
+        // (d) Replay collectives newer than the agreed floor.
+        if my_role == Role::Comp {
+            let rep_last = layout
+                .rep_slot_of(me_app)
+                .map(|slot| all_last[layout.ncomp + slot]);
+            for rec in log.collectives_after(min_cid) {
+                Counters::bump(&self.ctx.counters.collective_replays);
+                Self::replay_collective(&st, &g, &rec, rep_last)?;
+            }
+        }
+        // Replicas replay nothing: every collective they completed was
+        // relayed by a computational process that logged it too.
+
+        // GC: nothing below the floor can ever be replayed again.
+        log.prune(min_cid, &Default::default());
+        Ok(())
+    }
+
+    /// Re-execute one logged collective on the current world (discarding
+    /// the result — state already advanced), re-relaying to my replica iff
+    /// it had not completed this collective before the failure.
+    fn replay_collective(
+        st: &super::State,
+        g: &Guard,
+        rec: &CollRecord,
+        rep_last: Option<u64>,
+    ) -> Result<(), OpError> {
+        let comm = st.comms.comm_cmp.as_ref().expect("replay runs on comps");
+        let result = match rec.kind {
+            CollKind::Barrier => {
+                g.barrier(comm)?;
+                CollResult::Unit
+            }
+            CollKind::Bcast => {
+                let mut buf = rec.input.as_ref().clone();
+                g.bcast(comm, rec.root, &mut buf)?;
+                CollResult::Flat(buf)
+            }
+            CollKind::Reduce => {
+                CollResult::MaybeFlat(g.reduce(comm, rec.root, rec.dtype, rec.op, &rec.input)?)
+            }
+            CollKind::Allreduce => {
+                CollResult::Flat(g.allreduce(comm, rec.dtype, rec.op, &rec.input)?)
+            }
+            CollKind::Allgather => CollResult::Blocks(g.allgather(comm, &rec.input)?),
+            CollKind::Alltoall | CollKind::Alltoallv => {
+                // Block count may exceed the current comp count only if
+                // ncomp changed — it never does (promotion preserves it).
+                CollResult::Blocks(g.alltoallv(comm, &rec.blocks)?)
+            }
+            CollKind::Gather => match g.gather(comm, rec.root, &rec.input)? {
+                Some(bs) => CollResult::Blocks(bs),
+                None => CollResult::Unit,
+            },
+            CollKind::Scatter => {
+                let blocks: Option<&[Vec<u8>]> =
+                    (comm.rank() == rec.root).then(|| rec.blocks.as_slice());
+                CollResult::Flat(g.scatter(comm, rec.root, blocks)?)
+            }
+        };
+        // Re-relay to my replica only if it was behind this collective.
+        let me_app = st.comms.app_rank();
+        if let Some(slot) = st.comms.layout.rep_slot_of(me_app) {
+            if rep_last.map_or(false, |rl| rec.id > rl) {
+                let inter = st.comms.cmp_rep_inter.as_ref().expect("rep => intercomm");
+                g.check()?;
+                inter.send_with_id(slot, rec.id as i64, 0, &result.encode())?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,361 @@
+//! Message logging for post-failure recovery (§V-B, §VI-B).
+//!
+//! Every p2p transmission carries a piggybacked **send-id** (sequential per
+//! (logical sender → logical receiver) pair) and is saved at the sender
+//! with all its arguments. Receivers record the ids they received per
+//! logical source. Collectives are logged with their inputs plus a
+//! `last_collective_id`. After a failure these logs drive:
+//!
+//! * **resend** — ids in my send log that a destination incarnation never
+//!   received;
+//! * **skip** — ids a destination already received although my (promoted,
+//!   possibly lagging) incarnation hasn't issued them yet: when my
+//!   application code reaches those sends they are logged but *not*
+//!   transmitted;
+//! * **collective replay** — re-execution, in order, of logged collectives
+//!   newer than the globally agreed completion point.
+//!
+//! Because a replica performs the same operations in the same order as its
+//! computational process, its log mirrors the computational log — that is
+//! what makes the promoted replica able to resend on behalf of the dead.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::empi::{DType, ReduceOp};
+
+/// Which stream of a logical destination a transmission targets: the
+/// computational process or its replica. (§V-B routes comp→comp, rep→rep,
+/// and comp→rep fan-out when the source has no replica.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Channel {
+    Comp,
+    Rep,
+}
+
+/// One logged p2p send.
+#[derive(Clone, Debug)]
+pub struct SendRecord {
+    pub id: u64,
+    pub tag: i64,
+    pub data: Arc<Vec<u8>>,
+}
+
+/// Kinds of logged collectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollKind {
+    Barrier,
+    Bcast,
+    Reduce,
+    Allreduce,
+    Allgather,
+    Alltoall,
+    Alltoallv,
+    Gather,
+    Scatter,
+}
+
+/// One logged collective with everything needed to re-execute it.
+#[derive(Clone, Debug)]
+pub struct CollRecord {
+    pub id: u64,
+    pub kind: CollKind,
+    pub dtype: DType,
+    pub op: ReduceOp,
+    pub root: usize,
+    /// Flat input (for bcast/reduce/allreduce/allgather) …
+    pub input: Arc<Vec<u8>>,
+    /// … or per-destination blocks (alltoall/alltoallv/scatter).
+    pub blocks: Arc<Vec<Vec<u8>>>,
+}
+
+/// Per-rank message log.
+#[derive(Default)]
+pub struct MessageLog {
+    /// Next send id per destination app rank (ids start at 1).
+    next_id: HashMap<usize, u64>,
+    /// Send records per destination app rank.
+    sends: HashMap<usize, Vec<SendRecord>>,
+    /// Ids received, per source app rank.
+    received: HashMap<usize, HashSet<u64>>,
+    /// Send ids to suppress (destination already has them), per
+    /// (destination app rank, destination channel).
+    skip: HashMap<(usize, Channel), HashSet<u64>>,
+    /// Completed collectives, oldest first.
+    colls: Vec<CollRecord>,
+    /// Id of the newest completed collective (0 = none).
+    last_coll_id: u64,
+}
+
+impl MessageLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ------------------------------------------------------------- sends
+
+    /// Allocate the next send id for `dst` and log the transmission.
+    pub fn log_send(&mut self, dst: usize, tag: i64, data: Arc<Vec<u8>>) -> u64 {
+        let id = self.next_id.entry(dst).or_insert(0);
+        *id += 1;
+        let rec = SendRecord {
+            id: *id,
+            tag,
+            data,
+        };
+        let out = rec.id;
+        self.sends.entry(dst).or_default().push(rec);
+        out
+    }
+
+    /// Should the transmission of `id` to (dst, channel) be suppressed?
+    /// Consumes the skip mark.
+    pub fn consume_skip(&mut self, dst: usize, channel: Channel, id: u64) -> bool {
+        if let Some(set) = self.skip.get_mut(&(dst, channel)) {
+            set.remove(&id)
+        } else {
+            false
+        }
+    }
+
+    pub fn mark_skip(&mut self, dst: usize, channel: Channel, id: u64) {
+        self.skip.entry((dst, channel)).or_default().insert(id);
+    }
+
+    pub fn skips_pending(&self) -> usize {
+        self.skip.values().map(|s| s.len()).sum()
+    }
+
+    /// My logged sends to `dst` whose id is not in `received_at_dst` —
+    /// the resend set of §VI-B.
+    pub fn unreceived_sends(&self, dst: usize, received_at_dst: &HashSet<u64>) -> Vec<SendRecord> {
+        self.sends
+            .get(&dst)
+            .map(|v| {
+                v.iter()
+                    .filter(|r| !received_at_dst.contains(&r.id))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Ids `dst` already received that I have *not yet sent* (my counter
+    /// hasn't reached them): mark them to be skipped when my application
+    /// code catches up.
+    pub fn mark_future_skips(
+        &mut self,
+        dst: usize,
+        channel: Channel,
+        received_at_dst: &HashSet<u64>,
+    ) -> usize {
+        let sent_up_to = self.next_id.get(&dst).copied().unwrap_or(0);
+        let mut n = 0;
+        for &id in received_at_dst {
+            if id > sent_up_to {
+                self.mark_skip(dst, channel, id);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Highest id sent to `dst` so far.
+    pub fn sent_up_to(&self, dst: usize) -> u64 {
+        self.next_id.get(&dst).copied().unwrap_or(0)
+    }
+
+    // ----------------------------------------------------------- receives
+
+    /// Record a received send id from logical source `src`.
+    pub fn log_receive(&mut self, src: usize, id: u64) {
+        if id != 0 {
+            self.received.entry(src).or_default().insert(id);
+        }
+    }
+
+    pub fn received_from(&self, src: usize) -> HashSet<u64> {
+        self.received.get(&src).cloned().unwrap_or_default()
+    }
+
+    /// Serialize the whole received map as u64s:
+    /// `[nsrc, (src, count, ids...)...]` — the §VI-B Alltoallv payload.
+    pub fn received_map_flat(&self) -> Vec<u64> {
+        let mut srcs: Vec<usize> = self.received.keys().copied().collect();
+        srcs.sort_unstable();
+        let mut out = vec![srcs.len() as u64];
+        for src in srcs {
+            let ids = &self.received[&src];
+            out.push(src as u64);
+            out.push(ids.len() as u64);
+            let mut v: Vec<u64> = ids.iter().copied().collect();
+            v.sort_unstable();
+            out.extend(v);
+        }
+        out
+    }
+
+    /// Parse a peer's flat received map.
+    pub fn parse_received_map(flat: &[u64]) -> HashMap<usize, HashSet<u64>> {
+        let mut out = HashMap::new();
+        let mut i = 1;
+        let nsrc = flat.first().copied().unwrap_or(0) as usize;
+        for _ in 0..nsrc {
+            let src = flat[i] as usize;
+            let count = flat[i + 1] as usize;
+            i += 2;
+            let ids: HashSet<u64> = flat[i..i + count].iter().copied().collect();
+            i += count;
+            out.insert(src, ids);
+        }
+        out
+    }
+
+    // --------------------------------------------------------- collectives
+
+    /// Allocate the next collective id (called when starting a collective;
+    /// committed on completion).
+    pub fn next_coll_id(&self) -> u64 {
+        self.last_coll_id + 1
+    }
+
+    /// Log a completed collective.
+    pub fn log_collective(&mut self, rec: CollRecord) {
+        debug_assert_eq!(rec.id, self.last_coll_id + 1, "collective ids are dense");
+        self.last_coll_id = rec.id;
+        self.colls.push(rec);
+    }
+
+    pub fn last_coll_id(&self) -> u64 {
+        self.last_coll_id
+    }
+
+    /// Collectives with id in `(after, ..]`, oldest first — the replay set.
+    pub fn collectives_after(&self, after: u64) -> Vec<CollRecord> {
+        self.colls.iter().filter(|c| c.id > after).cloned().collect()
+    }
+
+    /// Garbage-collect: drop collectives at or below the globally agreed
+    /// completion point and send records confirmed received everywhere.
+    pub fn prune(&mut self, coll_floor: u64, confirmed: &HashMap<usize, u64>) {
+        self.colls.retain(|c| c.id > coll_floor);
+        for (dst, &floor) in confirmed {
+            if let Some(v) = self.sends.get_mut(dst) {
+                v.retain(|r| r.id > floor);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> (usize, usize, usize) {
+        (
+            self.sends.values().map(|v| v.len()).sum(),
+            self.received.values().map(|v| v.len()).sum(),
+            self.colls.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_ids_sequential_per_destination() {
+        let mut log = MessageLog::new();
+        assert_eq!(log.log_send(3, 1, Arc::new(vec![1])), 1);
+        assert_eq!(log.log_send(3, 1, Arc::new(vec![2])), 2);
+        assert_eq!(log.log_send(5, 1, Arc::new(vec![3])), 1);
+        assert_eq!(log.sent_up_to(3), 2);
+        assert_eq!(log.sent_up_to(9), 0);
+    }
+
+    #[test]
+    fn unreceived_sends_are_the_difference() {
+        let mut log = MessageLog::new();
+        for i in 0..5u8 {
+            log.log_send(1, 7, Arc::new(vec![i]));
+        }
+        let received: HashSet<u64> = [1, 2, 4].into_iter().collect();
+        let miss = log.unreceived_sends(1, &received);
+        let ids: Vec<u64> = miss.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 5]);
+        assert_eq!(miss[0].data.as_ref(), &vec![2u8]);
+    }
+
+    #[test]
+    fn future_skips_only_beyond_counter() {
+        let mut log = MessageLog::new();
+        log.log_send(2, 0, Arc::new(vec![]));
+        log.log_send(2, 0, Arc::new(vec![]));
+        // dst already received ids 1..=4 (from my dead computational twin).
+        let received: HashSet<u64> = [1, 2, 3, 4].into_iter().collect();
+        let n = log.mark_future_skips(2, Channel::Comp, &received);
+        assert_eq!(n, 2); // only 3 and 4 are in my future
+        assert!(!log.consume_skip(2, Channel::Comp, 2));
+        assert!(log.consume_skip(2, Channel::Comp, 3));
+        assert!(!log.consume_skip(2, Channel::Comp, 3), "consumed once");
+        assert!(log.consume_skip(2, Channel::Comp, 4));
+    }
+
+    #[test]
+    fn received_map_roundtrip() {
+        let mut log = MessageLog::new();
+        log.log_receive(0, 1);
+        log.log_receive(0, 2);
+        log.log_receive(4, 9);
+        log.log_receive(4, 0); // id 0 = untracked, ignored
+        let flat = log.received_map_flat();
+        let parsed = MessageLog::parse_received_map(&flat);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[&0], [1, 2].into_iter().collect());
+        assert_eq!(parsed[&4], [9].into_iter().collect());
+        assert!(MessageLog::parse_received_map(&[]).is_empty());
+    }
+
+    #[test]
+    fn collective_log_and_replay_set() {
+        let mut log = MessageLog::new();
+        for i in 1..=4u64 {
+            let id = log.next_coll_id();
+            assert_eq!(id, i);
+            log.log_collective(CollRecord {
+                id,
+                kind: CollKind::Allreduce,
+                dtype: DType::F64,
+                op: ReduceOp::Sum,
+                root: 0,
+                input: Arc::new(vec![i as u8]),
+                blocks: Arc::new(vec![]),
+            });
+        }
+        assert_eq!(log.last_coll_id(), 4);
+        let replay = log.collectives_after(2);
+        assert_eq!(replay.len(), 2);
+        assert_eq!(replay[0].id, 3);
+        assert_eq!(replay[1].id, 4);
+    }
+
+    #[test]
+    fn prune_drops_confirmed() {
+        let mut log = MessageLog::new();
+        for _ in 0..3 {
+            log.log_send(1, 0, Arc::new(vec![]));
+        }
+        for i in 1..=3u64 {
+            log.log_collective(CollRecord {
+                id: i,
+                kind: CollKind::Barrier,
+                dtype: DType::U64,
+                op: ReduceOp::Sum,
+                root: 0,
+                input: Arc::new(vec![]),
+                blocks: Arc::new(vec![]),
+            });
+        }
+        let confirmed: HashMap<usize, u64> = [(1usize, 2u64)].into_iter().collect();
+        log.prune(2, &confirmed);
+        let (sends, _r, colls) = log.stats();
+        assert_eq!(sends, 1);
+        assert_eq!(colls, 1);
+    }
+}

@@ -1,0 +1,567 @@
+//! **PartRePer-MPI** — the paper's library (§V): partial replication on top
+//! of the dual-MPI environment, with native-library communication, message
+//! logging, and ULFM-driven failure management.
+//!
+//! One [`PartReper`] instance lives on each process (rank thread). It owns:
+//! * the six EMPI communicators of §V ([`comms::WorldComms`]), regenerated
+//!   after every repair;
+//! * the ULFM `oworldComm` used *only* for failure checks;
+//! * the message log (§V-B) driving recovery (§VI-B);
+//! * the error handler (§VI-A) that revokes, shrinks, promotes replicas
+//!   and rebuilds the world.
+//!
+//! The application-facing API (`send`/`recv`/collectives) is
+//! role-transparent: replica processes run the *same* application code;
+//! routing, relays, promotion and recovery all happen inside the library —
+//! "our library can seamlessly provide fault tolerance support to an
+//! existing MPI application".
+
+pub mod comms;
+pub mod gcoll;
+pub mod handler;
+pub mod log;
+pub mod replicate;
+
+#[cfg(test)]
+mod tests;
+
+pub use comms::{Layout, Role, WorldComms};
+pub use gcoll::{Guard, OpError};
+pub use log::{Channel, CollKind, CollRecord, MessageLog};
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::empi::{DType, Recvd, ReduceOp, Src, Tag};
+use crate::error::{CommError, RankKilled};
+use crate::metrics::{Counters, Phase};
+use crate::ompi::UlfmComm;
+use crate::procmgr::RankCtx;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Mutable world state, rebuilt by the error handler.
+pub struct State {
+    pub oworld: UlfmComm,
+    pub comms: WorldComms,
+    pub generation: u64,
+}
+
+/// Per-rank PartRePer library instance.
+pub struct PartReper {
+    pub ctx: RankCtx,
+    state: RefCell<State>,
+    log: RefCell<MessageLog>,
+}
+
+/// Result of a collective, in relay-serializable form.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CollResult {
+    /// bcast / allreduce / scatter results.
+    Flat(Vec<u8>),
+    /// reduce results (Some at root only).
+    MaybeFlat(Option<Vec<u8>>),
+    /// allgather / alltoall(v) / gather results.
+    Blocks(Vec<Vec<u8>>),
+    /// gather at non-root, barrier.
+    Unit,
+}
+
+impl CollResult {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            CollResult::Flat(v) => {
+                w.u64(0);
+                w.bytes(v);
+            }
+            CollResult::MaybeFlat(opt) => {
+                w.u64(1);
+                match opt {
+                    Some(v) => {
+                        w.u64(1);
+                        w.bytes(v);
+                    }
+                    None => w.u64(0),
+                }
+            }
+            CollResult::Blocks(bs) => {
+                w.u64(2);
+                w.usize(bs.len());
+                for b in bs {
+                    w.bytes(b);
+                }
+            }
+            CollResult::Unit => w.u64(3),
+        }
+        w.finish()
+    }
+
+    fn decode(buf: &[u8]) -> Self {
+        let mut r = ByteReader::new(buf);
+        match r.u64() {
+            0 => CollResult::Flat(r.bytes().to_vec()),
+            1 => {
+                if r.u64() == 1 {
+                    CollResult::MaybeFlat(Some(r.bytes().to_vec()))
+                } else {
+                    CollResult::MaybeFlat(None)
+                }
+            }
+            2 => {
+                let n = r.usize();
+                CollResult::Blocks((0..n).map(|_| r.bytes().to_vec()).collect())
+            }
+            3 => CollResult::Unit,
+            k => panic!("bad CollResult discriminant {k}"),
+        }
+    }
+
+    fn flat(self) -> Vec<u8> {
+        match self {
+            CollResult::Flat(v) => v,
+            other => panic!("expected Flat, got {other:?}"),
+        }
+    }
+
+    fn maybe_flat(self) -> Option<Vec<u8>> {
+        match self {
+            CollResult::MaybeFlat(v) => v,
+            other => panic!("expected MaybeFlat, got {other:?}"),
+        }
+    }
+
+    fn blocks(self) -> Vec<Vec<u8>> {
+        match self {
+            CollResult::Blocks(v) => v,
+            other => panic!("expected Blocks, got {other:?}"),
+        }
+    }
+}
+
+impl PartReper {
+    /// §V-A initialization: register with the (already running) EMPI
+    /// server's world, perform the PRTE adoption handshake, build the six
+    /// EMPI communicators and the ULFM oworld, and synchronize.
+    pub fn init(ctx: RankCtx) -> Self {
+        // "dynamically connect the processes with the separately started
+        // PRTE server" — the §IV-B adoption handshake.
+        let hs = ctx.prte.handshake_file();
+        debug_assert!(hs.pmix_addr.starts_with("pmix://"));
+        ctx.prte.adopt(ctx.rank);
+
+        // EMPI_Init equivalent: communicators from the static layout.
+        let layout = Layout::initial(ctx.cfg.ncomp, ctx.cfg.nrep());
+        let oworld = UlfmComm::world(
+            ctx.ompi_fabric.clone(),
+            ctx.detector.clone(),
+            ctx.registry.clone(),
+            ctx.ompi_world_ctx,
+            ctx.rank,
+        );
+        let base = WorldComms::base_ctx_from_oworld(&oworld, 0);
+        let comms = WorldComms::build(&ctx.empi_fabric, layout, ctx.rank, base, 0);
+
+        let pr = Self {
+            ctx,
+            state: RefCell::new(State {
+                oworld,
+                comms,
+                generation: 0,
+            }),
+            log: RefCell::new(MessageLog::new()),
+        };
+        // "Finally, all the processes synchronize with a barrier."
+        pr.guarded(|st, g, _log| g.barrier(&st.comms.eworld));
+        pr
+    }
+
+    // ------------------------------------------------------- introspection
+
+    /// Application-visible rank (computational rank; a replica reports the
+    /// rank of the computational process it mirrors).
+    pub fn rank(&self) -> usize {
+        self.state.borrow().comms.app_rank()
+    }
+
+    /// Application world size (number of computational processes).
+    pub fn size(&self) -> usize {
+        self.state.borrow().comms.layout.ncomp
+    }
+
+    pub fn role(&self) -> Role {
+        self.state.borrow().comms.role()
+    }
+
+    /// Current repair generation (0 = no failures handled yet).
+    pub fn generation(&self) -> u64 {
+        self.state.borrow().generation
+    }
+
+    pub fn counters(&self) -> &Arc<Counters> {
+        &self.ctx.counters
+    }
+
+    /// Log/protocol statistics: (sends logged, receives logged,
+    /// collectives logged).
+    pub fn log_stats(&self) -> (usize, usize, usize) {
+        self.log.borrow().stats()
+    }
+
+    // ------------------------------------------------------------ guarded
+
+    /// Run one operation under the Fig 7 protocol: on a ULFM error enter
+    /// the error handler (§VI), then retry the operation against the
+    /// repaired world. Kill/timeout unwind the rank.
+    fn guarded<R>(
+        &self,
+        mut op: impl FnMut(&State, &Guard, &mut MessageLog) -> Result<R, OpError>,
+    ) -> R {
+        loop {
+            let result = {
+                let st = self.state.borrow();
+                let g = Guard {
+                    oworld: &st.oworld,
+                    counters: &self.ctx.counters,
+                    stride: self.ctx.cfg.failure_check_stride,
+                    abort: &self.ctx.abort,
+                };
+                let mut log = self.log.borrow_mut();
+                op(&st, &g, &mut log)
+            };
+            match result {
+                Ok(v) => return v,
+                Err(OpError::Ulfm(_)) => self.error_handler(),
+                Err(OpError::Comm(CommError::Killed { rank })) => {
+                    std::panic::panic_any(RankKilled { rank })
+                }
+                Err(OpError::Comm(e @ CommError::Timeout { .. })) => {
+                    std::panic::panic_any(format!("protocol wedge: {e}"))
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------- p2p
+
+    /// Fault-tolerant send (§V-B). Logs the transmission, routes it to the
+    /// destination's computational and/or replica incarnation, honours
+    /// skip marks left by recovery.
+    pub fn send(&self, dst: usize, tag: i64, data: &[u8]) {
+        assert!(dst < self.size(), "send: bad destination {dst}");
+        let payload = Arc::new(data.to_vec());
+        let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
+        self.guarded(|st, g, log| {
+            let l = &st.comms.layout;
+            let me_app = st.comms.app_rank();
+            match st.comms.role() {
+                Role::Comp => {
+                    // comp -> comp(dst), always.
+                    Self::transmit(st, g, log, dst, Channel::Comp, tag, id, &payload)?;
+                    // source without replica also feeds the dest replica.
+                    if !l.has_rep(me_app) && l.has_rep(dst) {
+                        Self::transmit(st, g, log, dst, Channel::Rep, tag, id, &payload)?;
+                    }
+                }
+                Role::Rep => {
+                    // rep -> rep(dst) (only when the dest has a replica).
+                    if l.has_rep(dst) {
+                        Self::transmit(st, g, log, dst, Channel::Rep, tag, id, &payload)?;
+                    }
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// One transmission to a destination incarnation over eworldComm,
+    /// unless recovery marked this id as already delivered there.
+    fn transmit(
+        st: &State,
+        g: &Guard,
+        log: &mut MessageLog,
+        dst_app: usize,
+        channel: Channel,
+        tag: i64,
+        id: u64,
+        payload: &Arc<Vec<u8>>,
+    ) -> Result<(), OpError> {
+        if log.consume_skip(dst_app, channel, id) {
+            Counters::bump(&g.counters.skips);
+            return Ok(());
+        }
+        let epos = st
+            .comms
+            .layout
+            .epos(dst_app, channel)
+            .expect("routing picked a nonexistent incarnation");
+        g.check()?;
+        st.comms.eworld.send_shared(epos, tag, id, payload.clone())?;
+        Counters::bump(&g.counters.sends_logged);
+        Ok(())
+    }
+
+    /// Fault-tolerant receive (§V-B): irecv + test loop interleaved with
+    /// failure checks; the source incarnation is re-resolved after every
+    /// repair ("with the source/destination being modified if needed").
+    pub fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
+        assert!(src < self.size(), "recv: bad source {src}");
+        self.guarded(|st, g, log| {
+            let l = &st.comms.layout;
+            // Which incarnation sends to me in the current world?
+            let from_pos = match st.comms.role() {
+                Role::Comp => l.epos(src, Channel::Comp).unwrap(),
+                Role::Rep => {
+                    if l.has_rep(src) {
+                        l.epos(src, Channel::Rep).unwrap()
+                    } else {
+                        // src has no replica: its comp fans out to me.
+                        l.epos(src, Channel::Comp).unwrap()
+                    }
+                }
+            };
+            loop {
+                let m: Recvd = g.recv(&st.comms.eworld, Src::Rank(from_pos), Tag::Tag(tag))?;
+                // Duplicate guard (resend raced an in-flight copy).
+                if m.send_id != 0 && log.received_from(src).contains(&m.send_id) {
+                    continue;
+                }
+                log.log_receive(src, m.send_id);
+                return Ok(m.data.to_vec());
+            }
+        })
+    }
+
+    /// Combined send+recv (exchange pattern used by the stencil apps).
+    pub fn sendrecv(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Vec<u8> {
+        self.send(dst, tag, data);
+        self.recv(src, tag)
+    }
+
+    // --------------------------------------------------------- collectives
+
+    /// Shared §V-C skeleton: computational processes run the EMPI
+    /// collective over `EMPI_COMM_CMP` and relay the result to their
+    /// replicas over `EMPI_CMP_REP_INTERCOMM` (tagged with the collective
+    /// id); replicas await the relay. The completed collective is logged
+    /// for replay.
+    fn run_collective(
+        &self,
+        kind: CollKind,
+        dtype: DType,
+        op: ReduceOp,
+        root: usize,
+        input: Arc<Vec<u8>>,
+        blocks: Arc<Vec<Vec<u8>>>,
+        exec: impl Fn(&Guard, &WorldComms) -> Result<CollResult, OpError>,
+    ) -> CollResult {
+        let cid = self.log.borrow().next_coll_id();
+        let result = self.guarded(|st, g, _log| Self::execute_collective(st, g, cid, &exec));
+        self.log.borrow_mut().log_collective(CollRecord {
+            id: cid,
+            kind,
+            dtype,
+            op,
+            root,
+            input: input.clone(),
+            blocks: blocks.clone(),
+        });
+        Counters::bump(&self.ctx.counters.collectives_logged);
+        result
+    }
+
+    /// One attempt of collective `cid` on the current world (also used by
+    /// recovery replay).
+    pub(crate) fn execute_collective(
+        st: &State,
+        g: &Guard,
+        cid: u64,
+        exec: &impl Fn(&Guard, &WorldComms) -> Result<CollResult, OpError>,
+    ) -> Result<CollResult, OpError> {
+        let relay_tag = cid as i64;
+        match st.comms.role() {
+            Role::Comp => {
+                let res = exec(g, &st.comms)?;
+                // Relay to my replica, if I have one.
+                let me_app = st.comms.app_rank();
+                if let Some(slot) = st.comms.layout.rep_slot_of(me_app) {
+                    let inter = st
+                        .comms
+                        .cmp_rep_inter
+                        .as_ref()
+                        .expect("rep exists => intercomm exists");
+                    g.check()?;
+                    inter.send_with_id(slot, relay_tag, 0, &res.encode())?;
+                }
+                Ok(res)
+            }
+            Role::Rep => {
+                let me_app = st.comms.app_rank();
+                let inter = st
+                    .comms
+                    .cmp_rep_inter
+                    .as_ref()
+                    .expect("I am a rep => intercomm exists");
+                let m = g.recv_inter(inter, me_app, relay_tag)?;
+                Ok(CollResult::decode(&m.data))
+            }
+        }
+    }
+
+    pub fn barrier(&self) {
+        self.run_collective(
+            CollKind::Barrier,
+            DType::U64,
+            ReduceOp::Sum,
+            0,
+            Arc::new(vec![]),
+            Arc::new(vec![]),
+            |g, comms| {
+                g.barrier(comms.comm_cmp.as_ref().expect("comp"))?;
+                Ok(CollResult::Unit)
+            },
+        );
+    }
+
+    pub fn bcast(&self, root: usize, data: &mut Vec<u8>) {
+        let input = Arc::new(data.clone());
+        let input2 = input.clone();
+        let out = self.run_collective(
+            CollKind::Bcast,
+            DType::U64,
+            ReduceOp::Sum,
+            root,
+            input,
+            Arc::new(vec![]),
+            move |g, comms| {
+                let mut buf = input2.as_ref().clone();
+                g.bcast(comms.comm_cmp.as_ref().expect("comp"), root, &mut buf)?;
+                Ok(CollResult::Flat(buf))
+            },
+        );
+        *data = out.flat();
+    }
+
+    pub fn allreduce(&self, dtype: DType, op: ReduceOp, data: &[u8]) -> Vec<u8> {
+        let input = Arc::new(data.to_vec());
+        let input2 = input.clone();
+        self.run_collective(
+            CollKind::Allreduce,
+            dtype,
+            op,
+            0,
+            input,
+            Arc::new(vec![]),
+            move |g, comms| {
+                let out =
+                    g.allreduce(comms.comm_cmp.as_ref().expect("comp"), dtype, op, &input2)?;
+                Ok(CollResult::Flat(out))
+            },
+        )
+        .flat()
+    }
+
+    pub fn reduce(&self, root: usize, dtype: DType, op: ReduceOp, data: &[u8]) -> Option<Vec<u8>> {
+        let input = Arc::new(data.to_vec());
+        let input2 = input.clone();
+        self.run_collective(
+            CollKind::Reduce,
+            dtype,
+            op,
+            root,
+            input,
+            Arc::new(vec![]),
+            move |g, comms| {
+                let out =
+                    g.reduce(comms.comm_cmp.as_ref().expect("comp"), root, dtype, op, &input2)?;
+                Ok(CollResult::MaybeFlat(out))
+            },
+        )
+        .maybe_flat()
+    }
+
+    pub fn allgather(&self, data: &[u8]) -> Vec<Vec<u8>> {
+        let input = Arc::new(data.to_vec());
+        let input2 = input.clone();
+        self.run_collective(
+            CollKind::Allgather,
+            DType::U64,
+            ReduceOp::Sum,
+            0,
+            input,
+            Arc::new(vec![]),
+            move |g, comms| {
+                let out = g.allgather(comms.comm_cmp.as_ref().expect("comp"), &input2)?;
+                Ok(CollResult::Blocks(out))
+            },
+        )
+        .blocks()
+    }
+
+    /// Alltoallv — internally `EMPI_Ialltoallv` + test loop (§VII-A).
+    pub fn alltoallv(&self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(blocks.len(), self.size(), "alltoallv: one block per rank");
+        let blocks = Arc::new(blocks);
+        let blocks2 = blocks.clone();
+        self.run_collective(
+            CollKind::Alltoallv,
+            DType::U64,
+            ReduceOp::Sum,
+            0,
+            Arc::new(vec![]),
+            blocks,
+            move |g, comms| {
+                let out = g.alltoallv(comms.comm_cmp.as_ref().expect("comp"), &blocks2)?;
+                Ok(CollResult::Blocks(out))
+            },
+        )
+        .blocks()
+    }
+
+    pub fn alltoall(&self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        self.alltoallv(blocks)
+    }
+
+    pub fn gather(&self, root: usize, data: &[u8]) -> Option<Vec<Vec<u8>>> {
+        let input = Arc::new(data.to_vec());
+        let input2 = input.clone();
+        let res = self.run_collective(
+            CollKind::Gather,
+            DType::U64,
+            ReduceOp::Sum,
+            root,
+            input,
+            Arc::new(vec![]),
+            move |g, comms| {
+                let out = g.gather(comms.comm_cmp.as_ref().expect("comp"), root, &input2)?;
+                Ok(match out {
+                    Some(bs) => CollResult::Blocks(bs),
+                    None => CollResult::Unit,
+                })
+            },
+        );
+        match res {
+            CollResult::Blocks(bs) => Some(bs),
+            _ => None,
+        }
+    }
+
+    // ------------------------------------------------------------- phases
+
+    /// Mark entry into app compute (for the Fig 9a phase split).
+    pub fn phase_app(&self) {
+        self.ctx.clock.enter(Phase::App);
+    }
+
+    /// MPI_Finalize equivalent — **must** be called by every rank when its
+    /// application code completes. Synchronizes all processes (so a
+    /// fast-finishing replica keeps participating in failure handling
+    /// until everyone is done), then marks this process as gracefully
+    /// exited so the ULFM protocols skip it rather than repair it.
+    pub fn finalize(&self) {
+        self.barrier();
+        self.ctx.procs.set_finalized(self.ctx.rank);
+        // Wake anyone blocked so they observe the finalization promptly.
+        self.ctx.empi_fabric.wake_all();
+        self.ctx.ompi_fabric.wake_all();
+    }
+}

@@ -1,0 +1,111 @@
+//! Initial replication (§V-A): copy process images from computational
+//! processes to their replicas over `EMPI_CMP_REP_INTERCOMM`, using the
+//! §III-A procedure — basic info first, then the three segment transfers,
+//! applied on the replica with [`crate::procimg::transfer`].
+
+use crate::metrics::Phase;
+use crate::procimg::{transfer, ProcessImage, Replicable, TransferStats};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+use super::comms::Role;
+use super::PartReper;
+
+/// Reserved intercomm tags for the replication stream.
+const TAG_BASIC_INFO: i64 = -100;
+const TAG_IMAGE: i64 = -101;
+
+impl PartReper {
+    /// Replicate application state from computational processes to their
+    /// replicas. On return:
+    /// * computational ranks keep `state` unchanged (they are the source);
+    /// * replica ranks have `state` rebuilt as an exact replica of their
+    ///   mirror's state (same data/heap/stack contents, own addresses).
+    ///
+    /// Returns the transfer stats on replicas, `None` on sources and on
+    /// unreplicated computational ranks.
+    pub fn replicate<T: Replicable>(&self, state: &mut T) -> Option<TransferStats> {
+        let _phase = self.ctx.clock.scoped(Phase::Replication);
+        // Capture outside the retry loop: the state does not change here.
+        let my_image = state.capture();
+
+        let stats = self.guarded(|st, g, _log| {
+            let me_app = st.comms.app_rank();
+            match st.comms.role() {
+                Role::Comp => {
+                    if let Some(slot) = st.comms.layout.rep_slot_of(me_app) {
+                        let inter =
+                            st.comms.cmp_rep_inter.as_ref().expect("rep => intercomm");
+                        // 1. basic information block (§III-A).
+                        let info = my_image.basic_info();
+                        let mut w = ByteWriter::new();
+                        w.usize(info.data_len);
+                        w.usize(info.stack_len);
+                        w.usize(info.heap_chunks.len());
+                        for (addr, ptr, size) in &info.heap_chunks {
+                            w.u64(*addr);
+                            w.u64(*ptr);
+                            w.usize(*size);
+                        }
+                        g.check()?;
+                        inter.send_with_id(slot, TAG_BASIC_INFO, 0, &w.finish())?;
+                        // 2-4. the segments (serialized image).
+                        g.check()?;
+                        inter.send_with_id(slot, TAG_IMAGE, 0, &my_image.to_bytes())?;
+                    }
+                    Ok(None)
+                }
+                Role::Rep => {
+                    let inter = st.comms.cmp_rep_inter.as_ref().expect("rep => intercomm");
+                    // 1. basic info — lets the replica pre-plan (we verify
+                    // it against the image for protocol integrity).
+                    let info_raw = g.recv_inter(inter, me_app, TAG_BASIC_INFO)?;
+                    let mut r = ByteReader::new(&info_raw.data);
+                    let data_len = r.usize();
+                    let stack_len = r.usize();
+                    let nchunks = r.usize();
+                    // 2-4. transfer the segments onto my own image.
+                    let img_raw = g.recv_inter(inter, me_app, TAG_IMAGE)?;
+                    let source = ProcessImage::from_bytes(&img_raw.data);
+                    assert_eq!(source.data.len(), data_len, "basic info mismatch");
+                    assert_eq!(source.stack.bytes.len(), stack_len);
+                    assert_eq!(source.heap.nchunks(), nchunks);
+                    let mut target = my_image.clone();
+                    let stats = transfer(&source, &mut target);
+                    Ok(Some((stats, target)))
+                }
+            }
+        });
+
+        match stats {
+            Some((stats, target)) => {
+                *state = T::restore(&target);
+                Some(stats)
+            }
+            None => None,
+        }
+    }
+}
+
+/// Blanket impl so plain byte-blob states can be replicated in tests and
+/// simple examples: the blob lives in a single heap chunk.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct BlobState(pub Vec<u8>);
+
+impl Replicable for BlobState {
+    fn capture(&self) -> ProcessImage {
+        let mut img = ProcessImage::new();
+        img.data.define("blob_len", &(self.0.len() as u64).to_le_bytes());
+        let addr = img.heap.alloc(0x10, self.0.len());
+        img.heap.chunk_mut(addr).data.copy_from_slice(&self.0);
+        img.stack.setjmp(0, 0);
+        img
+    }
+
+    fn restore(img: &ProcessImage) -> Self {
+        let len = img.data.read_u64("blob_len") as usize;
+        let chunk = img.heap.chunk_by_ptr(0x10).expect("blob chunk");
+        assert_eq!(chunk.data.len(), len);
+        BlobState(chunk.data.clone())
+    }
+}
+

@@ -1,0 +1,481 @@
+//! End-to-end tests of the PartRePer library over the simulated cluster:
+//! clean runs, replica deaths, promotions, interruptions, and message
+//! recovery — the §V/§VI behaviours, exercised through the public API.
+
+use std::sync::Arc;
+
+use crate::config::JobConfig;
+use crate::empi::{DType, ReduceOp};
+use crate::procmgr::{launch_job, RankOutcome};
+use crate::util::{u64s_from_bytes, u64s_to_bytes};
+
+use super::replicate::BlobState;
+use super::{PartReper, Role};
+
+/// Deterministic mini-app: `iters` rounds of (ring send/recv + allreduce).
+/// Returns the final accumulated value — identical on every rank, and
+/// computable in closed form, so survivors can be checked exactly.
+fn ring_allreduce_app(pr: &PartReper, iters: u64) -> u64 {
+    let n = pr.size() as u64;
+    let me = pr.rank() as u64;
+    let mut acc = 0u64;
+    for it in 0..iters {
+        let next = ((me + 1) % n) as usize;
+        let prev = ((me + n - 1) % n) as usize;
+        let token = me * 1000 + it;
+        pr.send(next, 7, &u64s_to_bytes(&[token]));
+        let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+        // got = prev*1000 + it
+        let sum = u64s_from_bytes(&pr.allreduce(
+            DType::U64,
+            ReduceOp::Sum,
+            &u64s_to_bytes(&[got]),
+        ))[0];
+        acc = acc.wrapping_add(sum);
+    }
+    pr.finalize();
+    acc
+}
+
+/// Closed form of the app's result.
+fn expected(n: u64, iters: u64) -> u64 {
+    let rank_sum = n * (n - 1) / 2;
+    (0..iters).fold(0u64, |acc, it| {
+        acc.wrapping_add(rank_sum * 1000 + n * it)
+    })
+}
+
+fn run(cfg: &JobConfig, iters: u64) -> Vec<RankOutcome<u64>> {
+    launch_job(cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        Ok(ring_allreduce_app(&pr, iters))
+    })
+    .outcomes
+}
+
+#[test]
+fn clean_run_zero_replication() {
+    let cfg = JobConfig::new(4, 0.0);
+    let out = run(&cfg, 5);
+    let want = expected(4, 5);
+    for o in &out {
+        match o {
+            RankOutcome::Done(v) => assert_eq!(*v, want),
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+#[test]
+fn clean_run_full_replication_replicas_agree() {
+    let cfg = JobConfig::new(4, 100.0);
+    let out = run(&cfg, 5);
+    assert_eq!(out.len(), 8);
+    let want = expected(4, 5);
+    for o in &out {
+        match o {
+            RankOutcome::Done(v) => assert_eq!(*v, want),
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+#[test]
+fn clean_run_partial_replication() {
+    for pct in [25.0, 50.0] {
+        let cfg = JobConfig::new(8, pct);
+        let out = run(&cfg, 4);
+        let want = expected(8, 4);
+        assert_eq!(out.len(), cfg.nprocs());
+        for o in &out {
+            match o {
+                RankOutcome::Done(v) => assert_eq!(*v, want),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn roles_and_app_ranks() {
+    let cfg = JobConfig::new(4, 50.0); // ranks 0..4 comp, 4..6 reps of 0,1
+    let report = launch_job(&cfg, |ctx| {
+        let rank = ctx.rank;
+        let pr = PartReper::init(ctx);
+        let out = (rank, pr.role(), pr.rank(), pr.size());
+        pr.finalize();
+        Ok(out)
+    });
+    for o in &report.outcomes {
+        let (fabric, role, app, size) = match o {
+            RankOutcome::Done(v) => *v,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(size, 4);
+        if fabric < 4 {
+            assert_eq!(role, Role::Comp);
+            assert_eq!(app, fabric);
+        } else {
+            assert_eq!(role, Role::Rep);
+            assert_eq!(app, fabric - 4);
+        }
+    }
+}
+
+#[test]
+fn initial_replication_copies_state() {
+    let cfg = JobConfig::new(3, 100.0);
+    let report = launch_job(&cfg, |ctx| {
+        let rank = ctx.rank;
+        let pr = PartReper::init(ctx);
+        // Comp ranks have real data; replicas start empty.
+        let mut state = if rank < 3 {
+            BlobState(vec![rank as u8; 64 + rank])
+        } else {
+            BlobState(Vec::new())
+        };
+        let stats = pr.replicate(&mut state);
+        pr.finalize();
+        Ok((rank, state, stats.is_some()))
+    });
+    for o in &report.outcomes {
+        let (rank, state, got_stats) = match o {
+            RankOutcome::Done(v) => v.clone(),
+            other => panic!("{other:?}"),
+        };
+        let mirror = rank % 3;
+        assert_eq!(state.0, vec![mirror as u8; 64 + mirror], "rank {rank}");
+        assert_eq!(got_stats, rank >= 3);
+    }
+}
+
+#[test]
+fn replica_death_is_transparent() {
+    // Kill the replica of comp 1 (fabric rank 5) mid-run: all comps and
+    // the remaining replicas must finish with correct results.
+    let cfg = JobConfig::new(4, 50.0); // fabric 4=rep(0), 5=rep(1)
+    let iters = 8;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let me = pr.rank() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 5 && it == 3 {
+                procs.poison(5); // suicide at iteration 3
+            }
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        pr.finalize();
+        Ok(acc)
+    });
+    let want = expected(4, iters);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (5, RankOutcome::Killed) => {}
+            (5, other) => panic!("victim: {other:?}"),
+            (_, RankOutcome::Done(v)) => assert_eq!(*v, want, "rank {r}"),
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    assert!(crate::metrics::Counters::get(&totals.error_handler_entries) > 0);
+    assert!(crate::metrics::Counters::get(&totals.replica_drops) > 0);
+}
+
+#[test]
+fn comp_death_promotes_replica() {
+    // Kill comp 1 (fabric 1): its replica (fabric 5) must be promoted and
+    // every survivor must still compute the correct final value.
+    let cfg = JobConfig::new(4, 50.0);
+    let iters = 8;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 1 && it == 4 {
+                procs.poison(1);
+            }
+            let me = pr.rank() as u64; // may have been promoted: re-read
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        let out = (acc, pr.role(), pr.generation());
+        pr.finalize();
+        Ok(out)
+    });
+    let want = expected(4, iters);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (1, RankOutcome::Killed) => {}
+            (1, other) => panic!("victim: {other:?}"),
+            (_, RankOutcome::Done((v, role, generation))) => {
+                assert_eq!(*v, want, "rank {r}");
+                assert!(*generation >= 1, "rank {r} never repaired");
+                if r == 5 {
+                    assert_eq!(*role, Role::Comp, "replica must be promoted");
+                }
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    assert_eq!(crate::metrics::Counters::get(&totals.promotions), 1);
+}
+
+#[test]
+fn unreplicated_comp_death_interrupts_job() {
+    // Comp 3 has no replica at 25% on 4 comps (only comp 0 replicated).
+    let cfg = JobConfig::new(4, 25.0);
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let me = pr.rank() as u64;
+        for it in 0..10u64 {
+            if rank == 3 && it == 2 {
+                procs.poison(3);
+            }
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[it]));
+            pr.recv(prev, 7);
+            pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[it]));
+        }
+        pr.finalize();
+        Ok(())
+    });
+    let mut interrupted = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (3, RankOutcome::Killed) => {}
+            (_, RankOutcome::Interrupted { dead_rank }) => {
+                assert_eq!(*dead_rank, 3);
+                interrupted += 1;
+            }
+            (_, RankOutcome::Done(())) => panic!("rank {r} finished impossibly"),
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    assert_eq!(interrupted, 4, "all survivors must observe interruption");
+}
+
+#[test]
+fn multiple_sequential_failures_survive_at_full_replication() {
+    // Kill two different comps at different iterations; 100% replication
+    // must ride both out.
+    let cfg = JobConfig::new(4, 100.0);
+    let iters = 12;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 0 && it == 3 {
+                procs.poison(0);
+            }
+            if rank == 2 && it == 7 {
+                procs.poison(2);
+            }
+            let me = pr.rank() as u64;
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        pr.finalize();
+        Ok(acc)
+    });
+    let want = expected(4, iters);
+    let mut done = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (0, RankOutcome::Killed) | (2, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done(v)) => {
+                assert_eq!(*v, want, "rank {r}");
+                done += 1;
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    assert_eq!(done, 6);
+    let totals = report.total_counters();
+    assert_eq!(crate::metrics::Counters::get(&totals.promotions), 2);
+}
+
+#[test]
+fn p2p_heavy_exchange_with_comp_death() {
+    // Exercise message recovery: a comp dies between rounds of pairwise
+    // exchange with piggybacked ids; survivors must finish consistently.
+    let cfg = JobConfig::new(4, 100.0);
+    let iters = 10;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let mut sum = 0u64;
+        for it in 0..iters {
+            if rank == 1 && it == 5 {
+                procs.poison(1);
+            }
+            let me = pr.rank();
+            // Exchange with every other rank (deterministic sweep order).
+            for other in 0..n {
+                if other == me {
+                    continue;
+                }
+                pr.send(other, 11, &u64s_to_bytes(&[(me as u64) << 32 | it]));
+            }
+            for other in 0..n {
+                if other == me {
+                    continue;
+                }
+                let v = u64s_from_bytes(&pr.recv(other, 11))[0];
+                assert_eq!(v, (other as u64) << 32 | it, "round {it}");
+                sum = sum.wrapping_add(v);
+            }
+        }
+        pr.finalize();
+        Ok(sum)
+    });
+    // Expected sum for app rank k: Σ_it Σ_{other≠k} (other<<32 | it).
+    let expect_for = |k: u64| -> u64 {
+        (0..iters)
+            .flat_map(|it| (0..4u64).filter(move |&o| o != k).map(move |o| o << 32 | it))
+            .fold(0u64, u64::wrapping_add)
+    };
+    let mut done = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        let app = (r % 4) as u64; // fabric 4..7 are replicas of 0..3
+        match (r, o) {
+            (1, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done(v)) => {
+                done += 1;
+                assert_eq!(*v, expect_for(app), "rank {r}");
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    assert_eq!(done, 7);
+}
+
+#[test]
+fn log_stats_mirror_between_comp_and_rep() {
+    let cfg = JobConfig::new(2, 100.0);
+    let report = launch_job(&cfg, |ctx| {
+        let pr = PartReper::init(ctx);
+        let other = 1 - pr.rank();
+        for _ in 0..3 {
+            pr.send(other, 1, b"x");
+            pr.recv(other, 1);
+            pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[1]));
+        }
+        let stats = pr.log_stats();
+        pr.finalize();
+        Ok(stats)
+    });
+    let stats: Vec<_> = report
+        .outcomes
+        .iter()
+        .map(|o| match o {
+            RankOutcome::Done(s) => *s,
+            other => panic!("{other:?}"),
+        })
+        .collect();
+    // comp 0 vs its replica (fabric 2) log identical counts.
+    assert_eq!(stats[0], stats[2]);
+    assert_eq!(stats[1], stats[3]);
+    // 3 sends, 3 receives, 3 collectives each.
+    assert_eq!(stats[0], (3, 3, 3));
+}
+
+#[test]
+fn weibull_injector_end_to_end_survivable() {
+    // Full replication + aggressive injector restricted to comp ranks:
+    // the job must either complete or be interrupted only when both
+    // copies of a rank die — with 100% replication and max_failures=2,
+    // completion is guaranteed unless both incarnations of the same rank
+    // are hit (possible but rare with 8 procs; seed chosen to avoid it).
+    use crate::faults::FaultInjector;
+    let mut cfg = JobConfig::new(4, 100.0);
+    cfg.faults.enabled = true;
+    cfg.faults.weibull_shape = 1.0;
+    cfg.faults.weibull_scale_s = 0.02;
+    cfg.faults.max_failures = 2;
+    cfg.faults.seed = 3;
+
+    let cfg2 = cfg.clone();
+    let world_probe: Arc<std::sync::Mutex<Option<FaultInjector>>> =
+        Arc::new(std::sync::Mutex::new(None));
+    let probe2 = world_probe.clone();
+    let report = launch_job(&cfg, move |ctx| {
+        // First rank to arrive starts the injector (needs procs handle).
+        if ctx.rank == 0 {
+            let inj = FaultInjector::start(
+                cfg2.faults,
+                ctx.procs.clone(),
+                vec![ctx.empi_fabric.clone(), ctx.ompi_fabric.clone()],
+                (0..cfg2.nprocs()).collect(),
+            );
+            *probe2.lock().unwrap() = Some(inj);
+        }
+        let pr = PartReper::init(ctx);
+        Ok(ring_allreduce_app(&pr, 30))
+    });
+    drop(world_probe.lock().unwrap().take());
+    let want = expected(4, 30);
+    let mut done = 0;
+    let mut killed = 0;
+    let mut interrupted = 0;
+    for o in &report.outcomes {
+        match o {
+            RankOutcome::Done(v) => {
+                assert_eq!(*v, want);
+                done += 1;
+            }
+            RankOutcome::Killed => killed += 1,
+            RankOutcome::Interrupted { .. } => interrupted += 1,
+            RankOutcome::Error(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(killed <= 2);
+    // Either everyone else finished, or the job was (legitimately)
+    // interrupted because both incarnations of one rank died.
+    assert!(
+        done + killed + interrupted == report.outcomes.len(),
+        "done={done} killed={killed} interrupted={interrupted}"
+    );
+    assert!(done > 0 || interrupted > 0);
+}

@@ -1,0 +1,141 @@
+//! The full process image and the application hook.
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+use super::segments::{DataSegment, HeapSegment, StackSegment};
+
+/// A complete simulated process image: the three segments plus the list of
+/// data-segment symbols that must be *preserved* in the target across a
+/// transfer (the paper's "custom communicators and dynamic library
+/// references" that are stashed in temporaries and restored, §III-A-1).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProcessImage {
+    pub data: DataSegment,
+    pub heap: HeapSegment,
+    pub stack: StackSegment,
+    pub preserved_symbols: Vec<String>,
+}
+
+impl ProcessImage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark a data-segment symbol as target-local (not overwritten by a
+    /// transfer): communicator handles, dylib handles, rank identity.
+    pub fn preserve(&mut self, symbol: &str) {
+        if !self.preserved_symbols.iter().any(|s| s == symbol) {
+            self.preserved_symbols.push(symbol.to_string());
+        }
+    }
+
+    /// The "basic information" block sent before the segment transfers:
+    /// jmp_buf, heap chunk addresses+sizes, segment address ranges
+    /// (§III-A). Used by the target to pre-plan the transfer.
+    pub fn basic_info(&self) -> BasicInfo {
+        BasicInfo {
+            data_len: self.data.len(),
+            heap_chunks: self
+                .heap
+                .chunks()
+                .iter()
+                .map(|c| (c.addr, c.ptr_addr, c.data.len()))
+                .collect(),
+            stack_len: self.stack.bytes.len(),
+            jmpbuf: self.stack.jmpbuf,
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        self.data.encode(&mut w);
+        self.heap.encode(&mut w);
+        self.stack.encode(&mut w);
+        w.usize(self.preserved_symbols.len());
+        for s in &self.preserved_symbols {
+            w.str(s);
+        }
+        w.finish()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Self {
+        let mut r = ByteReader::new(buf);
+        let data = DataSegment::decode(&mut r);
+        let heap = HeapSegment::decode(&mut r);
+        let stack = StackSegment::decode(&mut r);
+        let n = r.usize();
+        let preserved_symbols = (0..n).map(|_| r.str()).collect();
+        Self {
+            data,
+            heap,
+            stack,
+            preserved_symbols,
+        }
+    }
+}
+
+/// The pre-transfer metadata block (§III-A "basic information").
+#[derive(Clone, Debug, PartialEq)]
+pub struct BasicInfo {
+    pub data_len: usize,
+    /// (chunk addr, pointer addr, size) per chunk, in allocation order.
+    pub heap_chunks: Vec<(u64, u64, usize)>,
+    pub stack_len: usize,
+    pub jmpbuf: super::segments::JmpBuf,
+}
+
+/// Application hook: how a rank's live state maps into a process image and
+/// back. Implemented by every benchmark app; PartRePer replication captures
+/// on computational ranks and restores on replicas.
+pub trait Replicable {
+    /// Capture the current state into an image (the `setjmp` + segment
+    /// snapshot of §III-A).
+    fn capture(&self) -> ProcessImage;
+
+    /// Rebuild state from a transferred image (the post-`longjmp` world).
+    fn restore(img: &ProcessImage) -> Self;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ProcessImage {
+        let mut img = ProcessImage::new();
+        img.data.define("iter", &7u64.to_le_bytes());
+        img.data.define("comm_handle", &0xDEADu64.to_le_bytes());
+        img.preserve("comm_handle");
+        let c = img.heap.alloc(0x100, 40);
+        img.heap.chunk_mut(c).data[3] = 9;
+        img.stack.bytes = vec![4; 64];
+        img.stack.setjmp(7, 2);
+        img
+    }
+
+    #[test]
+    fn image_roundtrip() {
+        let img = sample();
+        let back = ProcessImage::from_bytes(&img.to_bytes());
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn basic_info_contents() {
+        let img = sample();
+        let info = img.basic_info();
+        assert_eq!(info.data_len, 16);
+        assert_eq!(info.heap_chunks.len(), 1);
+        assert_eq!(info.heap_chunks[0].2, 40);
+        assert_eq!(info.stack_len, 64);
+        assert_eq!(info.jmpbuf.regs[0], 7);
+    }
+
+    #[test]
+    fn preserve_is_idempotent() {
+        let mut img = ProcessImage::new();
+        img.data.define("h", &[0; 8]);
+        img.preserve("h");
+        img.preserve("h");
+        assert_eq!(img.preserved_symbols.len(), 1);
+    }
+}

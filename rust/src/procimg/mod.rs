@@ -1,0 +1,25 @@
+//! Process-image replication (§III-A).
+//!
+//! The paper replicates a process Condor-style: transfer the **data
+//! segment** (equalised with `sbrk`, with to-be-preserved variables saved
+//! to temporaries and restored), the **heap segment** (a malloc-wrapper
+//! chunk registry; transfer = match chunk count → match chunk sizes →
+//! update pointers, Fig 1), and the **stack segment** (`setjmp`, migrate
+//! the stack pointer to a safe area, copy, `longjmp`, Fig 2).
+//!
+//! We reproduce the *procedure* over a simulated address space: a
+//! [`ProcessImage`] owns the three segments, and [`transfer`] implements
+//! the exact step sequence — including the mismatch-repair branches — so
+//! every decision point in Fig 1/Fig 2 is executable and testable. The
+//! PartRePer layer moves serialized images over `EMPI_CMP_REP_INTERCOMM`
+//! and applies them on replicas; applications plug in via the
+//! [`Replicable`] trait (their arrays live in heap chunks, their counters
+//! in the data segment, their control state in the stack's resume token).
+
+pub mod image;
+pub mod segments;
+pub mod transfer;
+
+pub use image::{ProcessImage, Replicable};
+pub use segments::{Chunk, DataSegment, HeapSegment, JmpBuf, StackSegment};
+pub use transfer::{transfer, TransferStats};

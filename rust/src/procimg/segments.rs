@@ -1,0 +1,412 @@
+//! The three simulated segments of a process image.
+
+use std::collections::HashMap;
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Data segment: one contiguous brk-managed byte region plus a symbol
+/// table. Covers both initialized data and bss (the paper tracks the bss
+/// end address; we track `len`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DataSegment {
+    bytes: Vec<u8>,
+    /// symbol -> (offset, len)
+    symbols: HashMap<String, (usize, usize)>,
+}
+
+impl DataSegment {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total segment size ("current brk").
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Grow/shrink the segment — the `sbrk` equalisation step of §III-A-1.
+    pub fn sbrk_to(&mut self, len: usize) {
+        self.bytes.resize(len, 0);
+    }
+
+    /// Define a symbol at the end of the segment, growing it.
+    pub fn define(&mut self, name: &str, init: &[u8]) {
+        let off = self.bytes.len();
+        self.bytes.extend_from_slice(init);
+        self.symbols.insert(name.to_string(), (off, init.len()));
+    }
+
+    pub fn read(&self, name: &str) -> Option<&[u8]> {
+        let &(off, len) = self.symbols.get(name)?;
+        Some(&self.bytes[off..off + len])
+    }
+
+    pub fn write(&mut self, name: &str, value: &[u8]) {
+        let &(off, len) = self
+            .symbols
+            .get(name)
+            .unwrap_or_else(|| panic!("undefined symbol {name}"));
+        assert_eq!(len, value.len(), "symbol {name} size mismatch");
+        self.bytes[off..off + len].copy_from_slice(value);
+    }
+
+    pub fn read_u64(&self, name: &str) -> u64 {
+        u64::from_le_bytes(self.read(name).expect("symbol").try_into().unwrap())
+    }
+
+    pub fn write_u64(&mut self, name: &str, v: u64) {
+        self.write(name, &v.to_le_bytes());
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn raw_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.bytes
+    }
+
+    pub fn symbols(&self) -> &HashMap<String, (usize, usize)> {
+        &self.symbols
+    }
+
+    pub fn symbols_mut(&mut self) -> &mut HashMap<String, (usize, usize)> {
+        &mut self.symbols
+    }
+
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.bytes(&self.bytes);
+        w.usize(self.symbols.len());
+        let mut names: Vec<&String> = self.symbols.keys().collect();
+        names.sort();
+        for name in names {
+            let (off, len) = self.symbols[name];
+            w.str(name);
+            w.usize(off);
+            w.usize(len);
+        }
+    }
+
+    pub fn decode(r: &mut ByteReader) -> Self {
+        let bytes = r.bytes().to_vec();
+        let n = r.usize();
+        let mut symbols = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str();
+            let off = r.usize();
+            let len = r.usize();
+            symbols.insert(name, (off, len));
+        }
+        Self { bytes, symbols }
+    }
+}
+
+/// One heap chunk as tracked by the paper's malloc wrapper: the chunk's
+/// (simulated) start address, the address of the *pointer to it*, and its
+/// payload. The linked list of Fig 1 is the `Vec` in [`HeapSegment`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Chunk {
+    /// Simulated chunk start address (unique per allocation, per process).
+    pub addr: u64,
+    /// Simulated address of the pointer variable referring to this chunk.
+    pub ptr_addr: u64,
+    pub data: Vec<u8>,
+}
+
+/// Heap segment: the malloc-wrapper registry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeapSegment {
+    chunks: Vec<Chunk>,
+    next_addr: u64,
+}
+
+impl Default for HeapSegment {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Base of the simulated heap address range. Each heap instance starts at
+/// a distinct offset (ASLR analogue) — the paper is explicit that replica
+/// data "might be loaded from and stored at different addresses", and the
+/// pointer-update step of the transfer depends on that being true.
+const HEAP_BASE: u64 = 0x5600_0000_0000;
+static HEAP_ASLR: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+impl HeapSegment {
+    pub fn new() -> Self {
+        let slide = HEAP_ASLR.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Self {
+            chunks: Vec::new(),
+            next_addr: HEAP_BASE + slide * 0x10_0000,
+        }
+    }
+
+    /// malloc-wrapper record: allocate a chunk and remember the pointer
+    /// location that refers to it. Returns the chunk address.
+    pub fn alloc(&mut self, ptr_addr: u64, size: usize) -> u64 {
+        let addr = self.next_addr;
+        self.next_addr += (size as u64 + 15) & !15; // 16-aligned like malloc
+        self.chunks.push(Chunk {
+            addr,
+            ptr_addr,
+            data: vec![0; size],
+        });
+        addr
+    }
+
+    /// free-wrapper record: drop the chunk at `addr`.
+    pub fn free(&mut self, addr: u64) {
+        let pos = self
+            .chunks
+            .iter()
+            .position(|c| c.addr == addr)
+            .unwrap_or_else(|| panic!("free of unknown chunk {addr:#x}"));
+        self.chunks.remove(pos);
+    }
+
+    /// realloc-wrapper record.
+    pub fn realloc(&mut self, addr: u64, size: usize) {
+        let c = self.chunk_mut(addr);
+        c.data.resize(size, 0);
+    }
+
+    pub fn nchunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn chunks(&self) -> &[Chunk] {
+        &self.chunks
+    }
+
+    pub fn chunks_mut(&mut self) -> &mut Vec<Chunk> {
+        &mut self.chunks
+    }
+
+    pub fn chunk(&self, addr: u64) -> &Chunk {
+        self.chunks
+            .iter()
+            .find(|c| c.addr == addr)
+            .unwrap_or_else(|| panic!("unknown chunk {addr:#x}"))
+    }
+
+    pub fn chunk_mut(&mut self, addr: u64) -> &mut Chunk {
+        self.chunks
+            .iter_mut()
+            .find(|c| c.addr == addr)
+            .unwrap_or_else(|| panic!("unknown chunk {addr:#x}"))
+    }
+
+    /// Chunk by the *pointer* that refers to it (how app code navigates
+    /// after a transfer rewrote addresses).
+    pub fn chunk_by_ptr(&self, ptr_addr: u64) -> Option<&Chunk> {
+        self.chunks.iter().find(|c| c.ptr_addr == ptr_addr)
+    }
+
+    pub fn chunk_by_ptr_mut(&mut self, ptr_addr: u64) -> Option<&mut Chunk> {
+        self.chunks.iter_mut().find(|c| c.ptr_addr == ptr_addr)
+    }
+
+    pub(crate) fn fresh_addr(&mut self, size: usize) -> u64 {
+        let addr = self.next_addr;
+        self.next_addr += (size as u64 + 15) & !15;
+        addr
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.data.len()).sum()
+    }
+
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.usize(self.chunks.len());
+        for c in &self.chunks {
+            w.u64(c.addr);
+            w.u64(c.ptr_addr);
+            w.bytes(&c.data);
+        }
+        w.u64(self.next_addr);
+    }
+
+    pub fn decode(r: &mut ByteReader) -> Self {
+        let n = r.usize();
+        let mut chunks = Vec::with_capacity(n);
+        for _ in 0..n {
+            let addr = r.u64();
+            let ptr_addr = r.u64();
+            let data = r.bytes().to_vec();
+            chunks.push(Chunk {
+                addr,
+                ptr_addr,
+                data,
+            });
+        }
+        let next_addr = r.u64();
+        Self { chunks, next_addr }
+    }
+}
+
+/// The saved calling environment (`jmp_buf`): stack pointer, frame pointer,
+/// program counter and callee-saved registers — what `setjmp` captures and
+/// `longjmp` restores (Fig 2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JmpBuf {
+    pub sp: u64,
+    pub fp: u64,
+    pub pc: u64,
+    pub regs: [u64; 6],
+}
+
+/// Stack segment: raw bytes plus the jmp_buf and the application-level
+/// resume token (which loop iteration / phase to continue from — the
+/// semantic content of the restored control state).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StackSegment {
+    pub bytes: Vec<u8>,
+    pub jmpbuf: JmpBuf,
+    /// App-level continuation: (step, phase) the restored process resumes
+    /// at. What `longjmp` achieves in the paper, made explicit.
+    pub resume_step: u64,
+    pub resume_phase: u64,
+}
+
+impl StackSegment {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `setjmp` analogue: capture the current control state.
+    pub fn setjmp(&mut self, step: u64, phase: u64) -> JmpBuf {
+        self.jmpbuf = JmpBuf {
+            sp: 0x7FFC_0000_0000 - self.bytes.len() as u64,
+            fp: 0x7FFC_0000_0000,
+            pc: 0x40_0000 + step, // synthetic; distinguishes capture points
+            regs: [step, phase, 0, 0, 0, 0],
+        };
+        self.resume_step = step;
+        self.resume_phase = phase;
+        self.jmpbuf
+    }
+
+    /// `longjmp` analogue: return the control state to resume from.
+    pub fn longjmp(&self) -> (u64, u64) {
+        (self.resume_step, self.resume_phase)
+    }
+
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.bytes(&self.bytes);
+        w.u64(self.jmpbuf.sp);
+        w.u64(self.jmpbuf.fp);
+        w.u64(self.jmpbuf.pc);
+        for r in self.jmpbuf.regs {
+            w.u64(r);
+        }
+        w.u64(self.resume_step);
+        w.u64(self.resume_phase);
+    }
+
+    pub fn decode(r: &mut ByteReader) -> Self {
+        let bytes = r.bytes().to_vec();
+        let jmpbuf = JmpBuf {
+            sp: r.u64(),
+            fp: r.u64(),
+            pc: r.u64(),
+            regs: [r.u64(), r.u64(), r.u64(), r.u64(), r.u64(), r.u64()],
+        };
+        let resume_step = r.u64();
+        let resume_phase = r.u64();
+        Self {
+            bytes,
+            jmpbuf,
+            resume_step,
+            resume_phase,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_segment_symbols() {
+        let mut d = DataSegment::new();
+        d.define("counter", &0u64.to_le_bytes());
+        d.define("name", b"cg");
+        d.write_u64("counter", 41);
+        assert_eq!(d.read_u64("counter"), 41);
+        assert_eq!(d.read("name").unwrap(), b"cg");
+        assert_eq!(d.len(), 10);
+    }
+
+    #[test]
+    fn sbrk_grows_and_shrinks() {
+        let mut d = DataSegment::new();
+        d.define("x", &[1, 2, 3, 4]);
+        d.sbrk_to(100);
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.read("x").unwrap(), &[1, 2, 3, 4]);
+        d.sbrk_to(4);
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn heap_alloc_free_tracking() {
+        let mut h = HeapSegment::new();
+        let a = h.alloc(0x1000, 32);
+        let b = h.alloc(0x1008, 64);
+        assert_eq!(h.nchunks(), 2);
+        assert_eq!(h.total_bytes(), 96);
+        assert_ne!(a, b);
+        h.chunk_mut(a).data[0] = 0xAA;
+        assert_eq!(h.chunk(a).data[0], 0xAA);
+        h.free(a);
+        assert_eq!(h.nchunks(), 1);
+        assert!(h.chunk_by_ptr(0x1008).is_some());
+        assert!(h.chunk_by_ptr(0x1000).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_free_panics() {
+        let mut h = HeapSegment::new();
+        let a = h.alloc(0x1, 8);
+        h.free(a);
+        h.free(a);
+    }
+
+    #[test]
+    fn setjmp_longjmp_roundtrip() {
+        let mut s = StackSegment::new();
+        s.bytes = vec![7; 128];
+        let jb = s.setjmp(42, 3);
+        assert_eq!(jb.regs[0], 42);
+        assert_eq!(s.longjmp(), (42, 3));
+    }
+
+    #[test]
+    fn segment_encode_decode_roundtrip() {
+        let mut d = DataSegment::new();
+        d.define("a", &[9; 16]);
+        let mut h = HeapSegment::new();
+        let c = h.alloc(0x10, 24);
+        h.chunk_mut(c).data[5] = 1;
+        let mut s = StackSegment::new();
+        s.bytes = vec![1, 2, 3];
+        s.setjmp(5, 1);
+
+        let mut w = ByteWriter::new();
+        d.encode(&mut w);
+        h.encode(&mut w);
+        s.encode(&mut w);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(DataSegment::decode(&mut r), d);
+        assert_eq!(HeapSegment::decode(&mut r), h);
+        assert_eq!(StackSegment::decode(&mut r), s);
+        assert_eq!(r.remaining(), 0);
+    }
+}

@@ -1,0 +1,273 @@
+//! The §III-A transfer procedure, step by step.
+//!
+//! Source and target both participate: the source captured its image
+//! (`setjmp` + segments), the target *already has* an image of its own —
+//! with possibly different data-segment size, different heap chunk count
+//! and sizes, and its own local variables that must survive. The procedure:
+//!
+//! 1. **Data segment** — equalise total size with `sbrk`; stash the
+//!    target's preserved variables in temporaries; copy the source data
+//!    segment wholesale; restore the preserved variables.
+//! 2. **Heap segment** (Fig 1) — (a) match chunk *count*: free the
+//!    target's extras / allocate the missing; (b) match chunk *sizes*
+//!    (realloc); (c) copy payloads and update the *pointers*: the target's
+//!    pointer slots now refer to the target's own chunk addresses while
+//!    carrying the source's contents.
+//! 3. **Stack segment** (Fig 2) — with the target's control flow parked on
+//!    a safe area, copy the stack bytes and the jmp_buf; `longjmp` leaves
+//!    both processes at the source's capture point.
+
+use super::image::ProcessImage;
+
+/// What the transfer did — the harness reports these alongside replication
+/// cost, and the property tests assert the repair branches fire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Bytes the data-segment copy moved.
+    pub data_bytes: usize,
+    /// `sbrk` adjustment applied to the target (signed).
+    pub sbrk_delta: i64,
+    /// Chunks freed on the target (count-matching, target had extras).
+    pub chunks_freed: usize,
+    /// Chunks allocated on the target (count-matching, target was short).
+    pub chunks_allocated: usize,
+    /// Chunks resized (size-matching).
+    pub chunks_resized: usize,
+    /// Heap payload bytes copied.
+    pub heap_bytes: usize,
+    /// Pointer slots rewritten to target-local chunk addresses.
+    pub pointers_updated: usize,
+    /// Stack bytes copied.
+    pub stack_bytes: usize,
+}
+
+/// Run the full three-step transfer from `source` onto `target` in place.
+///
+/// After return, `target` is a replica: equal data/heap/stack contents and
+/// the same resume point, but heap chunk *addresses* remain target-local
+/// (the pointer-update step hides that, exactly as in the paper: "the data
+/// might be loaded from and stored at different addresses").
+pub fn transfer(source: &ProcessImage, target: &mut ProcessImage) -> TransferStats {
+    let mut stats = TransferStats::default();
+
+    // ---------------------------------------------- 1. data segment
+    let src_len = source.data.len();
+    let tgt_len = target.data.len();
+    stats.sbrk_delta = src_len as i64 - tgt_len as i64;
+    if src_len != tgt_len {
+        target.data.sbrk_to(src_len); // sbrk equalisation
+    }
+    // Stash preserved variables in "temporaries" (paper: saved on the
+    // stack of the target).
+    let preserved: Vec<(String, Vec<u8>)> = target
+        .preserved_symbols
+        .iter()
+        .filter_map(|name| {
+            target
+                .data
+                .read(name)
+                .map(|v| (name.clone(), v.to_vec()))
+        })
+        .collect();
+    // Wholesale copy of the source data segment (symbols come with it —
+    // the symbol table is our stand-in for the linker's fixed layout).
+    let src_raw = source.data.raw().to_vec();
+    target.data.raw_mut().copy_from_slice(&src_raw);
+    *target.data.symbols_mut() = source.data.symbols().clone();
+    stats.data_bytes = src_len;
+    // Restore preserved variables from the temporaries.
+    for (name, value) in preserved {
+        if target.data.read(&name).map(|v| v.len()) == Some(value.len()) {
+            target.data.write(&name, &value);
+        }
+    }
+
+    // ---------------------------------------------- 2. heap segment (Fig 1)
+    let src_chunks = source.heap.chunks().to_vec();
+    let n_src = src_chunks.len();
+    let n_tgt = target.heap.nchunks();
+
+    // (a) match chunk count.
+    if n_tgt > n_src {
+        // Free the target's extra chunks (from the tail, like Fig 1(b)).
+        let extras: Vec<u64> = target.heap.chunks()[n_src..]
+            .iter()
+            .map(|c| c.addr)
+            .collect();
+        for addr in extras {
+            target.heap.free(addr);
+            stats.chunks_freed += 1;
+        }
+    } else {
+        for c in src_chunks.iter().skip(n_tgt) {
+            // Allocate missing chunks at target-local addresses; the
+            // pointer slots are taken from the source record.
+            let size = c.data.len();
+            let addr = target.heap.fresh_addr(size);
+            target.heap.chunks_mut().push(super::segments::Chunk {
+                addr,
+                ptr_addr: c.ptr_addr,
+                data: vec![0; size],
+            });
+            stats.chunks_allocated += 1;
+        }
+    }
+
+    // (b) match chunk sizes, (c) copy payloads + update pointers.
+    for (i, src_c) in src_chunks.iter().enumerate() {
+        let tgt_c = &mut target.heap.chunks_mut()[i];
+        if tgt_c.data.len() != src_c.data.len() {
+            tgt_c.data.resize(src_c.data.len(), 0);
+            stats.chunks_resized += 1;
+        }
+        tgt_c.data.copy_from_slice(&src_c.data);
+        stats.heap_bytes += src_c.data.len();
+        if tgt_c.ptr_addr != src_c.ptr_addr {
+            // The pointer variable in the (copied) data/stack now must
+            // point at the target-local chunk: record the rewrite.
+            tgt_c.ptr_addr = src_c.ptr_addr;
+            stats.pointers_updated += 1;
+        } else {
+            stats.pointers_updated += 1; // every pointer is re-validated
+        }
+    }
+
+    // ---------------------------------------------- 3. stack segment (Fig 2)
+    target.stack.bytes = source.stack.bytes.clone();
+    target.stack.jmpbuf = source.stack.jmpbuf;
+    target.stack.resume_step = source.stack.resume_step;
+    target.stack.resume_phase = source.stack.resume_phase;
+    stats.stack_bytes = source.stack.bytes.len();
+
+    // The replica also inherits the preserved-symbol *list* (it is part of
+    // the program, not the data).
+    target.preserved_symbols = source.preserved_symbols.clone();
+
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn source_image() -> ProcessImage {
+        let mut img = ProcessImage::new();
+        img.data.define("iter", &123u64.to_le_bytes());
+        img.data.define("rank_id", &0u64.to_le_bytes());
+        img.preserve("rank_id");
+        let a = img.heap.alloc(0x100, 32);
+        img.heap.chunk_mut(a).data.copy_from_slice(&[0xA; 32]);
+        let b = img.heap.alloc(0x108, 64);
+        img.heap.chunk_mut(b).data.copy_from_slice(&[0xB; 64]);
+        img.stack.bytes = vec![0x5; 256];
+        img.stack.setjmp(123, 4);
+        img
+    }
+
+    #[test]
+    fn replica_matches_source_contents() {
+        let src = source_image();
+        let mut tgt = ProcessImage::new();
+        tgt.data.define("iter", &0u64.to_le_bytes());
+        tgt.data.define("rank_id", &9u64.to_le_bytes());
+        tgt.preserve("rank_id");
+        let stats = transfer(&src, &mut tgt);
+
+        // Data equal except the preserved symbol.
+        assert_eq!(tgt.data.read_u64("iter"), 123);
+        assert_eq!(tgt.data.read_u64("rank_id"), 9, "preserved symbol kept");
+        // Heap contents equal chunk-by-chunk.
+        assert_eq!(tgt.heap.nchunks(), 2);
+        for (s, t) in src.heap.chunks().iter().zip(tgt.heap.chunks()) {
+            assert_eq!(s.data, t.data);
+            assert_eq!(s.ptr_addr, t.ptr_addr);
+        }
+        // Control state resumes at the source's capture point.
+        assert_eq!(tgt.stack.longjmp(), (123, 4));
+        assert_eq!(tgt.stack.bytes, src.stack.bytes);
+        assert_eq!(stats.stack_bytes, 256);
+        assert_eq!(stats.heap_bytes, 96);
+    }
+
+    #[test]
+    fn count_matching_frees_extras() {
+        let src = source_image(); // 2 chunks
+        let mut tgt = ProcessImage::new();
+        tgt.data.sbrk_to(16);
+        for i in 0..5 {
+            tgt.heap.alloc(0x200 + i, 8);
+        }
+        let stats = transfer(&src, &mut tgt);
+        assert_eq!(stats.chunks_freed, 3);
+        assert_eq!(stats.chunks_allocated, 0);
+        assert_eq!(tgt.heap.nchunks(), 2);
+    }
+
+    #[test]
+    fn count_matching_allocates_missing() {
+        let src = source_image(); // 2 chunks
+        let mut tgt = ProcessImage::new();
+        tgt.data.sbrk_to(16);
+        let stats = transfer(&src, &mut tgt);
+        assert_eq!(stats.chunks_allocated, 2);
+        assert_eq!(stats.chunks_freed, 0);
+        assert_eq!(tgt.heap.nchunks(), 2);
+        assert_eq!(tgt.heap.chunks()[1].data, vec![0xB; 64]);
+    }
+
+    #[test]
+    fn size_matching_resizes() {
+        let src = source_image(); // sizes 32, 64
+        let mut tgt = ProcessImage::new();
+        tgt.data.sbrk_to(16);
+        tgt.heap.alloc(0x300, 8); // wrong size
+        tgt.heap.alloc(0x308, 64); // right size
+        let stats = transfer(&src, &mut tgt);
+        assert_eq!(stats.chunks_resized, 1);
+        assert_eq!(tgt.heap.chunks()[0].data.len(), 32);
+    }
+
+    #[test]
+    fn sbrk_equalisation_both_directions() {
+        let src = source_image();
+        let mut small = ProcessImage::new();
+        let s1 = transfer(&src, &mut small);
+        assert!(s1.sbrk_delta > 0);
+        assert_eq!(small.data.len(), src.data.len());
+
+        let mut big = ProcessImage::new();
+        big.data.sbrk_to(10_000);
+        let s2 = transfer(&src, &mut big);
+        assert!(s2.sbrk_delta < 0);
+        assert_eq!(big.data.len(), src.data.len());
+    }
+
+    #[test]
+    fn target_chunk_addresses_stay_local() {
+        // The replica's chunks live at its own addresses — only contents
+        // and pointer records match the source.
+        let src = source_image();
+        let mut tgt = ProcessImage::new();
+        tgt.data.sbrk_to(16);
+        let pre_alloc = tgt.heap.alloc(0x900, 128);
+        transfer(&src, &mut tgt);
+        // First chunk reuses target-local storage, not the source address.
+        assert_eq!(tgt.heap.chunks()[0].addr, pre_alloc);
+        assert_ne!(tgt.heap.chunks()[0].addr, src.heap.chunks()[0].addr);
+        // But navigation by pointer address finds the right contents.
+        let via_ptr = tgt.heap.chunk_by_ptr(0x100).unwrap();
+        assert_eq!(via_ptr.data, vec![0xA; 32]);
+    }
+
+    #[test]
+    fn transfer_is_idempotent() {
+        let src = source_image();
+        let mut tgt = ProcessImage::new();
+        transfer(&src, &mut tgt);
+        let snapshot = tgt.clone();
+        let stats = transfer(&src, &mut tgt);
+        assert_eq!(tgt, snapshot);
+        assert_eq!(stats.chunks_freed + stats.chunks_allocated, 0);
+        assert_eq!(stats.chunks_resized, 0);
+    }
+}

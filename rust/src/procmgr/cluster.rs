@@ -1,0 +1,79 @@
+//! Node/core layout of the simulated cluster.
+//!
+//! The paper's testbed: 29 nodes × 48 cores, Infiniband. Ranks are packed
+//! onto nodes in order (the default `hostfile` block mapping both mpiruns
+//! are given in §IV-D — the mapping must be *identical* for the two
+//! libraries, which is why it lives here, shared).
+
+/// Static node layout for one job.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    nprocs: usize,
+    cores_per_node: usize,
+}
+
+impl Cluster {
+    pub fn new(nprocs: usize, cores_per_node: usize) -> Self {
+        assert!(cores_per_node > 0);
+        Self {
+            nprocs,
+            cores_per_node,
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.nprocs
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.nprocs.div_ceil(self.cores_per_node)
+    }
+
+    /// Node hosting a fabric rank (block mapping).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.cores_per_node
+    }
+
+    /// All fabric ranks on `node`.
+    pub fn ranks_on(&self, node: usize) -> Vec<usize> {
+        let lo = node * self.cores_per_node;
+        let hi = ((node + 1) * self.cores_per_node).min(self.nprocs);
+        (lo..hi).collect()
+    }
+
+    /// Iterate (node, ranks) pairs.
+    pub fn nodes(&self) -> impl Iterator<Item = (usize, Vec<usize>)> + '_ {
+        (0..self.nnodes()).map(|n| (n, self.ranks_on(n)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layout_512_over_48() {
+        let c = Cluster::new(512, 48);
+        assert_eq!(c.nnodes(), 11);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(47), 0);
+        assert_eq!(c.node_of(48), 1);
+        assert_eq!(c.node_of(511), 10);
+        assert_eq!(c.ranks_on(10).len(), 512 - 10 * 48);
+    }
+
+    #[test]
+    fn ranks_on_partition_the_world() {
+        let c = Cluster::new(100, 16);
+        let mut all: Vec<usize> = c.nodes().flat_map(|(_, rs)| rs).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exact_fit() {
+        let c = Cluster::new(96, 48);
+        assert_eq!(c.nnodes(), 2);
+        assert_eq!(c.ranks_on(1), (48..96).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,408 @@
+//! Job launcher: turns a [`JobConfig`] into running rank threads plus the
+//! monitoring/server machinery, and joins everything into structured
+//! outcomes.
+//!
+//! Each rank runs inside `catch_unwind`: the cooperative-kill and
+//! job-interruption signals travel as typed panic payloads
+//! ([`RankKilled`]/[`JobInterrupted`]) and are converted back into
+//! [`RankOutcome`]s here — a real panic (bug) is re-reported as
+//! `Error`, never swallowed.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::cluster::Cluster;
+use super::monitor::Monitor;
+use super::servers::{EmpiServer, PrteServer};
+use crate::config::JobConfig;
+use crate::error::{CommError, JobError, JobInterrupted, RankKilled};
+use crate::fabric::{Fabric, ProcSet};
+use crate::metrics::{Counters, PhaseClock};
+use crate::ompi::{CommRegistry, FailureDetector};
+
+/// Job-wide abort latch (MPI_Abort analogue): set once by the first rank
+/// that discovers an unrecoverable failure (computational process without a
+/// live replica died); every other rank observes it at its next failure
+/// check and unwinds with the *same* trigger, so interruption reporting is
+/// deterministic rather than a cascade of secondary failures.
+#[derive(Default)]
+pub struct JobAbort {
+    dead_rank: std::sync::OnceLock<usize>,
+}
+
+impl JobAbort {
+    /// Latch the interruption trigger; returns the winning value (the
+    /// first trigger if already set).
+    pub fn trigger(&self, dead_rank: usize) -> usize {
+        *self.dead_rank.get_or_init(|| dead_rank)
+    }
+
+    pub fn get(&self) -> Option<usize> {
+        self.dead_rank.get().copied()
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.dead_rank.get().is_some()
+    }
+}
+
+/// Everything one rank's thread needs to build its MPI worlds.
+pub struct RankCtx {
+    /// Fabric rank (== eworld rank).
+    pub rank: usize,
+    pub cfg: Arc<JobConfig>,
+    pub procs: Arc<ProcSet>,
+    pub empi_fabric: Arc<Fabric>,
+    pub ompi_fabric: Arc<Fabric>,
+    pub detector: Arc<FailureDetector>,
+    pub registry: Arc<CommRegistry>,
+    pub prte: Arc<PrteServer>,
+    /// Pre-agreed world context ids (allocated before spawn).
+    pub empi_world_ctx: u64,
+    pub ompi_world_ctx: u64,
+    pub clock: Arc<PhaseClock>,
+    pub counters: Arc<Counters>,
+    pub abort: Arc<JobAbort>,
+}
+
+/// Terminal state of one rank.
+#[derive(Debug)]
+pub enum RankOutcome<T> {
+    /// Ran to completion.
+    Done(T),
+    /// Killed by the fault injector.
+    Killed,
+    /// Unwound because the job was interrupted (comp without replica died).
+    Interrupted { dead_rank: usize },
+    /// Application or protocol error (including timeouts).
+    Error(String),
+}
+
+impl<T> RankOutcome<T> {
+    pub fn is_done(&self) -> bool {
+        matches!(self, RankOutcome::Done(_))
+    }
+}
+
+/// Aggregated result of one job.
+pub struct JobHandles<T> {
+    pub outcomes: Vec<RankOutcome<T>>,
+    pub wall: Duration,
+    pub clocks: Vec<Arc<PhaseClock>>,
+    pub counters: Vec<Arc<Counters>>,
+    pub procs: Arc<ProcSet>,
+    pub empi_fabric: Arc<Fabric>,
+    pub ompi_fabric: Arc<Fabric>,
+    pub empi_server: Arc<EmpiServer>,
+    pub detector: Arc<FailureDetector>,
+}
+
+impl<T> JobHandles<T> {
+    /// Merge per-rank counters into one aggregate.
+    pub fn total_counters(&self) -> Counters {
+        let total = Counters::default();
+        for c in &self.counters {
+            total.merge(c);
+        }
+        total
+    }
+
+    /// Seconds spent in a phase, summed over ranks.
+    pub fn phase_seconds(&self, phase: crate::metrics::Phase) -> f64 {
+        self.clocks.iter().map(|c| c.seconds(phase)).sum()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.outcomes.iter().all(|o| o.is_done())
+    }
+
+    pub fn first_error(&self) -> Option<&str> {
+        self.outcomes.iter().find_map(|o| match o {
+            RankOutcome::Error(e) => Some(e.as_str()),
+            _ => None,
+        })
+    }
+}
+
+/// Shared infrastructure for one job, pre-spawn.
+pub struct JobWorld {
+    pub cfg: Arc<JobConfig>,
+    pub procs: Arc<ProcSet>,
+    pub empi_fabric: Arc<Fabric>,
+    pub ompi_fabric: Arc<Fabric>,
+    pub detector: Arc<FailureDetector>,
+    pub registry: Arc<CommRegistry>,
+    pub prte: Arc<PrteServer>,
+    pub empi_server: Arc<EmpiServer>,
+    pub empi_world_ctx: u64,
+    pub ompi_world_ctx: u64,
+    pub abort: Arc<JobAbort>,
+}
+
+impl JobWorld {
+    /// Build fabrics, servers and context ids for `cfg`.
+    pub fn build(cfg: &JobConfig) -> Self {
+        let cfg = Arc::new(cfg.clone());
+        let n = cfg.nprocs();
+        let cluster = Cluster::new(n, cfg.cores_per_node);
+        let procs = ProcSet::new(n);
+        let empi_fabric = Fabric::new("empi", procs.clone(), cfg.empi_net);
+        let ompi_fabric = Fabric::new("ompi", procs.clone(), cfg.ompi_net);
+        let detector = FailureDetector::new();
+        let registry = CommRegistry::new();
+        let prte = PrteServer::start(cluster.clone());
+        // PartRePer always launches with the waitpid/poll shim preloaded.
+        let empi_server = EmpiServer::new(cluster, true);
+        let empi_world_ctx = empi_fabric.alloc_ctx();
+        let ompi_world_ctx = ompi_fabric.alloc_ctx();
+        Self {
+            cfg,
+            procs,
+            empi_fabric,
+            ompi_fabric,
+            detector,
+            registry,
+            prte,
+            empi_server,
+            empi_world_ctx,
+            ompi_world_ctx,
+            abort: Arc::new(JobAbort::default()),
+        }
+    }
+
+    pub fn ctx_for(&self, rank: usize) -> RankCtx {
+        RankCtx {
+            rank,
+            cfg: self.cfg.clone(),
+            procs: self.procs.clone(),
+            empi_fabric: self.empi_fabric.clone(),
+            ompi_fabric: self.ompi_fabric.clone(),
+            detector: self.detector.clone(),
+            registry: self.registry.clone(),
+            prte: self.prte.clone(),
+            empi_world_ctx: self.empi_world_ctx,
+            ompi_world_ctx: self.ompi_world_ctx,
+            clock: Arc::new(PhaseClock::new()),
+            counters: Arc::new(Counters::default()),
+            abort: self.abort.clone(),
+        }
+    }
+}
+
+/// Cooperative kills and job interruptions travel as typed panics; they
+/// are *expected* control flow, so the default "thread panicked" banner is
+/// suppressed for exactly those payload types (anything else still prints).
+fn install_quiet_unwind_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            if payload.downcast_ref::<RankKilled>().is_some()
+                || payload.downcast_ref::<JobInterrupted>().is_some()
+            {
+                return; // expected unwind — silent
+            }
+            default(info);
+        }));
+    });
+}
+
+/// Launch `cfg.nprocs()` rank threads running `main`, with the PRTED
+/// monitor pumping failure detection, and join everything.
+pub fn launch_job<T, F>(cfg: &JobConfig, main: F) -> JobHandles<T>
+where
+    T: Send + 'static,
+    F: Fn(RankCtx) -> Result<T, JobError> + Send + Sync + 'static,
+{
+    install_quiet_unwind_hook();
+    let world = JobWorld::build(cfg);
+    let monitor = Monitor::start(
+        world.procs.clone(),
+        world.detector.clone(),
+        world.empi_server.clone(),
+    );
+    let main = Arc::new(main);
+    let start = Instant::now();
+
+    let mut clocks = Vec::with_capacity(world.cfg.nprocs());
+    let mut counters = Vec::with_capacity(world.cfg.nprocs());
+    let handles: Vec<_> = (0..world.cfg.nprocs())
+        .map(|rank| {
+            let ctx = world.ctx_for(rank);
+            clocks.push(ctx.clock.clone());
+            counters.push(ctx.counters.clone());
+            let procs = world.procs.clone();
+            let clock = ctx.clock.clone();
+            let main = Arc::clone(&main);
+            std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || {
+                    let result = catch_unwind(AssertUnwindSafe(|| main(ctx)));
+                    clock.finish();
+                    let outcome = match result {
+                        Ok(Ok(v)) => {
+                            // Graceful exit: not a failure, but the rank is
+                            // gone — FT protocols must skip it from now on.
+                            procs.set_finalized(rank);
+                            RankOutcome::Done(v)
+                        }
+                        Ok(Err(JobError::Comm(CommError::Killed { .. }))) => {
+                            procs.mark_dead(rank);
+                            RankOutcome::Killed
+                        }
+                        Ok(Err(e)) => {
+                            procs.mark_dead(rank);
+                            RankOutcome::Error(e.to_string())
+                        }
+                        Err(payload) => {
+                            procs.mark_dead(rank);
+                            if let Some(k) = payload.downcast_ref::<RankKilled>() {
+                                debug_assert_eq!(k.rank, rank);
+                                RankOutcome::Killed
+                            } else if let Some(i) = payload.downcast_ref::<JobInterrupted>() {
+                                RankOutcome::Interrupted {
+                                    dead_rank: i.dead_rank,
+                                }
+                            } else if let Some(s) = payload.downcast_ref::<String>() {
+                                RankOutcome::Error(format!("panic: {s}"))
+                            } else if let Some(s) = payload.downcast_ref::<&str>() {
+                                RankOutcome::Error(format!("panic: {s}"))
+                            } else {
+                                RankOutcome::Error("panic: <non-string payload>".into())
+                            }
+                        }
+                    };
+                    if std::env::var_os("PR_DEBUG").is_some() {
+                        let what = match &outcome {
+                            RankOutcome::Done(_) => "Done".to_string(),
+                            RankOutcome::Killed => "Killed".to_string(),
+                            RankOutcome::Interrupted { dead_rank } => {
+                                format!("Interrupted({dead_rank})")
+                            }
+                            RankOutcome::Error(e) => format!("Error({e})"),
+                        };
+                        eprintln!("[launcher] rank {rank} -> {what}");
+                    }
+                    outcome
+                })
+                .expect("spawn rank")
+        })
+        .collect();
+
+    let outcomes: Vec<RankOutcome<T>> = handles
+        .into_iter()
+        .map(|h| h.join().expect("rank thread must not die unjoined"))
+        .collect();
+    let wall = start.elapsed();
+    monitor.stop();
+
+    JobHandles {
+        outcomes,
+        wall,
+        clocks,
+        counters,
+        procs: world.procs,
+        empi_fabric: world.empi_fabric,
+        ompi_fabric: world.ompi_fabric,
+        empi_server: world.empi_server,
+        detector: world.detector,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::empi::Comm;
+
+    #[test]
+    fn all_ranks_run_and_return() {
+        let cfg = JobConfig::new(4, 0.0);
+        let report = launch_job(&cfg, |ctx| Ok(ctx.rank * 10));
+        assert!(report.all_done());
+        let vals: Vec<usize> = report
+            .outcomes
+            .iter()
+            .map(|o| match o {
+                RankOutcome::Done(v) => *v,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(vals, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn ranks_can_use_empi_world() {
+        let cfg = JobConfig::new(4, 0.0);
+        let report = launch_job(&cfg, |ctx| {
+            let comm = Comm::world(ctx.empi_fabric.clone(), ctx.empi_world_ctx, ctx.rank);
+            let sum = crate::empi::coll::allreduce(
+                &comm,
+                crate::empi::DType::U64,
+                crate::empi::ReduceOp::Sum,
+                &crate::util::u64s_to_bytes(&[ctx.rank as u64]),
+            )
+            .map_err(JobError::from)?;
+            Ok(crate::util::u64s_from_bytes(&sum)[0])
+        });
+        assert!(report.all_done());
+        for o in &report.outcomes {
+            match o {
+                RankOutcome::Done(v) => assert_eq!(*v, 6),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn killed_rank_reports_killed_and_marks_dead() {
+        let cfg = JobConfig::new(3, 0.0);
+        let report = launch_job(&cfg, |ctx| {
+            if ctx.rank == 1 {
+                ctx.procs.poison(1);
+                // next fabric op notices the poison
+                let comm = Comm::world(ctx.empi_fabric.clone(), ctx.empi_world_ctx, ctx.rank);
+                comm.send(0, 1, b"x").map_err(JobError::from)?;
+            }
+            Ok(())
+        });
+        assert!(matches!(report.outcomes[1], RankOutcome::Killed));
+        assert!(report.procs.is_dead(1));
+        assert!(report.outcomes[0].is_done());
+        // The monitor published it to ULFM before shutdown.
+        assert!(report.detector.is_known_failed(1));
+        // And the (shimmed) EMPI server never saw it.
+        assert!(!report.empi_server.observed_any_failure());
+    }
+
+    #[test]
+    fn app_panic_is_reported_as_error() {
+        let cfg = JobConfig::new(2, 0.0);
+        let report = launch_job(&cfg, |ctx| {
+            if ctx.rank == 0 {
+                panic!("application bug");
+            }
+            Ok(())
+        });
+        match &report.outcomes[0] {
+            RankOutcome::Error(e) => assert!(e.contains("application bug")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn interruption_payload_roundtrips() {
+        let cfg = JobConfig::new(2, 0.0);
+        let report = launch_job(&cfg, |ctx| {
+            if ctx.rank == 0 {
+                std::panic::panic_any(JobInterrupted { dead_rank: 7 });
+            }
+            Ok(())
+        });
+        assert!(matches!(
+            report.outcomes[0],
+            RankOutcome::Interrupted { dead_rank: 7 }
+        ));
+    }
+}

@@ -1,0 +1,30 @@
+//! Process management: the dual-server startup of §IV and the machinery
+//! that turns OS-thread "processes" into a job.
+//!
+//! The paper runs every MPI process under **two** runtimes at once:
+//! the external MPI's `mpirun` (which spawned it and must *never* learn of
+//! failures) and Open MPI's PRTE server (which did not spawn it, must adopt
+//! it, and must learn of *every* failure). We reproduce the whole §IV state
+//! machine:
+//!
+//! * [`cluster`] — nodes × cores layout, rank↔node mapping, node failures.
+//! * [`servers`] — the EMPI mpirun server with its `waitpid`/`poll` shim
+//!   policies (LD_PRELOAD in the paper), the PRTE server + per-node PRTEDs
+//!   with the env-file/PID handshake and ancillary-fd stdio adoption, and
+//!   `ptrace`-style monitor registration.
+//! * [`monitor`] — the detection pump: observes ground-truth deaths
+//!   ([`crate::fabric::ProcSet`]) like a PRTED observes SIGCHLD, feeds the
+//!   ULFM [`crate::ompi::FailureDetector`], and enforces the two invariants
+//!   the paper's design hangs on (EMPI blind, OMPI all-seeing).
+//! * [`launcher`] — spawns rank threads with `catch_unwind`, joins them
+//!   into structured [`launcher::RankOutcome`]s, and runs the monitor.
+
+pub mod cluster;
+pub mod launcher;
+pub mod monitor;
+pub mod servers;
+
+pub use cluster::Cluster;
+pub use launcher::{launch_job, JobAbort, JobHandles, RankCtx, RankOutcome};
+pub use monitor::Monitor;
+pub use servers::{EmpiServer, HandshakeFile, PrteServer};

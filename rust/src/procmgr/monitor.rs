@@ -1,0 +1,148 @@
+//! The detection pump: PRTED daemons observing deaths and PRRTE propagating
+//! them, collapsed into one polling thread per job.
+//!
+//! Ground truth (a rank thread exited → [`ProcSet::is_dead`]) becomes ULFM
+//! knowledge ([`FailureDetector`]) only through this pump, with a real
+//! detection latency (the poll tick). The pump also drives the EMPI
+//! server's `waitpid` cycle so the §IV invariants — *EMPI blind, OMPI
+//! all-seeing* — are continuously exercised, not just asserted once.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::servers::EmpiServer;
+use crate::fabric::ProcSet;
+use crate::ompi::FailureDetector;
+
+/// Detection latency: how often PRTEDs "receive SIGCHLD". Real clusters see
+/// sub-millisecond local detection and multi-ms propagation; one combined
+/// tick keeps the simulation honest without dominating run time.
+pub const DETECT_TICK: Duration = Duration::from_micros(300);
+
+pub struct Monitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Start the pump. It runs until [`Monitor::stop`] (or drop).
+    pub fn start(
+        procs: Arc<ProcSet>,
+        detector: Arc<FailureDetector>,
+        empi_server: Arc<EmpiServer>,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("prted-monitor".into())
+            .spawn(move || {
+                let mut last_epoch = 0;
+                while !stop2.load(Ordering::Relaxed) {
+                    let epoch = procs.epoch();
+                    if epoch != last_epoch {
+                        last_epoch = epoch;
+                        // PRTED observed exits → PRRTE propagates → every
+                        // PMIx client (the shared detector) learns.
+                        let dead = procs.dead_ranks();
+                        detector.publish_many(&dead);
+                        // The EMPI server also gets its SIGCHLDs — the shim
+                        // decides whether it reacts.
+                        empi_server.waitpid_cycle(&procs);
+                    }
+                    std::thread::sleep(DETECT_TICK);
+                }
+                // Final sweep so post-join state is consistent.
+                detector.publish_many(&procs.dead_ranks());
+            })
+            .expect("spawn monitor");
+        Self {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::procmgr::cluster::Cluster;
+
+    #[test]
+    fn deaths_flow_to_detector_not_to_shimmed_empi() {
+        let procs = ProcSet::new(4);
+        let detector = FailureDetector::new();
+        let empi = EmpiServer::new(Cluster::new(4, 2), true);
+        let mon = Monitor::start(procs.clone(), detector.clone(), empi.clone());
+
+        procs.poison(3);
+        procs.mark_dead(3);
+        // Wait for the pump to pick it up.
+        let t0 = std::time::Instant::now();
+        while !detector.is_known_failed(3) {
+            assert!(t0.elapsed() < Duration::from_secs(2), "detector never learned");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!empi.observed_any_failure(), "EMPI must stay blind");
+        mon.stop();
+    }
+
+    #[test]
+    fn without_shim_death_aborts_job() {
+        let procs = ProcSet::new(4);
+        let detector = FailureDetector::new();
+        let empi = EmpiServer::new(Cluster::new(4, 2), false);
+        let mon = Monitor::start(procs.clone(), detector.clone(), empi.clone());
+
+        procs.poison(0);
+        procs.mark_dead(0);
+        let t0 = std::time::Instant::now();
+        while empi.job_killed_by().is_none() {
+            assert!(t0.elapsed() < Duration::from_secs(2), "stock server never reacted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(empi.job_killed_by(), Some(0));
+        assert!((0..4).all(|r| procs.is_poisoned(r)));
+        mon.stop();
+    }
+
+    #[test]
+    fn node_failure_publishes_all_ranks() {
+        // Node 1 of a 2-node job dies: every rank on it becomes known.
+        let cluster = Cluster::new(8, 4);
+        let procs = ProcSet::new(8);
+        let detector = FailureDetector::new();
+        let empi = EmpiServer::new(cluster.clone(), true);
+        let mon = Monitor::start(procs.clone(), detector.clone(), empi);
+
+        for r in cluster.ranks_on(1) {
+            procs.poison(r);
+            procs.mark_dead(r);
+        }
+        let t0 = std::time::Instant::now();
+        while detector.known_failed().len() < 4 {
+            assert!(t0.elapsed() < Duration::from_secs(2));
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(detector.known_failed(), vec![4, 5, 6, 7]);
+        mon.stop();
+    }
+}

@@ -1,0 +1,241 @@
+//! The two server processes of §IV and the startup handshake between them.
+//!
+//! **EMPI mpirun server** — spawned the MPI processes. Its stock behaviour
+//! on observing a child death (SIGCHLD → `waitpid`) is to kill the whole
+//! job; PartRePer disarms that with an LD_PRELOAD `waitpid` override that
+//! "returns in a manner that hides the failed processes" (§IV-C), and with
+//! `poll`/`read` overrides for the multi-node socket path (§IV-D). Here the
+//! shim is a policy flag; the server's observation loop and the
+//! killed-the-job failure mode are real and tested.
+//!
+//! **OMPI PRTE server** — did *not* spawn the processes. §IV-B's adoption
+//! handshake: the server writes its PMIx address + PID to a file; each
+//! process (already running under EMPI) reads it by rank, connects, and
+//! receives its stdio pipe ends via SCM_RIGHTS ancillary messages. The
+//! server then `ptrace`-attaches so it gets SIGCHLD for non-children. We
+//! model the file, the registration, the fd-adoption table and the traced
+//! set explicitly so the §IV invariants are checkable.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use super::cluster::Cluster;
+use crate::fabric::ProcSet;
+
+/// The env/PID handshake file the modified PRTE server writes (§IV-B).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HandshakeFile {
+    /// PMIx rendezvous address ("server URI").
+    pub pmix_addr: String,
+    /// PID of the PRTE server process.
+    pub server_pid: u32,
+    /// Per-rank environment a forked child would have inherited.
+    pub env: Vec<(String, String)>,
+}
+
+/// One rank's adopted stdio routing (the pipe fds passed over the UNIX
+/// domain socket in Fig 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StdioRoute {
+    pub stdin_fd: i32,
+    pub stdout_fd: i32,
+    pub stderr_fd: i32,
+}
+
+/// The external (native) MPI's mpirun server.
+pub struct EmpiServer {
+    cluster: Cluster,
+    /// LD_PRELOAD waitpid/poll shim active? (PartRePer sets this.)
+    shim_active: bool,
+    /// Deaths this server has *observed* (must stay empty with the shim).
+    observed_failures: Mutex<HashSet<usize>>,
+    /// Set when the stock server reacted to a death by killing the job.
+    job_killed: Mutex<Option<usize>>,
+}
+
+impl EmpiServer {
+    pub fn new(cluster: Cluster, shim_active: bool) -> Arc<Self> {
+        Arc::new(Self {
+            cluster,
+            shim_active,
+            observed_failures: Mutex::new(HashSet::new()),
+            job_killed: Mutex::new(None),
+        })
+    }
+
+    /// One SIGCHLD/waitpid poll cycle over its children. With the shim, the
+    /// custom `waitpid` swallows the status and the server learns nothing.
+    /// Without it, the first observed death makes the stock server kill
+    /// every child — the §IV-C failure mode PartRePer must prevent.
+    pub fn waitpid_cycle(&self, procs: &ProcSet) {
+        if self.shim_active {
+            // Custom waitpid: reaps internally, reports "no child changed".
+            return;
+        }
+        for rank in 0..self.cluster.nprocs() {
+            if procs.is_dead(rank) {
+                let mut obs = self.observed_failures.lock().unwrap();
+                if obs.insert(rank) {
+                    // Stock behaviour: SIGKILL the whole job.
+                    let mut killed = self.job_killed.lock().unwrap();
+                    if killed.is_none() {
+                        *killed = Some(rank);
+                        for r in 0..self.cluster.nprocs() {
+                            procs.poison(r);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// §IV invariant: with the shim, the native library never sees a death.
+    pub fn observed_any_failure(&self) -> bool {
+        !self.observed_failures.lock().unwrap().is_empty()
+    }
+
+    /// Did the stock server abort the job (and which death triggered it)?
+    pub fn job_killed_by(&self) -> Option<usize> {
+        *self.job_killed.lock().unwrap()
+    }
+
+    pub fn shim_active(&self) -> bool {
+        self.shim_active
+    }
+}
+
+/// Open MPI's PRTE server with its per-node PRTED daemons.
+pub struct PrteServer {
+    cluster: Cluster,
+    handshake: HandshakeFile,
+    /// Ranks that completed the PMIx connect handshake.
+    registered: Mutex<HashSet<usize>>,
+    /// Ranks whose stdio pipes were adopted via ancillary messages (Fig 4).
+    stdio_routes: Mutex<HashMap<usize, StdioRoute>>,
+    /// Ranks the server ptrace-attached to (so it receives their SIGCHLD
+    /// even though they are not its children, §IV-C).
+    traced: Mutex<HashSet<usize>>,
+}
+
+impl PrteServer {
+    pub fn start(cluster: Cluster) -> Arc<Self> {
+        let handshake = HandshakeFile {
+            pmix_addr: format!("pmix://prte-server/{}", cluster.nprocs()),
+            server_pid: 4242,
+            env: vec![
+                ("PMIX_SERVER_URI".into(), "prte-server".into()),
+                ("PMIX_NAMESPACE".into(), "partreper-job".into()),
+            ],
+        };
+        Arc::new(Self {
+            cluster,
+            handshake,
+            registered: Mutex::new(HashSet::new()),
+            stdio_routes: Mutex::new(HashMap::new()),
+            traced: Mutex::new(HashSet::new()),
+        })
+    }
+
+    /// The file an EMPI-spawned process reads by rank (§IV-B).
+    pub fn handshake_file(&self) -> &HandshakeFile {
+        &self.handshake
+    }
+
+    /// A process connects to the PMIx server, is adopted (fd passing) and
+    /// traced. Returns its stdio routing. Idempotent per rank.
+    pub fn adopt(&self, rank: usize) -> StdioRoute {
+        assert!(rank < self.cluster.nprocs(), "adopt: rank out of range");
+        self.registered.lock().unwrap().insert(rank);
+        self.traced.lock().unwrap().insert(rank);
+        let route = StdioRoute {
+            stdin_fd: 3 * rank as i32 + 10,
+            stdout_fd: 3 * rank as i32 + 11,
+            stderr_fd: 3 * rank as i32 + 12,
+        };
+        self.stdio_routes.lock().unwrap().insert(rank, route);
+        route
+    }
+
+    pub fn is_registered(&self, rank: usize) -> bool {
+        self.registered.lock().unwrap().contains(&rank)
+    }
+
+    pub fn is_traced(&self, rank: usize) -> bool {
+        self.traced.lock().unwrap().contains(&rank)
+    }
+
+    pub fn registered_count(&self) -> usize {
+        self.registered.lock().unwrap().len()
+    }
+
+    /// All ranks adopted? (Init barrier precondition.)
+    pub fn all_adopted(&self) -> bool {
+        self.registered_count() == self.cluster.nprocs()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stock_empi_server_kills_job_on_first_death() {
+        let procs = ProcSet::new(4);
+        let srv = EmpiServer::new(Cluster::new(4, 2), false);
+        procs.poison(2);
+        procs.mark_dead(2);
+        srv.waitpid_cycle(&procs);
+        assert!(srv.observed_any_failure());
+        assert_eq!(srv.job_killed_by(), Some(2));
+        // Everyone got SIGKILLed.
+        assert!((0..4).all(|r| procs.is_poisoned(r)));
+    }
+
+    #[test]
+    fn shimmed_empi_server_stays_blind() {
+        let procs = ProcSet::new(4);
+        let srv = EmpiServer::new(Cluster::new(4, 2), true);
+        procs.poison(2);
+        procs.mark_dead(2);
+        for _ in 0..10 {
+            srv.waitpid_cycle(&procs);
+        }
+        assert!(!srv.observed_any_failure());
+        assert_eq!(srv.job_killed_by(), None);
+        // Survivors keep running.
+        assert!(!procs.is_poisoned(0));
+    }
+
+    #[test]
+    fn prte_adoption_handshake() {
+        let srv = PrteServer::start(Cluster::new(3, 2));
+        let hs = srv.handshake_file().clone();
+        assert!(hs.pmix_addr.contains("prte-server"));
+        assert!(!srv.all_adopted());
+        let routes: Vec<StdioRoute> = (0..3).map(|r| srv.adopt(r)).collect();
+        assert!(srv.all_adopted());
+        // fds are distinct across ranks (they're distinct pipes).
+        let mut fds: Vec<i32> = routes
+            .iter()
+            .flat_map(|r| [r.stdin_fd, r.stdout_fd, r.stderr_fd])
+            .collect();
+        fds.sort_unstable();
+        fds.dedup();
+        assert_eq!(fds.len(), 9);
+        assert!(srv.is_traced(1));
+        assert!(srv.is_registered(2));
+    }
+
+    #[test]
+    fn adopt_is_idempotent() {
+        let srv = PrteServer::start(Cluster::new(2, 2));
+        let a = srv.adopt(0);
+        let b = srv.adopt(0);
+        assert_eq!(a, b);
+        assert_eq!(srv.registered_count(), 1);
+    }
+}

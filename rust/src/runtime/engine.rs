@@ -1,0 +1,292 @@
+//! The engine service: PJRT clients on dedicated threads, executing the
+//! compiled artifacts for any rank that asks.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::value::{DtypeTag, TensorSpec, Value};
+
+/// One kernel's manifest entry.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_manifest(text: &str) -> Result<Vec<KernelSpec>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        // Format: `name | in: spec spec ... | out: spec spec ...`
+        let mut parts = line.split('|');
+        let name = parts.next().context("name")?.trim().to_string();
+        let ins = parts.next().context("in")?.trim();
+        let outs = parts.next().context("out")?.trim();
+        let parse_list = |s: &str, prefix: &str| -> Result<Vec<TensorSpec>> {
+            s.strip_prefix(prefix)
+                .context("prefix")?
+                .split_whitespace()
+                .map(|t| TensorSpec::parse(t).ok_or_else(|| anyhow!("bad spec {t}")))
+                .collect()
+        };
+        out.push(KernelSpec {
+            name,
+            inputs: parse_list(ins, "in:")?,
+            outputs: parse_list(outs, "out:")?,
+        });
+    }
+    Ok(out)
+}
+
+struct Request {
+    kernel: String,
+    args: Vec<Value>,
+    reply: mpsc::Sender<Result<Vec<Value>, String>>,
+}
+
+/// Cloneable, thread-safe handle to the engine pool.
+#[derive(Clone)]
+pub struct ComputeEngine {
+    inner: Arc<EngineInner>,
+}
+
+struct EngineInner {
+    txs: Vec<mpsc::Sender<Request>>,
+    next: AtomicUsize,
+    specs: HashMap<String, KernelSpec>,
+}
+
+impl ComputeEngine {
+    /// Start `nthreads` engine threads, each compiling every artifact in
+    /// `dir`. Fails fast if the directory or manifest is missing (callers
+    /// fall back to native compute — see `apps::compute`).
+    pub fn start(dir: impl AsRef<Path>, nthreads: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("no manifest in {}", dir.display()))?;
+        let specs_list = parse_manifest(&manifest)?;
+        let specs: HashMap<String, KernelSpec> = specs_list
+            .iter()
+            .map(|s| (s.name.clone(), s.clone()))
+            .collect();
+
+        let mut txs = Vec::new();
+        let mut ready_rxs = Vec::new();
+        for tid in 0..nthreads.max(1) {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+            let dir2 = dir.clone();
+            let specs2 = specs_list.clone();
+            std::thread::Builder::new()
+                .name(format!("pjrt-engine-{tid}"))
+                .spawn(move || engine_thread(dir2, specs2, rx, ready_tx))
+                .expect("spawn engine");
+            txs.push(tx);
+            ready_rxs.push(ready_rx);
+        }
+        // Wait for compilation to finish on every engine.
+        for rx in ready_rxs {
+            rx.recv()
+                .context("engine thread died during startup")?
+                .map_err(|e| anyhow!(e))?;
+        }
+        Ok(Self {
+            inner: Arc::new(EngineInner {
+                txs,
+                next: AtomicUsize::new(0),
+                specs,
+            }),
+        })
+    }
+
+    /// Start from the conventional `artifacts/` dir next to the repo root.
+    pub fn start_default(nthreads: usize) -> Result<Self> {
+        Self::start(Self::default_dir(), nthreads)
+    }
+
+    /// `$PARTREPER_ARTIFACTS` or `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PARTREPER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn kernels(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, kernel: &str) -> Option<&KernelSpec> {
+        self.inner.specs.get(kernel)
+    }
+
+    /// Execute `kernel` with `args`, blocking until the result is back.
+    /// Round-robins across engine threads so concurrent ranks overlap.
+    pub fn run(&self, kernel: &str, args: Vec<Value>) -> Result<Vec<Value>> {
+        let spec = self
+            .inner
+            .specs
+            .get(kernel)
+            .with_context(|| format!("unknown kernel {kernel}"))?;
+        if spec.inputs.len() != args.len() {
+            bail!(
+                "{kernel}: expected {} args, got {}",
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (s, a)) in spec.inputs.iter().zip(&args).enumerate() {
+            if s.numel() != a.len() {
+                bail!("{kernel}: arg {i} numel {} != spec {}", a.len(), s.numel());
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let idx = self.inner.next.fetch_add(1, Ordering::Relaxed) % self.inner.txs.len();
+        self.inner.txs[idx]
+            .send(Request {
+                kernel: kernel.to_string(),
+                args,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped reply"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+fn engine_thread(
+    dir: PathBuf,
+    specs: Vec<KernelSpec>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    // Build the client + compile everything; report readiness.
+    let built = (|| -> Result<(xla::PjRtClient, HashMap<String, (xla::PjRtLoadedExecutable, KernelSpec)>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for spec in specs {
+            let path = dir.join(format!("{}.hlo.txt", spec.name));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            exes.insert(spec.name.clone(), (exe, spec));
+        }
+        Ok((client, exes))
+    })();
+
+    let (_client, exes) = match built {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        let result = execute_one(&exes, &req.kernel, &req.args);
+        let _ = req.reply.send(result.map_err(|e| e.to_string()));
+    }
+}
+
+fn execute_one(
+    exes: &HashMap<String, (xla::PjRtLoadedExecutable, KernelSpec)>,
+    kernel: &str,
+    args: &[Value],
+) -> Result<Vec<Value>> {
+    let (exe, spec) = exes
+        .get(kernel)
+        .with_context(|| format!("kernel {kernel} not compiled"))?;
+
+    let literals: Vec<xla::Literal> = args
+        .iter()
+        .map(|v| -> Result<xla::Literal> {
+            let lit = match v {
+                Value::F32 { data, dims } => {
+                    let l = xla::Literal::vec1(data.as_slice());
+                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+                }
+                Value::I32 { data, dims } => {
+                    let l = xla::Literal::vec1(data.as_slice());
+                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+                }
+            };
+            Ok(lit)
+        })
+        .collect::<Result<_>>()?;
+
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute {kernel}: {e:?}"))?;
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    // aot.py lowers with return_tuple=True: always a tuple, even 1-output.
+    let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    if parts.len() != spec.outputs.len() {
+        bail!(
+            "{kernel}: expected {} outputs, got {}",
+            spec.outputs.len(),
+            parts.len()
+        );
+    }
+    parts
+        .into_iter()
+        .zip(&spec.outputs)
+        .map(|(lit, ospec)| -> Result<Value> {
+            match ospec.dtype {
+                DtypeTag::F32 => {
+                    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                    Ok(Value::f32(data, &ospec.dims))
+                }
+                DtypeTag::I32 => {
+                    let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                    Ok(Value::i32(data, &ospec.dims))
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "cg_local | in: f32[9x2048] f32[2048] i32[9] | out: f32[2048] f32[] f32[]\n\
+                    ep_local | in: f32[4096] f32[4096] | out: f32[3]\n";
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "cg_local");
+        assert_eq!(specs[0].inputs.len(), 3);
+        assert_eq!(specs[0].outputs[1].numel(), 1);
+        assert_eq!(specs[1].inputs[0].dims, vec![4096]);
+    }
+
+    #[test]
+    fn missing_dir_fails_fast() {
+        assert!(ComputeEngine::start("/nonexistent/path", 1).is_err());
+    }
+
+    // PJRT smoke tests that need built artifacts live in
+    // rust/tests/pjrt_integration.rs (they skip when artifacts/ is absent).
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py`) and execute them from the rank threads.
+//!
+//! The `xla` crate's `PjRtClient`/`PjRtLoadedExecutable` are `Rc`-based
+//! (`!Send`), while our MPI ranks are hundreds of threads — so the runtime
+//! is an **engine service**: a small pool of dedicated threads, each owning
+//! one PJRT CPU client with every artifact compiled, serving execute
+//! requests over channels. Ranks see a cloneable, thread-safe
+//! [`ComputeEngine`] handle; Python never runs at run time.
+//!
+//! Interchange is HLO *text* (see `aot.py` — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5's 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod engine;
+pub mod value;
+
+pub use engine::ComputeEngine;
+pub use value::Value;

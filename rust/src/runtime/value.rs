@@ -1,0 +1,154 @@
+//! Typed host buffers crossing the engine-service channel.
+
+/// A host tensor (inputs and outputs of kernel execution).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Value {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Value::F32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Value::I32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Value::F32 {
+            data: vec![v],
+            dims: vec![],
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32 { dims, .. } | Value::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Value::F32 { data, .. } => data,
+            other => panic!("expected F32 value, got {other:?}"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Value::I32 { data, .. } => data,
+            other => panic!("expected I32 value, got {other:?}"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Value::F32 { data, .. } => data,
+            other => panic!("expected F32 value, got {other:?}"),
+        }
+    }
+
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            Value::I32 { data, .. } => data,
+            other => panic!("expected I32 value, got {other:?}"),
+        }
+    }
+
+    /// Scalar f32 extract.
+    pub fn to_scalar_f32(&self) -> f32 {
+        let d = self.as_f32();
+        assert_eq!(d.len(), 1, "not a scalar");
+        d[0]
+    }
+}
+
+/// Dtype tags used by the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DtypeTag {
+    F32,
+    I32,
+}
+
+/// One `dtype[shape]` spec from `manifest.txt` (e.g. `f32[9x2048]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DtypeTag,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Option<Self> {
+        let (dt, rest) = s.split_once('[')?;
+        let dims_str = rest.strip_suffix(']')?;
+        let dtype = match dt {
+            "f32" => DtypeTag::F32,
+            "i32" => DtypeTag::I32,
+            _ => return None,
+        };
+        let dims = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split('x')
+                .map(|d| d.parse().ok())
+                .collect::<Option<Vec<usize>>>()?
+        };
+        Some(Self { dtype, dims })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(v.dims(), &[2, 2]);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.as_f32()[3], 4.0);
+        let s = Value::scalar_f32(7.5);
+        assert_eq!(s.to_scalar_f32(), 7.5);
+    }
+
+    #[test]
+    fn spec_parse() {
+        let s = TensorSpec::parse("f32[9x2048]").unwrap();
+        assert_eq!(s.dtype, DtypeTag::F32);
+        assert_eq!(s.dims, vec![9, 2048]);
+        assert_eq!(s.numel(), 9 * 2048);
+        let sc = TensorSpec::parse("f32[]").unwrap();
+        assert_eq!(sc.dims, Vec::<usize>::new());
+        assert_eq!(sc.numel(), 1);
+        let i = TensorSpec::parse("i32[9]").unwrap();
+        assert_eq!(i.dtype, DtypeTag::I32);
+        assert!(TensorSpec::parse("f64[3]").is_none());
+        assert!(TensorSpec::parse("f32[3").is_none());
+    }
+}

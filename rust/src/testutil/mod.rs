@@ -1,0 +1,98 @@
+//! Minimal property-testing helper (the offline image has no `proptest`):
+//! PRNG-driven case generation with failing-seed reporting. Used by the
+//! `rust/tests/prop_*.rs` suites on coordinator invariants.
+
+use crate::util::Xoshiro256;
+
+/// Run `cases` random trials of `f`, each with a fresh deterministic RNG.
+/// On panic, reports the failing case seed so it can be replayed with
+/// [`check_one`].
+pub fn check(name: &str, cases: usize, f: impl Fn(&mut Xoshiro256) + std::panic::RefUnwindSafe) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Xoshiro256::seeded(seed);
+            f(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed on case {case} (replay: PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_one(seed: u64, f: impl Fn(&mut Xoshiro256)) {
+    let mut rng = Xoshiro256::seeded(seed);
+    f(&mut rng);
+}
+
+/// Generators.
+pub mod gen {
+    use crate::util::Xoshiro256;
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+        lo + rng.next_usize(hi - lo + 1)
+    }
+
+    /// Random subset of `0..n` with each element kept at probability `p`.
+    pub fn subset(rng: &mut Xoshiro256, n: usize, p: f64) -> Vec<usize> {
+        (0..n).filter(|_| rng.next_f64() < p).collect()
+    }
+
+    /// Random f32 vector.
+    pub fn f32s(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    /// Random bytes.
+    pub fn bytes(rng: &mut Xoshiro256, n: usize) -> Vec<u8> {
+        (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_when_property_holds() {
+        check("addition commutes", 50, |rng| {
+            let a = rng.next_u64() >> 1;
+            let b = rng.next_u64() >> 1;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn check_reports_failing_seed() {
+        check("always fails", 5, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = Xoshiro256::seeded(1);
+        for _ in 0..100 {
+            let v = gen::usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&v));
+        }
+        let s = gen::subset(&mut rng, 100, 0.5);
+        assert!(s.len() > 20 && s.len() < 80);
+        assert!(gen::f32s(&mut rng, 10).iter().all(|v| v.abs() <= 1.0));
+        assert_eq!(gen::bytes(&mut rng, 16).len(), 16);
+    }
+}

@@ -1,0 +1,151 @@
+//! Little-endian slice codecs for fabric payloads and the process-image
+//! serializer. All messages on the simulated wire are `Vec<u8>`; apps and
+//! the replication machinery convert typed slices with these helpers.
+
+macro_rules! codec {
+    ($to:ident, $from:ident, $ty:ty, $w:expr) => {
+        /// Encode a typed slice as little-endian bytes.
+        pub fn $to(xs: &[$ty]) -> Vec<u8> {
+            let mut out = Vec::with_capacity(xs.len() * $w);
+            for x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        /// Decode little-endian bytes back into a typed vector.
+        ///
+        /// Panics if `bytes.len()` is not a multiple of the element width —
+        /// that always indicates a framing bug, never valid data.
+        pub fn $from(bytes: &[u8]) -> Vec<$ty> {
+            assert!(
+                bytes.len() % $w == 0,
+                concat!(stringify!($from), ": length {} not a multiple of {}"),
+                bytes.len(),
+                $w
+            );
+            bytes
+                .chunks_exact($w)
+                .map(|c| <$ty>::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        }
+    };
+}
+
+codec!(f64s_to_bytes, f64s_from_bytes, f64, 8);
+codec!(f32s_to_bytes, f32s_from_bytes, f32, 4);
+codec!(u64s_to_bytes, u64s_from_bytes, u64, 8);
+codec!(i64s_to_bytes, i64s_from_bytes, i64, 8);
+codec!(u32s_to_bytes, u32s_from_bytes, u32, 4);
+codec!(i32s_to_bytes, i32s_from_bytes, i32, 4);
+
+/// A tiny append-only writer used by the process-image serializer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Matching reader; all methods panic on truncated input (framing bug).
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+    pub fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+    pub fn usize(&mut self) -> usize {
+        self.u64() as usize
+    }
+    pub fn f64(&mut self) -> f64 {
+        f64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+    pub fn bytes(&mut self) -> &'a [u8] {
+        let n = self.usize();
+        self.take(n)
+    }
+    pub fn str(&mut self) -> String {
+        String::from_utf8(self.bytes().to_vec()).expect("utf8")
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip() {
+        let xs = vec![0.0, -1.5, f64::MAX, f64::MIN_POSITIVE, 3.141592653589793];
+        assert_eq!(f64s_from_bytes(&f64s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn u64_roundtrip() {
+        let xs = vec![0, 1, u64::MAX, 0xDEADBEEF];
+        assert_eq!(u64s_from_bytes(&u64s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let xs = vec![i32::MIN, -1, 0, 1, i32::MAX];
+        assert_eq!(i32s_from_bytes(&i32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_length_panics() {
+        f64s_from_bytes(&[0u8; 9]);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u64(42);
+        w.f64(-2.5);
+        w.str("hello");
+        w.bytes(&[1, 2, 3]);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u64(), 42);
+        assert_eq!(r.f64(), -2.5);
+        assert_eq!(r.str(), "hello");
+        assert_eq!(r.bytes(), &[1, 2, 3]);
+        assert_eq!(r.remaining(), 0);
+    }
+}

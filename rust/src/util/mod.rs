@@ -1,0 +1,16 @@
+//! Small self-contained utilities: PRNG, statistics, byte codecs.
+//!
+//! The offline build image has no `rand`/`statrs`/`serde`, so this module
+//! provides the minimal, well-tested replacements the rest of the library
+//! needs: a splitmix64-seeded xoshiro256** generator, Weibull/exponential
+//! sampling, streaming statistics, and little-endian slice codecs used by
+//! the fabric payloads and the process-image serializer.
+
+pub mod bytes;
+pub mod prng;
+pub mod stats;
+
+pub use bytes::{f32s_from_bytes, f64s_from_bytes, i64s_from_bytes, u64s_from_bytes};
+pub use bytes::{f32s_to_bytes, f64s_to_bytes, i64s_to_bytes, u64s_to_bytes};
+pub use prng::Xoshiro256;
+pub use stats::Summary;

@@ -1,0 +1,122 @@
+//! Streaming statistics for the benchmark harness (criterion is not
+//! available offline, so the bench targets carry their own summaries).
+
+/// Welford streaming mean/variance plus min/max and percentile support.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Self::new();
+        for x in samples {
+            s.add(x);
+        }
+        s
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1).
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q / 100.0 * (xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            xs[lo] + (pos - lo as f64) * (xs[hi] - xs[lo])
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Pretty time formatting for bench output.
+pub fn fmt_duration_s(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let s = Summary::from_samples([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::from_samples((1..=100).map(|i| i as f64));
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(Summary::new().mean().is_nan());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration_s(5e-9).contains("ns"));
+        assert!(fmt_duration_s(5e-6).contains("µs"));
+        assert!(fmt_duration_s(5e-3).contains("ms"));
+        assert!(fmt_duration_s(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT integration: load the AOT artifacts and check numerics against the
+//! same oracles the Python tests use. Skips (loudly) when `artifacts/` has
+//! not been built — `make artifacts` first.
+
+use partreper::runtime::{ComputeEngine, Value};
+
+fn engine() -> Option<ComputeEngine> {
+    match ComputeEngine::start(ComputeEngine::default_dir(), 1) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn cg_local_identity_matrix() {
+    let Some(eng) = engine() else { return };
+    let n = 2048;
+    // bands: 9 diagonals, center (index 4) = 2.0, rest 0.
+    let mut bands = vec![0f32; 9 * n];
+    bands[4 * n..5 * n].fill(2.0);
+    let x = vec![1f32; n];
+    let offs: Vec<i32> = (-4..=4).collect();
+    let out = eng
+        .run(
+            "cg_local",
+            vec![
+                Value::f32(bands, &[9, n]),
+                Value::f32(x, &[n]),
+                Value::i32(offs, &[9]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let q = out[0].as_f32();
+    assert!(q.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    assert!((out[1].to_scalar_f32() - 2.0 * n as f32).abs() < 1e-1);
+    assert!((out[2].to_scalar_f32() - n as f32).abs() < 1e-1);
+}
+
+#[test]
+fn mg_local_constant_field() {
+    let Some(eng) = engine() else { return };
+    let u = vec![1f32; 16 * 16 * 16];
+    let coeff = vec![-6.0f32, 1.0, 1.0, 1.0];
+    let out = eng
+        .run(
+            "mg_local",
+            vec![Value::f32(u, &[16, 16, 16]), Value::f32(coeff, &[4])],
+        )
+        .unwrap();
+    let v = out[0].as_f32();
+    // interior of the Laplacian of a constant is 0
+    let idx = (8 * 16 + 8) * 16 + 8;
+    assert!(v[idx].abs() < 1e-5, "interior {}", v[idx]);
+    // residual norm positive (faces feel the zero halo)
+    assert!(out[1].to_scalar_f32() > 0.0);
+}
+
+#[test]
+fn ep_local_acceptance_rate() {
+    let Some(eng) = engine() else { return };
+    let n = 4096;
+    // Low-discrepancy-ish uniforms from a simple LCG.
+    let mut s = 12345u64;
+    let mut next = || {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((s >> 40) as f32) / (1u32 << 24) as f32
+    };
+    let u1: Vec<f32> = (0..n).map(|_| next()).collect();
+    let u2: Vec<f32> = (0..n).map(|_| next()).collect();
+    let out = eng
+        .run(
+            "ep_local",
+            vec![Value::f32(u1, &[n]), Value::f32(u2, &[n])],
+        )
+        .unwrap();
+    let tally = out[0].as_f32();
+    let rate = tally[2] / n as f32;
+    assert!(
+        (rate - std::f32::consts::FRAC_PI_4).abs() < 0.05,
+        "acceptance rate {rate}"
+    );
+}
+
+#[test]
+fn is_local_histogram_counts() {
+    let Some(eng) = engine() else { return };
+    let n = 8192;
+    let keys: Vec<i32> = (0..n as i32).map(|i| i % 256).collect();
+    let out = eng.run("is_local", vec![Value::i32(keys, &[n])]).unwrap();
+    let hist = out[0].as_i32();
+    assert_eq!(hist.len(), 256);
+    assert!(hist.iter().all(|&c| c == (n / 256) as i32));
+}
+
+#[test]
+fn cl_local_uniform_state() {
+    let Some(eng) = engine() else { return };
+    let rho = vec![2.0f32; 32 * 32];
+    let e = vec![3.0f32; 32 * 32];
+    let out = eng
+        .run(
+            "cl_local",
+            vec![
+                Value::f32(rho, &[32, 32]),
+                Value::f32(e, &[32, 32]),
+                Value::f32(vec![0.01], &[1]),
+            ],
+        )
+        .unwrap();
+    let rho2 = out[0].as_f32();
+    assert!(rho2.iter().all(|&v| (v - 2.0).abs() < 1e-5));
+    // total density conserved
+    assert!((out[4].to_scalar_f32() - 2.0 * 1024.0).abs() < 1e-2);
+    // energy drops via the work term
+    assert!(out[3].to_scalar_f32() < 3.0 * 1024.0);
+}
+
+#[test]
+fn pic_local_push_and_deposit() {
+    let Some(eng) = engine() else { return };
+    let n = 4096;
+    let pos: Vec<f32> = (0..n).map(|i| (i as f32 * 128.0) / n as f32).collect();
+    let vel = vec![0f32; n];
+    let ef = vec![1.0f32; 128];
+    let out = eng
+        .run(
+            "pic_local",
+            vec![
+                Value::f32(pos, &[n]),
+                Value::f32(vel, &[n]),
+                Value::f32(ef, &[128]),
+                Value::f32(vec![0.5], &[1]),
+            ],
+        )
+        .unwrap();
+    let vel2 = out[1].as_f32();
+    assert!(vel2.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    let rho = out[2].as_f32();
+    let total: f32 = rho.iter().sum();
+    assert!((total - n as f32).abs() < 0.5, "charge conserved: {total}");
+}
+
+#[test]
+fn concurrent_ranks_share_engine() {
+    let Some(eng) = engine() else { return };
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let eng = eng.clone();
+            std::thread::spawn(move || {
+                let n = 8192;
+                let keys: Vec<i32> = (0..n as i32).map(|i| (i + t) % 256).collect();
+                let out = eng.run("is_local", vec![Value::i32(keys, &[n])]).unwrap();
+                out[0].as_i32().iter().sum::<i32>()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 8192);
+    }
+}

@@ -1,0 +1,204 @@
+//! Property suites on the coordinator's core invariants, driven by the
+//! in-repo testutil (proptest is unavailable offline).
+
+use std::collections::HashSet;
+
+use partreper::config::JobConfig;
+use partreper::partreper::{Channel, Layout};
+use partreper::procimg::{transfer, ProcessImage};
+use partreper::testutil::{check, gen};
+
+/// Layout/repair: for ANY sequence of survivable failures, the repaired
+/// layout keeps the §V invariants.
+#[test]
+fn prop_repair_preserves_layout_invariants() {
+    check("repair invariants", 200, |rng| {
+        let ncomp = gen::usize_in(rng, 1, 12);
+        let nrep = gen::usize_in(rng, 0, ncomp);
+        let mut layout = Layout::initial(ncomp, nrep);
+        // Up to 3 failure rounds.
+        for _ in 0..gen::usize_in(rng, 1, 3) {
+            let world: Vec<usize> = layout.assign.clone();
+            let dead: HashSet<usize> = gen::subset(rng, world.len(), 0.25)
+                .into_iter()
+                .map(|i| world[i])
+                .collect();
+            match layout.repair(&dead) {
+                Ok((l2, promotions)) => {
+                    // ncomp is invariant; app ranks stay dense.
+                    assert_eq!(l2.ncomp, ncomp);
+                    assert_eq!(l2.assign.len(), ncomp + l2.nrep());
+                    // no dead fabric rank survives
+                    for &f in &l2.assign {
+                        assert!(!dead.contains(&f), "dead rank {f} kept");
+                    }
+                    // assign has no duplicates
+                    let set: HashSet<usize> = l2.assign.iter().copied().collect();
+                    assert_eq!(set.len(), l2.assign.len());
+                    // every replica mirrors a valid comp rank, uniquely
+                    let mut seen = HashSet::new();
+                    for &m in &l2.rep_mirror {
+                        assert!(m < ncomp);
+                        assert!(seen.insert(m), "two replicas of comp {m}");
+                    }
+                    // promotions moved exactly the dead comps with live reps
+                    for (c, f) in promotions {
+                        assert!(c < ncomp);
+                        assert_eq!(l2.assign[c], f);
+                    }
+                    // epos/rep maps consistent
+                    for c in 0..ncomp {
+                        if let Some(e) = l2.epos(c, Channel::Rep) {
+                            assert_eq!(l2.rep_mirror[e - ncomp], c);
+                        }
+                    }
+                    layout = l2;
+                }
+                Err(c) => {
+                    // Interruption is only legal when comp c and its rep
+                    // (if any) are both dead.
+                    assert!(dead.contains(&layout.assign[c]));
+                    if let Some(rf) = layout.rep_fabric_of(c) {
+                        assert!(dead.contains(&rf), "interrupted despite live replica");
+                    }
+                    return; // job over for this case
+                }
+            }
+        }
+    });
+}
+
+/// §III-A transfer: for ANY source/target image pair, the replica ends up
+/// content-equal to the source (modulo preserved symbols and local
+/// addresses) and the repair stats are consistent.
+#[test]
+fn prop_transfer_makes_replicas() {
+    check("transfer replicates", 150, |rng| {
+        let mk = |rng: &mut partreper::util::Xoshiro256, preserve: bool| {
+            let mut img = ProcessImage::new();
+            img.data.define("iter", &rng.next_u64().to_le_bytes());
+            img.data.define("handle", &rng.next_u64().to_le_bytes());
+            if preserve {
+                img.preserve("handle");
+            }
+            for i in 0..gen::usize_in(rng, 0, 6) {
+                let size = gen::usize_in(rng, 1, 512);
+                let a = img.heap.alloc(0x100 + i as u64 * 8, size);
+                let fill = (rng.next_u64() & 0xFF) as u8;
+                img.heap.chunk_mut(a).data.fill(fill);
+            }
+            let nbytes = gen::usize_in(rng, 0, 256);
+            img.stack.bytes = gen::bytes(rng, nbytes);
+            img.stack.setjmp(rng.next_u64() % 1000, rng.next_u64() % 8);
+            img
+        };
+        let src = mk(rng, false);
+        let mut tgt = mk(rng, true);
+        let kept_handle = tgt.data.read("handle").unwrap().to_vec();
+        let stats = transfer(&src, &mut tgt);
+
+        // Segment contents equal.
+        assert_eq!(tgt.data.len(), src.data.len());
+        assert_eq!(tgt.data.read("iter"), src.data.read("iter"));
+        assert_eq!(tgt.data.read("handle").unwrap(), kept_handle, "preserved");
+        assert_eq!(tgt.heap.nchunks(), src.heap.nchunks());
+        for (s, t) in src.heap.chunks().iter().zip(tgt.heap.chunks()) {
+            assert_eq!(s.data, t.data);
+            assert_eq!(s.ptr_addr, t.ptr_addr);
+        }
+        assert_eq!(tgt.stack.longjmp(), src.stack.longjmp());
+        assert_eq!(stats.heap_bytes, src.heap.total_bytes());
+        // Idempotence.
+        let snap = tgt.clone();
+        transfer(&src, &mut tgt);
+        assert_eq!(tgt.heap.chunks(), snap.heap.chunks());
+    });
+}
+
+/// End-to-end: for ANY replication degree and ANY single survivable kill,
+/// the job completes with the failure-free checksum.
+#[test]
+fn prop_single_survivable_failure_preserves_results() {
+    use partreper::apps::AppKind;
+    use partreper::harness::{run_app, Backend};
+
+    // Reference checksum, failure-free.
+    let cfg0 = JobConfig::new(4, 0.0);
+    let want = run_app(&cfg0, AppKind::Ep, Backend::PartReper, 6, None)
+        .checksum
+        .unwrap();
+
+    check("survivable kill keeps results", 12, |rng| {
+        let rdeg = *rng.choose(&[50.0, 100.0]);
+        let mut cfg = JobConfig::new(4, rdeg);
+        cfg.faults.enabled = true;
+        cfg.faults.weibull_shape = 1.0;
+        cfg.faults.weibull_scale_s = 0.004;
+        cfg.faults.max_failures = 1;
+        cfg.faults.seed = rng.next_u64();
+        let r = run_app(&cfg, AppKind::Ep, Backend::PartReper, 6, None);
+        if r.completed() {
+            let got = r.checksum.unwrap();
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "checksum drift after failure: {got} vs {want}"
+            );
+        } else {
+            // Only legal if the injector hit a rank whose twin then also
+            // depended on it (double-kill is disabled) OR an unreplicated
+            // comp at 50%: victim must have been comp 2..4 without rep.
+            assert!(r.was_interrupted(), "errors: {:?}", r.errors);
+            assert_eq!(rdeg, 50.0, "100% replication must survive one kill");
+        }
+    });
+}
+
+/// Message-log recovery algebra: resend ∪ received covers the full send
+/// log; skips never target already-sent ids.
+#[test]
+fn prop_log_resend_skip_partition() {
+    use partreper::partreper::MessageLog;
+    use std::sync::Arc;
+
+    check("resend/skip partition", 200, |rng| {
+        let mut log = MessageLog::new();
+        let dst = 3;
+        let total = gen::usize_in(rng, 0, 40) as u64;
+        for i in 0..total {
+            log.log_send(dst, 7, Arc::new(vec![i as u8]));
+        }
+        // Receiver got an arbitrary subset, possibly including "future"
+        // ids from a faster twin.
+        let future = gen::usize_in(rng, 0, 10) as u64;
+        let received: HashSet<u64> = (1..=total + future)
+            .filter(|_| rng.next_f64() < 0.6)
+            .collect();
+        let resend = log.unreceived_sends(dst, &received);
+        let marked = log.mark_future_skips(dst, Channel::Comp, &received);
+
+        // Partition: every sent id is either received or resent.
+        let resent: HashSet<u64> = resend.iter().map(|r| r.id).collect();
+        for id in 1..=total {
+            assert_eq!(
+                received.contains(&id) || resent.contains(&id),
+                true,
+                "sent id {id} lost"
+            );
+            assert!(
+                !(received.contains(&id) && resent.contains(&id)),
+                "sent id {id} duplicated"
+            );
+        }
+        // Skips are exactly the received ids beyond my counter.
+        let want_skips = received.iter().filter(|&&id| id > total).count();
+        assert_eq!(marked, want_skips);
+        for id in 1..=total + future {
+            let should_skip = id > total && received.contains(&id);
+            assert_eq!(
+                log.consume_skip(dst, Channel::Comp, id),
+                should_skip,
+                "id {id}"
+            );
+        }
+    });
+}
