@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 verify plus "everything else still compiles" checks, so a
+# missing-manifest (or bench/example rot) class of breakage can never land
+# silently again. Run from anywhere; operates on the repo root.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== benches + examples compile =="
+cargo bench --no-run
+cargo build --release --examples
+
+echo "== formatting =="
+cargo fmt --check
+
+echo "CI OK"

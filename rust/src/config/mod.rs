@@ -163,6 +163,11 @@ impl JobConfig {
                 self.empi_net.congestion_factor = f;
                 self.ompi_net.congestion_factor = f;
             }
+            "net.rndv_threshold" => {
+                let t: usize = value.parse().map_err(|_| bad(key, value))?;
+                self.empi_net.rndv_threshold = t;
+                self.ompi_net.rndv_threshold = t;
+            }
             _ => return Err(ParseError::UnknownKey(key.to_string())),
         }
         Ok(())
@@ -211,9 +216,12 @@ mod tests {
         cfg.set("ncomp", "64").unwrap();
         cfg.set("rdegree", "25").unwrap();
         cfg.set("faults.enabled", "true").unwrap();
+        cfg.set("net.rndv_threshold", "8192").unwrap();
         assert_eq!(cfg.ncomp, 64);
         assert_eq!(cfg.nrep(), 16);
         assert!(cfg.faults.enabled);
+        assert_eq!(cfg.empi_net.rndv_threshold, 8192);
+        assert_eq!(cfg.ompi_net.rndv_threshold, 8192);
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("ncomp", "abc").is_err());
     }

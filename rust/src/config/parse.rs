@@ -1,17 +1,30 @@
 //! Minimal `key = value` config parser (serde/toml are unavailable in the
 //! offline build image; the format is a strict subset of TOML's top level).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ParseError {
-    #[error("line {line}: expected `key = value`, got `{text}`")]
     Malformed { line: usize, text: String },
-    #[error("unknown config key `{0}`")]
     UnknownKey(String),
-    #[error("bad value for `{key}`: `{value}`")]
     BadValue { key: String, value: String },
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::Malformed { line, text } => {
+                write!(f, "line {line}: expected `key = value`, got `{text}`")
+            }
+            ParseError::UnknownKey(k) => write!(f, "unknown config key `{k}`"),
+            ParseError::BadValue { key, value } => {
+                write!(f, "bad value for `{key}`: `{value}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse `key = value` lines. `#` starts a comment; blank lines are skipped;
 /// values may be quoted.

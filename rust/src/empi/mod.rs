@@ -57,10 +57,52 @@ pub struct Recvd {
 }
 
 /// Pending nonblocking receive (MPI_Request for receives).
-#[derive(Clone, Debug)]
+///
+/// Posting happens eagerly in the fabric's matching engine: the request
+/// enters the destination mailbox's posted-receive queue at `irecv` time,
+/// so an arriving message is steered straight into it (bypassing the
+/// unexpected queue) and `test` is a slot check instead of a queue scan.
+/// Dropping an unconsumed request cancels the posting; a message that was
+/// already delivered to it is re-queued at its arrival position, never
+/// lost or reordered.
 pub struct RecvReq {
-    spec: MatchSpec,
-    done: Option<Recvd>,
+    fabric: Arc<Fabric>,
+    me: usize,
+    token: Option<u64>,
+}
+
+impl RecvReq {
+    fn new(fabric: Arc<Fabric>, me: usize, spec: &MatchSpec) -> Self {
+        let token = fabric.post_recv(me, spec);
+        Self {
+            fabric,
+            me,
+            token: Some(token),
+        }
+    }
+
+    /// Poll for completion. A request yields its message exactly once;
+    /// afterwards it stays `Ok(None)`, matching a completed MPI request.
+    fn poll(&mut self) -> Result<Option<Envelope>, CommError> {
+        let Some(token) = self.token else {
+            return Ok(None);
+        };
+        match self.fabric.poll_posted(self.me, token)? {
+            Some(env) => {
+                self.token = None;
+                Ok(Some(env))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+impl Drop for RecvReq {
+    fn drop(&mut self) {
+        if let Some(token) = self.token.take() {
+            self.fabric.cancel_posted(self.me, token);
+        }
+    }
 }
 
 /// An intracommunicator handle, local to one rank's thread.
@@ -212,23 +254,18 @@ impl Comm {
         Ok(self.translate(e))
     }
 
-    /// Post a nonblocking receive.
+    /// Post a nonblocking receive into the fabric's posted-receive queue.
     pub fn irecv(&self, src: Src, tag: Tag) -> RecvReq {
-        RecvReq {
-            spec: self.spec(src, tag),
-            done: None,
-        }
+        RecvReq::new(
+            self.fabric.clone(),
+            self.my_fabric_rank(),
+            &self.spec(src, tag),
+        )
     }
 
     /// EMPI_Test: poll a pending receive. Returns the message once.
     pub fn test(&self, req: &mut RecvReq) -> Result<Option<Recvd>, CommError> {
-        if let Some(d) = req.done.take() {
-            return Ok(Some(d));
-        }
-        match self.fabric.try_recv(self.my_fabric_rank(), &req.spec)? {
-            Some(e) => Ok(Some(self.translate(e))),
-            None => Ok(None),
-        }
+        Ok(req.poll()?.map(|e| self.translate(e)))
     }
 
     /// EMPI_Probe analogue.
@@ -411,28 +448,23 @@ impl InterComm {
 
     /// Post a nonblocking receive from the remote group.
     pub fn irecv(&self, remote_rank: Src, tag: Tag) -> RecvReq {
-        RecvReq {
-            spec: MatchSpec {
-                ctx: self.ctx,
-                src: match remote_rank {
-                    Src::Rank(r) => Some(self.remote[r]),
-                    Src::Any => None,
-                },
-                tag: match tag {
-                    Tag::Tag(t) => Some(t),
-                    Tag::Any => None,
-                },
+        let spec = MatchSpec {
+            ctx: self.ctx,
+            src: match remote_rank {
+                Src::Rank(r) => Some(self.remote[r]),
+                Src::Any => None,
             },
-            done: None,
-        }
+            tag: match tag {
+                Tag::Tag(t) => Some(t),
+                Tag::Any => None,
+            },
+        };
+        RecvReq::new(self.fabric.clone(), self.my_fabric_rank(), &spec)
     }
 
     /// Poll a pending intercomm receive.
     pub fn test(&self, req: &mut RecvReq) -> Result<Option<Recvd>, CommError> {
-        if let Some(d) = req.done.take() {
-            return Ok(Some(d));
-        }
-        match self.fabric.try_recv(self.my_fabric_rank(), &req.spec)? {
+        match req.poll()? {
             Some(e) => {
                 let src = self
                     .remote

@@ -35,8 +35,10 @@ impl IAlltoallv {
             comm.isend(to, tag, &blocks[to])?;
         }
 
-        // Post one receive per source.
-        let mut reqs: Vec<Option<RecvReq>> = vec![None; n];
+        // Post one receive per source. These land in the fabric's
+        // posted-receive queue, so arriving blocks complete their request
+        // directly and each `test` sweep is O(outstanding) slot checks.
+        let mut reqs: Vec<Option<RecvReq>> = (0..n).map(|_| None).collect();
         let mut outstanding = 0;
         for (src, slot) in reqs.iter_mut().enumerate() {
             if src != me {

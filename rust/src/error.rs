@@ -8,50 +8,100 @@
 //! * [`UlfmError`] — the ULFM error classes of §III-B: `ProcFailed`
 //!   (MPI_ERR_PROC_FAILED) and `Revoked` (MPI_ERR_REVOKED).
 //! * [`JobError`] — what the application/driver ultimately sees.
+//!
+//! Display/Error impls are hand-written: the offline build image has no
+//! `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug, Clone)]
+#[derive(Debug, Clone)]
 pub enum CommError {
     /// The calling rank has been poisoned by the fault injector and must
     /// unwind now (cooperative kill).
-    #[error("rank {rank} killed by fault injector")]
     Killed { rank: usize },
 
     /// A blocking fabric operation exceeded its deadline. For the
     /// no-fault-tolerance native library this models a hang/abort.
-    #[error("rank {rank} timed out: {detail}")]
     Timeout { rank: usize, detail: String },
 }
 
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Killed { rank } => write!(f, "rank {rank} killed by fault injector"),
+            CommError::Timeout { rank, detail } => {
+                write!(f, "rank {rank} timed out: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
 /// ULFM error classes (§III-B).
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum UlfmError {
     /// MPI_ERR_PROC_FAILED: a process involved in the operation is dead.
-    #[error("process failure detected (failed ranks in comm: {failed:?})")]
     ProcFailed { failed: Vec<usize> },
 
     /// MPI_ERR_REVOKED: the communicator was revoked by some process.
-    #[error("communicator revoked")]
     Revoked,
 }
 
+impl fmt::Display for UlfmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UlfmError::ProcFailed { failed } => {
+                write!(f, "process failure detected (failed ranks in comm: {failed:?})")
+            }
+            UlfmError::Revoked => write!(f, "communicator revoked"),
+        }
+    }
+}
+
+impl std::error::Error for UlfmError {}
+
 /// Terminal outcome of a rank or the whole job.
-#[derive(Error, Debug, Clone)]
+#[derive(Debug, Clone)]
 pub enum JobError {
-    #[error(transparent)]
-    Comm(#[from] CommError),
+    Comm(CommError),
 
     /// A computational process with no (live) replica died: the job is
     /// interrupted and must fall back to checkpoint/restart (§VII-B).
-    #[error("job interrupted: computational rank {rank} had no live replica")]
     Interrupted { rank: usize },
 
-    #[error("configuration error: {0}")]
     Config(String),
 
-    #[error("runtime error: {0}")]
     Runtime(String),
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Comm(e) => write!(f, "{e}"),
+            JobError::Interrupted { rank } => write!(
+                f,
+                "job interrupted: computational rank {rank} had no live replica"
+            ),
+            JobError::Config(s) => write!(f, "configuration error: {s}"),
+            JobError::Runtime(s) => write!(f, "runtime error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            JobError::Comm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CommError> for JobError {
+    fn from(e: CommError) -> Self {
+        JobError::Comm(e)
+    }
 }
 
 /// Payload carried through `panic_any` when a rank thread must unwind

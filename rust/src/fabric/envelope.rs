@@ -42,6 +42,20 @@ impl Envelope {
     }
 }
 
+/// Key of one hash bucket in the mailbox matching engine: every envelope
+/// belongs to exactly one `(ctx, src, tag)` bucket, and a fully-exact
+/// [`MatchSpec`] addresses exactly one bucket — that is what makes exact
+/// matching O(1) amortized instead of a queue scan.
+pub type BucketKey = (u64, usize, i64);
+
+impl Envelope {
+    /// The `(ctx, src, tag)` bucket this envelope files under.
+    #[inline]
+    pub fn bucket_key(&self) -> BucketKey {
+        (self.ctx, self.src, self.tag)
+    }
+}
+
 /// Receive-side matching: (ctx, optional src, optional tag).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MatchSpec {
@@ -83,6 +97,24 @@ impl MatchSpec {
             && self.src.map_or(true, |s| s == e.src)
             && self.tag.map_or(true, |t| t == e.tag)
     }
+
+    /// The single bucket this spec addresses, when it is fully exact;
+    /// `None` for wildcard specs (which fall back to a bucket scan).
+    #[inline]
+    pub fn exact_key(&self) -> Option<BucketKey> {
+        match (self.src, self.tag) {
+            (Some(s), Some(t)) => Some((self.ctx, s, t)),
+            _ => None,
+        }
+    }
+
+    /// Does this spec match every envelope filed under `key`?
+    #[inline]
+    pub fn matches_key(&self, key: &BucketKey) -> bool {
+        self.ctx == key.0
+            && self.src.map_or(true, |s| s == key.1)
+            && self.tag.map_or(true, |t| t == key.2)
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +136,20 @@ mod tests {
         assert!(MatchSpec::any_source(9, 5).matches(&e));
         assert!(MatchSpec::any(9).matches(&e));
         assert!(!MatchSpec::any(10).matches(&e));
+    }
+
+    #[test]
+    fn bucket_keys_line_up_with_matching() {
+        let e = Envelope::new(3, 0, 9, 5, 0, vec![]);
+        assert_eq!(e.bucket_key(), (9, 3, 5));
+        assert_eq!(MatchSpec::exact(3, 9, 5).exact_key(), Some((9, 3, 5)));
+        assert_eq!(MatchSpec::any_source(9, 5).exact_key(), None);
+        assert_eq!(MatchSpec::any(9).exact_key(), None);
+        assert!(MatchSpec::any_source(9, 5).matches_key(&e.bucket_key()));
+        assert!(MatchSpec::any(9).matches_key(&e.bucket_key()));
+        assert!(!MatchSpec::any(8).matches_key(&e.bucket_key()));
+        assert!(!MatchSpec::any_source(9, 6).matches_key(&e.bucket_key()));
+        assert!(!MatchSpec::exact(2, 9, 5).matches_key(&e.bucket_key()));
     }
 
     #[test]

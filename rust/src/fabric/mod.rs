@@ -1,9 +1,8 @@
 //! The simulated interconnect.
 //!
 //! Every MPI process in the reproduction is an OS thread; the "wire" between
-//! them is this fabric: per-rank tag-matching mailboxes guarded by
-//! mutex+condvar, plus a cost model standing in for the Infiniband fabric of
-//! the paper's 29-node cluster.
+//! them is this fabric: per-rank tag-matching mailboxes plus a cost model
+//! standing in for the Infiniband fabric of the paper's 29-node cluster.
 //!
 //! Two fabric instances exist per job — one with the **EMPI** (native,
 //! MVAPICH2-like) cost profile carrying all application data, and one with
@@ -11,34 +10,290 @@
 //! control traffic — mirroring the paper's dual-library design (§IV). Both
 //! share one [`ProcSet`] so a process death is a single event observed (or
 //! deliberately *not* observed, on the EMPI side) by both.
+//!
+//! # The matching engine
+//!
+//! Each mailbox is an MPI-style pair of queues, the structure every tuned
+//! engine (MVAPICH2, Open MPI, and the FTHP-MPI successor work) uses:
+//!
+//! * the **unexpected-message queue** holds arrived envelopes no receive
+//!   has claimed, bucketed by `(ctx, src, tag)` ([`BucketKey`]) with a
+//!   per-mailbox arrival sequence stamped on every delivery. A fully-exact
+//!   receive pops its bucket's front in O(1) amortized; a wildcard receive
+//!   (`MPI_ANY_SOURCE`/`MPI_ANY_TAG`) scans only the live bucket *fronts*
+//!   and takes the globally earliest arrival, preserving MPI's
+//!   wildcard-in-arrival-order semantics across buckets;
+//! * the **posted-receive queue** holds receives waiting for their message.
+//!   A sender first searches it (exact bucket front + wildcard fallback
+//!   list, earliest post wins) and, on a hit, steers the envelope straight
+//!   into the waiting request and wakes **only that waiter** via its own
+//!   condvar — never `notify_all` over every blocked receiver.
+//!
+//! Within one `(ctx, src, tag)` channel FIFO order is inherited from the
+//! arrival sequence; the "send to a dead rank is silently enqueued"
+//! native-MPI behaviour the recovery protocol relies on is preserved
+//! because delivery never inspects liveness.
 
 pub mod envelope;
 pub mod netmodel;
 pub mod procset;
 
-pub use envelope::{Envelope, MatchSpec};
+pub use envelope::{BucketKey, Envelope, MatchSpec};
 pub use netmodel::NetModel;
 pub use procset::{ProcSet, ProcState};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::CommError;
 
-/// Per-rank mailbox: a FIFO of envelopes plus a condvar for blocked readers
-/// and a monotone arrival counter (lets pollers park until *new* mail
-/// instead of spinning — the §Perf fix for oversubscribed rank threads).
+/// Arrived envelopes no receive had claimed, bucketed by [`BucketKey`].
+/// Buckets are removed as soon as they drain so wildcard scans only touch
+/// live keys. Every envelope carries its arrival sequence number; within a
+/// bucket the deque is ascending in it, which makes the bucket front the
+/// earliest arrival of that channel.
+#[derive(Default)]
+struct UnexpectedQueue {
+    buckets: HashMap<BucketKey, VecDeque<(u64, Envelope)>>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl UnexpectedQueue {
+    /// Stamp the next arrival (shared with posted-slot deliveries so one
+    /// total arrival order exists per mailbox).
+    fn alloc_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    fn push_with_seq(&mut self, seq: u64, env: Envelope) {
+        self.buckets
+            .entry(env.bucket_key())
+            .or_default()
+            .push_back((seq, env));
+        self.len += 1;
+    }
+
+    /// Put back a message that had been delivered to a since-cancelled
+    /// posted receive, at its original arrival position.
+    fn reinject(&mut self, seq: u64, env: Envelope) {
+        let q = self.buckets.entry(env.bucket_key()).or_default();
+        let pos = q.iter().position(|&(s, _)| s > seq).unwrap_or(q.len());
+        q.insert(pos, (seq, env));
+        self.len += 1;
+    }
+
+    /// Remove and return the earliest arrival matching `spec`.
+    fn take(&mut self, spec: &MatchSpec) -> Option<(u64, Envelope)> {
+        let key = match spec.exact_key() {
+            Some(k) => {
+                if !self.buckets.contains_key(&k) {
+                    return None;
+                }
+                k
+            }
+            // Wildcard fallback: earliest arrival over matching bucket
+            // fronts — O(live buckets), not O(queued messages).
+            None => *self
+                .buckets
+                .iter()
+                .filter(|(k, _)| spec.matches_key(k))
+                .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |&(s, _)| s))
+                .map(|(k, _)| k)?,
+        };
+        let q = self.buckets.get_mut(&key).expect("bucket exists");
+        let got = q.pop_front().expect("buckets are never left empty");
+        if q.is_empty() {
+            self.buckets.remove(&key);
+        }
+        self.len -= 1;
+        Some(got)
+    }
+
+    fn probe(&self, spec: &MatchSpec) -> bool {
+        match spec.exact_key() {
+            Some(k) => self.buckets.contains_key(&k),
+            None => self.buckets.keys().any(|k| spec.matches_key(k)),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.buckets.clear();
+        self.len = 0;
+    }
+}
+
+/// One posted (pending) receive. While unmatched it is *listed* in the
+/// [`PostedQueue`] index; once a sender fills its slot it is unlisted and
+/// only waits to be consumed or cancelled by its owner.
+struct PostedEntry {
+    spec: MatchSpec,
+    /// `(arrival seq, envelope)` once delivered.
+    slot: Option<(u64, Envelope)>,
+    /// Private wakeup for this waiter (paired with the mailbox mutex).
+    cv: Arc<Condvar>,
+}
+
+/// Pending receives, indexed like the unexpected queue: exact specs live in
+/// per-bucket deques (post order), wildcard specs in a fallback list (post
+/// order). Entry ids are allocated monotonically, so id order == post order
+/// and "earliest posted receive wins" is a `min` over candidates.
+#[derive(Default)]
+struct PostedQueue {
+    next_id: u64,
+    exact: HashMap<BucketKey, VecDeque<u64>>,
+    wild: Vec<u64>,
+    entries: HashMap<u64, PostedEntry>,
+}
+
+impl PostedQueue {
+    /// List a fresh unmatched entry. The caller must have drained the
+    /// unexpected queue first (see [`Fabric::post_recv`]).
+    fn post(&mut self, spec: MatchSpec) -> (u64, Arc<Condvar>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let cv = Arc::new(Condvar::new());
+        match spec.exact_key() {
+            Some(k) => self.exact.entry(k).or_default().push_back(id),
+            None => self.wild.push(id),
+        }
+        self.entries.insert(
+            id,
+            PostedEntry {
+                spec,
+                slot: None,
+                cv: cv.clone(),
+            },
+        );
+        (id, cv)
+    }
+
+    /// Create an entry that is already complete (its message was waiting in
+    /// the unexpected queue when the receive was posted).
+    fn post_filled(&mut self, spec: MatchSpec, got: (u64, Envelope)) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.insert(
+            id,
+            PostedEntry {
+                spec,
+                slot: Some(got),
+                cv: Arc::new(Condvar::new()),
+            },
+        );
+        id
+    }
+
+    /// Earliest-posted listed entry matching `env`, if any.
+    fn match_posted(&self, env: &Envelope) -> Option<u64> {
+        let exact = self
+            .exact
+            .get(&env.bucket_key())
+            .and_then(|q| q.front().copied());
+        // `wild` is in post order, so the first match is its minimum.
+        let wild = self
+            .wild
+            .iter()
+            .copied()
+            .find(|id| self.entries[id].spec.matches(env));
+        match (exact, wild) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Deliver `env` (stamped with arrival `seq`) into entry `id`, unlist
+    /// it, and wake exactly that waiter.
+    fn fill(&mut self, id: u64, seq: u64, env: Envelope) {
+        let key = self.entries.get(&id).expect("filled entry exists").spec.exact_key();
+        Self::unlist_from(&mut self.exact, &mut self.wild, key, id);
+        let e = self.entries.get_mut(&id).expect("filled entry exists");
+        e.slot = Some((seq, env));
+        e.cv.notify_all();
+    }
+
+    fn unlist_from(
+        exact: &mut HashMap<BucketKey, VecDeque<u64>>,
+        wild: &mut Vec<u64>,
+        key: Option<BucketKey>,
+        id: u64,
+    ) {
+        match key {
+            Some(k) => {
+                if let Some(q) = exact.get_mut(&k) {
+                    if let Some(pos) = q.iter().position(|&x| x == id) {
+                        q.remove(pos);
+                    }
+                    if q.is_empty() {
+                        exact.remove(&k);
+                    }
+                }
+            }
+            None => wild.retain(|&x| x != id),
+        }
+    }
+
+    /// Take the delivered envelope, removing the request entirely. `None`
+    /// while undelivered or after the entry was already consumed/cancelled.
+    fn try_consume(&mut self, id: u64) -> Option<Envelope> {
+        if self.entries.get(&id)?.slot.is_some() {
+            let e = self.entries.remove(&id).expect("entry present");
+            return e.slot.map(|(_, env)| env);
+        }
+        None
+    }
+
+    /// Abandon a request. A delivered-but-unread message is handed back so
+    /// the caller can re-queue it — it must never be lost.
+    fn cancel(&mut self, id: u64) -> Option<(u64, Envelope)> {
+        let e = self.entries.remove(&id)?;
+        if e.slot.is_none() {
+            Self::unlist_from(&mut self.exact, &mut self.wild, e.spec.exact_key(), id);
+        }
+        e.slot
+    }
+
+    /// Wake every pending waiter (kill/revoke/finalize paths).
+    fn notify_all_waiters(&self) {
+        for e in self.entries.values() {
+            e.cv.notify_all();
+        }
+    }
+}
+
+/// State behind one mailbox's mutex.
+#[derive(Default)]
+struct MailboxInner {
+    unexpected: UnexpectedQueue,
+    posted: PostedQueue,
+    /// Arrival clock parked pollers compare against. Deliberately distinct
+    /// from the unexpected queue's ordering sequence: a cancellation
+    /// re-publishes a message (bumping this clock so pollers re-test)
+    /// without allocating a new ordering stamp.
+    arrivals: u64,
+    /// Bumped by [`Fabric::wake_all`] so parked pollers return promptly.
+    wakes: u64,
+    /// Threads currently parked in [`Fabric::wait_new_mail`]; the bell is
+    /// only rung when somebody is listening.
+    bell_waiters: usize,
+}
+
+/// Per-rank mailbox: the two matching queues plus a bell for clock-parked
+/// pollers. Blocked receivers are NOT woken through the bell — each posted
+/// receive has its own condvar, so a send wakes only the matching waiter.
 struct Mailbox {
-    queue: Mutex<(VecDeque<Envelope>, u64)>,
+    inner: Mutex<MailboxInner>,
     bell: Condvar,
 }
 
 impl Mailbox {
     fn new() -> Self {
         Self {
-            queue: Mutex::new((VecDeque::new(), 0)),
+            inner: Mutex::new(MailboxInner::default()),
             bell: Condvar::new(),
         }
     }
@@ -109,6 +364,10 @@ impl Fabric {
     /// to a dead rank is enqueued and simply never read — exactly how an
     /// eager native-MPI send to a crashed peer behaves (the paper relies on
     /// this: EMPI must stay oblivious to failures, §IV-C).
+    ///
+    /// Delivery first consults the destination's posted-receive queue; on a
+    /// hit the envelope bypasses the unexpected queue entirely and only the
+    /// matching waiter is woken.
     pub fn send(&self, env: Envelope) -> Result<(), CommError> {
         self.procs.check_poison(env.src)?;
         let nbytes = env.data.len() as u64;
@@ -119,49 +378,123 @@ impl Fabric {
         self.model.inject_delay(cost);
 
         let mb = &self.boxes[env.dst];
-        let mut q = mb.queue.lock().unwrap();
-        q.0.push_back(env);
-        q.1 += 1;
-        drop(q);
-        mb.bell.notify_all();
+        let mut guard = mb.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.arrivals += 1;
+        let seq = inner.unexpected.alloc_seq();
+        match inner.posted.match_posted(&env) {
+            Some(id) => inner.posted.fill(id, seq, env),
+            None => inner.unexpected.push_with_seq(seq, env),
+        }
+        let ring = inner.bell_waiters > 0;
+        drop(guard);
+        if ring {
+            mb.bell.notify_all();
+        }
         Ok(())
     }
 
-    /// Non-blocking matched receive: removes and returns the first envelope
-    /// matching `spec`, preserving FIFO order per (src, ctx, tag).
+    /// Non-blocking matched receive: removes and returns the earliest
+    /// arrival matching `spec`, preserving FIFO order per (src, ctx, tag)
+    /// and arrival order across buckets for wildcards.
     pub fn try_recv(&self, me: usize, spec: &MatchSpec) -> Result<Option<Envelope>, CommError> {
         self.procs.check_poison(me)?;
-        let mut q = self.boxes[me].queue.lock().unwrap();
-        if let Some(pos) = q.0.iter().position(|e| spec.matches(e)) {
-            Ok(q.0.remove(pos))
-        } else {
-            Ok(None)
+        let mut inner = self.boxes[me].inner.lock().unwrap();
+        Ok(inner.unexpected.take(spec).map(|(_, e)| e))
+    }
+
+    // ------------------------------------------------- posted receives
+
+    /// Post a receive (MPI_Irecv analogue). If a matching message already
+    /// waits in the unexpected queue it is claimed immediately; otherwise
+    /// the request is listed so a future send can complete it directly.
+    /// Poll with [`Fabric::poll_posted`]; abandon with
+    /// [`Fabric::cancel_posted`].
+    pub fn post_recv(&self, me: usize, spec: &MatchSpec) -> u64 {
+        let mut guard = self.boxes[me].inner.lock().unwrap();
+        let inner = &mut *guard;
+        match inner.unexpected.take(spec) {
+            Some(got) => inner.posted.post_filled(spec.clone(), got),
+            None => inner.posted.post(spec.clone()).0,
         }
     }
+
+    /// Poll a posted receive. Returns the message exactly once; afterwards
+    /// the request is gone and further polls return `Ok(None)`.
+    pub fn poll_posted(&self, me: usize, token: u64) -> Result<Option<Envelope>, CommError> {
+        self.procs.check_poison(me)?;
+        let mut inner = self.boxes[me].inner.lock().unwrap();
+        Ok(inner.posted.try_consume(token))
+    }
+
+    /// Cancel a posted receive. If its message had already been delivered,
+    /// it is offered to the remaining posted receives first (the abandoned
+    /// request may have raced another matching receive for it) and only
+    /// then re-queued at its original arrival position — cancellation never
+    /// loses mail, strands a waiter, or reorders a channel.
+    pub fn cancel_posted(&self, me: usize, token: u64) {
+        let mb = &self.boxes[me];
+        let mut guard = mb.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let Some((seq, env)) = inner.posted.cancel(token) else {
+            return;
+        };
+        match inner.posted.match_posted(&env) {
+            Some(id) => inner.posted.fill(id, seq, env),
+            None => inner.unexpected.reinject(seq, env),
+        }
+        // Ring the clock: the message is visible again (it was counted as
+        // an arrival once, but parked pollers compare, not count).
+        inner.arrivals += 1;
+        let ring = inner.bell_waiters > 0;
+        drop(guard);
+        if ring {
+            mb.bell.notify_all();
+        }
+    }
+
+    // --------------------------------------------------- clock parking
 
     /// Monotone count of envelopes ever delivered to `me` (arrival clock).
     pub fn arrivals(&self, me: usize) -> u64 {
-        self.boxes[me].queue.lock().unwrap().1
+        self.boxes[me].inner.lock().unwrap().arrivals
     }
 
     /// Park until the arrival clock moves past `last` (new mail), the
-    /// fabric is woken (revoke/kill/finalize), or `timeout` expires.
-    /// Returns the current clock. Replaces hot-path spinning: pollers
-    /// alternate try_recv / failure-check / `wait_new_mail`.
+    /// fabric is woken (revoke/kill/finalize), or `timeout` genuinely
+    /// elapses — spurious condvar wakeups re-enter the wait with the
+    /// remaining budget instead of returning early. Returns the current
+    /// clock. Replaces hot-path spinning: pollers alternate try_recv /
+    /// failure-check / `wait_new_mail`.
     pub fn wait_new_mail(&self, me: usize, last: u64, timeout: Duration) -> u64 {
+        let start = Instant::now();
         let mb = &self.boxes[me];
-        let mut q = mb.queue.lock().unwrap();
-        if q.1 != last {
-            return q.1;
+        let mut guard = mb.inner.lock().unwrap();
+        let wakes_at_entry = guard.wakes;
+        while guard.arrivals == last && guard.wakes == wakes_at_entry {
+            let elapsed = start.elapsed();
+            if elapsed >= timeout {
+                break;
+            }
+            guard.bell_waiters += 1;
+            let (g, _res) = mb.bell.wait_timeout(guard, timeout - elapsed).unwrap();
+            guard = g;
+            guard.bell_waiters -= 1;
         }
-        let (nq, _res) = mb.bell.wait_timeout(q, timeout).unwrap();
-        q = nq;
-        q.1
+        guard.arrivals
     }
+
+    // ------------------------------------------------ blocking receive
 
     /// Blocking matched receive with a deadline. The deadline exists so that
     /// protocol bugs (or EMPI-without-FT talking to a dead peer) surface as
     /// loud `Timeout` errors in tests rather than hangs.
+    ///
+    /// Internally this is post + park-on-own-condvar: the receive is pushed
+    /// into the posted queue, so a matching send completes it directly and
+    /// wakes only this thread. Parking is bounded by
+    /// `min(POLL_TICK, remaining deadline)` so the caller's deadline is
+    /// never overshot by a poll tick.
     pub fn recv(
         &self,
         me: usize,
@@ -170,46 +503,72 @@ impl Fabric {
     ) -> Result<Envelope, CommError> {
         let start = Instant::now();
         let mb = &self.boxes[me];
-        let mut q = mb.queue.lock().unwrap();
+        let mut guard = mb.inner.lock().unwrap();
+        self.procs.check_poison(me)?;
+        if let Some((_, env)) = guard.unexpected.take(spec) {
+            return Ok(env);
+        }
+        let (id, cv) = guard.posted.post(spec.clone());
         loop {
-            self.procs.check_poison(me)?;
-            if let Some(pos) = q.0.iter().position(|e| spec.matches(e)) {
-                return Ok(q.0.remove(pos).unwrap());
-            }
-            if start.elapsed() > deadline {
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                // Delivered at the very last instant? Take it; else cancel.
+                if let Some((_, env)) = guard.posted.cancel(id) {
+                    return Ok(env);
+                }
                 return Err(CommError::Timeout {
                     rank: me,
                     detail: format!("{} recv {:?}", self.label, spec),
                 });
             }
-            let (nq, _tm) = mb.bell.wait_timeout(q, POLL_TICK).unwrap();
-            q = nq;
+            let wait = POLL_TICK.min(deadline - elapsed);
+            let (g, _tm) = cv.wait_timeout(guard, wait).unwrap();
+            guard = g;
+            if let Err(e) = self.procs.check_poison(me) {
+                let inner = &mut *guard;
+                if let Some((seq, env)) = inner.posted.cancel(id) {
+                    // The rank is dying; leave the message queued (and
+                    // never read), like any other mail to a dead rank.
+                    inner.unexpected.reinject(seq, env);
+                }
+                return Err(e);
+            }
+            if let Some(env) = guard.posted.try_consume(id) {
+                return Ok(env);
+            }
         }
     }
 
     /// Is a matching message already waiting? (MPI_Probe analogue.)
     pub fn probe(&self, me: usize, spec: &MatchSpec) -> Result<bool, CommError> {
         self.procs.check_poison(me)?;
-        let q = self.boxes[me].queue.lock().unwrap();
-        Ok(q.0.iter().any(|e| spec.matches(e)))
+        Ok(self.boxes[me].inner.lock().unwrap().unexpected.probe(spec))
     }
 
-    /// Number of queued envelopes (diagnostics only).
+    /// Number of queued (unclaimed) envelopes (diagnostics only).
     pub fn queued(&self, me: usize) -> usize {
-        self.boxes[me].queue.lock().unwrap().0.len()
+        self.boxes[me].inner.lock().unwrap().unexpected.len
     }
 
     /// Drop every queued message at `rank` (used when a rank is recycled in
     /// tests; real ranks never reuse ids within a job).
     pub fn purge(&self, rank: usize) {
-        self.boxes[rank].queue.lock().unwrap().0.clear();
+        self.boxes[rank].inner.lock().unwrap().unexpected.clear();
     }
 
-    /// Wake all blocked receivers (invoked by the kill path so poisoned
-    /// ranks notice promptly instead of waiting out their poll tick).
+    /// Wake all blocked receivers and parked pollers (invoked by the kill
+    /// and revoke paths so poisoned ranks notice promptly instead of
+    /// waiting out their poll tick).
     pub fn wake_all(&self) {
         for mb in &self.boxes {
-            mb.bell.notify_all();
+            let mut inner = mb.inner.lock().unwrap();
+            inner.wakes += 1;
+            inner.posted.notify_all_waiters();
+            let ring = inner.bell_waiters > 0;
+            drop(inner);
+            if ring {
+                mb.bell.notify_all();
+            }
         }
     }
 }
@@ -331,5 +690,172 @@ mod tests {
         assert_eq!(m, 2);
         assert_eq!(b, 150);
         assert!(v >= 2 * 1_500);
+    }
+
+    // ------------------------------------------ indexed-engine semantics
+
+    #[test]
+    fn fifo_preserved_per_channel_under_interleaved_tags() {
+        // Interleave two tag streams (and a second source); each channel
+        // must independently stay FIFO.
+        let (_p, f) = tiny(3);
+        f.send(env(0, 2, 1, 10, b"a0")).unwrap();
+        f.send(env(0, 2, 1, 11, b"b0")).unwrap();
+        f.send(env(1, 2, 1, 10, b"c0")).unwrap();
+        f.send(env(0, 2, 1, 10, b"a1")).unwrap();
+        f.send(env(0, 2, 1, 11, b"b1")).unwrap();
+        f.send(env(1, 2, 1, 10, b"c1")).unwrap();
+
+        let t10 = MatchSpec::exact(0, 1, 10);
+        let t11 = MatchSpec::exact(0, 1, 11);
+        let s1 = MatchSpec::exact(1, 1, 10);
+        assert_eq!(&*f.try_recv(2, &t10).unwrap().unwrap().data, b"a0");
+        assert_eq!(&*f.try_recv(2, &t11).unwrap().unwrap().data, b"b0");
+        assert_eq!(&*f.try_recv(2, &t10).unwrap().unwrap().data, b"a1");
+        assert_eq!(&*f.try_recv(2, &t11).unwrap().unwrap().data, b"b1");
+        assert_eq!(&*f.try_recv(2, &s1).unwrap().unwrap().data, b"c0");
+        assert_eq!(&*f.try_recv(2, &s1).unwrap().unwrap().data, b"c1");
+        assert_eq!(f.queued(2), 0);
+    }
+
+    #[test]
+    fn wildcard_matches_in_arrival_order_across_buckets() {
+        // Messages land in three different buckets; a full wildcard must
+        // drain them in global arrival order, and an any-source receive in
+        // arrival order across the matching-tag buckets.
+        let (_p, f) = tiny(4);
+        f.send(env(2, 0, 1, 5, b"one")).unwrap();
+        f.send(env(1, 0, 1, 7, b"two")).unwrap();
+        f.send(env(3, 0, 1, 5, b"three")).unwrap();
+
+        let any = MatchSpec::any(1);
+        let got = f.try_recv(0, &any).unwrap().unwrap();
+        assert_eq!(got.data.as_slice(), b"one");
+        assert_eq!(got.src, 2);
+        let got = f.try_recv(0, &any).unwrap().unwrap();
+        assert_eq!(got.data.as_slice(), b"two");
+        assert_eq!(got.src, 1);
+
+        // Refill and drain by any-source on tag 5 only.
+        f.send(env(1, 0, 1, 5, b"four")).unwrap();
+        let any5 = MatchSpec::any_source(1, 5);
+        let got = f.try_recv(0, &any5).unwrap().unwrap();
+        assert_eq!(got.data.as_slice(), b"three");
+        assert_eq!(got.src, 3);
+        let got = f.try_recv(0, &any5).unwrap().unwrap();
+        assert_eq!(got.data.as_slice(), b"four");
+        assert_eq!(got.src, 1);
+        assert_eq!(f.queued(0), 0);
+    }
+
+    #[test]
+    fn posted_receive_beats_unexpected_queue() {
+        // A receive posted before the message arrives claims it directly —
+        // the envelope must never touch the unexpected queue.
+        let (_p, f) = tiny(2);
+        let spec = MatchSpec::exact(0, 1, 9);
+        let id = f.post_recv(1, &spec);
+        f.send(env(0, 1, 1, 9, b"direct")).unwrap();
+        assert_eq!(f.queued(1), 0, "message must bypass the unexpected queue");
+        assert!(!f.probe(1, &spec).unwrap(), "claimed mail is not probeable");
+        let got = f.poll_posted(1, id).unwrap().unwrap();
+        assert_eq!(&*got.data, b"direct");
+        // A request completes exactly once.
+        assert!(f.poll_posted(1, id).unwrap().is_none());
+    }
+
+    #[test]
+    fn posting_drains_unexpected_queue_first() {
+        let (_p, f) = tiny(2);
+        f.send(env(0, 1, 1, 4, b"early")).unwrap();
+        assert_eq!(f.queued(1), 1);
+        let id = f.post_recv(1, &MatchSpec::exact(0, 1, 4));
+        assert_eq!(f.queued(1), 0, "post must claim waiting mail");
+        assert_eq!(&*f.poll_posted(1, id).unwrap().unwrap().data, b"early");
+    }
+
+    #[test]
+    fn posted_receives_match_in_post_order() {
+        // An exact post and a wildcard post both match; the earlier post
+        // wins, the later one gets the next message.
+        let (_p, f) = tiny(3);
+        let id1 = f.post_recv(1, &MatchSpec::exact(0, 1, 4));
+        let id2 = f.post_recv(1, &MatchSpec::any_source(1, 4));
+        f.send(env(0, 1, 1, 4, b"x")).unwrap();
+        assert_eq!(&*f.poll_posted(1, id1).unwrap().unwrap().data, b"x");
+        assert!(f.poll_posted(1, id2).unwrap().is_none());
+        f.send(env(2, 1, 1, 4, b"y")).unwrap();
+        assert_eq!(&*f.poll_posted(1, id2).unwrap().unwrap().data, b"y");
+        assert_eq!(f.queued(1), 0);
+    }
+
+    #[test]
+    fn cancelled_posted_receive_requeues_delivered_message_in_order() {
+        // A message steered into a posted receive that is then cancelled
+        // must reappear in the unexpected queue *ahead* of later arrivals
+        // on the same channel — cancellation may not reorder FIFO.
+        let (_p, f) = tiny(2);
+        let id = f.post_recv(1, &MatchSpec::exact(0, 1, 3));
+        f.send(env(0, 1, 1, 3, b"first")).unwrap();
+        f.send(env(0, 1, 1, 3, b"second")).unwrap();
+        assert_eq!(f.queued(1), 1); // "second" is unexpected
+        f.cancel_posted(1, id);
+        assert_eq!(f.queued(1), 2);
+        let spec = MatchSpec::exact(0, 1, 3);
+        assert_eq!(&*f.try_recv(1, &spec).unwrap().unwrap().data, b"first");
+        assert_eq!(&*f.try_recv(1, &spec).unwrap().unwrap().data, b"second");
+    }
+
+    #[test]
+    fn cancelling_winner_hands_message_to_other_posted_receive() {
+        // Two overlapping posted receives; the earlier post wins delivery,
+        // is abandoned unread, and the message must migrate to the other
+        // still-listed receive instead of stranding in the unexpected
+        // queue (where no sender would ever re-match it).
+        let (_p, f) = tiny(2);
+        let id1 = f.post_recv(1, &MatchSpec::exact(0, 1, 5));
+        let id2 = f.post_recv(1, &MatchSpec::any_source(1, 5));
+        f.send(env(0, 1, 1, 5, b"m")).unwrap(); // fills id1 (earlier post)
+        f.cancel_posted(1, id1);
+        assert_eq!(&*f.poll_posted(1, id2).unwrap().unwrap().data, b"m");
+        assert_eq!(f.queued(1), 0);
+    }
+
+    #[test]
+    fn purge_clears_every_bucket() {
+        let (_p, f) = tiny(3);
+        f.send(env(0, 1, 1, 1, b"a")).unwrap();
+        f.send(env(0, 1, 1, 2, b"b")).unwrap();
+        f.send(env(2, 1, 7, 3, b"c")).unwrap();
+        assert_eq!(f.queued(1), 3);
+        f.purge(1);
+        assert_eq!(f.queued(1), 0);
+        assert!(!f.probe(1, &MatchSpec::any(1)).unwrap());
+        assert!(!f.probe(1, &MatchSpec::any(7)).unwrap());
+        // The mailbox still works after a purge.
+        f.send(env(0, 1, 1, 1, b"d")).unwrap();
+        assert_eq!(&*f.try_recv(1, &MatchSpec::exact(0, 1, 1)).unwrap().unwrap().data, b"d");
+    }
+
+    #[test]
+    fn wake_all_unblocks_posted_receiver_promptly() {
+        // A receiver blocked in the posted queue must observe its poisoning
+        // via wake_all well before the recv deadline elapses.
+        let (p, f) = tiny(2);
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            f2.recv(1, &MatchSpec::exact(0, 1, 9), Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        p.poison(1);
+        f.wake_all();
+        let out = h.join().unwrap();
+        assert!(matches!(out, Err(CommError::Killed { rank: 1 })));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "woke only after {:?}",
+            t0.elapsed()
+        );
     }
 }

@@ -10,6 +10,12 @@
 //! tests fast; injection mode is used by the figure benches so that the
 //! relative overheads measured are shaped by the same latency/bandwidth
 //! ratios the paper saw.
+//!
+//! Small messages go **eager** (one-way cost only); payloads at or above
+//! the **rendezvous threshold** additionally pay an RTS/CTS handshake
+//! round-trip (two extra latencies) before the data moves — the classic
+//! MVAPICH2/Open MPI protocol switch, with the native library switching at
+//! a much larger size than the generic one.
 
 /// Cost parameters for one fabric personality.
 #[derive(Clone, Copy, Debug)]
@@ -23,6 +29,10 @@ pub struct NetModel {
     /// 512-process threshold the paper hit on the MG benchmark (§VII-A).
     pub congestion_procs: usize,
     pub congestion_factor: f64,
+    /// Payloads of at least this many bytes use the rendezvous protocol:
+    /// an RTS/CTS handshake (2× latency) precedes the data. `usize::MAX`
+    /// disables rendezvous (everything eager).
+    pub rndv_threshold: usize,
     /// If true, `wire_ns` is also spun off as real delay.
     pub inject: bool,
 }
@@ -35,29 +45,34 @@ impl NetModel {
             ns_per_byte: 0.0,
             congestion_procs: usize::MAX,
             congestion_factor: 1.0,
+            rndv_threshold: usize::MAX,
             inject: false,
         }
     }
 
-    /// MVAPICH2-like tuned native fabric: ~1.5 µs latency, ~10 GB/s.
+    /// MVAPICH2-like tuned native fabric: ~1.5 µs latency, ~10 GB/s,
+    /// large eager window (64 KiB) before rendezvous kicks in.
     pub fn empi_tuned() -> Self {
         Self {
             latency_ns: 1_500,
             ns_per_byte: 0.1,
             congestion_procs: 512,
             congestion_factor: 2.5,
+            rndv_threshold: 64 * 1024,
             inject: false,
         }
     }
 
-    /// Open MPI + ULFM generic path: higher latency, lower bandwidth —
-    /// the gap the paper exploits by keeping bulk data off this library.
+    /// Open MPI + ULFM generic path: higher latency, lower bandwidth, and
+    /// an early rendezvous switch (4 KiB) — the gap the paper exploits by
+    /// keeping bulk data off this library.
     pub fn ompi_generic() -> Self {
         Self {
             latency_ns: 6_000,
             ns_per_byte: 0.4,
             congestion_procs: 512,
             congestion_factor: 2.5,
+            rndv_threshold: 4 * 1024,
             inject: false,
         }
     }
@@ -73,10 +88,19 @@ impl NetModel {
         self
     }
 
+    pub fn with_rndv(mut self, threshold: usize) -> Self {
+        self.rndv_threshold = threshold;
+        self
+    }
+
     /// Wire time for one message of `nbytes` on a job of `nprocs`.
     #[inline]
     pub fn wire_ns(&self, nbytes: usize, nprocs: usize) -> u64 {
-        let base = self.latency_ns as f64 + self.ns_per_byte * nbytes as f64;
+        let mut base = self.latency_ns as f64 + self.ns_per_byte * nbytes as f64;
+        if nbytes >= self.rndv_threshold {
+            // RTS/CTS handshake round-trip before the payload moves.
+            base += 2.0 * self.latency_ns as f64;
+        }
         let cost = if nprocs >= self.congestion_procs {
             base * self.congestion_factor
         } else {
@@ -135,12 +159,39 @@ mod tests {
     }
 
     #[test]
+    fn rendezvous_adds_handshake_round_trip() {
+        let m = NetModel::empi_tuned().with_rndv(4096);
+        let eager = m.wire_ns(4095, 8);
+        let rndv = m.wire_ns(4096, 8);
+        // One extra byte of payload, but two extra latencies of handshake.
+        assert!(rndv > eager + 2 * m.latency_ns - 10);
+        // Disabling rendezvous removes the jump.
+        let flat = NetModel::empi_tuned().with_rndv(usize::MAX);
+        assert!(flat.wire_ns(4096, 8) < flat.wire_ns(4095, 8) + 10);
+    }
+
+    #[test]
+    fn empi_eager_window_larger_than_ompi() {
+        // The asymmetry the paper exploits: the tuned library keeps far
+        // larger payloads on the cheap eager path.
+        let e = NetModel::empi_tuned();
+        let o = NetModel::ompi_generic();
+        assert!(e.rndv_threshold > o.rndv_threshold);
+        // Crossing OMPI's threshold costs a handshake there, while the
+        // same size stays eager (smooth) on EMPI.
+        let sz = o.rndv_threshold;
+        assert!(o.wire_ns(sz, 8) - o.wire_ns(sz - 1, 8) >= 2 * o.latency_ns - 10);
+        assert!(e.wire_ns(sz, 8) - e.wire_ns(sz - 1, 8) < 10);
+    }
+
+    #[test]
     fn injection_actually_delays() {
         let m = NetModel {
             latency_ns: 200_000,
             ns_per_byte: 0.0,
             congestion_procs: usize::MAX,
             congestion_factor: 1.0,
+            rndv_threshold: usize::MAX,
             inject: true,
         };
         let t = std::time::Instant::now();

@@ -239,6 +239,7 @@ impl UlfmComm {
         let propose_tag = Self::tag(OP_PROPOSE, seq);
         let decide_tag = Self::tag(OP_DECIDE, seq);
         let me = self.myrank;
+        let me_fabric = self.my_fabric_rank();
         let n = self.size();
 
         let mut sent_to: Option<usize> = None;
@@ -247,7 +248,11 @@ impl UlfmComm {
         let mut spins: u64 = 0;
 
         loop {
-            self.fabric.procs.check_poison(self.my_fabric_rank())?;
+            self.fabric.procs.check_poison(me_fabric)?;
+            // Snapshot the mailbox arrival clock *before* draining it, so
+            // parking below returns immediately if anything lands in the
+            // window between the receive attempts and the wait.
+            let mail_clock = self.fabric.arrivals(me_fabric);
             spins += 1;
             if spins > MAX_SPINS {
                 return Err(CommError::Timeout {
@@ -306,7 +311,11 @@ impl UlfmComm {
                     }
                     return Ok(acc.clone());
                 }
-                std::thread::sleep(CONSENSUS_TICK);
+                // Park until new mail (a late proposal) or the tick
+                // elapses; detector/participant changes are re-checked
+                // each iteration either way.
+                self.fabric
+                    .wait_new_mail(me_fabric, mail_clock, CONSENSUS_TICK);
             } else {
                 // ---- member: (re)send contribution, wait for decision.
                 if sent_to != Some(leader) {
@@ -321,7 +330,11 @@ impl UlfmComm {
                 if let Some(env) = self.try_recv_from_any(decide_tag)? {
                     return Ok(u64s_from_bytes(&env.data));
                 }
-                std::thread::sleep(CONSENSUS_TICK);
+                // Park until the decision (or any mail) arrives instead of
+                // sleeping blind — the leader's decide send rings this
+                // mailbox's clock and wakes us immediately.
+                self.fabric
+                    .wait_new_mail(me_fabric, mail_clock, CONSENSUS_TICK);
             }
         }
     }

@@ -1,14 +1,39 @@
 //! The engine service: PJRT clients on dedicated threads, executing the
 //! compiled artifacts for any rank that asks.
+//!
+//! The PJRT backend itself (the `xla` crate) is only available in builds
+//! with the `pjrt` feature and a vendored `xla` dependency; the default
+//! offline build compiles a stub backend that reports unavailability at
+//! startup, and every caller falls back to the bit-faithful native compute
+//! paths (`apps::compute`). The manifest/spec plumbing and the engine
+//! service protocol are identical either way, so the fallback is exercised
+//! by the same tests.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
-use anyhow::{anyhow, bail, Context, Result};
+use super::value::{TensorSpec, Value};
 
-use super::value::{DtypeTag, TensorSpec, Value};
+/// Engine-layer error (`anyhow` is unavailable in the offline image).
+#[derive(Debug, Clone)]
+pub struct EngineError(String);
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+pub type Result<T> = std::result::Result<T, EngineError>;
+
+fn err(msg: impl Into<String>) -> EngineError {
+    EngineError(msg.into())
+}
 
 /// One kernel's manifest entry.
 #[derive(Clone, Debug)]
@@ -27,20 +52,30 @@ fn parse_manifest(text: &str) -> Result<Vec<KernelSpec>> {
         }
         // Format: `name | in: spec spec ... | out: spec spec ...`
         let mut parts = line.split('|');
-        let name = parts.next().context("name")?.trim().to_string();
-        let ins = parts.next().context("in")?.trim();
-        let outs = parts.next().context("out")?.trim();
+        let name = parts
+            .next()
+            .ok_or_else(|| err("manifest line missing name"))?
+            .trim()
+            .to_string();
+        let ins = parts
+            .next()
+            .ok_or_else(|| err(format!("manifest `{name}`: missing `in:` section")))?
+            .trim();
+        let outs = parts
+            .next()
+            .ok_or_else(|| err(format!("manifest `{name}`: missing `out:` section")))?
+            .trim();
         let parse_list = |s: &str, prefix: &str| -> Result<Vec<TensorSpec>> {
             s.strip_prefix(prefix)
-                .context("prefix")?
+                .ok_or_else(|| err(format!("manifest `{name}`: expected `{prefix}` prefix")))?
                 .split_whitespace()
-                .map(|t| TensorSpec::parse(t).ok_or_else(|| anyhow!("bad spec {t}")))
+                .map(|t| TensorSpec::parse(t).ok_or_else(|| err(format!("bad spec {t}"))))
                 .collect()
         };
         out.push(KernelSpec {
-            name,
             inputs: parse_list(ins, "in:")?,
             outputs: parse_list(outs, "out:")?,
+            name,
         });
     }
     Ok(out)
@@ -49,7 +84,7 @@ fn parse_manifest(text: &str) -> Result<Vec<KernelSpec>> {
 struct Request {
     kernel: String,
     args: Vec<Value>,
-    reply: mpsc::Sender<Result<Vec<Value>, String>>,
+    reply: mpsc::Sender<std::result::Result<Vec<Value>, String>>,
 }
 
 /// Cloneable, thread-safe handle to the engine pool.
@@ -66,12 +101,13 @@ struct EngineInner {
 
 impl ComputeEngine {
     /// Start `nthreads` engine threads, each compiling every artifact in
-    /// `dir`. Fails fast if the directory or manifest is missing (callers
-    /// fall back to native compute — see `apps::compute`).
+    /// `dir`. Fails fast if the directory or manifest is missing — or, in a
+    /// default (non-`pjrt`) build, always — and callers fall back to native
+    /// compute (see `apps::compute`).
     pub fn start(dir: impl AsRef<Path>, nthreads: usize) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("no manifest in {}", dir.display()))?;
+            .map_err(|e| err(format!("no manifest in {}: {e}", dir.display())))?;
         let specs_list = parse_manifest(&manifest)?;
         let specs: HashMap<String, KernelSpec> = specs_list
             .iter()
@@ -82,12 +118,12 @@ impl ComputeEngine {
         let mut ready_rxs = Vec::new();
         for tid in 0..nthreads.max(1) {
             let (tx, rx) = mpsc::channel::<Request>();
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+            let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
             let dir2 = dir.clone();
             let specs2 = specs_list.clone();
             std::thread::Builder::new()
                 .name(format!("pjrt-engine-{tid}"))
-                .spawn(move || engine_thread(dir2, specs2, rx, ready_tx))
+                .spawn(move || backend::engine_thread(dir2, specs2, rx, ready_tx))
                 .expect("spawn engine");
             txs.push(tx);
             ready_rxs.push(ready_rx);
@@ -95,8 +131,8 @@ impl ComputeEngine {
         // Wait for compilation to finish on every engine.
         for rx in ready_rxs {
             rx.recv()
-                .context("engine thread died during startup")?
-                .map_err(|e| anyhow!(e))?;
+                .map_err(|_| err("engine thread died during startup"))?
+                .map_err(err)?;
         }
         Ok(Self {
             inner: Arc::new(EngineInner {
@@ -136,17 +172,21 @@ impl ComputeEngine {
             .inner
             .specs
             .get(kernel)
-            .with_context(|| format!("unknown kernel {kernel}"))?;
+            .ok_or_else(|| err(format!("unknown kernel {kernel}")))?;
         if spec.inputs.len() != args.len() {
-            bail!(
+            return Err(err(format!(
                 "{kernel}: expected {} args, got {}",
                 spec.inputs.len(),
                 args.len()
-            );
+            )));
         }
         for (i, (s, a)) in spec.inputs.iter().zip(&args).enumerate() {
             if s.numel() != a.len() {
-                bail!("{kernel}: arg {i} numel {} != spec {}", a.len(), s.numel());
+                return Err(err(format!(
+                    "{kernel}: arg {i} numel {} != spec {}",
+                    a.len(),
+                    s.numel()
+                )));
             }
         }
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -157,113 +197,156 @@ impl ComputeEngine {
                 args,
                 reply: reply_tx,
             })
-            .map_err(|_| anyhow!("engine thread gone"))?;
+            .map_err(|_| err("engine thread gone"))?;
         reply_rx
             .recv()
-            .map_err(|_| anyhow!("engine dropped reply"))?
-            .map_err(|e| anyhow!(e))
+            .map_err(|_| err("engine dropped reply"))?
+            .map_err(err)
     }
 }
 
-fn engine_thread(
-    dir: PathBuf,
-    specs: Vec<KernelSpec>,
-    rx: mpsc::Receiver<Request>,
-    ready: mpsc::Sender<Result<(), String>>,
-) {
-    // Build the client + compile everything; report readiness.
-    let built = (|| -> Result<(xla::PjRtClient, HashMap<String, (xla::PjRtLoadedExecutable, KernelSpec)>)> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut exes = HashMap::new();
-        for spec in specs {
-            let path = dir.join(format!("{}.hlo.txt", spec.name));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
-            exes.insert(spec.name.clone(), (exe, spec));
-        }
-        Ok((client, exes))
-    })();
+/// Stub backend for the default offline build: reports unavailability at
+/// readiness time, so `ComputeEngine::start` fails fast and callers take
+/// the native compute path.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{KernelSpec, Request};
+    use std::path::PathBuf;
+    use std::sync::mpsc;
 
-    let (_client, exes) = match built {
-        Ok(v) => {
-            let _ = ready.send(Ok(()));
-            v
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
-            return;
-        }
-    };
-
-    while let Ok(req) = rx.recv() {
-        let result = execute_one(&exes, &req.kernel, &req.args);
-        let _ = req.reply.send(result.map_err(|e| e.to_string()));
+    pub(super) fn engine_thread(
+        _dir: PathBuf,
+        _specs: Vec<KernelSpec>,
+        _rx: mpsc::Receiver<Request>,
+        ready: mpsc::Sender<Result<(), String>>,
+    ) {
+        let _ = ready.send(Err(
+            "PJRT backend not compiled in (build with --features pjrt and a vendored \
+             `xla` crate); using native compute"
+                .to_string(),
+        ));
     }
 }
 
-fn execute_one(
-    exes: &HashMap<String, (xla::PjRtLoadedExecutable, KernelSpec)>,
-    kernel: &str,
-    args: &[Value],
-) -> Result<Vec<Value>> {
-    let (exe, spec) = exes
-        .get(kernel)
-        .with_context(|| format!("kernel {kernel} not compiled"))?;
+/// Real PJRT backend (requires the vendored `xla` crate).
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{err, KernelSpec, Request, Result};
+    use crate::runtime::value::{DtypeTag, Value};
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::mpsc;
 
-    let literals: Vec<xla::Literal> = args
-        .iter()
-        .map(|v| -> Result<xla::Literal> {
-            let lit = match v {
-                Value::F32 { data, dims } => {
-                    let l = xla::Literal::vec1(data.as_slice());
-                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-                }
-                Value::I32 { data, dims } => {
-                    let l = xla::Literal::vec1(data.as_slice());
-                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-                }
-            };
-            Ok(lit)
-        })
-        .collect::<Result<_>>()?;
-
-    let result = exe
-        .execute::<xla::Literal>(&literals)
-        .map_err(|e| anyhow!("execute {kernel}: {e:?}"))?;
-    let tuple = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-    // aot.py lowers with return_tuple=True: always a tuple, even 1-output.
-    let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-    if parts.len() != spec.outputs.len() {
-        bail!(
-            "{kernel}: expected {} outputs, got {}",
-            spec.outputs.len(),
-            parts.len()
-        );
-    }
-    parts
-        .into_iter()
-        .zip(&spec.outputs)
-        .map(|(lit, ospec)| -> Result<Value> {
-            match ospec.dtype {
-                DtypeTag::F32 => {
-                    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
-                    Ok(Value::f32(data, &ospec.dims))
-                }
-                DtypeTag::I32 => {
-                    let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
-                    Ok(Value::i32(data, &ospec.dims))
-                }
+    pub(super) fn engine_thread(
+        dir: PathBuf,
+        specs: Vec<KernelSpec>,
+        rx: mpsc::Receiver<Request>,
+        ready: mpsc::Sender<std::result::Result<(), String>>,
+    ) {
+        // Build the client + compile everything; report readiness.
+        let built = (|| -> Result<(
+            xla::PjRtClient,
+            HashMap<String, (xla::PjRtLoadedExecutable, KernelSpec)>,
+        )> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| err(format!("pjrt cpu client: {e:?}")))?;
+            let mut exes = HashMap::new();
+            for spec in specs {
+                let path = dir.join(format!("{}.hlo.txt", spec.name));
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| err(format!("load {}: {e:?}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| err(format!("compile {}: {e:?}", spec.name)))?;
+                exes.insert(spec.name.clone(), (exe, spec));
             }
-        })
-        .collect()
+            Ok((client, exes))
+        })();
+
+        let (_client, exes) = match built {
+            Ok(v) => {
+                let _ = ready.send(Ok(()));
+                v
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e.to_string()));
+                return;
+            }
+        };
+
+        while let Ok(req) = rx.recv() {
+            let result = execute_one(&exes, &req.kernel, &req.args);
+            let _ = req.reply.send(result.map_err(|e| e.to_string()));
+        }
+    }
+
+    fn execute_one(
+        exes: &HashMap<String, (xla::PjRtLoadedExecutable, KernelSpec)>,
+        kernel: &str,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let (exe, spec) = exes
+            .get(kernel)
+            .ok_or_else(|| err(format!("kernel {kernel} not compiled")))?;
+
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|v| -> Result<xla::Literal> {
+                let lit = match v {
+                    Value::F32 { data, dims } => {
+                        let l = xla::Literal::vec1(data.as_slice());
+                        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                        l.reshape(&dims).map_err(|e| err(format!("reshape: {e:?}")))?
+                    }
+                    Value::I32 { data, dims } => {
+                        let l = xla::Literal::vec1(data.as_slice());
+                        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                        l.reshape(&dims).map_err(|e| err(format!("reshape: {e:?}")))?
+                    }
+                };
+                Ok(lit)
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| err(format!("execute {kernel}: {e:?}")))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err(format!("to_literal: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-output.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| err(format!("to_tuple: {e:?}")))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(err(format!(
+                "{kernel}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| -> Result<Value> {
+                match ospec.dtype {
+                    DtypeTag::F32 => {
+                        let data = lit
+                            .to_vec::<f32>()
+                            .map_err(|e| err(format!("to_vec f32: {e:?}")))?;
+                        Ok(Value::f32(data, &ospec.dims))
+                    }
+                    DtypeTag::I32 => {
+                        let data = lit
+                            .to_vec::<i32>()
+                            .map_err(|e| err(format!("to_vec i32: {e:?}")))?;
+                        Ok(Value::i32(data, &ospec.dims))
+                    }
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
