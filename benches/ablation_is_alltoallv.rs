@@ -45,13 +45,21 @@ fn run_once(n: usize, skew_us: u64, blocking: bool) -> Duration {
 
 fn main() {
     common::hr("Ablation — IS alltoallv: blocking vs nonblocking+test");
-    let n = if common::full() { 64 } else { 16 };
+    let n = if common::full() {
+        64
+    } else if common::smoke() {
+        8
+    } else {
+        16
+    };
     println!("ranks={n}");
     println!("skew(us)  blocking(ms)  nonblocking(ms)  speedup");
-    for skew in [0u64, 100, 400, 1000] {
+    let skews: &[u64] = if common::smoke() { &[400] } else { &[0, 100, 400, 1000] };
+    let reps = if common::smoke() { 2 } else { 5 };
+    for &skew in skews {
         let mut b = Summary::new();
         let mut nb = Summary::new();
-        for _ in 0..5 {
+        for _ in 0..reps {
             b.add(run_once(n, skew, true).as_secs_f64() * 1e3);
             nb.add(run_once(n, skew, false).as_secs_f64() * 1e3);
         }

@@ -12,13 +12,19 @@ use partreper::harness::{run_app, Backend};
 fn main() {
     common::hr("Ablation — MG congestion threshold at 512 processes");
     // Scaled-down knee: congestion at 16 procs so 8comp+8rep trips it.
-    let knee = if common::full() { 512 } else { 16 };
+    let knee = if common::full() {
+        512
+    } else if common::smoke() {
+        8
+    } else {
+        16
+    };
     let ncomp = knee / 2;
     let mut cfg = JobConfig::new(ncomp, 100.0);
     cfg.set("net.inject", "true").unwrap();
     cfg.set("net.congestion_procs", &knee.to_string()).unwrap();
     cfg.set("net.congestion_factor", "2.5").unwrap();
-    let iters = 6;
+    let iters = if common::smoke() { 3 } else { 6 };
 
     let base = run_app(&cfg, AppKind::Mg, Backend::EmpiBaseline, iters, None);
     println!("baseline ({} procs): {:?}", ncomp, base.wall);

@@ -2,19 +2,35 @@
 //!
 //! Scale control: benches default to laptop-scale (8-16 ranks) so
 //! `cargo bench` finishes in minutes; set `PARTREPER_BENCH_FULL=1` for the
-//! paper-scale sweep (64/128/256 computational processes).
+//! paper-scale sweep (64/128/256 computational processes) and
+//! `PARTREPER_BENCH_SMOKE=1` (CI) to run only each bench's smallest case —
+//! fast enough to gate on bench *runtime* regressions, not just compiles.
+//!
+//! Next to the human-readable tables, every bench emits a
+//! machine-readable `BENCH_<name>.json` (median/p99 per case) so the perf
+//! trajectory is trackable across PRs.
 
 #![allow(dead_code)]
 
+use std::io::Write;
+
 use partreper::config::JobConfig;
 use partreper::runtime::ComputeEngine;
+use partreper::util::Summary;
 
 pub fn full() -> bool {
     std::env::var_os("PARTREPER_BENCH_FULL").is_some()
 }
 
+/// CI smoke mode: smallest case per bench, one rep.
+pub fn smoke() -> bool {
+    std::env::var_os("PARTREPER_BENCH_SMOKE").is_some()
+}
+
 pub fn ncomps() -> Vec<usize> {
-    if full() {
+    if smoke() {
+        vec![4]
+    } else if full() {
         vec![64, 128, 256]
     } else {
         vec![8]
@@ -22,10 +38,81 @@ pub fn ncomps() -> Vec<usize> {
 }
 
 pub fn reps() -> usize {
-    if full() {
+    if smoke() {
+        1
+    } else if full() {
         5
     } else {
         2
+    }
+}
+
+// ---------------------------------------------------------------- reports
+
+/// Machine-readable per-case results, written as `BENCH_<name>.json` next
+/// to the human output (serde is unavailable offline; the JSON is
+/// hand-assembled from numbers and escaped-free case labels).
+pub struct BenchReport {
+    name: String,
+    cases: Vec<String>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            cases: Vec::new(),
+        }
+    }
+
+    /// Record one case from raw samples (seconds or any consistent unit).
+    pub fn case(&mut self, label: &str, unit: &str, s: &Summary) {
+        let json_safe = |s: &str| s.chars().all(|c| c != '"' && c != '\\' && c >= ' ');
+        assert!(
+            json_safe(label) && json_safe(unit),
+            "labels must be JSON-safe (no quotes, backslashes, or control chars)"
+        );
+        self.cases.push(format!(
+            "    {{\"case\": \"{label}\", \"unit\": \"{unit}\", \"n\": {}, \
+             \"median\": {}, \"p99\": {}, \"mean\": {}, \"min\": {}, \"max\": {}}}",
+            s.n(),
+            json_f64(s.median()),
+            json_f64(s.percentile(99.0)),
+            json_f64(s.mean()),
+            json_f64(s.min()),
+            json_f64(s.max()),
+        ));
+    }
+
+    /// Record one case from a single measurement.
+    pub fn case_value(&mut self, label: &str, unit: &str, value: f64) {
+        self.case(label, unit, &Summary::from_samples([value]));
+    }
+
+    /// Write `BENCH_<name>.json` into the working directory. Failures are
+    /// reported but never fail the bench (CI may run read-only).
+    pub fn write(&self) {
+        let path = format!("BENCH_{}.json", self.name);
+        let body = format!(
+            "{{\n  \"bench\": \"{}\",\n  \"smoke\": {},\n  \"full\": {},\n  \"cases\": [\n{}\n  ]\n}}\n",
+            self.name,
+            smoke(),
+            full(),
+            self.cases.join(",\n")
+        );
+        match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
+            Ok(()) => println!("[bench] wrote {path}"),
+            Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+        }
+    }
+}
+
+/// JSON has no NaN/Infinity: map them to null.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
     }
 }
 

@@ -10,11 +10,20 @@ use partreper::harness::experiments::{fig8, format_fig8};
 fn main() {
     common::hr("Fig 8 — failure-free overheads, scientific applications");
     let eng = common::engine();
+    let (apps, rdegrees, scale) = if common::smoke() {
+        (vec![AppKind::CloverLeaf], vec![0.0, 50.0], 0.3)
+    } else {
+        (
+            vec![AppKind::CloverLeaf, AppKind::Pic],
+            ReplicationDegree::PAPER_SWEEP.to_vec(),
+            0.5,
+        )
+    };
     let cells = fig8(
-        &[AppKind::CloverLeaf, AppKind::Pic],
+        &apps,
         &common::ncomps(),
-        &ReplicationDegree::PAPER_SWEEP,
-        if common::full() { 1.0 } else { 0.5 },
+        &rdegrees,
+        if common::full() { 1.0 } else { scale },
         common::reps(),
         eng,
         &common::base_cfg(),

@@ -12,16 +12,25 @@ use partreper::harness::experiments::{fig8, format_fig8};
 fn main() {
     common::hr("Fig 8 — failure-free overheads, NAS Parallel Benchmarks");
     let eng = common::engine();
+    let (apps, rdegrees, scale) = if common::smoke() {
+        (vec![AppKind::Cg, AppKind::Ep], vec![0.0, 50.0], 0.3)
+    } else {
+        (AppKind::NPB.to_vec(), ReplicationDegree::PAPER_SWEEP.to_vec(), 0.5)
+    };
     let cells = fig8(
-        &AppKind::NPB,
+        &apps,
         &common::ncomps(),
-        &ReplicationDegree::PAPER_SWEEP,
-        if common::full() { 1.0 } else { 0.5 },
+        &rdegrees,
+        if common::full() { 1.0 } else { scale },
         common::reps(),
         eng,
         &common::base_cfg(),
     );
     print!("{}", format_fig8(&cells));
+    assert!(cells.iter().all(|c| c.verified), "checksum mismatch");
+    if common::smoke() {
+        return; // smallest case only — no paper-shape medians without IS
+    }
     // Paper-shape summary.
     let npb_non_is: Vec<f64> = cells
         .iter()
@@ -44,5 +53,4 @@ fn main() {
     };
     println!("\nshape: median non-IS normalized overhead {med:+.2}% (paper: low, ≤6.4%)");
     println!("shape: median IS overhead {is_med:+.2}% (paper: negative)");
-    assert!(cells.iter().all(|c| c.verified), "checksum mismatch");
 }

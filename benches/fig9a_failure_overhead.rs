@@ -16,15 +16,26 @@ fn main() {
     cfg.faults.weibull_shape = 0.9;
     cfg.faults.weibull_scale_s = if common::full() { 1.0 } else { 0.15 };
     cfg.faults.max_failures = 3;
-    let ncomp = if common::full() { 256 } else { 8 };
-    let iters = if common::full() { 40 } else { 25 };
-    let rows = fig9a(
-        &[AppKind::Cg, AppKind::Bt, AppKind::Lu],
-        ncomp,
-        iters,
-        common::reps().max(3),
-        eng,
-        &cfg,
-    );
+    let ncomp = if common::full() {
+        256
+    } else if common::smoke() {
+        4
+    } else {
+        8
+    };
+    let iters = if common::full() {
+        40
+    } else if common::smoke() {
+        10
+    } else {
+        25
+    };
+    let apps = if common::smoke() {
+        vec![AppKind::Cg]
+    } else {
+        vec![AppKind::Cg, AppKind::Bt, AppKind::Lu]
+    };
+    let reps = if common::smoke() { 1 } else { common::reps().max(3) };
+    let rows = fig9a(&apps, ncomp, iters, reps, eng, &cfg);
     print!("{}", format_fig9a(&rows));
 }

@@ -15,21 +15,41 @@ fn main() {
     cfg.faults.weibull_shape = 0.9;
     cfg.faults.weibull_scale_s = if common::full() { 0.5 } else { 0.05 };
     cfg.faults.max_failures = 16;
-    let ncomp = if common::full() { 256 } else { 8 };
-    let iters = if common::full() { 60 } else { 40 };
-    let runs = if common::full() { 10 } else { 4 };
-    let rows = fig9b(
-        &[AppKind::Cg, AppKind::Bt, AppKind::Lu],
-        ncomp,
-        &ReplicationDegree::PAPER_SWEEP,
-        iters,
-        runs,
-        eng,
-        &cfg,
-    );
+    let ncomp = if common::full() {
+        256
+    } else if common::smoke() {
+        4
+    } else {
+        8
+    };
+    let iters = if common::full() {
+        60
+    } else if common::smoke() {
+        15
+    } else {
+        40
+    };
+    let runs = if common::full() {
+        10
+    } else if common::smoke() {
+        2
+    } else {
+        4
+    };
+    let apps = if common::smoke() {
+        vec![AppKind::Cg]
+    } else {
+        vec![AppKind::Cg, AppKind::Bt, AppKind::Lu]
+    };
+    let rdegrees: Vec<f64> = if common::smoke() {
+        vec![0.0, 100.0]
+    } else {
+        ReplicationDegree::PAPER_SWEEP.to_vec()
+    };
+    let rows = fig9b(&apps, ncomp, &rdegrees, iters, runs, eng, &cfg);
     print!("{}", format_fig9b(&rows));
     // Shape check per app: MTTI at 100% ≥ MTTI at 0%.
-    for app in [AppKind::Cg, AppKind::Bt, AppKind::Lu] {
+    for app in apps {
         let at = |d: f64| {
             rows.iter()
                 .find(|r| r.app == app && r.rdegree == d)

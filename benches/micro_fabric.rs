@@ -156,16 +156,18 @@ fn linear_match_ns(fill: &[Envelope], drain: &[MatchSpec], reps: usize) -> f64 {
     total / (reps * drain.len()) as f64 * 1e9
 }
 
-fn deep_queue_bench() {
+fn deep_queue_bench(report: &mut common::BenchReport) {
     common::hr("Micro — deep-queue tag matching: indexed engine vs linear scan");
     println!("outstanding  tags  linear(ns/op)  indexed(ns/op)  speedup");
     let mut deepest_speedup = 0.0;
-    for per_bucket in [2usize, 8, 32] {
+    let buckets: &[usize] = if common::smoke() { &[2] } else { &[2, 8, 32] };
+    let reps = if common::smoke() { 3 } else { 20 };
+    for &per_bucket in buckets {
         let n_tags = 16;
         let (fill, drain) = deep_queue_workload(n_tags, per_bucket);
         let depth = fill.len();
-        let lin = linear_match_ns(&fill, &drain, 20);
-        let idx = indexed_match_ns(&fill, &drain, 20);
+        let lin = linear_match_ns(&fill, &drain, reps);
+        let idx = indexed_match_ns(&fill, &drain, reps);
         deepest_speedup = lin / idx;
         println!(
             "{:>11} {:>5} {:>14.1} {:>15.1} {:>8.2}x",
@@ -175,23 +177,36 @@ fn deep_queue_bench() {
             idx,
             lin / idx
         );
+        report.case_value(&format!("deep_queue/linear/depth={depth}"), "ns/op", lin);
+        report.case_value(&format!("deep_queue/indexed/depth={depth}"), "ns/op", idx);
     }
     println!("shape: speedup grows with queue depth (O(1) amortized vs O(depth))");
-    assert!(
-        deepest_speedup > 1.0,
-        "indexed matching must beat the linear scan at 1024 outstanding \
-         messages (got {deepest_speedup:.2}x)"
-    );
+    // The win is asserted at the deep end only — smoke mode runs the
+    // shallow case, where constant factors can mask the asymptotics.
+    if !common::smoke() {
+        assert!(
+            deepest_speedup > 1.0,
+            "indexed matching must beat the linear scan at the deepest queue \
+             (got {deepest_speedup:.2}x)"
+        );
+    }
 }
 
 fn main() {
-    deep_queue_bench();
+    let mut report = common::BenchReport::new("micro_fabric");
+    deep_queue_bench(&mut report);
 
     common::hr("Micro — fabric p2p latency (EMPI vs OMPI profiles)");
     println!("bytes     EMPI one-way    OMPI one-way    ratio");
-    for bytes in [0usize, 1024, 65536, 1 << 20] {
-        let e = p2p_roundtrip(NetModel::empi_tuned(), bytes, 200);
-        let o = p2p_roundtrip(NetModel::ompi_generic(), bytes, 200);
+    let sizes: &[usize] = if common::smoke() {
+        &[1024]
+    } else {
+        &[0, 1024, 65536, 1 << 20]
+    };
+    let iters = if common::smoke() { 20 } else { 200 };
+    for &bytes in sizes {
+        let e = p2p_roundtrip(NetModel::empi_tuned(), bytes, iters);
+        let o = p2p_roundtrip(NetModel::ompi_generic(), bytes, iters);
         println!(
             "{:>8} {:>12.2}us {:>12.2}us {:>8.2}x",
             bytes,
@@ -199,14 +214,21 @@ fn main() {
             o * 1e6,
             o / e
         );
+        report.case_value(&format!("p2p/empi/bytes={bytes}"), "s", e);
+        report.case_value(&format!("p2p/ompi/bytes={bytes}"), "s", o);
     }
 
     common::hr("Micro — EMPI allreduce scaling (recursive doubling)");
     println!("ranks   f32 elems   time/op");
-    for n in [4usize, 8, 16, 32] {
-        for elems in [16usize, 4096] {
-            let t = allreduce_time(n, elems, 50);
+    let ranks: &[usize] = if common::smoke() { &[4] } else { &[4, 8, 16, 32] };
+    let elem_cases: &[usize] = if common::smoke() { &[16] } else { &[16, 4096] };
+    let coll_iters = if common::smoke() { 10 } else { 50 };
+    for &n in ranks {
+        for &elems in elem_cases {
+            let t = allreduce_time(n, elems, coll_iters);
             println!("{:>5} {:>10} {:>9.2}us", n, elems, t * 1e6);
+            report.case_value(&format!("allreduce/n={n}/elems={elems}"), "s", t);
         }
     }
+    report.write();
 }

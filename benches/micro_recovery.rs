@@ -1,35 +1,60 @@
 //! Microbench: §VI failure management — error-handler latency by failure
-//! kind (replica death / promotion / multiple failures), and recovery work
-//! (resends, replays) under a p2p+collective workload.
+//! kind (replica death / promotion / multiple failures), recovery work
+//! (resends, replays) under a p2p+collective workload, and the cold-rank
+//! story: losing an *unreplicated* computational rank with the in-memory
+//! image store (`restore/`) vs the classic disk-checkpoint full restart.
 
 mod common;
 
-use partreper::apps::AppKind;
-use partreper::config::JobConfig;
-use partreper::harness::{run_app, Backend};
-use partreper::util::Summary;
+use std::sync::Arc;
+use std::time::Instant;
 
-fn main() {
+use partreper::apps::AppKind;
+use partreper::checkpoint::{Checkpoint, CheckpointStore};
+use partreper::config::JobConfig;
+use partreper::empi::{DType, ReduceOp};
+use partreper::harness::{run_app, Backend};
+use partreper::metrics::{Counters, Phase};
+use partreper::partreper::PartReper;
+use partreper::procimg::Replicable;
+use partreper::procmgr::{launch_job, RankOutcome};
+use partreper::restore::demo::{self, expected_ring, RingState};
+use partreper::util::{u64s_from_bytes, u64s_to_bytes, Summary};
+
+fn failure_kind_table(report: &mut common::BenchReport) {
     common::hr("Micro — recovery cost by failure kind");
-    let ncomp = if common::full() { 64 } else { 8 };
+    let ncomp = if common::full() {
+        64
+    } else if common::smoke() {
+        4
+    } else {
+        8
+    };
+    let scenarios: &[(&str, u64, usize)] = if common::smoke() {
+        &[("one failure", 11u64, 1usize)]
+    } else {
+        &[
+            ("one failure", 11u64, 1usize),
+            ("two failures", 12, 2),
+            ("four failures", 13, 4),
+        ]
+    };
+    let reps: u64 = if common::smoke() { 1 } else { 3 };
+    let iters = if common::smoke() { 8 } else { 20 };
     println!("scenario            handler_s/rank  resends  replays  promotions");
-    for (label, seed, maxf) in [
-        ("one failure", 11u64, 1usize),
-        ("two failures", 12, 2),
-        ("four failures", 13, 4),
-    ] {
+    for &(label, seed, maxf) in scenarios {
         let mut handler = Summary::new();
         let mut resends = 0;
         let mut replays = 0;
         let mut promos = 0;
-        for rep in 0..3 {
+        for rep in 0..reps {
             let mut cfg = JobConfig::new(ncomp, 100.0);
             cfg.faults.enabled = true;
             cfg.faults.weibull_shape = 1.0;
             cfg.faults.weibull_scale_s = 0.03;
             cfg.faults.max_failures = maxf;
             cfg.faults.seed = seed + rep;
-            let r = run_app(&cfg, AppKind::Lu, Backend::PartReper, 20, None);
+            let r = run_app(&cfg, AppKind::Lu, Backend::PartReper, iters, None);
             if r.completed() {
                 handler.add(r.error_handler_s / (2 * ncomp) as f64);
                 resends += r.resends;
@@ -44,5 +69,173 @@ fn main() {
             replays,
             promos
         );
+        report.case(
+            &format!("failure_kind/{}", label.replace(' ', "_")),
+            "handler_s_per_rank",
+            &handler,
+        );
     }
+}
+
+/// One run of the restorable ring workload under PartRePer with the image
+/// store armed: `kill` poisons an unreplicated comp mid-run and a spare
+/// cold-restores it. Returns (wall_s, restore_s, handler_s, ok).
+fn run_cold_restore(
+    ncomp: usize,
+    iters: u64,
+    refresh_every: u64,
+    kill: (usize, u64),
+) -> (f64, f64, f64, bool) {
+    let mut cfg = JobConfig::new(ncomp, 0.0);
+    cfg.nspares = 1;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let out = demo::restorable_ring_with(&pr, iters, refresh_every, |step| {
+            if rank == kill.0 && step == kill.1 {
+                procs.poison(rank);
+            }
+        });
+        Ok(out)
+    });
+    let want = expected_ring(ncomp as u64, iters);
+    let ok = report.outcomes.iter().all(|o| match o {
+        RankOutcome::Done(Some(v)) => *v == want,
+        RankOutcome::Done(None) => true,
+        RankOutcome::Killed => true,
+        _ => false,
+    });
+    let totals = report.total_counters();
+    let ok = ok && Counters::get(&totals.cold_restores) == 1;
+    (
+        report.wall.as_secs_f64(),
+        report.phase_seconds(Phase::Restore),
+        report.phase_seconds(Phase::ErrorHandler),
+        ok,
+    )
+}
+
+/// One job of the same workload under classic coordinated C/R: images go
+/// to the disk-tier [`CheckpointStore`] every `every` steps; an
+/// unreplicated death interrupts the whole job. `resume` restarts every
+/// rank from a sealed checkpoint. Returns (wall_s, interrupted, acc-ok).
+///
+/// NOTE: the loop body must stay in lockstep with
+/// `restore::demo::restorable_ring_with` (and `expected_ring`'s closed
+/// form) — it is re-spelled here only because the C/R variant persists
+/// through `CheckpointStore::contribute` instead of `store_refresh`.
+fn run_disk_job(
+    ncomp: usize,
+    iters: u64,
+    every: u64,
+    kill: Option<(usize, u64)>,
+    store: Arc<CheckpointStore>,
+    resume: Option<Checkpoint>,
+) -> (f64, bool, bool) {
+    let cfg = JobConfig::new(ncomp, 0.0);
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let store = store.clone();
+        let pr = PartReper::init(ctx);
+        let mut state = match resume.as_ref().and_then(|cp| cp.image_for(pr.rank())) {
+            Some(img) => RingState::restore(&img),
+            None => RingState::new(iters),
+        };
+        let n = pr.size() as u64;
+        while state.step < state.iters {
+            if let Some((kr, kat)) = kill {
+                if rank == kr && state.step == kat {
+                    procs.poison(rank);
+                }
+            }
+            let it = state.step;
+            let me = pr.rank() as u64;
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            state.acc = state.acc.wrapping_add(sum);
+            state.step += 1;
+            if state.step % every == 0 {
+                store.contribute(state.step, pr.rank(), &state.capture());
+            }
+        }
+        pr.finalize();
+        Ok(state.acc)
+    });
+    let want = expected_ring(ncomp as u64, iters);
+    let interrupted = report
+        .outcomes
+        .iter()
+        .any(|o| matches!(o, RankOutcome::Interrupted { .. }));
+    let acc_ok = report
+        .outcomes
+        .iter()
+        .all(|o| !matches!(o, RankOutcome::Done(v) if *v != want));
+    (report.wall.as_secs_f64(), interrupted, acc_ok)
+}
+
+fn cold_vs_disk(report: &mut common::BenchReport) {
+    common::hr("Micro — cold restore (in-memory store) vs disk-checkpoint restart");
+    let ncomp = if common::smoke() { 4 } else { 8 };
+    let iters: u64 = if common::smoke() { 10 } else { 24 };
+    let every: u64 = 2;
+    let kill = (ncomp - 1, iters * 2 / 3);
+    let reps = if common::smoke() { 1 } else { 3 };
+    println!("path                     wall(s)   recover(s)   notes");
+
+    let mut cold_wall = Summary::new();
+    let mut cold_recover = Summary::new();
+    for _ in 0..reps {
+        let (wall, restore_s, handler_s, ok) = run_cold_restore(ncomp, iters, every, kill);
+        assert!(ok, "cold restore must complete with the correct answer");
+        cold_wall.add(wall);
+        cold_recover.add(restore_s + handler_s);
+    }
+    println!(
+        "cold-restore (memory)   {:>8.4} {:>11.4}   survivors keep state; one rank rewinds",
+        cold_wall.mean(),
+        cold_recover.mean()
+    );
+
+    let mut disk_wall = Summary::new();
+    for _ in 0..reps {
+        let t = Instant::now();
+        let store = CheckpointStore::new(ncomp);
+        let (_w1, interrupted, _) =
+            run_disk_job(ncomp, iters, every, Some(kill), store.clone(), None);
+        assert!(interrupted, "unreplicated death must interrupt the C/R job");
+        let cp = store.latest().expect("at least one sealed checkpoint");
+        let store2 = CheckpointStore::new(ncomp);
+        let (_w2, interrupted2, acc_ok) =
+            run_disk_job(ncomp, iters, every, None, store2, Some(cp));
+        assert!(!interrupted2 && acc_ok, "restart must finish correctly");
+        disk_wall.add(t.elapsed().as_secs_f64());
+    }
+    println!(
+        "disk C/R (full restart) {:>8.4} {:>11}   whole job relaunches and rewinds",
+        disk_wall.mean(),
+        "-"
+    );
+    println!(
+        "speedup: {:.2}x end-to-end (store absorbs the failure in-place)",
+        disk_wall.mean() / cold_wall.mean()
+    );
+    report.case("cold_restore/wall", "s", &cold_wall);
+    report.case("cold_restore/recover", "s", &cold_recover);
+    report.case("disk_restart/wall", "s", &disk_wall);
+}
+
+fn main() {
+    let mut report = common::BenchReport::new("micro_recovery");
+    failure_kind_table(&mut report);
+    cold_vs_disk(&mut report);
+    report.write();
 }

@@ -24,11 +24,17 @@ fn image_with(chunks: usize, chunk_bytes: usize) -> ProcessImage {
 fn main() {
     common::hr("Micro — process-image replication (§III-A)");
     println!("chunks  chunk_KiB  serialize(us)  transfer(us)  MB/s");
-    for &(chunks, kib) in &[(8usize, 64usize), (64, 64), (8, 1024), (64, 256)] {
+    let cases: &[(usize, usize)] = if common::smoke() {
+        &[(8, 64)]
+    } else {
+        &[(8, 64), (64, 64), (8, 1024), (64, 256)]
+    };
+    let reps = if common::smoke() { 5 } else { 20 };
+    for &(chunks, kib) in cases {
         let src = image_with(chunks, kib * 1024);
         let mut ser = Summary::new();
         let mut tr = Summary::new();
-        for _ in 0..20 {
+        for _ in 0..reps {
             let t = Instant::now();
             let bytes = src.to_bytes();
             ser.add(t.elapsed().as_secs_f64() * 1e6);

@@ -15,6 +15,18 @@ echo "== benches + examples compile =="
 cargo bench --no-run
 cargo build --release --examples
 
+echo "== bench smoke (smallest case per bench, catches runtime rot) =="
+# PARTREPER_BENCH_SMOKE=1 trims every bench to its smallest case and one
+# rep, so a bench that panics, hangs, or regresses pathologically fails CI
+# here instead of rotting until someone runs the full sweep. Each micro
+# bench also emits BENCH_<name>.json for cross-PR perf tracking.
+for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
+             fig8_apps fig9a_failure_overhead fig9b_mtti \
+             ablation_is_alltoallv ablation_mg_threshold; do
+  echo "-- smoke: $bench"
+  PARTREPER_BENCH_SMOKE=1 cargo bench --bench "$bench"
+done
+
 echo "== formatting =="
 cargo fmt --check
 

@@ -1,0 +1,84 @@
+//! Cold-rank recovery end to end: zero replication, one spare, one
+//! unreplicated computational rank killed mid-run. Without the `restore/`
+//! image store this is the paper's §VII-B job interruption; with it, the
+//! spare is adopted, rebuilt from peer-held shards, and the job finishes
+//! with the failure-free answer.
+//!
+//!     cargo run --release --example cold_restore
+
+use partreper::config::JobConfig;
+use partreper::metrics::{Counters, Phase};
+use partreper::partreper::PartReper;
+use partreper::procmgr::{launch_job, RankOutcome};
+use partreper::restore::demo::{expected_ring, restorable_ring_with};
+
+fn main() {
+    let mut cfg = JobConfig::new(6, 0.0); // no replicas at all
+    cfg.nspares = 1;
+    cfg.restore.shards = 4;
+    cfg.restore.redundancy = 2;
+    let iters = 30u64;
+    let refresh_every = 3u64;
+    let victim = 4usize; // unreplicated comp — fatal before restore/
+    let kill_at = 17u64;
+
+    println!(
+        "{} comps, 0 replicas, 1 spare; store: {} shards x{} copies, refresh every {} steps",
+        cfg.ncomp, cfg.restore.shards, cfg.restore.redundancy, refresh_every
+    );
+    println!("killing unreplicated comp {victim} at step {kill_at}...");
+
+    let spare_base = cfg.spare_base();
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let mut announced = false;
+        let out = restorable_ring_with(&pr, iters, refresh_every, |step| {
+            if rank == victim && step == kill_at {
+                procs.poison(rank);
+            }
+            // A spare's first step announces its adoption.
+            if !announced && rank >= spare_base {
+                println!(
+                    "[spare {rank}] adopted as rank {}, resuming from step {step}",
+                    pr.rank()
+                );
+                announced = true;
+            }
+        });
+        Ok(out)
+    });
+
+    let want = expected_ring(cfg.ncomp as u64, iters);
+    let mut done = 0;
+    let mut killed = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match o {
+            RankOutcome::Done(Some(v)) => {
+                assert_eq!(*v, want, "rank {r} diverged");
+                done += 1;
+            }
+            RankOutcome::Done(None) => println!("[spare {r}] retired unused"),
+            RankOutcome::Killed => killed += 1,
+            other => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    println!("wall: {:?}", report.wall);
+    println!(
+        "done={done} killed={killed} cold_restores={} refreshes={} shard_KiB_pushed={} \
+         shards_rebuilt={}",
+        Counters::get(&totals.cold_restores),
+        Counters::get(&totals.restore_refreshes),
+        Counters::get(&totals.restore_shard_bytes) / 1024,
+        Counters::get(&totals.restore_shards_rebuilt),
+    );
+    println!(
+        "restore phase: {:.4}s total across ranks (error handler: {:.4}s)",
+        report.phase_seconds(Phase::Restore),
+        report.phase_seconds(Phase::ErrorHandler),
+    );
+    assert_eq!(Counters::get(&totals.cold_restores), 1);
+    println!("OK — unreplicated death survived with the failure-free answer.");
+}

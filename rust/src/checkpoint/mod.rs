@@ -121,6 +121,51 @@ pub fn waste_fraction(checkpoint_cost_s: f64, mtti_s: f64, tau_s: f64) -> f64 {
     checkpoint_cost_s / tau_s + tau_s / (2.0 * mtti_s)
 }
 
+// ---------------------------------------------------------------- two-tier
+//
+// With the in-memory image store (`restore/`) as a fast tier above this
+// disk store, a fraction `p_mem` of failures never reach the disk-restart
+// path at all: they are absorbed by replica promotion or a cold restore in
+// milliseconds. Only the residual `1 - p_mem` of failures force a disk
+// restart, so the *effective* MTTI seen by the disk tier stretches by
+// `1/(1 - p_mem)` — and the Young/Daly interval with it.
+
+/// Mean time between failures that actually require a **disk** restart,
+/// given the raw MTTI and the fraction of failures the memory tier
+/// absorbs. `p_mem = 1` means the disk tier is never exercised.
+pub fn disk_tier_mtti(mtti_s: f64, mem_recover_fraction: f64) -> f64 {
+    let p = mem_recover_fraction.clamp(0.0, 1.0);
+    if p >= 1.0 {
+        f64::INFINITY
+    } else {
+        mtti_s / (1.0 - p)
+    }
+}
+
+/// Young's interval for the disk tier under the two-tier model: the
+/// memory tier filters failures, so disk checkpoints stretch by
+/// `1/sqrt(1 - p_mem)`.
+pub fn tiered_young_interval(
+    checkpoint_cost_s: f64,
+    mtti_s: f64,
+    mem_recover_fraction: f64,
+) -> f64 {
+    young_interval(checkpoint_cost_s, disk_tier_mtti(mtti_s, mem_recover_fraction))
+}
+
+/// Expected recovery cost per failure under the two-tier model: fast
+/// in-memory restores for `p_mem` of failures, full disk restarts
+/// (read-back plus half an interval of rework, first-order) for the rest.
+pub fn tiered_recovery_cost(
+    mem_restore_cost_s: f64,
+    disk_restart_cost_s: f64,
+    tau_s: f64,
+    mem_recover_fraction: f64,
+) -> f64 {
+    let p = mem_recover_fraction.clamp(0.0, 1.0);
+    p * mem_restore_cost_s + (1.0 - p) * (disk_restart_cost_s + tau_s / 2.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,5 +225,29 @@ mod tests {
         let y = young_interval(1.0, 10_000.0);
         let d = daly_interval(1.0, 10_000.0);
         assert!((y - d).abs() / y < 0.02);
+    }
+
+    #[test]
+    fn memory_tier_stretches_disk_interval() {
+        // Absorbing 75% of failures in memory doubles the disk-tier MTTI
+        // twice over -> the Young interval stretches by 1/sqrt(0.25) = 2.
+        let base = young_interval(30.0, 3600.0);
+        let tiered = tiered_young_interval(30.0, 3600.0, 0.75);
+        assert!((tiered / base - 2.0).abs() < 1e-9);
+        // p_mem = 0 degenerates to the classic single-tier model.
+        assert!((tiered_young_interval(30.0, 3600.0, 0.0) - base).abs() < 1e-12);
+        assert!(disk_tier_mtti(3600.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn tiered_recovery_cost_interpolates() {
+        // Memory restores are ~ms, disk restarts are seconds + rework.
+        let tau = 600.0;
+        let all_disk = tiered_recovery_cost(0.01, 45.0, tau, 0.0);
+        let all_mem = tiered_recovery_cost(0.01, 45.0, tau, 1.0);
+        let half = tiered_recovery_cost(0.01, 45.0, tau, 0.5);
+        assert!((all_disk - (45.0 + 300.0)).abs() < 1e-9);
+        assert!((all_mem - 0.01).abs() < 1e-12);
+        assert!(all_mem < half && half < all_disk);
     }
 }

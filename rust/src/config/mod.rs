@@ -29,6 +29,15 @@ impl ReplicationDegree {
     }
 }
 
+/// Which ranks the injector may kill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// Any launched process (computational, replica, or idle spare).
+    All,
+    /// Computational processes only (the paper's targeted MTTI runs).
+    CompsOnly,
+}
+
 /// Fault injection parameters (paper §VII-B: Weibull inter-failure times,
 /// random victim).
 #[derive(Clone, Copy, Debug)]
@@ -42,6 +51,8 @@ pub struct FaultPlan {
     pub seed: u64,
     /// Upper bound on injected failures (safety for tests).
     pub max_failures: usize,
+    /// Which ranks are eligible victims.
+    pub target: FaultTarget,
 }
 
 impl Default for FaultPlan {
@@ -52,6 +63,27 @@ impl Default for FaultPlan {
             weibull_scale_s: 0.5,
             seed: 0xFA_17,
             max_failures: 64,
+            target: FaultTarget::All,
+        }
+    }
+}
+
+/// The in-memory replicated image store (`restore/`) that turns an
+/// unreplicated computational rank's death from a job interruption into a
+/// cold restore onto a spare process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RestorePlan {
+    /// Shards each process image is split into.
+    pub shards: usize,
+    /// Copies of each shard, placed on distinct peer ranks.
+    pub redundancy: usize,
+}
+
+impl Default for RestorePlan {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            redundancy: 2,
         }
     }
 }
@@ -71,6 +103,12 @@ pub struct JobConfig {
     pub ompi_net: NetModel,
     /// Fault injection.
     pub faults: FaultPlan,
+    /// Idle spare processes launched alongside the world, adoptable by the
+    /// error handler to cold-restore an unreplicated computational rank
+    /// from the in-memory image store.
+    pub nspares: usize,
+    /// Image-store sharding parameters.
+    pub restore: RestorePlan,
     /// Workload seed (problem generation).
     pub seed: u64,
     /// How many EMPI test-loop polls between ULFM failure/revoke checks on
@@ -87,6 +125,8 @@ impl Default for JobConfig {
             empi_net: NetModel::empi_tuned(),
             ompi_net: NetModel::ompi_generic(),
             faults: FaultPlan::default(),
+            nspares: 0,
+            restore: RestorePlan::default(),
             seed: 42,
             failure_check_stride: 8,
         }
@@ -107,8 +147,13 @@ impl JobConfig {
         self.rdegree.nrep(self.ncomp)
     }
 
-    /// Total processes launched (`eworld` size).
+    /// Total processes launched (eworld members plus idle spares).
     pub fn nprocs(&self) -> usize {
+        self.ncomp + self.nrep() + self.nspares
+    }
+
+    /// First spare fabric rank (spares occupy the tail of the rank space).
+    pub fn spare_base(&self) -> usize {
         self.ncomp + self.nrep()
     }
 
@@ -147,6 +192,28 @@ impl JobConfig {
             "faults.seed" => self.faults.seed = value.parse().map_err(|_| bad(key, value))?,
             "faults.max_failures" => {
                 self.faults.max_failures = value.parse().map_err(|_| bad(key, value))?
+            }
+            "faults.target" => {
+                self.faults.target = match value {
+                    "all" => FaultTarget::All,
+                    "comps" => FaultTarget::CompsOnly,
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "nspares" => self.nspares = value.parse().map_err(|_| bad(key, value))?,
+            "restore.shards" => {
+                let s: usize = value.parse().map_err(|_| bad(key, value))?;
+                if s == 0 {
+                    return Err(bad(key, value));
+                }
+                self.restore.shards = s;
+            }
+            "restore.redundancy" => {
+                let r: usize = value.parse().map_err(|_| bad(key, value))?;
+                if r == 0 {
+                    return Err(bad(key, value));
+                }
+                self.restore.redundancy = r;
             }
             "net.inject" => {
                 let inject: bool = value.parse().map_err(|_| bad(key, value))?;
@@ -224,6 +291,22 @@ mod tests {
         assert_eq!(cfg.ompi_net.rndv_threshold, 8192);
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("ncomp", "abc").is_err());
+    }
+
+    #[test]
+    fn spares_extend_the_rank_space() {
+        let mut cfg = JobConfig::new(4, 50.0);
+        cfg.set("nspares", "2").unwrap();
+        cfg.set("restore.shards", "3").unwrap();
+        cfg.set("restore.redundancy", "2").unwrap();
+        cfg.set("faults.target", "comps").unwrap();
+        assert_eq!(cfg.nprocs(), 8); // 4 comp + 2 rep + 2 spare
+        assert_eq!(cfg.spare_base(), 6);
+        assert_eq!(cfg.restore.shards, 3);
+        assert_eq!(cfg.faults.target, FaultTarget::CompsOnly);
+        assert!(cfg.set("restore.shards", "0").is_err());
+        assert!(cfg.set("restore.redundancy", "0").is_err());
+        assert!(cfg.set("faults.target", "nope").is_err());
     }
 
     #[test]

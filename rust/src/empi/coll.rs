@@ -36,7 +36,11 @@ pub fn barrier(comm: &Comm) -> Result<(), CommError> {
     let mut k = 1usize;
     while k < n {
         let to = (me + k) % n;
-        let from = (me + n - k % n) % n;
+        // Parenthesised for clarity: `%` already binds tighter than `-`,
+        // so this is the value the unbracketed form always computed — the
+        // brackets just make the reduce-then-subtract order (and the
+        // partner symmetry it guarantees, tested below) explicit.
+        let from = (me + n - (k % n)) % n;
         comm.send(to, tag, &[])?;
         comm.recv(Src::Rank(from), Tag::Tag(tag))?;
         k <<= 1;
@@ -290,6 +294,31 @@ mod tests {
                     barrier(&comm).unwrap();
                 }
             });
+        }
+    }
+
+    #[test]
+    fn barrier_partner_symmetry_1_to_17() {
+        // Dissemination-round partner relation: if I signal `to`, then the
+        // rank I wait for (`from`) must be signalling me — for every world
+        // size 1..=17, every rank, and every distance k (including k >= n,
+        // which the loop never produces but the formula must tolerate).
+        for n in 1usize..=17 {
+            let mut k = 1usize;
+            while k < 2 * n {
+                for me in 0..n {
+                    let to = (me + k) % n;
+                    let from = (me + n - (k % n)) % n;
+                    // from's "to" is me, and my "to"'s "from" is me.
+                    assert_eq!((from + k) % n, me, "n={n} k={k} me={me}");
+                    assert_eq!((to + n - (k % n)) % n, me, "n={n} k={k} me={me}");
+                }
+                k <<= 1;
+            }
+        }
+        // And the barrier itself completes at every size in the range.
+        for n in [14usize, 15, 16, 17] {
+            run_ranks(n, |_r, comm| barrier(&comm).unwrap());
         }
     }
 

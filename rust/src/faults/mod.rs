@@ -14,9 +14,20 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::FaultPlan;
+use crate::config::{FaultPlan, FaultTarget, JobConfig};
 use crate::fabric::{Fabric, ProcSet};
 use crate::util::Xoshiro256;
+
+/// Victim pool for a job, per the plan's target. `CompsOnly` means the
+/// *initial* computational fabric ranks (0..ncomp) — the injector keeps a
+/// static view, like the paper's external killer; processes promoted or
+/// adopted into computational slots later are not retargeted.
+pub fn eligible_ranks(plan: &FaultPlan, cfg: &JobConfig) -> Vec<usize> {
+    match plan.target {
+        FaultTarget::All => (0..cfg.nprocs()).collect(),
+        FaultTarget::CompsOnly => (0..cfg.ncomp).collect(),
+    }
+}
 
 /// One injected failure, for trace records and replay.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -144,6 +155,7 @@ mod tests {
             weibull_scale_s: 0.005,
             seed,
             max_failures: maxf,
+            target: FaultTarget::All,
         }
     }
 
@@ -186,6 +198,16 @@ mod tests {
         for r in 0..4 {
             assert!(!procs.is_poisoned(r));
         }
+    }
+
+    #[test]
+    fn eligible_ranks_follow_target() {
+        let mut cfg = crate::config::JobConfig::new(4, 50.0);
+        cfg.nspares = 1; // 4 comp + 2 rep + 1 spare
+        let mut plan = FaultPlan::default();
+        assert_eq!(eligible_ranks(&plan, &cfg), (0..7).collect::<Vec<_>>());
+        plan.target = crate::config::FaultTarget::CompsOnly;
+        assert_eq!(eligible_ranks(&plan, &cfg), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -51,6 +51,16 @@ pub struct RunResult {
     pub replays: u64,
     pub promotions: u64,
     pub handler_entries: u64,
+    /// Image-store traffic: refreshes pushed, shard payload bytes pushed,
+    /// shards rebuilt during cold restores.
+    pub store_refreshes: u64,
+    pub shard_bytes_pushed: u64,
+    pub shards_rebuilt: u64,
+    /// Spares adopted into computational slots.
+    pub cold_restores: u64,
+    /// Seconds inside the restore phase (refresh pushes + shard gather),
+    /// summed over ranks — the cold-restore latency measure.
+    pub restore_s: f64,
 }
 
 impl RunResult {
@@ -72,13 +82,16 @@ pub fn run_app(
     iters: usize,
     eng: Option<ComputeEngine>,
 ) -> RunResult {
-    // The baseline launches exactly ncomp processes — no replicas exist.
+    // The baseline launches exactly ncomp processes — no replicas or
+    // spares exist.
     let mut cfg = cfg.clone();
     if backend == Backend::EmpiBaseline {
         cfg.rdegree = crate::config::ReplicationDegree(0.0);
+        cfg.nspares = 0;
     }
     let faults = cfg.faults;
     let seed = cfg.seed;
+    let eligible = crate::faults::eligible_ranks(&faults, &cfg);
 
     let injector: std::sync::Mutex<Option<FaultInjector>> = std::sync::Mutex::new(None);
     let report = {
@@ -88,14 +101,14 @@ pub fn run_app(
         let slot: std::sync::Arc<std::sync::Mutex<Option<FaultInjector>>> =
             std::sync::Arc::new(std::sync::Mutex::new(None));
         let slot2 = slot.clone();
-        let report = launch_job(&cfg, move |ctx| -> Result<f64, JobError> {
+        let report = launch_job(&cfg, move |ctx| -> Result<Option<f64>, JobError> {
             // Rank 0 arms the injector once everything exists.
             if ctx.rank == 0 && faults.enabled {
                 let inj = FaultInjector::start(
                     faults,
                     ctx.procs.clone(),
                     vec![ctx.empi_fabric.clone(), ctx.ompi_fabric.clone()],
-                    (0..ctx.cfg.nprocs()).collect(),
+                    eligible.clone(),
                 );
                 *slot2.lock().unwrap() = Some(inj);
             }
@@ -107,12 +120,26 @@ pub fn run_app(
                         ctx.rank,
                     ));
                     let eng = eng.clone();
-                    app.run(&world, eng.as_ref(), iters, seed)
+                    Some(app.run(&world, eng.as_ref(), iters, seed))
                 }
                 Backend::PartReper => {
                     let pr = PartReper::init(ctx);
+                    // Harness apps are not restore-aware: spares park for
+                    // the job's lifetime and retire. (They can still be
+                    // *adopted* — but with no store refreshes the adopted
+                    // spare finds no complete generation and the job
+                    // interrupts, exactly like the pre-store behaviour.)
+                    match pr.start::<crate::partreper::replicate::BlobState>() {
+                        crate::partreper::Start::Retired => return Ok(None),
+                        crate::partreper::Start::Fresh => {}
+                        crate::partreper::Start::Restored(_) => {
+                            return Err(JobError::Runtime(
+                                "harness apps cannot resume a cold-restored spare".into(),
+                            ));
+                        }
+                    }
                     let eng = eng.clone();
-                    app.run(&pr, eng.as_ref(), iters, seed)
+                    Some(app.run(&pr, eng.as_ref(), iters, seed))
                 }
             };
             Ok(checksum)
@@ -137,7 +164,9 @@ pub fn run_app(
         match o {
             RankOutcome::Done(v) => {
                 done += 1;
-                checksum.get_or_insert(*v);
+                if let Some(v) = v {
+                    checksum.get_or_insert(*v);
+                }
             }
             RankOutcome::Killed => killed += 1,
             RankOutcome::Interrupted { .. } => interrupted += 1,
@@ -164,6 +193,11 @@ pub fn run_app(
         replays: crate::metrics::Counters::get(&totals.collective_replays),
         promotions: crate::metrics::Counters::get(&totals.promotions),
         handler_entries: crate::metrics::Counters::get(&totals.error_handler_entries),
+        store_refreshes: crate::metrics::Counters::get(&totals.restore_refreshes),
+        shard_bytes_pushed: crate::metrics::Counters::get(&totals.restore_shard_bytes),
+        shards_rebuilt: crate::metrics::Counters::get(&totals.restore_shards_rebuilt),
+        cold_restores: crate::metrics::Counters::get(&totals.cold_restores),
+        restore_s: report.phase_seconds(Phase::Restore),
     }
 }
 

@@ -30,6 +30,7 @@ pub mod ompi;
 pub mod partreper;
 pub mod procimg;
 pub mod procmgr;
+pub mod restore;
 pub mod runtime;
 pub mod testutil;
 pub mod util;

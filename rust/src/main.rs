@@ -97,6 +97,14 @@ fn main() {
                 "handler_s={:.4} promotions={} resends={} replays={}",
                 r.error_handler_s, r.promotions, r.resends, r.replays
             );
+            println!(
+                "restore: cold={} refreshes={} shard_bytes={} rebuilt={} restore_s={:.4}",
+                r.cold_restores,
+                r.store_refreshes,
+                r.shard_bytes_pushed,
+                r.shards_rebuilt,
+                r.restore_s
+            );
             println!("checksum: {:?}", r.checksum);
         }
         "fig8" => {

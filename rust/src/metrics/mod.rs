@@ -21,9 +21,12 @@ pub enum Phase {
     Replication,
     /// Checkpoint write / restart read.
     Checkpoint,
+    /// Cold restore: shard gather + image reassembly on a spare (and the
+    /// shard refresh pushes on computational ranks).
+    Restore,
 }
 
-const NPHASE: usize = 4;
+const NPHASE: usize = 5;
 
 fn idx(p: Phase) -> usize {
     match p {
@@ -31,6 +34,7 @@ fn idx(p: Phase) -> usize {
         Phase::ErrorHandler => 1,
         Phase::Replication => 2,
         Phase::Checkpoint => 3,
+        Phase::Restore => 4,
     }
 }
 
@@ -130,6 +134,14 @@ pub struct Counters {
     pub promotions: AtomicU64,
     /// Replica drops (replica died).
     pub replica_drops: AtomicU64,
+    /// Image-store refreshes pushed (owner side).
+    pub restore_refreshes: AtomicU64,
+    /// Shard payload bytes pushed to holders (owner side).
+    pub restore_shard_bytes: AtomicU64,
+    /// Shards received and rebuilt into an image during a cold restore.
+    pub restore_shards_rebuilt: AtomicU64,
+    /// Cold restores completed (a spare became a computational rank).
+    pub cold_restores: AtomicU64,
 }
 
 impl Counters {
@@ -163,7 +175,11 @@ impl Counters {
             failure_checks,
             error_handler_entries,
             promotions,
-            replica_drops
+            replica_drops,
+            restore_refreshes,
+            restore_shard_bytes,
+            restore_shards_rebuilt,
+            cold_restores
         );
     }
 }

@@ -13,7 +13,11 @@
 //!   ("the newly shrunk communicator has its processes shuffled such that
 //!   the replica now becomes the computational process, following which it
 //!   is considered that the replica was the one that had failed");
-//! * dead computational without a replica → **job interruption** (§VII-B).
+//! * dead computational without a replica → a **cold restore**: the next
+//!   spare process from the layout's spare pool takes the computational
+//!   position and is rebuilt from the peer-held image store (`restore/`);
+//! * dead computational without replica *or* spare → **job interruption**
+//!   (§VII-B).
 //!
 //! All six EMPI communicators are regenerated from the shrunk oworld's
 //! context id, deterministically, so every survivor rebuilds the same
@@ -45,6 +49,23 @@ pub struct Layout {
     pub ncomp: usize,
     /// Replica slot j mirrors computational rank `rep_mirror[j]`.
     pub rep_mirror: Vec<usize>,
+    /// Idle spare fabric ranks, in deterministic claim order. Not part of
+    /// eworld; a repair pops from the front to cold-restore a dead
+    /// unreplicated computational rank.
+    pub spares: Vec<usize>,
+}
+
+/// What one repair did: the new layout plus the membership changes every
+/// survivor must act on (promotions relabel a live process; cold restores
+/// require the image-store pull before recovery can run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RepairOutcome {
+    pub layout: Layout,
+    /// `(comp rank, promoted fabric rank)` — replica took the comp slot.
+    pub promotions: Vec<(usize, usize)>,
+    /// `(comp rank, spare fabric rank)` — spare adopted into the comp slot,
+    /// pending an image-store rebuild.
+    pub restores: Vec<(usize, usize)>,
 }
 
 impl Layout {
@@ -52,11 +73,18 @@ impl Layout {
     /// nrep are replicas, replica j mirrors comp j (§V: replicas are "the
     /// last nRep processes"; the replica map starts as identity).
     pub fn initial(ncomp: usize, nrep: usize) -> Self {
+        Self::initial_with_spares(ncomp, nrep, 0)
+    }
+
+    /// Initial layout with `nspares` idle spares occupying the fabric-rank
+    /// tail after the replicas.
+    pub fn initial_with_spares(ncomp: usize, nrep: usize, nspares: usize) -> Self {
         assert!(nrep <= ncomp, "cannot have more replicas than comps");
         Self {
             assign: (0..ncomp + nrep).collect(),
             ncomp,
             rep_mirror: (0..nrep).collect(),
+            spares: (ncomp + nrep..ncomp + nrep + nspares).collect(),
         }
     }
 
@@ -106,19 +134,28 @@ impl Layout {
     }
 
     /// Apply the agreed dead set (fabric ranks). Returns the repaired
-    /// layout and the promotions performed `(comp rank, promoted fabric)`,
-    /// or `Err(comp rank)` when a computational rank without a live replica
-    /// is dead — the job-level interruption the paper's MTTI experiments
+    /// layout plus promotions and cold restores, or `Err(comp rank)` when a
+    /// computational rank died with neither a live replica nor a spare to
+    /// adopt — the job-level interruption the paper's MTTI experiments
     /// count (§VII-B).
-    pub fn repair(
-        &self,
-        dead: &HashSet<usize>,
-    ) -> Result<(Layout, Vec<(usize, usize)>), usize> {
+    ///
+    /// Every survivor computes this from the same prior layout and the same
+    /// agreed dead set, so spare claiming needs no negotiation: the pool is
+    /// ordered and popped front-first.
+    pub fn repair(&self, dead: &HashSet<usize>) -> Result<RepairOutcome, usize> {
         let mut assign = self.assign.clone();
         let mut rep_mirror = self.rep_mirror.clone();
+        let mut spares: Vec<usize> = self
+            .spares
+            .iter()
+            .copied()
+            .filter(|f| !dead.contains(f))
+            .collect();
         let mut promotions = Vec::new();
+        let mut restores = Vec::new();
 
-        // Promote replicas into dead computational slots (or interrupt).
+        // Promote replicas into dead computational slots; with no replica,
+        // adopt a spare (cold restore); with neither, interrupt.
         for c in 0..self.ncomp {
             if !dead.contains(&assign[c]) {
                 continue;
@@ -136,7 +173,14 @@ impl Layout {
                     // had failed" — the vacated slot goes away below.
                     rep_mirror[j] = usize::MAX; // tombstone
                 }
-                None => return Err(c),
+                None => {
+                    if spares.is_empty() {
+                        return Err(c);
+                    }
+                    let spare = spares.remove(0);
+                    assign[c] = spare;
+                    restores.push((c, spare));
+                }
             }
         }
 
@@ -151,14 +195,16 @@ impl Layout {
             }
         }
 
-        Ok((
-            Layout {
+        Ok(RepairOutcome {
+            layout: Layout {
                 assign: new_assign,
                 ncomp: self.ncomp,
                 rep_mirror: new_mirror,
+                spares,
             },
             promotions,
-        ))
+            restores,
+        })
     }
 }
 
@@ -341,8 +387,10 @@ mod tests {
     fn repair_dead_replica_drops_slot() {
         let l = Layout::initial(4, 2); // fabric: comps 0-3, reps 4,5
         let dead: HashSet<usize> = [5].into_iter().collect(); // rep of comp 1
-        let (l2, promos) = l.repair(&dead).unwrap();
-        assert!(promos.is_empty());
+        let out = l.repair(&dead).unwrap();
+        let l2 = out.layout;
+        assert!(out.promotions.is_empty());
+        assert!(out.restores.is_empty());
         assert_eq!(l2.ncomp, 4);
         assert_eq!(l2.nrep(), 1);
         assert!(l2.has_rep(0));
@@ -354,8 +402,9 @@ mod tests {
     fn repair_promotes_replica_for_dead_comp() {
         let l = Layout::initial(4, 2);
         let dead: HashSet<usize> = [1].into_iter().collect(); // comp 1 dies
-        let (l2, promos) = l.repair(&dead).unwrap();
-        assert_eq!(promos, vec![(1, 5)]); // rep fabric 5 takes comp slot 1
+        let out = l.repair(&dead).unwrap();
+        let l2 = out.layout;
+        assert_eq!(out.promotions, vec![(1, 5)]); // rep fabric 5 takes slot 1
         assert_eq!(l2.assign, vec![0, 5, 2, 3, 4]);
         assert_eq!(l2.nrep(), 1);
         assert!(!l2.has_rep(1), "promoted comp lost its replica");
@@ -388,26 +437,67 @@ mod tests {
 
         // Whereas comp 1 + rep-of-0 dying together is survivable.
         let dead: HashSet<usize> = [1, 4].into_iter().collect();
-        let (l2, promos) = l.repair(&dead).unwrap();
-        assert_eq!(promos, vec![(1, 5)]);
-        assert_eq!(l2.assign, vec![0, 5, 2, 3]);
-        assert_eq!(l2.nrep(), 0);
+        let out = l.repair(&dead).unwrap();
+        assert_eq!(out.promotions, vec![(1, 5)]);
+        assert_eq!(out.layout.assign, vec![0, 5, 2, 3]);
+        assert_eq!(out.layout.nrep(), 0);
     }
 
     #[test]
     fn sequential_repairs_compose() {
         let l = Layout::initial(4, 4);
         // comp 2 dies -> rep 6 promoted
-        let (l1, _) = l.repair(&[2].into_iter().collect()).unwrap();
+        let l1 = l.repair(&[2].into_iter().collect()).unwrap().layout;
         assert_eq!(l1.assign, vec![0, 1, 6, 3, 4, 5, 7]);
         assert_eq!(l1.rep_mirror, vec![0, 1, 3]);
         // then promoted comp 2 (fabric 6) dies again: no rep left for 2
         assert_eq!(l1.repair(&[6].into_iter().collect()).unwrap_err(), 2);
         // but comp 0 dying is fine
-        let (l2, promos) = l1.repair(&[0].into_iter().collect()).unwrap();
-        assert_eq!(promos, vec![(0, 4)]);
-        assert_eq!(l2.assign, vec![4, 1, 6, 3, 5, 7]);
-        assert_eq!(l2.rep_mirror, vec![1, 3]);
+        let out = l1.repair(&[0].into_iter().collect()).unwrap();
+        assert_eq!(out.promotions, vec![(0, 4)]);
+        assert_eq!(out.layout.assign, vec![4, 1, 6, 3, 5, 7]);
+        assert_eq!(out.layout.rep_mirror, vec![1, 3]);
+    }
+
+    #[test]
+    fn repair_adopts_spare_for_unreplicated_comp() {
+        // 4 comps, 1 rep (comp 0), 2 spares at fabric 5, 6.
+        let l = Layout::initial_with_spares(4, 1, 2);
+        assert_eq!(l.spares, vec![5, 6]);
+        // comp 3 (no replica) dies -> spare 5 adopted.
+        let out = l.repair(&[3].into_iter().collect()).unwrap();
+        assert_eq!(out.restores, vec![(3, 5)]);
+        assert!(out.promotions.is_empty());
+        assert_eq!(out.layout.assign, vec![0, 1, 2, 5, 4]);
+        assert_eq!(out.layout.spares, vec![6]);
+        assert_eq!(out.layout.role_of_fabric(5), Some((Role::Comp, 3)));
+        // A second unreplicated death drains the pool...
+        let out2 = out.layout.repair(&[2].into_iter().collect()).unwrap();
+        assert_eq!(out2.restores, vec![(2, 6)]);
+        assert!(out2.layout.spares.is_empty());
+        // ...and a third interrupts.
+        assert_eq!(out2.layout.repair(&[1].into_iter().collect()).unwrap_err(), 1);
+    }
+
+    #[test]
+    fn repair_dead_spare_leaves_pool() {
+        let l = Layout::initial_with_spares(2, 0, 2); // spares 2, 3
+        let out = l.repair(&[2].into_iter().collect()).unwrap();
+        assert_eq!(out.layout.spares, vec![3]);
+        assert!(out.restores.is_empty());
+        // spare 2 dead AND comp 1 dead in the same epoch: comp 1 gets 3.
+        let out2 = l.repair(&[2, 1].into_iter().collect()).unwrap();
+        assert_eq!(out2.restores, vec![(1, 3)]);
+        assert!(out2.layout.spares.is_empty());
+    }
+
+    #[test]
+    fn repair_prefers_replica_over_spare() {
+        let l = Layout::initial_with_spares(2, 2, 1);
+        let out = l.repair(&[0].into_iter().collect()).unwrap();
+        assert_eq!(out.promotions, vec![(0, 2)]);
+        assert!(out.restores.is_empty());
+        assert_eq!(out.layout.spares, vec![4], "spare pool untouched");
     }
 
     #[test]

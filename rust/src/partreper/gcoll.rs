@@ -123,7 +123,8 @@ impl<'a> Guard<'a> {
         let mut k = 1usize;
         while k < n {
             let to = (me + k) % n;
-            let from = (me + n - k % n) % n;
+            // Parenthesised for clarity (see empi::coll::barrier).
+            let from = (me + n - (k % n)) % n;
             self.send(comm, to, tag, &[])?;
             self.recv(comm, Src::Rank(from), Tag::Tag(tag))?;
             k <<= 1;

@@ -7,8 +7,20 @@
 //! 2. **Shrink**: agree on the failed set, drop it from oworld.
 //! 3. **Repair the world**: dead replica → dropped; dead computational
 //!    with live replica → replica promoted into the computational slot;
-//!    dead computational without replica → job interruption. All six EMPI
-//!    communicators are regenerated from the shrunk oworld's context.
+//!    dead computational without replica → a spare from the layout's pool
+//!    is adopted and **cold-restored** from the peer-held image store
+//!    (`restore/`); with neither replica nor spare (or with the store's
+//!    redundancy exhausted) → job interruption. All six EMPI communicators
+//!    are regenerated from the shrunk oworld's context.
+//! 3b. **Cold-restore phase**: every survivor drains queued shard pushes
+//!    and offers the adopted spare everything it holds for the dead rank;
+//!    the spare reassembles the newest complete store generation and
+//!    installs the snapshot's image + message log, becoming the dead
+//!    rank's exact protocol state at that generation. Step 4 then treats
+//!    it like any other lagging incarnation: resends feed its re-executed
+//!    receives, skip marks suppress its re-executed sends, and survivors'
+//!    collective replay (running on the rebuilt `EMPI_COMM_CMP` with
+//!    aligned round tags) supplies its re-executed collectives.
 //! 4. **Message recovery**:
 //!    a. allgather every process's `last_collective_id` (agreement on the
 //!       first collective not completed everywhere);
@@ -26,13 +38,18 @@
 use std::collections::HashSet;
 
 use crate::error::{CommError, RankKilled};
+use crate::fabric::{Envelope, MatchSpec};
 use crate::metrics::{Counters, Phase};
+use crate::restore::{self, OfferMsg, Snapshot};
 use crate::util::{u64s_from_bytes, u64s_to_bytes};
 
 use super::comms::{Role, WorldComms};
 use super::gcoll::{Guard, OpError};
 use super::log::{Channel, CollKind, CollRecord};
 use super::{CollResult, PartReper};
+
+/// Park interval while a spare gathers shard offers.
+const OFFER_TICK: std::time::Duration = std::time::Duration::from_micros(200);
 
 impl PartReper {
     /// §VI entry point. Returns only when the world is repaired and
@@ -78,40 +95,206 @@ impl PartReper {
                 .copied()
                 .filter(|f| !new_oworld.group.contains(f))
                 .collect();
-            // Unrecoverable: a computational process without a live
-            // replica died. Latch the job-wide abort (so every rank
-            // reports the same trigger) and unwind.
-            let (layout, promotions) = match st.comms.layout.repair(&dead) {
+            // Unrecoverable: a computational process died with neither a
+            // live replica nor a spare left to adopt. Latch the job-wide
+            // abort (so every rank reports the same trigger) and unwind.
+            let outcome = match st.layout.repair(&dead) {
                 Ok(v) => v,
                 Err(dead_comp) => {
                     let dead_rank = self.ctx.abort.trigger(dead_comp);
                     std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
                 }
             };
-            for &(_, fabric) in &promotions {
+            for &(_, fabric) in &outcome.promotions {
                 if fabric == self.ctx.rank {
                     Counters::bump(&self.ctx.counters.promotions);
                 }
             }
-            let dropped_reps = st.comms.layout.nrep() - layout.nrep() - promotions.len();
+            let dropped_reps =
+                st.layout.nrep() - outcome.layout.nrep() - outcome.promotions.len();
             Counters::add(&self.ctx.counters.replica_drops, dropped_reps as u64);
 
             let generation = st.generation + 1;
             let base = WorldComms::base_ctx_from_oworld(&new_oworld, generation);
-            let comms = WorldComms::build(
-                &self.ctx.empi_fabric,
-                layout,
-                self.ctx.rank,
-                base,
-                generation,
-            );
+            let is_member = outcome.layout.assign.contains(&self.ctx.rank);
+            let comms = is_member.then(|| {
+                WorldComms::build(
+                    &self.ctx.empi_fabric,
+                    outcome.layout.clone(),
+                    self.ctx.rank,
+                    base,
+                    generation,
+                )
+            });
             st.oworld = new_oworld;
+            st.layout = outcome.layout;
             st.comms = comms;
             st.generation = generation;
+            // Cold-restore bookkeeping survives handler re-entries: a
+            // restore stays pending until its recovery epoch completes
+            // (a dead spare's entry is dropped — repair re-assigned it).
+            st.cold_pending.retain(|&(_, s)| !dead.contains(&s));
+            for &(c, s) in &outcome.restores {
+                if !st.cold_pending.contains(&(c, s)) {
+                    st.cold_pending.push((c, s));
+                }
+            }
         }
 
-        // ---- 4: message recovery on the repaired world.
-        self.recover()
+        // ---- 3b: ship peer-held shards to adopted spares before recovery
+        // needs their logs.
+        self.cold_restore_phase()?;
+
+        // ---- 4: message recovery on the repaired world (members only —
+        // unadopted spares return to standby).
+        if self.state.borrow().is_member() {
+            self.recover()?;
+            // Epoch recovered: every adopted spare has its image, offers
+            // need not be repeated. Unadopted spares can't observe this
+            // (they skip recovery), so they keep re-offering on later
+            // epochs — already-restored ranks drain and discard those.
+            self.state.borrow_mut().cold_pending.clear();
+        }
+        Ok(())
+    }
+
+    /// §3b: every survivor drains its restore mailbox and offers adopted
+    /// spares the shards it holds for their dead owners; an adopted spare
+    /// gathers the offers, reassembles the newest complete generation, and
+    /// installs the snapshot (image for [`PartReper::start`], log for
+    /// recovery). Redundancy exhausted → job interruption.
+    fn cold_restore_phase(&self) -> Result<(), OpError> {
+        let (pending, generation, my_pending) = {
+            let st = self.state.borrow();
+            let mine = st
+                .cold_pending
+                .iter()
+                .copied()
+                .find(|&(_, s)| s == self.ctx.rank);
+            (st.cold_pending.clone(), st.generation, mine)
+        };
+        // Drain pushed shards first so offers reflect the freshest
+        // generations; keep offer messages queued iff I'm still waiting
+        // for mine.
+        let awaiting_image = my_pending.is_some() && self.pending_image.borrow().is_none();
+        self.drain_restore_mailbox(awaiting_image);
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let _phase = self.ctx.clock.scoped(Phase::Restore);
+        let me = self.ctx.rank;
+        {
+            let st = self.state.borrow();
+            let g = Guard {
+                oworld: &st.oworld,
+                counters: &self.ctx.counters,
+                stride: self.ctx.cfg.failure_check_stride,
+                abort: &self.ctx.abort,
+            };
+            for &(comp, spare) in &pending {
+                if spare == me {
+                    continue;
+                }
+                let entries = self.store.borrow().entries_for(comp);
+                let msg = OfferMsg {
+                    owner: comp,
+                    epoch: generation,
+                    entries,
+                };
+                g.check()?;
+                let env = Envelope::new(
+                    me,
+                    spare,
+                    self.ctx.restore_ctx,
+                    restore::TAG_OFFER,
+                    0,
+                    msg.encode(),
+                );
+                match self.ctx.empi_fabric.send(env) {
+                    Ok(()) => {}
+                    Err(CommError::Killed { rank }) => {
+                        std::panic::panic_any(RankKilled { rank })
+                    }
+                    Err(_) => {}
+                }
+            }
+            if awaiting_image {
+                let (comp, _) = my_pending.expect("awaiting_image implies my_pending");
+                self.gather_and_install(&g, &st, comp, generation)?;
+            }
+        }
+        if awaiting_image {
+            // Installed: I am no longer awaiting an image — later handler
+            // passes must not gather again (peers' re-offers get drained).
+            self.state
+                .borrow_mut()
+                .cold_pending
+                .retain(|&(_, s)| s != me);
+        }
+        Ok(())
+    }
+
+    /// Adopted-spare side of §3b: collect one offer per fellow survivor of
+    /// this epoch, assemble the newest complete generation, install it.
+    fn gather_and_install(
+        &self,
+        g: &Guard,
+        st: &super::State,
+        comp: usize,
+        epoch: u64,
+    ) -> Result<(), OpError> {
+        let me = self.ctx.rank;
+        let fabric = &self.ctx.empi_fabric;
+        let spec = MatchSpec::any_source(self.ctx.restore_ctx, restore::TAG_OFFER);
+        let mut got: HashSet<usize> = HashSet::new();
+        let mut entries: Vec<(usize, restore::ShardCopy)> = Vec::new();
+        let mut clock = fabric.arrivals(me);
+        loop {
+            // Every oworld survivor that has not finalized sends exactly
+            // one offer for this epoch (recomputed each pass: a peer may
+            // finalize concurrently).
+            let outstanding = st.oworld.group.iter().any(|&f| {
+                f != me && !self.ctx.procs.is_finalized(f) && !got.contains(&f)
+            });
+            if !outstanding {
+                break;
+            }
+            g.check()?;
+            match fabric.try_recv(me, &spec) {
+                Ok(Some(env)) => {
+                    let msg = OfferMsg::decode(&env.data);
+                    // Stale epochs (interrupted earlier attempts) and
+                    // foreign owners are dropped on the floor.
+                    if msg.epoch == epoch && msg.owner == comp && got.insert(env.src) {
+                        entries.extend(msg.entries);
+                    }
+                }
+                Ok(None) => {
+                    clock = fabric.wait_new_mail(me, clock, OFFER_TICK);
+                }
+                Err(CommError::Killed { rank }) => {
+                    std::panic::panic_any(RankKilled { rank })
+                }
+                Err(e) => {
+                    std::panic::panic_any(format!("offer gather failed: {e}"))
+                }
+            }
+        }
+        match restore::assemble(&entries) {
+            Some((_gen, bytes, nshards)) => {
+                let snap = Snapshot::from_bytes(&bytes);
+                Counters::add(&self.ctx.counters.restore_shards_rebuilt, nshards as u64);
+                *self.log.borrow_mut() = snap.log;
+                *self.pending_image.borrow_mut() = Some(snap.image);
+                Ok(())
+            }
+            None => {
+                // Shards lost beyond redundancy: the scenario genuinely is
+                // unrecoverable — fall back to the §VII-B interruption.
+                let dead_rank = self.ctx.abort.trigger(comp);
+                std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
+            }
+        }
     }
 
     /// §VI-B message recovery.
@@ -124,12 +307,13 @@ impl PartReper {
             abort: &self.ctx.abort,
         };
         let mut log = self.log.borrow_mut();
-        let eworld = &st.comms.eworld;
-        let layout = &st.comms.layout;
+        let comms = st.comms();
+        let eworld = &comms.eworld;
+        let layout = &comms.layout;
         let n = eworld.size();
-        let me_pos = st.comms.my_pos;
-        let me_app = st.comms.app_rank();
-        let my_role = st.comms.role();
+        let me_pos = comms.my_pos;
+        let me_app = comms.app_rank();
+        let my_role = comms.role();
 
         // (a) Exchange last completed collective ids.
         let mine = log.last_coll_id();
@@ -139,6 +323,20 @@ impl PartReper {
             .map(|b| u64s_from_bytes(b)[0])
             .collect();
         let min_cid = all_last.iter().copied().min().unwrap_or(0);
+
+        // Stale store guard: a cold-restored rank whose snapshot predates
+        // my prune floor needs collective records I no longer hold — the
+        // replay it depends on cannot run, so the job interrupts (the
+        // store was refreshed too rarely to cover this failure).
+        if min_cid < log.pruned_to() {
+            let trigger = st
+                .cold_pending
+                .first()
+                .map(|&(c, _)| c)
+                .unwrap_or(me_app);
+            let dead_rank = self.ctx.abort.trigger(trigger);
+            std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
+        }
 
         // (b) Exchange received send-ids: to each incarnation, the ids I
         // received from its logical rank.
@@ -214,7 +412,7 @@ impl PartReper {
         rec: &CollRecord,
         rep_last: Option<u64>,
     ) -> Result<(), OpError> {
-        let comm = st.comms.comm_cmp.as_ref().expect("replay runs on comps");
+        let comm = st.comms().comm_cmp.as_ref().expect("replay runs on comps");
         let result = match rec.kind {
             CollKind::Barrier => {
                 g.barrier(comm)?;
@@ -248,10 +446,10 @@ impl PartReper {
             }
         };
         // Re-relay to my replica only if it was behind this collective.
-        let me_app = st.comms.app_rank();
-        if let Some(slot) = st.comms.layout.rep_slot_of(me_app) {
+        let me_app = st.comms().app_rank();
+        if let Some(slot) = st.comms().layout.rep_slot_of(me_app) {
             if rep_last.map_or(false, |rl| rec.id > rl) {
-                let inter = st.comms.cmp_rep_inter.as_ref().expect("rep => intercomm");
+                let inter = st.comms().cmp_rep_inter.as_ref().expect("rep => intercomm");
                 g.check()?;
                 inter.send_with_id(slot, rec.id as i64, 0, &result.encode())?;
             }

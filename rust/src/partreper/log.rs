@@ -23,6 +23,7 @@ use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::empi::{DType, ReduceOp};
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// Which stream of a logical destination a transmission targets: the
 /// computational process or its replica. (§V-B routes comp→comp, rep→rep,
@@ -34,7 +35,7 @@ pub enum Channel {
 }
 
 /// One logged p2p send.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SendRecord {
     pub id: u64,
     pub tag: i64,
@@ -56,7 +57,7 @@ pub enum CollKind {
 }
 
 /// One logged collective with everything needed to re-execute it.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CollRecord {
     pub id: u64,
     pub kind: CollKind,
@@ -70,7 +71,7 @@ pub struct CollRecord {
 }
 
 /// Per-rank message log.
-#[derive(Default)]
+#[derive(Clone, Default, PartialEq)]
 pub struct MessageLog {
     /// Next send id per destination app rank (ids start at 1).
     next_id: HashMap<usize, u64>,
@@ -85,6 +86,10 @@ pub struct MessageLog {
     colls: Vec<CollRecord>,
     /// Id of the newest completed collective (0 = none).
     last_coll_id: u64,
+    /// Highest collective floor ever pruned: records at or below it are
+    /// gone and can never be replayed for a peer again. Cold restores from
+    /// an image-store generation older than this floor must abort.
+    pruned_to: u64,
 }
 
 impl MessageLog {
@@ -239,11 +244,17 @@ impl MessageLog {
     /// completion point and send records confirmed received everywhere.
     pub fn prune(&mut self, coll_floor: u64, confirmed: &HashMap<usize, u64>) {
         self.colls.retain(|c| c.id > coll_floor);
+        self.pruned_to = self.pruned_to.max(coll_floor);
         for (dst, &floor) in confirmed {
             if let Some(v) = self.sends.get_mut(dst) {
                 v.retain(|r| r.id > floor);
             }
         }
+    }
+
+    /// Highest collective floor ever pruned on this log.
+    pub fn pruned_to(&self) -> u64 {
+        self.pruned_to
     }
 
     pub fn stats(&self) -> (usize, usize, usize) {
@@ -252,6 +263,218 @@ impl MessageLog {
             self.received.values().map(|v| v.len()).sum(),
             self.colls.len(),
         )
+    }
+
+    // ------------------------------------------------------- serialization
+    //
+    // The image store ships a rank's whole log alongside its process image
+    // so a cold-restored spare re-enters recovery as the dead rank's exact
+    // protocol state at the snapshot point.
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        let mut dsts: Vec<usize> = self.next_id.keys().copied().collect();
+        dsts.sort_unstable();
+        w.usize(dsts.len());
+        for dst in dsts {
+            w.usize(dst);
+            w.u64(self.next_id[&dst]);
+        }
+        let mut sdsts: Vec<usize> = self.sends.keys().copied().collect();
+        sdsts.sort_unstable();
+        w.usize(sdsts.len());
+        for dst in sdsts {
+            let recs = &self.sends[&dst];
+            w.usize(dst);
+            w.usize(recs.len());
+            for r in recs {
+                w.u64(r.id);
+                w.u64(r.tag as u64);
+                w.bytes(&r.data);
+            }
+        }
+        let mut srcs: Vec<usize> = self.received.keys().copied().collect();
+        srcs.sort_unstable();
+        w.usize(srcs.len());
+        for src in srcs {
+            let mut ids: Vec<u64> = self.received[&src].iter().copied().collect();
+            ids.sort_unstable();
+            w.usize(src);
+            w.usize(ids.len());
+            for id in ids {
+                w.u64(id);
+            }
+        }
+        // Skip marks are transient recovery state; a snapshot is taken at a
+        // quiescent app point, but serialize them anyway for fidelity.
+        let mut skips: Vec<(usize, Channel)> = self.skip.keys().copied().collect();
+        skips.sort_by_key(|&(d, c)| (d, matches!(c, Channel::Rep) as u8));
+        w.usize(skips.len());
+        for key in skips {
+            let mut ids: Vec<u64> = self.skip[&key].iter().copied().collect();
+            ids.sort_unstable();
+            w.usize(key.0);
+            w.u64(matches!(key.1, Channel::Rep) as u64);
+            w.usize(ids.len());
+            for id in ids {
+                w.u64(id);
+            }
+        }
+        w.usize(self.colls.len());
+        for c in &self.colls {
+            w.u64(c.id);
+            w.u64(coll_kind_code(c.kind));
+            w.u64(dtype_code(c.dtype));
+            w.u64(op_code(c.op));
+            w.usize(c.root);
+            w.bytes(&c.input);
+            w.usize(c.blocks.len());
+            for b in c.blocks.iter() {
+                w.bytes(b);
+            }
+        }
+        w.u64(self.last_coll_id);
+        w.u64(self.pruned_to);
+        w.finish()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Self {
+        let mut r = ByteReader::new(buf);
+        let mut next_id = HashMap::new();
+        for _ in 0..r.usize() {
+            let dst = r.usize();
+            next_id.insert(dst, r.u64());
+        }
+        let mut sends: HashMap<usize, Vec<SendRecord>> = HashMap::new();
+        for _ in 0..r.usize() {
+            let dst = r.usize();
+            let n = r.usize();
+            let recs = (0..n)
+                .map(|_| SendRecord {
+                    id: r.u64(),
+                    tag: r.u64() as i64,
+                    data: Arc::new(r.bytes().to_vec()),
+                })
+                .collect();
+            sends.insert(dst, recs);
+        }
+        let mut received: HashMap<usize, HashSet<u64>> = HashMap::new();
+        for _ in 0..r.usize() {
+            let src = r.usize();
+            let n = r.usize();
+            received.insert(src, (0..n).map(|_| r.u64()).collect());
+        }
+        let mut skip: HashMap<(usize, Channel), HashSet<u64>> = HashMap::new();
+        for _ in 0..r.usize() {
+            let dst = r.usize();
+            let ch = if r.u64() == 1 {
+                Channel::Rep
+            } else {
+                Channel::Comp
+            };
+            let n = r.usize();
+            skip.insert((dst, ch), (0..n).map(|_| r.u64()).collect());
+        }
+        let ncolls = r.usize();
+        let colls = (0..ncolls)
+            .map(|_| {
+                let id = r.u64();
+                let kind = coll_kind_from(r.u64());
+                let dtype = dtype_from(r.u64());
+                let op = op_from(r.u64());
+                let root = r.usize();
+                let input = Arc::new(r.bytes().to_vec());
+                let nb = r.usize();
+                let blocks = Arc::new((0..nb).map(|_| r.bytes().to_vec()).collect());
+                CollRecord {
+                    id,
+                    kind,
+                    dtype,
+                    op,
+                    root,
+                    input,
+                    blocks,
+                }
+            })
+            .collect();
+        let last_coll_id = r.u64();
+        let pruned_to = r.u64();
+        Self {
+            next_id,
+            sends,
+            received,
+            skip,
+            colls,
+            last_coll_id,
+            pruned_to,
+        }
+    }
+}
+
+fn coll_kind_code(k: CollKind) -> u64 {
+    match k {
+        CollKind::Barrier => 0,
+        CollKind::Bcast => 1,
+        CollKind::Reduce => 2,
+        CollKind::Allreduce => 3,
+        CollKind::Allgather => 4,
+        CollKind::Alltoall => 5,
+        CollKind::Alltoallv => 6,
+        CollKind::Gather => 7,
+        CollKind::Scatter => 8,
+    }
+}
+
+fn coll_kind_from(c: u64) -> CollKind {
+    match c {
+        0 => CollKind::Barrier,
+        1 => CollKind::Bcast,
+        2 => CollKind::Reduce,
+        3 => CollKind::Allreduce,
+        4 => CollKind::Allgather,
+        5 => CollKind::Alltoall,
+        6 => CollKind::Alltoallv,
+        7 => CollKind::Gather,
+        8 => CollKind::Scatter,
+        k => panic!("bad CollKind code {k}"),
+    }
+}
+
+fn dtype_code(d: DType) -> u64 {
+    match d {
+        DType::F64 => 0,
+        DType::F32 => 1,
+        DType::I64 => 2,
+        DType::U64 => 3,
+    }
+}
+
+fn dtype_from(c: u64) -> DType {
+    match c {
+        0 => DType::F64,
+        1 => DType::F32,
+        2 => DType::I64,
+        3 => DType::U64,
+        k => panic!("bad DType code {k}"),
+    }
+}
+
+fn op_code(o: ReduceOp) -> u64 {
+    match o {
+        ReduceOp::Sum => 0,
+        ReduceOp::Min => 1,
+        ReduceOp::Max => 2,
+        ReduceOp::Prod => 3,
+    }
+}
+
+fn op_from(c: u64) -> ReduceOp {
+    match c {
+        0 => ReduceOp::Sum,
+        1 => ReduceOp::Min,
+        2 => ReduceOp::Max,
+        3 => ReduceOp::Prod,
+        k => panic!("bad ReduceOp code {k}"),
     }
 }
 
@@ -333,6 +556,34 @@ mod tests {
         assert_eq!(replay.len(), 2);
         assert_eq!(replay[0].id, 3);
         assert_eq!(replay[1].id, 4);
+    }
+
+    #[test]
+    fn serialization_roundtrips_whole_log() {
+        let mut log = MessageLog::new();
+        log.log_send(1, 7, Arc::new(vec![1, 2, 3]));
+        log.log_send(1, 7, Arc::new(vec![4]));
+        log.log_send(3, -5, Arc::new(vec![]));
+        log.log_receive(0, 1);
+        log.log_receive(2, 9);
+        log.mark_skip(1, Channel::Rep, 12);
+        for i in 1..=3u64 {
+            log.log_collective(CollRecord {
+                id: i,
+                kind: CollKind::Alltoallv,
+                dtype: DType::F32,
+                op: ReduceOp::Max,
+                root: 1,
+                input: Arc::new(vec![i as u8]),
+                blocks: Arc::new(vec![vec![1], vec![2, 2]]),
+            });
+        }
+        log.prune(1, &Default::default());
+        let back = MessageLog::from_bytes(&log.to_bytes());
+        assert_eq!(back, log);
+        assert_eq!(back.pruned_to(), 1);
+        assert_eq!(back.last_coll_id(), 3);
+        assert_eq!(back.sent_up_to(1), 2);
     }
 
     #[test]

@@ -25,25 +25,62 @@ pub mod replicate;
 #[cfg(test)]
 mod tests;
 
-pub use comms::{Layout, Role, WorldComms};
+pub use comms::{Layout, RepairOutcome, Role, WorldComms};
 pub use gcoll::{Guard, OpError};
 pub use log::{Channel, CollKind, CollRecord, MessageLog};
 
 use std::cell::RefCell;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::empi::{DType, Recvd, ReduceOp, Src, Tag};
 use crate::error::{CommError, RankKilled};
+use crate::fabric::{Envelope, MatchSpec};
 use crate::metrics::{Counters, Phase};
 use crate::ompi::UlfmComm;
+use crate::procimg::{ProcessImage, Replicable};
 use crate::procmgr::RankCtx;
+use crate::restore::{self, OwnerPushState, PushMsg, RestoreStore};
 use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Park interval for a spare's standby loop.
+const STANDBY_TICK: Duration = Duration::from_micros(500);
 
 /// Mutable world state, rebuilt by the error handler.
 pub struct State {
     pub oworld: UlfmComm,
-    pub comms: WorldComms,
+    /// Authoritative world layout — maintained on every rank, idle spares
+    /// included (they need it to run deterministic repairs).
+    pub layout: Layout,
+    /// My communicator set; `None` while this rank is an idle spare.
+    pub comms: Option<WorldComms>,
     pub generation: u64,
+    /// Cold restores `(comp rank, spare fabric)` whose recovery epoch has
+    /// not completed — survivors keep re-offering shards across handler
+    /// re-entries until the epoch's recovery finishes.
+    pub cold_pending: Vec<(usize, usize)>,
+}
+
+impl State {
+    pub fn is_member(&self) -> bool {
+        self.comms.is_some()
+    }
+
+    /// My communicator set. Panics on an idle spare — spares never run
+    /// application code, so every caller is a world member by construction.
+    pub fn comms(&self) -> &WorldComms {
+        self.comms.as_ref().expect("idle spare has no world communicators")
+    }
+}
+
+/// How application code begins on this rank (see [`PartReper::start`]).
+pub enum Start<T> {
+    /// A computational or replica rank: run from the beginning.
+    Fresh,
+    /// A spare adopted by a cold restore: resume from the rebuilt state.
+    Restored(T),
+    /// A spare the job never needed: exit cleanly.
+    Retired,
 }
 
 /// Per-rank PartRePer library instance.
@@ -51,6 +88,12 @@ pub struct PartReper {
     pub ctx: RankCtx,
     state: RefCell<State>,
     log: RefCell<MessageLog>,
+    /// Shards this rank holds for its peers.
+    store: RefCell<RestoreStore>,
+    /// Incremental-push baseline for my own image.
+    owner_push: RefCell<OwnerPushState>,
+    /// Image installed by a cold restore, awaiting [`PartReper::start`].
+    pending_image: RefCell<Option<ProcessImage>>,
 }
 
 /// Result of a collective, in relay-serializable form.
@@ -150,7 +193,10 @@ impl PartReper {
         ctx.prte.adopt(ctx.rank);
 
         // EMPI_Init equivalent: communicators from the static layout.
-        let layout = Layout::initial(ctx.cfg.ncomp, ctx.cfg.nrep());
+        // Spares sit outside the eworld but inside the ULFM oworld, so
+        // every repair consensus includes them from day one.
+        let layout =
+            Layout::initial_with_spares(ctx.cfg.ncomp, ctx.cfg.nrep(), ctx.cfg.nspares);
         let oworld = UlfmComm::world(
             ctx.ompi_fabric.clone(),
             ctx.detector.clone(),
@@ -159,19 +205,28 @@ impl PartReper {
             ctx.rank,
         );
         let base = WorldComms::base_ctx_from_oworld(&oworld, 0);
-        let comms = WorldComms::build(&ctx.empi_fabric, layout, ctx.rank, base, 0);
+        let is_member = layout.assign.contains(&ctx.rank);
+        let comms = is_member
+            .then(|| WorldComms::build(&ctx.empi_fabric, layout.clone(), ctx.rank, base, 0));
 
         let pr = Self {
             ctx,
             state: RefCell::new(State {
                 oworld,
+                layout,
                 comms,
                 generation: 0,
+                cold_pending: Vec::new(),
             }),
             log: RefCell::new(MessageLog::new()),
+            store: RefCell::new(RestoreStore::new()),
+            owner_push: RefCell::new(OwnerPushState::new()),
+            pending_image: RefCell::new(None),
         };
         // "Finally, all the processes synchronize with a barrier."
-        pr.guarded(|st, g, _log| g.barrier(&st.comms.eworld));
+        if is_member {
+            pr.guarded(|st, g, _log| g.barrier(&st.comms().eworld));
+        }
         pr
     }
 
@@ -180,16 +235,21 @@ impl PartReper {
     /// Application-visible rank (computational rank; a replica reports the
     /// rank of the computational process it mirrors).
     pub fn rank(&self) -> usize {
-        self.state.borrow().comms.app_rank()
+        self.state.borrow().comms().app_rank()
     }
 
     /// Application world size (number of computational processes).
     pub fn size(&self) -> usize {
-        self.state.borrow().comms.layout.ncomp
+        self.state.borrow().layout.ncomp
     }
 
     pub fn role(&self) -> Role {
-        self.state.borrow().comms.role()
+        self.state.borrow().comms().role()
+    }
+
+    /// Is this rank currently an idle spare (not part of the eworld)?
+    pub fn is_spare(&self) -> bool {
+        !self.state.borrow().is_member()
     }
 
     /// Current repair generation (0 = no failures handled yet).
@@ -205,6 +265,173 @@ impl PartReper {
     /// collectives logged).
     pub fn log_stats(&self) -> (usize, usize, usize) {
         self.log.borrow().stats()
+    }
+
+    // ------------------------------------------------- restore: app surface
+
+    /// How application code begins on this rank. Members return
+    /// immediately with [`Start::Fresh`]. A spare parks here — standing by
+    /// in the ULFM oworld, converging into the error handler on every
+    /// failure — until a repair adopts it into a computational slot
+    /// ([`Start::Restored`], with the state rebuilt from the peer-held
+    /// image store) or every world member finalizes ([`Start::Retired`]).
+    pub fn start<T: Replicable>(&self) -> Start<T> {
+        if self.state.borrow().is_member() {
+            return Start::Fresh;
+        }
+        let me = self.ctx.rank;
+        loop {
+            if let Some(dead_rank) = self.ctx.abort.get() {
+                std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
+            }
+            if self.ctx.procs.check_poison(me).is_err() {
+                std::panic::panic_any(RankKilled { rank: me });
+            }
+            let handler_needed = {
+                let st = self.state.borrow();
+                if st.is_member() {
+                    break; // adopted
+                }
+                // Graceful completion: every member finalized — or died in
+                // the tiny window after its last barrier (if any member
+                // finalized, the app completed globally; a mid-run death
+                // would have blocked the others' finalize barrier).
+                let all_done = st.layout.assign.iter().all(|&f| {
+                    self.ctx.procs.is_finalized(f) || self.ctx.procs.is_dead(f)
+                });
+                let any_finalized = st
+                    .layout
+                    .assign
+                    .iter()
+                    .any(|&f| self.ctx.procs.is_finalized(f));
+                if all_done && any_finalized {
+                    self.ctx.procs.set_finalized(me);
+                    self.ctx.empi_fabric.wake_all();
+                    self.ctx.ompi_fabric.wake_all();
+                    return Start::Retired;
+                }
+                st.oworld.check().is_err()
+            };
+            if handler_needed {
+                self.error_handler();
+                continue;
+            }
+            // Park on the OMPI fabric's arrival clock: revokes and kills
+            // ring it via wake_all, so convergence into the handler is
+            // prompt without busy-waiting.
+            let clock = self.ctx.ompi_fabric.arrivals(me);
+            self.ctx.ompi_fabric.wait_new_mail(me, clock, STANDBY_TICK);
+        }
+        let img = self
+            .pending_image
+            .borrow_mut()
+            .take()
+            .expect("adopted spare must hold a rebuilt image");
+        Counters::bump(&self.ctx.counters.cold_restores);
+        Start::Restored(T::restore(&img))
+    }
+
+    /// Refresh this rank's entry in the peer-held image store: snapshot
+    /// state + message log, shard it, and push changed shards to the
+    /// holders chosen by [`restore::placement`]. Pushes are asynchronous
+    /// (holders ingest them lazily) and incremental (unchanged shards
+    /// travel as generation markers). Replicas and spares are no-ops —
+    /// only computational ranks own a store entry.
+    ///
+    /// The store generation combines the world repair generation with the
+    /// capture's resume step: snapshot bytes are never stable across
+    /// captures (heap ASLR), so a successor incarnation — promoted replica
+    /// or restored spare re-walking its timeline — must land in a fresh
+    /// generation band rather than collide with the dead incarnation's
+    /// pushes (holders keep the first copy of any generation they see).
+    pub fn store_refresh<T: Replicable>(&self, state: &T) {
+        // Everyone ingests pending pushes here so holder-side state (and
+        // the fabric mailbox) stays bounded by the refresh cadence.
+        self.drain_restore_mailbox(false);
+        let st = self.state.borrow();
+        if !st.is_member() || st.comms().role() != Role::Comp {
+            return;
+        }
+        let _phase = self.ctx.clock.scoped(Phase::Restore);
+        let me = self.ctx.rank;
+        let me_app = st.comms().app_rank();
+        let cfg = &self.ctx.cfg.restore;
+        let image = state.capture();
+        let gen = (st.generation << 40) | (image.stack.resume_step + 1).min((1 << 40) - 1);
+        let bytes = restore::encode_snapshot(&image, &self.log.borrow());
+        let shards = restore::split_shards(&bytes, cfg.shards);
+        let placement = restore::placement::holders(&st.layout, me_app, cfg.shards, cfg.redundancy);
+        let Some(changed) = self.owner_push.borrow_mut().plan(gen, &shards, &placement) else {
+            return; // this generation was already pushed
+        };
+
+        // One envelope per holder: all its shards for this generation
+        // (per-holder atomicity underpins the two-generation protocol).
+        let mut per_holder: std::collections::HashMap<usize, Vec<(usize, Option<Vec<u8>>)>> =
+            std::collections::HashMap::new();
+        for (idx, holders) in placement.iter().enumerate() {
+            for &h in holders {
+                per_holder.entry(h).or_default().push((
+                    idx,
+                    changed[idx].then(|| shards[idx].clone()),
+                ));
+            }
+        }
+        let mut pushed_bytes = 0u64;
+        for (holder, hs) in per_holder {
+            pushed_bytes += hs
+                .iter()
+                .filter_map(|(_, d)| d.as_ref().map(|d| d.len() as u64))
+                .sum::<u64>();
+            let msg = PushMsg {
+                owner: me_app,
+                gen,
+                nshards: cfg.shards,
+                shards: hs,
+            };
+            let env = Envelope::new(
+                me,
+                holder,
+                self.ctx.restore_ctx,
+                restore::TAG_PUSH,
+                0,
+                msg.encode(),
+            );
+            match self.ctx.empi_fabric.send(env) {
+                Ok(()) => {}
+                Err(CommError::Killed { rank }) => std::panic::panic_any(RankKilled { rank }),
+                // A holder that died mid-epoch is repaired by the next
+                // handler pass; its copies are what redundancy is for.
+                Err(_) => {}
+            }
+        }
+        Counters::bump(&self.ctx.counters.restore_refreshes);
+        Counters::add(&self.ctx.counters.restore_shard_bytes, pushed_bytes);
+    }
+
+    /// Ingest queued shard pushes addressed to this rank (and, unless this
+    /// rank is a spare awaiting its image, discard stale cold-restore
+    /// offers left over from interrupted recovery epochs).
+    pub(crate) fn drain_restore_mailbox(&self, keep_offers: bool) {
+        let me = self.ctx.rank;
+        let fabric = &self.ctx.empi_fabric;
+        let push_spec = MatchSpec::any_source(self.ctx.restore_ctx, restore::TAG_PUSH);
+        while let Ok(Some(env)) = fabric.try_recv(me, &push_spec) {
+            let msg = PushMsg::decode(&env.data);
+            let mut store = self.store.borrow_mut();
+            for (idx, data) in msg.shards {
+                store.ingest(msg.owner, idx, msg.gen, msg.nshards, data);
+            }
+        }
+        if !keep_offers {
+            let offer_spec = MatchSpec::any_source(self.ctx.restore_ctx, restore::TAG_OFFER);
+            while let Ok(Some(_)) = fabric.try_recv(me, &offer_spec) {}
+        }
+    }
+
+    /// Shards currently held for peers, in bytes (memory accounting).
+    pub fn store_held_bytes(&self) -> usize {
+        self.store.borrow().held_bytes()
     }
 
     // ------------------------------------------------------------ guarded
@@ -251,9 +478,9 @@ impl PartReper {
         let payload = Arc::new(data.to_vec());
         let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
         self.guarded(|st, g, log| {
-            let l = &st.comms.layout;
-            let me_app = st.comms.app_rank();
-            match st.comms.role() {
+            let l = &st.comms().layout;
+            let me_app = st.comms().app_rank();
+            match st.comms().role() {
                 Role::Comp => {
                     // comp -> comp(dst), always.
                     Self::transmit(st, g, log, dst, Channel::Comp, tag, id, &payload)?;
@@ -290,12 +517,12 @@ impl PartReper {
             return Ok(());
         }
         let epos = st
-            .comms
+            .comms()
             .layout
             .epos(dst_app, channel)
             .expect("routing picked a nonexistent incarnation");
         g.check()?;
-        st.comms.eworld.send_shared(epos, tag, id, payload.clone())?;
+        st.comms().eworld.send_shared(epos, tag, id, payload.clone())?;
         Counters::bump(&g.counters.sends_logged);
         Ok(())
     }
@@ -306,9 +533,9 @@ impl PartReper {
     pub fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
         assert!(src < self.size(), "recv: bad source {src}");
         self.guarded(|st, g, log| {
-            let l = &st.comms.layout;
+            let l = &st.comms().layout;
             // Which incarnation sends to me in the current world?
-            let from_pos = match st.comms.role() {
+            let from_pos = match st.comms().role() {
                 Role::Comp => l.epos(src, Channel::Comp).unwrap(),
                 Role::Rep => {
                     if l.has_rep(src) {
@@ -320,7 +547,7 @@ impl PartReper {
                 }
             };
             loop {
-                let m: Recvd = g.recv(&st.comms.eworld, Src::Rank(from_pos), Tag::Tag(tag))?;
+                let m: Recvd = g.recv(&st.comms().eworld, Src::Rank(from_pos), Tag::Tag(tag))?;
                 // Duplicate guard (resend raced an in-flight copy).
                 if m.send_id != 0 && log.received_from(src).contains(&m.send_id) {
                     continue;
@@ -378,14 +605,14 @@ impl PartReper {
         exec: &impl Fn(&Guard, &WorldComms) -> Result<CollResult, OpError>,
     ) -> Result<CollResult, OpError> {
         let relay_tag = cid as i64;
-        match st.comms.role() {
+        let comms = st.comms();
+        match comms.role() {
             Role::Comp => {
-                let res = exec(g, &st.comms)?;
+                let res = exec(g, comms)?;
                 // Relay to my replica, if I have one.
-                let me_app = st.comms.app_rank();
-                if let Some(slot) = st.comms.layout.rep_slot_of(me_app) {
-                    let inter = st
-                        .comms
+                let me_app = comms.app_rank();
+                if let Some(slot) = comms.layout.rep_slot_of(me_app) {
+                    let inter = comms
                         .cmp_rep_inter
                         .as_ref()
                         .expect("rep exists => intercomm exists");
@@ -395,9 +622,8 @@ impl PartReper {
                 Ok(res)
             }
             Role::Rep => {
-                let me_app = st.comms.app_rank();
-                let inter = st
-                    .comms
+                let me_app = comms.app_rank();
+                let inter = comms
                     .cmp_rep_inter
                     .as_ref()
                     .expect("I am a rep => intercomm exists");

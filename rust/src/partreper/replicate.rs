@@ -29,12 +29,12 @@ impl PartReper {
         let my_image = state.capture();
 
         let stats = self.guarded(|st, g, _log| {
-            let me_app = st.comms.app_rank();
-            match st.comms.role() {
+            let me_app = st.comms().app_rank();
+            match st.comms().role() {
                 Role::Comp => {
-                    if let Some(slot) = st.comms.layout.rep_slot_of(me_app) {
+                    if let Some(slot) = st.comms().layout.rep_slot_of(me_app) {
                         let inter =
-                            st.comms.cmp_rep_inter.as_ref().expect("rep => intercomm");
+                            st.comms().cmp_rep_inter.as_ref().expect("rep => intercomm");
                         // 1. basic information block (§III-A).
                         let info = my_image.basic_info();
                         let mut w = ByteWriter::new();
@@ -55,7 +55,7 @@ impl PartReper {
                     Ok(None)
                 }
                 Role::Rep => {
-                    let inter = st.comms.cmp_rep_inter.as_ref().expect("rep => intercomm");
+                    let inter = st.comms().cmp_rep_inter.as_ref().expect("rep => intercomm");
                     // 1. basic info — lets the replica pre-plan (we verify
                     // it against the image for protocol integrity).
                     let info_raw = g.recv_inter(inter, me_app, TAG_BASIC_INFO)?;

@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use crate::config::JobConfig;
 use crate::empi::{DType, ReduceOp};
-use crate::procmgr::{launch_job, RankOutcome};
+use crate::procmgr::{launch_job, JobHandles, RankOutcome};
+use crate::restore::demo::{self, expected_ring};
 use crate::util::{u64s_from_bytes, u64s_to_bytes};
 
 use super::replicate::BlobState;
@@ -419,6 +420,144 @@ fn log_stats_mirror_between_comp_and_rep() {
     assert_eq!(stats[1], stats[3]);
     // 3 sends, 3 receives, 3 collectives each.
     assert_eq!(stats[0], (3, 3, 3));
+}
+
+/// Restore-aware variant of the ring app: state lives in a `RingState`
+/// ([`crate::procimg::Replicable`]), the image store refreshes every
+/// `refresh_every` steps, and `kills` poisons `(fabric rank, step)` pairs —
+/// keyed by fabric rank, so a cold-restored spare re-executing the victim's
+/// timeline is not re-killed.
+fn run_restorable(
+    cfg: &JobConfig,
+    iters: u64,
+    refresh_every: u64,
+    kills: Vec<(usize, u64)>,
+) -> JobHandles<Option<u64>> {
+    launch_job(cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let out = demo::restorable_ring_with(&pr, iters, refresh_every, |step| {
+            if kills.iter().any(|&(r, at)| r == rank && at == step) {
+                procs.poison(rank);
+            }
+        });
+        Ok(out)
+    })
+}
+
+#[test]
+fn spares_retire_cleanly_when_unused() {
+    let mut cfg = JobConfig::new(3, 0.0);
+    cfg.nspares = 2;
+    let report = run_restorable(&cfg, 5, 2, vec![]);
+    let want = expected_ring(3, 5);
+    assert_eq!(report.outcomes.len(), 5);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (0..=2, RankOutcome::Done(Some(v))) => assert_eq!(*v, want),
+            (3..=4, RankOutcome::Done(None)) => {} // retired spares
+            other => panic!("{other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    assert_eq!(crate::metrics::Counters::get(&totals.cold_restores), 0);
+    assert!(crate::metrics::Counters::get(&totals.restore_refreshes) > 0);
+}
+
+#[test]
+fn cold_restore_survives_unreplicated_comp_death() {
+    // Zero replication: under the old repair rule, ANY comp death aborts
+    // the job. With a spare and a healthy store, the run must complete
+    // with the failure-free answer.
+    let mut cfg = JobConfig::new(4, 0.0);
+    cfg.nspares = 1;
+    cfg.restore.shards = 3;
+    cfg.restore.redundancy = 2;
+    let iters = 12;
+    let report = run_restorable(&cfg, iters, 2, vec![(3, 7)]);
+    let want = expected_ring(4, iters);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (3, RankOutcome::Killed) => {}
+            (3, other) => panic!("victim: {other:?}"),
+            (4, RankOutcome::Done(Some(v))) => assert_eq!(*v, want, "restored spare"),
+            (4, other) => panic!("spare must be adopted and finish: {other:?}"),
+            (_, RankOutcome::Done(Some(v))) => assert_eq!(*v, want, "rank {r}"),
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    assert_eq!(crate::metrics::Counters::get(&totals.cold_restores), 1);
+    assert!(
+        crate::metrics::Counters::get(&totals.restore_shards_rebuilt) >= 3,
+        "spare must rebuild from shards"
+    );
+    assert_eq!(crate::metrics::Counters::get(&totals.promotions), 0);
+}
+
+#[test]
+fn failure_storm_replicated_and_unreplicated_same_epoch() {
+    // 25% replication: comp 0 has a replica (fabric 4), comps 1-3 do not.
+    // Kill replicated comp 0 AND unreplicated comp 2 at the same step:
+    // promotion and cold restore must compose in one recovery storm and
+    // the answers must match the failure-free run.
+    let mut cfg = JobConfig::new(4, 25.0);
+    cfg.nspares = 1; // spare at fabric 5
+    cfg.restore.shards = 2;
+    cfg.restore.redundancy = 2;
+    let iters = 12;
+    let report = run_restorable(&cfg, iters, 2, vec![(0, 5), (2, 5)]);
+    let want = expected_ring(4, iters);
+    let mut done = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (0, RankOutcome::Killed) | (2, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done(Some(v))) => {
+                assert_eq!(*v, want, "rank {r}");
+                done += 1;
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    assert_eq!(done, 4, "two comps, the promoted replica, the restored spare");
+    let totals = report.total_counters();
+    assert_eq!(crate::metrics::Counters::get(&totals.promotions), 1);
+    assert_eq!(crate::metrics::Counters::get(&totals.cold_restores), 1);
+}
+
+#[test]
+fn job_abort_when_shard_redundancy_exhausted() {
+    // redundancy=1: each shard lives on exactly one holder. Killing two
+    // comps in the same epoch makes each the holder of one of the other's
+    // shards, so both cold restores find an incomplete store and the job
+    // must still abort — spares alone are not enough.
+    let mut cfg = JobConfig::new(4, 0.0);
+    cfg.nspares = 2;
+    cfg.restore.shards = 3;
+    cfg.restore.redundancy = 1;
+    let report = run_restorable(&cfg, 12, 2, vec![(1, 4), (3, 4)]);
+    let mut interrupted = 0;
+    let mut trigger = None;
+    for o in report.outcomes.iter() {
+        match o {
+            RankOutcome::Killed => {}
+            RankOutcome::Interrupted { dead_rank } => {
+                let t = trigger.get_or_insert(*dead_rank);
+                assert_eq!(t, dead_rank, "all ranks report the latched trigger");
+                assert!(*dead_rank == 1 || *dead_rank == 3);
+                interrupted += 1;
+            }
+            RankOutcome::Done(_) => panic!("job must not complete"),
+            RankOutcome::Error(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(interrupted >= 4, "survivors + spares must all interrupt");
+    // If the two deaths land in *sequential* epochs, the first cold
+    // restore can succeed before the second exhausts redundancy — but the
+    // job must abort either way, and at most one restore ever completes.
+    let totals = report.total_counters();
+    assert!(crate::metrics::Counters::get(&totals.cold_restores) <= 1);
 }
 
 #[test]

@@ -61,6 +61,10 @@ pub struct RankCtx {
     /// Pre-agreed world context ids (allocated before spawn).
     pub empi_world_ctx: u64,
     pub ompi_world_ctx: u64,
+    /// Dedicated EMPI context for image-store traffic (shard pushes and
+    /// cold-restore offers). Constant across repairs: the store outlives
+    /// every world generation.
+    pub restore_ctx: u64,
     pub clock: Arc<PhaseClock>,
     pub counters: Arc<Counters>,
     pub abort: Arc<JobAbort>,
@@ -137,6 +141,7 @@ pub struct JobWorld {
     pub empi_server: Arc<EmpiServer>,
     pub empi_world_ctx: u64,
     pub ompi_world_ctx: u64,
+    pub restore_ctx: u64,
     pub abort: Arc<JobAbort>,
 }
 
@@ -156,6 +161,7 @@ impl JobWorld {
         let empi_server = EmpiServer::new(cluster, true);
         let empi_world_ctx = empi_fabric.alloc_ctx();
         let ompi_world_ctx = ompi_fabric.alloc_ctx();
+        let restore_ctx = empi_fabric.alloc_ctx();
         Self {
             cfg,
             procs,
@@ -167,6 +173,7 @@ impl JobWorld {
             empi_server,
             empi_world_ctx,
             ompi_world_ctx,
+            restore_ctx,
             abort: Arc::new(JobAbort::default()),
         }
     }
@@ -183,6 +190,7 @@ impl JobWorld {
             prte: self.prte.clone(),
             empi_world_ctx: self.empi_world_ctx,
             ompi_world_ctx: self.ompi_world_ctx,
+            restore_ctx: self.restore_ctx,
             clock: Arc::new(PhaseClock::new()),
             counters: Arc::new(Counters::default()),
             abort: self.abort.clone(),

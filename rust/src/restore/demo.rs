@@ -1,0 +1,129 @@
+//! A restore-aware demo workload: the ring+allreduce mini-app the
+//! integration tests use, written against the [`crate::partreper::Start`]
+//! protocol so a cold-restored spare resumes it mid-run.
+//!
+//! The app's whole state lives in a [`ProcessImage`] via [`Replicable`],
+//! and every `refresh_every` steps it refreshes the peer-held image store.
+//! Its final value has a closed form (identical on every rank), so tests
+//! and benches can assert bit-exact answers across failure schedules.
+
+use crate::empi::{DType, ReduceOp};
+use crate::partreper::{PartReper, Start};
+use crate::procimg::{ProcessImage, Replicable};
+use crate::util::{u64s_from_bytes, u64s_to_bytes};
+
+/// Ring/allreduce accumulator state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RingState {
+    pub step: u64,
+    pub acc: u64,
+    pub iters: u64,
+}
+
+impl RingState {
+    pub fn new(iters: u64) -> Self {
+        Self {
+            step: 0,
+            acc: 0,
+            iters,
+        }
+    }
+}
+
+impl Replicable for RingState {
+    fn capture(&self) -> ProcessImage {
+        let mut img = ProcessImage::new();
+        img.data.define("acc", &self.acc.to_le_bytes());
+        img.data.define("iters", &self.iters.to_le_bytes());
+        // The capture point drives the store generation: refreshes at
+        // later steps supersede earlier ones.
+        img.stack.setjmp(self.step, 0);
+        img
+    }
+
+    fn restore(img: &ProcessImage) -> Self {
+        let (step, _phase) = img.stack.longjmp();
+        Self {
+            step,
+            acc: img.data.read_u64("acc"),
+            iters: img.data.read_u64("iters"),
+        }
+    }
+}
+
+/// Run the workload to completion. Returns `None` on a spare that was
+/// never needed (it retires when the world finishes), `Some(acc)` on every
+/// other rank — including a spare adopted mid-run, which resumes from its
+/// restored step.
+pub fn restorable_ring(pr: &PartReper, iters: u64, refresh_every: u64) -> Option<u64> {
+    restorable_ring_with(pr, iters, refresh_every, |_| {})
+}
+
+/// [`restorable_ring`] with a per-step hook, called at the top of every
+/// iteration with the step about to run — the tests, benches and example
+/// use it to poison a victim at a chosen step while sharing this one loop
+/// (and therefore [`expected_ring`]'s closed form).
+pub fn restorable_ring_with(
+    pr: &PartReper,
+    iters: u64,
+    refresh_every: u64,
+    mut on_step: impl FnMut(u64),
+) -> Option<u64> {
+    let mut state = match pr.start::<RingState>() {
+        Start::Retired => return None,
+        Start::Fresh => RingState::new(iters),
+        Start::Restored(s) => s,
+    };
+    let n = pr.size() as u64;
+    while state.step < state.iters {
+        on_step(state.step);
+        let it = state.step;
+        let me = pr.rank() as u64; // re-read: promotion can relabel me
+        let next = ((me + 1) % n) as usize;
+        let prev = ((me + n - 1) % n) as usize;
+        pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+        let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+        let sum = u64s_from_bytes(&pr.allreduce(
+            DType::U64,
+            ReduceOp::Sum,
+            &u64s_to_bytes(&[got]),
+        ))[0];
+        state.acc = state.acc.wrapping_add(sum);
+        state.step += 1;
+        if refresh_every > 0 && state.step % refresh_every == 0 {
+            pr.store_refresh(&state);
+        }
+    }
+    pr.finalize();
+    Some(state.acc)
+}
+
+/// Closed form of [`restorable_ring`]'s result for `n` ranks.
+pub fn expected_ring(n: u64, iters: u64) -> u64 {
+    let rank_sum = n * (n - 1) / 2;
+    (0..iters).fold(0u64, |acc, it| acc.wrapping_add(rank_sum * 1000 + n * it))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_state_roundtrips_through_image() {
+        let s = RingState {
+            step: 12,
+            acc: 0xDEAD_BEEF,
+            iters: 40,
+        };
+        let img = s.capture();
+        assert_eq!(img.stack.longjmp(), (12, 0));
+        assert_eq!(RingState::restore(&img), s);
+    }
+
+    #[test]
+    fn expected_matches_manual_sum() {
+        // n=4: rank_sum=6 -> per iter 6000 + 4*it
+        assert_eq!(expected_ring(4, 1), 6000);
+        assert_eq!(expected_ring(4, 3), 6000 * 3 + 4 * (0 + 1 + 2));
+    }
+}

@@ -1,0 +1,38 @@
+//! **restore/** — the in-memory replicated image store for cold-rank
+//! recovery.
+//!
+//! PartRePer's partial replication (§III-A, §VII-B) leaves unreplicated
+//! computational ranks unprotected: their death used to latch a job-wide
+//! `JobAbort`. Following ReStore (Hübner et al.) and the GASPI
+//! neighbor-checkpointing work (Shahzad et al.), every computational rank
+//! now periodically snapshots its restorable state — process image plus
+//! message log — splits it into shards, and pushes the shards to peer
+//! ranks over the tuned EMPI fabric, asynchronously and incrementally.
+//! When an unreplicated rank dies, the error handler adopts a spare
+//! process from the layout's pool, survivors offer it the peer-held
+//! shards, and the spare reassembles the image and rejoins the world as
+//! that rank; §VI-B message recovery then replays it forward from its
+//! store generation. `JobAbort` remains only for genuinely exhausted
+//! redundancy (shard holders dead, or no spare left).
+//!
+//! Layer map:
+//! * [`placement`] — deterministic cyclic shard placement avoiding the
+//!   owner and the owner's replica;
+//! * [`store`] — holder-side retention (two generations per shard, so a
+//!   refresh racing a failure never yields a torn image) and owner-side
+//!   incremental push planning;
+//! * [`protocol`] — fabric wire formats (push/offer) and the
+//!   image+log [`protocol::Snapshot`];
+//! * [`demo`] — a restore-aware ring workload for tests, benches and the
+//!   `cold_restore` example.
+//!
+//! The world-repair half (spare adoption, the handler's cold-restore
+//! phase, forward replay) lives in [`crate::partreper`].
+
+pub mod demo;
+pub mod placement;
+pub mod protocol;
+pub mod store;
+
+pub use protocol::{encode_snapshot, OfferMsg, PushMsg, Snapshot, TAG_OFFER, TAG_PUSH};
+pub use store::{assemble, split_shards, OwnerPushState, RestoreStore, ShardCopy};

@@ -1,0 +1,116 @@
+//! Deterministic cyclic shard placement.
+//!
+//! Every computational rank's image is split into `nshards` shards, each
+//! stored on `redundancy` distinct peer ranks. Placement must be computable
+//! by any rank from the layout alone (no negotiation) and must never
+//! co-locate a shard with its owner or the owner's replica — those are
+//! exactly the processes whose simultaneous loss the store exists to
+//! survive (ReStore's placement rule, adapted to the §V world layout).
+
+use crate::partreper::Layout;
+
+/// Holder fabric ranks per shard: `holders[i]` lists the `redundancy`
+/// distinct fabric ranks storing shard `i` of `owner`'s image.
+///
+/// Eligible holders are the current eworld members minus the owner's own
+/// fabric rank and the owner's replica (spares are excluded: they may be
+/// adopted later and must start empty). Redundancy is capped at the
+/// eligible count. The walk is cyclic, anchored at the owner's app rank so
+/// different owners' shards spread across different peers.
+pub fn holders(
+    layout: &Layout,
+    owner: usize,
+    nshards: usize,
+    redundancy: usize,
+) -> Vec<Vec<usize>> {
+    assert!(owner < layout.ncomp, "placement is for computational ranks");
+    assert!(nshards > 0 && redundancy > 0);
+    let own = layout.comp_fabric(owner);
+    let rep = layout.rep_fabric_of(owner);
+    let eligible: Vec<usize> = layout
+        .assign
+        .iter()
+        .copied()
+        .filter(|&f| f != own && Some(f) != rep)
+        .collect();
+    if eligible.is_empty() {
+        return vec![Vec::new(); nshards];
+    }
+    let r = redundancy.min(eligible.len());
+    (0..nshards)
+        .map(|shard| {
+            // Shard i starts its cyclic walk at owner+1+i; the r copies are
+            // the next r (distinct) eligible peers round the ring.
+            let base = owner + 1 + shard;
+            (0..r).map(|k| eligible[(base + k) % eligible.len()]).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_avoids_owner_and_replica() {
+        let l = Layout::initial(8, 4); // comps 0-7, reps 8-11 mirror 0-3
+        for owner in 0..8 {
+            let hs = holders(&l, owner, 4, 2);
+            assert_eq!(hs.len(), 4);
+            for set in &hs {
+                assert_eq!(set.len(), 2);
+                for &h in set {
+                    assert_ne!(h, l.comp_fabric(owner), "shard on owner");
+                    assert_ne!(Some(h), l.rep_fabric_of(owner), "shard on replica");
+                    assert!(l.assign.contains(&h), "holder outside eworld");
+                }
+                let mut dedup = set.clone();
+                dedup.dedup();
+                assert_eq!(dedup.len(), set.len(), "duplicate holder in {set:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_cyclic() {
+        let l = Layout::initial(6, 0);
+        let a = holders(&l, 2, 3, 2);
+        let b = holders(&l, 2, 3, 2);
+        assert_eq!(a, b);
+        // Different owners anchor at different peers.
+        assert_ne!(holders(&l, 0, 3, 2)[0], holders(&l, 3, 3, 2)[0]);
+    }
+
+    #[test]
+    fn redundancy_caps_at_eligible_count() {
+        let l = Layout::initial(2, 1); // owner 0: eligible = {1} (rep 2 excluded)
+        let hs = holders(&l, 0, 2, 3);
+        for set in &hs {
+            assert_eq!(set, &vec![1]);
+        }
+        // owner 1 (no replica): eligible = {0, 2}
+        let hs = holders(&l, 1, 2, 3);
+        for set in &hs {
+            assert_eq!(set.len(), 2);
+        }
+    }
+
+    #[test]
+    fn placement_excludes_spares() {
+        let l = Layout::initial_with_spares(4, 0, 2); // spares 4, 5
+        for owner in 0..4 {
+            for set in holders(&l, owner, 3, 2) {
+                for &h in &set {
+                    assert!(h < 4, "spare {h} chosen as holder");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_single_rank_world() {
+        let l = Layout::initial(1, 0);
+        let hs = holders(&l, 0, 2, 2);
+        assert!(hs.iter().all(|s| s.is_empty()), "no peers, no holders");
+    }
+}

@@ -1,0 +1,207 @@
+//! Wire formats for the image store, carried on the tuned EMPI fabric
+//! under the job's dedicated `restore_ctx` context id (so store traffic
+//! never collides with application or recovery tags on any world comm).
+//!
+//! * `TAG_PUSH` — owner → holder, asynchronous: all of one holder's shards
+//!   for one generation in a single envelope (per-holder atomicity is what
+//!   makes the two-generation retention rule sufficient).
+//! * `TAG_OFFER` — survivor → adopted spare, during the error handler's
+//!   cold-restore phase: everything the survivor holds for the dead owner,
+//!   stamped with the repair generation so stale epochs are discardable.
+
+use crate::partreper::MessageLog;
+use crate::procimg::ProcessImage;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+use super::store::ShardCopy;
+
+/// Fabric tag for owner→holder shard pushes (on `restore_ctx`).
+pub const TAG_PUSH: i64 = 1;
+/// Fabric tag for survivor→spare shard offers (on `restore_ctx`).
+pub const TAG_OFFER: i64 = 2;
+
+/// One rank's restorable state: the process image (§III-A segments) plus
+/// the message log, so a cold-restored spare is the dead rank's exact
+/// protocol state at the snapshot point and §VI-B recovery replays it
+/// forward like any other lagging incarnation.
+pub struct Snapshot {
+    pub image: ProcessImage,
+    pub log: MessageLog,
+}
+
+impl Snapshot {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        encode_snapshot(&self.image, &self.log)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Self {
+        let mut r = ByteReader::new(buf);
+        let image = ProcessImage::from_bytes(r.bytes());
+        let log = MessageLog::from_bytes(r.bytes());
+        Self { image, log }
+    }
+}
+
+/// Serialize a snapshot straight from borrows — the owner's refresh path
+/// uses this to avoid deep-cloning the message log just to encode it.
+pub fn encode_snapshot(image: &ProcessImage, log: &MessageLog) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.bytes(&image.to_bytes());
+    w.bytes(&log.to_bytes());
+    w.finish()
+}
+
+/// Owner → holder: this holder's shards for one generation. `data: None`
+/// is the incremental "unchanged" marker.
+pub struct PushMsg {
+    pub owner: usize,
+    pub gen: u64,
+    pub nshards: usize,
+    pub shards: Vec<(usize, Option<Vec<u8>>)>,
+}
+
+impl PushMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.usize(self.owner);
+        w.u64(self.gen);
+        w.usize(self.nshards);
+        w.usize(self.shards.len());
+        for (idx, data) in &self.shards {
+            w.usize(*idx);
+            match data {
+                Some(d) => {
+                    w.u64(1);
+                    w.bytes(d);
+                }
+                None => w.u64(0),
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Self {
+        let mut r = ByteReader::new(buf);
+        let owner = r.usize();
+        let gen = r.u64();
+        let nshards = r.usize();
+        let n = r.usize();
+        let shards = (0..n)
+            .map(|_| {
+                let idx = r.usize();
+                let data = (r.u64() == 1).then(|| r.bytes().to_vec());
+                (idx, data)
+            })
+            .collect();
+        Self {
+            owner,
+            gen,
+            nshards,
+            shards,
+        }
+    }
+}
+
+/// Survivor → spare: everything held for the owner being restored.
+pub struct OfferMsg {
+    pub owner: usize,
+    /// Repair generation of the epoch this offer belongs to.
+    pub epoch: u64,
+    pub entries: Vec<(usize, ShardCopy)>,
+}
+
+impl OfferMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.usize(self.owner);
+        w.u64(self.epoch);
+        w.usize(self.entries.len());
+        for (idx, c) in &self.entries {
+            w.usize(*idx);
+            w.u64(c.gen);
+            w.usize(c.nshards);
+            w.bytes(&c.data);
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Self {
+        let mut r = ByteReader::new(buf);
+        let owner = r.usize();
+        let epoch = r.u64();
+        let n = r.usize();
+        let entries = (0..n)
+            .map(|_| {
+                let idx = r.usize();
+                let gen = r.u64();
+                let nshards = r.usize();
+                let data = r.bytes().to_vec();
+                (idx, ShardCopy { gen, nshards, data })
+            })
+            .collect();
+        Self {
+            owner,
+            epoch,
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let mut image = ProcessImage::new();
+        image.data.define("step", &9u64.to_le_bytes());
+        let a = image.heap.alloc(0x10, 16);
+        image.heap.chunk_mut(a).data[0] = 0xEE;
+        image.stack.setjmp(9, 1);
+        let mut log = MessageLog::new();
+        log.log_send(1, 4, Arc::new(vec![1, 2]));
+        log.log_receive(2, 11);
+        let snap = Snapshot { image, log };
+        let back = Snapshot::from_bytes(&snap.to_bytes());
+        assert_eq!(back.image, snap.image);
+        assert_eq!(back.log, snap.log);
+    }
+
+    #[test]
+    fn push_msg_roundtrip() {
+        let msg = PushMsg {
+            owner: 3,
+            gen: 17,
+            nshards: 4,
+            shards: vec![(0, Some(vec![1, 2, 3])), (2, None)],
+        };
+        let back = PushMsg::decode(&msg.encode());
+        assert_eq!(back.owner, 3);
+        assert_eq!(back.gen, 17);
+        assert_eq!(back.nshards, 4);
+        assert_eq!(back.shards, vec![(0, Some(vec![1, 2, 3])), (2, None)]);
+    }
+
+    #[test]
+    fn offer_msg_roundtrip() {
+        let msg = OfferMsg {
+            owner: 1,
+            epoch: 2,
+            entries: vec![(
+                0,
+                ShardCopy {
+                    gen: 8,
+                    nshards: 2,
+                    data: vec![9; 32],
+                },
+            )],
+        };
+        let back = OfferMsg::decode(&msg.encode());
+        assert_eq!(back.owner, 1);
+        assert_eq!(back.epoch, 2);
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(back.entries[0].1.gen, 8);
+        assert_eq!(back.entries[0].1.data, vec![9; 32]);
+    }
+}

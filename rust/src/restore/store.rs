@@ -1,0 +1,336 @@
+//! The per-rank shard store: holder-side retention with the two-generation
+//! torn-refresh guarantee, and owner-side incremental push planning.
+//!
+//! **Generation protocol.** An owner pushes all shards of generation `g`
+//! before it ever starts `g+1` (refreshes are sequential in app code), and
+//! every holder retains the newest **two** generations per shard. If the
+//! owner dies mid-push of `g`, some holders have `{g, g-1}` and the rest
+//! `{g-1, g-2}` — generation `g-1` is complete everywhere, so reassembly
+//! (which picks the newest generation with a full shard set) can never
+//! observe a torn image.
+
+use std::collections::HashMap;
+
+/// One retained shard copy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardCopy {
+    pub gen: u64,
+    /// Shard count of the snapshot this copy belongs to (assembly sanity).
+    pub nshards: usize,
+    pub data: Vec<u8>,
+}
+
+/// Holder-side store: shards this rank keeps for its peers.
+///
+/// There is deliberately no eviction: after a repair changes placement,
+/// an ex-holder's copies may briefly be the only surviving ones (the new
+/// holders see a full push only at the owner's *next* refresh), and
+/// offers ship everything held so reassembly can use them. The retained
+/// footprint is bounded at two generations per (owner, shard) — worst
+/// case about two full images per rank.
+#[derive(Default)]
+pub struct RestoreStore {
+    /// owner app rank -> shard index -> newest-first copies (at most 2).
+    held: HashMap<usize, HashMap<usize, Vec<ShardCopy>>>,
+}
+
+impl RestoreStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ingest one pushed shard. Generations are accepted strictly
+    /// monotonically per shard — a duplicate or older generation is
+    /// dropped (**first write wins**), so two pushes that share a
+    /// generation (an app refreshing twice at one capture step, or a
+    /// restored owner deterministically re-pushing its timeline) can never
+    /// mix bytes across holders: every holder keeps the first copy it saw,
+    /// and reassembly stays internally consistent. `data: None` is the
+    /// incremental-refresh marker "unchanged since my previous push": the
+    /// newest retained copy is re-stamped as generation `gen`. Markers for
+    /// shards never seen are dropped (the owner's placement changed under
+    /// it; the next full push repairs this).
+    pub fn ingest(
+        &mut self,
+        owner: usize,
+        shard: usize,
+        gen: u64,
+        nshards: usize,
+        data: Option<Vec<u8>>,
+    ) {
+        let copies = self.held.entry(owner).or_default().entry(shard).or_default();
+        if copies.first().map_or(false, |c| c.gen >= gen) {
+            return; // stale or duplicate generation
+        }
+        match data {
+            Some(data) => {
+                copies.insert(0, ShardCopy { gen, nshards, data });
+                copies.truncate(2);
+            }
+            None => {
+                if let Some(newest) = copies.first().cloned() {
+                    copies.insert(
+                        0,
+                        ShardCopy {
+                            gen,
+                            nshards,
+                            data: newest.data,
+                        },
+                    );
+                    copies.truncate(2);
+                }
+            }
+        }
+    }
+
+    /// Everything held for `owner`, flattened for an offer message:
+    /// `(shard index, copy)` pairs, both retained generations.
+    pub fn entries_for(&self, owner: usize) -> Vec<(usize, ShardCopy)> {
+        let mut out = Vec::new();
+        if let Some(shards) = self.held.get(&owner) {
+            let mut idxs: Vec<usize> = shards.keys().copied().collect();
+            idxs.sort_unstable();
+            for i in idxs {
+                for c in &shards[&i] {
+                    out.push((i, c.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total retained payload bytes (memory accounting).
+    pub fn held_bytes(&self) -> usize {
+        self.held
+            .values()
+            .flat_map(|s| s.values())
+            .flat_map(|v| v.iter())
+            .map(|c| c.data.len())
+            .sum()
+    }
+}
+
+/// Split a snapshot into `nshards` near-equal shards (last shard takes the
+/// remainder). Concatenating in index order restores the exact bytes.
+pub fn split_shards(bytes: &[u8], nshards: usize) -> Vec<Vec<u8>> {
+    assert!(nshards > 0);
+    let per = bytes.len().div_ceil(nshards).max(1);
+    (0..nshards)
+        .map(|i| {
+            let lo = (i * per).min(bytes.len());
+            let hi = ((i + 1) * per).min(bytes.len());
+            bytes[lo..hi].to_vec()
+        })
+        .collect()
+}
+
+/// Reassemble the newest complete generation from offered shard copies.
+/// Returns `(generation, snapshot bytes, shards used)`, or `None` when no
+/// generation has a full shard set — redundancy genuinely exhausted.
+pub fn assemble(entries: &[(usize, ShardCopy)]) -> Option<(u64, Vec<u8>, usize)> {
+    // generation -> shard index -> data (first copy wins; copies of the
+    // same (gen, shard) are identical by construction).
+    let mut by_gen: HashMap<u64, HashMap<usize, &ShardCopy>> = HashMap::new();
+    for (idx, copy) in entries {
+        by_gen.entry(copy.gen).or_default().entry(*idx).or_insert(copy);
+    }
+    let mut gens: Vec<u64> = by_gen.keys().copied().collect();
+    gens.sort_unstable_by(|a, b| b.cmp(a));
+    for g in gens {
+        let shards = &by_gen[&g];
+        let nshards = shards.values().next().map(|c| c.nshards)?;
+        if shards.len() == nshards && (0..nshards).all(|i| shards.contains_key(&i)) {
+            let mut bytes = Vec::new();
+            for i in 0..nshards {
+                bytes.extend_from_slice(&shards[&i].data);
+            }
+            return Some((g, bytes, nshards));
+        }
+    }
+    None
+}
+
+/// FNV-1a over a shard, for the owner's changed/unchanged comparison.
+pub fn shard_hash(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Owner-side push planner: remembers the last pushed generation's shard
+/// hashes and placement so unchanged shards travel as markers.
+#[derive(Default)]
+pub struct OwnerPushState {
+    last_gen: u64,
+    last_hashes: Vec<u64>,
+    last_placement: Vec<Vec<usize>>,
+}
+
+impl OwnerPushState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Which shards must carry payload this refresh? Returns one bool per
+    /// shard (`true` = changed, push bytes; `false` = marker suffices) and
+    /// records the new baseline. A placement change forces a full push —
+    /// markers only mean something to holders that have the bytes.
+    ///
+    /// Returns `None` (push nothing) when `gen` does not advance: holders
+    /// drop duplicate generations (first write wins), so pushing again
+    /// would desync this baseline from what holders actually store —
+    /// serialized snapshots are never byte-stable across captures (heap
+    /// ASLR), and a marker against a never-accepted baseline would graft
+    /// old bytes into a new generation.
+    pub fn plan(
+        &mut self,
+        gen: u64,
+        shards: &[Vec<u8>],
+        placement: &[Vec<usize>],
+    ) -> Option<Vec<bool>> {
+        if gen <= self.last_gen {
+            return None;
+        }
+        let hashes: Vec<u64> = shards.iter().map(|s| shard_hash(s)).collect();
+        let full = self.last_hashes.len() != hashes.len() || self.last_placement != placement;
+        let changed: Vec<bool> = hashes
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| full || self.last_hashes[i] != h)
+            .collect();
+        self.last_gen = gen;
+        self.last_hashes = hashes;
+        self.last_placement = placement.to_vec();
+        Some(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn copy(gen: u64, nshards: usize, data: &[u8]) -> ShardCopy {
+        ShardCopy {
+            gen,
+            nshards,
+            data: data.to_vec(),
+        }
+    }
+
+    #[test]
+    fn split_and_assemble_roundtrip() {
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        for nshards in [1usize, 3, 4, 7] {
+            let shards = split_shards(&bytes, nshards);
+            assert_eq!(shards.len(), nshards);
+            let entries: Vec<(usize, ShardCopy)> = shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (i, copy(5, nshards, s)))
+                .collect();
+            let (g, back, used) = assemble(&entries).unwrap();
+            assert_eq!(g, 5);
+            assert_eq!(back, bytes);
+            assert_eq!(used, nshards);
+        }
+    }
+
+    #[test]
+    fn assemble_prefers_newest_complete_generation() {
+        // gen 7 is torn (missing shard 1); gen 6 is complete.
+        let entries = vec![
+            (0, copy(7, 2, b"new0")),
+            (0, copy(6, 2, b"old0")),
+            (1, copy(6, 2, b"old1")),
+        ];
+        let (g, bytes, _) = assemble(&entries).unwrap();
+        assert_eq!(g, 6);
+        assert_eq!(bytes, b"old0old1");
+        // With shard 1 of gen 7 present, gen 7 wins.
+        let mut full = entries.clone();
+        full.push((1, copy(7, 2, b"new1")));
+        let (g, bytes, _) = assemble(&full).unwrap();
+        assert_eq!(g, 7);
+        assert_eq!(bytes, b"new0new1");
+    }
+
+    #[test]
+    fn assemble_none_when_redundancy_exhausted() {
+        let entries = vec![(0, copy(3, 2, b"x"))]; // shard 1 lost everywhere
+        assert!(assemble(&entries).is_none());
+        assert!(assemble(&[]).is_none());
+    }
+
+    #[test]
+    fn holder_retains_two_generations() {
+        let mut st = RestoreStore::new();
+        for g in 1..=4u64 {
+            st.ingest(0, 0, g, 1, Some(vec![g as u8]));
+        }
+        let entries = st.entries_for(0);
+        let gens: Vec<u64> = entries.iter().map(|(_, c)| c.gen).collect();
+        assert_eq!(gens, vec![4, 3], "newest two retained");
+    }
+
+    #[test]
+    fn unchanged_marker_restamps_newest() {
+        let mut st = RestoreStore::new();
+        st.ingest(2, 1, 5, 3, Some(b"payload".to_vec()));
+        st.ingest(2, 1, 6, 3, None); // marker: same bytes, newer gen
+        let entries = st.entries_for(2);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].1.gen, 6);
+        assert_eq!(entries[0].1.data, b"payload");
+        assert_eq!(entries[1].1.gen, 5);
+        // Marker for a shard never seen: dropped, not fabricated.
+        st.ingest(2, 0, 6, 3, None);
+        assert!(st.entries_for(2).iter().all(|(i, _)| *i == 1));
+    }
+
+    #[test]
+    fn duplicate_or_stale_generation_first_write_wins() {
+        // A second push of the same generation must NOT replace in place:
+        // with holders each keeping whichever copy arrived, a mid-push
+        // death could otherwise assemble a torn image out of mixed copies.
+        let mut st = RestoreStore::new();
+        st.ingest(0, 0, 9, 1, Some(b"first".to_vec()));
+        st.ingest(0, 0, 9, 1, Some(b"again".to_vec()));
+        st.ingest(0, 0, 8, 1, Some(b"older".to_vec()));
+        st.ingest(0, 0, 9, 1, None); // marker at held gen: dropped too
+        let entries = st.entries_for(0);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].1.gen, 9);
+        assert_eq!(entries[0].1.data, b"first");
+    }
+
+    #[test]
+    fn owner_plan_marks_only_changed_shards() {
+        let mut o = OwnerPushState::new();
+        let placement = vec![vec![1, 2], vec![2, 3]];
+        let a = vec![b"aaa".to_vec(), b"bbb".to_vec()];
+        assert_eq!(
+            o.plan(1, &a, &placement),
+            Some(vec![true, true]),
+            "first push is full"
+        );
+        let b = vec![b"aaa".to_vec(), b"BBB".to_vec()];
+        assert_eq!(o.plan(2, &b, &placement), Some(vec![false, true]));
+        // placement change forces a full push
+        let moved = vec![vec![1, 3], vec![2, 3]];
+        assert_eq!(o.plan(3, &b, &moved), Some(vec![true, true]));
+        // a non-advancing generation pushes nothing and keeps the baseline
+        assert_eq!(o.plan(3, &a, &moved), None);
+        assert_eq!(o.plan(4, &b, &moved), Some(vec![false, false]));
+    }
+
+    #[test]
+    fn held_bytes_accounting() {
+        let mut st = RestoreStore::new();
+        st.ingest(0, 0, 1, 1, Some(vec![0; 10]));
+        st.ingest(1, 0, 1, 1, Some(vec![0; 5]));
+        assert_eq!(st.held_bytes(), 15);
+    }
+}

@@ -15,7 +15,8 @@ fn prop_repair_preserves_layout_invariants() {
     check("repair invariants", 200, |rng| {
         let ncomp = gen::usize_in(rng, 1, 12);
         let nrep = gen::usize_in(rng, 0, ncomp);
-        let mut layout = Layout::initial(ncomp, nrep);
+        let nspares = gen::usize_in(rng, 0, 3);
+        let mut layout = Layout::initial_with_spares(ncomp, nrep, nspares);
         // Up to 3 failure rounds.
         for _ in 0..gen::usize_in(rng, 1, 3) {
             let world: Vec<usize> = layout.assign.clone();
@@ -24,7 +25,8 @@ fn prop_repair_preserves_layout_invariants() {
                 .map(|i| world[i])
                 .collect();
             match layout.repair(&dead) {
-                Ok((l2, promotions)) => {
+                Ok(out) => {
+                    let (l2, promotions) = (out.layout, out.promotions);
                     // ncomp is invariant; app ranks stay dense.
                     assert_eq!(l2.ncomp, ncomp);
                     assert_eq!(l2.assign.len(), ncomp + l2.nrep());
@@ -46,6 +48,18 @@ fn prop_repair_preserves_layout_invariants() {
                         assert!(c < ncomp);
                         assert_eq!(l2.assign[c], f);
                     }
+                    // cold restores landed on spares from the old pool
+                    for &(c, f) in &out.restores {
+                        assert!(c < ncomp);
+                        assert_eq!(l2.assign[c], f);
+                        assert!(layout.spares.contains(&f));
+                        assert!(!dead.contains(&f));
+                    }
+                    // spare pool: no dead spares kept, none in the world
+                    for &s in &l2.spares {
+                        assert!(!dead.contains(&s));
+                        assert!(!l2.assign.contains(&s));
+                    }
                     // epos/rep maps consistent
                     for c in 0..ncomp {
                         if let Some(e) = l2.epos(c, Channel::Rep) {
@@ -56,11 +70,29 @@ fn prop_repair_preserves_layout_invariants() {
                 }
                 Err(c) => {
                     // Interruption is only legal when comp c and its rep
-                    // (if any) are both dead.
+                    // (if any) are both dead AND the spare pool could not
+                    // cover every unreplicated dead comp.
                     assert!(dead.contains(&layout.assign[c]));
                     if let Some(rf) = layout.rep_fabric_of(c) {
                         assert!(dead.contains(&rf), "interrupted despite live replica");
                     }
+                    let live_spares = layout
+                        .spares
+                        .iter()
+                        .filter(|f| !dead.contains(f))
+                        .count();
+                    let dead_unrep = (0..ncomp)
+                        .filter(|&c| {
+                            dead.contains(&layout.assign[c])
+                                && layout
+                                    .rep_fabric_of(c)
+                                    .map_or(true, |rf| dead.contains(&rf))
+                        })
+                        .count();
+                    assert!(
+                        live_spares < dead_unrep,
+                        "interrupted with {live_spares} live spares for {dead_unrep} losses"
+                    );
                     return; // job over for this case
                 }
             }
