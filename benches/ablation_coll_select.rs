@@ -1,0 +1,251 @@
+//! Ablation — the tuned collective engine: wall time of each algorithm
+//! variant across payload sizes, under a scaled tuned profile with real
+//! injected wire delay. Proves the crossover points the NetModel-derived
+//! decision table encodes: past each documented crossover the
+//! large-message algorithm (ring / chain / pairwise / linear) beats the
+//! small-message one (rdouble / binomial / bruck), and below it the
+//! relation flips. Emits `BENCH_coll_select.json`.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use partreper::empi::{coll, Comm, DType, ReduceOp};
+use partreper::fabric::{
+    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, Fabric, NetModel, ProcSet,
+    RootedAlg,
+};
+use partreper::util::Summary;
+
+/// Scaled-up tuned profile (heavier latency/byte costs than the EMPI
+/// figure profile) with injection on, so algorithm differences dominate
+/// thread-scheduling noise within bench budgets.
+fn bench_model() -> NetModel {
+    NetModel {
+        latency_ns: 20_000,
+        ns_per_byte: 2.0,
+        congestion_procs: usize::MAX,
+        congestion_factor: 1.0,
+        rndv_threshold: 64 * 1024,
+        remote_bw_factor: 1.5,
+        ns_per_byte_copy: 0.05,
+        inject: true,
+    }
+}
+
+fn run_once(
+    n: usize,
+    tuning: CollTuning,
+    op: impl Fn(usize, &Comm) + Send + Sync + 'static,
+) -> Duration {
+    let procs = ProcSet::new(n);
+    let fabric = Fabric::new_tuned("cs", procs, bench_model(), tuning);
+    let ctx = fabric.alloc_ctx();
+    let op = Arc::new(op);
+    let start = Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let op = op.clone();
+            std::thread::spawn(move || {
+                let comm = Comm::world(fabric, ctx, r);
+                op(r, &comm);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    start.elapsed()
+}
+
+struct Case {
+    /// "allreduce", ...
+    family: &'static str,
+    /// (label, tuning) for the small- and large-message algorithm.
+    small: (&'static str, CollTuning),
+    large: (&'static str, CollTuning),
+    /// Payload sizes to sweep (bytes; meaning is family-specific).
+    sizes: Vec<usize>,
+    /// Run one collective of `bytes` on this comm.
+    run: fn(usize, &Comm, usize),
+}
+
+fn force(f: impl FnOnce(&mut CollTuning)) -> CollTuning {
+    let mut t = CollTuning::default();
+    f(&mut t);
+    t
+}
+
+fn run_allreduce(r: usize, comm: &Comm, bytes: usize) {
+    let vals = vec![r as u64; bytes / 8];
+    coll::allreduce(comm, DType::U64, ReduceOp::Sum, &partreper::util::u64s_to_bytes(&vals))
+        .unwrap();
+}
+
+fn run_bcast(r: usize, comm: &Comm, bytes: usize) {
+    let mut data = if r == 0 { vec![7u8; bytes] } else { Vec::new() };
+    coll::bcast(comm, 0, &mut data).unwrap();
+}
+
+fn run_allgather(r: usize, comm: &Comm, bytes: usize) {
+    coll::allgather(comm, &vec![r as u8; bytes]).unwrap();
+}
+
+fn run_alltoall(r: usize, comm: &Comm, bytes: usize) {
+    let n = comm.size();
+    let blocks: Vec<Vec<u8>> = (0..n).map(|_| vec![r as u8; bytes]).collect();
+    coll::alltoall(comm, &blocks).unwrap();
+}
+
+fn run_gather(r: usize, comm: &Comm, bytes: usize) {
+    coll::gather(comm, 0, &vec![r as u8; bytes]).unwrap();
+}
+
+fn run_scatter(r: usize, comm: &Comm, bytes: usize) {
+    let n = comm.size();
+    let blocks: Option<Vec<Vec<u8>>> = (r == 0).then(|| vec![vec![3u8; bytes]; n]);
+    coll::scatter(comm, 0, blocks.as_deref()).unwrap();
+}
+
+/// Smallest swept size at which the cost model selects the large-message
+/// algorithm (the table's encoded crossover, scanned at sweep
+/// granularity).
+fn model_crossover(family: &str, n: usize, sizes: &[usize]) -> Option<usize> {
+    let m = bench_model();
+    let t = CollTuning::default();
+    sizes
+        .iter()
+        .copied()
+        .find(|&b| match family {
+            "allreduce" => m.select_allreduce(&t, n, b) == AllreduceAlg::Ring,
+            "bcast" => m.select_bcast(&t, n, b) == BcastAlg::Chain,
+            "allgather" => m.select_allgather(&t, n, b) == AllgatherAlg::Ring,
+            "alltoall" => m.select_alltoall(&t, n, b) == AlltoallAlg::Pairwise,
+            "gather" => m.select_gather(&t, n, b) == RootedAlg::Linear,
+            "scatter" => m.select_scatter(&t, n, b) == RootedAlg::Linear,
+            _ => unreachable!(),
+        })
+}
+
+fn main() {
+    common::hr("Ablation — collective algorithm selection crossovers");
+    let n = if common::full() {
+        16
+    } else if common::smoke() {
+        4
+    } else {
+        8
+    };
+    let reps = if common::smoke() { 1 } else { 3 };
+    let big_sizes: Vec<usize> = if common::smoke() {
+        vec![512, 256 * 1024]
+    } else {
+        vec![512, 8 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024]
+    };
+    let mid_sizes: Vec<usize> = if common::smoke() {
+        vec![512, 128 * 1024]
+    } else {
+        vec![512, 8 * 1024, 64 * 1024, 256 * 1024]
+    };
+
+    let cases = vec![
+        Case {
+            family: "allreduce",
+            small: ("rdouble", force(|t| t.allreduce = Some(AllreduceAlg::RecursiveDoubling))),
+            large: ("ring", force(|t| t.allreduce = Some(AllreduceAlg::Ring))),
+            sizes: big_sizes.clone(),
+            run: run_allreduce,
+        },
+        Case {
+            family: "bcast",
+            small: ("binomial", force(|t| t.bcast = Some(BcastAlg::Binomial))),
+            large: ("chain", force(|t| t.bcast = Some(BcastAlg::Chain))),
+            sizes: big_sizes.clone(),
+            run: run_bcast,
+        },
+        Case {
+            family: "allgather",
+            small: ("bruck", force(|t| t.allgather = Some(AllgatherAlg::Bruck))),
+            large: ("ring", force(|t| t.allgather = Some(AllgatherAlg::Ring))),
+            sizes: mid_sizes.clone(),
+            run: run_allgather,
+        },
+        Case {
+            family: "alltoall",
+            small: ("bruck", force(|t| t.alltoall = Some(AlltoallAlg::Bruck))),
+            large: ("pairwise", force(|t| t.alltoall = Some(AlltoallAlg::Pairwise))),
+            sizes: mid_sizes.clone(),
+            run: run_alltoall,
+        },
+        Case {
+            family: "gather",
+            small: ("binomial", force(|t| t.gather = Some(RootedAlg::Binomial))),
+            large: ("linear", force(|t| t.gather = Some(RootedAlg::Linear))),
+            sizes: big_sizes.clone(),
+            run: run_gather,
+        },
+        Case {
+            family: "scatter",
+            small: ("binomial", force(|t| t.scatter = Some(RootedAlg::Binomial))),
+            large: ("linear", force(|t| t.scatter = Some(RootedAlg::Linear))),
+            sizes: big_sizes.clone(),
+            run: run_scatter,
+        },
+    ];
+
+    let mut report = common::BenchReport::new("coll_select");
+    println!("ranks={n} reps={reps} (scaled tuned profile, injected delay)");
+    for case in &cases {
+        let cross = model_crossover(case.family, n, &case.sizes);
+        println!(
+            "\n{:<10} {:>10} {:>14} {:>14}  winner (model crossover at {})",
+            case.family,
+            "bytes",
+            format!("{}(ms)", case.small.0),
+            format!("{}(ms)", case.large.0),
+            cross.map(|c| format!("{c}")).unwrap_or_else(|| "-".into()),
+        );
+        for &bytes in &case.sizes {
+            let mut s_small = Summary::new();
+            let mut s_large = Summary::new();
+            let runf = case.run;
+            for _ in 0..reps {
+                s_small.add(
+                    run_once(n, case.small.1, move |r, c| runf(r, c, bytes)).as_secs_f64() * 1e3,
+                );
+                s_large.add(
+                    run_once(n, case.large.1, move |r, c| runf(r, c, bytes)).as_secs_f64() * 1e3,
+                );
+            }
+            let winner = if s_large.median() < s_small.median() {
+                case.large.0
+            } else {
+                case.small.0
+            };
+            println!(
+                "{:<10} {:>10} {:>14.3} {:>14.3}  {}",
+                "", bytes, s_small.median(), s_large.median(), winner
+            );
+            report.case(
+                &format!("{}.{} n={n} bytes={bytes}", case.family, case.small.0),
+                "ms",
+                &s_small,
+            );
+            report.case(
+                &format!("{}.{} n={n} bytes={bytes}", case.family, case.large.0),
+                "ms",
+                &s_large,
+            );
+        }
+        if let Some(c) = cross {
+            report.case_value(&format!("{}.crossover_model n={n}", case.family), "bytes", c as f64);
+        }
+    }
+    report.write();
+    println!(
+        "\nshape: the large-message column wins at and above each family's \
+         model crossover, the small-message column below it"
+    );
+}

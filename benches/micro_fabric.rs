@@ -218,7 +218,7 @@ fn main() {
         report.case_value(&format!("p2p/ompi/bytes={bytes}"), "s", o);
     }
 
-    common::hr("Micro — EMPI allreduce scaling (recursive doubling)");
+    common::hr("Micro — EMPI allreduce scaling (tuned algorithm selection)");
     println!("ranks   f32 elems   time/op");
     let ranks: &[usize] = if common::smoke() { &[4] } else { &[4, 8, 16, 32] };
     let elem_cases: &[usize] = if common::smoke() { &[16] } else { &[16, 4096] };

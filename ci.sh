@@ -22,10 +22,13 @@ echo "== bench smoke (smallest case per bench, catches runtime rot) =="
 # bench also emits BENCH_<name>.json for cross-PR perf tracking.
 for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
              fig8_apps fig9a_failure_overhead fig9b_mtti \
-             ablation_is_alltoallv ablation_mg_threshold; do
+             ablation_is_alltoallv ablation_mg_threshold ablation_coll_select; do
   echo "-- smoke: $bench"
   PARTREPER_BENCH_SMOKE=1 cargo bench --bench "$bench"
 done
+
+echo "== rustdoc gate (doc drift fails CI) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== formatting =="
 cargo fmt --check

@@ -11,7 +11,9 @@ mod parse;
 
 pub use parse::{parse_kv, ParseError};
 
-use crate::fabric::NetModel;
+use crate::fabric::{
+    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, NetModel, RootedAlg,
+};
 
 /// Replication degree: the *percentage of computational processes that have
 /// replicas* (paper §VII-A). The paper sweeps {0, 6.25, 12.5, 25, 50, 100}.
@@ -101,6 +103,9 @@ pub struct JobConfig {
     pub empi_net: NetModel,
     /// FT-library network profile.
     pub ompi_net: NetModel,
+    /// Collective-engine overrides (`coll.*` keys). Defaults derive every
+    /// algorithm choice from the fabric's `NetModel` cost estimates.
+    pub coll: CollTuning,
     /// Fault injection.
     pub faults: FaultPlan,
     /// Idle spare processes launched alongside the world, adoptable by the
@@ -124,6 +129,7 @@ impl Default for JobConfig {
             cores_per_node: 48,
             empi_net: NetModel::empi_tuned(),
             ompi_net: NetModel::ompi_generic(),
+            coll: CollTuning::default(),
             faults: FaultPlan::default(),
             nspares: 0,
             restore: RestorePlan::default(),
@@ -235,6 +241,61 @@ impl JobConfig {
                 self.empi_net.rndv_threshold = t;
                 self.ompi_net.rndv_threshold = t;
             }
+            "coll.allreduce" => {
+                self.coll.allreduce = match value {
+                    "auto" => None,
+                    "rdouble" => Some(AllreduceAlg::RecursiveDoubling),
+                    "ring" => Some(AllreduceAlg::Ring),
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "coll.bcast" => {
+                self.coll.bcast = match value {
+                    "auto" => None,
+                    "binomial" => Some(BcastAlg::Binomial),
+                    "chain" => Some(BcastAlg::Chain),
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "coll.allgather" => {
+                self.coll.allgather = match value {
+                    "auto" => None,
+                    "ring" => Some(AllgatherAlg::Ring),
+                    "bruck" => Some(AllgatherAlg::Bruck),
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "coll.alltoall" => {
+                self.coll.alltoall = match value {
+                    "auto" => None,
+                    "pairwise" => Some(AlltoallAlg::Pairwise),
+                    "bruck" => Some(AlltoallAlg::Bruck),
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "coll.gather" => {
+                self.coll.gather = match value {
+                    "auto" => None,
+                    "linear" => Some(RootedAlg::Linear),
+                    "binomial" => Some(RootedAlg::Binomial),
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "coll.scatter" => {
+                self.coll.scatter = match value {
+                    "auto" => None,
+                    "linear" => Some(RootedAlg::Linear),
+                    "binomial" => Some(RootedAlg::Binomial),
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "coll.bcast_segment" => {
+                let s: usize = value.parse().map_err(|_| bad(key, value))?;
+                if s == 0 {
+                    return Err(bad(key, value));
+                }
+                self.coll.bcast_segment = s;
+            }
             _ => return Err(ParseError::UnknownKey(key.to_string())),
         }
         Ok(())
@@ -307,6 +368,30 @@ mod tests {
         assert!(cfg.set("restore.shards", "0").is_err());
         assert!(cfg.set("restore.redundancy", "0").is_err());
         assert!(cfg.set("faults.target", "nope").is_err());
+    }
+
+    #[test]
+    fn coll_overrides_parse() {
+        let mut cfg = JobConfig::default();
+        assert_eq!(cfg.coll, CollTuning::default());
+        cfg.set("coll.allreduce", "ring").unwrap();
+        cfg.set("coll.bcast", "chain").unwrap();
+        cfg.set("coll.allgather", "bruck").unwrap();
+        cfg.set("coll.alltoall", "pairwise").unwrap();
+        cfg.set("coll.gather", "binomial").unwrap();
+        cfg.set("coll.scatter", "linear").unwrap();
+        cfg.set("coll.bcast_segment", "65536").unwrap();
+        assert_eq!(cfg.coll.allreduce, Some(AllreduceAlg::Ring));
+        assert_eq!(cfg.coll.bcast, Some(BcastAlg::Chain));
+        assert_eq!(cfg.coll.allgather, Some(AllgatherAlg::Bruck));
+        assert_eq!(cfg.coll.alltoall, Some(AlltoallAlg::Pairwise));
+        assert_eq!(cfg.coll.gather, Some(RootedAlg::Binomial));
+        assert_eq!(cfg.coll.scatter, Some(RootedAlg::Linear));
+        assert_eq!(cfg.coll.bcast_segment, 65536);
+        cfg.set("coll.allreduce", "auto").unwrap();
+        assert_eq!(cfg.coll.allreduce, None);
+        assert!(cfg.set("coll.allreduce", "bogus").is_err());
+        assert!(cfg.set("coll.bcast_segment", "0").is_err());
     }
 
     #[test]

@@ -1,0 +1,830 @@
+//! The collective algorithm engine: every algorithm written once over a
+//! minimal transport trait, shared by the plain EMPI collectives
+//! ([`super::coll`]) and PartRePer's failure-guarded ones
+//! (`partreper::gcoll`).
+//!
+//! # Selection and the replay invariant
+//!
+//! Each tunable collective dispatches through a selection function on the
+//! fabric's [`crate::fabric::NetModel`] (with
+//! [`crate::fabric::CollTuning`] overrides). Selection is a **pure
+//! function of (comm size, payload bytes)** — no negotiation round, no
+//! randomness, no per-rank state — so every member of a communicator picks
+//! the same algorithm without communicating, and a lagging incarnation
+//! (promoted replica or cold-restored spare) that re-executes a collective
+//! during PartRePer §VI-B recovery reproduces the *exact* message and tag
+//! schedule the survivors originally ran. Each collective consumes exactly
+//! one round tag (`Comm::coll_tag`) regardless of the algorithm chosen;
+//! multi-phase algorithms rely on the fabric's per-(src, tag) FIFO.
+//!
+//! Payload-size keys are agreed, not assumed: when selecting
+//! automatically, the rooted collectives (bcast/gather/scatter) prepend a
+//! tiny binomial **size-agreement round** carrying the root's byte count
+//! (⌈log₂ n⌉ extra 8-byte hops, included in the `NetModel` cost
+//! estimates), so selection cannot diverge even if a caller passes
+//! mismatched buffers; a pinned `coll.*` override skips the header
+//! wherever the payload is self-sizing (binomial bcast, both gather and
+//! scatter variants), reproducing the untuned wire schedule exactly.
+//! The symmetric collectives key on the local payload under the MPI
+//! equal-count contract the corresponding `MPI_*` calls impose
+//! (allreduce additionally enforces it — `fold` panics on length
+//! mismatch); alltoall detects a locally non-uniform row (alltoallv-shaped
+//! traffic) and falls back to the pairwise schedule, which is correct for
+//! any sizes. Violating the contract *across* ranks on allgather is as
+//! erroneous here as in any MPI.
+
+use super::reduce::{fold, DType, ReduceOp};
+use super::{Comm, Recvd, Src, Tag};
+use crate::fabric::{
+    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, RootedAlg, SEL_ALLGATHER_BRUCK,
+    SEL_ALLGATHER_RING, SEL_ALLREDUCE_RDOUBLE, SEL_ALLREDUCE_RING, SEL_ALLTOALL_BRUCK,
+    SEL_ALLTOALL_PAIRWISE, SEL_BCAST_BINOMIAL, SEL_BCAST_CHAIN, SEL_GATHER_BINOMIAL,
+    SEL_GATHER_LINEAR, SEL_SCATTER_BINOMIAL, SEL_SCATTER_LINEAR,
+};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// The transport a collective algorithm runs over: comm-rank addressed
+/// send/recv plus access to the communicator (for size/rank and the
+/// fabric's tuning). Implemented by [`Plain`] (raw EMPI, errors are
+/// `CommError`) and by `partreper::gcoll`'s guarded transport (failure
+/// checks interleaved, errors are `OpError`).
+pub trait Xfer {
+    type Err;
+    fn comm(&self) -> &Comm;
+    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), Self::Err>;
+    fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, Self::Err>;
+}
+
+/// Plain (unguarded) transport over a [`Comm`].
+pub struct Plain<'a>(pub &'a Comm);
+
+impl Xfer for Plain<'_> {
+    type Err = crate::error::CommError;
+
+    fn comm(&self) -> &Comm {
+        self.0
+    }
+
+    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), Self::Err> {
+        self.0.send(dst, tag, data)
+    }
+
+    fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, Self::Err> {
+        self.0.recv(src, tag)
+    }
+}
+
+// ------------------------------------------------------------ dispatchers
+
+/// Dissemination barrier: ⌈log₂ n⌉ rounds, each rank signals
+/// `(me + 2^k) mod n` and waits for `(me - 2^k) mod n`. Single algorithm —
+/// barriers carry no payload to key a selection on.
+pub fn barrier<X: Xfer>(x: &X, tag: i64) -> Result<(), X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    let mut k = 1usize;
+    while k < n {
+        let to = (me + k) % n;
+        // Parenthesised for clarity: `%` already binds tighter than `-`,
+        // so this is the value the unbracketed form always computed — the
+        // brackets just make the reduce-then-subtract order (and the
+        // partner symmetry it guarantees) explicit.
+        let from = (me + n - (k % n)) % n;
+        x.send(to, tag, &[])?;
+        x.recv(Src::Rank(from), Tag::Tag(tag))?;
+        k <<= 1;
+    }
+    Ok(())
+}
+
+/// Broadcast from `root`: size-agreement header, then binomial tree
+/// (small payloads) or segmented chain pipeline (large payloads).
+///
+/// A pinned `coll.bcast=binomial` override skips the header round (the
+/// binomial payload is self-sizing), reproducing the untuned wire
+/// schedule exactly; auto selection and the chain variant need the
+/// agreed length.
+pub fn bcast<X: Xfer>(x: &X, tag: i64, root: usize, data: &mut Vec<u8>) -> Result<(), X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let f = &c.fabric;
+    if f.coll.bcast == Some(BcastAlg::Binomial) {
+        f.metrics.selects.bump(SEL_BCAST_BINOMIAL);
+        return bcast_binomial(x, tag, root, data);
+    }
+    let len = agree_root_size(x, tag, root, data.len())?;
+    match f.model.select_bcast(&f.coll, n, len) {
+        BcastAlg::Binomial => {
+            f.metrics.selects.bump(SEL_BCAST_BINOMIAL);
+            bcast_binomial(x, tag, root, data)
+        }
+        BcastAlg::Chain => {
+            f.metrics.selects.bump(SEL_BCAST_CHAIN);
+            bcast_chain(x, tag, root, data, len, f.coll.bcast_segment)
+        }
+    }
+}
+
+/// Binomial-tree reduce to `root`; returns `Some(result)` at root. Single
+/// algorithm: its ⌈log₂ n⌉ combining rounds are already latency- and
+/// bandwidth-reasonable at every size this codebase reaches.
+pub fn reduce<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    dtype: DType,
+    op: ReduceOp,
+    data: &[u8],
+) -> Result<Option<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let vrank = (c.rank() + n - root) % n;
+    let mut acc = data.to_vec();
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            // Send my accumulator to the parent and stop.
+            let parent = ((vrank ^ mask) + root) % n;
+            x.send(parent, tag, &acc)?;
+            return Ok(None);
+        }
+        let child_v = vrank | mask;
+        if child_v < n {
+            let child = (child_v + root) % n;
+            let m = x.recv(Src::Rank(child), Tag::Tag(tag))?;
+            fold(dtype, op, &mut acc, &m.data);
+        }
+        mask <<= 1;
+    }
+    Ok(Some(acc))
+}
+
+/// Allreduce: recursive doubling (small payloads) or ring
+/// reduce-scatter + allgather (large payloads).
+pub fn allreduce<X: Xfer>(
+    x: &X,
+    tag: i64,
+    dtype: DType,
+    op: ReduceOp,
+    data: &[u8],
+) -> Result<Vec<u8>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if n == 1 {
+        return Ok(data.to_vec());
+    }
+    let f = &c.fabric;
+    match f.model.select_allreduce(&f.coll, n, data.len()) {
+        AllreduceAlg::RecursiveDoubling => {
+            f.metrics.selects.bump(SEL_ALLREDUCE_RDOUBLE);
+            allreduce_rdouble(x, tag, dtype, op, data)
+        }
+        AllreduceAlg::Ring => {
+            f.metrics.selects.bump(SEL_ALLREDUCE_RING);
+            allreduce_ring(x, tag, dtype, op, data)
+        }
+    }
+}
+
+/// Gather to `root`: size-agreement header (the root's own contribution is
+/// the selection key), then linear ingest or binomial tree.
+pub fn gather<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    data: &[u8],
+) -> Result<Option<Vec<Vec<u8>>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if n == 1 {
+        return Ok(Some(vec![data.to_vec()]));
+    }
+    let f = &c.fabric;
+    // Neither gather algorithm needs the agreed length for correctness
+    // (blocks are length-prefixed); a pinned override therefore skips the
+    // header round entirely. Auto selection pays it to agree the key.
+    let alg = match f.coll.gather {
+        Some(alg) => alg,
+        None => {
+            let len = agree_root_size(x, tag, root, data.len())?;
+            f.model.select_gather(&f.coll, n, len)
+        }
+    };
+    match alg {
+        RootedAlg::Linear => {
+            f.metrics.selects.bump(SEL_GATHER_LINEAR);
+            gather_linear(x, tag, root, data)
+        }
+        RootedAlg::Binomial => {
+            f.metrics.selects.bump(SEL_GATHER_BINOMIAL);
+            gather_binomial(x, tag, root, data)
+        }
+    }
+}
+
+/// Scatter from `root`: size-agreement header (mean block size is the
+/// selection key), then linear emit or binomial subtree forwarding.
+pub fn scatter<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    blocks: Option<&[Vec<u8>]>,
+) -> Result<Vec<u8>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if c.rank() == root {
+        let blocks = blocks.expect("root must supply blocks");
+        assert_eq!(blocks.len(), n, "scatter needs one block per rank");
+    }
+    if n == 1 {
+        return Ok(blocks.expect("root must supply blocks")[0].clone());
+    }
+    let f = &c.fabric;
+    // As with gather: blocks are self-describing on the wire, so a pinned
+    // override skips the size-agreement header round.
+    let alg = match f.coll.scatter {
+        Some(alg) => alg,
+        None => {
+            let total: usize = blocks
+                .map(|bs| bs.iter().map(Vec::len).sum())
+                .unwrap_or(0);
+            let total = agree_root_size(x, tag, root, total)?;
+            f.model.select_scatter(&f.coll, n, total / n)
+        }
+    };
+    match alg {
+        RootedAlg::Linear => {
+            f.metrics.selects.bump(SEL_SCATTER_LINEAR);
+            scatter_linear(x, tag, root, blocks)
+        }
+        RootedAlg::Binomial => {
+            f.metrics.selects.bump(SEL_SCATTER_BINOMIAL);
+            scatter_binomial(x, tag, root, blocks)
+        }
+    }
+}
+
+/// Allgather: Bruck doubling (small blocks) or neighbour ring (large
+/// blocks). Keys on the local block size under the MPI equal-count
+/// contract.
+pub fn allgather<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if n == 1 {
+        return Ok(vec![data.to_vec()]);
+    }
+    let f = &c.fabric;
+    match f.model.select_allgather(&f.coll, n, data.len()) {
+        AllgatherAlg::Ring => {
+            f.metrics.selects.bump(SEL_ALLGATHER_RING);
+            allgather_ring(x, tag, data)
+        }
+        AllgatherAlg::Bruck => {
+            f.metrics.selects.bump(SEL_ALLGATHER_BRUCK);
+            allgather_bruck(x, tag, data)
+        }
+    }
+}
+
+/// Alltoall: Bruck log-rounds (small blocks) or pairwise exchange (large
+/// blocks), keyed on the uniform block size (the `MPI_Alltoall` scalar
+/// count). A locally non-uniform row is alltoallv-shaped traffic: auto
+/// selection then falls back to pairwise — the schedule that is correct
+/// for any sizes — rather than risk keying a divergent choice on a value
+/// the equal-count contract says cannot vary.
+pub fn alltoall<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    assert_eq!(blocks.len(), n, "alltoall needs one block per rank");
+    if n == 1 {
+        return Ok(vec![blocks[0].clone()]);
+    }
+    let f = &c.fabric;
+    let uniform = blocks.iter().all(|b| b.len() == blocks[0].len());
+    let alg = if f.coll.alltoall.is_none() && !uniform {
+        AlltoallAlg::Pairwise
+    } else {
+        f.model.select_alltoall(&f.coll, n, blocks[0].len())
+    };
+    match alg {
+        AlltoallAlg::Pairwise => {
+            f.metrics.selects.bump(SEL_ALLTOALL_PAIRWISE);
+            alltoall_pairwise(x, tag, blocks)
+        }
+        AlltoallAlg::Bruck => {
+            f.metrics.selects.bump(SEL_ALLTOALL_BRUCK);
+            alltoall_bruck(x, tag, blocks)
+        }
+    }
+}
+
+/// Alltoallv: pairwise exchange, always. Counts are per-(rank, dest) by
+/// definition, so no rank-invariant size key exists to select on — and
+/// PartRePer routes its alltoallv through the nonblocking
+/// [`super::nbc::IAlltoallv`] anyway (the paper's own design, §VII-A).
+pub fn alltoallv<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, X::Err> {
+    let n = x.comm().size();
+    assert_eq!(blocks.len(), n, "alltoallv needs one block per rank");
+    alltoall_pairwise(x, tag, blocks)
+}
+
+// --------------------------------------------------- the size-agreement round
+
+/// Binomial round broadcasting the root's byte count, so every rank keys
+/// algorithm selection on the same value. Shares the collective's tag; the
+/// fabric's per-(src, tag) FIFO keeps it ahead of payload traffic on any
+/// link both rounds use.
+fn agree_root_size<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    my_len: usize,
+) -> Result<usize, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let vrank = (c.rank() + n - root) % n;
+    let mut len = my_len as u64;
+    if vrank != 0 {
+        let parent = ((vrank & (vrank - 1)) + root) % n;
+        let m = x.recv(Src::Rank(parent), Tag::Tag(tag))?;
+        len = u64::from_le_bytes(m.data[..8].try_into().unwrap());
+    }
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            break;
+        }
+        let child_v = vrank | mask;
+        if child_v < n {
+            x.send((child_v + root) % n, tag, &len.to_le_bytes())?;
+        }
+        mask <<= 1;
+    }
+    Ok(len as usize)
+}
+
+// ------------------------------------------------------------- broadcast
+
+/// Binomial-tree broadcast: receive from the parent (lowest set bit
+/// cleared), forward to children (set bits above the lowest).
+fn bcast_binomial<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    data: &mut Vec<u8>,
+) -> Result<(), X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let vrank = (c.rank() + n - root) % n;
+    if vrank != 0 {
+        let parent = ((vrank & (vrank - 1)) + root) % n;
+        let m = x.recv(Src::Rank(parent), Tag::Tag(tag))?;
+        *data = m.data.to_vec();
+    }
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            break;
+        }
+        let child_v = vrank | mask;
+        if child_v < n {
+            x.send((child_v + root) % n, tag, data)?;
+        }
+        mask <<= 1;
+    }
+    Ok(())
+}
+
+/// Segmented chain broadcast: the payload streams root → root+1 → … in
+/// `seg`-byte segments; middle ranks forward each segment as it lands, so
+/// the pipeline keeps every link busy. All ranks know `len` from the
+/// size-agreement round.
+fn bcast_chain<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    data: &mut Vec<u8>,
+    len: usize,
+    seg: usize,
+) -> Result<(), X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    let pos = (me + n - root) % n;
+    if pos != 0 {
+        data.clear();
+        data.resize(len, 0);
+    }
+    debug_assert_eq!(data.len(), len, "root buffer is the agreed payload");
+    let seg = seg.max(1);
+    let nseg = len.div_ceil(seg);
+    let succ = (me + 1) % n;
+    let pred = (me + n - 1) % n;
+    for k in 0..nseg {
+        let range = k * seg..((k + 1) * seg).min(len);
+        if pos != 0 {
+            let m = x.recv(Src::Rank(pred), Tag::Tag(tag))?;
+            data[range.clone()].copy_from_slice(&m.data);
+        }
+        if pos != n - 1 {
+            x.send(succ, tag, &data[range])?;
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- allreduce
+
+/// Recursive-doubling allreduce with the MPICH non-power-of-two fold-in:
+/// the first `2*rem` ranks pre-combine pairwise so a power-of-two core
+/// runs recursive doubling, then results are copied back out.
+fn allreduce_rdouble<X: Xfer>(
+    x: &X,
+    tag: i64,
+    dtype: DType,
+    op: ReduceOp,
+    data: &[u8],
+) -> Result<Vec<u8>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    let mut acc = data.to_vec();
+
+    let pof2 = 1usize << (usize::BITS - 1 - n.leading_zeros());
+    let rem = n - pof2;
+
+    // Phase 1: fold the `rem` extras into their even partners.
+    // Ranks < 2*rem: odd sends to even neighbour, even folds.
+    let mut newrank: i64 = -1;
+    if me < 2 * rem {
+        if me % 2 == 1 {
+            x.send(me - 1, tag, &acc)?;
+        } else {
+            let m = x.recv(Src::Rank(me + 1), Tag::Tag(tag))?;
+            fold(dtype, op, &mut acc, &m.data);
+            newrank = (me / 2) as i64;
+        }
+    } else {
+        newrank = (me - rem) as i64;
+    }
+
+    // Phase 2: recursive doubling over the power-of-two core.
+    if newrank >= 0 {
+        let nr = newrank as usize;
+        let mut mask = 1usize;
+        while mask < pof2 {
+            let partner_nr = nr ^ mask;
+            let partner = if partner_nr < rem {
+                partner_nr * 2
+            } else {
+                partner_nr + rem
+            };
+            x.send(partner, tag, &acc)?;
+            let m = x.recv(Src::Rank(partner), Tag::Tag(tag))?;
+            fold(dtype, op, &mut acc, &m.data);
+            mask <<= 1;
+        }
+    }
+
+    // Phase 3: hand results back to the folded-in odd ranks.
+    if me < 2 * rem {
+        if me % 2 == 0 {
+            x.send(me + 1, tag, &acc)?;
+        } else {
+            let m = x.recv(Src::Rank(me - 1), Tag::Tag(tag))?;
+            acc = m.data.to_vec();
+        }
+    }
+    Ok(acc)
+}
+
+/// Ring allreduce (reduce-scatter ring + allgather ring): the payload is
+/// split into n near-equal element-aligned chunks; n−1 neighbour hops
+/// reduce-scatter them (each rank ends owning one fully-reduced chunk),
+/// n−1 more hops allgather the results. Bandwidth-optimal (≈2m bytes per
+/// rank regardless of n) and uniform for any comm size — no
+/// non-power-of-two special case.
+fn allreduce_ring<X: Xfer>(
+    x: &X,
+    tag: i64,
+    dtype: DType,
+    op: ReduceOp,
+    data: &[u8],
+) -> Result<Vec<u8>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    let mut acc = data.to_vec();
+    let w = dtype.width();
+    assert!(acc.len() % w == 0, "misaligned reduce buffer");
+    let elems = acc.len() / w;
+    // Byte range of element chunk `i` (chunks differ by at most one
+    // element; the first `elems % n` chunks take the extra).
+    let range = |i: usize| -> std::ops::Range<usize> {
+        let q = elems / n;
+        let r = elems % n;
+        let start = i * q + i.min(r);
+        let cnt = q + usize::from(i < r);
+        (start * w)..((start + cnt) * w)
+    };
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    // Phase 1: reduce-scatter. After step s every rank holds the partial
+    // fold of s+2 contributions in chunk (me - s - 1) mod n; after n−1
+    // steps chunk (me + 1) mod n is complete here.
+    for s in 0..n - 1 {
+        let send_c = (me + n - s) % n;
+        let recv_c = (me + n - s - 1) % n;
+        x.send(right, tag, &acc[range(send_c)])?;
+        let m = x.recv(Src::Rank(left), Tag::Tag(tag))?;
+        fold(dtype, op, &mut acc[range(recv_c)], &m.data);
+    }
+    // Phase 2: allgather the completed chunks around the same ring.
+    for s in 0..n - 1 {
+        let send_c = (me + 1 + n - s) % n;
+        let recv_c = (me + n - s) % n;
+        x.send(right, tag, &acc[range(send_c)])?;
+        let m = x.recv(Src::Rank(left), Tag::Tag(tag))?;
+        acc[range(recv_c)].copy_from_slice(&m.data);
+    }
+    Ok(acc)
+}
+
+// ------------------------------------------------------ gather / scatter
+
+/// Linear gather: everyone sends to the root, which ingests in arrival
+/// order (`MPI_ANY_SOURCE`) and files blocks by sender.
+fn gather_linear<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    data: &[u8],
+) -> Result<Option<Vec<Vec<u8>>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if c.rank() == root {
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+        out[root] = data.to_vec();
+        for _ in 0..n - 1 {
+            let m = x.recv(Src::Any, Tag::Tag(tag))?;
+            out[m.src] = m.data.to_vec();
+        }
+        Ok(Some(out))
+    } else {
+        x.send(root, tag, data)?;
+        Ok(None)
+    }
+}
+
+/// Binomial-tree gather: each rank merges its children's packed subtree
+/// aggregates (tagged with root-relative vranks, so variable block sizes
+/// are fine) and forwards one message to its parent.
+fn gather_binomial<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    data: &[u8],
+) -> Result<Option<Vec<Vec<u8>>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let vrank = (c.rank() + n - root) % n;
+    let mut have: Vec<(usize, Vec<u8>)> = vec![(vrank, data.to_vec())];
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            let parent = ((vrank ^ mask) + root) % n;
+            x.send(parent, tag, &pack_indexed(&have))?;
+            return Ok(None);
+        }
+        let child_v = vrank | mask;
+        if child_v < n {
+            let m = x.recv(Src::Rank((child_v + root) % n), Tag::Tag(tag))?;
+            unpack_indexed_into(&m.data, &mut have);
+        }
+        mask <<= 1;
+    }
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+    for (v, b) in have {
+        out[(v + root) % n] = b;
+    }
+    Ok(Some(out))
+}
+
+/// Linear scatter: the root sends each rank its block directly.
+fn scatter_linear<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    blocks: Option<&[Vec<u8>]>,
+) -> Result<Vec<u8>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    if c.rank() == root {
+        let blocks = blocks.expect("root must supply blocks");
+        for (r, b) in blocks.iter().enumerate() {
+            if r != root {
+                x.send(r, tag, b)?;
+            }
+        }
+        Ok(blocks[root].clone())
+    } else {
+        let m = x.recv(Src::Rank(root), Tag::Tag(tag))?;
+        Ok(m.data.to_vec())
+    }
+}
+
+/// Binomial-tree scatter: each hop carries only the receiver's subtree
+/// (vranks `[child, child + mask)`), packed with explicit vrank indices.
+fn scatter_binomial<X: Xfer>(
+    x: &X,
+    tag: i64,
+    root: usize,
+    blocks: Option<&[Vec<u8>]>,
+) -> Result<Vec<u8>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let vrank = (c.rank() + n - root) % n;
+    let mut have: Vec<(usize, Vec<u8>)> = if vrank == 0 {
+        let blocks = blocks.expect("root must supply blocks");
+        (0..n).map(|v| (v, blocks[(v + root) % n].clone())).collect()
+    } else {
+        let parent = ((vrank & (vrank - 1)) + root) % n;
+        let m = x.recv(Src::Rank(parent), Tag::Tag(tag))?;
+        let mut got = Vec::new();
+        unpack_indexed_into(&m.data, &mut got);
+        got
+    };
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            break;
+        }
+        let child_v = vrank | mask;
+        if child_v < n {
+            let subtree = child_v..child_v + mask;
+            let (send, keep): (Vec<_>, Vec<_>) =
+                have.into_iter().partition(|(v, _)| subtree.contains(v));
+            x.send((child_v + root) % n, tag, &pack_indexed(&send))?;
+            have = keep;
+        }
+        mask <<= 1;
+    }
+    let mine = have
+        .into_iter()
+        .find(|&(v, _)| v == vrank)
+        .expect("own block present after subtree forwarding");
+    Ok(mine.1)
+}
+
+// -------------------------------------------------------------- allgather
+
+/// Ring allgather: n−1 neighbour steps, each forwarding the block received
+/// the step before.
+fn allgather_ring<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+    out[me] = data.to_vec();
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let mut cur = me;
+    for _ in 0..n - 1 {
+        x.send(right, tag, &out[cur])?;
+        let m = x.recv(Src::Rank(left), Tag::Tag(tag))?;
+        cur = (cur + n - 1) % n;
+        debug_assert!(out[cur].is_empty());
+        out[cur] = m.data.to_vec();
+    }
+    Ok(out)
+}
+
+/// Bruck allgather: ⌈log₂ n⌉ rounds; in round k each rank ships its
+/// current run of blocks to `(me − k) mod n` and appends the matching run
+/// from `(me + k) mod n`, doubling coverage per round.
+fn allgather_bruck<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    // have[j] = block of rank (me + j) mod n.
+    let mut have: Vec<Vec<u8>> = vec![data.to_vec()];
+    let mut k = 1usize;
+    while have.len() < n {
+        let cnt = have.len();
+        let send_cnt = cnt.min(n - cnt);
+        x.send((me + n - k) % n, tag, &pack_blocks(&have[..send_cnt]))?;
+        let m = x.recv(Src::Rank((me + k) % n), Tag::Tag(tag))?;
+        unpack_blocks_into(&m.data, &mut have);
+        k <<= 1;
+    }
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+    for (j, b) in have.into_iter().enumerate() {
+        out[(me + j) % n] = b;
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------- alltoall
+
+/// Pairwise-exchange alltoall: step `i` sends to `me+i`, receives from
+/// `me-i` — the classic contention-avoiding schedule. Tolerates variable
+/// block sizes (it is also the alltoallv schedule).
+fn alltoall_pairwise<X: Xfer>(
+    x: &X,
+    tag: i64,
+    blocks: &[Vec<u8>],
+) -> Result<Vec<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+    out[me] = blocks[me].clone();
+    for i in 1..n {
+        let to = (me + i) % n;
+        let from = (me + n - i) % n;
+        x.send(to, tag, &blocks[to])?;
+        let m = x.recv(Src::Rank(from), Tag::Tag(tag))?;
+        out[from] = m.data.to_vec();
+    }
+    Ok(out)
+}
+
+/// Bruck alltoall: local rotation, then for each bit k ship every block
+/// whose rotated index has bit k set to `(me + k) mod n` (receiving the
+/// same index set from `(me − k) mod n`), then inverse rotation. ⌈log₂ n⌉
+/// messages instead of n−1, at ~log₂(n)/2× the bytes.
+fn alltoall_bruck<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, X::Err> {
+    let c = x.comm();
+    let n = c.size();
+    let me = c.rank();
+    // tmp[j] = the block destined to rank (me + j) mod n.
+    let mut tmp: Vec<Vec<u8>> = (0..n).map(|j| blocks[(me + j) % n].clone()).collect();
+    let mut k = 1usize;
+    while k < n {
+        let entries: Vec<(usize, Vec<u8>)> = (0..n)
+            .filter(|i| i & k != 0)
+            .map(|i| (i, std::mem::take(&mut tmp[i])))
+            .collect();
+        x.send((me + k) % n, tag, &pack_indexed(&entries))?;
+        let m = x.recv(Src::Rank((me + n - k) % n), Tag::Tag(tag))?;
+        let mut got = Vec::new();
+        unpack_indexed_into(&m.data, &mut got);
+        for (i, b) in got {
+            tmp[i] = b;
+        }
+        k <<= 1;
+    }
+    // After the bit rounds tmp[i] holds the block *from* rank (me − i).
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+    for (i, b) in tmp.into_iter().enumerate() {
+        out[(me + n - i) % n] = b;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- packing
+
+/// `(index, block)` pairs → one length-prefixed buffer.
+fn pack_indexed(entries: &[(usize, Vec<u8>)]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.usize(entries.len());
+    for (i, b) in entries {
+        w.usize(*i);
+        w.bytes(b);
+    }
+    w.finish()
+}
+
+fn unpack_indexed_into(buf: &[u8], out: &mut Vec<(usize, Vec<u8>)>) {
+    let mut r = ByteReader::new(buf);
+    let cnt = r.usize();
+    out.reserve(cnt);
+    for _ in 0..cnt {
+        let i = r.usize();
+        out.push((i, r.bytes().to_vec()));
+    }
+}
+
+/// Ordered blocks → one length-prefixed buffer (Bruck allgather runs,
+/// where position already encodes identity).
+fn pack_blocks(blocks: &[Vec<u8>]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.usize(blocks.len());
+    for b in blocks {
+        w.bytes(b);
+    }
+    w.finish()
+}
+
+fn unpack_blocks_into(buf: &[u8], out: &mut Vec<Vec<u8>>) {
+    let mut r = ByteReader::new(buf);
+    let cnt = r.usize();
+    out.reserve(cnt);
+    for _ in 0..cnt {
+        out.push(r.bytes().to_vec());
+    }
+}

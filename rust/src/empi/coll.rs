@@ -1,15 +1,31 @@
 //! Tuned blocking collectives for the native EMPI library.
 //!
-//! Algorithm choices follow what production MPIs (MVAPICH2/MPICH) use at
-//! these scales: dissemination barrier, binomial bcast/reduce, recursive
-//! doubling allreduce (with the classic non-power-of-two fold-in), ring
-//! allgather, and pairwise-exchange alltoall(v). The point of carrying the
+//! Each collective is a thin wrapper: allocate one round tag
+//! (`Comm::coll_tag`) and dispatch into the shared algorithm engine
+//! ([`super::algo`]), which selects among algorithms per
+//! (comm size, payload bytes) from the fabric's
+//! [`crate::fabric::NetModel`] cost estimates — overridable with the
+//! `coll.*` config keys ([`crate::fabric::CollTuning`]). This mirrors what
+//! production MPIs (MVAPICH2/MPICH/Open MPI `tuned`) do: dissemination
+//! barrier; binomial vs segmented-chain bcast; binomial reduce; recursive
+//! doubling vs ring allreduce; linear vs binomial gather/scatter; ring vs
+//! Bruck allgather; pairwise vs Bruck alltoall. The point of carrying the
 //! real algorithms (rather than a toy linear loop) is that PartRePer's
 //! overhead claims are *relative to a tuned baseline* — reproducing the
 //! paper requires the baseline to actually be good.
+//!
+//! # Wire/tag contract
+//!
+//! Every collective consumes exactly **one** tag from the comm's
+//! collective sequence, whichever algorithm runs; selection is a pure
+//! function of (comm size, payload bytes), so all members — including a
+//! lagging incarnation re-executing the call during PartRePer recovery —
+//! produce the same message schedule under that tag. `partreper::gcoll`
+//! runs these same algorithms over a failure-guarded transport.
 
-use super::reduce::{fold, DType, ReduceOp};
-use super::{Comm, Src, Tag};
+use super::algo::{self, Plain};
+use super::reduce::{DType, ReduceOp};
+use super::Comm;
 use crate::error::CommError;
 
 // Opcode space for collective round tags (see `Comm::coll_tag`).
@@ -24,62 +40,34 @@ const OP_ALLTOALL: i64 = 8;
 const OP_ALLTOALLV: i64 = 9;
 pub(crate) const OP_IALLTOALLV: i64 = 10;
 
-/// Dissemination barrier: ceil(log2 n) rounds, each rank signals
-/// `(me + 2^k) mod n` and waits for `(me - 2^k) mod n`.
+/// Dissemination barrier: ⌈log₂ n⌉ rounds, each rank signals
+/// `(me + 2^k) mod n` and waits for `(me - 2^k) mod n`. Cost ≈
+/// ⌈log₂ n⌉ · latency.
 pub fn barrier(comm: &Comm) -> Result<(), CommError> {
-    let n = comm.size();
-    if n <= 1 {
+    if comm.size() <= 1 {
         return Ok(());
     }
     let tag = comm.coll_tag(OP_BARRIER);
-    let me = comm.rank();
-    let mut k = 1usize;
-    while k < n {
-        let to = (me + k) % n;
-        // Parenthesised for clarity: `%` already binds tighter than `-`,
-        // so this is the value the unbracketed form always computed — the
-        // brackets just make the reduce-then-subtract order (and the
-        // partner symmetry it guarantees, tested below) explicit.
-        let from = (me + n - (k % n)) % n;
-        comm.send(to, tag, &[])?;
-        comm.recv(Src::Rank(from), Tag::Tag(tag))?;
-        k <<= 1;
-    }
-    Ok(())
+    algo::barrier(&Plain(comm), tag)
 }
 
-/// Binomial-tree broadcast from `root`.
+/// Broadcast from `root`. Small payloads run the binomial tree
+/// (⌈log₂ n⌉ · (α + βm)); payloads past the tuned crossover stream along
+/// the rank chain in `coll.bcast_segment`-byte segments
+/// ((n − 2 + ⌈m/seg⌉) neighbour hops). Under auto selection a tiny
+/// size-agreement round (⌈log₂ n⌉ 8-byte hops) makes the root's byte
+/// count the selection key on every rank, so non-root buffers need not
+/// be pre-sized; pinning `coll.bcast=binomial` skips it.
 pub fn bcast(comm: &Comm, root: usize, data: &mut Vec<u8>) -> Result<(), CommError> {
-    let n = comm.size();
-    if n <= 1 {
+    if comm.size() <= 1 {
         return Ok(());
     }
     let tag = comm.coll_tag(OP_BCAST);
-    // Work in root-relative rank space.
-    let vrank = (comm.rank() + n - root) % n;
-    if vrank != 0 {
-        // Receive from parent: clear the lowest set bit.
-        let parent = ((vrank & (vrank - 1)) + root) % n;
-        let m = comm.recv(Src::Rank(parent), Tag::Tag(tag))?;
-        *data = m.data.to_vec();
-    }
-    // Forward to children: set bits above my lowest set bit.
-    let mut mask = 1usize;
-    while mask < n {
-        if vrank & mask != 0 {
-            break;
-        }
-        let child_v = vrank | mask;
-        if child_v < n {
-            let child = (child_v + root) % n;
-            comm.send(child, tag, data)?;
-        }
-        mask <<= 1;
-    }
-    Ok(())
+    algo::bcast(&Plain(comm), tag, root, data)
 }
 
-/// Binomial-tree reduce to `root`. Returns `Some(result)` at root.
+/// Binomial-tree reduce to `root`; returns `Some(result)` at root. Cost ≈
+/// ⌈log₂ n⌉ · (α + βm) plus the element folds.
 pub fn reduce(
     comm: &Comm,
     root: usize,
@@ -87,203 +75,87 @@ pub fn reduce(
     op: ReduceOp,
     data: &[u8],
 ) -> Result<Option<Vec<u8>>, CommError> {
-    let n = comm.size();
     let tag = comm.coll_tag(OP_REDUCE);
-    let vrank = (comm.rank() + n - root) % n;
-    let mut acc = data.to_vec();
-    let mut mask = 1usize;
-    while mask < n {
-        if vrank & mask != 0 {
-            // Send my accumulator to the parent and stop.
-            let parent = ((vrank ^ mask) + root) % n;
-            comm.send(parent, tag, &acc)?;
-            return Ok(None);
-        }
-        let child_v = vrank | mask;
-        if child_v < n {
-            let child = (child_v + root) % n;
-            let m = comm.recv(Src::Rank(child), Tag::Tag(tag))?;
-            fold(dtype, op, &mut acc, &m.data);
-        }
-        mask <<= 1;
-    }
-    Ok(Some(acc))
+    algo::reduce(&Plain(comm), tag, root, dtype, op, data)
 }
 
-/// Recursive-doubling allreduce with the MPICH non-power-of-two fold-in:
-/// the first `2*rem` ranks pre-combine pairwise so a power-of-two core runs
-/// recursive doubling, then results are copied back out.
+/// Allreduce. Small payloads run recursive doubling with the MPICH
+/// non-power-of-two fold-in (⌈log₂ n⌉ · (α + βm)); payloads past the
+/// tuned crossover run the ring reduce-scatter + allgather
+/// (2(n−1) · (α + βm/n), bandwidth-optimal). All ranks must pass equal
+/// byte counts (the `MPI_Allreduce` contract).
 pub fn allreduce(
     comm: &Comm,
     dtype: DType,
     op: ReduceOp,
     data: &[u8],
 ) -> Result<Vec<u8>, CommError> {
-    let n = comm.size();
-    let me = comm.rank();
     let tag = comm.coll_tag(OP_ALLREDUCE);
-    let mut acc = data.to_vec();
-    if n == 1 {
-        return Ok(acc);
-    }
-
-    let pof2 = 1usize << (usize::BITS - 1 - n.leading_zeros());
-    let rem = n - pof2;
-
-    // Phase 1: fold the `rem` extras into their even partners.
-    // Ranks < 2*rem: odd sends to even neighbour, even folds.
-    let mut newrank: i64 = -1;
-    if me < 2 * rem {
-        if me % 2 == 1 {
-            comm.send(me - 1, tag, &acc)?;
-        } else {
-            let m = comm.recv(Src::Rank(me + 1), Tag::Tag(tag))?;
-            fold(dtype, op, &mut acc, &m.data);
-            newrank = (me / 2) as i64;
-        }
-    } else {
-        newrank = (me - rem) as i64;
-    }
-
-    // Phase 2: recursive doubling over the power-of-two core.
-    if newrank >= 0 {
-        let nr = newrank as usize;
-        let mut mask = 1usize;
-        while mask < pof2 {
-            let partner_nr = nr ^ mask;
-            let partner = if partner_nr < rem {
-                partner_nr * 2
-            } else {
-                partner_nr + rem
-            };
-            comm.send(partner, tag, &acc)?;
-            let m = comm.recv(Src::Rank(partner), Tag::Tag(tag))?;
-            fold(dtype, op, &mut acc, &m.data);
-            mask <<= 1;
-        }
-    }
-
-    // Phase 3: hand results back to the folded-in odd ranks.
-    if me < 2 * rem {
-        if me % 2 == 0 {
-            comm.send(me + 1, tag, &acc)?;
-        } else {
-            let m = comm.recv(Src::Rank(me - 1), Tag::Tag(tag))?;
-            acc = m.data.to_vec();
-        }
-    }
-    Ok(acc)
+    algo::allreduce(&Plain(comm), tag, dtype, op, data)
 }
 
-/// Linear gather to `root`; returns per-rank buffers at root (index = rank).
+/// Gather to `root`; returns per-rank buffers at root (index = rank).
+/// Small contributions run the binomial tree (⌈log₂ n⌉ rounds of packed
+/// subtree aggregates); large ones go linear, every rank straight to the
+/// root. Under auto selection the root's contribution size is broadcast
+/// as the selection key (⌈log₂ n⌉ 8-byte hops); a pinned `coll.gather`
+/// override skips that header.
 pub fn gather(comm: &Comm, root: usize, data: &[u8]) -> Result<Option<Vec<Vec<u8>>>, CommError> {
-    let n = comm.size();
     let tag = comm.coll_tag(OP_GATHER);
-    if comm.rank() == root {
-        let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-        out[root] = data.to_vec();
-        for _ in 0..n - 1 {
-            let m = comm.recv(Src::Any, Tag::Tag(tag))?;
-            out[m.src] = m.data.to_vec();
-        }
-        Ok(Some(out))
-    } else {
-        comm.send(root, tag, data)?;
-        Ok(None)
-    }
+    algo::gather(&Plain(comm), tag, root, data)
 }
 
-/// Ring allgather: n-1 steps, each forwarding the block received last step.
+/// Allgather. Small blocks run Bruck doubling (⌈log₂ n⌉ rounds of
+/// aggregated blocks); large blocks run the neighbour ring
+/// ((n−1) · (α + βm)). All ranks must pass equal byte counts (the
+/// `MPI_Allgather` contract) — selection keys on the local block size.
 pub fn allgather(comm: &Comm, data: &[u8]) -> Result<Vec<Vec<u8>>, CommError> {
-    let n = comm.size();
-    let me = comm.rank();
     let tag = comm.coll_tag(OP_ALLGATHER);
-    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-    out[me] = data.to_vec();
-    if n == 1 {
-        return Ok(out);
-    }
-    let right = (me + 1) % n;
-    let left = (me + n - 1) % n;
-    let mut cur = me;
-    for _ in 0..n - 1 {
-        comm.send(right, tag, &out[cur])?;
-        let m = comm.recv(Src::Rank(left), Tag::Tag(tag))?;
-        cur = (cur + n - 1) % n;
-        debug_assert!(out[cur].is_empty());
-        out[cur] = m.data.to_vec();
-    }
-    Ok(out)
+    algo::allgather(&Plain(comm), tag, data)
 }
 
-/// Linear scatter from `root`: `blocks[r]` goes to rank `r`.
+/// Scatter from `root`: `blocks[r]` goes to rank `r`. Small blocks run
+/// the binomial tree (each hop ships a packed subtree); large blocks go
+/// linear from the root. Under auto selection the total payload is
+/// broadcast as the selection key, so only the root needs to know the
+/// sizes; a pinned `coll.scatter` override skips that header.
 pub fn scatter(
     comm: &Comm,
     root: usize,
     blocks: Option<&[Vec<u8>]>,
 ) -> Result<Vec<u8>, CommError> {
-    let n = comm.size();
     let tag = comm.coll_tag(OP_SCATTER);
-    if comm.rank() == root {
-        let blocks = blocks.expect("root must supply blocks");
-        assert_eq!(blocks.len(), n, "scatter needs one block per rank");
-        for (r, b) in blocks.iter().enumerate() {
-            if r != root {
-                comm.send(r, tag, b)?;
-            }
-        }
-        Ok(blocks[root].clone())
-    } else {
-        let m = comm.recv(Src::Rank(root), Tag::Tag(tag))?;
-        Ok(m.data.to_vec())
-    }
+    algo::scatter(&Plain(comm), tag, root, blocks)
 }
 
-/// Pairwise-exchange alltoall: step `i` sends to `me+i`, receives from
-/// `me-i` — the classic contention-avoiding schedule.
+/// Alltoall. Small blocks run Bruck (⌈log₂ n⌉ messages of ~n/2 re-packed
+/// blocks); large blocks run the pairwise exchange (step `i` sends to
+/// `me+i`, receives from `me-i`). Selection keys on the uniform block
+/// size (the `MPI_Alltoall` scalar count); a locally non-uniform row
+/// auto-selects the size-agnostic pairwise schedule instead.
 pub fn alltoall(comm: &Comm, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, CommError> {
-    let n = comm.size();
-    assert_eq!(blocks.len(), n, "alltoall needs one block per rank");
-    let me = comm.rank();
     let tag = comm.coll_tag(OP_ALLTOALL);
-    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-    out[me] = blocks[me].clone();
-    for i in 1..n {
-        let to = (me + i) % n;
-        let from = (me + n - i) % n;
-        comm.send(to, tag, &blocks[to])?;
-        let m = comm.recv(Src::Rank(from), Tag::Tag(tag))?;
-        out[from] = m.data.to_vec();
-    }
-    Ok(out)
+    algo::alltoall(&Plain(comm), tag, blocks)
 }
 
 /// Blocking pairwise alltoallv. The *blocking* schedule waits for each
 /// round's partner in order — under skew this serialises on the slowest
 /// partner, which is exactly why the paper's nonblocking variant
-/// ([`super::nbc::IAlltoallv`]) beat MVAPICH2's blocking call on IS (§VII-A).
+/// ([`super::nbc::IAlltoallv`]) beat MVAPICH2's blocking call on IS
+/// (§VII-A). Always pairwise: per-destination counts admit no
+/// rank-invariant selection key.
 pub fn alltoallv(comm: &Comm, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, CommError> {
-    // Same wire schedule as alltoall; counts may differ per destination.
-    let n = comm.size();
-    assert_eq!(blocks.len(), n);
-    let me = comm.rank();
     let tag = comm.coll_tag(OP_ALLTOALLV);
-    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-    out[me] = blocks[me].clone();
-    for i in 1..n {
-        let to = (me + i) % n;
-        let from = (me + n - i) % n;
-        comm.send(to, tag, &blocks[to])?;
-        let m = comm.recv(Src::Rank(from), Tag::Tag(tag))?;
-        out[from] = m.data.to_vec();
-    }
-    Ok(out)
+    algo::alltoallv(&Plain(comm), tag, blocks)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::empi::tests::run_ranks;
+    use crate::empi::tests::{run_ranks, run_ranks_tuned};
+    use crate::fabric::{
+        AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, RootedAlg,
+    };
     use crate::util::{f64s_from_bytes, f64s_to_bytes, u64s_from_bytes, u64s_to_bytes};
 
     #[test]
@@ -341,6 +213,34 @@ mod tests {
     }
 
     #[test]
+    fn bcast_chain_from_every_root() {
+        // Forced chain algorithm, segment smaller than the payload, from
+        // every root, including non-power-of-two sizes.
+        let tuning = CollTuning {
+            bcast: Some(BcastAlg::Chain),
+            bcast_segment: 3,
+            ..Default::default()
+        };
+        for n in [2usize, 3, 5, 8] {
+            for root in 0..n {
+                let out = run_ranks_tuned(n, tuning, move |r, comm| {
+                    let mut data = if r == root {
+                        b"segmented-payload".to_vec()
+                    } else {
+                        vec![0xFF; 3] // wrong-sized junk must be replaced
+                    };
+                    bcast(&comm, root, &mut data).unwrap();
+                    data
+                });
+                assert!(
+                    out.iter().all(|d| d == b"segmented-payload"),
+                    "n={n} root={root}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn reduce_sum_every_root() {
         for n in [1usize, 2, 3, 6, 8] {
             for root in 0..n {
@@ -380,6 +280,32 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_ring_matches_rdouble() {
+        // Forced ring algorithm across awkward sizes: fewer elements than
+        // ranks, more elements than ranks, non-multiples of n.
+        let tuning = CollTuning {
+            allreduce: Some(AllreduceAlg::Ring),
+            ..Default::default()
+        };
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            for elems in [1usize, 2, 7, 40] {
+                let out = run_ranks_tuned(n, tuning, move |r, comm| {
+                    let vals: Vec<u64> = (0..elems).map(|j| (r + j) as u64).collect();
+                    let s = allreduce(&comm, DType::U64, ReduceOp::Sum, &u64s_to_bytes(&vals))
+                        .unwrap();
+                    u64s_from_bytes(&s)
+                });
+                let rank_sum = (n * (n - 1) / 2) as u64;
+                for per_rank in &out {
+                    for (j, &v) in per_rank.iter().enumerate() {
+                        assert_eq!(v, rank_sum + (n * j) as u64, "n={n} elems={elems} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn gather_collects_in_rank_order() {
         let out = run_ranks(5, |r, comm| {
             gather(&comm, 2, &[r as u8, (r * r) as u8]).unwrap()
@@ -391,12 +317,54 @@ mod tests {
     }
 
     #[test]
+    fn gather_binomial_every_root_variable_sizes() {
+        let tuning = CollTuning {
+            gather: Some(RootedAlg::Binomial),
+            ..Default::default()
+        };
+        for n in [2usize, 3, 6, 9] {
+            for root in 0..n {
+                let out = run_ranks_tuned(n, tuning, move |r, comm| {
+                    gather(&comm, root, &vec![r as u8; r + 1]).unwrap()
+                });
+                for (r, o) in out.iter().enumerate() {
+                    if r == root {
+                        let bs = o.as_ref().unwrap();
+                        for (s, b) in bs.iter().enumerate() {
+                            assert_eq!(b, &vec![s as u8; s + 1], "n={n} root={root}");
+                        }
+                    } else {
+                        assert!(o.is_none());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn allgather_ring() {
         for n in [1usize, 2, 4, 7] {
             let out = run_ranks(n, |r, comm| allgather(&comm, &[r as u8]).unwrap());
             for per_rank in &out {
                 for (r, b) in per_rank.iter().enumerate() {
                     assert_eq!(b, &vec![r as u8], "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_bruck_matches_ring() {
+        let tuning = CollTuning {
+            allgather: Some(AllgatherAlg::Bruck),
+            ..Default::default()
+        };
+        for n in [1usize, 2, 3, 5, 8, 11, 16] {
+            let out =
+                run_ranks_tuned(n, tuning, |r, comm| allgather(&comm, &[r as u8, 0xAA]).unwrap());
+            for per_rank in &out {
+                for (r, b) in per_rank.iter().enumerate() {
+                    assert_eq!(b, &vec![r as u8, 0xAA], "n={n}");
                 }
             }
         }
@@ -415,6 +383,26 @@ mod tests {
     }
 
     #[test]
+    fn scatter_binomial_every_root_variable_sizes() {
+        let tuning = CollTuning {
+            scatter: Some(RootedAlg::Binomial),
+            ..Default::default()
+        };
+        for n in [2usize, 3, 5, 8, 9] {
+            for root in 0..n {
+                let out = run_ranks_tuned(n, tuning, move |r, comm| {
+                    let blocks: Option<Vec<Vec<u8>>> =
+                        (r == root).then(|| (0..n).map(|i| vec![i as u8; i + 2]).collect());
+                    scatter(&comm, root, blocks.as_deref()).unwrap()
+                });
+                for (r, b) in out.iter().enumerate() {
+                    assert_eq!(b, &vec![r as u8; r + 2], "n={n} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn alltoall_transpose() {
         let n = 5usize;
         let out = run_ranks(n, move |r, comm| {
@@ -424,6 +412,25 @@ mod tests {
         for (r, per_rank) in out.iter().enumerate() {
             for (s, b) in per_rank.iter().enumerate() {
                 assert_eq!(b, &vec![s as u8, r as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_bruck_transpose() {
+        let tuning = CollTuning {
+            alltoall: Some(AlltoallAlg::Bruck),
+            ..Default::default()
+        };
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let out = run_ranks_tuned(n, tuning, move |r, comm| {
+                let blocks: Vec<Vec<u8>> = (0..n).map(|d| vec![r as u8, d as u8]).collect();
+                alltoall(&comm, &blocks).unwrap()
+            });
+            for (r, per_rank) in out.iter().enumerate() {
+                for (s, b) in per_rank.iter().enumerate() {
+                    assert_eq!(b, &vec![s as u8, r as u8], "n={n}");
+                }
             }
         }
     }
@@ -466,5 +473,76 @@ mod tests {
                 assert_eq!(v, 4 * round as u64 + 6);
             }
         }
+    }
+
+    #[test]
+    fn back_to_back_mixed_algorithms_do_not_cross() {
+        // Alternating forced-large and forced-small algorithms on the same
+        // comm: the one-tag-per-collective contract must keep rounds apart.
+        let ring = CollTuning {
+            allreduce: Some(AllreduceAlg::Ring),
+            allgather: Some(AllgatherAlg::Bruck),
+            ..Default::default()
+        };
+        let out = run_ranks_tuned(5, ring, |r, comm| {
+            let mut results = Vec::new();
+            for round in 0..6u64 {
+                let s = allreduce(
+                    &comm,
+                    DType::U64,
+                    ReduceOp::Sum,
+                    &u64s_to_bytes(&[round + r as u64]),
+                )
+                .unwrap();
+                let ag = allgather(&comm, &[r as u8]).unwrap();
+                results.push((u64s_from_bytes(&s)[0], ag.len()));
+            }
+            results
+        });
+        for per_rank in &out {
+            for (round, &(v, agl)) in per_rank.iter().enumerate() {
+                assert_eq!(v, 5 * round as u64 + 10);
+                assert_eq!(agl, 5);
+            }
+        }
+    }
+
+    #[test]
+    fn selection_counters_record_choices() {
+        let tuning = CollTuning {
+            allreduce: Some(AllreduceAlg::Ring),
+            ..Default::default()
+        };
+        let procs = crate::fabric::ProcSet::new(3);
+        let fabric = crate::fabric::Fabric::new_tuned(
+            "sel-test",
+            procs,
+            crate::fabric::NetModel::instant(),
+            tuning,
+        );
+        let ctx = fabric.alloc_ctx();
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let fabric = fabric.clone();
+                std::thread::spawn(move || {
+                    let comm = Comm::world(fabric, ctx, r);
+                    allreduce(&comm, DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[1])).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            fabric.metrics.selects.get(crate::fabric::SEL_ALLREDUCE_RING),
+            3
+        );
+        assert_eq!(
+            fabric
+                .metrics
+                .selects
+                .get(crate::fabric::SEL_ALLREDUCE_RDOUBLE),
+            0
+        );
     }
 }

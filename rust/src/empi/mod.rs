@@ -12,8 +12,13 @@
 //!   tuned collectives in [`coll`].
 //! * [`InterComm`] — intercommunicator between disjoint groups (used by
 //!   PartRePer for computational↔replica traffic).
+//! * [`algo`] — the collective algorithm engine: every algorithm written
+//!   once over a transport trait, selected per (comm size, payload bytes)
+//!   from the fabric's `NetModel` cost estimates, shared with the guarded
+//!   PartRePer collectives.
 //! * [`reduce`] — dtype/op combine kernels shared with the OMPI layer.
 
+pub mod algo;
 pub mod coll;
 pub mod nbc;
 pub mod reduce;
@@ -276,8 +281,17 @@ impl Comm {
     // ------------------------------------------------------- comm surgery
 
     /// Internal: next collective round tag. Negative tags are reserved for
-    /// collectives; `op` spaces algorithms apart, the sequence number spaces
-    /// successive collectives on the same comm.
+    /// collectives; `op` spaces collective kinds apart, the sequence number
+    /// spaces successive collectives on the same comm.
+    ///
+    /// This is the wire contract PartRePer's collective replay (§VI-B)
+    /// depends on: each collective call consumes exactly one tag — the
+    /// size-agreement header and every phase of a multi-phase algorithm
+    /// share it, relying on the fabric's per-(src, tag) FIFO — and the
+    /// algorithm under the tag is a pure function of (comm size, payload
+    /// bytes). A lagging incarnation re-executing the same call sequence
+    /// on a rebuilt comm therefore reproduces the survivors' exact tag and
+    /// message schedule.
     pub(crate) fn coll_tag(&self, op: i64) -> i64 {
         let seq = self.coll_seq.get();
         self.coll_seq.set(seq + 1);
@@ -494,8 +508,18 @@ mod tests {
         n: usize,
         f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
     ) -> Vec<T> {
+        run_ranks_tuned(n, crate::fabric::CollTuning::default(), f)
+    }
+
+    /// `run_ranks` over a fabric with explicit collective-engine
+    /// overrides (forces specific algorithms in the collective tests).
+    pub(crate) fn run_ranks_tuned<T: Send + 'static>(
+        n: usize,
+        coll: crate::fabric::CollTuning,
+        f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
         let procs = ProcSet::new(n);
-        let fabric = Fabric::new("empi-test", procs, NetModel::instant());
+        let fabric = Fabric::new_tuned("empi-test", procs, NetModel::instant(), coll);
         let ctx = fabric.alloc_ctx();
         let f = Arc::new(f);
         let handles: Vec<_> = (0..n)

@@ -12,6 +12,14 @@ use crate::error::CommError;
 ///
 /// All sends go out eagerly at creation; `test()` then drains whichever
 /// incoming blocks have arrived, in any order.
+///
+/// Wire/tag contract: one collective round tag, sends issued in pairwise
+/// order (`me+1, me+2, …`), one receive posted per source — a fixed
+/// schedule with no payload-keyed algorithm selection, so a lagging
+/// incarnation re-running the call during PartRePer recovery reproduces
+/// it exactly. Deliberately *not* routed through the tuned engine: the
+/// whole point of this call is accepting blocks in arrival order under
+/// skew (§VII-A), which any fixed exchange schedule would forfeit.
 pub struct IAlltoallv {
     reqs: Vec<Option<RecvReq>>,
     out: Vec<Option<Vec<u8>>>,

@@ -5,6 +5,15 @@
 //! tuned EMPI collectives and the generic OMPI ones.
 
 /// Element type of a reduction buffer.
+///
+/// The element width also bounds how reduction payloads may be split: the
+/// ring allreduce chunks buffers at element boundaries only, so any
+/// payload whose length is a multiple of [`DType::width`] reduces
+/// bit-identically under every algorithm the tuned engine can select
+/// (floating-point caveat: different algorithms fold in different
+/// association orders, so `Sum`/`Prod` over values where rounding occurs
+/// may differ in the last ulp — exactly as `MPI_Allreduce` behaves across
+/// real MPI algorithm switches).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
     F64,
@@ -23,6 +32,11 @@ impl DType {
 }
 
 /// Reduction operator (MPI_SUM / MPI_MIN / MPI_MAX / MPI_PROD).
+///
+/// All four are associative and commutative, which is what licenses the
+/// tuned engine to pick any combining order (tree, recursive doubling,
+/// ring reduce-scatter) per (comm size, payload bytes) without changing
+/// exact-arithmetic results.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReduceOp {
     Sum,

@@ -39,7 +39,10 @@ pub mod netmodel;
 pub mod procset;
 
 pub use envelope::{BucketKey, Envelope, MatchSpec};
-pub use netmodel::NetModel;
+pub use netmodel::{
+    ceil_log2, AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, NetModel,
+    RootedAlg,
+};
 pub use procset::{ProcSet, ProcState};
 
 use std::collections::{HashMap, VecDeque};
@@ -299,6 +302,68 @@ impl Mailbox {
     }
 }
 
+/// One counter slot per (collective, algorithm) pair the tuned engine can
+/// pick. Indexed by the `SEL_*` constants; labels in [`COLL_SELECT_LABELS`].
+pub const NSEL: usize = 12;
+
+/// Labels for [`CollSelects`] slots, `"<collective>.<algorithm>"`.
+pub const COLL_SELECT_LABELS: [&str; NSEL] = [
+    "allreduce.rdouble",
+    "allreduce.ring",
+    "bcast.binomial",
+    "bcast.chain",
+    "allgather.ring",
+    "allgather.bruck",
+    "alltoall.pairwise",
+    "alltoall.bruck",
+    "gather.linear",
+    "gather.binomial",
+    "scatter.linear",
+    "scatter.binomial",
+];
+
+pub const SEL_ALLREDUCE_RDOUBLE: usize = 0;
+pub const SEL_ALLREDUCE_RING: usize = 1;
+pub const SEL_BCAST_BINOMIAL: usize = 2;
+pub const SEL_BCAST_CHAIN: usize = 3;
+pub const SEL_ALLGATHER_RING: usize = 4;
+pub const SEL_ALLGATHER_BRUCK: usize = 5;
+pub const SEL_ALLTOALL_PAIRWISE: usize = 6;
+pub const SEL_ALLTOALL_BRUCK: usize = 7;
+pub const SEL_GATHER_LINEAR: usize = 8;
+pub const SEL_GATHER_BINOMIAL: usize = 9;
+pub const SEL_SCATTER_LINEAR: usize = 10;
+pub const SEL_SCATTER_BINOMIAL: usize = 11;
+
+/// Per-fabric tally of which collective algorithm the tuned engine picked,
+/// bumped once per rank per collective call. Surfaces the decision table's
+/// behaviour in the run summary (and lets tests pin down which schedule
+/// actually ran).
+#[derive(Default)]
+pub struct CollSelects {
+    counts: [AtomicU64; NSEL],
+}
+
+impl CollSelects {
+    #[inline]
+    pub fn bump(&self, slot: usize) {
+        self.counts[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, slot: usize) -> u64 {
+        self.counts[slot].load(Ordering::Relaxed)
+    }
+
+    /// `(label, count)` for every slot, in slot order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        COLL_SELECT_LABELS
+            .iter()
+            .zip(&self.counts)
+            .map(|(&l, c)| (l, c.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
 /// Aggregate traffic counters for one fabric (used by the harness and the
 /// §Perf accounting).
 #[derive(Default)]
@@ -308,6 +373,8 @@ pub struct FabricMetrics {
     /// Virtual wire time in nanoseconds according to the [`NetModel`];
     /// accumulated even when no real delay is injected.
     pub virtual_ns: AtomicU64,
+    /// Collective algorithm selections made by the tuned engine.
+    pub selects: CollSelects,
 }
 
 impl FabricMetrics {
@@ -320,11 +387,17 @@ impl FabricMetrics {
     }
 }
 
-/// The interconnect: `n` mailboxes + shared process liveness + cost model.
+/// The interconnect: `n` mailboxes + shared process liveness + cost model
+/// + the collective tuning surface every communicator on the fabric reads.
 pub struct Fabric {
     boxes: Vec<Mailbox>,
     pub procs: Arc<ProcSet>,
     pub model: NetModel,
+    /// Collective-engine overrides (`coll.*` config keys); `CollTuning`
+    /// defaults derive everything from `model`. Immutable after creation
+    /// so algorithm selection is a pure function of (comm size, payload) —
+    /// the property PartRePer's collective replay depends on.
+    pub coll: CollTuning,
     pub metrics: FabricMetrics,
     next_ctx: AtomicU64,
     /// Human label ("empi" / "ompi") for diagnostics.
@@ -336,11 +409,23 @@ const POLL_TICK: Duration = Duration::from_micros(200);
 
 impl Fabric {
     pub fn new(label: &'static str, procs: Arc<ProcSet>, model: NetModel) -> Arc<Self> {
+        Self::new_tuned(label, procs, model, CollTuning::default())
+    }
+
+    /// Build a fabric with explicit collective-engine overrides (the
+    /// launcher passes `JobConfig.coll` here).
+    pub fn new_tuned(
+        label: &'static str,
+        procs: Arc<ProcSet>,
+        model: NetModel,
+        coll: CollTuning,
+    ) -> Arc<Self> {
         let n = procs.len();
         Arc::new(Self {
             boxes: (0..n).map(|_| Mailbox::new()).collect(),
             procs,
             model,
+            coll,
             metrics: FabricMetrics::default(),
             next_ctx: AtomicU64::new(1),
             label,
@@ -373,12 +458,20 @@ impl Fabric {
         let nbytes = env.data.len() as u64;
         self.metrics.messages.fetch_add(1, Ordering::Relaxed);
         self.metrics.bytes.fetch_add(nbytes, Ordering::Relaxed);
-        let cost = self.model.wire_ns(nbytes as usize, self.boxes.len());
+        // Placement-aware cost: adjacent ranks move bytes at full rate,
+        // everything else pays the inter-node penalty.
+        let cost = self
+            .model
+            .wire_ns_between(nbytes as usize, self.boxes.len(), env.src, env.dst);
         self.metrics.virtual_ns.fetch_add(cost, Ordering::Relaxed);
-        self.model.inject_delay(cost);
 
         let mb = &self.boxes[env.dst];
         let mut guard = mb.inner.lock().unwrap();
+        // Injected wire time is spent while holding the destination
+        // mailbox: concurrent senders to one rank serialize, modelling the
+        // receive-side NIC — the effect that makes linear (root-ingest)
+        // collectives lose to trees at scale on real fabrics.
+        self.model.inject_delay(cost);
         let inner = &mut *guard;
         inner.arrivals += 1;
         let seq = inner.unexpected.alloc_seq();

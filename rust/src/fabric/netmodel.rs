@@ -1,4 +1,4 @@
-//! Interconnect cost model.
+//! Interconnect cost model and the platform collective-tuning surface.
 //!
 //! The paper's testbed is an Infiniband cluster whose *native* MPI
 //! (MVAPICH2) is heavily tuned, while the fault-tolerance library
@@ -16,6 +16,18 @@
 //! round-trip (two extra latencies) before the data moves — the classic
 //! MVAPICH2/Open MPI protocol switch, with the native library switching at
 //! a much larger size than the generic one.
+//!
+//! Two further platform parameters feed the tuned collective engine
+//! (`empi::algo`): **placement bandwidth asymmetry** (adjacent ranks model
+//! on-node/nearest-neighbour placement and move bytes at full rate; any
+//! other pair pays [`NetModel::remote_bw_factor`] on the byte term — the
+//! intra- vs inter-node split every real cluster has) and a **copy rate**
+//! ([`NetModel::ns_per_byte_copy`]) charged by algorithms that pack or
+//! relay blocks through intermediate ranks. Together with latency,
+//! bandwidth and the rendezvous threshold they determine the
+//! per-algorithm cost estimates below, from which the engine derives its
+//! (comm size, payload bytes) decision table — the same way MVAPICH2's
+//! platform tables encode measured crossovers.
 
 /// Cost parameters for one fabric personality.
 #[derive(Clone, Copy, Debug)]
@@ -33,12 +45,26 @@ pub struct NetModel {
     /// an RTS/CTS handshake (2× latency) precedes the data. `usize::MAX`
     /// disables rendezvous (everything eager).
     pub rndv_threshold: usize,
+    /// Bandwidth penalty on the byte term for non-adjacent rank pairs
+    /// (cyclic rank distance > 1): nearest neighbours model on-node or
+    /// adjacent placement at full rate, everything else crosses the
+    /// inter-node fabric. Ring/chain collectives talk only to neighbours,
+    /// which is exactly why tuned libraries prefer them at scale.
+    pub remote_bw_factor: f64,
+    /// Memory copy rate (ns per byte) charged by the cost estimates for
+    /// every byte an algorithm packs/unpacks or relays through an
+    /// intermediate rank (store-and-forward traffic). Far cheaper than the
+    /// wire, but it is what bounds Bruck-style block aggregation at large
+    /// payloads.
+    pub ns_per_byte_copy: f64,
     /// If true, `wire_ns` is also spun off as real delay.
     pub inject: bool,
 }
 
 impl NetModel {
-    /// Zero-cost model for unit tests.
+    /// Zero-cost model for unit tests. All collective cost estimates tie,
+    /// and ties select each collective's classic small-message algorithm,
+    /// so tests on this model exercise the historical wire schedules.
     pub fn instant() -> Self {
         Self {
             latency_ns: 0,
@@ -46,12 +72,15 @@ impl NetModel {
             congestion_procs: usize::MAX,
             congestion_factor: 1.0,
             rndv_threshold: usize::MAX,
+            remote_bw_factor: 1.0,
+            ns_per_byte_copy: 0.0,
             inject: false,
         }
     }
 
     /// MVAPICH2-like tuned native fabric: ~1.5 µs latency, ~10 GB/s,
-    /// large eager window (64 KiB) before rendezvous kicks in.
+    /// large eager window (64 KiB) before rendezvous kicks in, moderate
+    /// inter-node bandwidth penalty, fast (~50 GB/s) packing copies.
     pub fn empi_tuned() -> Self {
         Self {
             latency_ns: 1_500,
@@ -59,13 +88,15 @@ impl NetModel {
             congestion_procs: 512,
             congestion_factor: 2.5,
             rndv_threshold: 64 * 1024,
+            remote_bw_factor: 1.5,
+            ns_per_byte_copy: 0.02,
             inject: false,
         }
     }
 
-    /// Open MPI + ULFM generic path: higher latency, lower bandwidth, and
-    /// an early rendezvous switch (4 KiB) — the gap the paper exploits by
-    /// keeping bulk data off this library.
+    /// Open MPI + ULFM generic path: higher latency, lower bandwidth, an
+    /// early rendezvous switch (4 KiB), and a steeper inter-node penalty —
+    /// the gap the paper exploits by keeping bulk data off this library.
     pub fn ompi_generic() -> Self {
         Self {
             latency_ns: 6_000,
@@ -73,6 +104,8 @@ impl NetModel {
             congestion_procs: 512,
             congestion_factor: 2.5,
             rndv_threshold: 4 * 1024,
+            remote_bw_factor: 1.8,
+            ns_per_byte_copy: 0.05,
             inject: false,
         }
     }
@@ -93,20 +126,57 @@ impl NetModel {
         self
     }
 
-    /// Wire time for one message of `nbytes` on a job of `nprocs`.
+    /// Wire time for one message of `nbytes` on a job of `nprocs`,
+    /// placement-agnostic (assumes the full-rate local path). Kept for
+    /// callers that have no rank pair; the fabric itself charges
+    /// [`NetModel::wire_ns_between`].
     #[inline]
     pub fn wire_ns(&self, nbytes: usize, nprocs: usize) -> u64 {
-        let mut base = self.latency_ns as f64 + self.ns_per_byte * nbytes as f64;
+        self.cost_ns(nbytes, nprocs, false) as u64
+    }
+
+    /// Wire time for one message between two fabric ranks: adjacent ranks
+    /// (cyclic distance ≤ 1) move bytes at full rate, any other pair pays
+    /// `remote_bw_factor` on the byte term.
+    #[inline]
+    pub fn wire_ns_between(
+        &self,
+        nbytes: usize,
+        nprocs: usize,
+        src: usize,
+        dst: usize,
+    ) -> u64 {
+        let far = !Self::adjacent(src, dst, nprocs);
+        self.cost_ns(nbytes, nprocs, far) as u64
+    }
+
+    /// Are two fabric ranks placement-adjacent (cyclic distance ≤ 1)?
+    #[inline]
+    pub fn adjacent(a: usize, b: usize, nprocs: usize) -> bool {
+        if nprocs <= 2 {
+            return true;
+        }
+        let d = a.abs_diff(b);
+        d <= 1 || d == nprocs - 1
+    }
+
+    #[inline]
+    fn cost_ns(&self, nbytes: usize, nprocs: usize, far: bool) -> f64 {
+        let bw = if far {
+            self.ns_per_byte * self.remote_bw_factor
+        } else {
+            self.ns_per_byte
+        };
+        let mut base = self.latency_ns as f64 + bw * nbytes as f64;
         if nbytes >= self.rndv_threshold {
             // RTS/CTS handshake round-trip before the payload moves.
             base += 2.0 * self.latency_ns as f64;
         }
-        let cost = if nprocs >= self.congestion_procs {
+        if nprocs >= self.congestion_procs {
             base * self.congestion_factor
         } else {
             base
-        };
-        cost as u64
+        }
     }
 
     /// Busy-wait for `ns` if injection is enabled. Busy-wait (not sleep):
@@ -120,6 +190,312 @@ impl NetModel {
         let target = std::time::Duration::from_nanos(ns);
         while start.elapsed() < target {
             std::hint::spin_loop();
+        }
+    }
+
+    // ------------------------------------------- collective cost estimates
+    //
+    // Critical-path estimates for each collective algorithm, in ns, over a
+    // communicator of `n` ranks. `m` is the per-rank payload in bytes (for
+    // alltoall: bytes per destination block). The estimates deliberately
+    // model a *real* interconnect — a root NIC ingests messages serially,
+    // store-and-forward relays pay the copy rate — because that is what a
+    // platform tuning table encodes. The selection functions below are
+    // pure in (model, tuning, n, m): every rank of a communicator computes
+    // the same choice without communication, which is what keeps replayed
+    // collectives on the exact tag/wire schedule of the original run (the
+    // PartRePer §VI-B invariant).
+
+    /// One collective hop: a message of `m` bytes, neighbour (`far=false`)
+    /// or cross-fabric (`far=true`).
+    #[inline]
+    fn hop(&self, m: usize, n: usize, far: bool) -> f64 {
+        self.cost_ns(m, n, far)
+    }
+
+    /// The auto-selection size-agreement header the rooted collectives
+    /// (bcast/gather/scatter) prepend: one binomial round of 8-byte hops.
+    /// Common to both algorithms of each family (it cancels in the
+    /// argmin), but part of the honest critical path.
+    fn rooted_header_ns(&self, n: usize) -> f64 {
+        ceil_log2(n) as f64 * self.hop(8, n, true)
+    }
+
+    /// Binomial-tree bcast: the size-agreement header plus ⌈log₂ n⌉
+    /// rounds of the full payload, generally to non-adjacent partners.
+    pub fn bcast_binomial_ns(&self, n: usize, m: usize) -> f64 {
+        self.rooted_header_ns(n) + ceil_log2(n) as f64 * self.hop(m, n, true)
+    }
+
+    /// Segmented chain (pipelined) bcast: the size-agreement header, then
+    /// the payload streams along the rank ring in `⌈m/seg⌉` segments;
+    /// pipeline depth is `n - 2 + nseg` neighbour hops of one segment
+    /// each.
+    pub fn bcast_chain_ns(&self, n: usize, m: usize, seg: usize) -> f64 {
+        let seg = seg.max(1).min(m.max(1));
+        let nseg = m.div_ceil(seg).max(1);
+        self.rooted_header_ns(n)
+            + (n.saturating_sub(2) + nseg) as f64 * self.hop(seg.min(m.max(1)), n, false)
+    }
+
+    /// Recursive-doubling allreduce: ⌈log₂ n⌉ full-payload exchange rounds
+    /// plus two extra rounds of non-power-of-two fold-in.
+    pub fn allreduce_rdouble_ns(&self, n: usize, m: usize) -> f64 {
+        let extra = if n.is_power_of_two() { 0 } else { 2 };
+        (ceil_log2(n) + extra) as f64 * self.hop(m, n, true)
+    }
+
+    /// Ring (reduce-scatter + allgather) allreduce: 2(n−1) neighbour hops
+    /// of one ~m/n chunk each — bandwidth-optimal and placement-local.
+    pub fn allreduce_ring_ns(&self, n: usize, m: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (2 * (n - 1)) as f64 * self.hop(m.div_ceil(n), n, false)
+    }
+
+    /// Ring allgather: n−1 neighbour hops of one block each.
+    pub fn allgather_ring_ns(&self, n: usize, m: usize) -> f64 {
+        n.saturating_sub(1) as f64 * self.hop(m, n, false)
+    }
+
+    /// Bruck allgather: ⌈log₂ n⌉ rounds of doubling aggregated blocks to
+    /// distance-2ᵏ partners, plus pack/unpack copies of everything
+    /// aggregated.
+    pub fn allgather_bruck_ns(&self, n: usize, m: usize) -> f64 {
+        let mut total = 0.0;
+        let mut cnt = 1usize;
+        while cnt < n {
+            let s = cnt.min(n - cnt);
+            total += self.hop(s * m, n, true) + self.copy_ns(2 * s * m);
+            cnt += s;
+        }
+        total
+    }
+
+    /// Pairwise-exchange alltoall: n−1 rounds of one block to partners at
+    /// every distance.
+    pub fn alltoall_pairwise_ns(&self, n: usize, m: usize) -> f64 {
+        n.saturating_sub(1) as f64 * self.hop(m, n, true)
+    }
+
+    /// Bruck alltoall: ⌈log₂ n⌉ rounds, each shipping (and re-packing)
+    /// roughly n/2 blocks — fewer latencies, ~log₂(n)/2× the bytes.
+    pub fn alltoall_bruck_ns(&self, n: usize, m: usize) -> f64 {
+        let mut total = 0.0;
+        let mut k = 1usize;
+        while k < n {
+            let blocks = (0..n).filter(|i| i & k != 0).count();
+            total += self.hop(blocks * m, n, true) + self.copy_ns(2 * blocks * m);
+            k <<= 1;
+        }
+        total
+    }
+
+    /// Linear gather: the size-agreement header, then the root NIC
+    /// ingests n−1 blocks serially.
+    pub fn gather_linear_ns(&self, n: usize, m: usize) -> f64 {
+        self.rooted_header_ns(n) + n.saturating_sub(1) as f64 * self.hop(m, n, true)
+    }
+
+    /// Binomial-tree gather: the size-agreement header, then the deepest
+    /// merge chain receives 1,2,4,… blocks per round, packing each
+    /// aggregate before forwarding it.
+    pub fn gather_binomial_ns(&self, n: usize, m: usize) -> f64 {
+        let mut total = self.rooted_header_ns(n);
+        let mut sz = 1usize;
+        while sz < n {
+            total += self.hop(sz * m, n, true) + self.copy_ns(2 * sz * m);
+            sz <<= 1;
+        }
+        total
+    }
+
+    /// Linear scatter: the root emits n−1 blocks serially.
+    pub fn scatter_linear_ns(&self, n: usize, m: usize) -> f64 {
+        self.gather_linear_ns(n, m)
+    }
+
+    /// Binomial-tree scatter: mirror of the binomial gather chain.
+    pub fn scatter_binomial_ns(&self, n: usize, m: usize) -> f64 {
+        self.gather_binomial_ns(n, m)
+    }
+
+    #[inline]
+    fn copy_ns(&self, bytes: usize) -> f64 {
+        self.ns_per_byte_copy * bytes as f64
+    }
+
+    // ------------------------------------------------- algorithm selection
+    //
+    // Argmin over the estimates above, with `CollTuning` overrides taking
+    // precedence. Ties (e.g. the zero-cost `instant` model) select the
+    // classic small-message algorithm, so unit tests keep their historical
+    // wire schedules.
+
+    /// Pick the allreduce algorithm for (comm size, payload bytes).
+    pub fn select_allreduce(&self, t: &CollTuning, n: usize, m: usize) -> AllreduceAlg {
+        if let Some(a) = t.allreduce {
+            return a;
+        }
+        if n > 2 && self.allreduce_ring_ns(n, m) < self.allreduce_rdouble_ns(n, m) {
+            AllreduceAlg::Ring
+        } else {
+            AllreduceAlg::RecursiveDoubling
+        }
+    }
+
+    /// Pick the bcast algorithm for (comm size, payload bytes).
+    pub fn select_bcast(&self, t: &CollTuning, n: usize, m: usize) -> BcastAlg {
+        if let Some(a) = t.bcast {
+            return a;
+        }
+        if n > 2 && self.bcast_chain_ns(n, m, t.bcast_segment) < self.bcast_binomial_ns(n, m) {
+            BcastAlg::Chain
+        } else {
+            BcastAlg::Binomial
+        }
+    }
+
+    /// Pick the allgather algorithm for (comm size, per-rank block bytes).
+    pub fn select_allgather(&self, t: &CollTuning, n: usize, m: usize) -> AllgatherAlg {
+        if let Some(a) = t.allgather {
+            return a;
+        }
+        if self.allgather_bruck_ns(n, m) < self.allgather_ring_ns(n, m) {
+            AllgatherAlg::Bruck
+        } else {
+            AllgatherAlg::Ring
+        }
+    }
+
+    /// Pick the alltoall algorithm for (comm size, per-destination block
+    /// bytes).
+    pub fn select_alltoall(&self, t: &CollTuning, n: usize, m: usize) -> AlltoallAlg {
+        if let Some(a) = t.alltoall {
+            return a;
+        }
+        if self.alltoall_bruck_ns(n, m) < self.alltoall_pairwise_ns(n, m) {
+            AlltoallAlg::Bruck
+        } else {
+            AlltoallAlg::Pairwise
+        }
+    }
+
+    /// Pick the gather algorithm for (comm size, root-block bytes).
+    pub fn select_gather(&self, t: &CollTuning, n: usize, m: usize) -> RootedAlg {
+        if let Some(a) = t.gather {
+            return a;
+        }
+        if self.gather_binomial_ns(n, m) < self.gather_linear_ns(n, m) {
+            RootedAlg::Binomial
+        } else {
+            RootedAlg::Linear
+        }
+    }
+
+    /// Pick the scatter algorithm for (comm size, mean block bytes).
+    pub fn select_scatter(&self, t: &CollTuning, n: usize, m: usize) -> RootedAlg {
+        if let Some(a) = t.scatter {
+            return a;
+        }
+        if self.scatter_binomial_ns(n, m) < self.scatter_linear_ns(n, m) {
+            RootedAlg::Binomial
+        } else {
+            RootedAlg::Linear
+        }
+    }
+}
+
+/// ⌈log₂ n⌉ (0 for n ≤ 1) — the round count of the tree/doubling
+/// algorithms.
+pub fn ceil_log2(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+// --------------------------------------------------- the tuning surface
+
+/// Allreduce algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceAlg {
+    /// Recursive doubling with the MPICH non-power-of-two fold-in:
+    /// ⌈log₂ n⌉ full-payload rounds — latency-optimal, small messages.
+    RecursiveDoubling,
+    /// Ring reduce-scatter + ring allgather (the Rabenseifner
+    /// reduce-scatter/allgather composition, ring-realized): 2(n−1)
+    /// neighbour hops of m/n chunks — bandwidth-optimal, large messages,
+    /// uniform for any comm size.
+    Ring,
+}
+
+/// Broadcast algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcastAlg {
+    /// Binomial tree: ⌈log₂ n⌉ rounds of the full payload.
+    Binomial,
+    /// Segmented chain pipeline: the payload streams along the ring in
+    /// `coll.bcast_segment`-byte segments.
+    Chain,
+}
+
+/// Allgather algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllgatherAlg {
+    /// n−1 neighbour hops forwarding one block per step.
+    Ring,
+    /// ⌈log₂ n⌉ rounds of doubling aggregated blocks (Bruck).
+    Bruck,
+}
+
+/// Alltoall algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlltoallAlg {
+    /// n−1 rounds, step i exchanging with ranks me±i.
+    Pairwise,
+    /// ⌈log₂ n⌉ rounds shipping ~n/2 re-packed blocks each (Bruck).
+    Bruck,
+}
+
+/// Rooted (gather/scatter) algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RootedAlg {
+    /// Every rank talks to the root directly.
+    Linear,
+    /// Binomial tree with packed subtree aggregates.
+    Binomial,
+}
+
+/// Collective-engine overrides: `None` means "derive from the cost model"
+/// (the `coll.<op>=auto` config default); `Some` pins the algorithm.
+/// Carried by the [`crate::fabric::Fabric`] so every communicator on a
+/// fabric — and every rank of each communicator — selects identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollTuning {
+    pub allreduce: Option<AllreduceAlg>,
+    pub bcast: Option<BcastAlg>,
+    pub allgather: Option<AllgatherAlg>,
+    pub alltoall: Option<AlltoallAlg>,
+    pub gather: Option<RootedAlg>,
+    pub scatter: Option<RootedAlg>,
+    /// Segment size (bytes) for the chain bcast pipeline
+    /// (`coll.bcast_segment`).
+    pub bcast_segment: usize,
+}
+
+impl Default for CollTuning {
+    fn default() -> Self {
+        Self {
+            allreduce: None,
+            bcast: None,
+            allgather: None,
+            alltoall: None,
+            gather: None,
+            scatter: None,
+            bcast_segment: 32 * 1024,
         }
     }
 }
@@ -185,6 +561,20 @@ mod tests {
     }
 
     #[test]
+    fn neighbour_traffic_is_cheaper_than_remote() {
+        let m = NetModel::empi_tuned();
+        let near = m.wire_ns_between(1 << 16, 8, 3, 4);
+        let wrap = m.wire_ns_between(1 << 16, 8, 7, 0); // cyclic neighbours
+        let far = m.wire_ns_between(1 << 16, 8, 0, 4);
+        assert_eq!(near, wrap);
+        assert!(far > near);
+        // Latency-only messages are placement-independent.
+        assert_eq!(m.wire_ns_between(0, 8, 0, 4), m.wire_ns_between(0, 8, 0, 1));
+        // Tiny worlds are all-adjacent.
+        assert!(NetModel::adjacent(0, 1, 2));
+    }
+
+    #[test]
     fn injection_actually_delays() {
         let m = NetModel {
             latency_ns: 200_000,
@@ -192,10 +582,105 @@ mod tests {
             congestion_procs: usize::MAX,
             congestion_factor: 1.0,
             rndv_threshold: usize::MAX,
+            remote_bw_factor: 1.0,
+            ns_per_byte_copy: 0.0,
             inject: true,
         };
         let t = std::time::Instant::now();
         m.inject_delay(m.wire_ns(0, 2));
         assert!(t.elapsed() >= std::time::Duration::from_micros(200));
+    }
+
+    // ------------------------------------------------ selection behaviour
+
+    #[test]
+    fn selection_is_pure_and_crosses_over() {
+        // Small payloads pick the latency-optimal algorithm, large ones
+        // the bandwidth-optimal algorithm, on both personalities.
+        let t = CollTuning::default();
+        for model in [NetModel::empi_tuned(), NetModel::ompi_generic()] {
+            for n in [4usize, 8, 13, 16] {
+                assert_eq!(
+                    model.select_allreduce(&t, n, 64),
+                    AllreduceAlg::RecursiveDoubling,
+                    "n={n}"
+                );
+                assert_eq!(model.select_allreduce(&t, n, 1 << 20), AllreduceAlg::Ring);
+                assert_eq!(model.select_bcast(&t, n, 64), BcastAlg::Binomial);
+                assert_eq!(model.select_bcast(&t, n, 1 << 20), BcastAlg::Chain);
+                assert_eq!(model.select_allgather(&t, n, 64), AllgatherAlg::Bruck);
+                assert_eq!(model.select_allgather(&t, n, 1 << 20), AllgatherAlg::Ring);
+                assert_eq!(model.select_alltoall(&t, n, 64), AlltoallAlg::Bruck);
+                assert_eq!(
+                    model.select_alltoall(&t, n, 1 << 20),
+                    AlltoallAlg::Pairwise
+                );
+                assert_eq!(model.select_gather(&t, n, 64), RootedAlg::Binomial);
+                assert_eq!(model.select_gather(&t, n, 1 << 20), RootedAlg::Linear);
+                assert_eq!(model.select_scatter(&t, n, 64), RootedAlg::Binomial);
+                assert_eq!(model.select_scatter(&t, n, 1 << 20), RootedAlg::Linear);
+            }
+        }
+        // Purity: repeated evaluation is bit-stable (the replay invariant).
+        let m = NetModel::empi_tuned();
+        for bytes in [0usize, 1, 4096, 60_000, 70_000, 1 << 22] {
+            assert_eq!(
+                m.select_allreduce(&t, 8, bytes),
+                m.select_allreduce(&t, 8, bytes)
+            );
+        }
+    }
+
+    #[test]
+    fn personalities_cross_over_at_different_sizes() {
+        // The generic library's early rendezvous switch and worse latency
+        // push its allreduce ring crossover below the tuned library's —
+        // the "two personalities naturally select differently" property.
+        let t = CollTuning::default();
+        let e = NetModel::empi_tuned();
+        let o = NetModel::ompi_generic();
+        let cross = |m: &NetModel| {
+            (0..=24)
+                .map(|p| 1usize << p)
+                .find(|&bytes| m.select_allreduce(&t, 8, bytes) == AllreduceAlg::Ring)
+                .expect("ring must win eventually")
+        };
+        assert!(cross(&o) < cross(&e), "ompi {} vs empi {}", cross(&o), cross(&e));
+    }
+
+    #[test]
+    fn overrides_pin_the_algorithm() {
+        let mut t = CollTuning::default();
+        t.allreduce = Some(AllreduceAlg::Ring);
+        t.bcast = Some(BcastAlg::Chain);
+        let m = NetModel::empi_tuned();
+        assert_eq!(m.select_allreduce(&t, 8, 1), AllreduceAlg::Ring);
+        assert_eq!(m.select_bcast(&t, 8, 1), BcastAlg::Chain);
+    }
+
+    #[test]
+    fn instant_model_ties_pick_classic_algorithms() {
+        let t = CollTuning::default();
+        let m = NetModel::instant();
+        assert_eq!(
+            m.select_allreduce(&t, 8, 1 << 20),
+            AllreduceAlg::RecursiveDoubling
+        );
+        assert_eq!(m.select_bcast(&t, 8, 1 << 20), BcastAlg::Binomial);
+        assert_eq!(m.select_allgather(&t, 8, 1 << 20), AllgatherAlg::Ring);
+        assert_eq!(m.select_alltoall(&t, 8, 1 << 20), AlltoallAlg::Pairwise);
+        assert_eq!(m.select_gather(&t, 8, 1 << 20), RootedAlg::Linear);
+        assert_eq!(m.select_scatter(&t, 8, 1 << 20), RootedAlg::Linear);
+    }
+
+    #[test]
+    fn ceil_log2_rounds() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(17), 5);
     }
 }

@@ -61,6 +61,10 @@ pub struct RunResult {
     /// Seconds inside the restore phase (refresh pushes + shard gather),
     /// summed over ranks — the cold-restore latency measure.
     pub restore_s: f64,
+    /// Collective algorithm selections made by the tuned engine on the
+    /// EMPI fabric: `("<collective>.<algorithm>", count)` per slot, summed
+    /// over ranks and calls.
+    pub coll_selects: Vec<(&'static str, u64)>,
 }
 
 impl RunResult {
@@ -198,6 +202,7 @@ pub fn run_app(
         shards_rebuilt: crate::metrics::Counters::get(&totals.restore_shards_rebuilt),
         cold_restores: crate::metrics::Counters::get(&totals.cold_restores),
         restore_s: report.phase_seconds(Phase::Restore),
+        coll_selects: report.empi_fabric.metrics.selects.snapshot(),
     }
 }
 
@@ -224,6 +229,15 @@ mod tests {
                 "{app:?}: {a} vs {b}"
             );
         }
+    }
+
+    #[test]
+    fn run_summary_reports_algorithm_selections() {
+        let cfg = JobConfig::new(4, 0.0);
+        let r = run_app(&cfg, AppKind::Cg, Backend::PartReper, 2, None);
+        assert!(r.completed(), "{:?}", r.errors);
+        let total: u64 = r.coll_selects.iter().map(|&(_, c)| c).sum();
+        assert!(total > 0, "apps run collectives; selections must be recorded");
     }
 
     #[test]

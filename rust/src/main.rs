@@ -105,6 +105,13 @@ fn main() {
                 r.shards_rebuilt,
                 r.restore_s
             );
+            let picked: Vec<String> = r
+                .coll_selects
+                .iter()
+                .filter(|&&(_, c)| c > 0)
+                .map(|&(l, c)| format!("{l}={c}"))
+                .collect();
+            println!("coll selections: {}", picked.join(" "));
             println!("checksum: {:?}", r.checksum);
         }
         "fig8" => {

@@ -10,6 +10,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+// The tuned collective engine's per-algorithm selection tallies live with
+// the fabric (they are per-fabric, like its traffic counters) but belong
+// to the metrics surface: the harness folds them into `RunResult` next to
+// the counters below.
+pub use crate::fabric::{CollSelects, COLL_SELECT_LABELS};
+
 /// Phases a rank can be in.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {

@@ -8,12 +8,17 @@
 //! processes". On error the whole operation aborts with a [`UlfmError`]
 //! and the caller's guarded loop runs the error handler.
 //!
-//! The collective algorithms mirror the tuned EMPI ones (binomial,
-//! recursive doubling, ring, pairwise) — and `alltoallv` is implemented as
-//! nonblocking `IAlltoallv` + test loop, which is the library's actual
+//! The collectives run the *same* algorithm engine as the tuned EMPI ones
+//! (`empi::algo`) over a guarded transport — one implementation, two
+//! failure models — so the per-(comm size, payload bytes) algorithm
+//! selection, and therefore the exact tag/message schedule, is identical
+//! between a survivor's original execution and any replayed or lagging
+//! re-execution (§VI-B). `alltoallv` is the exception: it is implemented
+//! as nonblocking `IAlltoallv` + test loop, which is the library's actual
 //! design choice that produced the paper's negative IS overheads (§VII-A).
 
-use crate::empi::reduce::{fold, DType, ReduceOp};
+use crate::empi::algo::{self, Xfer};
+use crate::empi::reduce::{DType, ReduceOp};
 use crate::empi::{Comm, IAlltoallv, Recvd, Src, Tag};
 use crate::error::{CommError, UlfmError};
 use crate::metrics::Counters;
@@ -111,52 +116,27 @@ impl<'a> Guard<'a> {
     }
 
     // ----------------------------------------------------- collectives
+    //
+    // All dispatch into `empi::algo` over the guarded transport below, so
+    // algorithm selection — and the wire schedule it implies — is shared
+    // bit-for-bit with the plain EMPI collectives.
 
     /// Dissemination barrier.
     pub fn barrier(&self, comm: &Comm) -> Result<(), OpError> {
-        let n = comm.size();
-        if n <= 1 {
+        if comm.size() <= 1 {
             return Ok(());
         }
         let tag = comm.coll_tag(21);
-        let me = comm.rank();
-        let mut k = 1usize;
-        while k < n {
-            let to = (me + k) % n;
-            // Parenthesised for clarity (see empi::coll::barrier).
-            let from = (me + n - (k % n)) % n;
-            self.send(comm, to, tag, &[])?;
-            self.recv(comm, Src::Rank(from), Tag::Tag(tag))?;
-            k <<= 1;
-        }
-        Ok(())
+        algo::barrier(&Gx { g: self, comm }, tag)
     }
 
-    /// Binomial broadcast from `root`.
+    /// Broadcast from `root` (binomial or segmented chain, tuned).
     pub fn bcast(&self, comm: &Comm, root: usize, data: &mut Vec<u8>) -> Result<(), OpError> {
-        let n = comm.size();
-        if n <= 1 {
+        if comm.size() <= 1 {
             return Ok(());
         }
         let tag = comm.coll_tag(22);
-        let vrank = (comm.rank() + n - root) % n;
-        if vrank != 0 {
-            let parent = ((vrank & (vrank - 1)) + root) % n;
-            let m = self.recv(comm, Src::Rank(parent), Tag::Tag(tag))?;
-            *data = m.data.to_vec();
-        }
-        let mut mask = 1usize;
-        while mask < n {
-            if vrank & mask != 0 {
-                break;
-            }
-            let child_v = vrank | mask;
-            if child_v < n {
-                self.send(comm, (child_v + root) % n, tag, data)?;
-            }
-            mask <<= 1;
-        }
-        Ok(())
+        algo::bcast(&Gx { g: self, comm }, tag, root, data)
     }
 
     /// Binomial reduce to `root`.
@@ -168,28 +148,11 @@ impl<'a> Guard<'a> {
         op: ReduceOp,
         data: &[u8],
     ) -> Result<Option<Vec<u8>>, OpError> {
-        let n = comm.size();
         let tag = comm.coll_tag(23);
-        let vrank = (comm.rank() + n - root) % n;
-        let mut acc = data.to_vec();
-        let mut mask = 1usize;
-        while mask < n {
-            if vrank & mask != 0 {
-                let parent = ((vrank ^ mask) + root) % n;
-                self.send(comm, parent, tag, &acc)?;
-                return Ok(None);
-            }
-            let child_v = vrank | mask;
-            if child_v < n {
-                let m = self.recv(comm, Src::Rank((child_v + root) % n), Tag::Tag(tag))?;
-                fold(dtype, op, &mut acc, &m.data);
-            }
-            mask <<= 1;
-        }
-        Ok(Some(acc))
+        algo::reduce(&Gx { g: self, comm }, tag, root, dtype, op, data)
     }
 
-    /// Recursive-doubling allreduce with non-power-of-two fold-in.
+    /// Allreduce (recursive doubling or ring, tuned).
     pub fn allreduce(
         &self,
         comm: &Comm,
@@ -197,117 +160,36 @@ impl<'a> Guard<'a> {
         op: ReduceOp,
         data: &[u8],
     ) -> Result<Vec<u8>, OpError> {
-        let n = comm.size();
-        let me = comm.rank();
         let tag = comm.coll_tag(24);
-        let mut acc = data.to_vec();
-        if n == 1 {
-            return Ok(acc);
-        }
-        let pof2 = 1usize << (usize::BITS - 1 - n.leading_zeros());
-        let rem = n - pof2;
-
-        let mut newrank: i64 = -1;
-        if me < 2 * rem {
-            if me % 2 == 1 {
-                self.send(comm, me - 1, tag, &acc)?;
-            } else {
-                let m = self.recv(comm, Src::Rank(me + 1), Tag::Tag(tag))?;
-                fold(dtype, op, &mut acc, &m.data);
-                newrank = (me / 2) as i64;
-            }
-        } else {
-            newrank = (me - rem) as i64;
-        }
-        if newrank >= 0 {
-            let nr = newrank as usize;
-            let mut mask = 1usize;
-            while mask < pof2 {
-                let pnr = nr ^ mask;
-                let partner = if pnr < rem { pnr * 2 } else { pnr + rem };
-                self.send(comm, partner, tag, &acc)?;
-                let m = self.recv(comm, Src::Rank(partner), Tag::Tag(tag))?;
-                fold(dtype, op, &mut acc, &m.data);
-                mask <<= 1;
-            }
-        }
-        if me < 2 * rem {
-            if me % 2 == 0 {
-                self.send(comm, me + 1, tag, &acc)?;
-            } else {
-                let m = self.recv(comm, Src::Rank(me - 1), Tag::Tag(tag))?;
-                acc = m.data.to_vec();
-            }
-        }
-        Ok(acc)
+        algo::allreduce(&Gx { g: self, comm }, tag, dtype, op, data)
     }
 
-    /// Ring allgather.
+    /// Allgather (ring or Bruck, tuned).
     pub fn allgather(&self, comm: &Comm, data: &[u8]) -> Result<Vec<Vec<u8>>, OpError> {
-        let n = comm.size();
-        let me = comm.rank();
         let tag = comm.coll_tag(25);
-        let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-        out[me] = data.to_vec();
-        if n == 1 {
-            return Ok(out);
-        }
-        let right = (me + 1) % n;
-        let left = (me + n - 1) % n;
-        let mut cur = me;
-        for _ in 0..n - 1 {
-            self.send(comm, right, tag, &out[cur])?;
-            let m = self.recv(comm, Src::Rank(left), Tag::Tag(tag))?;
-            cur = (cur + n - 1) % n;
-            out[cur] = m.data.to_vec();
-        }
-        Ok(out)
+        algo::allgather(&Gx { g: self, comm }, tag, data)
     }
 
-    /// Linear gather to `root`.
+    /// Gather to `root` (linear or binomial, tuned).
     pub fn gather(
         &self,
         comm: &Comm,
         root: usize,
         data: &[u8],
     ) -> Result<Option<Vec<Vec<u8>>>, OpError> {
-        let n = comm.size();
         let tag = comm.coll_tag(26);
-        if comm.rank() == root {
-            let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-            out[root] = data.to_vec();
-            for _ in 0..n - 1 {
-                let m = self.recv(comm, Src::Any, Tag::Tag(tag))?;
-                out[m.src] = m.data.to_vec();
-            }
-            Ok(Some(out))
-        } else {
-            self.send(comm, root, tag, data)?;
-            Ok(None)
-        }
+        algo::gather(&Gx { g: self, comm }, tag, root, data)
     }
 
-    /// Linear scatter from `root`.
+    /// Scatter from `root` (linear or binomial, tuned).
     pub fn scatter(
         &self,
         comm: &Comm,
         root: usize,
         blocks: Option<&[Vec<u8>]>,
     ) -> Result<Vec<u8>, OpError> {
-        let n = comm.size();
         let tag = comm.coll_tag(27);
-        if comm.rank() == root {
-            let blocks = blocks.expect("root must supply blocks");
-            assert_eq!(blocks.len(), n);
-            for (r, b) in blocks.iter().enumerate() {
-                if r != root {
-                    self.send(comm, r, tag, b)?;
-                }
-            }
-            Ok(blocks[root].clone())
-        } else {
-            Ok(self.recv(comm, Src::Rank(root), Tag::Tag(tag))?.data.to_vec())
-        }
+        algo::scatter(&Gx { g: self, comm }, tag, root, blocks)
     }
 
     /// Alltoallv as nonblocking IAlltoallv + guarded test loop — the
@@ -329,6 +211,30 @@ impl<'a> Guard<'a> {
     /// Alltoall = alltoallv with equal blocks.
     pub fn alltoall(&self, comm: &Comm, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, OpError> {
         self.alltoallv(comm, blocks)
+    }
+}
+
+/// The guarded transport: `empi::algo` algorithms run over this to get
+/// ULFM failure checks interleaved into every send and receive (Fig 7),
+/// while keeping the exact wire schedule of the plain EMPI collectives.
+struct Gx<'a, 'b> {
+    g: &'a Guard<'b>,
+    comm: &'a Comm,
+}
+
+impl Xfer for Gx<'_, '_> {
+    type Err = OpError;
+
+    fn comm(&self) -> &Comm {
+        self.comm
+    }
+
+    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), OpError> {
+        self.g.send(self.comm, dst, tag, data)
+    }
+
+    fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, OpError> {
+        self.g.recv(self.comm, src, tag)
     }
 }
 

@@ -30,10 +30,16 @@
 //!       mark received-but-not-yet-sent ids to be skipped at the source;
 //!    d. replay logged collectives newer than the agreed floor, re-relaying
 //!       to replicas that had not seen them; processes with nothing left
-//!       to replay exit the handler immediately.
+//!       to replay exit the handler immediately. Replays run the tuned
+//!       collective engine (`empi::algo`): selection is a pure function of
+//!       (comm size, payload bytes), and the logged record carries the
+//!       original payload, so a replay — and a lagging incarnation's
+//!       app-level re-execution — lands on the survivors' exact algorithm,
+//!       tag, and message schedule even when the payload sits past an
+//!       algorithm crossover.
 //!
 //! Another failure striking during recovery simply re-enters the handler
-//! (the loop in [`PartReper::error_handler`]), as in the paper.
+//! (the loop in `PartReper::error_handler`), as in the paper.
 
 use std::collections::HashSet;
 

@@ -247,6 +247,104 @@ fn comp_death_promotes_replica() {
 }
 
 #[test]
+fn promotion_replays_size_crossover_collectives_with_matching_tags() {
+    // Collectives on *both* sides of the tuned engine's crossovers inside
+    // one run — 256 KiB allreduce (ring) + 8-byte allreduce (recursive
+    // doubling) + 256 KiB bcast (segmented chain) — crossed with a comp
+    // death and replica promotion. The promoted replica re-executes the
+    // collectives behind the survivors, and the survivors replay them from
+    // the log; recovery converges with correct bytes only if every rank,
+    // lagging or not, selects the same algorithm (and therefore the same
+    // tag/message schedule) the survivors originally ran — the selection-
+    // is-pure-in-(comm size, payload) invariant.
+    use crate::fabric::{AllreduceAlg, BcastAlg};
+    const SMALL: usize = 8;
+    const BIG: usize = 256 * 1024;
+    let cfg = JobConfig::new(4, 50.0); // empi_net = NetModel::empi_tuned()
+    assert_eq!(
+        cfg.empi_net.select_allreduce(&cfg.coll, 4, SMALL),
+        AllreduceAlg::RecursiveDoubling
+    );
+    assert_eq!(
+        cfg.empi_net.select_allreduce(&cfg.coll, 4, BIG),
+        AllreduceAlg::Ring,
+        "payload must sit past the ring crossover for this test to bite"
+    );
+    assert_eq!(cfg.empi_net.select_bcast(&cfg.coll, 4, BIG), BcastAlg::Chain);
+
+    let iters = 5u64;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 1 && it == 2 {
+                procs.poison(1);
+            }
+            // Large allreduce → ring reduce-scatter + allgather.
+            let elems = BIG / 8;
+            let me = pr.rank() as u64; // re-read: may have been promoted
+            let vals: Vec<u64> = (0..elems as u64).map(|j| me * 7 + j + it).collect();
+            let sum =
+                u64s_from_bytes(&pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&vals)));
+            let rank_sum7 = 7 * (n * (n - 1) / 2);
+            for &j in &[0usize, 1, elems / 2, elems - 1] {
+                assert_eq!(sum[j], rank_sum7 + n * (j as u64 + it), "it={it} j={j}");
+            }
+            // Small allreduce → recursive doubling, same epoch.
+            let small =
+                u64s_from_bytes(&pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[it])))
+                    [0];
+            assert_eq!(small, n * it);
+            // Large bcast → segmented chain, rotating root.
+            let root = (it % n) as usize;
+            let mut b = if pr.rank() == root {
+                vec![it as u8; BIG]
+            } else {
+                Vec::new()
+            };
+            pr.bcast(root, &mut b);
+            assert_eq!(b.len(), BIG, "it={it}");
+            assert!(b.iter().all(|&x| x == it as u8), "it={it}");
+            acc = acc
+                .wrapping_add(sum[0])
+                .wrapping_add(sum[elems - 1])
+                .wrapping_add(small);
+        }
+        let out = (acc, pr.role());
+        pr.finalize();
+        Ok(out)
+    });
+    let mut done_accs = Vec::new();
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (1, RankOutcome::Killed) => {}
+            (1, other) => panic!("victim: {other:?}"),
+            (_, RankOutcome::Done((v, role))) => {
+                done_accs.push(*v);
+                if r == 5 {
+                    assert_eq!(*role, Role::Comp, "replica of comp 1 must be promoted");
+                }
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    assert!(done_accs.windows(2).all(|w| w[0] == w[1]), "{done_accs:?}");
+    let totals = report.total_counters();
+    assert_eq!(crate::metrics::Counters::get(&totals.promotions), 1);
+    assert!(crate::metrics::Counters::get(&totals.collective_replays) > 0);
+    // The large-message algorithms really ran (and were replayed) on the
+    // EMPI fabric: the tuned engine's selection counters prove it.
+    use crate::fabric::{SEL_ALLREDUCE_RDOUBLE, SEL_ALLREDUCE_RING, SEL_BCAST_CHAIN};
+    let sel = &report.empi_fabric.metrics.selects;
+    assert!(sel.get(SEL_ALLREDUCE_RING) > 0);
+    assert!(sel.get(SEL_ALLREDUCE_RDOUBLE) > 0);
+    assert!(sel.get(SEL_BCAST_CHAIN) > 0);
+}
+
+#[test]
 fn unreplicated_comp_death_interrupts_job() {
     // Comp 3 has no replica at 25% on 4 comps (only comp 0 replicated).
     let cfg = JobConfig::new(4, 25.0);

@@ -152,8 +152,8 @@ impl JobWorld {
         let n = cfg.nprocs();
         let cluster = Cluster::new(n, cfg.cores_per_node);
         let procs = ProcSet::new(n);
-        let empi_fabric = Fabric::new("empi", procs.clone(), cfg.empi_net);
-        let ompi_fabric = Fabric::new("ompi", procs.clone(), cfg.ompi_net);
+        let empi_fabric = Fabric::new_tuned("empi", procs.clone(), cfg.empi_net, cfg.coll);
+        let ompi_fabric = Fabric::new_tuned("ompi", procs.clone(), cfg.ompi_net, cfg.coll);
         let detector = FailureDetector::new();
         let registry = CommRegistry::new();
         let prte = PrteServer::start(cluster.clone());

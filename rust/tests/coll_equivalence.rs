@@ -1,0 +1,315 @@
+//! Equivalence suite for the tuned collective engine: every algorithm
+//! variant must produce byte-identical results to the naive rank-order
+//! baseline, across comm sizes 1..=17, non-power-of-two payloads, and all
+//! `ReduceOp`×`DType` pairs.
+//!
+//! Reduction inputs are chosen so arithmetic is exact in every dtype
+//! (integer-valued, products bounded well under 2^24 for f32): under exact
+//! arithmetic, associativity+commutativity make every combining order —
+//! tree, recursive doubling, ring reduce-scatter — bit-identical to the
+//! sequential rank-order fold.
+
+use std::sync::Arc;
+use std::thread;
+
+use partreper::empi::reduce::fold;
+use partreper::empi::{coll, Comm, DType, ReduceOp};
+use partreper::fabric::{
+    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, Fabric, NetModel, ProcSet,
+    RootedAlg,
+};
+
+/// Run `f(rank, comm)` on `n` threads over a fresh world comm on a fabric
+/// with the given model + collective overrides.
+fn run_ranks<T: Send + 'static>(
+    n: usize,
+    model: NetModel,
+    coll: CollTuning,
+    f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let procs = ProcSet::new(n);
+    let fabric = Fabric::new_tuned("coll-eq", procs, model, coll);
+    let ctx = fabric.alloc_ctx();
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let f = f.clone();
+            thread::spawn(move || f(r, Comm::world(fabric, ctx, r)))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Rank `r`'s reduction input: `elems` elements, exact in every dtype.
+/// Element `j` is 2 on exactly one rank (`(r + j) % n == 0`) and 1
+/// elsewhere, so per element: sum = n+1, prod = 2, min = 1, max = 2 —
+/// all exactly representable, any fold order identical.
+fn reduce_input(dtype: DType, n: usize, r: usize, elems: usize) -> Vec<u8> {
+    let v = |j: usize| -> u64 {
+        if (r + j) % n == 0 {
+            2
+        } else {
+            1
+        }
+    };
+    let mut out = Vec::with_capacity(elems * dtype.width());
+    for j in 0..elems {
+        match dtype {
+            DType::F64 => out.extend_from_slice(&(v(j) as f64).to_le_bytes()),
+            DType::F32 => out.extend_from_slice(&(v(j) as f32).to_le_bytes()),
+            DType::I64 => out.extend_from_slice(&(v(j) as i64).to_le_bytes()),
+            DType::U64 => out.extend_from_slice(&v(j).to_le_bytes()),
+        }
+    }
+    out
+}
+
+/// The naive baseline: sequential fold over ranks in rank order.
+fn naive_reduce(dtype: DType, op: ReduceOp, n: usize, elems: usize) -> Vec<u8> {
+    let mut acc = reduce_input(dtype, n, 0, elems);
+    for r in 1..n {
+        fold(dtype, op, &mut acc, &reduce_input(dtype, n, r, elems));
+    }
+    acc
+}
+
+const ALL_OPS: [ReduceOp; 4] = [ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max, ReduceOp::Prod];
+const ALL_DTYPES: [DType; 4] = [DType::F64, DType::F32, DType::I64, DType::U64];
+
+fn allreduce_case(n: usize, alg: AllreduceAlg, dtype: DType, op: ReduceOp, elems: usize) {
+    let tuning = CollTuning {
+        allreduce: Some(alg),
+        ..Default::default()
+    };
+    let out = run_ranks(n, NetModel::instant(), tuning, move |r, comm| {
+        coll::allreduce(&comm, dtype, op, &reduce_input(dtype, n, r, elems)).unwrap()
+    });
+    let want = naive_reduce(dtype, op, n, elems);
+    for (r, got) in out.iter().enumerate() {
+        assert_eq!(
+            got, &want,
+            "allreduce {alg:?} {dtype:?} {op:?} n={n} elems={elems} rank={r}"
+        );
+    }
+}
+
+#[test]
+fn allreduce_all_ops_dtypes_match_naive_baseline() {
+    // Full op×dtype matrix at representative awkward sizes.
+    for alg in [AllreduceAlg::RecursiveDoubling, AllreduceAlg::Ring] {
+        for n in [4usize, 5, 16, 17] {
+            for dtype in ALL_DTYPES {
+                for op in ALL_OPS {
+                    allreduce_case(n, alg, dtype, op, 5);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn allreduce_every_comm_size_1_to_17() {
+    // Every comm size with non-power-of-two payloads (fewer elements than
+    // ranks, non-multiples of n, larger than n).
+    for alg in [AllreduceAlg::RecursiveDoubling, AllreduceAlg::Ring] {
+        for n in 1usize..=17 {
+            for elems in [1usize, 5, 33] {
+                allreduce_case(n, alg, DType::U64, ReduceOp::Sum, elems);
+                allreduce_case(n, alg, DType::F32, ReduceOp::Max, elems);
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_matches_naive_baseline() {
+    for n in [1usize, 3, 8, 13] {
+        for dtype in ALL_DTYPES {
+            for op in ALL_OPS {
+                let root = n / 2;
+                let out = run_ranks(
+                    n,
+                    NetModel::instant(),
+                    CollTuning::default(),
+                    move |r, comm| {
+                        coll::reduce(&comm, root, dtype, op, &reduce_input(dtype, n, r, 7))
+                            .unwrap()
+                    },
+                );
+                let want = naive_reduce(dtype, op, n, 7);
+                for (r, got) in out.iter().enumerate() {
+                    if r == root {
+                        assert_eq!(got.as_ref().unwrap(), &want, "{dtype:?} {op:?} n={n}");
+                    } else {
+                        assert!(got.is_none());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bcast_variants_byte_identical() {
+    // Chain with several segment sizes (smaller than / dividing / larger
+    // than the payload) vs binomial, comm sizes 1..=17.
+    for n in 1usize..=17 {
+        for (len, seg) in [(0usize, 64usize), (1, 64), (1000, 64), (1000, 1000), (997, 256)] {
+            let payload: Vec<u8> = (0..len).map(|i| (i * 31 % 251) as u8).collect();
+            for (alg, seg) in [
+                (BcastAlg::Binomial, seg),
+                (BcastAlg::Chain, seg),
+                (BcastAlg::Chain, 7),
+            ] {
+                let tuning = CollTuning {
+                    bcast: Some(alg),
+                    bcast_segment: seg,
+                    ..Default::default()
+                };
+                let want = payload.clone();
+                let root = (n - 1) / 2;
+                let out = run_ranks(n, NetModel::instant(), tuning, move |r, comm| {
+                    let mut data = if r == root { want.clone() } else { Vec::new() };
+                    coll::bcast(&comm, root, &mut data).unwrap();
+                    data
+                });
+                for (r, got) in out.iter().enumerate() {
+                    assert_eq!(got, &payload, "bcast {alg:?} seg={seg} n={n} len={len} r={r}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn allgather_variants_byte_identical() {
+    for alg in [AllgatherAlg::Ring, AllgatherAlg::Bruck] {
+        let tuning = CollTuning {
+            allgather: Some(alg),
+            ..Default::default()
+        };
+        for n in 1usize..=17 {
+            for blk in [0usize, 1, 9] {
+                let out = run_ranks(n, NetModel::instant(), tuning, move |r, comm| {
+                    coll::allgather(&comm, &vec![r as u8; blk]).unwrap()
+                });
+                for per_rank in &out {
+                    assert_eq!(per_rank.len(), n);
+                    for (s, b) in per_rank.iter().enumerate() {
+                        assert_eq!(b, &vec![s as u8; blk], "allgather {alg:?} n={n} blk={blk}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn alltoall_variants_byte_identical() {
+    for alg in [AlltoallAlg::Pairwise, AlltoallAlg::Bruck] {
+        let tuning = CollTuning {
+            alltoall: Some(alg),
+            ..Default::default()
+        };
+        for n in 1usize..=17 {
+            let out = run_ranks(n, NetModel::instant(), tuning, move |r, comm| {
+                // Variable sizes: rank r sends r+d+1 bytes of marker (r, d).
+                let blocks: Vec<Vec<u8>> = (0..n)
+                    .map(|d| {
+                        let mut b = vec![r as u8, d as u8];
+                        b.resize(r + d + 2, 0xEE);
+                        b
+                    })
+                    .collect();
+                coll::alltoall(&comm, &blocks).unwrap()
+            });
+            for (r, per_rank) in out.iter().enumerate() {
+                for (s, b) in per_rank.iter().enumerate() {
+                    let mut want = vec![s as u8, r as u8];
+                    want.resize(s + r + 2, 0xEE);
+                    assert_eq!(b, &want, "alltoall {alg:?} n={n} r={r} s={s}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_scatter_variants_byte_identical() {
+    for alg in [RootedAlg::Linear, RootedAlg::Binomial] {
+        let tuning = CollTuning {
+            gather: Some(alg),
+            scatter: Some(alg),
+            ..Default::default()
+        };
+        for n in 1usize..=17 {
+            let root = n / 3;
+            // Gather with variable contributions.
+            let out = run_ranks(n, NetModel::instant(), tuning, move |r, comm| {
+                coll::gather(&comm, root, &vec![r as u8; r % 5 + 1]).unwrap()
+            });
+            for (r, got) in out.iter().enumerate() {
+                if r == root {
+                    let bs = got.as_ref().unwrap();
+                    for (s, b) in bs.iter().enumerate() {
+                        assert_eq!(b, &vec![s as u8; s % 5 + 1], "gather {alg:?} n={n}");
+                    }
+                } else {
+                    assert!(got.is_none());
+                }
+            }
+            // Scatter with variable blocks.
+            let out = run_ranks(n, NetModel::instant(), tuning, move |r, comm| {
+                let blocks: Option<Vec<Vec<u8>>> =
+                    (r == root).then(|| (0..n).map(|d| vec![d as u8; d % 4 + 1]).collect());
+                coll::scatter(&comm, root, blocks.as_deref()).unwrap()
+            });
+            for (r, got) in out.iter().enumerate() {
+                assert_eq!(got, &vec![r as u8; r % 4 + 1], "scatter {alg:?} n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_selection_end_to_end_around_the_crossovers() {
+    // No overrides, real tuned profile (virtual costs only — inject stays
+    // off): payloads straddling the EMPI crossovers must all produce
+    // correct results while the engine switches algorithms underneath.
+    let model = NetModel::empi_tuned();
+    let t = CollTuning::default();
+    for n in [5usize, 8] {
+        for elems in [8usize, 16 * 1024, 64 * 1024] {
+            // Pick sizes on both sides: 64 B, 128 KiB, 512 KiB payloads.
+            let bytes = elems * 8;
+            let alg = model.select_allreduce(&t, n, bytes);
+            let out = run_ranks(n, model, t, move |r, comm| {
+                coll::allreduce(
+                    &comm,
+                    DType::U64,
+                    ReduceOp::Sum,
+                    &reduce_input(DType::U64, n, r, elems),
+                )
+                .unwrap()
+            });
+            let want = naive_reduce(DType::U64, ReduceOp::Sum, n, elems);
+            for got in &out {
+                assert_eq!(got, &want, "auto allreduce n={n} bytes={bytes} alg={alg:?}");
+            }
+        }
+        // Bcast across its crossover.
+        for len in [64usize, 512 * 1024] {
+            let payload: Vec<u8> = (0..len).map(|i| (i % 255) as u8).collect();
+            let want = payload.clone();
+            let out = run_ranks(n, model, t, move |r, comm| {
+                let mut data = if r == 0 { want.clone() } else { Vec::new() };
+                coll::bcast(&comm, 0, &mut data).unwrap();
+                data
+            });
+            for got in &out {
+                assert_eq!(got, &payload, "auto bcast n={n} len={len}");
+            }
+        }
+    }
+}
