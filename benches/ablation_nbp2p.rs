@@ -1,0 +1,129 @@
+//! Ablation: nonblocking parallel replica fan-out vs the legacy serial
+//! blocking path (`net.serial_fanout=true`), measured as **failure-free
+//! overhead** — wall time at replication degree r over wall time at 0%,
+//! within the same mode — at 0/25/50/100% replication.
+//!
+//! The workload is fan-out-shaped on purpose: a staggered-ring neighbour
+//! exchange (so sends to *replicated* destinations occur every step and
+//! the serial path's per-channel rendezvous waits serialize) plus one
+//! large allreduce per step (so the §V-C result relay to the replica is
+//! rendezvous-sized: the serial mode blocks the computational rank on it,
+//! the parallel mode overlaps it with the return to application code).
+//! Payloads sit past `net.rndv_threshold` with `net.inject=true`, the
+//! regime where FTHP-MPI/TeaMPI show shadow traffic must overlap with
+//! application progress.
+//!
+//! Staggered ring, not `sendrecv`: the serial baseline's send-then-recv
+//! `sendrecv` *deadlocks* past the rendezvous threshold (that is the bug
+//! the engine fixes; see `symmetric_sendrecv_exchange_at_rendezvous_sizes`),
+//! so the one pattern both modes can legally run is parity-staggered.
+//!
+//! Emits `BENCH_nbp2p.json`; the acceptance check is that the parallel
+//! fan-out's overhead at 50% replication sits below the serial baseline's.
+
+mod common;
+
+use std::time::Instant;
+
+use partreper::config::JobConfig;
+use partreper::empi::{DType, ReduceOp};
+use partreper::partreper::PartReper;
+use partreper::procmgr::{launch_job, RankOutcome};
+use partreper::util::Summary;
+
+/// Payload past the default 64 KiB EMPI rendezvous threshold, u64-aligned.
+const PAYLOAD: usize = 96 * 1024;
+
+fn cfg_for(ncomp: usize, rdegree: f64, serial: bool) -> JobConfig {
+    let mut cfg = JobConfig::new(ncomp, rdegree);
+    cfg.set("net.inject", "true").unwrap();
+    cfg.set("net.serial_fanout", if serial { "true" } else { "false" })
+        .unwrap();
+    cfg
+}
+
+/// One job: `iters` steps of staggered-ring exchange + large allreduce.
+/// Returns wall seconds. `ncomp` must be even (parity stagger).
+fn run_once(cfg: &JobConfig, iters: usize) -> f64 {
+    let t0 = Instant::now();
+    let report = launch_job(cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let me = pr.rank();
+        let data = vec![0xA5u8; PAYLOAD];
+        for _ in 0..iters {
+            if n > 1 {
+                let next = (me + 1) % n;
+                let prev = (me + n - 1) % n;
+                // Parity stagger keeps the ring deadlock-free for the
+                // serial blocking baseline at rendezvous sizes.
+                if me % 2 == 0 {
+                    pr.send(next, 41, &data);
+                    let got = pr.recv(prev, 41);
+                    assert_eq!(got.len(), PAYLOAD);
+                } else {
+                    let got = pr.recv(prev, 41);
+                    assert_eq!(got.len(), PAYLOAD);
+                    pr.send(next, 41, &data);
+                }
+            }
+            pr.allreduce(DType::U64, ReduceOp::Sum, &data);
+        }
+        pr.finalize();
+        Ok(())
+    });
+    for (r, o) in report.outcomes.iter().enumerate() {
+        assert!(matches!(o, RankOutcome::Done(())), "rank {r}: {o:?}");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    common::hr("Ablation — nonblocking parallel fan-out vs serial baseline");
+    let mut report = common::BenchReport::new("nbp2p");
+    let ncomp = if common::full() { 16 } else { 4 };
+    let iters = if common::smoke() {
+        3
+    } else if common::full() {
+        12
+    } else {
+        6
+    };
+    let rdegrees: &[f64] = if common::smoke() {
+        &[0.0, 50.0]
+    } else {
+        &[0.0, 25.0, 50.0, 100.0]
+    };
+    let reps = common::reps();
+
+    println!(
+        "{:<10} {:>6} {:>12} {:>14}",
+        "mode", "rdeg%", "median_s", "overhead_pct"
+    );
+    for &serial in &[true, false] {
+        let mode = if serial { "serial" } else { "parallel" };
+        let mut base_median = None;
+        for &rd in rdegrees {
+            let cfg = cfg_for(ncomp, rd, serial);
+            let samples: Vec<f64> = (0..reps).map(|_| run_once(&cfg, iters)).collect();
+            let s = Summary::from_samples(samples.iter().copied());
+            let median = s.median();
+            report.case(&format!("{mode}.r{rd}.wall"), "s", &s);
+            let overhead = match base_median {
+                None => {
+                    base_median = Some(median);
+                    0.0
+                }
+                Some(b) => (median / b - 1.0) * 100.0,
+            };
+            report.case_value(&format!("{mode}.r{rd}.overhead_pct"), "pct", overhead);
+            println!("{mode:<10} {rd:>6} {median:>12.4} {overhead:>+14.2}");
+        }
+    }
+    report.write();
+    println!(
+        "\nshape: at matching replication degrees the parallel fan-out's \
+         overhead should sit below the serial baseline's (the §V-B/§V-C \
+         shadow traffic overlaps with application progress)."
+    );
+}

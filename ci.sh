@@ -22,7 +22,8 @@ echo "== bench smoke (smallest case per bench, catches runtime rot) =="
 # bench also emits BENCH_<name>.json for cross-PR perf tracking.
 for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
              fig8_apps fig9a_failure_overhead fig9b_mtti \
-             ablation_is_alltoallv ablation_mg_threshold ablation_coll_select; do
+             ablation_is_alltoallv ablation_mg_threshold ablation_coll_select \
+             ablation_nbp2p; do
   echo "-- smoke: $bench"
   PARTREPER_BENCH_SMOKE=1 cargo bench --bench "$bench"
 done

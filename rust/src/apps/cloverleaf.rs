@@ -26,6 +26,10 @@ pub fn run(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) 
 
     for it in 0..iters {
         // Halo exchange: top row up, bottom row down (rho and e packed).
+        // Both directions as overlapped irecv/isend pairs: the receives
+        // are posted before either send, so the simultaneous whole-ring
+        // exchange is rendezvous-safe and the two directions (plus any
+        // replica fan-out) run in parallel.
         let next = (me + 1) % n;
         let prev = (me + n - 1) % n;
         if n > 1 {
@@ -33,10 +37,15 @@ pub fn run(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) 
             top.extend_from_slice(&e[..CL_DIM]);
             let mut bottom = rho[cells - CL_DIM..].to_vec();
             bottom.extend_from_slice(&e[cells - CL_DIM..]);
-            mpi.send(prev, 400, &f32s_to_bytes(&top));
-            mpi.send(next, 401, &f32s_to_bytes(&bottom));
-            let _from_below = mpi.recv(next, 400);
-            let _from_above = mpi.recv(prev, 401);
+            let mut r_below = mpi.irecv(next, 400);
+            let mut r_above = mpi.irecv(prev, 401);
+            let mut sends = [
+                mpi.isend(prev, 400, &f32s_to_bytes(&top)),
+                mpi.isend(next, 401, &f32s_to_bytes(&bottom)),
+            ];
+            let _from_below = mpi.wait(&mut r_below);
+            let _from_above = mpi.wait(&mut r_above);
+            mpi.waitall(&mut sends);
         }
 
         let (rho2, e2, _p2, esum, rsum) = comp.cl_local(&rho, &e, CL_DIM, dt);

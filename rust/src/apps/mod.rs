@@ -17,16 +17,50 @@ pub mod compute;
 pub mod npb;
 pub mod pic;
 
-use crate::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
-use crate::partreper::PartReper;
+use crate::empi::{coll, Comm, DType, RecvReq, ReduceOp, SendReq, Src, Tag};
+use crate::partreper::{PartReper, Request};
 use crate::runtime::ComputeEngine;
 
-/// The MPI surface the benchmarks need (object-safe).
+/// A pending nonblocking operation issued through the [`Mpi`] trait:
+/// backend-tagged so the same app code runs over PartRePer's
+/// fault-tolerant request engine and the plain EMPI baseline.
+pub enum AppReq {
+    /// PartRePer request (fan-out/re-resolution handled by the library).
+    Part(Request),
+    /// Plain EMPI nonblocking send.
+    EmpiSend(SendReq),
+    /// Plain EMPI posted receive.
+    EmpiRecv(RecvReq),
+    /// Consumed (its payload, if any, was returned by `wait`).
+    Done,
+}
+
+/// The MPI surface the benchmarks need (object-safe). The halo-exchange
+/// apps use the nonblocking trio — post `irecv`s, post `isend`s, then
+/// collect — so shadow replica traffic and neighbour exchanges overlap
+/// instead of serializing (and stay deadlock-free past the rendezvous
+/// threshold).
 pub trait Mpi {
     fn rank(&self) -> usize;
     fn size(&self) -> usize;
     fn send(&self, dst: usize, tag: i64, data: &[u8]);
     fn recv(&self, src: usize, tag: i64) -> Vec<u8>;
+    /// Post a nonblocking send; complete with [`Mpi::wait`]/[`Mpi::waitall`].
+    fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> AppReq;
+    /// Post a nonblocking receive; complete with [`Mpi::wait`].
+    fn irecv(&self, src: usize, tag: i64) -> AppReq;
+    /// Complete one request; returns the payload for receives.
+    fn wait(&self, req: &mut AppReq) -> Option<Vec<u8>>;
+    /// Complete a batch (payloads are NOT returned — `wait` receives you
+    /// care about individually).
+    fn waitall(&self, reqs: &mut [AppReq]) {
+        for r in reqs {
+            self.wait(r);
+        }
+    }
+    /// Simultaneous exchange: the receive is posted before the send, so
+    /// symmetric all-ranks exchanges are safe at any payload size.
+    fn sendrecv(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Vec<u8>;
     fn barrier(&self);
     fn bcast(&self, root: usize, data: &mut Vec<u8>);
     fn allreduce(&self, dtype: DType, op: ReduceOp, data: &[u8]) -> Vec<u8>;
@@ -47,6 +81,35 @@ impl Mpi for PartReper {
     }
     fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
         PartReper::recv(self, src, tag)
+    }
+    fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> AppReq {
+        AppReq::Part(PartReper::isend(self, dst, tag, data))
+    }
+    fn irecv(&self, src: usize, tag: i64) -> AppReq {
+        AppReq::Part(PartReper::irecv(self, src, tag))
+    }
+    fn wait(&self, req: &mut AppReq) -> Option<Vec<u8>> {
+        match req {
+            AppReq::Part(r) => PartReper::wait(self, r),
+            AppReq::Done => None,
+            _ => panic!("foreign (EMPI-backend) request given to PartReper"),
+        }
+    }
+    fn waitall(&self, reqs: &mut [AppReq]) {
+        // Complete the whole batch through the engine so failure handling
+        // and re-resolution cover every request together.
+        let mut parts: Vec<&mut Request> = reqs
+            .iter_mut()
+            .filter_map(|r| match r {
+                AppReq::Part(p) => Some(p),
+                AppReq::Done => None,
+                _ => panic!("foreign (EMPI-backend) request given to PartReper"),
+            })
+            .collect();
+        PartReper::waitall_mut(self, &mut parts);
+    }
+    fn sendrecv(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Vec<u8> {
+        PartReper::sendrecv(self, dst, src, tag, data)
     }
     fn barrier(&self) {
         PartReper::barrier(self)
@@ -93,6 +156,39 @@ impl Mpi for EmpiWorld {
     fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
         self.comm
             .recv(Src::Rank(src), Tag::Tag(tag))
+            .expect("empi recv")
+            .data
+            .to_vec()
+    }
+    fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> AppReq {
+        AppReq::EmpiSend(self.comm.isend(dst, tag, data).expect("empi isend"))
+    }
+    fn irecv(&self, src: usize, tag: i64) -> AppReq {
+        AppReq::EmpiRecv(self.comm.irecv(Src::Rank(src), Tag::Tag(tag)))
+    }
+    fn wait(&self, req: &mut AppReq) -> Option<Vec<u8>> {
+        match std::mem::replace(req, AppReq::Done) {
+            AppReq::EmpiSend(s) => {
+                self.comm.wait_send(&s).expect("empi wait (send)");
+                None
+            }
+            AppReq::EmpiRecv(mut r) => Some(
+                self.comm
+                    .wait_recv(&mut r)
+                    .expect("empi wait (recv)")
+                    .data
+                    .to_vec(),
+            ),
+            AppReq::Done => None,
+            AppReq::Part(_) => panic!("foreign (PartReper) request given to EMPI baseline"),
+        }
+    }
+    fn sendrecv(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Vec<u8> {
+        // Receive posted first: rendezvous-safe for symmetric exchanges.
+        let mut req = self.comm.irecv(Src::Rank(src), Tag::Tag(tag));
+        self.comm.send(dst, tag, data).expect("empi send");
+        self.comm
+            .wait_recv(&mut req)
             .expect("empi recv")
             .data
             .to_vec()

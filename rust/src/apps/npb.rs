@@ -67,19 +67,29 @@ pub fn cg(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -
     for _ in 0..iters {
         // Halo exchange with both neighbours (non-periodic), as the
         // distributed matvec would require for the boundary rows.
+        // Overlapped: both receives are posted first, both sends go out
+        // nonblocking, then everything completes together — the two
+        // directions (and the replica fan-out behind them) proceed in
+        // parallel instead of serializing.
         let mut bc = 0f32;
+        let mut r_left = (me > 0).then(|| mpi.irecv(me - 1, 101));
+        let mut r_right = (me + 1 < n).then(|| mpi.irecv(me + 1, 102));
+        let mut sends: Vec<super::AppReq> = Vec::with_capacity(2);
         if me + 1 < n {
-            mpi.send(me + 1, 101, &f32s_to_bytes(&x[CG_N - halo..]));
+            sends.push(mpi.isend(me + 1, 101, &f32s_to_bytes(&x[CG_N - halo..])));
         }
         if me > 0 {
-            mpi.send(me - 1, 102, &f32s_to_bytes(&x[..halo]));
-            let left = f32s_from_bytes(&mpi.recv(me - 1, 101));
+            sends.push(mpi.isend(me - 1, 102, &f32s_to_bytes(&x[..halo])));
+        }
+        if let Some(r) = r_left.as_mut() {
+            let left = f32s_from_bytes(&mpi.wait(r).expect("halo payload"));
             bc += left.iter().sum::<f32>();
         }
-        if me + 1 < n {
-            let right = f32s_from_bytes(&mpi.recv(me + 1, 102));
+        if let Some(r) = r_right.as_mut() {
+            let right = f32s_from_bytes(&mpi.wait(r).expect("halo payload"));
             bc += right.iter().sum::<f32>();
         }
+        mpi.waitall(&mut sends);
 
         let (q, xq, xx) = comp.cg_local(&bands, &x, &offsets);
         // Two allreduces per iteration (alpha and the norm), like NPB CG.
@@ -113,13 +123,18 @@ pub fn mg(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) -
     for _ in 0..iters {
         for (lvl, &d) in dims.iter().enumerate() {
             // Face halo exchange with ring neighbours; message size shrinks
-            // with the level (d^2 floats).
+            // with the level (d^2 floats). Overlapped irecv/isend pair —
+            // and, being a simultaneous whole-ring shift, the post-first
+            // ordering is what keeps it live past the rendezvous
+            // threshold.
             let face = vec![grids[lvl][0]; d * d];
             let next = (me + 1) % n;
             let prev = (me + n - 1) % n;
             if n > 1 {
-                mpi.send(next, 200 + lvl as i64, &f32s_to_bytes(&face));
-                let _ = mpi.recv(prev, 200 + lvl as i64);
+                let mut r = mpi.irecv(prev, 200 + lvl as i64);
+                let mut s = mpi.isend(next, 200 + lvl as i64, &f32s_to_bytes(&face));
+                let _ = mpi.wait(&mut r);
+                mpi.wait(&mut s);
             }
             let (v, rnorm) = comp.stencil_local(&grids[lvl], d, coeff);
             grids[lvl] = v;

@@ -37,6 +37,30 @@ pub fn run(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) 
         let (pos2, vel2, rho_local) = comp.pic_local(&pos, &vel, &efield, dt);
         pos = pos2;
         vel = vel2;
+
+        // Guard-cell exchange (the real skeleton's processor-boundary
+        // manager): the edge densities of my strip go to both cyclic
+        // neighbours as overlapped irecv/isend pairs — posted before the
+        // sends, so the simultaneous whole-ring shift is rendezvous-safe.
+        // The received values fold into the final global reduction below,
+        // keeping the checksum identical on every rank.
+        let mut guard_sum = 0f32;
+        if n > 1 {
+            let lo = (me * cells_per_rank).min(PIC_NG - 1);
+            let hi = ((me + 1) * cells_per_rank).clamp(lo + 1, PIC_NG);
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let mut r_prev = mpi.irecv(prev, 500);
+            let mut r_next = mpi.irecv(next, 501);
+            let mut sends = [
+                mpi.isend(next, 500, &f32s_to_bytes(&[rho_local[hi - 1]])),
+                mpi.isend(prev, 501, &f32s_to_bytes(&[rho_local[lo]])),
+            ];
+            guard_sum += f32s_from_bytes(&mpi.wait(&mut r_prev).expect("guard cell"))[0];
+            guard_sum += f32s_from_bytes(&mpi.wait(&mut r_next).expect("guard cell"))[0];
+            mpi.waitall(&mut sends);
+        }
+
         let rho = f32s_from_bytes(&mpi.allreduce(
             DType::F32,
             ReduceOp::Sum,
@@ -70,14 +94,14 @@ pub fn run(mpi: &dyn Mpi, eng: Option<&ComputeEngine>, iters: usize, seed: u64) 
             .sum();
 
         let local_ke: f32 = vel.iter().map(|v| v * v).sum();
-        // Fold both into one global reduction so every rank's checksum is
-        // identical (and backend-comparable).
+        // Fold all three into one global reduction so every rank's
+        // checksum is identical (and backend-comparable).
         let g = f32s_from_bytes(&mpi.allreduce(
             DType::F32,
             ReduceOp::Sum,
-            &f32s_to_bytes(&[local_ke, received_momentum]),
+            &f32s_to_bytes(&[local_ke, received_momentum, guard_sum]),
         ));
-        checksum += g[0] as f64 * 1e-3 + g[1] as f64 * 1e-6;
+        checksum += g[0] as f64 * 1e-3 + g[1] as f64 * 1e-6 + g[2] as f64 * 1e-6;
     }
     mpi.finalize();
     checksum

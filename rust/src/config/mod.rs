@@ -119,6 +119,16 @@ pub struct JobConfig {
     /// How many EMPI test-loop polls between ULFM failure/revoke checks on
     /// the PartRePer hot path (paper: interleaved; stride amortises cost).
     pub failure_check_stride: u32,
+    /// Ablation baseline (`net.serial_fanout`): route the PartRePer p2p
+    /// fan-out and the §V-C collective relays through the legacy *serial
+    /// blocking* path — one transmit per destination incarnation at a
+    /// time, `sendrecv` as send-then-recv — instead of the parallel
+    /// nonblocking request engine. Measured by
+    /// `benches/ablation_nbp2p.rs`. Caveat: with payloads at or past
+    /// `net.rndv_threshold`, the serial ordering deadlocks on symmetric
+    /// exchanges (that is the bug the engine fixes), so keep baseline
+    /// runs below the threshold.
+    pub serial_fanout: bool,
 }
 
 impl Default for JobConfig {
@@ -135,6 +145,7 @@ impl Default for JobConfig {
             restore: RestorePlan::default(),
             seed: 42,
             failure_check_stride: 8,
+            serial_fanout: false,
         }
     }
 }
@@ -240,6 +251,9 @@ impl JobConfig {
                 let t: usize = value.parse().map_err(|_| bad(key, value))?;
                 self.empi_net.rndv_threshold = t;
                 self.ompi_net.rndv_threshold = t;
+            }
+            "net.serial_fanout" => {
+                self.serial_fanout = value.parse().map_err(|_| bad(key, value))?
             }
             "coll.allreduce" => {
                 self.coll.allreduce = match value {
@@ -350,6 +364,10 @@ mod tests {
         assert!(cfg.faults.enabled);
         assert_eq!(cfg.empi_net.rndv_threshold, 8192);
         assert_eq!(cfg.ompi_net.rndv_threshold, 8192);
+        assert!(!cfg.serial_fanout, "parallel fan-out is the default");
+        cfg.set("net.serial_fanout", "true").unwrap();
+        assert!(cfg.serial_fanout);
+        assert!(cfg.set("net.serial_fanout", "maybe").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("ncomp", "abc").is_err());
     }

@@ -49,10 +49,30 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 /// `CommError`) and by `partreper::gcoll`'s guarded transport (failure
 /// checks interleaved, errors are `OpError`).
 pub trait Xfer {
-    type Err;
+    type Err: From<crate::error::CommError>;
     fn comm(&self) -> &Comm;
     fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), Self::Err>;
     fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, Self::Err>;
+
+    /// Simultaneous exchange (the `MPI_Sendrecv` shape): post the receive
+    /// from `src`, run the (blocking) send to `dst`, then complete the
+    /// receive. The exchange-structured algorithms — ring, pairwise,
+    /// Bruck, recursive doubling — MUST use this rather than
+    /// send-then-recv: past the fabric's rendezvous threshold a blocking
+    /// send completes only once the partner's receive is posted, and a
+    /// whole ring parked in `send` before anyone posts a receive is the
+    /// classic head-on rendezvous deadlock. With the receive pre-posted on
+    /// every rank, each send finds its CTS and the round makes progress.
+    ///
+    /// The wire schedule (message contents, tags, src/dst pairs) is
+    /// identical to send-then-recv; only the local posting order differs,
+    /// so the §VI-B replay invariant is untouched.
+    fn xchg(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Result<Recvd, Self::Err> {
+        let c = self.comm();
+        let mut req = c.irecv(Src::Rank(src), Tag::Tag(tag));
+        self.send(dst, tag, data)?;
+        Ok(c.wait_recv(&mut req)?)
+    }
 }
 
 /// Plain (unguarded) transport over a [`Comm`].
@@ -472,7 +492,9 @@ fn allreduce_rdouble<X: Xfer>(
         newrank = (me - rem) as i64;
     }
 
-    // Phase 2: recursive doubling over the power-of-two core.
+    // Phase 2: recursive doubling over the power-of-two core. Head-on
+    // pairwise exchange: both partners send simultaneously, so it must be
+    // the recv-posting xchg (rendezvous safety).
     if newrank >= 0 {
         let nr = newrank as usize;
         let mut mask = 1usize;
@@ -483,8 +505,7 @@ fn allreduce_rdouble<X: Xfer>(
             } else {
                 partner_nr + rem
             };
-            x.send(partner, tag, &acc)?;
-            let m = x.recv(Src::Rank(partner), Tag::Tag(tag))?;
+            let m = x.xchg(partner, partner, tag, &acc)?;
             fold(dtype, op, &mut acc, &m.data);
             mask <<= 1;
         }
@@ -535,20 +556,20 @@ fn allreduce_ring<X: Xfer>(
     let left = (me + n - 1) % n;
     // Phase 1: reduce-scatter. After step s every rank holds the partial
     // fold of s+2 contributions in chunk (me - s - 1) mod n; after n−1
-    // steps chunk (me + 1) mod n is complete here.
+    // steps chunk (me + 1) mod n is complete here. Every step is a
+    // whole-ring simultaneous shift — xchg, or the ring deadlocks at
+    // rendezvous-sized chunks.
     for s in 0..n - 1 {
         let send_c = (me + n - s) % n;
         let recv_c = (me + n - s - 1) % n;
-        x.send(right, tag, &acc[range(send_c)])?;
-        let m = x.recv(Src::Rank(left), Tag::Tag(tag))?;
+        let m = x.xchg(right, left, tag, &acc[range(send_c)])?;
         fold(dtype, op, &mut acc[range(recv_c)], &m.data);
     }
     // Phase 2: allgather the completed chunks around the same ring.
     for s in 0..n - 1 {
         let send_c = (me + 1 + n - s) % n;
         let recv_c = (me + n - s) % n;
-        x.send(right, tag, &acc[range(send_c)])?;
-        let m = x.recv(Src::Rank(left), Tag::Tag(tag))?;
+        let m = x.xchg(right, left, tag, &acc[range(send_c)])?;
         acc[range(recv_c)].copy_from_slice(&m.data);
     }
     Ok(acc)
@@ -694,8 +715,8 @@ fn allgather_ring<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>,
     let left = (me + n - 1) % n;
     let mut cur = me;
     for _ in 0..n - 1 {
-        x.send(right, tag, &out[cur])?;
-        let m = x.recv(Src::Rank(left), Tag::Tag(tag))?;
+        // Whole-ring simultaneous shift: recv-posting exchange.
+        let m = x.xchg(right, left, tag, &out[cur])?;
         cur = (cur + n - 1) % n;
         debug_assert!(out[cur].is_empty());
         out[cur] = m.data.to_vec();
@@ -716,8 +737,9 @@ fn allgather_bruck<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>
     while have.len() < n {
         let cnt = have.len();
         let send_cnt = cnt.min(n - cnt);
-        x.send((me + n - k) % n, tag, &pack_blocks(&have[..send_cnt]))?;
-        let m = x.recv(Src::Rank((me + k) % n), Tag::Tag(tag))?;
+        // Distance-k simultaneous exchange round: recv-posting xchg.
+        let packed = pack_blocks(&have[..send_cnt]);
+        let m = x.xchg((me + n - k) % n, (me + k) % n, tag, &packed)?;
         unpack_blocks_into(&m.data, &mut have);
         k <<= 1;
     }
@@ -746,8 +768,9 @@ fn alltoall_pairwise<X: Xfer>(
     for i in 1..n {
         let to = (me + i) % n;
         let from = (me + n - i) % n;
-        x.send(to, tag, &blocks[to])?;
-        let m = x.recv(Src::Rank(from), Tag::Tag(tag))?;
+        // Every rank sends and receives simultaneously each step:
+        // recv-posting xchg keeps the schedule rendezvous-safe.
+        let m = x.xchg(to, from, tag, &blocks[to])?;
         out[from] = m.data.to_vec();
     }
     Ok(out)
@@ -769,8 +792,9 @@ fn alltoall_bruck<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Ve
             .filter(|i| i & k != 0)
             .map(|i| (i, std::mem::take(&mut tmp[i])))
             .collect();
-        x.send((me + k) % n, tag, &pack_indexed(&entries))?;
-        let m = x.recv(Src::Rank((me + n - k) % n), Tag::Tag(tag))?;
+        // Simultaneous bit-k exchange round: recv-posting xchg.
+        let packed = pack_indexed(&entries);
+        let m = x.xchg((me + k) % n, (me + n - k) % n, tag, &packed)?;
         let mut got = Vec::new();
         unpack_indexed_into(&m.data, &mut got);
         for (i, b) in got {

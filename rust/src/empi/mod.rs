@@ -31,12 +31,16 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::CommError;
-use crate::fabric::{Envelope, Fabric, MatchSpec};
+use crate::fabric::{Envelope, Fabric, MatchSpec, SendHandle};
 
-/// Deadline for internal blocking receives. Generous: it only fires on
-/// protocol bugs or "native MPI would have hung here" situations, which we
-/// want to surface loudly in tests.
+/// Deadline for internal blocking receives *and* blocking rendezvous
+/// sends. Generous: it only fires on protocol bugs or "native MPI would
+/// have hung here" situations, which we want to surface loudly in tests.
 pub const RECV_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Park interval while blocking on a rendezvous send gate or a posted
+/// receive (bounds poison-detection latency without busy-waiting).
+const SEND_PARK: Duration = Duration::from_micros(200);
 
 /// MPI_ANY_SOURCE analogue at the comm-rank level.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +110,57 @@ impl Drop for RecvReq {
     fn drop(&mut self) {
         if let Some(token) = self.token.take() {
             self.fabric.cancel_posted(self.me, token);
+        }
+    }
+}
+
+/// Pending nonblocking send (MPI_Request for sends).
+///
+/// An eager (sub-`rndv_threshold`) transmission is complete at post time,
+/// matching a buffered native-MPI send; a rendezvous-sized one completes
+/// when the destination *matches* it with a receive. Dropping the request
+/// detaches the transmission — delivery still happens, completion is
+/// simply unobserved (the recovery protocol's resends rely on this).
+pub struct SendReq {
+    handle: SendHandle,
+    /// Destination comm/remote rank and tag, kept for timeout diagnostics.
+    dst: usize,
+    tag: i64,
+}
+
+impl SendReq {
+    pub fn is_done(&self) -> bool {
+        self.handle.is_done()
+    }
+
+    /// Park up to `timeout` for completion; returns [`SendReq::is_done`].
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        self.handle.wait_timeout(timeout)
+    }
+}
+
+/// Block on a send request with the standard deadline, checking the
+/// sender's own liveness each park tick. Shared by `Comm` and `InterComm`.
+fn finish_send(fabric: &Fabric, me: usize, req: &SendReq) -> Result<(), CommError> {
+    if req.is_done() {
+        return Ok(());
+    }
+    let start = std::time::Instant::now();
+    loop {
+        fabric.procs.check_poison(me)?;
+        if req.wait_timeout(SEND_PARK) {
+            return Ok(());
+        }
+        if start.elapsed() >= RECV_DEADLINE {
+            // A rendezvous send nobody ever receives is how a real MPI
+            // hangs; surface it loudly instead.
+            return Err(CommError::Timeout {
+                rank: me,
+                detail: format!(
+                    "{} rendezvous send to {} tag {} never matched",
+                    fabric.label, req.dst, req.tag
+                ),
+            });
         }
     }
 }
@@ -202,13 +257,18 @@ impl Comm {
 
     // ---------------------------------------------------------------- p2p
 
-    /// Eager send (EMPI_Send). Completes locally; delivery is the fabric's
-    /// problem — matching native-MPI eager semantics for our message sizes.
+    /// Blocking send (EMPI_Send). Sub-`rndv_threshold` payloads are eager
+    /// and complete locally; rendezvous-sized payloads block until the
+    /// destination matches them with a receive — the real protocol switch,
+    /// so send-before-recv cycles past the threshold deadlock here exactly
+    /// as they would on the paper's cluster (surfaced as a loud `Timeout`
+    /// after [`RECV_DEADLINE`] rather than a hang).
     pub fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
         self.send_with_id(dst, tag, 0, data)
     }
 
-    /// Send with an explicit piggybacked send-id (PartRePer logging, §V-B).
+    /// Blocking send with an explicit piggybacked send-id (PartRePer
+    /// logging, §V-B).
     pub fn send_with_id(
         &self,
         dst: usize,
@@ -216,17 +276,11 @@ impl Comm {
         send_id: u64,
         data: &[u8],
     ) -> Result<(), CommError> {
-        self.fabric.send(Envelope::new(
-            self.my_fabric_rank(),
-            self.group[dst],
-            self.ctx,
-            tag,
-            send_id,
-            data.to_vec(),
-        ))
+        let req = self.isend_with_id(dst, tag, send_id, data)?;
+        self.wait_send(&req)
     }
 
-    /// Zero-copy variant used on fan-out paths.
+    /// Blocking zero-copy variant (fan-out paths).
     pub fn send_shared(
         &self,
         dst: usize,
@@ -234,20 +288,55 @@ impl Comm {
         send_id: u64,
         data: Arc<Vec<u8>>,
     ) -> Result<(), CommError> {
-        self.fabric.send(Envelope {
+        let req = self.isend_shared(dst, tag, send_id, data)?;
+        self.wait_send(&req)
+    }
+
+    /// Nonblocking send (EMPI_Isend): the transmission is posted and the
+    /// caller keeps a [`SendReq`] to poll or wait on. Never blocks, even
+    /// past the rendezvous threshold.
+    pub fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> Result<SendReq, CommError> {
+        self.isend_with_id(dst, tag, 0, data)
+    }
+
+    /// Nonblocking send with a piggybacked send-id.
+    pub fn isend_with_id(
+        &self,
+        dst: usize,
+        tag: i64,
+        send_id: u64,
+        data: &[u8],
+    ) -> Result<SendReq, CommError> {
+        self.isend_shared(dst, tag, send_id, Arc::new(data.to_vec()))
+    }
+
+    /// Nonblocking zero-copy send.
+    pub fn isend_shared(
+        &self,
+        dst: usize,
+        tag: i64,
+        send_id: u64,
+        data: Arc<Vec<u8>>,
+    ) -> Result<SendReq, CommError> {
+        let handle = self.fabric.start_send(Envelope {
             src: self.my_fabric_rank(),
             dst: self.group[dst],
             ctx: self.ctx,
             tag,
             send_id,
             data,
+        })?;
+        Ok(SendReq {
+            handle,
+            dst,
+            tag,
         })
     }
 
-    /// Nonblocking send — identical to `send` under eager delivery; kept as
-    /// a distinct name so protocol code reads like the paper's pseudocode.
-    pub fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
-        self.send(dst, tag, data)
+    /// Block until a nonblocking send completes (EMPI_Wait for sends),
+    /// with the standard deadline and liveness checks.
+    pub fn wait_send(&self, req: &SendReq) -> Result<(), CommError> {
+        finish_send(&self.fabric, self.my_fabric_rank(), req)
     }
 
     /// Blocking receive.
@@ -257,6 +346,26 @@ impl Comm {
             .fabric
             .recv(self.my_fabric_rank(), &spec, RECV_DEADLINE)?;
         Ok(self.translate(e))
+    }
+
+    /// Block until a posted receive completes (EMPI_Wait for receives):
+    /// park on the mailbox arrival clock with the standard deadline.
+    pub fn wait_recv(&self, req: &mut RecvReq) -> Result<Recvd, CommError> {
+        let me = self.my_fabric_rank();
+        let start = std::time::Instant::now();
+        let mut clock = self.fabric.arrivals(me);
+        loop {
+            if let Some(m) = self.test(req)? {
+                return Ok(m);
+            }
+            if start.elapsed() >= RECV_DEADLINE {
+                return Err(CommError::Timeout {
+                    rank: me,
+                    detail: format!("{} wait_recv", self.fabric.label),
+                });
+            }
+            clock = self.fabric.wait_new_mail(me, clock, SEND_PARK);
+        }
     }
 
     /// Post a nonblocking receive into the fabric's posted-receive queue.
@@ -392,7 +501,8 @@ impl InterComm {
         self.local[self.my_local_rank]
     }
 
-    /// Send to a rank of the *remote* group.
+    /// Blocking send to a rank of the *remote* group (rendezvous semantics
+    /// as on [`Comm::send`]).
     pub fn send(&self, remote_rank: usize, tag: i64, data: &[u8]) -> Result<(), CommError> {
         self.send_with_id(remote_rank, tag, 0, data)
     }
@@ -404,14 +514,8 @@ impl InterComm {
         send_id: u64,
         data: &[u8],
     ) -> Result<(), CommError> {
-        self.fabric.send(Envelope::new(
-            self.my_fabric_rank(),
-            self.remote[remote_rank],
-            self.ctx,
-            tag,
-            send_id,
-            data.to_vec(),
-        ))
+        let req = self.isend_with_id(remote_rank, tag, send_id, data)?;
+        self.wait_send(&req)
     }
 
     pub fn send_shared(
@@ -421,14 +525,48 @@ impl InterComm {
         send_id: u64,
         data: Arc<Vec<u8>>,
     ) -> Result<(), CommError> {
-        self.fabric.send(Envelope {
+        let req = self.isend_shared(remote_rank, tag, send_id, data)?;
+        self.wait_send(&req)
+    }
+
+    /// Nonblocking send to the remote group (never blocks; poll or wait
+    /// the returned [`SendReq`]).
+    pub fn isend_with_id(
+        &self,
+        remote_rank: usize,
+        tag: i64,
+        send_id: u64,
+        data: &[u8],
+    ) -> Result<SendReq, CommError> {
+        self.isend_shared(remote_rank, tag, send_id, Arc::new(data.to_vec()))
+    }
+
+    /// Nonblocking zero-copy send to the remote group.
+    pub fn isend_shared(
+        &self,
+        remote_rank: usize,
+        tag: i64,
+        send_id: u64,
+        data: Arc<Vec<u8>>,
+    ) -> Result<SendReq, CommError> {
+        let handle = self.fabric.start_send(Envelope {
             src: self.my_fabric_rank(),
             dst: self.remote[remote_rank],
             ctx: self.ctx,
             tag,
             send_id,
             data,
+        })?;
+        Ok(SendReq {
+            handle,
+            dst: remote_rank,
+            tag,
         })
+    }
+
+    /// Block until a nonblocking intercomm send completes.
+    pub fn wait_send(&self, req: &SendReq) -> Result<(), CommError> {
+        finish_send(&self.fabric, self.my_fabric_rank(), req)
     }
 
     /// Blocking receive from a rank of the remote group.
@@ -649,6 +787,54 @@ mod tests {
         let out: Vec<u8> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(out[2], 0);
         assert_eq!(out[3], 1);
+    }
+
+    #[test]
+    fn blocking_send_past_rndv_threshold_completes_on_receive() {
+        // A rendezvous-sized Comm::send must block until the receiver
+        // matches it — and then complete, not time out.
+        let procs = ProcSet::new(2);
+        let fabric = Fabric::new("rndv-comm", procs, NetModel::instant().with_rndv(1024));
+        let ctx = fabric.alloc_ctx();
+        let handles: Vec<_> = (0..2usize)
+            .map(|r| {
+                let fabric = fabric.clone();
+                thread::spawn(move || {
+                    let comm = Comm::world(fabric, ctx, r);
+                    if r == 0 {
+                        let t0 = std::time::Instant::now();
+                        comm.send(1, 3, &[7u8; 4096]).unwrap();
+                        t0.elapsed()
+                    } else {
+                        std::thread::sleep(Duration::from_millis(25));
+                        let m = comm.recv(Src::Rank(0), Tag::Tag(3)).unwrap();
+                        assert_eq!(m.data.len(), 4096);
+                        Duration::ZERO
+                    }
+                })
+            })
+            .collect();
+        let out: Vec<Duration> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(
+            out[0] >= Duration::from_millis(15),
+            "sender must have blocked for the match, took {:?}",
+            out[0]
+        );
+    }
+
+    #[test]
+    fn isend_never_blocks_and_reports_completion() {
+        let procs = ProcSet::new(2);
+        let fabric = Fabric::new("rndv-isend", procs, NetModel::instant().with_rndv(64));
+        let ctx = fabric.alloc_ctx();
+        let comm0 = Comm::world(fabric.clone(), ctx, 0);
+        let req = comm0.isend(1, 9, &[1u8; 256]).unwrap();
+        assert!(!req.is_done(), "rendezvous-sized, nobody receiving yet");
+        let comm1 = Comm::world(fabric, ctx, 1);
+        let m = comm1.recv(Src::Rank(0), Tag::Tag(9)).unwrap();
+        assert_eq!(m.data.len(), 256);
+        assert!(req.is_done());
+        comm0.wait_send(&req).unwrap();
     }
 
     #[test]

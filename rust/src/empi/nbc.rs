@@ -5,13 +5,16 @@
 //! the blocking `EMPI_Alltoallv`'s fixed pairwise schedule (§VII-A).
 
 use super::coll::OP_IALLTOALLV;
-use super::{Comm, RecvReq, Src, Tag};
+use super::{Comm, RecvReq, SendReq, Src, Tag};
 use crate::error::CommError;
 
 /// In-flight nonblocking alltoallv.
 ///
-/// All sends go out eagerly at creation; `test()` then drains whichever
-/// incoming blocks have arrived, in any order.
+/// Receives are posted *before* the sends go out (rendezvous safety: past
+/// `net.rndv_threshold` a send completes only when matched, so every rank
+/// must be receivable before anyone needs its CTS), then all sends are
+/// posted nonblocking; `test()` drains whichever incoming blocks have
+/// arrived, in any order, and retires completed send requests.
 ///
 /// Wire/tag contract: one collective round tag, sends issued in pairwise
 /// order (`me+1, me+2, …`), one receive posted per source — a fixed
@@ -22,6 +25,7 @@ use crate::error::CommError;
 /// skew (§VII-A), which any fixed exchange schedule would forfeit.
 pub struct IAlltoallv {
     reqs: Vec<Option<RecvReq>>,
+    sends: Vec<SendReq>,
     out: Vec<Option<Vec<u8>>>,
     outstanding: usize,
 }
@@ -37,15 +41,10 @@ impl IAlltoallv {
         let mut out: Vec<Option<Vec<u8>>> = vec![None; n];
         out[me] = Some(blocks[me].clone());
 
-        // Eager sends, pairwise order for fabric fairness.
-        for i in 1..n {
-            let to = (me + i) % n;
-            comm.isend(to, tag, &blocks[to])?;
-        }
-
-        // Post one receive per source. These land in the fabric's
+        // Post one receive per source first. These land in the fabric's
         // posted-receive queue, so arriving blocks complete their request
-        // directly and each `test` sweep is O(outstanding) slot checks.
+        // directly and each `test` sweep is O(outstanding) slot checks —
+        // and every peer's rendezvous-sized send finds its CTS waiting.
         let mut reqs: Vec<Option<RecvReq>> = (0..n).map(|_| None).collect();
         let mut outstanding = 0;
         for (src, slot) in reqs.iter_mut().enumerate() {
@@ -54,19 +53,25 @@ impl IAlltoallv {
                 outstanding += 1;
             }
         }
+
+        // Nonblocking sends, pairwise order for fabric fairness.
+        let mut sends = Vec::with_capacity(n.saturating_sub(1));
+        for i in 1..n {
+            let to = (me + i) % n;
+            sends.push(comm.isend(to, tag, &blocks[to])?);
+        }
         Ok(Self {
             reqs,
+            sends,
             out,
             outstanding,
         })
     }
 
-    /// One progression step: poll every outstanding receive once. Returns
-    /// `true` when the collective is complete.
+    /// One progression step: poll every outstanding receive once and
+    /// retire completed sends. Returns `true` when the collective is
+    /// complete (all blocks received *and* all sends matched or eager).
     pub fn test(&mut self, comm: &Comm) -> Result<bool, CommError> {
-        if self.outstanding == 0 {
-            return Ok(true);
-        }
         for (src, slot) in self.reqs.iter_mut().enumerate() {
             if let Some(req) = slot {
                 if let Some(m) = comm.test(req)? {
@@ -76,7 +81,8 @@ impl IAlltoallv {
                 }
             }
         }
-        Ok(self.outstanding == 0)
+        self.sends.retain(|s| !s.is_done());
+        Ok(self.outstanding == 0 && self.sends.is_empty())
     }
 
     /// Spin `test()` to completion (blocking wait).
@@ -89,12 +95,12 @@ impl IAlltoallv {
 
     /// Consume the completed collective. Panics if still outstanding.
     pub fn finish(self) -> Vec<Vec<u8>> {
-        assert_eq!(self.outstanding, 0, "ialltoallv not complete");
+        assert!(self.is_complete(), "ialltoallv not complete");
         self.out.into_iter().map(|b| b.unwrap()).collect()
     }
 
     pub fn is_complete(&self) -> bool {
-        self.outstanding == 0
+        self.outstanding == 0 && self.sends.iter().all(|s| s.is_done())
     }
 }
 

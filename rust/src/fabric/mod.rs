@@ -33,6 +33,33 @@
 //! arrival sequence; the "send to a dead rank is silently enqueued"
 //! native-MPI behaviour the recovery protocol relies on is preserved
 //! because delivery never inspects liveness.
+//!
+//! # Rendezvous completion and where wire time is charged
+//!
+//! [`Fabric::start_send`] returns a [`SendHandle`]. A payload below the
+//! model's `rndv_threshold` is **eager**: the handle completes at post
+//! time, like a buffered native-MPI send. A payload at or past the
+//! threshold is **rendezvous-sized**: its envelope is queued immediately
+//! (the data motion is simulated, not gated), but the handle completes
+//! only when a receive *matches* the envelope — the CTS moment of the
+//! RTS/CTS protocol. Blocking sends built on this (the `empi::Comm`
+//! layer) therefore reproduce the classic rendezvous hazard: a world
+//! where every rank enters `send` before anyone posts a receive
+//! deadlocks, exactly as on a real interconnect. [`Fabric::send`] itself
+//! stays fire-and-forget (it drops the handle), so control-plane traffic
+//! (restore pushes, ULFM messages) never blocks on matching.
+//!
+//! Injected wire delay (`NetModel::inject`) is charged on the **claiming
+//! side** against a per-mailbox receive-NIC clock: each envelope records
+//! its modelled cost and post instant, and a claim occupies the NIC from
+//! `max(post instant, NIC free)` for the full cost, with the receiver
+//! busy-waiting until that finish time. A transfer that aged in the queue
+//! therefore costs nothing extra (it overlapped with whatever the sender
+//! did meanwhile — the DMA model that makes nonblocking fan-out
+//! measurably cheaper than serial blocking transmits), while a root that
+//! ingests n messages still pays their costs back to back on its NIC
+//! clock — preserving the root-bottleneck effect the tuned collective
+//! engine's crossovers encode.
 
 pub mod envelope;
 pub mod netmodel;
@@ -52,6 +79,87 @@ use std::time::{Duration, Instant};
 
 use crate::error::CommError;
 
+/// Sender-side completion gate for a rendezvous-sized transmission: opens
+/// at the moment a receive *matches* the envelope (the CTS of the RTS/CTS
+/// handshake). Idempotent; once open it stays open.
+pub struct RndvGate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl RndvGate {
+    fn new() -> Self {
+        Self {
+            open: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn open(&self) {
+        let mut g = self.open.lock().unwrap();
+        if !*g {
+            *g = true;
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_open(&self) -> bool {
+        *self.open.lock().unwrap()
+    }
+
+    /// Park up to `timeout` for the gate; returns whether it is open.
+    fn wait_timeout(&self, timeout: Duration) -> bool {
+        let g = self.open.lock().unwrap();
+        if *g {
+            return true;
+        }
+        let (g, _) = self.cv.wait_timeout(g, timeout).unwrap();
+        *g
+    }
+}
+
+/// Handle for a transmission begun with [`Fabric::start_send`]. Eager
+/// (sub-threshold) sends are complete at post time; rendezvous-sized sends
+/// complete when a matching receive claims the envelope. Dropping the
+/// handle *detaches* the send (fire-and-forget): delivery still happens,
+/// nothing observes completion — how the recovery protocol's resends and
+/// the restore store's pushes behave.
+pub struct SendHandle {
+    gate: Option<Arc<RndvGate>>,
+}
+
+impl SendHandle {
+    pub fn is_done(&self) -> bool {
+        self.gate.as_ref().map_or(true, |g| g.is_open())
+    }
+
+    /// Park up to `timeout` for completion; returns [`SendHandle::is_done`].
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        self.gate.as_ref().map_or(true, |g| g.wait_timeout(timeout))
+    }
+}
+
+/// One delivered-but-unconsumed message: the envelope plus its arrival
+/// stamp, modelled wire cost (charged to whoever claims it, remainder
+/// only), and the sender's rendezvous gate when the payload crossed the
+/// threshold.
+struct Delivery {
+    seq: u64,
+    env: Envelope,
+    cost_ns: u64,
+    sent_at: Instant,
+    gate: Option<Arc<RndvGate>>,
+}
+
+impl Delivery {
+    /// A receive matched this envelope: release the rendezvous sender.
+    fn claim(&self) {
+        if let Some(g) = &self.gate {
+            g.open();
+        }
+    }
+}
+
 /// Arrived envelopes no receive had claimed, bucketed by [`BucketKey`].
 /// Buckets are removed as soon as they drain so wildcard scans only touch
 /// live keys. Every envelope carries its arrival sequence number; within a
@@ -59,7 +167,7 @@ use crate::error::CommError;
 /// earliest arrival of that channel.
 #[derive(Default)]
 struct UnexpectedQueue {
-    buckets: HashMap<BucketKey, VecDeque<(u64, Envelope)>>,
+    buckets: HashMap<BucketKey, VecDeque<Delivery>>,
     next_seq: u64,
     len: usize,
 }
@@ -73,25 +181,26 @@ impl UnexpectedQueue {
         s
     }
 
-    fn push_with_seq(&mut self, seq: u64, env: Envelope) {
+    fn push(&mut self, d: Delivery) {
         self.buckets
-            .entry(env.bucket_key())
+            .entry(d.env.bucket_key())
             .or_default()
-            .push_back((seq, env));
+            .push_back(d);
         self.len += 1;
     }
 
     /// Put back a message that had been delivered to a since-cancelled
     /// posted receive, at its original arrival position.
-    fn reinject(&mut self, seq: u64, env: Envelope) {
-        let q = self.buckets.entry(env.bucket_key()).or_default();
-        let pos = q.iter().position(|&(s, _)| s > seq).unwrap_or(q.len());
-        q.insert(pos, (seq, env));
+    fn reinject(&mut self, d: Delivery) {
+        let q = self.buckets.entry(d.env.bucket_key()).or_default();
+        let pos = q.iter().position(|e| e.seq > d.seq).unwrap_or(q.len());
+        q.insert(pos, d);
         self.len += 1;
     }
 
-    /// Remove and return the earliest arrival matching `spec`.
-    fn take(&mut self, spec: &MatchSpec) -> Option<(u64, Envelope)> {
+    /// Remove and return the earliest arrival matching `spec`, releasing
+    /// its rendezvous sender (matching a queued envelope IS the claim).
+    fn take(&mut self, spec: &MatchSpec) -> Option<Delivery> {
         let key = match spec.exact_key() {
             Some(k) => {
                 if !self.buckets.contains_key(&k) {
@@ -105,7 +214,7 @@ impl UnexpectedQueue {
                 .buckets
                 .iter()
                 .filter(|(k, _)| spec.matches_key(k))
-                .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |&(s, _)| s))
+                .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |d| d.seq))
                 .map(|(k, _)| k)?,
         };
         let q = self.buckets.get_mut(&key).expect("bucket exists");
@@ -114,6 +223,7 @@ impl UnexpectedQueue {
             self.buckets.remove(&key);
         }
         self.len -= 1;
+        got.claim();
         Some(got)
     }
 
@@ -125,6 +235,12 @@ impl UnexpectedQueue {
     }
 
     fn clear(&mut self) {
+        // Discarded mail must not strand rendezvous senders forever.
+        for q in self.buckets.values() {
+            for d in q {
+                d.claim();
+            }
+        }
         self.buckets.clear();
         self.len = 0;
     }
@@ -135,8 +251,8 @@ impl UnexpectedQueue {
 /// only waits to be consumed or cancelled by its owner.
 struct PostedEntry {
     spec: MatchSpec,
-    /// `(arrival seq, envelope)` once delivered.
-    slot: Option<(u64, Envelope)>,
+    /// The delivery, once matched.
+    slot: Option<Delivery>,
     /// Private wakeup for this waiter (paired with the mailbox mutex).
     cv: Arc<Condvar>,
 }
@@ -177,7 +293,7 @@ impl PostedQueue {
 
     /// Create an entry that is already complete (its message was waiting in
     /// the unexpected queue when the receive was posted).
-    fn post_filled(&mut self, spec: MatchSpec, got: (u64, Envelope)) -> u64 {
+    fn post_filled(&mut self, spec: MatchSpec, got: Delivery) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.entries.insert(
@@ -209,13 +325,14 @@ impl PostedQueue {
         }
     }
 
-    /// Deliver `env` (stamped with arrival `seq`) into entry `id`, unlist
-    /// it, and wake exactly that waiter.
-    fn fill(&mut self, id: u64, seq: u64, env: Envelope) {
+    /// Deliver `d` into entry `id`, unlist it, release the rendezvous
+    /// sender (the receive matched), and wake exactly that waiter.
+    fn fill(&mut self, id: u64, d: Delivery) {
         let key = self.entries.get(&id).expect("filled entry exists").spec.exact_key();
         Self::unlist_from(&mut self.exact, &mut self.wild, key, id);
         let e = self.entries.get_mut(&id).expect("filled entry exists");
-        e.slot = Some((seq, env));
+        d.claim();
+        e.slot = Some(d);
         e.cv.notify_all();
     }
 
@@ -242,17 +359,19 @@ impl PostedQueue {
 
     /// Take the delivered envelope, removing the request entirely. `None`
     /// while undelivered or after the entry was already consumed/cancelled.
-    fn try_consume(&mut self, id: u64) -> Option<Envelope> {
+    fn try_consume(&mut self, id: u64) -> Option<Delivery> {
         if self.entries.get(&id)?.slot.is_some() {
             let e = self.entries.remove(&id).expect("entry present");
-            return e.slot.map(|(_, env)| env);
+            return e.slot;
         }
         None
     }
 
     /// Abandon a request. A delivered-but-unread message is handed back so
-    /// the caller can re-queue it — it must never be lost.
-    fn cancel(&mut self, id: u64) -> Option<(u64, Envelope)> {
+    /// the caller can re-queue it — it must never be lost. (Its rendezvous
+    /// sender, if any, was already released at fill time; a match is not
+    /// un-matched by cancellation, as in MPI.)
+    fn cancel(&mut self, id: u64) -> Option<Delivery> {
         let e = self.entries.remove(&id)?;
         if e.slot.is_none() {
             Self::unlist_from(&mut self.exact, &mut self.wild, e.spec.exact_key(), id);
@@ -273,6 +392,14 @@ impl PostedQueue {
 struct MailboxInner {
     unexpected: UnexpectedQueue,
     posted: PostedQueue,
+    /// When this rank's receive NIC finishes its last charged transfer
+    /// (injection mode only). Consecutive claims serialize on it: a
+    /// transfer starts at `max(its post instant, nic_free_at)`, so a root
+    /// ingesting n messages pays their wire costs back to back while a
+    /// single transfer that aged in the queue costs nothing extra — the
+    /// receive-side NIC model behind the collective-engine crossovers,
+    /// kept compatible with sender-side overlap (DMA).
+    nic_free_at: Option<Instant>,
     /// Arrival clock parked pollers compare against. Deliberately distinct
     /// from the unexpected queue's ordering sequence: a cancellation
     /// re-publishes a message (bumping this clock so pollers re-test)
@@ -445,46 +572,82 @@ impl Fabric {
         self.next_ctx.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Deliver an envelope. Sends never fail at the fabric level: a message
-    /// to a dead rank is enqueued and simply never read — exactly how an
-    /// eager native-MPI send to a crashed peer behaves (the paper relies on
-    /// this: EMPI must stay oblivious to failures, §IV-C).
+    /// Fire-and-forget delivery. Sends never fail at the fabric level: a
+    /// message to a dead rank is enqueued and simply never read — exactly
+    /// how an eager native-MPI send to a crashed peer behaves (the paper
+    /// relies on this: EMPI must stay oblivious to failures, §IV-C). The
+    /// rendezvous completion handle is dropped; callers that must observe
+    /// matching (blocking MPI sends) use [`Fabric::start_send`].
+    pub fn send(&self, env: Envelope) -> Result<(), CommError> {
+        self.start_send(env).map(|_| ())
+    }
+
+    /// Begin one transmission and return its completion handle. The
+    /// envelope is queued (or steered into a posted receive) immediately;
+    /// the handle completes at post time for eager payloads and at
+    /// match time for rendezvous-sized ones (see the module docs).
     ///
     /// Delivery first consults the destination's posted-receive queue; on a
     /// hit the envelope bypasses the unexpected queue entirely and only the
     /// matching waiter is woken.
-    pub fn send(&self, env: Envelope) -> Result<(), CommError> {
+    pub fn start_send(&self, env: Envelope) -> Result<SendHandle, CommError> {
         self.procs.check_poison(env.src)?;
         let nbytes = env.data.len() as u64;
         self.metrics.messages.fetch_add(1, Ordering::Relaxed);
         self.metrics.bytes.fetch_add(nbytes, Ordering::Relaxed);
         // Placement-aware cost: adjacent ranks move bytes at full rate,
-        // everything else pays the inter-node penalty.
+        // everything else pays the inter-node penalty. Charged to the
+        // claiming receiver (remainder only), never busy-waited here.
         let cost = self
             .model
             .wire_ns_between(nbytes as usize, self.boxes.len(), env.src, env.dst);
         self.metrics.virtual_ns.fetch_add(cost, Ordering::Relaxed);
+        let gate = (env.data.len() >= self.model.rndv_threshold)
+            .then(|| Arc::new(RndvGate::new()));
 
         let mb = &self.boxes[env.dst];
         let mut guard = mb.inner.lock().unwrap();
-        // Injected wire time is spent while holding the destination
-        // mailbox: concurrent senders to one rank serialize, modelling the
-        // receive-side NIC — the effect that makes linear (root-ingest)
-        // collectives lose to trees at scale on real fabrics.
-        self.model.inject_delay(cost);
         let inner = &mut *guard;
         inner.arrivals += 1;
-        let seq = inner.unexpected.alloc_seq();
-        match inner.posted.match_posted(&env) {
-            Some(id) => inner.posted.fill(id, seq, env),
-            None => inner.unexpected.push_with_seq(seq, env),
+        let d = Delivery {
+            seq: inner.unexpected.alloc_seq(),
+            cost_ns: cost,
+            sent_at: Instant::now(),
+            gate: gate.clone(),
+            env,
+        };
+        match inner.posted.match_posted(&d.env) {
+            Some(id) => inner.posted.fill(id, d),
+            None => inner.unexpected.push(d),
         }
         let ring = inner.bell_waiters > 0;
         drop(guard);
         if ring {
             mb.bell.notify_all();
         }
-        Ok(())
+        Ok(SendHandle { gate })
+    }
+
+    /// Charge a claimed delivery's wire time to receiver `me` (injection
+    /// mode only): the transfer occupies the rank's receive NIC from
+    /// `max(post instant, NIC free)` for `cost_ns`, so consecutive claims
+    /// serialize (root-ingest bottleneck preserved) while a transfer that
+    /// completed in the background costs nothing. The busy-wait happens
+    /// outside the mailbox lock; only the NIC bookkeeping is under it.
+    fn settle(&self, me: usize, d: &Delivery) {
+        if !self.model.inject || d.cost_ns == 0 {
+            return;
+        }
+        let finish = {
+            let mut inner = self.boxes[me].inner.lock().unwrap();
+            let start = inner.nic_free_at.map_or(d.sent_at, |f| f.max(d.sent_at));
+            let finish = start + Duration::from_nanos(d.cost_ns);
+            inner.nic_free_at = Some(finish);
+            finish
+        };
+        while Instant::now() < finish {
+            std::hint::spin_loop();
+        }
     }
 
     /// Non-blocking matched receive: removes and returns the earliest
@@ -493,7 +656,12 @@ impl Fabric {
     pub fn try_recv(&self, me: usize, spec: &MatchSpec) -> Result<Option<Envelope>, CommError> {
         self.procs.check_poison(me)?;
         let mut inner = self.boxes[me].inner.lock().unwrap();
-        Ok(inner.unexpected.take(spec).map(|(_, e)| e))
+        let got = inner.unexpected.take(spec);
+        drop(inner);
+        Ok(got.map(|d| {
+            self.settle(me, &d);
+            d.env
+        }))
     }
 
     // ------------------------------------------------- posted receives
@@ -517,7 +685,12 @@ impl Fabric {
     pub fn poll_posted(&self, me: usize, token: u64) -> Result<Option<Envelope>, CommError> {
         self.procs.check_poison(me)?;
         let mut inner = self.boxes[me].inner.lock().unwrap();
-        Ok(inner.posted.try_consume(token))
+        let got = inner.posted.try_consume(token);
+        drop(inner);
+        Ok(got.map(|d| {
+            self.settle(me, &d);
+            d.env
+        }))
     }
 
     /// Cancel a posted receive. If its message had already been delivered,
@@ -529,12 +702,12 @@ impl Fabric {
         let mb = &self.boxes[me];
         let mut guard = mb.inner.lock().unwrap();
         let inner = &mut *guard;
-        let Some((seq, env)) = inner.posted.cancel(token) else {
+        let Some(d) = inner.posted.cancel(token) else {
             return;
         };
-        match inner.posted.match_posted(&env) {
-            Some(id) => inner.posted.fill(id, seq, env),
-            None => inner.unexpected.reinject(seq, env),
+        match inner.posted.match_posted(&d.env) {
+            Some(id) => inner.posted.fill(id, d),
+            None => inner.unexpected.reinject(d),
         }
         // Ring the clock: the message is visible again (it was counted as
         // an arrival once, but parked pollers compare, not count).
@@ -594,20 +767,31 @@ impl Fabric {
         spec: &MatchSpec,
         deadline: Duration,
     ) -> Result<Envelope, CommError> {
+        let d = self.recv_delivery(me, spec, deadline)?;
+        self.settle(me, &d);
+        Ok(d.env)
+    }
+
+    fn recv_delivery(
+        &self,
+        me: usize,
+        spec: &MatchSpec,
+        deadline: Duration,
+    ) -> Result<Delivery, CommError> {
         let start = Instant::now();
         let mb = &self.boxes[me];
         let mut guard = mb.inner.lock().unwrap();
         self.procs.check_poison(me)?;
-        if let Some((_, env)) = guard.unexpected.take(spec) {
-            return Ok(env);
+        if let Some(d) = guard.unexpected.take(spec) {
+            return Ok(d);
         }
         let (id, cv) = guard.posted.post(spec.clone());
         loop {
             let elapsed = start.elapsed();
             if elapsed >= deadline {
                 // Delivered at the very last instant? Take it; else cancel.
-                if let Some((_, env)) = guard.posted.cancel(id) {
-                    return Ok(env);
+                if let Some(d) = guard.posted.cancel(id) {
+                    return Ok(d);
                 }
                 return Err(CommError::Timeout {
                     rank: me,
@@ -619,15 +803,15 @@ impl Fabric {
             guard = g;
             if let Err(e) = self.procs.check_poison(me) {
                 let inner = &mut *guard;
-                if let Some((seq, env)) = inner.posted.cancel(id) {
+                if let Some(d) = inner.posted.cancel(id) {
                     // The rank is dying; leave the message queued (and
                     // never read), like any other mail to a dead rank.
-                    inner.unexpected.reinject(seq, env);
+                    inner.unexpected.reinject(d);
                 }
                 return Err(e);
             }
-            if let Some(env) = guard.posted.try_consume(id) {
-                return Ok(env);
+            if let Some(d) = guard.posted.try_consume(id) {
+                return Ok(d);
             }
         }
     }
@@ -928,6 +1112,60 @@ mod tests {
         // The mailbox still works after a purge.
         f.send(env(0, 1, 1, 1, b"d")).unwrap();
         assert_eq!(&*f.try_recv(1, &MatchSpec::exact(0, 1, 1)).unwrap().unwrap().data, b"d");
+    }
+
+    // ------------------------------------------- rendezvous completion
+
+    #[test]
+    fn eager_send_handle_completes_at_post() {
+        let (_p, f) = tiny(2);
+        let h = f.start_send(env(0, 1, 1, 7, b"small")).unwrap();
+        assert!(h.is_done(), "sub-threshold sends are eager");
+    }
+
+    #[test]
+    fn rendezvous_send_completes_only_when_claimed() {
+        let procs = ProcSet::new(2);
+        let f = Fabric::new("rndv", procs, NetModel::instant().with_rndv(8));
+        let h = f.start_send(env(0, 1, 1, 7, &[0u8; 64])).unwrap();
+        assert!(!h.is_done(), "rendezvous send must wait for a match");
+        assert!(!h.wait_timeout(Duration::from_millis(1)));
+        // The payload is already queued (data motion is not gated)...
+        assert_eq!(f.queued(1), 1);
+        // ...and the matching receive is the CTS that releases the sender.
+        let got = f.try_recv(1, &MatchSpec::exact(0, 1, 7)).unwrap().unwrap();
+        assert_eq!(got.data.len(), 64);
+        assert!(h.is_done());
+    }
+
+    #[test]
+    fn rendezvous_send_into_posted_receive_completes_immediately() {
+        let procs = ProcSet::new(2);
+        let f = Fabric::new("rndv", procs, NetModel::instant().with_rndv(8));
+        let id = f.post_recv(1, &MatchSpec::exact(0, 1, 9));
+        let h = f.start_send(env(0, 1, 1, 9, &[1u8; 32])).unwrap();
+        assert!(h.is_done(), "pre-posted receive is an immediate CTS");
+        assert_eq!(&*f.poll_posted(1, id).unwrap().unwrap().data, &[1u8; 32]);
+    }
+
+    #[test]
+    fn rendezvous_completes_when_posting_drains_unexpected() {
+        let procs = ProcSet::new(2);
+        let f = Fabric::new("rndv", procs, NetModel::instant().with_rndv(8));
+        let h = f.start_send(env(0, 1, 1, 4, &[2u8; 16])).unwrap();
+        assert!(!h.is_done());
+        let id = f.post_recv(1, &MatchSpec::exact(0, 1, 4));
+        assert!(h.is_done(), "claiming at post time is a match");
+        assert_eq!(f.poll_posted(1, id).unwrap().unwrap().data.len(), 16);
+    }
+
+    #[test]
+    fn purge_releases_rendezvous_senders() {
+        let procs = ProcSet::new(2);
+        let f = Fabric::new("rndv", procs, NetModel::instant().with_rndv(8));
+        let h = f.start_send(env(0, 1, 1, 4, &[3u8; 16])).unwrap();
+        f.purge(1);
+        assert!(h.is_done(), "discarded mail must not strand its sender");
     }
 
     #[test]

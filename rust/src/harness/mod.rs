@@ -58,6 +58,13 @@ pub struct RunResult {
     pub shards_rebuilt: u64,
     /// Spares adopted into computational slots.
     pub cold_restores: u64,
+    /// Nonblocking p2p requests: posted sends, posted receives, completed
+    /// requests (in-flight at exit = posted − completed), and §VI-B
+    /// re-resolutions of pending requests across repairs.
+    pub nb_isends: u64,
+    pub nb_irecvs: u64,
+    pub nb_completed: u64,
+    pub nb_replays: u64,
     /// Seconds inside the restore phase (refresh pushes + shard gather),
     /// summed over ranks — the cold-restore latency measure.
     pub restore_s: f64,
@@ -201,6 +208,10 @@ pub fn run_app(
         shard_bytes_pushed: crate::metrics::Counters::get(&totals.restore_shard_bytes),
         shards_rebuilt: crate::metrics::Counters::get(&totals.restore_shards_rebuilt),
         cold_restores: crate::metrics::Counters::get(&totals.cold_restores),
+        nb_isends: crate::metrics::Counters::get(&totals.nb_isends),
+        nb_irecvs: crate::metrics::Counters::get(&totals.nb_irecvs),
+        nb_completed: crate::metrics::Counters::get(&totals.nb_completed),
+        nb_replays: crate::metrics::Counters::get(&totals.nb_replays),
         restore_s: report.phase_seconds(Phase::Restore),
         coll_selects: report.empi_fabric.metrics.selects.snapshot(),
     }

@@ -112,6 +112,14 @@ fn main() {
                 .map(|&(l, c)| format!("{l}={c}"))
                 .collect();
             println!("coll selections: {}", picked.join(" "));
+            println!(
+                "nb p2p: isends={} irecvs={} completed={} inflight_at_exit={} replayed={}",
+                r.nb_isends,
+                r.nb_irecvs,
+                r.nb_completed,
+                (r.nb_isends + r.nb_irecvs).saturating_sub(r.nb_completed),
+                r.nb_replays
+            );
             println!("checksum: {:?}", r.checksum);
         }
         "fig8" => {

@@ -148,6 +148,19 @@ pub struct Counters {
     pub restore_shards_rebuilt: AtomicU64,
     /// Cold restores completed (a spare became a computational rank).
     pub cold_restores: AtomicU64,
+    /// Nonblocking p2p send requests posted (`isend`, including the ones
+    /// backing blocking `send`/`sendrecv`).
+    pub nb_isends: AtomicU64,
+    /// Nonblocking p2p receive requests posted (`irecv`, including the
+    /// ones backing blocking `recv`/`sendrecv`).
+    pub nb_irecvs: AtomicU64,
+    /// Nonblocking requests completed. In-flight requests at any instant
+    /// = `nb_isends + nb_irecvs - nb_completed`.
+    pub nb_completed: AtomicU64,
+    /// Pending requests re-resolved against a repaired world (§VI-B): a
+    /// receive re-posted toward a promoted/restored incarnation, or a
+    /// send's fan-out re-issued per channel.
+    pub nb_replays: AtomicU64,
 }
 
 impl Counters {
@@ -185,7 +198,11 @@ impl Counters {
             restore_refreshes,
             restore_shard_bytes,
             restore_shards_rebuilt,
-            cold_restores
+            cold_restores,
+            nb_isends,
+            nb_irecvs,
+            nb_completed,
+            nb_replays
         );
     }
 }

@@ -77,22 +77,45 @@ impl<'a> Guard<'a> {
     /// LU/MG overheads ~4-20x on oversubscribed cores).
     pub fn recv(&self, comm: &Comm, src: Src, tag: Tag) -> Result<Recvd, OpError> {
         let mut req = comm.irecv(src, tag);
+        self.wait_recv(comm, &mut req)
+    }
+
+    /// Guarded completion of an already-posted receive request (shared by
+    /// [`Guard::recv`] and the exchange transport's `xchg`).
+    pub fn wait_recv(
+        &self,
+        comm: &Comm,
+        req: &mut crate::empi::RecvReq,
+    ) -> Result<Recvd, OpError> {
         let me = comm.my_fabric_rank();
         let mut clock = comm.fabric.arrivals(me);
         loop {
             self.check()?;
-            if let Some(m) = comm.test(&mut req)? {
+            if let Some(m) = comm.test(req)? {
                 return Ok(m);
             }
             clock = comm.fabric.wait_new_mail(me, clock, PARK_TICK);
         }
     }
 
-    /// Guarded send: check, then eager transmit.
+    /// Guarded send: check, post the transmission nonblocking, then wait
+    /// for completion with failure checks interleaved — a rendezvous-sized
+    /// send to a rank that dies mid-operation aborts into the error
+    /// handler instead of hanging out the deadline.
     pub fn send(&self, comm: &Comm, dst: usize, tag: i64, data: &[u8]) -> Result<(), OpError> {
         self.check()?;
-        comm.send(dst, tag, data)?;
-        Ok(())
+        let req = comm.isend(dst, tag, data)?;
+        self.wait_send(&req)
+    }
+
+    /// Guarded wait on a nonblocking send request.
+    pub fn wait_send(&self, req: &crate::empi::SendReq) -> Result<(), OpError> {
+        loop {
+            self.check()?;
+            if req.wait_timeout(PARK_TICK) {
+                return Ok(());
+            }
+        }
     }
 
     /// Guarded blocking receive on an intercommunicator (collective-result
@@ -235,6 +258,17 @@ impl Xfer for Gx<'_, '_> {
 
     fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, OpError> {
         self.g.recv(self.comm, src, tag)
+    }
+
+    /// Guarded exchange: same recv-post-then-send shape as the default,
+    /// but with ULFM checks interleaved into both completions, so a
+    /// partner dying mid-exchange aborts into the error handler.
+    fn xchg(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Result<Recvd, OpError> {
+        let mut req = self.comm.irecv(Src::Rank(src), Tag::Tag(tag));
+        self.g.check()?;
+        let send = self.comm.isend(dst, tag, data)?;
+        self.g.wait_send(&send)?;
+        self.g.wait_recv(self.comm, &mut req)
     }
 }
 

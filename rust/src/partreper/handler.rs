@@ -136,6 +136,10 @@ impl PartReper {
             st.layout = outcome.layout;
             st.comms = comms;
             st.generation = generation;
+            // In-flight §V-C relays were posted on the torn-down comms
+            // (dead context ids): abandon them — step 4's replay re-relays
+            // whatever a surviving replica still lacks.
+            self.abandon_relays();
             // Cold-restore bookkeeping survives handler re-entries: a
             // restore stays pending until its recovery epoch completes
             // (a dead spare's entry is dropped — repair re-assigned it).
@@ -381,10 +385,14 @@ impl PartReper {
                 continue;
             }
             let received: HashSet<u64> = u64s_from_bytes(raw).into_iter().collect();
-            // Resend what the destination never received.
+            // Resend what the destination never received. Detached
+            // nonblocking: the receiver's re-executed (or still-pending)
+            // receives claim these whenever its timeline reaches them —
+            // a blocking resend would serialize the whole handler on the
+            // lagging incarnation's application progress.
             for rec in log.unreceived_sends(d_app, &received) {
                 g.check()?;
-                eworld.send_shared(epos, rec.tag, rec.id, rec.data.clone())?;
+                let _detached = eworld.isend_shared(epos, rec.tag, rec.id, rec.data.clone())?;
                 Counters::bump(&self.ctx.counters.resends);
             }
             // Skip what it already has but I have not issued yet.
@@ -398,7 +406,7 @@ impl PartReper {
                 .map(|slot| all_last[layout.ncomp + slot]);
             for rec in log.collectives_after(min_cid) {
                 Counters::bump(&self.ctx.counters.collective_replays);
-                Self::replay_collective(&st, &g, &rec, rep_last)?;
+                self.replay_collective(&st, &g, &rec, rep_last)?;
             }
         }
         // Replicas replay nothing: every collective they completed was
@@ -413,6 +421,7 @@ impl PartReper {
     /// the result — state already advanced), re-relaying to my replica iff
     /// it had not completed this collective before the failure.
     fn replay_collective(
+        &self,
         st: &super::State,
         g: &Guard,
         rec: &CollRecord,
@@ -451,13 +460,15 @@ impl PartReper {
                 CollResult::Flat(g.scatter(comm, rec.root, blocks)?)
             }
         };
-        // Re-relay to my replica only if it was behind this collective.
+        // Re-relay to my replica only if it was behind this collective
+        // (nonblocking, like the normal §V-C relay: the lagging replica
+        // claims it when its re-execution reaches this collective).
         let me_app = st.comms().app_rank();
         if let Some(slot) = st.comms().layout.rep_slot_of(me_app) {
             if rep_last.map_or(false, |rl| rec.id > rl) {
                 let inter = st.comms().cmp_rep_inter.as_ref().expect("rep => intercomm");
                 g.check()?;
-                inter.send_with_id(slot, rec.id as i64, 0, &result.encode())?;
+                self.relay_to_rep(inter, slot, rec.id as i64, &result)?;
             }
         }
         Ok(())

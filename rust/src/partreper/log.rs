@@ -179,6 +179,17 @@ impl MessageLog {
         }
     }
 
+    /// O(1) duplicate-delivery probe: has `id` from logical source `src`
+    /// already been received? This is the hot-path guard every completed
+    /// receive runs — use it there instead of [`MessageLog::received_from`],
+    /// which clones the whole per-source set (fine for the §VI-B exchange
+    /// that genuinely needs the set, ruinous per message).
+    pub fn was_received(&self, src: usize, id: u64) -> bool {
+        self.received.get(&src).is_some_and(|s| s.contains(&id))
+    }
+
+    /// The full received-id set for `src` (cloned — recovery-path only;
+    /// per-message dedup goes through [`MessageLog::was_received`]).
     pub fn received_from(&self, src: usize) -> HashSet<u64> {
         self.received.get(&src).cloned().unwrap_or_default()
     }
@@ -518,6 +529,21 @@ mod tests {
         assert!(log.consume_skip(2, Channel::Comp, 3));
         assert!(!log.consume_skip(2, Channel::Comp, 3), "consumed once");
         assert!(log.consume_skip(2, Channel::Comp, 4));
+    }
+
+    #[test]
+    fn was_received_is_exact_and_ignores_untracked() {
+        let mut log = MessageLog::new();
+        log.log_receive(2, 7);
+        log.log_receive(2, 9);
+        log.log_receive(4, 0); // id 0 = untracked, never recorded
+        assert!(log.was_received(2, 7));
+        assert!(log.was_received(2, 9));
+        assert!(!log.was_received(2, 8));
+        assert!(!log.was_received(3, 7), "per-source sets are disjoint");
+        assert!(!log.was_received(4, 0));
+        // Agrees with the (clone-heavy) set view it replaces on hot paths.
+        assert_eq!(log.was_received(2, 7), log.received_from(2).contains(&7));
     }
 
     #[test]

@@ -10,17 +10,22 @@
 //! * the error handler (§VI-A) that revokes, shrinks, promotes replicas
 //!   and rebuilds the world.
 //!
-//! The application-facing API (`send`/`recv`/collectives) is
-//! role-transparent: replica processes run the *same* application code;
-//! routing, relays, promotion and recovery all happen inside the library —
-//! "our library can seamlessly provide fault tolerance support to an
-//! existing MPI application".
+//! The application-facing API (`send`/`recv`/`sendrecv`, the nonblocking
+//! `isend`/`irecv`/`wait`/`waitall` quartet in [`req`], and the
+//! collectives) is role-transparent: replica processes run the *same*
+//! application code; routing, relays, promotion and recovery all happen
+//! inside the library — "our library can seamlessly provide fault
+//! tolerance support to an existing MPI application". The blocking p2p
+//! calls are wrappers over the request engine, so one lifecycle
+//! (DESIGN.md §6: posted → matched → re-resolved across repairs →
+//! completed/skipped) governs every path.
 
 pub mod comms;
 pub mod gcoll;
 pub mod handler;
 pub mod log;
 pub mod replicate;
+pub mod req;
 
 #[cfg(test)]
 mod tests;
@@ -28,12 +33,13 @@ mod tests;
 pub use comms::{Layout, RepairOutcome, Role, WorldComms};
 pub use gcoll::{Guard, OpError};
 pub use log::{Channel, CollKind, CollRecord, MessageLog};
+pub use req::Request;
 
 use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::empi::{DType, Recvd, ReduceOp, Src, Tag};
+use crate::empi::{DType, ReduceOp};
 use crate::error::{CommError, RankKilled};
 use crate::fabric::{Envelope, MatchSpec};
 use crate::metrics::{Counters, Phase};
@@ -94,6 +100,12 @@ pub struct PartReper {
     owner_push: RefCell<OwnerPushState>,
     /// Image installed by a cold restore, awaiting [`PartReper::start`].
     pending_image: RefCell<Option<ProcessImage>>,
+    /// In-flight §V-C collective-result relays to my replica: posted
+    /// nonblocking so the computational rank returns to application code
+    /// while the relay completes; reaped opportunistically, abandoned on
+    /// repair (§VI-B replay re-relays whatever a surviving replica still
+    /// needs).
+    pending_relays: RefCell<Vec<crate::empi::SendReq>>,
 }
 
 /// Result of a collective, in relay-serializable form.
@@ -222,6 +234,7 @@ impl PartReper {
             store: RefCell::new(RestoreStore::new()),
             owner_push: RefCell::new(OwnerPushState::new()),
             pending_image: RefCell::new(None),
+            pending_relays: RefCell::new(Vec::new()),
         };
         // "Finally, all the processes synchronize with a barrier."
         if is_member {
@@ -469,11 +482,36 @@ impl PartReper {
     }
 
     // ---------------------------------------------------------------- p2p
+    //
+    // The nonblocking request engine (`req.rs`) is the real implementation;
+    // the blocking calls below are thin wrappers over it, so every path —
+    // blocking or not — shares one lifecycle: post-time logging, parallel
+    // fan-out, repair-time re-resolution, duplicate guards (DESIGN.md §6).
 
-    /// Fault-tolerant send (§V-B). Logs the transmission, routes it to the
-    /// destination's computational and/or replica incarnation, honours
-    /// skip marks left by recovery.
+    /// Fault-tolerant blocking send (§V-B). Logs the transmission, routes
+    /// it to the destination's computational and/or replica incarnation as
+    /// **parallel** nonblocking transmits completed together, and honours
+    /// skip marks left by recovery. Returns when every fan-out transmit
+    /// has matched (rendezvous) or been buffered (eager) — duplicate
+    /// delivery across failures is guarded at the receiver.
+    ///
+    /// With the `net.serial_fanout=true` ablation knob the legacy serial
+    /// path runs instead: one blocking transmit per channel, in order.
     pub fn send(&self, dst: usize, tag: i64, data: &[u8]) {
+        if self.ctx.cfg.serial_fanout {
+            return self.send_serial(dst, tag, data);
+        }
+        let mut req = self.isend(dst, tag, data);
+        self.wait(&mut req);
+    }
+
+    /// The pre-engine serial fan-out (kept as the measured baseline for
+    /// `benches/ablation_nbp2p.rs`): blocking transmits one channel at a
+    /// time under the Fig 7 guarded loop. Note its caveat: at payloads at
+    /// or past `net.rndv_threshold` each transmit synchronizes on its
+    /// receiver in turn, and send-before-recv cycles (the old `sendrecv`)
+    /// deadlock — the engine path has neither problem.
+    fn send_serial(&self, dst: usize, tag: i64, data: &[u8]) {
         assert!(dst < self.size(), "send: bad destination {dst}");
         let payload = Arc::new(data.to_vec());
         let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
@@ -500,8 +538,9 @@ impl PartReper {
         })
     }
 
-    /// One transmission to a destination incarnation over eworldComm,
-    /// unless recovery marked this id as already delivered there.
+    /// One blocking transmission to a destination incarnation over
+    /// eworldComm (serial-fanout path), unless recovery marked this id as
+    /// already delivered there.
     fn transmit(
         st: &State,
         g: &Guard,
@@ -527,41 +566,54 @@ impl PartReper {
         Ok(())
     }
 
-    /// Fault-tolerant receive (§V-B): irecv + test loop interleaved with
-    /// failure checks; the source incarnation is re-resolved after every
-    /// repair ("with the source/destination being modified if needed").
+    /// Fault-tolerant blocking receive (§V-B): a posted request progressed
+    /// with interleaved failure checks; the source incarnation is
+    /// re-resolved after every repair ("with the source/destination being
+    /// modified if needed"), and duplicates from recovery resends are
+    /// dropped by the O(1) send-id guard.
     pub fn recv(&self, src: usize, tag: i64) -> Vec<u8> {
-        assert!(src < self.size(), "recv: bad source {src}");
-        self.guarded(|st, g, log| {
-            let l = &st.comms().layout;
-            // Which incarnation sends to me in the current world?
-            let from_pos = match st.comms().role() {
-                Role::Comp => l.epos(src, Channel::Comp).unwrap(),
-                Role::Rep => {
-                    if l.has_rep(src) {
-                        l.epos(src, Channel::Rep).unwrap()
-                    } else {
-                        // src has no replica: its comp fans out to me.
-                        l.epos(src, Channel::Comp).unwrap()
-                    }
-                }
-            };
-            loop {
-                let m: Recvd = g.recv(&st.comms().eworld, Src::Rank(from_pos), Tag::Tag(tag))?;
-                // Duplicate guard (resend raced an in-flight copy).
-                if m.send_id != 0 && log.received_from(src).contains(&m.send_id) {
-                    continue;
-                }
-                log.log_receive(src, m.send_id);
-                return Ok(m.data.to_vec());
-            }
-        })
+        let mut req = self.irecv(src, tag);
+        self.wait(&mut req)
+            .expect("completed receive request yields its payload")
     }
 
-    /// Combined send+recv (exchange pattern used by the stencil apps).
+    /// Combined exchange (the stencil apps' halo pattern): the receive is
+    /// posted **before** the send fans out, then both complete together.
+    /// This ordering is what makes a simultaneous all-ranks exchange safe
+    /// at payloads past `net.rndv_threshold`: everyone's receive is
+    /// already posted when everyone's rendezvous send looks for its CTS.
+    /// (The legacy send-then-recv ordering deadlocks there — regression
+    /// test `symmetric_sendrecv_exchange_at_rendezvous_sizes`.)
     pub fn sendrecv(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Vec<u8> {
-        self.send(dst, tag, data);
-        self.recv(src, tag)
+        if self.ctx.cfg.serial_fanout {
+            // Legacy ordering, kept only for the ablation baseline.
+            self.send(dst, tag, data);
+            return self.recv(src, tag);
+        }
+        let mut reqs = [self.irecv(src, tag), self.isend(dst, tag, data)];
+        self.waitall(&mut reqs);
+        reqs[0]
+            .take_data()
+            .expect("completed receive request yields its payload")
+    }
+
+    /// Retire completed §V-C relay requests (their overlap window closed
+    /// by itself). Cheap; called opportunistically from collectives, the
+    /// request engine, and finalize.
+    pub(crate) fn reap_relays(&self) {
+        self.pending_relays.borrow_mut().retain(|r| !r.is_done());
+    }
+
+    /// Abandon all in-flight relays (after a repair: their envelopes carry
+    /// dead context ids, and §VI-B replay re-relays whatever a surviving
+    /// replica still lacks).
+    pub(crate) fn abandon_relays(&self) {
+        self.pending_relays.borrow_mut().clear();
+    }
+
+    /// Number of §V-C relays currently in flight (metrics/tests).
+    pub fn relays_in_flight(&self) -> usize {
+        self.pending_relays.borrow().len()
     }
 
     // --------------------------------------------------------- collectives
@@ -569,8 +621,11 @@ impl PartReper {
     /// Shared §V-C skeleton: computational processes run the EMPI
     /// collective over `EMPI_COMM_CMP` and relay the result to their
     /// replicas over `EMPI_CMP_REP_INTERCOMM` (tagged with the collective
-    /// id); replicas await the relay. The completed collective is logged
-    /// for replay.
+    /// id); replicas await the relay. The relay is posted **nonblocking**,
+    /// so it overlaps with the computational rank's return to application
+    /// code (the shadow traffic the FTHP/TeaMPI line shows must not sit on
+    /// the critical path); completed relays are reaped here and in the
+    /// request engine. The completed collective is logged for replay.
     fn run_collective(
         &self,
         kind: CollKind,
@@ -581,8 +636,9 @@ impl PartReper {
         blocks: Arc<Vec<Vec<u8>>>,
         exec: impl Fn(&Guard, &WorldComms) -> Result<CollResult, OpError>,
     ) -> CollResult {
+        self.reap_relays();
         let cid = self.log.borrow().next_coll_id();
-        let result = self.guarded(|st, g, _log| Self::execute_collective(st, g, cid, &exec));
+        let result = self.guarded(|st, g, _log| self.execute_collective(st, g, cid, &exec));
         self.log.borrow_mut().log_collective(CollRecord {
             id: cid,
             kind,
@@ -599,6 +655,7 @@ impl PartReper {
     /// One attempt of collective `cid` on the current world (also used by
     /// recovery replay).
     pub(crate) fn execute_collective(
+        &self,
         st: &State,
         g: &Guard,
         cid: u64,
@@ -617,7 +674,7 @@ impl PartReper {
                         .as_ref()
                         .expect("rep exists => intercomm exists");
                     g.check()?;
-                    inter.send_with_id(slot, relay_tag, 0, &res.encode())?;
+                    self.relay_to_rep(inter, slot, relay_tag, &res)?;
                 }
                 Ok(res)
             }
@@ -631,6 +688,27 @@ impl PartReper {
                 Ok(CollResult::decode(&m.data))
             }
         }
+    }
+
+    /// Post one §V-C relay. Nonblocking by default (the request joins
+    /// [`PartReper::pending_relays`] and completes in the background); the
+    /// `net.serial_fanout=true` ablation keeps the legacy blocking relay.
+    pub(crate) fn relay_to_rep(
+        &self,
+        inter: &crate::empi::InterComm,
+        slot: usize,
+        relay_tag: i64,
+        res: &CollResult,
+    ) -> Result<(), OpError> {
+        if self.ctx.cfg.serial_fanout {
+            inter.send_with_id(slot, relay_tag, 0, &res.encode())?;
+        } else {
+            let req = inter.isend_with_id(slot, relay_tag, 0, &res.encode())?;
+            if !req.is_done() {
+                self.pending_relays.borrow_mut().push(req);
+            }
+        }
+        Ok(())
     }
 
     pub fn barrier(&self) {
@@ -785,6 +863,10 @@ impl PartReper {
     /// exited so the ULFM protocols skip it rather than repair it.
     pub fn finalize(&self) {
         self.barrier();
+        // The finalize barrier completed globally, so every §V-C relay has
+        // been consumed (replicas cannot pass their own barrier without
+        // it); drop the bookkeeping.
+        self.reap_relays();
         self.ctx.procs.set_finalized(self.ctx.rank);
         // Wake anyone blocked so they observe the finalization promptly.
         self.ctx.empi_fabric.wake_all();

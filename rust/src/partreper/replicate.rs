@@ -46,11 +46,17 @@ impl PartReper {
                             w.u64(*ptr);
                             w.usize(*size);
                         }
+                        // Both transfers go out nonblocking and are
+                        // completed under the guard: the image easily
+                        // crosses the rendezvous threshold, and a replica
+                        // dying before it claims the bytes must abort into
+                        // the error handler, not hang out the deadline.
                         g.check()?;
-                        inter.send_with_id(slot, TAG_BASIC_INFO, 0, &w.finish())?;
-                        // 2-4. the segments (serialized image).
-                        g.check()?;
-                        inter.send_with_id(slot, TAG_IMAGE, 0, &my_image.to_bytes())?;
+                        let info_req = inter.isend_with_id(slot, TAG_BASIC_INFO, 0, &w.finish())?;
+                        let img_req =
+                            inter.isend_with_id(slot, TAG_IMAGE, 0, &my_image.to_bytes())?;
+                        g.wait_send(&info_req)?;
+                        g.wait_send(&img_req)?;
                     }
                     Ok(None)
                 }

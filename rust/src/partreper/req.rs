@@ -1,0 +1,464 @@
+//! Nonblocking fault-tolerant point-to-point: the request engine behind
+//! [`PartReper::isend`] / [`PartReper::irecv`] / [`PartReper::wait`] /
+//! [`PartReper::waitall`] — and, because the blocking `send` / `recv` /
+//! `sendrecv` are rebuilt on top of it, behind the whole §V-B p2p surface.
+//!
+//! # Request lifecycle (DESIGN.md §6)
+//!
+//! ```text
+//! posted ──► matched ──────────────► completed
+//!   │            ▲                      ▲
+//!   └── repair ──┴── re-resolved ───────┤
+//!                    (skip mark) ──► skipped
+//! ```
+//!
+//! * **posted** — `isend` logs the transmission into the [`MessageLog`]
+//!   *at post time* (so §VI-B recovery owns it from the first instant) and
+//!   starts one nonblocking fabric transmit per destination incarnation —
+//!   the §V-B fan-out (comp→comp always; comp→rep when the unreplicated
+//!   source feeds a replicated destination; rep→rep between replicas) —
+//!   all in flight **in parallel**. `irecv` resolves the source
+//!   incarnation against the current [`super::comms::Layout`] and posts
+//!   into the EMPI matching engine.
+//! * **matched** — the fabric pairs the envelope with a receive. For a
+//!   rendezvous-sized payload this is also the moment the send-side gate
+//!   opens (the CTS); eager payloads are born matched.
+//! * **re-resolved** — a failure struck while the request was pending.
+//!   `waitall` runs the §VI error handler, then re-resolves every stale
+//!   request against the repaired layout: receives re-post toward the
+//!   (possibly promoted or cold-restored) source incarnation; sends retry
+//!   exactly like the blocking path — per fan-out channel, honouring skip
+//!   marks, re-issuing in-flight transmits and any channel the caller's
+//!   new role now routes (the promoted-replica case). Re-issues can
+//!   duplicate the handler's own §VI-B resends; the receiver's
+//!   duplicate-delivery guard (send-id dedup) absorbs them.
+//! * **completed / skipped** — a receive completed with its payload (after
+//!   the dedup check) and logged; a send completed when every channel's
+//!   transmit matched or was consumed as a skip mark.
+//!
+//! # Replay determinism
+//!
+//! A replica (and any lagging promoted/restored incarnation) executes the
+//! same `isend`/`irecv` sequence as its mirror, so send-ids — allocated at
+//! post time, per logical destination — and tags are identical on both
+//! incarnations. That is the §VI-B contract: after a promotion the
+//! survivor's pending requests and the promoted rank's re-executed ones
+//! meet on the same (tag, send-id) schedule, and the resend/skip
+//! arithmetic stays exact whether a message was in flight, delivered, or
+//! not yet issued when the failure hit.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::empi::{RecvReq, SendReq, Src, Tag};
+use crate::error::{CommError, RankKilled};
+use crate::metrics::Counters;
+
+use super::comms::Role;
+use super::gcoll::{Guard, OpError};
+use super::log::{Channel, MessageLog};
+use super::{PartReper, State};
+
+/// Park interval between progress passes (same bound as the blocking
+/// paths' poll ticks).
+const PARK_TICK: Duration = Duration::from_micros(200);
+
+/// A batch that makes no progress for this long — no completion, no
+/// repair — is a protocol wedge (e.g. a rendezvous send nobody will ever
+/// receive); surfaced loudly, like the guarded blocking paths do.
+const WEDGE_DEADLINE: Duration = Duration::from_secs(60);
+
+/// One transmit of a send's fan-out: the destination channel plus its
+/// in-flight fabric request. `req == None` means the channel is settled —
+/// matched, eager-complete, or suppressed by a §VI-B skip mark.
+struct Ticket {
+    channel: Channel,
+    req: Option<SendReq>,
+}
+
+struct SendState {
+    dst: usize,
+    tag: i64,
+    id: u64,
+    payload: Arc<Vec<u8>>,
+    /// Repair generation the tickets were resolved against.
+    generation: u64,
+    tickets: Vec<Ticket>,
+}
+
+struct RecvState {
+    src: usize,
+    tag: i64,
+    generation: u64,
+    req: Option<RecvReq>,
+}
+
+enum Inner {
+    Send(SendState),
+    Recv(RecvState),
+    /// Completed: `Some(payload)` for receives (until taken), `None` for
+    /// sends.
+    Done(Option<Vec<u8>>),
+}
+
+/// A pending fault-tolerant point-to-point operation (MPI_Request
+/// analogue). Created by [`PartReper::isend`] / [`PartReper::irecv`];
+/// completed by [`PartReper::wait`] / [`PartReper::waitall`], which run
+/// failure handling and §VI-B re-resolution while waiting.
+pub struct Request {
+    inner: Inner,
+}
+
+impl Request {
+    /// Has this request completed (including the skipped case)?
+    pub fn is_done(&self) -> bool {
+        matches!(self.inner, Inner::Done(_))
+    }
+
+    /// Take the completed receive payload (`None` for sends, or if
+    /// already taken). [`PartReper::wait`] calls this for you.
+    pub fn take_data(&mut self) -> Option<Vec<u8>> {
+        match &mut self.inner {
+            Inner::Done(d) => d.take(),
+            _ => None,
+        }
+    }
+}
+
+struct PassOutcome {
+    complete: bool,
+    progressed: bool,
+}
+
+impl PartReper {
+    /// The §V-B fan-out channel set for a message to app rank `dst`, per
+    /// the caller's current role (DESIGN.md §6 channel diagram):
+    /// comp→comp always; comp→rep when an unreplicated source feeds a
+    /// replicated destination; rep→rep between replicas.
+    fn fanout_channels(st: &State, dst: usize) -> Vec<Channel> {
+        let comms = st.comms();
+        let l = &comms.layout;
+        let me_app = comms.app_rank();
+        match comms.role() {
+            Role::Comp => {
+                let mut v = vec![Channel::Comp];
+                if !l.has_rep(me_app) && l.has_rep(dst) {
+                    v.push(Channel::Rep);
+                }
+                v
+            }
+            Role::Rep => {
+                if l.has_rep(dst) {
+                    vec![Channel::Rep]
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    }
+
+    /// Start (or skip) one channel's transmit for send `id` to `dst`.
+    fn issue_ticket(
+        st: &State,
+        log: &mut MessageLog,
+        counters: &Counters,
+        dst: usize,
+        channel: Channel,
+        tag: i64,
+        id: u64,
+        payload: &Arc<Vec<u8>>,
+    ) -> Ticket {
+        if log.consume_skip(dst, channel, id) {
+            Counters::bump(&counters.skips);
+            return Ticket { channel, req: None };
+        }
+        let epos = st
+            .comms()
+            .layout
+            .epos(dst, channel)
+            .expect("routing picked a nonexistent incarnation");
+        match st.comms().eworld.isend_shared(epos, tag, id, payload.clone()) {
+            Ok(req) => {
+                Counters::bump(&counters.sends_logged);
+                Ticket {
+                    channel,
+                    req: Some(req),
+                }
+            }
+            Err(CommError::Killed { rank }) => std::panic::panic_any(RankKilled { rank }),
+            Err(e) => std::panic::panic_any(format!("isend transmit failed: {e}")),
+        }
+    }
+
+    /// Which eworld position sends to me for logical source `src` in the
+    /// current world (re-evaluated after every repair).
+    fn post_source_recv(st: &State, src: usize, tag: i64) -> RecvReq {
+        let comms = st.comms();
+        let l = &comms.layout;
+        let from_pos = match comms.role() {
+            Role::Comp => l.epos(src, Channel::Comp).expect("comp channel exists"),
+            Role::Rep => l
+                .epos(src, Channel::Rep)
+                // src has no replica: its comp fans out to me.
+                .unwrap_or_else(|| l.epos(src, Channel::Comp).expect("comp channel exists")),
+        };
+        comms.eworld.irecv(Src::Rank(from_pos), Tag::Tag(tag))
+    }
+
+    /// Nonblocking fault-tolerant send (§V-B): logs the transmission at
+    /// post time and starts the comp/replica fan-out as **parallel**
+    /// nonblocking transmits. Never blocks — not even past
+    /// `net.rndv_threshold`. Complete with [`PartReper::wait`] /
+    /// [`PartReper::waitall`]; the request survives repairs (DESIGN.md §6).
+    pub fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> Request {
+        assert!(dst < self.size(), "isend: bad destination {dst}");
+        let payload = Arc::new(data.to_vec());
+        let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
+        let st = self.state.borrow();
+        let mut log = self.log.borrow_mut();
+        let tickets: Vec<Ticket> = Self::fanout_channels(&st, dst)
+            .into_iter()
+            .map(|ch| {
+                Self::issue_ticket(&st, &mut log, &self.ctx.counters, dst, ch, tag, id, &payload)
+            })
+            .collect();
+        Counters::bump(&self.ctx.counters.nb_isends);
+        let inner = if tickets.iter().all(|t| t.req.is_none()) {
+            // Nothing to wait for (rep with unreplicated dst, all-eager
+            // fan-out, or everything skip-marked).
+            Counters::bump(&self.ctx.counters.nb_completed);
+            Inner::Done(None)
+        } else {
+            Inner::Send(SendState {
+                dst,
+                tag,
+                id,
+                payload,
+                generation: st.generation,
+                tickets,
+            })
+        };
+        Request { inner }
+    }
+
+    /// Nonblocking fault-tolerant receive (§V-B): resolves the source
+    /// incarnation against the current layout and posts into the EMPI
+    /// matching engine. The request re-resolves across repairs and applies
+    /// the duplicate-delivery guard on completion.
+    pub fn irecv(&self, src: usize, tag: i64) -> Request {
+        assert!(src < self.size(), "irecv: bad source {src}");
+        let st = self.state.borrow();
+        let req = Self::post_source_recv(&st, src, tag);
+        Counters::bump(&self.ctx.counters.nb_irecvs);
+        Request {
+            inner: Inner::Recv(RecvState {
+                src,
+                tag,
+                generation: st.generation,
+                req: Some(req),
+            }),
+        }
+    }
+
+    /// Complete one request. Returns the payload for receives, `None` for
+    /// sends. Runs the full Fig 7 protocol while waiting: failure checks
+    /// interleaved with progress polls, error-handler entry on a ULFM
+    /// error, and §VI-B re-resolution of the pending request afterwards.
+    pub fn wait(&self, req: &mut Request) -> Option<Vec<u8>> {
+        self.waitall(std::slice::from_mut(req));
+        req.take_data()
+    }
+
+    /// Complete a batch of requests together (the fan-out and halo-exchange
+    /// pattern: post everything, then `waitall`). See [`PartReper::wait`].
+    pub fn waitall(&self, reqs: &mut [Request]) {
+        let mut refs: Vec<&mut Request> = reqs.iter_mut().collect();
+        self.waitall_mut(&mut refs);
+    }
+
+    /// Engine core over borrowed requests (lets callers mix request
+    /// storage, e.g. the `apps::Mpi` adapter).
+    pub(crate) fn waitall_mut(&self, reqs: &mut [&mut Request]) {
+        let me = self.ctx.rank;
+        let mut last_progress = Instant::now();
+        loop {
+            // Opportunistically retire completed collective relays — the
+            // overlap window for §V-C ends here at zero cost.
+            self.reap_relays();
+            let clock = self.ctx.empi_fabric.arrivals(me);
+            let pass = {
+                let st = self.state.borrow();
+                let g = Guard {
+                    oworld: &st.oworld,
+                    counters: &self.ctx.counters,
+                    stride: self.ctx.cfg.failure_check_stride,
+                    abort: &self.ctx.abort,
+                };
+                let mut log = self.log.borrow_mut();
+                // Stale requests are re-resolved *before* every progress
+                // pass, not only after an error handler run from this
+                // call: a repair may have happened during someone else's
+                // wait (or a blocking collective) while this request sat
+                // posted — the halo pattern waits its requests one at a
+                // time, and each must observe the repaired world on its
+                // own wait.
+                Self::reresolve_stale(&st, &g, &mut log, reqs);
+                Self::progress_pass(&st, &g, &mut log, reqs)
+            };
+            match pass {
+                Ok(PassOutcome { complete: true, .. }) => return,
+                Ok(PassOutcome { progressed, .. }) => {
+                    if progressed {
+                        last_progress = Instant::now();
+                    } else if last_progress.elapsed() >= WEDGE_DEADLINE {
+                        std::panic::panic_any(format!(
+                            "protocol wedge: nonblocking batch stalled for {WEDGE_DEADLINE:?}"
+                        ));
+                    }
+                    self.ctx.empi_fabric.wait_new_mail(me, clock, PARK_TICK);
+                }
+                Err(OpError::Ulfm(_)) => {
+                    // Repair, then loop: the next pass re-resolves every
+                    // stale request against the new generation.
+                    self.error_handler();
+                    last_progress = Instant::now();
+                }
+                Err(OpError::Comm(CommError::Killed { rank })) => {
+                    std::panic::panic_any(RankKilled { rank })
+                }
+                Err(OpError::Comm(e)) => std::panic::panic_any(format!("protocol wedge: {e}")),
+            }
+        }
+    }
+
+    /// One failure-checked poll over every pending request.
+    fn progress_pass(
+        st: &State,
+        g: &Guard,
+        log: &mut MessageLog,
+        reqs: &mut [&mut Request],
+    ) -> Result<PassOutcome, OpError> {
+        g.check()?;
+        let mut complete = true;
+        let mut progressed = false;
+        for r in reqs.iter_mut() {
+            let finished: Option<Option<Vec<u8>>> = match &mut r.inner {
+                Inner::Done(_) => None,
+                Inner::Send(s) => {
+                    for t in &mut s.tickets {
+                        if t.req.as_ref().is_some_and(SendReq::is_done) {
+                            t.req = None;
+                            progressed = true;
+                        }
+                    }
+                    if s.tickets.iter().all(|t| t.req.is_none()) {
+                        Some(None)
+                    } else {
+                        complete = false;
+                        None
+                    }
+                }
+                Inner::Recv(rv) => {
+                    let mut got: Option<Vec<u8>> = None;
+                    loop {
+                        let req =
+                            rv.req.as_mut().expect("pending recv holds a posted request");
+                        match st.comms().eworld.test(req) {
+                            Ok(Some(m)) => {
+                                // Duplicate guard: a §VI-B resend raced a
+                                // copy already in flight. Absorb and
+                                // re-post (O(1) via `was_received`).
+                                if m.send_id != 0 && log.was_received(rv.src, m.send_id) {
+                                    rv.req = Some(Self::post_source_recv(st, rv.src, rv.tag));
+                                    progressed = true;
+                                    continue;
+                                }
+                                log.log_receive(rv.src, m.send_id);
+                                got = Some(m.data.to_vec());
+                                break;
+                            }
+                            Ok(None) => {
+                                complete = false;
+                                break;
+                            }
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    got.map(Some)
+                }
+            };
+            if let Some(payload) = finished {
+                r.inner = Inner::Done(payload);
+                Counters::bump(&g.counters.nb_completed);
+                progressed = true;
+            }
+        }
+        Ok(PassOutcome {
+            complete,
+            progressed,
+        })
+    }
+
+    /// §VI-B re-resolution: every request posted against an older
+    /// generation is re-targeted at the repaired world. Runs at the top of
+    /// every progress pass, so a repair that happened *outside* this wait
+    /// (another request's wait, a blocking collective) is still observed.
+    fn reresolve_stale(
+        st: &State,
+        g: &Guard,
+        log: &mut MessageLog,
+        reqs: &mut [&mut Request],
+    ) {
+        let generation = st.generation;
+        for r in reqs.iter_mut() {
+            let mut settled_send = false;
+            match &mut r.inner {
+                Inner::Send(s) if s.generation != generation => {
+                    Counters::bump(&g.counters.nb_replays);
+                    // Per fan-out channel, exactly like the blocking
+                    // path's retry: settled channels stay settled; an
+                    // in-flight transmit (its pre-repair envelope carries
+                    // a dead context id) re-issues on the rebuilt eworld,
+                    // honouring skip marks; a channel my new role routes
+                    // for the first time (promotion) is issued fresh. The
+                    // receiver's dedup guard absorbs any overlap with the
+                    // handler's own resends.
+                    let tickets: Vec<Ticket> = Self::fanout_channels(st, s.dst)
+                        .into_iter()
+                        .map(|ch| {
+                            let settled = s
+                                .tickets
+                                .iter()
+                                .any(|t| t.channel == ch && t.req.is_none());
+                            if settled {
+                                Ticket {
+                                    channel: ch,
+                                    req: None,
+                                }
+                            } else {
+                                Self::issue_ticket(
+                                    st, log, g.counters, s.dst, ch, s.tag, s.id, &s.payload,
+                                )
+                            }
+                        })
+                        .collect();
+                    s.tickets = tickets;
+                    s.generation = generation;
+                    settled_send = s.tickets.iter().all(|t| t.req.is_none());
+                }
+                Inner::Recv(rv) if rv.generation != generation => {
+                    Counters::bump(&g.counters.nb_replays);
+                    // Dropping the stale request cancels its posting; its
+                    // (old-context) mail, if any, is garbage by design.
+                    rv.req = Some(Self::post_source_recv(st, rv.src, rv.tag));
+                    rv.generation = generation;
+                }
+                _ => {}
+            }
+            if settled_send {
+                r.inner = Inner::Done(None);
+                Counters::bump(&g.counters.nb_completed);
+            }
+        }
+    }
+}

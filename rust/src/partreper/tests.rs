@@ -345,6 +345,205 @@ fn promotion_replays_size_crossover_collectives_with_matching_tags() {
 }
 
 #[test]
+fn symmetric_sendrecv_exchange_at_rendezvous_sizes() {
+    // Regression for the serial-fanout deadlock: every rank (and every
+    // replica, mirroring it) runs `sendrecv` with both ring neighbours
+    // *simultaneously*, with payloads 4x the rendezvous threshold. The
+    // engine posts the receive before the send fans out, so everyone's
+    // rendezvous send finds its CTS; the legacy send-then-recv ordering
+    // wedges here (every rank parked in `send`, no receive posted).
+    let mut cfg = JobConfig::new(4, 50.0);
+    cfg.set("net.rndv_threshold", "2048").unwrap();
+    let iters = 4u64;
+    let payload = 8 * 1024usize;
+    let report = launch_job(&cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let me = pr.rank();
+        for it in 0..iters {
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let data = vec![(me as u8) ^ (it as u8); payload];
+            let got = pr.sendrecv(next, prev, 9, &data);
+            assert_eq!(got.len(), payload, "it={it}");
+            assert!(
+                got.iter().all(|&b| b == (prev as u8) ^ (it as u8)),
+                "it={it}: wrong neighbour payload"
+            );
+        }
+        pr.finalize();
+        Ok(())
+    });
+    for (r, o) in report.outcomes.iter().enumerate() {
+        assert!(matches!(o, RankOutcome::Done(())), "rank {r}: {o:?}");
+    }
+    let totals = report.total_counters();
+    use crate::metrics::Counters;
+    let posted = Counters::get(&totals.nb_isends) + Counters::get(&totals.nb_irecvs);
+    assert_eq!(
+        posted,
+        Counters::get(&totals.nb_completed),
+        "no request may be left in flight after a clean run"
+    );
+}
+
+#[test]
+fn promotion_mid_waitall_replays_pending_requests() {
+    // Every rank posts a full batch of isends + irecvs to all peers, then
+    // comp 1 dies *between posting and waitall*. The survivors' pending
+    // requests must ride the repair: receives re-resolve to the promoted
+    // incarnation, sends re-issue per channel, and the payload checks
+    // prove the promoted rank's re-executed requests land on the
+    // survivors' exact tags and send-ids (mirrored logs allocate
+    // identically).
+    let cfg = JobConfig::new(4, 100.0);
+    let iters = 8u64;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let mut sum = 0u64;
+        for it in 0..iters {
+            let me = pr.rank();
+            let mut reqs: Vec<crate::partreper::Request> = Vec::new();
+            let mut sources: Vec<usize> = Vec::new();
+            for other in 0..n {
+                if other == me {
+                    continue;
+                }
+                reqs.push(pr.irecv(other, 11));
+                sources.push(other);
+            }
+            for other in 0..n {
+                if other == me {
+                    continue;
+                }
+                reqs.push(pr.isend(other, 11, &u64s_to_bytes(&[(me as u64) << 32 | it])));
+            }
+            if rank == 1 && it == 4 {
+                // Die with the whole batch outstanding.
+                procs.poison(1);
+            }
+            pr.waitall(&mut reqs);
+            for (slot, &src) in sources.iter().enumerate() {
+                let v = u64s_from_bytes(&reqs[slot].take_data().expect("recv payload"))[0];
+                assert_eq!(v, (src as u64) << 32 | it, "round {it} from {src}");
+                sum = sum.wrapping_add(v);
+            }
+        }
+        pr.finalize();
+        Ok(sum)
+    });
+    let expect_for = |k: u64| -> u64 {
+        (0..iters)
+            .flat_map(|it| (0..4u64).filter(move |&o| o != k).map(move |o| o << 32 | it))
+            .fold(0u64, u64::wrapping_add)
+    };
+    let mut done = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        let app = (r % 4) as u64;
+        match (r, o) {
+            (1, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done(v)) => {
+                done += 1;
+                assert_eq!(*v, expect_for(app), "rank {r}");
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    assert_eq!(done, 7);
+    let totals = report.total_counters();
+    use crate::metrics::Counters;
+    assert_eq!(Counters::get(&totals.promotions), 1);
+    assert!(
+        Counters::get(&totals.nb_replays) > 0,
+        "pending requests must have been re-resolved across the repair"
+    );
+}
+
+#[test]
+fn serial_fanout_ablation_path_still_recovers() {
+    // The legacy serial blocking fan-out stays available behind
+    // `net.serial_fanout=true` (the ablation baseline) and must still
+    // survive a promotion with exact results.
+    let mut cfg = JobConfig::new(4, 100.0);
+    cfg.set("net.serial_fanout", "true").unwrap();
+    let iters = 6;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 2 && it == 3 {
+                procs.poison(2);
+            }
+            let me = pr.rank() as u64;
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        pr.finalize();
+        Ok(acc)
+    });
+    let want = expected(4, iters);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (2, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done(v)) => assert_eq!(*v, want, "rank {r}"),
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn overlapped_halo_requests_complete_out_of_order() {
+    // Post receives before sends in both directions and complete them in
+    // the "wrong" order: request identity (not completion order) must
+    // route payloads, and leftover state must be nil at finalize.
+    let cfg = JobConfig::new(3, 0.0);
+    let report = launch_job(&cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let me = pr.rank();
+        for it in 0..5u64 {
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let mut r_prev = pr.irecv(prev, 60);
+            let mut r_next = pr.irecv(next, 61);
+            let mut s_next = pr.isend(next, 60, &u64s_to_bytes(&[me as u64 + it]));
+            let mut s_prev = pr.isend(prev, 61, &u64s_to_bytes(&[me as u64 * 10 + it]));
+            // Waits in an order unrelated to posting.
+            let b = u64s_from_bytes(&pr.wait(&mut r_next).unwrap())[0];
+            pr.wait(&mut s_prev);
+            let a = u64s_from_bytes(&pr.wait(&mut r_prev).unwrap())[0];
+            pr.wait(&mut s_next);
+            assert_eq!(a, prev as u64 + it);
+            assert_eq!(b, next as u64 * 10 + it);
+        }
+        pr.finalize();
+        Ok(pr.relays_in_flight())
+    });
+    for o in &report.outcomes {
+        match o {
+            RankOutcome::Done(inflight) => {
+                assert_eq!(*inflight, 0, "no relay may outlive finalize");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+#[test]
 fn unreplicated_comp_death_interrupts_job() {
     // Comp 3 has no replica at 25% on 4 comps (only comp 0 replicated).
     let cfg = JobConfig::new(4, 25.0);
