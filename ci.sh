@@ -23,10 +23,13 @@ echo "== bench smoke (smallest case per bench, catches runtime rot) =="
 for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
              fig8_apps fig9a_failure_overhead fig9b_mtti \
              ablation_is_alltoallv ablation_mg_threshold ablation_coll_select \
-             ablation_nbp2p; do
+             ablation_nbp2p ablation_log_gc; do
   echo "-- smoke: $bench"
   PARTREPER_BENCH_SMOKE=1 cargo bench --bench "$bench"
 done
+
+echo "== clippy (correctness lints fail CI) =="
+cargo clippy --all-targets -- -D warnings
 
 echo "== rustdoc gate (doc drift fails CI) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

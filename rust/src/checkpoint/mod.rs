@@ -166,6 +166,31 @@ pub fn tiered_recovery_cost(
     p * mem_restore_cost_s + (1.0 - p) * (disk_restart_cost_s + tau_s / 2.0)
 }
 
+// ------------------------------------------------------------ log-GC tier
+//
+// Acknowledgment-driven message-log GC (`partreper::epoch`) sits *below*
+// both checkpoint tiers and interacts with their floors: a memory-tier
+// recovery replays the victim forward from its last store refresh, and the
+// refresh cadence is also what advances the GC coverage floor — the older
+// of the two retained store generations pins every rank's log until the
+// next refresh supersedes it. The first-order high-water bound below is
+// what `benches/ablation_log_gc.rs` measures against.
+
+/// First-order per-rank high-water bound on message-log payload bytes
+/// under acknowledgment-driven GC: one GC window of traffic accumulates
+/// between passes, and the coverage floor (the *older* retained store
+/// generation — the two-generation rule) pins up to two refresh windows of
+/// records behind it. With refreshes disabled (`refresh_interval_ops = 0`)
+/// the bound degenerates to the pure GC window; with GC disabled it is
+/// unbounded (not modelled here).
+pub fn log_high_water_bytes(
+    bytes_per_op: f64,
+    gc_interval_ops: f64,
+    refresh_interval_ops: f64,
+) -> f64 {
+    bytes_per_op * (gc_interval_ops + 2.0 * refresh_interval_ops)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +262,19 @@ mod tests {
         // p_mem = 0 degenerates to the classic single-tier model.
         assert!((tiered_young_interval(30.0, 3600.0, 0.0) - base).abs() < 1e-12);
         assert!(disk_tier_mtti(3600.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn log_high_water_bound_shape() {
+        // Pure GC window when the store never refreshes.
+        assert!((log_high_water_bytes(64.0, 32.0, 0.0) - 64.0 * 32.0).abs() < 1e-9);
+        // The two-generation rule pins two refresh windows.
+        assert!(
+            (log_high_water_bytes(64.0, 32.0, 8.0) - 64.0 * (32.0 + 16.0)).abs() < 1e-9
+        );
+        // Monotone in every argument.
+        assert!(log_high_water_bytes(64.0, 64.0, 8.0) > log_high_water_bytes(64.0, 32.0, 8.0));
+        assert!(log_high_water_bytes(64.0, 32.0, 16.0) > log_high_water_bytes(64.0, 32.0, 8.0));
     }
 
     #[test]

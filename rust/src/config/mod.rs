@@ -70,6 +70,23 @@ impl Default for FaultPlan {
     }
 }
 
+/// Message-log retention (`partreper::epoch`): acknowledgment-driven GC
+/// that keeps the §V-B log bounded during failure-free operation.
+/// Both knobs default to 0 (off): GC changes the log's failure-recovery
+/// retention envelope, so runs opt in explicitly (`log.gc_interval=64` is
+/// a reasonable production cadence — see README "Tuning knobs").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LogPlan {
+    /// Logged records (sends + collectives) between GC passes; 0 disables
+    /// the periodic passes (the log then prunes only during §VI-B
+    /// recovery).
+    pub gc_interval: u64,
+    /// Soft cap on the per-rank log payload bytes; a record that would
+    /// exceed it forces a synchronous GC round before proceeding. 0 = no
+    /// cap.
+    pub max_bytes: u64,
+}
+
 /// The in-memory replicated image store (`restore/`) that turns an
 /// unreplicated computational rank's death from a job interruption into a
 /// cold restore onto a spare process.
@@ -114,6 +131,8 @@ pub struct JobConfig {
     pub nspares: usize,
     /// Image-store sharding parameters.
     pub restore: RestorePlan,
+    /// Message-log retention (`log.*` keys).
+    pub log: LogPlan,
     /// Workload seed (problem generation).
     pub seed: u64,
     /// How many EMPI test-loop polls between ULFM failure/revoke checks on
@@ -143,6 +162,7 @@ impl Default for JobConfig {
             faults: FaultPlan::default(),
             nspares: 0,
             restore: RestorePlan::default(),
+            log: LogPlan::default(),
             seed: 42,
             failure_check_stride: 8,
             serial_fanout: false,
@@ -231,6 +251,12 @@ impl JobConfig {
                     return Err(bad(key, value));
                 }
                 self.restore.redundancy = r;
+            }
+            "log.gc_interval" => {
+                self.log.gc_interval = value.parse().map_err(|_| bad(key, value))?
+            }
+            "log.max_bytes" => {
+                self.log.max_bytes = value.parse().map_err(|_| bad(key, value))?
             }
             "net.inject" => {
                 let inject: bool = value.parse().map_err(|_| bad(key, value))?;
@@ -381,6 +407,13 @@ mod tests {
         cfg.set("faults.target", "comps").unwrap();
         assert_eq!(cfg.nprocs(), 8); // 4 comp + 2 rep + 2 spare
         assert_eq!(cfg.spare_base(), 6);
+        assert_eq!(cfg.log, LogPlan::default(), "log GC is opt-in");
+        cfg.set("log.gc_interval", "64").unwrap();
+        cfg.set("log.max_bytes", "1048576").unwrap();
+        assert_eq!(cfg.log.gc_interval, 64);
+        assert_eq!(cfg.log.max_bytes, 1 << 20);
+        assert!(cfg.set("log.gc_interval", "no").is_err());
+        assert!(cfg.set("log.max_bytes", "-1").is_err());
         assert_eq!(cfg.restore.shards, 3);
         assert_eq!(cfg.faults.target, FaultTarget::CompsOnly);
         assert!(cfg.set("restore.shards", "0").is_err());

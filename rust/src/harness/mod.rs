@@ -65,6 +65,12 @@ pub struct RunResult {
     pub nb_irecvs: u64,
     pub nb_completed: u64,
     pub nb_replays: u64,
+    /// Log-GC telemetry: passes run, records dropped (sends +
+    /// collectives, summed over ranks), and the worst rank's log payload
+    /// high-water bytes (max over ranks — the bounded-memory measure).
+    pub gc_rounds: u64,
+    pub records_pruned: u64,
+    pub log_peak_bytes: u64,
     /// Seconds inside the restore phase (refresh pushes + shard gather),
     /// summed over ranks — the cold-restore latency measure.
     pub restore_s: f64,
@@ -212,6 +218,9 @@ pub fn run_app(
         nb_irecvs: crate::metrics::Counters::get(&totals.nb_irecvs),
         nb_completed: crate::metrics::Counters::get(&totals.nb_completed),
         nb_replays: crate::metrics::Counters::get(&totals.nb_replays),
+        gc_rounds: crate::metrics::Counters::get(&totals.gc_rounds),
+        records_pruned: crate::metrics::Counters::get(&totals.records_pruned),
+        log_peak_bytes: crate::metrics::Counters::get(&totals.log_peak_bytes),
         restore_s: report.phase_seconds(Phase::Restore),
         coll_selects: report.empi_fabric.metrics.selects.snapshot(),
     }

@@ -120,6 +120,10 @@ fn main() {
                 (r.nb_isends + r.nb_irecvs).saturating_sub(r.nb_completed),
                 r.nb_replays
             );
+            println!(
+                "log: peak_bytes={} gc_rounds={} records_pruned={}",
+                r.log_peak_bytes, r.gc_rounds, r.records_pruned
+            );
             println!("checksum: {:?}", r.checksum);
         }
         "fig8" => {

@@ -161,6 +161,15 @@ pub struct Counters {
     /// receive re-posted toward a promoted/restored incarnation, or a
     /// send's fan-out re-issued per channel.
     pub nb_replays: AtomicU64,
+    /// Log-GC passes run (periodic cadence, backpressure-forced, refresh-
+    /// triggered, and the §VI-B recovery prune all count).
+    pub gc_rounds: AtomicU64,
+    /// Log records dropped by GC (send records + collective records).
+    pub records_pruned: AtomicU64,
+    /// High-water mark of the message log's payload bytes. **Max-merged**,
+    /// not summed: per rank it is a peak, and the job-wide aggregate is
+    /// the worst rank's peak (the bounded-memory claim is per rank).
+    pub log_peak_bytes: AtomicU64,
 }
 
 impl Counters {
@@ -172,6 +181,13 @@ impl Counters {
     #[inline]
     pub fn add(field: &AtomicU64, n: u64) {
         field.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise a high-water-mark field to at least `v` (for peaks, which
+    /// merge by max rather than sum).
+    #[inline]
+    pub fn max_of(field: &AtomicU64, v: u64) {
+        field.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn get(field: &AtomicU64) -> u64 {
@@ -202,7 +218,14 @@ impl Counters {
             nb_isends,
             nb_irecvs,
             nb_completed,
-            nb_replays
+            nb_replays,
+            gc_rounds,
+            records_pruned
+        );
+        // Peaks merge by max: the job-wide high water is the worst rank's.
+        Self::max_of(
+            &self.log_peak_bytes,
+            other.log_peak_bytes.load(Ordering::Relaxed),
         );
     }
 }
@@ -245,8 +268,26 @@ mod tests {
         Counters::add(&a.resends, 3);
         Counters::add(&b.resends, 4);
         Counters::bump(&b.promotions);
+        Counters::add(&a.records_pruned, 2);
+        Counters::add(&b.records_pruned, 5);
         a.merge(&b);
         assert_eq!(Counters::get(&a.resends), 7);
         assert_eq!(Counters::get(&a.promotions), 1);
+        assert_eq!(Counters::get(&a.records_pruned), 7, "pruned counts sum");
+    }
+
+    #[test]
+    fn log_peak_merges_by_max_not_sum() {
+        let a = Counters::default();
+        let b = Counters::default();
+        Counters::max_of(&a.log_peak_bytes, 100);
+        Counters::max_of(&a.log_peak_bytes, 60);
+        assert_eq!(Counters::get(&a.log_peak_bytes), 100, "peak never drops");
+        Counters::max_of(&b.log_peak_bytes, 70);
+        a.merge(&b);
+        assert_eq!(Counters::get(&a.log_peak_bytes), 100);
+        Counters::max_of(&b.log_peak_bytes, 250);
+        a.merge(&b);
+        assert_eq!(Counters::get(&a.log_peak_bytes), 250);
     }
 }

@@ -1,0 +1,562 @@
+//! The unified epoch/retention subsystem behind bounded-memory message
+//! logging.
+//!
+//! Before this module existed, retention arithmetic was scattered across
+//! the library: the world repair counter lived in `State`, the restore
+//! store packed `world_gen << 40 | step` by hand, the message log kept a
+//! bare `pruned_to` u64, and the §VI-B recovery floors were re-derived
+//! inline in the handler. This module owns all of it:
+//!
+//! * [`WorldEpoch`] — the repair generation (one per §VI error-handler
+//!   world rebuild). Everything epoch-banded derives from it.
+//! * [`StoreGen`] — the image-store generation: the world epoch banded
+//!   above the capture step, so a successor incarnation re-walking its
+//!   timeline after a repair can never collide with the dead incarnation's
+//!   pushes (snapshot bytes are not stable across captures).
+//! * [`IdSet`] — a compact monotone set of received send-ids: a dense
+//!   contiguous prefix stored as a single **watermark** plus a sparse
+//!   overflow set. The watermark is the retention currency: every id at or
+//!   below it is confirmed received, so the sender may drop those records.
+//! * [`RetentionOffer`] / [`agree_floors`] — the acknowledgment protocol.
+//!   Each incarnation periodically offers its collective floor and
+//!   per-source receive watermarks (capped by its own [`StoreCoverage`]);
+//!   the floors any rank may prune to are the minima over every current
+//!   incarnation's latest offer. Offers are monotone, so acting on a stale
+//!   offer is always safe — it merely prunes less.
+//! * [`StoreCoverage`] — what a cold restore of this rank could still
+//!   install. The store retains two generations per shard, so the binding
+//!   snapshot is the *older* retained one; its marks cap this rank's
+//!   offers, which is what keeps GC from pruning records a §VI-B replay
+//!   toward a restored spare would still need.
+//!
+//! The floors computed here are used identically by the periodic GC passes
+//! (`PartReper::gc_pass`, gossiping [`GcOfferMsg`]s over the OMPI control
+//! fabric) and by the error handler's recovery (which exchanges the same
+//! offers in its step (a) allgather) — one algebra, two transports.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::util::{u64s_from_bytes, u64s_to_bytes};
+
+/// Bits of a [`StoreGen`] that hold the capture step; the world epoch is
+/// banded above them.
+pub const STEP_BITS: u32 = 40;
+const STEP_MASK: u64 = (1 << STEP_BITS) - 1;
+
+/// World repair epoch: 0 for the initial world, +1 per §VI repair. All
+/// epoch-banded identifiers (store generations, cold-restore offer stamps)
+/// derive from it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct WorldEpoch(u64);
+
+impl WorldEpoch {
+    pub const ZERO: WorldEpoch = WorldEpoch(0);
+
+    pub fn from_raw(raw: u64) -> Self {
+        WorldEpoch(raw)
+    }
+
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// The epoch after one more repair.
+    pub fn next(self) -> Self {
+        WorldEpoch(self.0 + 1)
+    }
+}
+
+/// Image-store generation: the world epoch banded above the capture's
+/// resume step (`epoch << STEP_BITS | step + 1`; step 0 maps to band 1 so
+/// generation 0 stays "never pushed"). Ordering is epoch-major: any
+/// post-repair capture supersedes every pre-repair one, even when the
+/// successor incarnation resumes at an *earlier* step than the dead
+/// incarnation reached.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StoreGen(u64);
+
+impl StoreGen {
+    pub fn pack(epoch: WorldEpoch, resume_step: u64) -> Self {
+        StoreGen((epoch.raw() << STEP_BITS) | (resume_step + 1).min(STEP_MASK))
+    }
+
+    pub fn from_raw(raw: u64) -> Self {
+        StoreGen(raw)
+    }
+
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    pub fn epoch(self) -> WorldEpoch {
+        WorldEpoch(self.0 >> STEP_BITS)
+    }
+
+    /// The (saturated) step band within the epoch.
+    pub fn step_band(self) -> u64 {
+        self.0 & STEP_MASK
+    }
+}
+
+/// Compact monotone id set: ids `1..=watermark` are all present (stored as
+/// one number), plus a sparse overflow of out-of-order ids above the
+/// watermark. Inserting the next contiguous id advances the watermark and
+/// drains any overflow it reaches, so long-running receive logs stay O(gap)
+/// instead of O(messages).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IdSet {
+    watermark: u64,
+    sparse: HashSet<u64>,
+}
+
+impl IdSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild from serialized parts: a dense watermark prefix plus the
+    /// sparse overflow. Ids at or below the watermark are re-canonicalised
+    /// by [`IdSet::insert`] (they advance the watermark or vanish), so any
+    /// input yields a valid set.
+    pub fn from_parts(watermark: u64, sparse: impl IntoIterator<Item = u64>) -> Self {
+        let mut s = Self {
+            watermark,
+            sparse: HashSet::new(),
+        };
+        for id in sparse {
+            s.insert(id);
+        }
+        s
+    }
+
+    /// Insert an id (ids are 1-based; 0 is never stored). Returns whether
+    /// the set changed.
+    pub fn insert(&mut self, id: u64) -> bool {
+        if id == 0 || id <= self.watermark {
+            return false;
+        }
+        if id == self.watermark + 1 {
+            self.watermark = id;
+            while self.sparse.remove(&(self.watermark + 1)) {
+                self.watermark += 1;
+            }
+            true
+        } else {
+            self.sparse.insert(id)
+        }
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        id != 0 && (id <= self.watermark || self.sparse.contains(&id))
+    }
+
+    /// The dense prefix: every id in `1..=watermark()` is present. This is
+    /// the acknowledgment a sender prunes against.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    pub fn len(&self) -> usize {
+        self.watermark as usize + self.sparse.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.watermark == 0 && self.sparse.is_empty()
+    }
+
+    /// All ids strictly above `floor`, unsorted.
+    pub fn ids_above(&self, floor: u64) -> Vec<u64> {
+        let mut out: Vec<u64> = (floor + 1..=self.watermark).collect();
+        // Sparse ids are all above the watermark by construction.
+        out.extend(self.sparse.iter().copied().filter(|&id| id > floor));
+        out
+    }
+
+    /// Sorted sparse overflow (serialization order).
+    pub fn sparse_sorted(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.sparse.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Wire form: `[watermark, n_sparse, sparse ids (sorted)...]`.
+    pub fn to_wire(&self) -> Vec<u64> {
+        let sparse = self.sparse_sorted();
+        let mut out = Vec::with_capacity(2 + sparse.len());
+        out.push(self.watermark);
+        out.push(sparse.len() as u64);
+        out.extend(sparse);
+        out
+    }
+
+    /// Parse one wire-form set starting at `flat[at]`; returns the set and
+    /// the index just past it.
+    pub fn from_wire_at(flat: &[u64], at: usize) -> (Self, usize) {
+        let watermark = flat[at];
+        let n = flat[at + 1] as usize;
+        let sparse: HashSet<u64> = flat[at + 2..at + 2 + n].iter().copied().collect();
+        (Self { watermark, sparse }, at + 2 + n)
+    }
+
+    /// Parse a whole buffer holding exactly one wire-form set.
+    pub fn from_wire(flat: &[u64]) -> Self {
+        if flat.is_empty() {
+            return Self::new();
+        }
+        let (set, used) = Self::from_wire_at(flat, 0);
+        debug_assert_eq!(used, flat.len(), "trailing garbage after IdSet");
+        set
+    }
+}
+
+impl FromIterator<u64> for IdSet {
+    fn from_iter<T: IntoIterator<Item = u64>>(iter: T) -> Self {
+        let mut s = Self::new();
+        for id in iter {
+            s.insert(id);
+        }
+        s
+    }
+}
+
+/// One incarnation's retention offer: what it can tolerate the cluster
+/// pruning. Exchanged as gossip on the OMPI control fabric by the periodic
+/// GC passes and in the §VI-B step (a) allgather during recovery.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RetentionOffer {
+    /// Newest completed collective id — the replay-floor input of §VI-B
+    /// step (a). Deliberately *not* capped by store coverage: replay
+    /// alignment needs the true completion point.
+    pub last_coll: u64,
+    /// Collective retention floor: `min(last_coll, store coverage)` — the
+    /// newest collective id whose records this incarnation will never need
+    /// replayed again, not even after a cold restore of itself.
+    pub coll_floor: u64,
+    /// Per logical source app rank: `min(live receive watermark, store
+    /// coverage watermark)` — the highest send-id from that source this
+    /// incarnation acknowledges as durably received.
+    pub recv_marks: Vec<u64>,
+}
+
+impl RetentionOffer {
+    /// Flat form: `[last_coll, coll_floor, marks...]`.
+    pub fn encode(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(2 + self.recv_marks.len());
+        out.push(self.last_coll);
+        out.push(self.coll_floor);
+        out.extend(&self.recv_marks);
+        out
+    }
+
+    pub fn decode(flat: &[u64]) -> Self {
+        Self {
+            last_coll: flat[0],
+            coll_floor: flat[1],
+            recv_marks: flat[2..].to_vec(),
+        }
+    }
+}
+
+/// The marks one pushed store generation could restore: the snapshotted
+/// log's completion point and receive watermarks.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SnapshotMarks {
+    pub last_coll: u64,
+    /// Per logical source app rank.
+    pub recv_marks: Vec<u64>,
+}
+
+/// Tracks what a cold restore of this rank might install, mirroring the
+/// holder-side two-generation retention rule: holders keep the newest two
+/// generations per shard, and the older one is the conservatively binding
+/// snapshot (the newer may be torn if the owner dies mid-push). The marks
+/// of that binding snapshot cap this rank's [`RetentionOffer`]; each
+/// successful refresh advances the cap — which is how `store_refresh`
+/// advances the cluster's prune floor.
+#[derive(Clone, Debug, Default)]
+pub struct StoreCoverage {
+    prev: Option<SnapshotMarks>,
+    last: Option<SnapshotMarks>,
+}
+
+impl StoreCoverage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a successfully planned push of a new generation whose
+    /// snapshot carried `marks`.
+    pub fn on_push(&mut self, marks: SnapshotMarks) {
+        self.prev = self.last.take().or_else(|| Some(marks.clone()));
+        self.last = Some(marks);
+    }
+
+    /// The binding (oldest restorable) snapshot's marks, if any push ever
+    /// happened.
+    pub fn binding(&self) -> Option<&SnapshotMarks> {
+        self.prev.as_ref().or(self.last.as_ref())
+    }
+
+    /// Collective-floor cap: a rank that never pushed has no restorable
+    /// snapshot, so a cold restore of it aborts regardless — no cap.
+    pub fn coll_cap(&self) -> u64 {
+        self.binding().map_or(u64::MAX, |m| m.last_coll)
+    }
+
+    /// Receive-watermark cap for logical source `src` (see [`Self::coll_cap`]).
+    pub fn recv_cap(&self, src: usize) -> u64 {
+        self.binding()
+            .map_or(u64::MAX, |m| m.recv_marks.get(src).copied().unwrap_or(0))
+    }
+}
+
+/// The floors a rank may prune to, agreed from every current incarnation's
+/// latest [`RetentionOffer`]. A missing offer contributes zero floors —
+/// absent knowledge never prunes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RetentionFloors {
+    /// `min(last_coll)` over present offers: the §VI-B replay floor. Only
+    /// meaningful when every offer is present (recovery's allgather).
+    pub replay_floor: u64,
+    /// Collective records at or below this are prunable.
+    pub coll_floor: u64,
+    /// Per destination app rank: my send records to it at or below this id
+    /// are acknowledged by *every* incarnation of it (and by its store
+    /// coverage) and are prunable.
+    pub send_floors: HashMap<usize, u64>,
+}
+
+/// Fold per-eworld-position offers into prune floors for the rank whose
+/// logical app rank is `my_app`. `app_of[epos]` maps each position to its
+/// logical app rank (a replica maps to the rank it mirrors); the send
+/// floor toward a destination is the minimum acknowledgment over all of
+/// its incarnations, so a lagging replica (or a restored spare that has
+/// not gossiped yet) holds its destination's records in every sender's
+/// log.
+pub fn agree_floors(
+    offers: &[Option<&RetentionOffer>],
+    app_of: &[usize],
+    my_app: usize,
+) -> RetentionFloors {
+    assert_eq!(offers.len(), app_of.len());
+    let all_present = offers.iter().all(|o| o.is_some());
+    let replay_floor = if all_present {
+        offers
+            .iter()
+            .map(|o| o.as_ref().unwrap().last_coll)
+            .min()
+            .unwrap_or(0)
+    } else {
+        0
+    };
+    let coll_floor = if all_present {
+        offers
+            .iter()
+            .map(|o| o.as_ref().unwrap().coll_floor)
+            .min()
+            .unwrap_or(0)
+    } else {
+        0
+    };
+    let mut send_floors: HashMap<usize, u64> = HashMap::new();
+    for (epos, offer) in offers.iter().enumerate() {
+        let dst = app_of[epos];
+        let mark = offer.map_or(0, |o| o.recv_marks.get(my_app).copied().unwrap_or(0));
+        send_floors
+            .entry(dst)
+            .and_modify(|m| *m = (*m).min(mark))
+            .or_insert(mark);
+    }
+    RetentionFloors {
+        replay_floor,
+        coll_floor,
+        send_floors,
+    }
+}
+
+/// One GC gossip message on the OMPI control fabric: the emitter's latest
+/// offer, sequence-stamped so receivers keep only the newest per emitter
+/// (fabric delivery is ordered, but a repair can interleave emissions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GcOfferMsg {
+    /// Per-emitter monotone sequence number.
+    pub seq: u64,
+    /// Emitter's logical app rank (informational; the fabric source rank
+    /// keys the offer table).
+    pub app: usize,
+    pub offer: RetentionOffer,
+}
+
+impl GcOfferMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut flat = vec![self.seq, self.app as u64];
+        flat.extend(self.offer.encode());
+        u64s_to_bytes(&flat)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Self {
+        let flat = u64s_from_bytes(bytes);
+        Self {
+            seq: flat[0],
+            app: flat[1] as usize,
+            offer: RetentionOffer::decode(&flat[2..]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_gen_matches_legacy_packing() {
+        // The formula this module replaced: (gen << 40) | (step+1).min(mask).
+        for (gen, step) in [(0u64, 0u64), (1, 7), (3, (1 << 41))] {
+            let legacy = (gen << 40) | (step + 1).min((1 << 40) - 1);
+            assert_eq!(
+                StoreGen::pack(WorldEpoch::from_raw(gen), step).raw(),
+                legacy,
+                "gen={gen} step={step}"
+            );
+        }
+        let g = StoreGen::pack(WorldEpoch::from_raw(5), 9);
+        assert_eq!(g.epoch().raw(), 5);
+        assert_eq!(g.step_band(), 10);
+    }
+
+    #[test]
+    fn store_gen_epoch_major_ordering() {
+        // A post-repair capture at an *earlier* step still supersedes every
+        // pre-repair capture — the torn-image guarantee depends on it.
+        let before = StoreGen::pack(WorldEpoch::from_raw(2), 1_000_000);
+        let after = StoreGen::pack(WorldEpoch::from_raw(3), 3);
+        assert!(after > before);
+    }
+
+    #[test]
+    fn idset_watermark_advances_and_drains_overflow() {
+        let mut s = IdSet::new();
+        assert!(!s.insert(0), "id 0 is never tracked");
+        assert!(s.insert(1));
+        assert!(s.insert(4));
+        assert!(s.insert(5));
+        assert_eq!(s.watermark(), 1);
+        assert!(s.insert(2));
+        assert_eq!(s.watermark(), 2, "3 still missing");
+        assert!(s.insert(3));
+        assert_eq!(s.watermark(), 5, "overflow drained through the gap");
+        assert!(!s.insert(4), "duplicates below the watermark are no-ops");
+        assert!(s.contains(5) && !s.contains(6) && !s.contains(0));
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn idset_wire_roundtrip_and_ids_above() {
+        let s: IdSet = [1, 2, 3, 7, 9].into_iter().collect();
+        assert_eq!(s.watermark(), 3);
+        let wire = s.to_wire();
+        assert_eq!(wire, vec![3, 2, 7, 9]);
+        let back = IdSet::from_wire(&wire);
+        assert_eq!(back, s);
+        assert_eq!(IdSet::from_wire(&[]), IdSet::new());
+        let mut above = s.ids_above(2);
+        above.sort_unstable();
+        assert_eq!(above, vec![3, 7, 9]);
+        let mut above = s.ids_above(5);
+        above.sort_unstable();
+        assert_eq!(above, vec![7, 9]);
+    }
+
+    #[test]
+    fn offer_roundtrip_and_gossip_msg() {
+        let offer = RetentionOffer {
+            last_coll: 12,
+            coll_floor: 9,
+            recv_marks: vec![3, 0, 7],
+        };
+        assert_eq!(RetentionOffer::decode(&offer.encode()), offer);
+        let msg = GcOfferMsg {
+            seq: 4,
+            app: 2,
+            offer,
+        };
+        assert_eq!(GcOfferMsg::decode(&msg.encode()), msg);
+    }
+
+    #[test]
+    fn coverage_binds_to_older_retained_generation() {
+        let mut cov = StoreCoverage::new();
+        assert_eq!(cov.coll_cap(), u64::MAX, "never pushed: no cap");
+        assert_eq!(cov.recv_cap(0), u64::MAX);
+        let marks = |c: u64| SnapshotMarks {
+            last_coll: c,
+            recv_marks: vec![c + 1, c + 2],
+        };
+        cov.on_push(marks(4));
+        assert_eq!(cov.coll_cap(), 4, "single push: it is the binding one");
+        cov.on_push(marks(8));
+        assert_eq!(cov.coll_cap(), 4, "holders retain two: older binds");
+        assert_eq!(cov.recv_cap(1), 6);
+        cov.on_push(marks(15));
+        assert_eq!(cov.coll_cap(), 8, "third push evicts the first");
+        assert_eq!(cov.recv_cap(0), 9);
+        assert_eq!(cov.recv_cap(9), 0, "unknown source: nothing restorable");
+    }
+
+    #[test]
+    fn floors_are_minima_over_incarnations() {
+        let o = |last: u64, floor: u64, marks: &[u64]| RetentionOffer {
+            last_coll: last,
+            coll_floor: floor,
+            recv_marks: marks.to_vec(),
+        };
+        // 2 comps + 1 replica of comp 0; I am app 1.
+        let offers = [
+            o(10, 8, &[0, 5]),  // comp 0
+            o(12, 12, &[0, 9]), // comp 1 (me)
+            o(7, 7, &[0, 3]),   // rep of comp 0, lagging
+        ];
+        let refs: Vec<Option<&RetentionOffer>> = offers.iter().map(Some).collect();
+        let f = agree_floors(&refs, &[0, 1, 0], 1);
+        assert_eq!(f.replay_floor, 7);
+        assert_eq!(f.coll_floor, 7);
+        // Sends to app 0 are held back by its lagging replica.
+        assert_eq!(f.send_floors[&0], 3);
+        assert_eq!(f.send_floors[&1], 9);
+    }
+
+    #[test]
+    fn missing_offer_contributes_zero_floors() {
+        let full = RetentionOffer {
+            last_coll: 10,
+            coll_floor: 10,
+            recv_marks: vec![6, 6],
+        };
+        let f = agree_floors(&[Some(&full), None], &[0, 1], 0);
+        assert_eq!(f.replay_floor, 0);
+        assert_eq!(f.coll_floor, 0, "cannot prune collectives blind");
+        assert_eq!(f.send_floors[&1], 0, "unheard incarnation pins its records");
+        assert_eq!(f.send_floors[&0], 6);
+    }
+
+    #[test]
+    fn floors_monotone_as_offers_advance() {
+        // Offers only ever advance (watermarks and floors are monotone per
+        // incarnation); the agreed floors must follow monotonically.
+        let o = |last: u64, marks: &[u64]| RetentionOffer {
+            last_coll: last,
+            coll_floor: last,
+            recv_marks: marks.to_vec(),
+        };
+        let round1 = [o(4, &[2, 2]), o(5, &[3, 0])];
+        let round2 = [o(9, &[6, 4]), o(5, &[3, 2])];
+        let r1: Vec<Option<&RetentionOffer>> = round1.iter().map(Some).collect();
+        let r2: Vec<Option<&RetentionOffer>> = round2.iter().map(Some).collect();
+        let f1 = agree_floors(&r1, &[0, 1], 0);
+        let f2 = agree_floors(&r2, &[0, 1], 0);
+        assert!(f2.coll_floor >= f1.coll_floor);
+        for (d, m) in &f1.send_floors {
+            assert!(f2.send_floors[d] >= *m);
+        }
+    }
+}

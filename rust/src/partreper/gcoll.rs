@@ -118,6 +118,22 @@ impl<'a> Guard<'a> {
         }
     }
 
+    /// Failure-checked park on an arbitrary fabric's arrival clock — the
+    /// wait primitive for blocking on traffic that is not tied to one
+    /// comm's posted receives (the log-GC backpressure wait on OMPI
+    /// acknowledgment gossip). Returns the advanced clock; the caller
+    /// loops, so checks interleave exactly like every other guarded wait.
+    pub fn check_and_park(
+        &self,
+        fabric: &crate::fabric::Fabric,
+        me: usize,
+        clock: u64,
+        tick: std::time::Duration,
+    ) -> Result<u64, OpError> {
+        self.check()?;
+        Ok(fabric.wait_new_mail(me, clock, tick))
+    }
+
     /// Guarded blocking receive on an intercommunicator (collective-result
     /// relays from the mirror computational process).
     pub fn recv_inter(

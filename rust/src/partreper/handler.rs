@@ -50,6 +50,7 @@ use crate::restore::{self, OfferMsg, Snapshot};
 use crate::util::{u64s_from_bytes, u64s_to_bytes};
 
 use super::comms::{Role, WorldComms};
+use super::epoch::{self, IdSet, RetentionOffer, WorldEpoch};
 use super::gcoll::{Guard, OpError};
 use super::log::{Channel, CollKind, CollRecord};
 use super::{CollResult, PartReper};
@@ -120,8 +121,8 @@ impl PartReper {
                 st.layout.nrep() - outcome.layout.nrep() - outcome.promotions.len();
             Counters::add(&self.ctx.counters.replica_drops, dropped_reps as u64);
 
-            let generation = st.generation + 1;
-            let base = WorldComms::base_ctx_from_oworld(&new_oworld, generation);
+            let epoch = st.epoch.next();
+            let base = WorldComms::base_ctx_from_oworld(&new_oworld, epoch.raw());
             let is_member = outcome.layout.assign.contains(&self.ctx.rank);
             let comms = is_member.then(|| {
                 WorldComms::build(
@@ -129,13 +130,13 @@ impl PartReper {
                     outcome.layout.clone(),
                     self.ctx.rank,
                     base,
-                    generation,
+                    epoch.raw(),
                 )
             });
             st.oworld = new_oworld;
             st.layout = outcome.layout;
             st.comms = comms;
-            st.generation = generation;
+            st.epoch = epoch;
             // In-flight §V-C relays were posted on the torn-down comms
             // (dead context ids): abandon them — step 4's replay re-relays
             // whatever a surviving replica still lacks.
@@ -174,14 +175,14 @@ impl PartReper {
     /// installs the snapshot (image for [`PartReper::start`], log for
     /// recovery). Redundancy exhausted → job interruption.
     fn cold_restore_phase(&self) -> Result<(), OpError> {
-        let (pending, generation, my_pending) = {
+        let (pending, epoch, my_pending) = {
             let st = self.state.borrow();
             let mine = st
                 .cold_pending
                 .iter()
                 .copied()
                 .find(|&(_, s)| s == self.ctx.rank);
-            (st.cold_pending.clone(), st.generation, mine)
+            (st.cold_pending.clone(), st.epoch, mine)
         };
         // Drain pushed shards first so offers reflect the freshest
         // generations; keep offer messages queued iff I'm still waiting
@@ -208,7 +209,7 @@ impl PartReper {
                 let entries = self.store.borrow().entries_for(comp);
                 let msg = OfferMsg {
                     owner: comp,
-                    epoch: generation,
+                    epoch,
                     entries,
                 };
                 g.check()?;
@@ -230,7 +231,7 @@ impl PartReper {
             }
             if awaiting_image {
                 let (comp, _) = my_pending.expect("awaiting_image implies my_pending");
-                self.gather_and_install(&g, &st, comp, generation)?;
+                self.gather_and_install(&g, &st, comp, epoch)?;
             }
         }
         if awaiting_image {
@@ -251,7 +252,7 @@ impl PartReper {
         g: &Guard,
         st: &super::State,
         comp: usize,
-        epoch: u64,
+        epoch: WorldEpoch,
     ) -> Result<(), OpError> {
         let me = self.ctx.rank;
         let fabric = &self.ctx.empi_fabric;
@@ -325,13 +326,21 @@ impl PartReper {
         let me_app = comms.app_rank();
         let my_role = comms.role();
 
-        // (a) Exchange last completed collective ids.
-        let mine = log.last_coll_id();
-        let all_last_raw = g.allgather(eworld, &u64s_to_bytes(&[mine]))?;
-        let all_last: Vec<u64> = all_last_raw
+        // (a) Exchange retention offers: the last completed collective id
+        // (the §VI-B agreement input) plus the acknowledgment floors the
+        // unified epoch subsystem prunes by — one allgather carries both,
+        // so recovery and the periodic GC agree floors with the same
+        // algebra over the same data.
+        let my_offer = {
+            let gc = self.gc.borrow();
+            log.retention_offer(layout.ncomp, &gc.coverage)
+        };
+        let all_raw = g.allgather(eworld, &u64s_to_bytes(&my_offer.encode()))?;
+        let offers: Vec<RetentionOffer> = all_raw
             .iter()
-            .map(|b| u64s_from_bytes(b)[0])
+            .map(|b| RetentionOffer::decode(&u64s_from_bytes(b)))
             .collect();
+        let all_last: Vec<u64> = offers.iter().map(|o| o.last_coll).collect();
         let min_cid = all_last.iter().copied().min().unwrap_or(0);
 
         // Stale store guard: a cold-restored rank whose snapshot predates
@@ -349,18 +358,19 @@ impl PartReper {
         }
 
         // (b) Exchange received send-ids: to each incarnation, the ids I
-        // received from its logical rank.
-        let rows: Vec<Vec<u8>> = (0..n)
+        // received from its logical rank (compact watermark+sparse wire).
+        let app_of: Vec<usize> = (0..n)
             .map(|epos| {
-                let app = if epos < layout.ncomp {
+                if epos < layout.ncomp {
                     epos
                 } else {
                     layout.rep_mirror[epos - layout.ncomp]
-                };
-                let mut ids: Vec<u64> = log.received_from(app).into_iter().collect();
-                ids.sort_unstable();
-                u64s_to_bytes(&ids)
+                }
             })
+            .collect();
+        let rows: Vec<Vec<u8>> = app_of
+            .iter()
+            .map(|&app| u64s_to_bytes(&log.received_wire(app)))
             .collect();
         let exchanged = g.alltoallv(eworld, &rows)?;
 
@@ -384,7 +394,20 @@ impl PartReper {
             if !routes {
                 continue;
             }
-            let received: HashSet<u64> = u64s_from_bytes(raw).into_iter().collect();
+            let received = IdSet::from_wire(&u64s_from_bytes(raw));
+            // Resend-coverage guard (the send-side twin of the stale-store
+            // guard above): records at or below my committed send floor
+            // toward this destination are gone. Every live incarnation and
+            // every coverage-capped restore has them by construction; a
+            // hole here means the rank died *again* before its first
+            // post-restore refresh and was rebuilt from a pre-floor
+            // generation — the resends it needs cannot be produced, so the
+            // job interrupts rather than wedge.
+            let committed = log.send_pruned_to(d_app);
+            if (received.watermark() + 1..=committed).any(|id| !received.contains(id)) {
+                let dead_rank = self.ctx.abort.trigger(d_app);
+                std::panic::panic_any(crate::error::JobInterrupted { dead_rank });
+            }
             // Resend what the destination never received. Detached
             // nonblocking: the receiver's re-executed (or still-pending)
             // receives claim these whenever its timeline reaches them —
@@ -412,8 +435,22 @@ impl PartReper {
         // Replicas replay nothing: every collective they completed was
         // relayed by a computational process that logged it too.
 
-        // GC: nothing below the floor can ever be replayed again.
-        log.prune(min_cid, &Default::default());
+        // GC: the offers exchanged in step (a) are exactly the §VI-B
+        // confirmation data, so recovery prunes with the same agreed
+        // floors as a periodic pass — send records acknowledged by every
+        // incarnation of their destination, collective records completed
+        // everywhere — both capped by store coverage so a *later* cold
+        // restore still finds every record its snapshot lacks. (The
+        // pre-epoch code pruned collectives straight to `min_cid` with an
+        // empty confirmed map: send records never GC'd, and a snapshot
+        // older than `min_cid` could lose the replays it depended on.)
+        let offer_refs: Vec<Option<&RetentionOffer>> = offers.iter().map(Some).collect();
+        let floors = epoch::agree_floors(&offer_refs, &app_of, me_app);
+        debug_assert_eq!(floors.replay_floor, min_cid);
+        debug_assert!(floors.coll_floor <= min_cid);
+        let stats = log.prune(floors.coll_floor, &floors.send_floors);
+        Counters::bump(&g.counters.gc_rounds);
+        Counters::add(&g.counters.records_pruned, stats.records() as u64);
         Ok(())
     }
 

@@ -3,7 +3,8 @@
 //! Every p2p transmission carries a piggybacked **send-id** (sequential per
 //! (logical sender → logical receiver) pair) and is saved at the sender
 //! with all its arguments. Receivers record the ids they received per
-//! logical source. Collectives are logged with their inputs plus a
+//! logical source (compactly: a contiguous watermark plus a sparse
+//! overflow — [`IdSet`]). Collectives are logged with their inputs plus a
 //! `last_collective_id`. After a failure these logs drive:
 //!
 //! * **resend** — ids in my send log that a destination incarnation never
@@ -18,12 +19,21 @@
 //! Because a replica performs the same operations in the same order as its
 //! computational process, its log mirrors the computational log — that is
 //! what makes the promoted replica able to resend on behalf of the dead.
+//!
+//! The log is **byte-accounted** (send payloads + collective payloads) and
+//! garbage-collected continuously by the acknowledgment protocol in
+//! [`super::epoch`]: send records prune to the per-destination watermark
+//! floors, collective records to the cluster collective floor, both capped
+//! by store coverage so a later cold restore still finds every record its
+//! snapshot lacks.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::empi::{DType, ReduceOp};
 use crate::util::bytes::{ByteReader, ByteWriter};
+
+use super::epoch::{IdSet, RetentionOffer, SnapshotMarks, StoreCoverage};
 
 /// Which stream of a logical destination a transmission targets: the
 /// computational process or its replica. (§V-B routes comp→comp, rep→rep,
@@ -70,18 +80,37 @@ pub struct CollRecord {
     pub blocks: Arc<Vec<Vec<u8>>>,
 }
 
+fn coll_payload_bytes(rec: &CollRecord) -> usize {
+    rec.input.len() + rec.blocks.iter().map(|b| b.len()).sum::<usize>()
+}
+
+/// What one [`MessageLog::prune`] dropped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    pub sends: usize,
+    pub colls: usize,
+    pub bytes: usize,
+}
+
+impl PruneStats {
+    pub fn records(&self) -> usize {
+        self.sends + self.colls
+    }
+}
+
 /// Per-rank message log.
 #[derive(Clone, Default, PartialEq)]
 pub struct MessageLog {
-    /// Next send id per destination app rank (ids start at 1).
+    /// Next send id per destination app rank (ids start at 1). Never
+    /// pruned — id allocation must stay aligned between mirrored logs.
     next_id: HashMap<usize, u64>,
     /// Send records per destination app rank.
     sends: HashMap<usize, Vec<SendRecord>>,
-    /// Ids received, per source app rank.
-    received: HashMap<usize, HashSet<u64>>,
+    /// Ids received, per source app rank (watermark + sparse overflow).
+    received: HashMap<usize, IdSet>,
     /// Send ids to suppress (destination already has them), per
     /// (destination app rank, destination channel).
-    skip: HashMap<(usize, Channel), HashSet<u64>>,
+    skip: HashMap<(usize, Channel), std::collections::HashSet<u64>>,
     /// Completed collectives, oldest first.
     colls: Vec<CollRecord>,
     /// Id of the newest completed collective (0 = none).
@@ -90,6 +119,16 @@ pub struct MessageLog {
     /// gone and can never be replayed for a peer again. Cold restores from
     /// an image-store generation older than this floor must abort.
     pruned_to: u64,
+    /// Highest send floor ever pruned, per destination app rank: records
+    /// at or below it are gone and can never be resent. The §VI-B step (c)
+    /// guard aborts if a restored incarnation's received set does not cover
+    /// this commitment (possible only when a rank dies *again* before its
+    /// first post-restore refresh re-establishes store coverage).
+    send_pruned_to: HashMap<usize, u64>,
+    /// Retained payload bytes: send record data + collective inputs/blocks.
+    /// The quantity `log.max_bytes` backpressure and `log_peak_bytes`
+    /// account.
+    payload_bytes: usize,
 }
 
 impl MessageLog {
@@ -109,6 +148,7 @@ impl MessageLog {
             data,
         };
         let out = rec.id;
+        self.payload_bytes += rec.data.len();
         self.sends.entry(dst).or_default().push(rec);
         out
     }
@@ -133,12 +173,12 @@ impl MessageLog {
 
     /// My logged sends to `dst` whose id is not in `received_at_dst` —
     /// the resend set of §VI-B.
-    pub fn unreceived_sends(&self, dst: usize, received_at_dst: &HashSet<u64>) -> Vec<SendRecord> {
+    pub fn unreceived_sends(&self, dst: usize, received_at_dst: &IdSet) -> Vec<SendRecord> {
         self.sends
             .get(&dst)
             .map(|v| {
                 v.iter()
-                    .filter(|r| !received_at_dst.contains(&r.id))
+                    .filter(|r| !received_at_dst.contains(r.id))
                     .cloned()
                     .collect()
             })
@@ -152,15 +192,13 @@ impl MessageLog {
         &mut self,
         dst: usize,
         channel: Channel,
-        received_at_dst: &HashSet<u64>,
+        received_at_dst: &IdSet,
     ) -> usize {
-        let sent_up_to = self.next_id.get(&dst).copied().unwrap_or(0);
+        let sent_up_to = self.sent_up_to(dst);
         let mut n = 0;
-        for &id in received_at_dst {
-            if id > sent_up_to {
-                self.mark_skip(dst, channel, id);
-                n += 1;
-            }
+        for id in received_at_dst.ids_above(sent_up_to) {
+            self.mark_skip(dst, channel, id);
+            n += 1;
         }
         n
     }
@@ -185,44 +223,51 @@ impl MessageLog {
     /// which clones the whole per-source set (fine for the §VI-B exchange
     /// that genuinely needs the set, ruinous per message).
     pub fn was_received(&self, src: usize, id: u64) -> bool {
-        self.received.get(&src).is_some_and(|s| s.contains(&id))
+        self.received.get(&src).is_some_and(|s| s.contains(id))
     }
 
     /// The full received-id set for `src` (cloned — recovery-path only;
     /// per-message dedup goes through [`MessageLog::was_received`]).
-    pub fn received_from(&self, src: usize) -> HashSet<u64> {
+    pub fn received_from(&self, src: usize) -> IdSet {
         self.received.get(&src).cloned().unwrap_or_default()
     }
 
+    /// Contiguous receive watermark for `src`: every id `1..=w` arrived.
+    pub fn receive_watermark(&self, src: usize) -> u64 {
+        self.received.get(&src).map_or(0, |s| s.watermark())
+    }
+
+    /// Wire form of the received set for `src` — one §VI-B step (b) row.
+    pub fn received_wire(&self, src: usize) -> Vec<u64> {
+        self.received
+            .get(&src)
+            .map(|s| s.to_wire())
+            .unwrap_or_else(|| IdSet::new().to_wire())
+    }
+
     /// Serialize the whole received map as u64s:
-    /// `[nsrc, (src, count, ids...)...]` — the §VI-B Alltoallv payload.
+    /// `[nsrc, (src, watermark, n_sparse, sparse ids...)...]`.
     pub fn received_map_flat(&self) -> Vec<u64> {
         let mut srcs: Vec<usize> = self.received.keys().copied().collect();
         srcs.sort_unstable();
         let mut out = vec![srcs.len() as u64];
         for src in srcs {
-            let ids = &self.received[&src];
             out.push(src as u64);
-            out.push(ids.len() as u64);
-            let mut v: Vec<u64> = ids.iter().copied().collect();
-            v.sort_unstable();
-            out.extend(v);
+            out.extend(self.received[&src].to_wire());
         }
         out
     }
 
     /// Parse a peer's flat received map.
-    pub fn parse_received_map(flat: &[u64]) -> HashMap<usize, HashSet<u64>> {
+    pub fn parse_received_map(flat: &[u64]) -> HashMap<usize, IdSet> {
         let mut out = HashMap::new();
-        let mut i = 1;
         let nsrc = flat.first().copied().unwrap_or(0) as usize;
+        let mut i = 1;
         for _ in 0..nsrc {
             let src = flat[i] as usize;
-            let count = flat[i + 1] as usize;
-            i += 2;
-            let ids: HashSet<u64> = flat[i..i + count].iter().copied().collect();
-            i += count;
-            out.insert(src, ids);
+            let (set, next) = IdSet::from_wire_at(flat, i + 1);
+            i = next;
+            out.insert(src, set);
         }
         out
     }
@@ -239,6 +284,7 @@ impl MessageLog {
     pub fn log_collective(&mut self, rec: CollRecord) {
         debug_assert_eq!(rec.id, self.last_coll_id + 1, "collective ids are dense");
         self.last_coll_id = rec.id;
+        self.payload_bytes += coll_payload_bytes(&rec);
         self.colls.push(rec);
     }
 
@@ -251,21 +297,80 @@ impl MessageLog {
         self.colls.iter().filter(|c| c.id > after).cloned().collect()
     }
 
-    /// Garbage-collect: drop collectives at or below the globally agreed
-    /// completion point and send records confirmed received everywhere.
-    pub fn prune(&mut self, coll_floor: u64, confirmed: &HashMap<usize, u64>) {
-        self.colls.retain(|c| c.id > coll_floor);
+    // ---------------------------------------------------------- retention
+
+    /// Garbage-collect: drop collectives at or below the agreed collective
+    /// floor and send records at or below their destination's agreed
+    /// acknowledgment floor (`confirmed`, per destination app rank).
+    pub fn prune(&mut self, coll_floor: u64, confirmed: &HashMap<usize, u64>) -> PruneStats {
+        let mut stats = PruneStats::default();
+        self.colls.retain(|c| {
+            if c.id <= coll_floor {
+                stats.colls += 1;
+                stats.bytes += coll_payload_bytes(c);
+                false
+            } else {
+                true
+            }
+        });
         self.pruned_to = self.pruned_to.max(coll_floor);
         for (dst, &floor) in confirmed {
+            if floor > 0 {
+                let committed = self.send_pruned_to.entry(*dst).or_insert(0);
+                *committed = (*committed).max(floor);
+            }
             if let Some(v) = self.sends.get_mut(dst) {
-                v.retain(|r| r.id > floor);
+                v.retain(|r| {
+                    if r.id <= floor {
+                        stats.sends += 1;
+                        stats.bytes += r.data.len();
+                        false
+                    } else {
+                        true
+                    }
+                });
             }
         }
+        self.payload_bytes -= stats.bytes;
+        stats
     }
 
     /// Highest collective floor ever pruned on this log.
     pub fn pruned_to(&self) -> u64 {
         self.pruned_to
+    }
+
+    /// Highest send floor ever pruned toward `dst` (the resend-coverage
+    /// commitment the §VI-B step (c) guard checks).
+    pub fn send_pruned_to(&self, dst: usize) -> u64 {
+        self.send_pruned_to.get(&dst).copied().unwrap_or(0)
+    }
+
+    /// Retained payload bytes (send data + collective inputs/blocks).
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_bytes
+    }
+
+    /// This rank's retention offer: its collective floor and per-source
+    /// receive watermarks, capped by what its restorable store snapshot
+    /// still covers (see [`super::epoch`]).
+    pub fn retention_offer(&self, ncomp: usize, coverage: &StoreCoverage) -> RetentionOffer {
+        RetentionOffer {
+            last_coll: self.last_coll_id,
+            coll_floor: self.last_coll_id.min(coverage.coll_cap()),
+            recv_marks: (0..ncomp)
+                .map(|src| self.receive_watermark(src).min(coverage.recv_cap(src)))
+                .collect(),
+        }
+    }
+
+    /// The marks a snapshot of this log carries — recorded by
+    /// `store_refresh` into its [`StoreCoverage`] at push time.
+    pub fn snapshot_marks(&self, ncomp: usize) -> SnapshotMarks {
+        SnapshotMarks {
+            last_coll: self.last_coll_id,
+            recv_marks: (0..ncomp).map(|src| self.receive_watermark(src)).collect(),
+        }
     }
 
     pub fn stats(&self) -> (usize, usize, usize) {
@@ -308,11 +413,12 @@ impl MessageLog {
         srcs.sort_unstable();
         w.usize(srcs.len());
         for src in srcs {
-            let mut ids: Vec<u64> = self.received[&src].iter().copied().collect();
-            ids.sort_unstable();
+            let set = &self.received[&src];
             w.usize(src);
-            w.usize(ids.len());
-            for id in ids {
+            w.u64(set.watermark());
+            let sparse = set.sparse_sorted();
+            w.usize(sparse.len());
+            for id in sparse {
                 w.u64(id);
             }
         }
@@ -346,11 +452,19 @@ impl MessageLog {
         }
         w.u64(self.last_coll_id);
         w.u64(self.pruned_to);
+        let mut pdsts: Vec<usize> = self.send_pruned_to.keys().copied().collect();
+        pdsts.sort_unstable();
+        w.usize(pdsts.len());
+        for dst in pdsts {
+            w.usize(dst);
+            w.u64(self.send_pruned_to[&dst]);
+        }
         w.finish()
     }
 
     pub fn from_bytes(buf: &[u8]) -> Self {
         let mut r = ByteReader::new(buf);
+        let mut payload_bytes = 0usize;
         let mut next_id = HashMap::new();
         for _ in 0..r.usize() {
             let dst = r.usize();
@@ -360,22 +474,25 @@ impl MessageLog {
         for _ in 0..r.usize() {
             let dst = r.usize();
             let n = r.usize();
-            let recs = (0..n)
+            let recs: Vec<SendRecord> = (0..n)
                 .map(|_| SendRecord {
                     id: r.u64(),
                     tag: r.u64() as i64,
                     data: Arc::new(r.bytes().to_vec()),
                 })
                 .collect();
+            payload_bytes += recs.iter().map(|rec| rec.data.len()).sum::<usize>();
             sends.insert(dst, recs);
         }
-        let mut received: HashMap<usize, HashSet<u64>> = HashMap::new();
+        let mut received: HashMap<usize, IdSet> = HashMap::new();
         for _ in 0..r.usize() {
             let src = r.usize();
+            let watermark = r.u64();
             let n = r.usize();
-            received.insert(src, (0..n).map(|_| r.u64()).collect());
+            let sparse = (0..n).map(|_| r.u64());
+            received.insert(src, IdSet::from_parts(watermark, sparse));
         }
-        let mut skip: HashMap<(usize, Channel), HashSet<u64>> = HashMap::new();
+        let mut skip: HashMap<(usize, Channel), std::collections::HashSet<u64>> = HashMap::new();
         for _ in 0..r.usize() {
             let dst = r.usize();
             let ch = if r.u64() == 1 {
@@ -387,7 +504,7 @@ impl MessageLog {
             skip.insert((dst, ch), (0..n).map(|_| r.u64()).collect());
         }
         let ncolls = r.usize();
-        let colls = (0..ncolls)
+        let colls: Vec<CollRecord> = (0..ncolls)
             .map(|_| {
                 let id = r.u64();
                 let kind = coll_kind_from(r.u64());
@@ -408,8 +525,14 @@ impl MessageLog {
                 }
             })
             .collect();
+        payload_bytes += colls.iter().map(coll_payload_bytes).sum::<usize>();
         let last_coll_id = r.u64();
         let pruned_to = r.u64();
+        let mut send_pruned_to = HashMap::new();
+        for _ in 0..r.usize() {
+            let dst = r.usize();
+            send_pruned_to.insert(dst, r.u64());
+        }
         Self {
             next_id,
             sends,
@@ -418,6 +541,8 @@ impl MessageLog {
             colls,
             last_coll_id,
             pruned_to,
+            send_pruned_to,
+            payload_bytes,
         }
     }
 }
@@ -501,6 +626,7 @@ mod tests {
         assert_eq!(log.log_send(5, 1, Arc::new(vec![3])), 1);
         assert_eq!(log.sent_up_to(3), 2);
         assert_eq!(log.sent_up_to(9), 0);
+        assert_eq!(log.payload_bytes(), 3);
     }
 
     #[test]
@@ -509,7 +635,7 @@ mod tests {
         for i in 0..5u8 {
             log.log_send(1, 7, Arc::new(vec![i]));
         }
-        let received: HashSet<u64> = [1, 2, 4].into_iter().collect();
+        let received: IdSet = [1, 2, 4].into_iter().collect();
         let miss = log.unreceived_sends(1, &received);
         let ids: Vec<u64> = miss.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![3, 5]);
@@ -522,7 +648,7 @@ mod tests {
         log.log_send(2, 0, Arc::new(vec![]));
         log.log_send(2, 0, Arc::new(vec![]));
         // dst already received ids 1..=4 (from my dead computational twin).
-        let received: HashSet<u64> = [1, 2, 3, 4].into_iter().collect();
+        let received: IdSet = [1, 2, 3, 4].into_iter().collect();
         let n = log.mark_future_skips(2, Channel::Comp, &received);
         assert_eq!(n, 2); // only 3 and 4 are in my future
         assert!(!log.consume_skip(2, Channel::Comp, 2));
@@ -543,7 +669,20 @@ mod tests {
         assert!(!log.was_received(3, 7), "per-source sets are disjoint");
         assert!(!log.was_received(4, 0));
         // Agrees with the (clone-heavy) set view it replaces on hot paths.
-        assert_eq!(log.was_received(2, 7), log.received_from(2).contains(&7));
+        assert_eq!(log.was_received(2, 7), log.received_from(2).contains(7));
+    }
+
+    #[test]
+    fn receive_watermark_tracks_contiguity() {
+        let mut log = MessageLog::new();
+        for id in [1u64, 2, 5] {
+            log.log_receive(3, id);
+        }
+        assert_eq!(log.receive_watermark(3), 2);
+        log.log_receive(3, 3);
+        log.log_receive(3, 4);
+        assert_eq!(log.receive_watermark(3), 5, "gap closed, overflow drained");
+        assert_eq!(log.receive_watermark(8), 0);
     }
 
     #[test]
@@ -610,15 +749,53 @@ mod tests {
         assert_eq!(back.pruned_to(), 1);
         assert_eq!(back.last_coll_id(), 3);
         assert_eq!(back.sent_up_to(1), 2);
+        assert_eq!(back.payload_bytes(), log.payload_bytes());
     }
 
     #[test]
-    fn prune_drops_confirmed() {
+    fn prune_drops_confirmed_and_accounts_bytes() {
         let mut log = MessageLog::new();
         for _ in 0..3 {
-            log.log_send(1, 0, Arc::new(vec![]));
+            log.log_send(1, 0, Arc::new(vec![7; 10]));
         }
         for i in 1..=3u64 {
+            log.log_collective(CollRecord {
+                id: i,
+                kind: CollKind::Barrier,
+                dtype: DType::U64,
+                op: ReduceOp::Sum,
+                root: 0,
+                input: Arc::new(vec![0; 4]),
+                blocks: Arc::new(vec![]),
+            });
+        }
+        assert_eq!(log.payload_bytes(), 3 * 10 + 3 * 4);
+        let confirmed: HashMap<usize, u64> = [(1usize, 2u64)].into_iter().collect();
+        let stats = log.prune(2, &confirmed);
+        assert_eq!(stats.sends, 2);
+        assert_eq!(stats.colls, 2);
+        assert_eq!(stats.bytes, 2 * 10 + 2 * 4);
+        assert_eq!(stats.records(), 4);
+        let (sends, _r, colls) = log.stats();
+        assert_eq!(sends, 1);
+        assert_eq!(colls, 1);
+        assert_eq!(log.payload_bytes(), 10 + 4);
+        // The commitments are recorded even after the records are gone.
+        assert_eq!(log.pruned_to(), 2);
+        assert_eq!(log.send_pruned_to(1), 2);
+        assert_eq!(log.send_pruned_to(9), 0, "never pruned toward 9");
+        // Pruning is idempotent at the same floors.
+        let again = log.prune(2, &confirmed);
+        assert_eq!(again, PruneStats::default());
+    }
+
+    #[test]
+    fn retention_offer_reflects_log_and_coverage() {
+        let mut log = MessageLog::new();
+        log.log_receive(0, 1);
+        log.log_receive(0, 2);
+        log.log_receive(1, 5); // sparse: watermark stays 0
+        for i in 1..=4u64 {
             log.log_collective(CollRecord {
                 id: i,
                 kind: CollKind::Barrier,
@@ -629,10 +806,42 @@ mod tests {
                 blocks: Arc::new(vec![]),
             });
         }
-        let confirmed: HashMap<usize, u64> = [(1usize, 2u64)].into_iter().collect();
-        log.prune(2, &confirmed);
-        let (sends, _r, colls) = log.stats();
-        assert_eq!(sends, 1);
-        assert_eq!(colls, 1);
+        // No coverage: the live log speaks for itself.
+        let free = StoreCoverage::new();
+        let offer = log.retention_offer(3, &free);
+        assert_eq!(offer.last_coll, 4);
+        assert_eq!(offer.coll_floor, 4);
+        assert_eq!(offer.recv_marks, vec![2, 0, 0]);
+        // With coverage bound to an older snapshot, the floors cap there —
+        // but last_coll (the replay-floor input) does not.
+        let mut cov = StoreCoverage::new();
+        cov.on_push(SnapshotMarks {
+            last_coll: 2,
+            recv_marks: vec![1, 0, 0],
+        });
+        let capped = log.retention_offer(3, &cov);
+        assert_eq!(capped.last_coll, 4);
+        assert_eq!(capped.coll_floor, 2);
+        assert_eq!(capped.recv_marks, vec![1, 0, 0]);
+        // Snapshot marks record the live watermarks.
+        assert_eq!(
+            log.snapshot_marks(3),
+            SnapshotMarks {
+                last_coll: 4,
+                recv_marks: vec![2, 0, 0]
+            }
+        );
+    }
+
+    #[test]
+    fn skip_marks_consume_once() {
+        // Skip marks target *future* ids — they never benefit from the
+        // watermark compaction and stay exact.
+        let mut log = MessageLog::new();
+        log.mark_skip(1, Channel::Comp, 10);
+        log.mark_skip(1, Channel::Comp, 12);
+        assert_eq!(log.skips_pending(), 2);
+        assert!(log.consume_skip(1, Channel::Comp, 10));
+        assert_eq!(log.skips_pending(), 1);
     }
 }

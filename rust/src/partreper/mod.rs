@@ -21,6 +21,7 @@
 //! completed/skipped) governs every path.
 
 pub mod comms;
+pub mod epoch;
 pub mod gcoll;
 pub mod handler;
 pub mod log;
@@ -31,8 +32,9 @@ pub mod req;
 mod tests;
 
 pub use comms::{Layout, RepairOutcome, Role, WorldComms};
+pub use epoch::{IdSet, RetentionOffer, StoreCoverage, StoreGen, WorldEpoch};
 pub use gcoll::{Guard, OpError};
-pub use log::{Channel, CollKind, CollRecord, MessageLog};
+pub use log::{Channel, CollKind, CollRecord, MessageLog, PruneStats};
 pub use req::Request;
 
 use std::cell::RefCell;
@@ -52,6 +54,18 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 /// Park interval for a spare's standby loop.
 const STANDBY_TICK: Duration = Duration::from_micros(500);
 
+/// Fabric tag for log-GC acknowledgment gossip (on the OMPI control
+/// fabric's dedicated `gc_ctx` — it is FT control traffic, §IV).
+pub(crate) const TAG_GC_OFFER: i64 = 1;
+
+/// Bound on backpressure park iterations: a sender over `log.max_bytes`
+/// waits this many ticks for fresh acknowledgments, then proceeds over-cap
+/// rather than wedge (peers emit offers at their own cadence; an idle peer
+/// may have nothing new to acknowledge).
+const BACKPRESSURE_TRIES: usize = 50;
+/// Park interval between backpressure retries.
+const BACKPRESSURE_TICK: Duration = Duration::from_micros(200);
+
 /// Mutable world state, rebuilt by the error handler.
 pub struct State {
     pub oworld: UlfmComm,
@@ -60,7 +74,9 @@ pub struct State {
     pub layout: Layout,
     /// My communicator set; `None` while this rank is an idle spare.
     pub comms: Option<WorldComms>,
-    pub generation: u64,
+    /// World repair epoch (0 = no failures handled yet) — the root of all
+    /// retention arithmetic (see [`epoch`]).
+    pub epoch: WorldEpoch,
     /// Cold restores `(comp rank, spare fabric)` whose recovery epoch has
     /// not completed — survivors keep re-offering shards across handler
     /// re-entries until the epoch's recovery finishes.
@@ -89,11 +105,36 @@ pub enum Start<T> {
     Retired,
 }
 
+/// Log-GC bookkeeping: the acknowledgment gossip table and the store
+/// coverage that caps this rank's own offers (see [`epoch`]).
+#[derive(Default)]
+struct GcState {
+    /// Latest offer per emitter fabric rank, sequence-stamped.
+    offers: std::collections::HashMap<usize, (u64, RetentionOffer)>,
+    /// My next emission sequence number.
+    seq: u64,
+    /// Records logged since the last GC pass (the `log.gc_interval` clock).
+    ops_since_pass: u64,
+    /// Park iterations since the last GC pass — the cadence clock for
+    /// ranks blocked in a receive phase, which log nothing but must still
+    /// acknowledge peers' traffic (see [`PartReper::gc_park_tick`]).
+    parks_since_pass: u64,
+    /// The last offer actually broadcast, with the epoch it was sent in:
+    /// an unchanged offer carries no information (marks are monotone), so
+    /// re-broadcasting it is suppressed until something advances or a
+    /// repair admits members that never heard it.
+    last_emitted: Option<(u64, RetentionOffer)>,
+    /// What a cold restore of this rank could still install.
+    coverage: StoreCoverage,
+}
+
 /// Per-rank PartRePer library instance.
 pub struct PartReper {
     pub ctx: RankCtx,
     state: RefCell<State>,
     log: RefCell<MessageLog>,
+    /// Log-GC gossip and coverage state.
+    gc: RefCell<GcState>,
     /// Shards this rank holds for its peers.
     store: RefCell<RestoreStore>,
     /// Incremental-push baseline for my own image.
@@ -227,10 +268,11 @@ impl PartReper {
                 oworld,
                 layout,
                 comms,
-                generation: 0,
+                epoch: WorldEpoch::ZERO,
                 cold_pending: Vec::new(),
             }),
             log: RefCell::new(MessageLog::new()),
+            gc: RefCell::new(GcState::default()),
             store: RefCell::new(RestoreStore::new()),
             owner_push: RefCell::new(OwnerPushState::new()),
             pending_image: RefCell::new(None),
@@ -267,7 +309,13 @@ impl PartReper {
 
     /// Current repair generation (0 = no failures handled yet).
     pub fn generation(&self) -> u64 {
-        self.state.borrow().generation
+        self.state.borrow().epoch.raw()
+    }
+
+    /// Retained message-log payload bytes (send data + collective
+    /// payloads) — the quantity `log.max_bytes` caps.
+    pub fn log_payload_bytes(&self) -> usize {
+        self.log.borrow().payload_bytes()
     }
 
     pub fn counters(&self) -> &Arc<Counters> {
@@ -370,13 +418,22 @@ impl PartReper {
         let me_app = st.comms().app_rank();
         let cfg = &self.ctx.cfg.restore;
         let image = state.capture();
-        let gen = (st.generation << 40) | (image.stack.resume_step + 1).min((1 << 40) - 1);
+        let gen = StoreGen::pack(st.epoch, image.stack.resume_step);
         let bytes = restore::encode_snapshot(&image, &self.log.borrow());
         let shards = restore::split_shards(&bytes, cfg.shards);
         let placement = restore::placement::holders(&st.layout, me_app, cfg.shards, cfg.redundancy);
         let Some(changed) = self.owner_push.borrow_mut().plan(gen, &shards, &placement) else {
             return; // this generation was already pushed
         };
+        // The snapshot we are about to push archives the log's current
+        // marks: once holders retain it, records it covers are restorable
+        // from the store, so the coverage cap — and with it the cluster's
+        // prune floor — advances (two-generation rule: the *older* retained
+        // snapshot stays the binding one).
+        {
+            let marks = self.log.borrow().snapshot_marks(st.layout.ncomp);
+            self.gc.borrow_mut().coverage.on_push(marks);
+        }
 
         // One envelope per holder: all its shards for this generation
         // (per-holder atomicity underpins the two-generation protocol).
@@ -420,6 +477,14 @@ impl PartReper {
         }
         Counters::bump(&self.ctx.counters.restore_refreshes);
         Counters::add(&self.ctx.counters.restore_shard_bytes, pushed_bytes);
+        drop(st);
+        // The coverage cap just advanced: run a GC pass so the freshly
+        // restorable records prune now rather than at the next cadence
+        // point ("store_refresh advances the local prune floor") — off the
+        // hot path even in cap-only (`log.max_bytes`) configurations.
+        if self.gc_enabled() {
+            self.gc_pass();
+        }
     }
 
     /// Ingest queued shard pushes addressed to this rank (and, unless this
@@ -513,6 +578,7 @@ impl PartReper {
     /// deadlock — the engine path has neither problem.
     fn send_serial(&self, dst: usize, tag: i64, data: &[u8]) {
         assert!(dst < self.size(), "send: bad destination {dst}");
+        self.gc_backpressure(data.len());
         let payload = Arc::new(data.to_vec());
         let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
         self.guarded(|st, g, log| {
@@ -535,7 +601,8 @@ impl PartReper {
                 }
             }
             Ok(())
-        })
+        });
+        self.gc_tick();
     }
 
     /// One blocking transmission to a destination incarnation over
@@ -616,6 +683,228 @@ impl PartReper {
         self.pending_relays.borrow().len()
     }
 
+    // ------------------------------------------------------------- log GC
+    //
+    // Bounded-memory message logging (DESIGN.md §7). Without GC every send
+    // payload and every collective payload is retained for the whole
+    // failure-free run. The retention floors come from the acknowledgment
+    // algebra in [`epoch`]; the transport is fire-and-forget offer gossip
+    // on the OMPI control fabric (it is the FT control path, §IV — log GC
+    // must not contend with application traffic on the tuned EMPI fabric).
+    // Offers are monotone, so a stale, reordered, or missing offer is
+    // always safe: it merely prunes less. The §VI-B recovery exchange runs
+    // the same algebra over the handler's allgather, so the floors are
+    // identical whichever transport agreed on them.
+
+    /// Is any retention mechanism configured (periodic cadence or cap)?
+    pub(crate) fn gc_enabled(&self) -> bool {
+        self.ctx.cfg.log.gc_interval > 0 || self.ctx.cfg.log.max_bytes > 0
+    }
+
+    /// Count one logged record against the GC cadence and track the log's
+    /// high-water bytes. Runs a GC pass every `log.gc_interval` records.
+    /// Call only with no outstanding log/state borrows.
+    pub(crate) fn gc_tick(&self) {
+        Counters::max_of(
+            &self.ctx.counters.log_peak_bytes,
+            self.log.borrow().payload_bytes() as u64,
+        );
+        let interval = self.ctx.cfg.log.gc_interval;
+        if interval == 0 {
+            return;
+        }
+        let due = {
+            let mut gc = self.gc.borrow_mut();
+            gc.ops_since_pass += 1;
+            gc.ops_since_pass >= interval
+        };
+        if due {
+            self.gc_pass();
+        }
+    }
+
+    /// One GC pass: emit my retention offer to every world member, drain
+    /// peers' queued offers, and prune to the floors agreed over the
+    /// latest offer per current incarnation.
+    pub(crate) fn gc_pass(&self) {
+        {
+            let st = self.state.borrow();
+            if !st.is_member() {
+                return;
+            }
+            let me = self.ctx.rank;
+            let comms = st.comms();
+            let layout = &comms.layout;
+            let me_app = comms.app_rank();
+            // Build my offer; broadcast it only when it says something new
+            // — marks are monotone, so an unchanged offer is pure noise
+            // (this also keeps backpressure retries, which cannot advance
+            // their own acks while blocked, from re-gossiping every tick).
+            // A repair forces a re-broadcast even when unchanged: an
+            // adopted spare has never heard any of my offers.
+            let my_offer = {
+                let gc = self.gc.borrow();
+                self.log
+                    .borrow()
+                    .retention_offer(layout.ncomp, &gc.coverage)
+            };
+            let emit = match &self.gc.borrow().last_emitted {
+                None => true,
+                Some((ep, last)) => *ep != st.epoch.raw() || last != &my_offer,
+            };
+            if emit {
+                let my_seq = {
+                    let mut gc = self.gc.borrow_mut();
+                    gc.seq += 1;
+                    gc.seq
+                };
+                let msg = epoch::GcOfferMsg {
+                    seq: my_seq,
+                    app: me_app,
+                    offer: my_offer.clone(),
+                }
+                .encode();
+                for &dst in &layout.assign {
+                    if dst == me || self.ctx.procs.is_finalized(dst) {
+                        continue;
+                    }
+                    let env =
+                        Envelope::new(me, dst, self.ctx.gc_ctx, TAG_GC_OFFER, 0, msg.clone());
+                    match self.ctx.ompi_fabric.send(env) {
+                        Ok(()) => {}
+                        Err(CommError::Killed { rank }) => {
+                            std::panic::panic_any(RankKilled { rank })
+                        }
+                        // A dead member is the next repair's business.
+                        Err(_) => {}
+                    }
+                }
+                let mut gc = self.gc.borrow_mut();
+                gc.offers.insert(me, (my_seq, my_offer.clone()));
+                gc.last_emitted = Some((st.epoch.raw(), my_offer));
+            }
+            self.gc_drain();
+            // Floors over the *current* incarnations' latest offers: an
+            // incarnation never heard from contributes zero floors, so a
+            // freshly restored spare (or a lagging replica) pins every
+            // sender's records toward it until it gossips.
+            let floors = {
+                let gc = self.gc.borrow();
+                let n = layout.eworld_size();
+                let app_of: Vec<usize> = (0..n)
+                    .map(|e| {
+                        if e < layout.ncomp {
+                            e
+                        } else {
+                            layout.rep_mirror[e - layout.ncomp]
+                        }
+                    })
+                    .collect();
+                let offers: Vec<Option<&RetentionOffer>> = layout
+                    .assign
+                    .iter()
+                    .map(|f| gc.offers.get(f).map(|(_, o)| o))
+                    .collect();
+                epoch::agree_floors(&offers, &app_of, me_app)
+            };
+            let stats = self
+                .log
+                .borrow_mut()
+                .prune(floors.coll_floor, &floors.send_floors);
+            Counters::bump(&self.ctx.counters.gc_rounds);
+            Counters::add(&self.ctx.counters.records_pruned, stats.records() as u64);
+        }
+        let mut gc = self.gc.borrow_mut();
+        gc.ops_since_pass = 0;
+        gc.parks_since_pass = 0;
+    }
+
+    /// GC cadence for a rank parked in a receive phase: it logs nothing
+    /// (so [`PartReper::gc_tick`] never fires) yet its receive watermarks
+    /// keep advancing — without this, a one-directional producer's records
+    /// toward it would never prune. Runs a full pass every
+    /// `log.gc_interval` parks (64 when only `log.max_bytes` is set),
+    /// draining queued gossip in between; the pass's unchanged-offer
+    /// suppression keeps a genuinely idle rank from re-gossiping.
+    pub(crate) fn gc_park_tick(&self) {
+        let interval = match self.ctx.cfg.log.gc_interval {
+            0 => 64,
+            n => n,
+        };
+        let due = {
+            let mut gc = self.gc.borrow_mut();
+            gc.parks_since_pass += 1;
+            gc.parks_since_pass >= interval
+        };
+        if due {
+            self.gc_pass();
+        } else {
+            self.gc_drain();
+        }
+    }
+
+    /// Ingest queued acknowledgment gossip (latest sequence per emitter
+    /// wins; marks are monotone, so older offers are merely weaker).
+    fn gc_drain(&self) {
+        let me = self.ctx.rank;
+        let spec = MatchSpec::any_source(self.ctx.gc_ctx, TAG_GC_OFFER);
+        while let Ok(Some(env)) = self.ctx.ompi_fabric.try_recv(me, &spec) {
+            let msg = epoch::GcOfferMsg::decode(&env.data);
+            let mut gc = self.gc.borrow_mut();
+            let slot = gc
+                .offers
+                .entry(env.src)
+                .or_insert_with(|| (0, RetentionOffer::default()));
+            if msg.seq > slot.0 {
+                *slot = (msg.seq, msg.offer);
+            }
+        }
+    }
+
+    /// `log.max_bytes` backpressure: a record about to push the log past
+    /// the cap forces a synchronous GC round — emit, drain, prune — and
+    /// parks (failure-checked, like every guarded wait) for fresh
+    /// acknowledgments while still over cap. Bounded: after
+    /// [`BACKPRESSURE_TRIES`] ticks the record proceeds over-cap rather
+    /// than wedge, since an idle peer may have nothing new to acknowledge.
+    pub(crate) fn gc_backpressure(&self, incoming: usize) {
+        let cap = self.ctx.cfg.log.max_bytes as usize;
+        if cap == 0 || !self.state.borrow().is_member() {
+            return;
+        }
+        if self.log.borrow().payload_bytes() + incoming <= cap {
+            return;
+        }
+        let me = self.ctx.rank;
+        for _ in 0..BACKPRESSURE_TRIES {
+            // Snapshot the arrival clock before the pass drains, so the
+            // park below wakes on anything that lands in between.
+            let clock = self.ctx.ompi_fabric.arrivals(me);
+            self.gc_pass();
+            if self.log.borrow().payload_bytes() + incoming <= cap {
+                return;
+            }
+            let parked = {
+                let st = self.state.borrow();
+                let g = Guard {
+                    oworld: &st.oworld,
+                    counters: &self.ctx.counters,
+                    stride: self.ctx.cfg.failure_check_stride,
+                    abort: &self.ctx.abort,
+                };
+                g.check_and_park(&self.ctx.ompi_fabric, me, clock, BACKPRESSURE_TICK)
+            };
+            match parked {
+                Ok(_clock) => {}
+                Err(OpError::Ulfm(_)) => self.error_handler(),
+                Err(OpError::Comm(CommError::Killed { rank })) => {
+                    std::panic::panic_any(RankKilled { rank })
+                }
+                Err(OpError::Comm(e)) => std::panic::panic_any(format!("gc backpressure: {e}")),
+            }
+        }
+    }
+
     // --------------------------------------------------------- collectives
 
     /// Shared §V-C skeleton: computational processes run the EMPI
@@ -637,6 +926,7 @@ impl PartReper {
         exec: impl Fn(&Guard, &WorldComms) -> Result<CollResult, OpError>,
     ) -> CollResult {
         self.reap_relays();
+        self.gc_backpressure(input.len() + blocks.iter().map(|b| b.len()).sum::<usize>());
         let cid = self.log.borrow().next_coll_id();
         let result = self.guarded(|st, g, _log| self.execute_collective(st, g, cid, &exec));
         self.log.borrow_mut().log_collective(CollRecord {
@@ -649,6 +939,7 @@ impl PartReper {
             blocks: blocks.clone(),
         });
         Counters::bump(&self.ctx.counters.collectives_logged);
+        self.gc_tick();
         result
     }
 

@@ -55,6 +55,7 @@ use crate::error::{CommError, RankKilled};
 use crate::metrics::Counters;
 
 use super::comms::Role;
+use super::epoch::WorldEpoch;
 use super::gcoll::{Guard, OpError};
 use super::log::{Channel, MessageLog};
 use super::{PartReper, State};
@@ -81,15 +82,15 @@ struct SendState {
     tag: i64,
     id: u64,
     payload: Arc<Vec<u8>>,
-    /// Repair generation the tickets were resolved against.
-    generation: u64,
+    /// Repair epoch the tickets were resolved against.
+    epoch: WorldEpoch,
     tickets: Vec<Ticket>,
 }
 
 struct RecvState {
     src: usize,
     tag: i64,
-    generation: u64,
+    epoch: WorldEpoch,
     req: Option<RecvReq>,
 }
 
@@ -212,33 +213,49 @@ impl PartReper {
     /// [`PartReper::waitall`]; the request survives repairs (DESIGN.md §6).
     pub fn isend(&self, dst: usize, tag: i64, data: &[u8]) -> Request {
         assert!(dst < self.size(), "isend: bad destination {dst}");
+        // `log.max_bytes` backpressure runs before the record is logged,
+        // so a capped log forces a synchronous GC round first (DESIGN §7).
+        self.gc_backpressure(data.len());
         let payload = Arc::new(data.to_vec());
         let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
-        let st = self.state.borrow();
-        let mut log = self.log.borrow_mut();
-        let tickets: Vec<Ticket> = Self::fanout_channels(&st, dst)
-            .into_iter()
-            .map(|ch| {
-                Self::issue_ticket(&st, &mut log, &self.ctx.counters, dst, ch, tag, id, &payload)
-            })
-            .collect();
-        Counters::bump(&self.ctx.counters.nb_isends);
-        let inner = if tickets.iter().all(|t| t.req.is_none()) {
-            // Nothing to wait for (rep with unreplicated dst, all-eager
-            // fan-out, or everything skip-marked).
-            Counters::bump(&self.ctx.counters.nb_completed);
-            Inner::Done(None)
-        } else {
-            Inner::Send(SendState {
-                dst,
-                tag,
-                id,
-                payload,
-                generation: st.generation,
-                tickets,
-            })
+        let request = {
+            let st = self.state.borrow();
+            let mut log = self.log.borrow_mut();
+            let tickets: Vec<Ticket> = Self::fanout_channels(&st, dst)
+                .into_iter()
+                .map(|ch| {
+                    Self::issue_ticket(
+                        &st,
+                        &mut log,
+                        &self.ctx.counters,
+                        dst,
+                        ch,
+                        tag,
+                        id,
+                        &payload,
+                    )
+                })
+                .collect();
+            Counters::bump(&self.ctx.counters.nb_isends);
+            let inner = if tickets.iter().all(|t| t.req.is_none()) {
+                // Nothing to wait for (rep with unreplicated dst, all-eager
+                // fan-out, or everything skip-marked).
+                Counters::bump(&self.ctx.counters.nb_completed);
+                Inner::Done(None)
+            } else {
+                Inner::Send(SendState {
+                    dst,
+                    tag,
+                    id,
+                    payload,
+                    epoch: st.epoch,
+                    tickets,
+                })
+            };
+            Request { inner }
         };
-        Request { inner }
+        self.gc_tick();
+        request
     }
 
     /// Nonblocking fault-tolerant receive (§V-B): resolves the source
@@ -254,7 +271,7 @@ impl PartReper {
             inner: Inner::Recv(RecvState {
                 src,
                 tag,
-                generation: st.generation,
+                epoch: st.epoch,
                 req: Some(req),
             }),
         }
@@ -314,6 +331,14 @@ impl PartReper {
                         std::panic::panic_any(format!(
                             "protocol wedge: nonblocking batch stalled for {WEDGE_DEADLINE:?}"
                         ));
+                    }
+                    // GC park cadence: a rank deep in a receive phase logs
+                    // nothing (so never reaches `gc_tick`), but its
+                    // watermarks advance and peers keep gossiping at it —
+                    // it must drain, and periodically acknowledge back
+                    // (else a one-directional producer never prunes).
+                    if self.gc_enabled() {
+                        self.gc_park_tick();
                     }
                     self.ctx.empi_fabric.wait_new_mail(me, clock, PARK_TICK);
                 }
@@ -409,11 +434,11 @@ impl PartReper {
         log: &mut MessageLog,
         reqs: &mut [&mut Request],
     ) {
-        let generation = st.generation;
+        let epoch = st.epoch;
         for r in reqs.iter_mut() {
             let mut settled_send = false;
             match &mut r.inner {
-                Inner::Send(s) if s.generation != generation => {
+                Inner::Send(s) if s.epoch != epoch => {
                     Counters::bump(&g.counters.nb_replays);
                     // Per fan-out channel, exactly like the blocking
                     // path's retry: settled channels stay settled; an
@@ -443,15 +468,15 @@ impl PartReper {
                         })
                         .collect();
                     s.tickets = tickets;
-                    s.generation = generation;
+                    s.epoch = epoch;
                     settled_send = s.tickets.iter().all(|t| t.req.is_none());
                 }
-                Inner::Recv(rv) if rv.generation != generation => {
+                Inner::Recv(rv) if rv.epoch != epoch => {
                     Counters::bump(&g.counters.nb_replays);
                     // Dropping the stale request cancels its posting; its
                     // (old-context) mail, if any, is garbage by design.
                     rv.req = Some(Self::post_source_recv(st, rv.src, rv.tag));
-                    rv.generation = generation;
+                    rv.epoch = epoch;
                 }
                 _ => {}
             }

@@ -858,6 +858,258 @@ fn job_abort_when_shard_redundancy_exhausted() {
 }
 
 #[test]
+fn gc_bounds_failure_free_log_memory() {
+    // ISSUE 5 acceptance: with acknowledgment-driven GC enabled, a
+    // failure-free run's log high-water bytes are bounded — independent of
+    // step count — while the GC-off control grows with it.
+    fn peak(iters: u64, gc: bool) -> (u64, u64, u64) {
+        let mut cfg = JobConfig::new(4, 0.0);
+        if gc {
+            cfg.set("log.gc_interval", "4").unwrap();
+        }
+        let report = run_restorable(&cfg, iters, 2, vec![]);
+        let want = expected_ring(4, iters);
+        for (r, o) in report.outcomes.iter().enumerate() {
+            match o {
+                RankOutcome::Done(Some(v)) => assert_eq!(*v, want, "rank {r}"),
+                other => panic!("rank {r}: {other:?}"),
+            }
+        }
+        let t = report.total_counters();
+        use crate::metrics::Counters;
+        (
+            Counters::get(&t.log_peak_bytes),
+            Counters::get(&t.gc_rounds),
+            Counters::get(&t.records_pruned),
+        )
+    }
+    let (p_short, rounds_short, _) = peak(8, true);
+    let (p_long, rounds_long, pruned_long) = peak(32, true);
+    let (c_short, rounds_ctrl, _) = peak(8, false);
+    let (c_long, _, _) = peak(32, false);
+    assert!(rounds_short > 0 && rounds_long > 0, "GC passes must run");
+    assert!(pruned_long > 0, "GC must actually drop records");
+    assert_eq!(rounds_ctrl, 0, "GC off: no passes");
+    assert!(
+        c_long >= c_short.saturating_mul(3),
+        "control must grow with steps: {c_short} -> {c_long}"
+    );
+    assert!(
+        p_long <= p_short.saturating_mul(3),
+        "high water must not scale with steps: {p_short} -> {p_long} (4x the work)"
+    );
+    assert!(
+        p_long * 2 < c_long,
+        "GC'd peak ({p_long}) must sit well under the unpruned control ({c_long})"
+    );
+}
+
+#[test]
+fn gc_enabled_promotion_after_rounds_recovers_exactly() {
+    // ISSUE 5 acceptance, promotion path: several GC rounds run, *then* a
+    // replicated comp dies — §VI-B must still recover bit-identically from
+    // the pruned logs (resends above the ack floors, replays above the
+    // agreed collective floor).
+    let mut cfg = JobConfig::new(4, 100.0);
+    cfg.set("log.gc_interval", "4").unwrap();
+    let iters = 12;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 1 && it == 8 {
+                procs.poison(1); // dies only after several GC rounds
+            }
+            let me = pr.rank() as u64;
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        pr.finalize();
+        Ok(acc)
+    });
+    let want = expected(4, iters);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (1, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done(v)) => assert_eq!(*v, want, "rank {r}"),
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    use crate::metrics::Counters;
+    assert_eq!(Counters::get(&totals.promotions), 1);
+    assert!(
+        Counters::get(&totals.gc_rounds) > 4,
+        "several GC rounds must have run before and after the failure"
+    );
+    assert!(Counters::get(&totals.records_pruned) > 0);
+}
+
+#[test]
+fn gc_enabled_cold_restore_still_replays_from_snapshot() {
+    // The coverage-cap test: GC prunes continuously between store
+    // refreshes; an unreplicated comp then dies and is cold-restored from
+    // a snapshot that is *older* than the survivors' live state. Recovery
+    // only succeeds if the floors were capped by store coverage — i.e. GC
+    // never dropped the resends/replays the restored snapshot lacks.
+    let mut cfg = JobConfig::new(4, 0.0);
+    cfg.nspares = 1;
+    cfg.restore.shards = 3;
+    cfg.restore.redundancy = 2;
+    cfg.set("log.gc_interval", "3").unwrap();
+    let iters = 14;
+    let report = run_restorable(&cfg, iters, 2, vec![(3, 9)]);
+    let want = expected_ring(4, iters);
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (3, RankOutcome::Killed) => {}
+            (4, RankOutcome::Done(Some(v))) => assert_eq!(*v, want, "restored spare"),
+            (4, other) => panic!("spare must be adopted and finish: {other:?}"),
+            (_, RankOutcome::Done(Some(v))) => assert_eq!(*v, want, "rank {r}"),
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    use crate::metrics::Counters;
+    assert_eq!(Counters::get(&totals.cold_restores), 1);
+    assert!(Counters::get(&totals.gc_rounds) > 0);
+    assert!(Counters::get(&totals.records_pruned) > 0);
+}
+
+#[test]
+fn recovery_prunes_confirmed_send_records() {
+    // ISSUE 5 satellite: with the periodic GC off (default config), the
+    // §VI-B recovery exchange alone must GC the log — the step (a)/(b)
+    // confirmation data feeds `prune` instead of an empty map, so send
+    // records confirmed received at every incarnation finally drop.
+    let cfg = JobConfig::new(4, 100.0);
+    let iters = 8;
+    let report = launch_job(&cfg, move |ctx| {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        let n = pr.size() as u64;
+        let mut acc = 0u64;
+        for it in 0..iters {
+            if rank == 1 && it == 4 {
+                procs.poison(1);
+            }
+            let me = pr.rank() as u64;
+            let next = ((me + 1) % n) as usize;
+            let prev = ((me + n - 1) % n) as usize;
+            pr.send(next, 7, &u64s_to_bytes(&[me * 1000 + it]));
+            let got = u64s_from_bytes(&pr.recv(prev, 7))[0];
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[got]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        let stats = pr.log_stats();
+        pr.finalize();
+        Ok((acc, stats.0))
+    });
+    let want = expected(4, iters);
+    let mut survivor_send_records = Vec::new();
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (1, RankOutcome::Killed) => {}
+            (_, RankOutcome::Done((v, sends_retained))) => {
+                assert_eq!(*v, want, "rank {r}");
+                survivor_send_records.push(*sends_retained);
+            }
+            (_, other) => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    use crate::metrics::Counters;
+    // Periodic GC is off, so every counted round is a §VI-B recovery
+    // prune — at least one per surviving member of the repair epoch.
+    let rounds = Counters::get(&totals.gc_rounds);
+    assert!(
+        (7u64..=21).contains(&rounds),
+        "one recovery prune per survivor per repair pass expected: {rounds}"
+    );
+    assert!(
+        Counters::get(&totals.records_pruned) > 0,
+        "recovery must prune confirmed records"
+    );
+    // Survivors kept fewer send records than they logged: the old code
+    // retained all `iters` per destination forever.
+    assert!(
+        survivor_send_records.iter().any(|&s| (s as u64) < iters),
+        "no survivor pruned any send record: {survivor_send_records:?}"
+    );
+}
+
+#[test]
+fn backpressure_cap_forces_synchronous_gc_rounds() {
+    // `log.max_bytes` alone (periodic cadence off): payloads large enough
+    // to blow the cap force synchronous GC rounds, the log stays near the
+    // cap, and results are exact.
+    let mut cfg = JobConfig::new(4, 0.0);
+    cfg.set("log.max_bytes", "4096").unwrap();
+    let iters = 12u64;
+    let payload = 1024usize;
+    let report = launch_job(&cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let me = pr.rank();
+        let mut acc = 0u64;
+        for it in 0..iters {
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let data = vec![(me as u8) ^ (it as u8); payload];
+            pr.send(next, 5, &data);
+            let got = pr.recv(prev, 5);
+            assert_eq!(got.len(), payload);
+            assert!(got.iter().all(|&b| b == (prev as u8) ^ (it as u8)));
+            let sum = u64s_from_bytes(&pr.allreduce(
+                DType::U64,
+                ReduceOp::Sum,
+                &u64s_to_bytes(&[it]),
+            ))[0];
+            acc = acc.wrapping_add(sum);
+        }
+        pr.finalize();
+        Ok(acc)
+    });
+    let want: u64 = (0..iters).map(|it| 4 * it).sum();
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match o {
+            RankOutcome::Done(v) => assert_eq!(*v, want, "rank {r}"),
+            other => panic!("rank {r}: {other:?}"),
+        }
+    }
+    let totals = report.total_counters();
+    use crate::metrics::Counters;
+    assert!(
+        Counters::get(&totals.gc_rounds) > 0,
+        "the cap must have forced rounds"
+    );
+    assert!(Counters::get(&totals.records_pruned) > 0);
+    let peak = Counters::get(&totals.log_peak_bytes);
+    // 12 KiB of payload crossed each rank; the cap is best-effort, so
+    // allow transient overshoot but nothing near the unpruned total.
+    assert!(
+        peak < 3 * 4096,
+        "peak {peak} far over the 4096-byte cap — backpressure ineffective"
+    );
+}
+
+#[test]
 fn weibull_injector_end_to_end_survivable() {
     // Full replication + aggressive injector restricted to comp ranks:
     // the job must either complete or be interrupted only when both

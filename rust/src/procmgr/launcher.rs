@@ -65,6 +65,10 @@ pub struct RankCtx {
     /// cold-restore offers). Constant across repairs: the store outlives
     /// every world generation.
     pub restore_ctx: u64,
+    /// Dedicated OMPI context for log-GC acknowledgment gossip — retention
+    /// is FT control traffic, so it rides the FT control fabric and, like
+    /// the store, outlives every world generation.
+    pub gc_ctx: u64,
     pub clock: Arc<PhaseClock>,
     pub counters: Arc<Counters>,
     pub abort: Arc<JobAbort>,
@@ -142,6 +146,7 @@ pub struct JobWorld {
     pub empi_world_ctx: u64,
     pub ompi_world_ctx: u64,
     pub restore_ctx: u64,
+    pub gc_ctx: u64,
     pub abort: Arc<JobAbort>,
 }
 
@@ -162,6 +167,7 @@ impl JobWorld {
         let empi_world_ctx = empi_fabric.alloc_ctx();
         let ompi_world_ctx = ompi_fabric.alloc_ctx();
         let restore_ctx = empi_fabric.alloc_ctx();
+        let gc_ctx = ompi_fabric.alloc_ctx();
         Self {
             cfg,
             procs,
@@ -174,6 +180,7 @@ impl JobWorld {
             empi_world_ctx,
             ompi_world_ctx,
             restore_ctx,
+            gc_ctx,
             abort: Arc::new(JobAbort::default()),
         }
     }
@@ -191,6 +198,7 @@ impl JobWorld {
             empi_world_ctx: self.empi_world_ctx,
             ompi_world_ctx: self.ompi_world_ctx,
             restore_ctx: self.restore_ctx,
+            gc_ctx: self.gc_ctx,
             clock: Arc::new(PhaseClock::new()),
             counters: Arc::new(Counters::default()),
             abort: self.abort.clone(),

@@ -20,7 +20,11 @@
 //!   owner and the owner's replica;
 //! * [`store`] — holder-side retention (two generations per shard, so a
 //!   refresh racing a failure never yields a torn image) and owner-side
-//!   incremental push planning;
+//!   incremental push planning. Generations are
+//!   `partreper::epoch::StoreGen`s (world epoch banded above the capture
+//!   step), and the owner mirrors the two-generation rule into its
+//!   `StoreCoverage`, which caps message-log GC at what the older retained
+//!   snapshot can still restore;
 //! * [`protocol`] — fabric wire formats (push/offer) and the
 //!   image+log [`protocol::Snapshot`];
 //! * [`demo`] — a restore-aware ring workload for tests, benches and the

@@ -9,6 +9,7 @@
 //!   cold-restore phase: everything the survivor holds for the dead owner,
 //!   stamped with the repair generation so stale epochs are discardable.
 
+use crate::partreper::epoch::{StoreGen, WorldEpoch};
 use crate::partreper::MessageLog;
 use crate::procimg::ProcessImage;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -55,7 +56,7 @@ pub fn encode_snapshot(image: &ProcessImage, log: &MessageLog) -> Vec<u8> {
 /// is the incremental "unchanged" marker.
 pub struct PushMsg {
     pub owner: usize,
-    pub gen: u64,
+    pub gen: StoreGen,
     pub nshards: usize,
     pub shards: Vec<(usize, Option<Vec<u8>>)>,
 }
@@ -64,7 +65,7 @@ impl PushMsg {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
         w.usize(self.owner);
-        w.u64(self.gen);
+        w.u64(self.gen.raw());
         w.usize(self.nshards);
         w.usize(self.shards.len());
         for (idx, data) in &self.shards {
@@ -83,7 +84,7 @@ impl PushMsg {
     pub fn decode(buf: &[u8]) -> Self {
         let mut r = ByteReader::new(buf);
         let owner = r.usize();
-        let gen = r.u64();
+        let gen = StoreGen::from_raw(r.u64());
         let nshards = r.usize();
         let n = r.usize();
         let shards = (0..n)
@@ -105,8 +106,8 @@ impl PushMsg {
 /// Survivor → spare: everything held for the owner being restored.
 pub struct OfferMsg {
     pub owner: usize,
-    /// Repair generation of the epoch this offer belongs to.
-    pub epoch: u64,
+    /// Repair epoch this offer belongs to.
+    pub epoch: WorldEpoch,
     pub entries: Vec<(usize, ShardCopy)>,
 }
 
@@ -114,11 +115,11 @@ impl OfferMsg {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
         w.usize(self.owner);
-        w.u64(self.epoch);
+        w.u64(self.epoch.raw());
         w.usize(self.entries.len());
         for (idx, c) in &self.entries {
             w.usize(*idx);
-            w.u64(c.gen);
+            w.u64(c.gen.raw());
             w.usize(c.nshards);
             w.bytes(&c.data);
         }
@@ -128,12 +129,12 @@ impl OfferMsg {
     pub fn decode(buf: &[u8]) -> Self {
         let mut r = ByteReader::new(buf);
         let owner = r.usize();
-        let epoch = r.u64();
+        let epoch = WorldEpoch::from_raw(r.u64());
         let n = r.usize();
         let entries = (0..n)
             .map(|_| {
                 let idx = r.usize();
-                let gen = r.u64();
+                let gen = StoreGen::from_raw(r.u64());
                 let nshards = r.usize();
                 let data = r.bytes().to_vec();
                 (idx, ShardCopy { gen, nshards, data })
@@ -172,13 +173,13 @@ mod tests {
     fn push_msg_roundtrip() {
         let msg = PushMsg {
             owner: 3,
-            gen: 17,
+            gen: StoreGen::from_raw(17),
             nshards: 4,
             shards: vec![(0, Some(vec![1, 2, 3])), (2, None)],
         };
         let back = PushMsg::decode(&msg.encode());
         assert_eq!(back.owner, 3);
-        assert_eq!(back.gen, 17);
+        assert_eq!(back.gen, StoreGen::from_raw(17));
         assert_eq!(back.nshards, 4);
         assert_eq!(back.shards, vec![(0, Some(vec![1, 2, 3])), (2, None)]);
     }
@@ -187,11 +188,11 @@ mod tests {
     fn offer_msg_roundtrip() {
         let msg = OfferMsg {
             owner: 1,
-            epoch: 2,
+            epoch: WorldEpoch::from_raw(2),
             entries: vec![(
                 0,
                 ShardCopy {
-                    gen: 8,
+                    gen: StoreGen::from_raw(8),
                     nshards: 2,
                     data: vec![9; 32],
                 },
@@ -199,9 +200,9 @@ mod tests {
         };
         let back = OfferMsg::decode(&msg.encode());
         assert_eq!(back.owner, 1);
-        assert_eq!(back.epoch, 2);
+        assert_eq!(back.epoch, WorldEpoch::from_raw(2));
         assert_eq!(back.entries.len(), 1);
-        assert_eq!(back.entries[0].1.gen, 8);
+        assert_eq!(back.entries[0].1.gen, StoreGen::from_raw(8));
         assert_eq!(back.entries[0].1.data, vec![9; 32]);
     }
 }

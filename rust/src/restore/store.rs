@@ -8,13 +8,23 @@
 //! `{g-1, g-2}` — generation `g-1` is complete everywhere, so reassembly
 //! (which picks the newest generation with a full shard set) can never
 //! observe a torn image.
+//!
+//! Generations are [`StoreGen`]s from the unified epoch subsystem
+//! (`partreper::epoch`): the world repair epoch banded above the capture
+//! step, ordered epoch-major so a successor incarnation's pushes always
+//! supersede the dead incarnation's. The two-generation retention rule is
+//! mirrored on the owner side by `partreper::epoch::StoreCoverage`, which
+//! caps the owner's log-GC offers at what the *older* retained generation
+//! can still restore.
 
 use std::collections::HashMap;
+
+use crate::partreper::epoch::StoreGen;
 
 /// One retained shard copy.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardCopy {
-    pub gen: u64,
+    pub gen: StoreGen,
     /// Shard count of the snapshot this copy belongs to (assembly sanity).
     pub nshards: usize,
     pub data: Vec<u8>,
@@ -54,12 +64,12 @@ impl RestoreStore {
         &mut self,
         owner: usize,
         shard: usize,
-        gen: u64,
+        gen: StoreGen,
         nshards: usize,
         data: Option<Vec<u8>>,
     ) {
         let copies = self.held.entry(owner).or_default().entry(shard).or_default();
-        if copies.first().map_or(false, |c| c.gen >= gen) {
+        if copies.first().is_some_and(|c| c.gen >= gen) {
             return; // stale or duplicate generation
         }
         match data {
@@ -127,14 +137,14 @@ pub fn split_shards(bytes: &[u8], nshards: usize) -> Vec<Vec<u8>> {
 /// Reassemble the newest complete generation from offered shard copies.
 /// Returns `(generation, snapshot bytes, shards used)`, or `None` when no
 /// generation has a full shard set — redundancy genuinely exhausted.
-pub fn assemble(entries: &[(usize, ShardCopy)]) -> Option<(u64, Vec<u8>, usize)> {
+pub fn assemble(entries: &[(usize, ShardCopy)]) -> Option<(StoreGen, Vec<u8>, usize)> {
     // generation -> shard index -> data (first copy wins; copies of the
     // same (gen, shard) are identical by construction).
-    let mut by_gen: HashMap<u64, HashMap<usize, &ShardCopy>> = HashMap::new();
+    let mut by_gen: HashMap<StoreGen, HashMap<usize, &ShardCopy>> = HashMap::new();
     for (idx, copy) in entries {
         by_gen.entry(copy.gen).or_default().entry(*idx).or_insert(copy);
     }
-    let mut gens: Vec<u64> = by_gen.keys().copied().collect();
+    let mut gens: Vec<StoreGen> = by_gen.keys().copied().collect();
     gens.sort_unstable_by(|a, b| b.cmp(a));
     for g in gens {
         let shards = &by_gen[&g];
@@ -164,7 +174,7 @@ pub fn shard_hash(data: &[u8]) -> u64 {
 /// hashes and placement so unchanged shards travel as markers.
 #[derive(Default)]
 pub struct OwnerPushState {
-    last_gen: u64,
+    last_gen: StoreGen,
     last_hashes: Vec<u64>,
     last_placement: Vec<Vec<usize>>,
 }
@@ -187,7 +197,7 @@ impl OwnerPushState {
     /// old bytes into a new generation.
     pub fn plan(
         &mut self,
-        gen: u64,
+        gen: StoreGen,
         shards: &[Vec<u8>],
         placement: &[Vec<usize>],
     ) -> Option<Vec<bool>> {
@@ -212,9 +222,13 @@ impl OwnerPushState {
 mod tests {
     use super::*;
 
+    fn sg(raw: u64) -> StoreGen {
+        StoreGen::from_raw(raw)
+    }
+
     fn copy(gen: u64, nshards: usize, data: &[u8]) -> ShardCopy {
         ShardCopy {
-            gen,
+            gen: sg(gen),
             nshards,
             data: data.to_vec(),
         }
@@ -232,7 +246,7 @@ mod tests {
                 .map(|(i, s)| (i, copy(5, nshards, s)))
                 .collect();
             let (g, back, used) = assemble(&entries).unwrap();
-            assert_eq!(g, 5);
+            assert_eq!(g, sg(5));
             assert_eq!(back, bytes);
             assert_eq!(used, nshards);
         }
@@ -247,13 +261,13 @@ mod tests {
             (1, copy(6, 2, b"old1")),
         ];
         let (g, bytes, _) = assemble(&entries).unwrap();
-        assert_eq!(g, 6);
+        assert_eq!(g, sg(6));
         assert_eq!(bytes, b"old0old1");
         // With shard 1 of gen 7 present, gen 7 wins.
         let mut full = entries.clone();
         full.push((1, copy(7, 2, b"new1")));
         let (g, bytes, _) = assemble(&full).unwrap();
-        assert_eq!(g, 7);
+        assert_eq!(g, sg(7));
         assert_eq!(bytes, b"new0new1");
     }
 
@@ -268,25 +282,25 @@ mod tests {
     fn holder_retains_two_generations() {
         let mut st = RestoreStore::new();
         for g in 1..=4u64 {
-            st.ingest(0, 0, g, 1, Some(vec![g as u8]));
+            st.ingest(0, 0, sg(g), 1, Some(vec![g as u8]));
         }
         let entries = st.entries_for(0);
-        let gens: Vec<u64> = entries.iter().map(|(_, c)| c.gen).collect();
-        assert_eq!(gens, vec![4, 3], "newest two retained");
+        let gens: Vec<StoreGen> = entries.iter().map(|(_, c)| c.gen).collect();
+        assert_eq!(gens, vec![sg(4), sg(3)], "newest two retained");
     }
 
     #[test]
     fn unchanged_marker_restamps_newest() {
         let mut st = RestoreStore::new();
-        st.ingest(2, 1, 5, 3, Some(b"payload".to_vec()));
-        st.ingest(2, 1, 6, 3, None); // marker: same bytes, newer gen
+        st.ingest(2, 1, sg(5), 3, Some(b"payload".to_vec()));
+        st.ingest(2, 1, sg(6), 3, None); // marker: same bytes, newer gen
         let entries = st.entries_for(2);
         assert_eq!(entries.len(), 2);
-        assert_eq!(entries[0].1.gen, 6);
+        assert_eq!(entries[0].1.gen, sg(6));
         assert_eq!(entries[0].1.data, b"payload");
-        assert_eq!(entries[1].1.gen, 5);
+        assert_eq!(entries[1].1.gen, sg(5));
         // Marker for a shard never seen: dropped, not fabricated.
-        st.ingest(2, 0, 6, 3, None);
+        st.ingest(2, 0, sg(6), 3, None);
         assert!(st.entries_for(2).iter().all(|(i, _)| *i == 1));
     }
 
@@ -296,13 +310,13 @@ mod tests {
         // with holders each keeping whichever copy arrived, a mid-push
         // death could otherwise assemble a torn image out of mixed copies.
         let mut st = RestoreStore::new();
-        st.ingest(0, 0, 9, 1, Some(b"first".to_vec()));
-        st.ingest(0, 0, 9, 1, Some(b"again".to_vec()));
-        st.ingest(0, 0, 8, 1, Some(b"older".to_vec()));
-        st.ingest(0, 0, 9, 1, None); // marker at held gen: dropped too
+        st.ingest(0, 0, sg(9), 1, Some(b"first".to_vec()));
+        st.ingest(0, 0, sg(9), 1, Some(b"again".to_vec()));
+        st.ingest(0, 0, sg(8), 1, Some(b"older".to_vec()));
+        st.ingest(0, 0, sg(9), 1, None); // marker at held gen: dropped too
         let entries = st.entries_for(0);
         assert_eq!(entries.len(), 1);
-        assert_eq!(entries[0].1.gen, 9);
+        assert_eq!(entries[0].1.gen, sg(9));
         assert_eq!(entries[0].1.data, b"first");
     }
 
@@ -312,25 +326,25 @@ mod tests {
         let placement = vec![vec![1, 2], vec![2, 3]];
         let a = vec![b"aaa".to_vec(), b"bbb".to_vec()];
         assert_eq!(
-            o.plan(1, &a, &placement),
+            o.plan(sg(1), &a, &placement),
             Some(vec![true, true]),
             "first push is full"
         );
         let b = vec![b"aaa".to_vec(), b"BBB".to_vec()];
-        assert_eq!(o.plan(2, &b, &placement), Some(vec![false, true]));
+        assert_eq!(o.plan(sg(2), &b, &placement), Some(vec![false, true]));
         // placement change forces a full push
         let moved = vec![vec![1, 3], vec![2, 3]];
-        assert_eq!(o.plan(3, &b, &moved), Some(vec![true, true]));
+        assert_eq!(o.plan(sg(3), &b, &moved), Some(vec![true, true]));
         // a non-advancing generation pushes nothing and keeps the baseline
-        assert_eq!(o.plan(3, &a, &moved), None);
-        assert_eq!(o.plan(4, &b, &moved), Some(vec![false, false]));
+        assert_eq!(o.plan(sg(3), &a, &moved), None);
+        assert_eq!(o.plan(sg(4), &b, &moved), Some(vec![false, false]));
     }
 
     #[test]
     fn held_bytes_accounting() {
         let mut st = RestoreStore::new();
-        st.ingest(0, 0, 1, 1, Some(vec![0; 10]));
-        st.ingest(1, 0, 1, 1, Some(vec![0; 5]));
+        st.ingest(0, 0, sg(1), 1, Some(vec![0; 10]));
+        st.ingest(1, 0, sg(1), 1, Some(vec![0; 5]));
         assert_eq!(st.held_bytes(), 15);
     }
 }

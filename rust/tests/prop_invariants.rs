@@ -189,7 +189,7 @@ fn prop_single_survivable_failure_preserves_results() {
 /// log; skips never target already-sent ids.
 #[test]
 fn prop_log_resend_skip_partition() {
-    use partreper::partreper::MessageLog;
+    use partreper::partreper::{IdSet, MessageLog};
     use std::sync::Arc;
 
     check("resend/skip partition", 200, |rng| {
@@ -202,35 +202,195 @@ fn prop_log_resend_skip_partition() {
         // Receiver got an arbitrary subset, possibly including "future"
         // ids from a faster twin.
         let future = gen::usize_in(rng, 0, 10) as u64;
-        let received: HashSet<u64> = (1..=total + future)
+        let received_ids: HashSet<u64> = (1..=total + future)
             .filter(|_| rng.next_f64() < 0.6)
             .collect();
+        let received: IdSet = received_ids.iter().copied().collect();
+        // The compact set is exact.
+        for id in 1..=total + future + 1 {
+            assert_eq!(received.contains(id), received_ids.contains(&id), "id {id}");
+        }
         let resend = log.unreceived_sends(dst, &received);
         let marked = log.mark_future_skips(dst, Channel::Comp, &received);
 
         // Partition: every sent id is either received or resent.
         let resent: HashSet<u64> = resend.iter().map(|r| r.id).collect();
         for id in 1..=total {
-            assert_eq!(
-                received.contains(&id) || resent.contains(&id),
-                true,
+            assert!(
+                received.contains(id) || resent.contains(&id),
                 "sent id {id} lost"
             );
             assert!(
-                !(received.contains(&id) && resent.contains(&id)),
+                !(received.contains(id) && resent.contains(&id)),
                 "sent id {id} duplicated"
             );
         }
         // Skips are exactly the received ids beyond my counter.
-        let want_skips = received.iter().filter(|&&id| id > total).count();
+        let want_skips = received_ids.iter().filter(|&&id| id > total).count();
         assert_eq!(marked, want_skips);
         for id in 1..=total + future {
-            let should_skip = id > total && received.contains(&id);
+            let should_skip = id > total && received.contains(id);
             assert_eq!(
                 log.consume_skip(dst, Channel::Comp, id),
                 should_skip,
                 "id {id}"
             );
+        }
+    });
+}
+
+/// Bounded-memory retention (ISSUE 5): under random send/collective/
+/// refresh/GC schedules, the agreed floors are monotone and pruning never
+/// drops a record that a subsequent recovery — promotion-style (live
+/// mirror) or a cold restore from ANY retained store snapshot — still
+/// needs: the replay set above the agreed floor stays dense, the
+/// stale-store guard never trips, and resend ∪ restored-received covers
+/// every send.
+#[test]
+fn prop_gc_retention_never_drops_needed_records() {
+    use partreper::empi::{DType, ReduceOp};
+    use partreper::partreper::epoch::agree_floors;
+    use partreper::partreper::{CollKind, CollRecord, MessageLog, RetentionOffer, StoreCoverage};
+    use std::sync::Arc;
+
+    check("gc retention", 40, |rng| {
+        let n = gen::usize_in(rng, 2, 5);
+        let mut logs: Vec<MessageLog> = (0..n).map(|_| MessageLog::new()).collect();
+        let mut coverages: Vec<StoreCoverage> = (0..n).map(|_| StoreCoverage::new()).collect();
+        // Retained restorable snapshots per rank (at most two, oldest
+        // first) — the holder-side two-generation rule, modelled as whole
+        // log clones taken at the same instant as the coverage marks.
+        let mut snaps: Vec<Vec<MessageLog>> = vec![Vec::new(); n];
+        let mut inflight: Vec<(usize, usize, u64)> = Vec::new();
+        let mut next_coll = 0u64;
+        let app_of: Vec<usize> = (0..n).collect();
+        // Monotonicity bookkeeping across GC rounds.
+        let mut coll_floor_seen = vec![0u64; n];
+        let mut send_floor_seen = vec![vec![0u64; n]; n];
+        let mut wm_seen = vec![vec![0u64; n]; n];
+
+        for _round in 0..gen::usize_in(rng, 6, 20) {
+            for _ in 0..gen::usize_in(rng, 1, 12) {
+                match gen::usize_in(rng, 0, 9) {
+                    0..=4 => {
+                        // Send a -> b; deliver now or leave in flight.
+                        let a = gen::usize_in(rng, 0, n - 1);
+                        let b = (a + gen::usize_in(rng, 1, n - 1)) % n;
+                        let size = gen::usize_in(rng, 1, 16);
+                        let id = logs[a].log_send(b, 7, Arc::new(vec![a as u8; size]));
+                        if rng.next_f64() < 0.7 {
+                            logs[b].log_receive(a, id);
+                        } else {
+                            inflight.push((a, b, id));
+                        }
+                    }
+                    5 | 6 => {
+                        // Deliver a random in-flight message (out of order).
+                        if !inflight.is_empty() {
+                            let k = gen::usize_in(rng, 0, inflight.len() - 1);
+                            let (a, b, id) = inflight.swap_remove(k);
+                            logs[b].log_receive(a, id);
+                        }
+                    }
+                    7 | 8 => {
+                        // Global collective, logged by every rank.
+                        next_coll += 1;
+                        for log in logs.iter_mut() {
+                            log.log_collective(CollRecord {
+                                id: next_coll,
+                                kind: CollKind::Allreduce,
+                                dtype: DType::U64,
+                                op: ReduceOp::Sum,
+                                root: 0,
+                                input: Arc::new(vec![1, 2, 3]),
+                                blocks: Arc::new(vec![]),
+                            });
+                        }
+                    }
+                    _ => {
+                        // Store refresh for a random rank: snapshot + marks.
+                        let r = gen::usize_in(rng, 0, n - 1);
+                        snaps[r].push(logs[r].clone());
+                        if snaps[r].len() > 2 {
+                            snaps[r].remove(0);
+                        }
+                        coverages[r].on_push(logs[r].snapshot_marks(n));
+                    }
+                }
+            }
+
+            // GC round: every rank offers, agrees floors, prunes.
+            let offers: Vec<RetentionOffer> = logs
+                .iter()
+                .zip(&coverages)
+                .map(|(log, cov)| log.retention_offer(n, cov))
+                .collect();
+            let refs: Vec<Option<&RetentionOffer>> = offers.iter().map(Some).collect();
+            for me in 0..n {
+                let f = agree_floors(&refs, &app_of, me);
+                assert!(f.coll_floor >= coll_floor_seen[me], "coll floor monotone");
+                coll_floor_seen[me] = f.coll_floor;
+                for d in 0..n {
+                    let sf = f.send_floors[&d];
+                    assert!(sf >= send_floor_seen[me][d], "send floor monotone");
+                    send_floor_seen[me][d] = sf;
+                }
+                logs[me].prune(f.coll_floor, &f.send_floors);
+            }
+            for r in 0..n {
+                for s in 0..n {
+                    let wm = logs[r].receive_watermark(s);
+                    assert!(wm >= wm_seen[r][s], "watermarks monotone");
+                    wm_seen[r][s] = wm;
+                }
+            }
+
+            // THE PROPERTY. Fail any rank right now; restore it either as
+            // its live mirror (promotion) or from any retained snapshot
+            // (cold restore): survivors' pruned logs must still cover it.
+            let v = gen::usize_in(rng, 0, n - 1);
+            let mut candidates: Vec<MessageLog> = vec![logs[v].clone()];
+            candidates.extend(snaps[v].iter().cloned());
+            for restored in &candidates {
+                let min_cid = logs
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != v)
+                    .map(|(_, l)| l.last_coll_id())
+                    .chain(std::iter::once(restored.last_coll_id()))
+                    .min()
+                    .unwrap();
+                for (i, l) in logs.iter().enumerate() {
+                    if i == v {
+                        continue;
+                    }
+                    // Stale-store guard never trips on a GC'd survivor.
+                    assert!(
+                        l.pruned_to() <= min_cid,
+                        "guard would abort: pruned_to {} > min_cid {min_cid}",
+                        l.pruned_to()
+                    );
+                    // Replay completeness: dense above the agreed floor.
+                    let got: Vec<u64> =
+                        l.collectives_after(min_cid).iter().map(|c| c.id).collect();
+                    let want: Vec<u64> = (min_cid + 1..=l.last_coll_id()).collect();
+                    assert_eq!(got, want, "replay set of {i} has holes");
+                    // Resend completeness toward the restored victim.
+                    let have = restored.received_from(i);
+                    let resent: HashSet<u64> = l
+                        .unreceived_sends(v, &have)
+                        .iter()
+                        .map(|r| r.id)
+                        .collect();
+                    for id in 1..=l.sent_up_to(v) {
+                        assert!(
+                            have.contains(id) || resent.contains(&id),
+                            "send {i}->{v} id {id} lost (restored wm {})",
+                            have.watermark()
+                        );
+                    }
+                }
+            }
         }
     });
 }
