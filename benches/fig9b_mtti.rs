@@ -1,15 +1,122 @@
 //! Fig 9(b): Mean Time To Interruption vs replication degree (CG, BT, LU).
 //! Paper shape: MTTI grows with the degree; 100% replication runs complete
 //! (MTTI is a lower bound); 50% roughly doubles CG's MTTI.
+//!
+//! Also home of the ISSUE 6 scheduler-scale figure: the event-driven
+//! execution mode runs bare-EMPI worlds of 4k–16k ranks (two orders past
+//! the threaded suite) through a neighbor exchange, an allreduce, one
+//! mid-run failure and a survivor regroup, and reports the virtual-clock
+//! scheduler's throughput (events/sec) into `BENCH_fig9b.json`.
 
 mod common;
 
+use std::time::{Duration, Instant};
+
 use partreper::apps::AppKind;
 use partreper::config::ReplicationDegree;
+use partreper::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
+use partreper::fabric::{AllreduceAlg, CollTuning, Fabric, NetModel, ProcSet};
 use partreper::harness::experiments::{fig9b, format_fig9b};
+use partreper::sched::{ExecMode, Sched};
+use partreper::util::{u64s_from_bytes, u64s_to_bytes};
+
+/// One event-mode scale world: `n` cooperatively scheduled ranks on a
+/// bare-EMPI fabric (no replication machinery — the §VI-B offer exchange
+/// is O(n²) per rank and exists to be *avoided* at this scale). Ring
+/// neighbor exchange + allreduce, then rank n/2 dies quiesced, survivors
+/// notice off-wire, regroup densely on a pre-agreed context and finish.
+fn sched_scale_case(report: &mut common::BenchReport, n: usize) {
+    let tuning = CollTuning {
+        // Log-round combining: a ring reduce-scatter is O(n) rounds —
+        // ~33M messages at 4096 ranks — far past any smoke budget.
+        allreduce: Some(AllreduceAlg::RecursiveDoubling),
+        ..Default::default()
+    };
+    let procs = ProcSet::new(n);
+    let sched = Sched::new(ExecMode::Event);
+    let fabric = Fabric::new_clocked(
+        "sched-scale",
+        procs.clone(),
+        NetModel::instant(),
+        tuning,
+        sched.clone(),
+    );
+    let world_ctx = fabric.alloc_ctx();
+    // Post-failure context, agreed before launch — a bare world has no
+    // consensus machinery to derive one after the fact.
+    let repair_ctx = fabric.alloc_ctx();
+    let victim = n / 2;
+    let wall_start = Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let procs = procs.clone();
+            let clock = sched.clone();
+            sched.spawn(&format!("rank-{r}"), move || {
+                let comm = Comm::world(fabric.clone(), world_ctx, r);
+                let mut acc = r as u64 + 1;
+                // Phase 1, full world: ring exchange + allreduce.
+                let (right, left) = ((r + 1) % n, (r + n - 1) % n);
+                comm.send(right, 1, &acc.to_le_bytes()).unwrap();
+                let got = comm.recv(Src::Rank(left), Tag::Tag(1)).unwrap();
+                let bytes: [u8; 8] = got.data.as_slice().try_into().unwrap();
+                acc = acc.wrapping_add(u64::from_le_bytes(bytes));
+                let sum =
+                    coll::allreduce(&comm, DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]))
+                        .unwrap();
+                acc ^= u64s_from_bytes(&sum)[0];
+                if r == victim {
+                    // Die quiesced: ground-truth death only — nobody
+                    // targets the victim after this point.
+                    procs.mark_dead(r);
+                    return acc;
+                }
+                // Survivors notice OFF-WIRE; the wait must tick through
+                // the virtual clock (a std sleep would stall the world).
+                while !procs.is_dead(victim) {
+                    clock.sleep(Duration::from_micros(500));
+                }
+                // Regroup densely over the survivors and finish.
+                let group: Vec<usize> = (0..n).filter(|&x| x != victim).collect();
+                let me = if r < victim { r } else { r - 1 };
+                let comm = Comm::from_group(fabric, repair_ctx, group, me);
+                let sum =
+                    coll::allreduce(&comm, DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]))
+                        .unwrap();
+                u64s_from_bytes(&sum)[0]
+            })
+        })
+        .collect();
+    sched.start();
+    let outs: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall = wall_start.elapsed();
+    let (events, virtual_ns, ready_peak) = sched.snapshot();
+    let survivors: Vec<u64> = outs
+        .iter()
+        .enumerate()
+        .filter(|&(r, _)| r != victim)
+        .map(|(_, &v)| v)
+        .collect();
+    assert!(
+        survivors.windows(2).all(|w| w[0] == w[1]),
+        "survivors disagree on the post-repair reduction"
+    );
+    let rate = events as f64 / wall.as_secs_f64().max(1e-9);
+    println!(
+        "sched scale n={n}: events={events} virtual_ms={:.3} ready_peak={ready_peak} \
+         wall={:.3}s -> {:.0} events/s",
+        virtual_ns as f64 / 1e6,
+        wall.as_secs_f64(),
+        rate
+    );
+    report.case_value(&format!("sched_scale n={n} events"), "events", events as f64);
+    report.case_value(&format!("sched_scale n={n} throughput"), "events/s", rate);
+    report.case_value(&format!("sched_scale n={n} wall"), "s", wall.as_secs_f64());
+}
 
 fn main() {
     common::hr("Fig 9(b) — MTTI vs replication degree");
+    let mut report = common::BenchReport::new("fig9b");
     let eng = common::engine();
     let mut cfg = common::base_cfg();
     cfg.faults.weibull_shape = 0.9;
@@ -48,6 +155,13 @@ fn main() {
     };
     let rows = fig9b(&apps, ncomp, &rdegrees, iters, runs, eng, &cfg);
     print!("{}", format_fig9b(&rows));
+    for row in &rows {
+        report.case_value(
+            &format!("mtti {} rdeg{}", row.app.name(), row.rdegree),
+            "s",
+            row.mtti_s,
+        );
+    }
     // Shape check per app: MTTI at 100% ≥ MTTI at 0%.
     for app in apps {
         let at = |d: f64| {
@@ -64,4 +178,17 @@ fn main() {
             at(100.0) / at(0.0)
         );
     }
+
+    common::hr("Event-mode scheduler scale (virtual-clock worlds)");
+    let sizes: Vec<usize> = if common::full() {
+        vec![4096, 16384]
+    } else if common::smoke() {
+        vec![4096]
+    } else {
+        vec![4096, 8192]
+    };
+    for n in sizes {
+        sched_scale_case(&mut report, n);
+    }
+    report.write();
 }

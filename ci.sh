@@ -11,6 +11,15 @@ cargo build --release
 echo "== tier-1: tests =="
 cargo test -q
 
+echo "== tier-1 under the event-driven scheduler (DESIGN.md §8) =="
+# The whole suite again with ranks as virtual-clock tasks: every blocking
+# point must stay hang-free and semantics-identical under cooperative
+# scheduling, not just under preemptive threads.
+PARTREPER_EXEC=event cargo test -q
+
+echo "== cross-mode schedule equivalence (threaded vs event wire taps) =="
+cargo test -q --test xmode_equivalence
+
 echo "== benches + examples compile =="
 cargo bench --no-run
 cargo build --release --examples

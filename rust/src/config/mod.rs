@@ -14,6 +14,7 @@ pub use parse::{parse_kv, ParseError};
 use crate::fabric::{
     AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, NetModel, RootedAlg,
 };
+pub use crate::sched::ExecMode;
 
 /// Replication degree: the *percentage of computational processes that have
 /// replicas* (paper §VII-A). The paper sweeps {0, 6.25, 12.5, 25, 50, 100}.
@@ -148,6 +149,11 @@ pub struct JobConfig {
     /// exchanges (that is the bug the engine fixes), so keep baseline
     /// runs below the threshold.
     pub serial_fanout: bool,
+    /// Execution mode (`exec.mode`): `threaded` (one OS thread per rank,
+    /// the fidelity baseline and default) or `event` (ranks as
+    /// cooperatively scheduled tasks on the virtual clock — DESIGN.md
+    /// §8). The default honours `PARTREPER_EXEC=event`.
+    pub exec: ExecMode,
 }
 
 impl Default for JobConfig {
@@ -166,6 +172,7 @@ impl Default for JobConfig {
             seed: 42,
             failure_check_stride: 8,
             serial_fanout: false,
+            exec: ExecMode::from_env(),
         }
     }
 }
@@ -281,6 +288,7 @@ impl JobConfig {
             "net.serial_fanout" => {
                 self.serial_fanout = value.parse().map_err(|_| bad(key, value))?
             }
+            "exec.mode" => self.exec = ExecMode::parse(value).ok_or_else(|| bad(key, value))?,
             "coll.allreduce" => {
                 self.coll.allreduce = match value {
                     "auto" => None,
@@ -396,6 +404,16 @@ mod tests {
         assert!(cfg.set("net.serial_fanout", "maybe").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("ncomp", "abc").is_err());
+    }
+
+    #[test]
+    fn exec_mode_override_parses() {
+        let mut cfg = JobConfig::default();
+        cfg.set("exec.mode", "event").unwrap();
+        assert_eq!(cfg.exec, ExecMode::Event);
+        cfg.set("exec.mode", "threaded").unwrap();
+        assert_eq!(cfg.exec, ExecMode::Threaded);
+        assert!(cfg.set("exec.mode", "fibers").is_err());
     }
 
     #[test]

@@ -145,13 +145,15 @@ fn finish_send(fabric: &Fabric, me: usize, req: &SendReq) -> Result<(), CommErro
     if req.is_done() {
         return Ok(());
     }
-    let start = std::time::Instant::now();
+    // Deadline on the fabric clock, so it is virtual (and deterministic)
+    // in event mode instead of host-load-dependent.
+    let start = fabric.clock().now_ns();
     loop {
         fabric.procs.check_poison(me)?;
         if req.wait_timeout(SEND_PARK) {
             return Ok(());
         }
-        if start.elapsed() >= RECV_DEADLINE {
+        if fabric.clock().now_ns().saturating_sub(start) >= RECV_DEADLINE.as_nanos() as u64 {
             // A rendezvous send nobody ever receives is how a real MPI
             // hangs; surface it loudly instead.
             return Err(CommError::Timeout {
@@ -352,13 +354,14 @@ impl Comm {
     /// park on the mailbox arrival clock with the standard deadline.
     pub fn wait_recv(&self, req: &mut RecvReq) -> Result<Recvd, CommError> {
         let me = self.my_fabric_rank();
-        let start = std::time::Instant::now();
+        let start = self.fabric.clock().now_ns();
         let mut clock = self.fabric.arrivals(me);
         loop {
             if let Some(m) = self.test(req)? {
                 return Ok(m);
             }
-            if start.elapsed() >= RECV_DEADLINE {
+            if self.fabric.clock().now_ns().saturating_sub(start) >= RECV_DEADLINE.as_nanos() as u64
+            {
                 return Err(CommError::Timeout {
                     rank: me,
                     detail: format!("{} wait_recv", self.fabric.label),

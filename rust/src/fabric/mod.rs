@@ -73,11 +73,12 @@ pub use netmodel::{
 pub use procset::{ProcSet, ProcState};
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::CommError;
+use crate::sched::Sched;
 
 /// Sender-side completion gate for a rendezvous-sized transmission: opens
 /// at the moment a receive *matches* the envelope (the CTS of the RTS/CTS
@@ -108,12 +109,19 @@ impl RndvGate {
     }
 
     /// Park up to `timeout` for the gate; returns whether it is open.
-    fn wait_timeout(&self, timeout: Duration) -> bool {
-        let g = self.open.lock().unwrap();
-        if *g {
-            return true;
+    /// Parks route through `clock` so an event-mode task yields virtual
+    /// time instead of wedging its thread on the condvar.
+    fn wait_timeout(&self, clock: &Sched, timeout: Duration) -> bool {
+        let start = clock.now_ns();
+        let budget = timeout.as_nanos() as u64;
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            let elapsed = clock.now_ns().saturating_sub(start);
+            if elapsed >= budget {
+                break;
+            }
+            g = clock.wait_timeout(&self.open, g, &self.cv, Duration::from_nanos(budget - elapsed));
         }
-        let (g, _) = self.cv.wait_timeout(g, timeout).unwrap();
         *g
     }
 }
@@ -126,6 +134,9 @@ impl RndvGate {
 /// the restore store's pushes behave.
 pub struct SendHandle {
     gate: Option<Arc<RndvGate>>,
+    /// The owning fabric's clock, so completion waits park through the
+    /// execution mode's scheduler (the public signature is unchanged).
+    clock: Arc<Sched>,
 }
 
 impl SendHandle {
@@ -135,7 +146,9 @@ impl SendHandle {
 
     /// Park up to `timeout` for completion; returns [`SendHandle::is_done`].
     pub fn wait_timeout(&self, timeout: Duration) -> bool {
-        self.gate.as_ref().map_or(true, |g| g.wait_timeout(timeout))
+        self.gate
+            .as_ref()
+            .map_or(true, |g| g.wait_timeout(&self.clock, timeout))
     }
 }
 
@@ -147,7 +160,9 @@ struct Delivery {
     seq: u64,
     env: Envelope,
     cost_ns: u64,
-    sent_at: Instant,
+    /// Post instant in fabric-clock nanoseconds ([`Sched::now_ns`]) —
+    /// wall-based in threaded mode, virtual in event mode.
+    sent_at: u64,
     gate: Option<Arc<RndvGate>>,
 }
 
@@ -398,8 +413,9 @@ struct MailboxInner {
     /// ingesting n messages pays their wire costs back to back while a
     /// single transfer that aged in the queue costs nothing extra — the
     /// receive-side NIC model behind the collective-engine crossovers,
-    /// kept compatible with sender-side overlap (DMA).
-    nic_free_at: Option<Instant>,
+    /// kept compatible with sender-side overlap (DMA). Fabric-clock
+    /// nanoseconds, so event mode charges the same schedule virtually.
+    nic_free_at: Option<u64>,
     /// Arrival clock parked pollers compare against. Deliberately distinct
     /// from the unexpected queue's ordering sequence: a cancellation
     /// re-publishes a message (bumping this clock so pollers re-test)
@@ -514,6 +530,21 @@ impl FabricMetrics {
     }
 }
 
+/// One recorded transmission on a tapped fabric: `(tag, send_id, payload
+/// length, FNV-1a payload hash)`. Per-channel order is mailbox-entry
+/// order — the wire schedule itself.
+type TapRecord = (i64, u64, usize, u64);
+
+/// FNV-1a 64-bit, the standard zero-dependency payload fingerprint.
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// The interconnect: `n` mailboxes + shared process liveness + cost model
 /// + the collective tuning surface every communicator on the fabric reads.
 pub struct Fabric {
@@ -529,6 +560,14 @@ pub struct Fabric {
     next_ctx: AtomicU64,
     /// Human label ("empi" / "ompi") for diagnostics.
     pub label: &'static str,
+    /// The execution-mode clock/executor every park and NIC settle on
+    /// this fabric routes through (DESIGN.md §8).
+    clock: Arc<Sched>,
+    /// Wire-schedule recorder gate — one relaxed load on the send path
+    /// when off, so taps cost nothing outside equivalence tests.
+    tap_on: AtomicBool,
+    /// Recorded schedule, keyed by `(ctx, src, dst)` channel.
+    tap: Mutex<Option<HashMap<(u64, usize, usize), Vec<TapRecord>>>>,
 }
 
 /// How long a blocking receive waits between liveness re-checks.
@@ -540,12 +579,27 @@ impl Fabric {
     }
 
     /// Build a fabric with explicit collective-engine overrides (the
-    /// launcher passes `JobConfig.coll` here).
+    /// launcher passes `JobConfig.coll` here). Runs on a private
+    /// threaded-mode clock; the launcher uses [`Fabric::new_clocked`] to
+    /// share the job's scheduler.
     pub fn new_tuned(
         label: &'static str,
         procs: Arc<ProcSet>,
         model: NetModel,
         coll: CollTuning,
+    ) -> Arc<Self> {
+        Self::new_clocked(label, procs, model, coll, Sched::threaded())
+    }
+
+    /// Build a fabric parked on an explicit execution-mode scheduler.
+    /// Both of a job's fabrics (EMPI + OMPI) must share one clock so
+    /// virtual time is a single total order across them.
+    pub fn new_clocked(
+        label: &'static str,
+        procs: Arc<ProcSet>,
+        model: NetModel,
+        coll: CollTuning,
+        clock: Arc<Sched>,
     ) -> Arc<Self> {
         let n = procs.len();
         Arc::new(Self {
@@ -556,7 +610,15 @@ impl Fabric {
             metrics: FabricMetrics::default(),
             next_ctx: AtomicU64::new(1),
             label,
+            clock,
+            tap_on: AtomicBool::new(false),
+            tap: Mutex::new(None),
         })
+    }
+
+    /// The scheduler this fabric's blocking points yield through.
+    pub fn clock(&self) -> &Arc<Sched> {
+        &self.clock
     }
 
     pub fn len(&self) -> usize {
@@ -605,14 +667,18 @@ impl Fabric {
         let gate = (env.data.len() >= self.model.rndv_threshold)
             .then(|| Arc::new(RndvGate::new()));
 
+        let sent_at = self.clock.now_ns();
         let mb = &self.boxes[env.dst];
         let mut guard = mb.inner.lock().unwrap();
         let inner = &mut *guard;
         inner.arrivals += 1;
+        if self.tap_on.load(Ordering::Relaxed) {
+            self.tap_record(&env);
+        }
         let d = Delivery {
             seq: inner.unexpected.alloc_seq(),
             cost_ns: cost,
-            sent_at: Instant::now(),
+            sent_at,
             gate: gate.clone(),
             env,
         };
@@ -625,7 +691,53 @@ impl Fabric {
         if ring {
             mb.bell.notify_all();
         }
-        Ok(SendHandle { gate })
+        Ok(SendHandle {
+            gate,
+            clock: self.clock.clone(),
+        })
+    }
+
+    // ------------------------------------------------ wire-schedule tap
+
+    /// Start recording the wire schedule: every subsequent send appends
+    /// `(tag, send_id, len, payload hash)` to its `(ctx, src, dst)`
+    /// channel, in mailbox-entry order. The cross-mode equivalence tests
+    /// tap two worlds (threaded vs. event) and compare dumps.
+    pub fn tap_start(&self) {
+        *self.tap.lock().unwrap() = Some(HashMap::new());
+        self.tap_on.store(true, Ordering::Release);
+    }
+
+    fn tap_record(&self, env: &Envelope) {
+        if let Some(t) = self.tap.lock().unwrap().as_mut() {
+            t.entry((env.ctx, env.src, env.dst)).or_default().push((
+                env.tag,
+                env.send_id,
+                env.data.len(),
+                fnv1a(&env.data),
+            ));
+        }
+    }
+
+    /// Stop recording and render the canonical schedule: channels sorted
+    /// by `(ctx, src, dst)`, one line per channel. Two runs with
+    /// byte-identical per-channel wire behaviour produce byte-identical
+    /// dumps, regardless of cross-channel interleaving.
+    pub fn tap_dump(&self) -> String {
+        self.tap_on.store(false, Ordering::Release);
+        let taken = self.tap.lock().unwrap().take();
+        let mut chans: Vec<_> = taken.unwrap_or_default().into_iter().collect();
+        chans.sort_by_key(|(k, _)| *k);
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for ((ctx, src, dst), recs) in chans {
+            let _ = write!(out, "ctx{ctx} {src}->{dst}:");
+            for (tag, sid, len, h) in recs {
+                let _ = write!(out, " t{tag}/s{sid}/l{len}/h{h:016x}");
+            }
+            out.push('\n');
+        }
+        out
     }
 
     /// Charge a claimed delivery's wire time to receiver `me` (injection
@@ -641,13 +753,13 @@ impl Fabric {
         let finish = {
             let mut inner = self.boxes[me].inner.lock().unwrap();
             let start = inner.nic_free_at.map_or(d.sent_at, |f| f.max(d.sent_at));
-            let finish = start + Duration::from_nanos(d.cost_ns);
+            let finish = start + d.cost_ns;
             inner.nic_free_at = Some(finish);
             finish
         };
-        while Instant::now() < finish {
-            std::hint::spin_loop();
-        }
+        // Threaded mode keeps the historical busy-spin; an event-mode
+        // task parks, turning wire time into pure virtual time.
+        self.clock.wait_until_ns(finish);
     }
 
     /// Non-blocking matched receive: removes and returns the earliest
@@ -733,18 +845,23 @@ impl Fabric {
     /// clock. Replaces hot-path spinning: pollers alternate try_recv /
     /// failure-check / `wait_new_mail`.
     pub fn wait_new_mail(&self, me: usize, last: u64, timeout: Duration) -> u64 {
-        let start = Instant::now();
+        let start = self.clock.now_ns();
+        let budget = timeout.as_nanos() as u64;
         let mb = &self.boxes[me];
         let mut guard = mb.inner.lock().unwrap();
         let wakes_at_entry = guard.wakes;
         while guard.arrivals == last && guard.wakes == wakes_at_entry {
-            let elapsed = start.elapsed();
-            if elapsed >= timeout {
+            let elapsed = self.clock.now_ns().saturating_sub(start);
+            if elapsed >= budget {
                 break;
             }
             guard.bell_waiters += 1;
-            let (g, _res) = mb.bell.wait_timeout(guard, timeout - elapsed).unwrap();
-            guard = g;
+            guard = self.clock.wait_timeout(
+                &mb.inner,
+                guard,
+                &mb.bell,
+                Duration::from_nanos(budget - elapsed),
+            );
             guard.bell_waiters -= 1;
         }
         guard.arrivals
@@ -778,7 +895,8 @@ impl Fabric {
         spec: &MatchSpec,
         deadline: Duration,
     ) -> Result<Delivery, CommError> {
-        let start = Instant::now();
+        let start = self.clock.now_ns();
+        let budget = deadline.as_nanos() as u64;
         let mb = &self.boxes[me];
         let mut guard = mb.inner.lock().unwrap();
         self.procs.check_poison(me)?;
@@ -787,8 +905,8 @@ impl Fabric {
         }
         let (id, cv) = guard.posted.post(spec.clone());
         loop {
-            let elapsed = start.elapsed();
-            if elapsed >= deadline {
+            let elapsed = self.clock.now_ns().saturating_sub(start);
+            if elapsed >= budget {
                 // Delivered at the very last instant? Take it; else cancel.
                 if let Some(d) = guard.posted.cancel(id) {
                     return Ok(d);
@@ -798,9 +916,8 @@ impl Fabric {
                     detail: format!("{} recv {:?}", self.label, spec),
                 });
             }
-            let wait = POLL_TICK.min(deadline - elapsed);
-            let (g, _tm) = cv.wait_timeout(guard, wait).unwrap();
-            guard = g;
+            let wait = POLL_TICK.min(Duration::from_nanos(budget - elapsed));
+            guard = self.clock.wait_timeout(&mb.inner, guard, &cv, wait);
             if let Err(e) = self.procs.check_poison(me) {
                 let inner = &mut *guard;
                 if let Some(d) = inner.posted.cancel(id) {
@@ -854,6 +971,7 @@ impl Fabric {
 mod tests {
     use super::*;
     use crate::error::CommError;
+    use std::time::Instant;
 
     fn tiny(n: usize) -> (Arc<ProcSet>, Arc<Fabric>) {
         let procs = ProcSet::new(n);
@@ -1166,6 +1284,57 @@ mod tests {
         let h = f.start_send(env(0, 1, 1, 4, &[3u8; 16])).unwrap();
         f.purge(1);
         assert!(h.is_done(), "discarded mail must not strand its sender");
+    }
+
+    // ------------------------------------------------ clock + wire tap
+
+    #[test]
+    fn tap_records_per_channel_schedule_in_order() {
+        let (_p, f) = tiny(3);
+        f.send(env(0, 2, 1, 7, b"aa")).unwrap();
+        f.tap_start();
+        f.send(env(0, 2, 1, 7, b"bb")).unwrap();
+        f.send(env(1, 2, 1, 7, b"cc")).unwrap();
+        f.send(env(0, 2, 1, 8, b"dd")).unwrap();
+        f.send(env(0, 2, 1, 7, b"ee")).unwrap();
+        let dump = f.tap_dump();
+        // Pre-tap traffic is absent; channels come out sorted; per-channel
+        // order is send order.
+        assert!(!dump.contains(&format!("h{:016x}", super::fnv1a(b"aa"))), "{dump}");
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2, "{dump}");
+        let chan0 = format!(
+            "ctx1 0->2: t7/s0/l2/h{:016x} t8/s0/l2/h{:016x} t7/s0/l2/h{:016x}",
+            super::fnv1a(b"bb"),
+            super::fnv1a(b"dd"),
+            super::fnv1a(b"ee"),
+        );
+        assert_eq!(lines[0], chan0, "{dump}");
+        assert!(lines[1].starts_with("ctx1 1->2: t7/"), "{dump}");
+        // The tap is consumed: recording is off and a fresh dump is empty.
+        assert_eq!(f.tap_dump(), "");
+    }
+
+    #[test]
+    fn identical_traffic_produces_identical_dumps() {
+        let run = || {
+            let (_p, f) = tiny(2);
+            f.tap_start();
+            for i in 0..5u8 {
+                f.send(env(0, 1, 1, i as i64, &[i, i + 1])).unwrap();
+            }
+            f.tap_dump()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fabric_clock_defaults_to_threaded_wall_time() {
+        let (_p, f) = tiny(2);
+        assert!(!f.clock().is_event());
+        let a = f.clock().now_ns();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(f.clock().now_ns() > a);
     }
 
     #[test]

@@ -12,10 +12,11 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::{FaultPlan, FaultTarget, JobConfig};
 use crate::fabric::{Fabric, ProcSet};
+use crate::sched::Sched;
 use crate::util::Xoshiro256;
 
 /// Victim pool for a job, per the plan's target. `CompsOnly` means the
@@ -32,7 +33,8 @@ pub fn eligible_ranks(plan: &FaultPlan, cfg: &JobConfig) -> Vec<usize> {
 /// One injected failure, for trace records and replay.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Injection {
-    /// Wall-clock offset from injector start.
+    /// Fabric-clock offset from injector start (wall time in threaded
+    /// mode, virtual time in event mode).
     pub at: Duration,
     pub victim: usize,
 }
@@ -59,47 +61,55 @@ impl FaultInjector {
         let record = Arc::new(Mutex::new(Vec::new()));
         let stop2 = stop.clone();
         let record2 = record.clone();
-        let handle = std::thread::Builder::new()
-            .name("fault-injector".into())
-            .spawn(move || {
-                let mut rng = Xoshiro256::seeded(plan.seed);
-                let start = Instant::now();
-                let mut injected = Vec::new();
-                while !stop2.load(Ordering::Relaxed) && injected.len() < plan.max_failures {
-                    let gap = rng.weibull(plan.weibull_shape, plan.weibull_scale_s);
-                    let deadline = Instant::now() + Duration::from_secs_f64(gap);
-                    // Sleep in small slices so stop is responsive.
-                    while Instant::now() < deadline {
-                        if stop2.load(Ordering::Relaxed) {
-                            return injected;
-                        }
-                        std::thread::sleep(Duration::from_millis(1));
+        // Run on the fabrics' clock: in event mode the Weibull gaps are
+        // virtual-time timers (deterministic), in threaded mode this is
+        // the historical wall-clock sleeper. A fabric-less injector
+        // (unit tests) gets a private threaded clock.
+        let clock = fabrics
+            .first()
+            .map(|f| f.clock().clone())
+            .unwrap_or_else(Sched::threaded);
+        let clock2 = clock.clone();
+        let handle = clock.spawn("fault-injector", move || {
+            let mut rng = Xoshiro256::seeded(plan.seed);
+            let start0 = clock2.now_ns();
+            let mut injected = Vec::new();
+            while !stop2.load(Ordering::Relaxed) && injected.len() < plan.max_failures {
+                let gap = rng.weibull(plan.weibull_shape, plan.weibull_scale_s);
+                let deadline = clock2
+                    .now_ns()
+                    .saturating_add(Duration::from_secs_f64(gap).as_nanos() as u64);
+                // Sleep in small slices so stop is responsive.
+                while clock2.now_ns() < deadline {
+                    if stop2.load(Ordering::Relaxed) {
+                        return injected;
                     }
-                    let alive: Vec<usize> = eligible
-                        .iter()
-                        .copied()
-                        .filter(|&r| !procs.is_poisoned(r) && procs.is_alive(r))
-                        .collect();
-                    if alive.len() <= 1 {
-                        break;
-                    }
-                    let victim = *rng.choose(&alive);
-                    procs.poison(victim);
-                    // Wake blocked receivers so the victim notices promptly
-                    // and so peers blocked on the victim re-poll.
-                    for f in &fabrics {
-                        f.wake_all();
-                    }
-                    let inj = Injection {
-                        at: start.elapsed(),
-                        victim,
-                    };
-                    injected.push(inj);
-                    record2.lock().unwrap().push(inj);
+                    clock2.sleep(Duration::from_millis(1));
                 }
-                injected
-            })
-            .expect("spawn injector");
+                let alive: Vec<usize> = eligible
+                    .iter()
+                    .copied()
+                    .filter(|&r| !procs.is_poisoned(r) && procs.is_alive(r))
+                    .collect();
+                if alive.len() <= 1 {
+                    break;
+                }
+                let victim = *rng.choose(&alive);
+                procs.poison(victim);
+                // Wake blocked receivers so the victim notices promptly
+                // and so peers blocked on the victim re-poll.
+                for f in &fabrics {
+                    f.wake_all();
+                }
+                let inj = Injection {
+                    at: Duration::from_nanos(clock2.now_ns().saturating_sub(start0)),
+                    victim,
+                };
+                injected.push(inj);
+                record2.lock().unwrap().push(inj);
+            }
+            injected
+        });
         Self {
             stop,
             handle: Some(handle),
@@ -147,6 +157,7 @@ pub fn schedule(plan: &FaultPlan, n: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     fn fast_plan(seed: u64, maxf: usize) -> FaultPlan {
         FaultPlan {

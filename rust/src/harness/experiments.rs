@@ -301,7 +301,15 @@ mod tests {
         // quickly; 100% must mostly run longer (usually to completion).
         let mut cfg = JobConfig::default();
         cfg.faults.weibull_shape = 1.0;
-        cfg.faults.weibull_scale_s = 0.03;
+        // The injector paces on the fabric clock: wall time under threads,
+        // virtual time under the event scheduler — where this job lasts
+        // milliseconds of *virtual* time, so the mean gap must shrink for
+        // injections to land inside the run at all.
+        cfg.faults.weibull_scale_s = if cfg.exec == crate::sched::ExecMode::Event {
+            0.002
+        } else {
+            0.03
+        };
         cfg.faults.max_failures = 4;
         let rows = fig9b(&[AppKind::Ep], 4, &[0.0, 100.0], 25, 3, None, &cfg);
         assert_eq!(rows.len(), 2);

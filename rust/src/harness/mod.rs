@@ -78,6 +78,14 @@ pub struct RunResult {
     /// EMPI fabric: `("<collective>.<algorithm>", count)` per slot, summed
     /// over ranks and calls.
     pub coll_selects: Vec<(&'static str, u64)>,
+    /// Execution mode the job ran under (`"threaded"` / `"event"`).
+    pub exec_mode: &'static str,
+    /// Event-scheduler counters (all zero under threaded mode):
+    /// scheduling decisions taken, virtual nanoseconds the clock jumped,
+    /// and the ready-queue high-water mark.
+    pub sched_events: u64,
+    pub sched_virtual_ns: u64,
+    pub sched_ready_peak: u64,
 }
 
 impl RunResult {
@@ -193,6 +201,10 @@ pub fn run_app(
     let totals = report.total_counters();
     let nranks = report.outcomes.len().max(1) as f64;
     let app_s = report.phase_seconds(Phase::App);
+    // Both fabrics share the job's scheduler, so one snapshot covers the
+    // whole world (zeros under threaded mode).
+    let (sched_events, sched_virtual_ns, sched_ready_peak) =
+        report.empi_fabric.clock().snapshot();
     RunResult {
         app,
         backend,
@@ -223,6 +235,10 @@ pub fn run_app(
         log_peak_bytes: crate::metrics::Counters::get(&totals.log_peak_bytes),
         restore_s: report.phase_seconds(Phase::Restore),
         coll_selects: report.empi_fabric.metrics.selects.snapshot(),
+        exec_mode: report.empi_fabric.clock().mode().name(),
+        sched_events,
+        sched_virtual_ns,
+        sched_ready_peak,
     }
 }
 
@@ -258,6 +274,24 @@ mod tests {
         assert!(r.completed(), "{:?}", r.errors);
         let total: u64 = r.coll_selects.iter().map(|&(_, c)| c).sum();
         assert!(total > 0, "apps run collectives; selections must be recorded");
+    }
+
+    #[test]
+    fn event_mode_runs_apps_and_reports_scheduler_counters() {
+        let mut cfg = JobConfig::new(4, 50.0);
+        cfg.set("exec.mode", "event").unwrap();
+        let r = run_app(&cfg, AppKind::Ep, Backend::PartReper, 2, None);
+        assert!(r.completed(), "{:?}", r.errors);
+        assert_eq!(r.exec_mode, "event");
+        assert!(r.sched_events > 0, "event mode must count dispatches");
+        assert!(r.sched_virtual_ns > 0, "virtual clock must have advanced");
+        assert!(r.sched_ready_peak > 0);
+        // Threaded runs report zeros (counters are event-scheduler-only).
+        cfg.set("exec.mode", "threaded").unwrap();
+        let t = run_app(&cfg, AppKind::Ep, Backend::PartReper, 2, None);
+        assert!(t.completed(), "{:?}", t.errors);
+        assert_eq!(t.exec_mode, "threaded");
+        assert_eq!((t.sched_events, t.sched_virtual_ns, t.sched_ready_peak), (0, 0, 0));
     }
 
     #[test]

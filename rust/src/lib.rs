@@ -32,6 +32,7 @@ pub mod procimg;
 pub mod procmgr;
 pub mod restore;
 pub mod runtime;
+pub mod sched;
 pub mod testutil;
 pub mod util;
 
@@ -41,5 +42,6 @@ pub mod prelude {
     pub use crate::empi::{Comm, DType, ReduceOp, Src, Tag};
     pub use crate::error::{CommError, JobError, UlfmError};
     pub use crate::fabric::{Fabric, NetModel, ProcSet};
+    pub use crate::sched::{ExecMode, Sched};
     pub use crate::util::{Summary, Xoshiro256};
 }

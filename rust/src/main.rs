@@ -124,6 +124,10 @@ fn main() {
                 "log: peak_bytes={} gc_rounds={} records_pruned={}",
                 r.log_peak_bytes, r.gc_rounds, r.records_pruned
             );
+            println!(
+                "sched: mode={} events={} virtual_ns={} ready_peak={}",
+                r.exec_mode, r.sched_events, r.sched_virtual_ns, r.sched_ready_peak
+            );
             println!("checksum: {:?}", r.checksum);
         }
         "fig8" => {

@@ -48,7 +48,7 @@
 //! not yet issued when the failure hit.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::empi::{RecvReq, SendReq, Src, Tag};
 use crate::error::{CommError, RankKilled};
@@ -297,7 +297,10 @@ impl PartReper {
     /// storage, e.g. the `apps::Mpi` adapter).
     pub(crate) fn waitall_mut(&self, reqs: &mut [&mut Request]) {
         let me = self.ctx.rank;
-        let mut last_progress = Instant::now();
+        // The wedge deadline runs on the fabric clock: virtual time in
+        // event mode, wall time in threaded mode.
+        let wedge_ns = WEDGE_DEADLINE.as_nanos() as u64;
+        let mut last_progress = self.ctx.empi_fabric.clock().now_ns();
         loop {
             // Opportunistically retire completed collective relays — the
             // overlap window for §V-C ends here at zero cost.
@@ -325,9 +328,10 @@ impl PartReper {
             match pass {
                 Ok(PassOutcome { complete: true, .. }) => return,
                 Ok(PassOutcome { progressed, .. }) => {
+                    let now = self.ctx.empi_fabric.clock().now_ns();
                     if progressed {
-                        last_progress = Instant::now();
-                    } else if last_progress.elapsed() >= WEDGE_DEADLINE {
+                        last_progress = now;
+                    } else if now.saturating_sub(last_progress) >= wedge_ns {
                         std::panic::panic_any(format!(
                             "protocol wedge: nonblocking batch stalled for {WEDGE_DEADLINE:?}"
                         ));
@@ -346,7 +350,7 @@ impl PartReper {
                     // Repair, then loop: the next pass re-resolves every
                     // stale request against the new generation.
                     self.error_handler();
-                    last_progress = Instant::now();
+                    last_progress = self.ctx.empi_fabric.clock().now_ns();
                 }
                 Err(OpError::Comm(CommError::Killed { rank })) => {
                     std::panic::panic_any(RankKilled { rank })

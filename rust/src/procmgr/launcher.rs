@@ -20,6 +20,7 @@ use crate::error::{CommError, JobError, JobInterrupted, RankKilled};
 use crate::fabric::{Fabric, ProcSet};
 use crate::metrics::{Counters, PhaseClock};
 use crate::ompi::{CommRegistry, FailureDetector};
+use crate::sched::Sched;
 
 /// Job-wide abort latch (MPI_Abort analogue): set once by the first rank
 /// that discovers an unrecoverable failure (computational process without a
@@ -136,6 +137,9 @@ impl<T> JobHandles<T> {
 /// Shared infrastructure for one job, pre-spawn.
 pub struct JobWorld {
     pub cfg: Arc<JobConfig>,
+    /// The job's execution-mode scheduler (`cfg.exec`): ranks, monitor
+    /// and injector all spawn through it, and both fabrics park on it.
+    pub sched: Arc<Sched>,
     pub procs: Arc<ProcSet>,
     pub empi_fabric: Arc<Fabric>,
     pub ompi_fabric: Arc<Fabric>,
@@ -157,8 +161,13 @@ impl JobWorld {
         let n = cfg.nprocs();
         let cluster = Cluster::new(n, cfg.cores_per_node);
         let procs = ProcSet::new(n);
-        let empi_fabric = Fabric::new_tuned("empi", procs.clone(), cfg.empi_net, cfg.coll);
-        let ompi_fabric = Fabric::new_tuned("ompi", procs.clone(), cfg.ompi_net, cfg.coll);
+        // One scheduler per job; both fabrics share it so virtual time is
+        // a single total order across EMPI and OMPI traffic.
+        let sched = Sched::new(cfg.exec);
+        let empi_fabric =
+            Fabric::new_clocked("empi", procs.clone(), cfg.empi_net, cfg.coll, sched.clone());
+        let ompi_fabric =
+            Fabric::new_clocked("ompi", procs.clone(), cfg.ompi_net, cfg.coll, sched.clone());
         let detector = FailureDetector::new();
         let registry = CommRegistry::new();
         let prte = PrteServer::start(cluster.clone());
@@ -170,6 +179,7 @@ impl JobWorld {
         let gc_ctx = ompi_fabric.alloc_ctx();
         Self {
             cfg,
+            sched,
             procs,
             empi_fabric,
             ompi_fabric,
@@ -232,9 +242,21 @@ where
     T: Send + 'static,
     F: Fn(RankCtx) -> Result<T, JobError> + Send + Sync + 'static,
 {
+    launch_world(JobWorld::build(cfg), main)
+}
+
+/// [`launch_job`] over a pre-built world — callers that need a handle on
+/// the infrastructure *before* any rank runs (e.g. the cross-mode
+/// equivalence tests arming the wire-schedule tap) build the
+/// [`JobWorld`] themselves and launch it here.
+pub fn launch_world<T, F>(world: JobWorld, main: F) -> JobHandles<T>
+where
+    T: Send + 'static,
+    F: Fn(RankCtx) -> Result<T, JobError> + Send + Sync + 'static,
+{
     install_quiet_unwind_hook();
-    let world = JobWorld::build(cfg);
-    let monitor = Monitor::start(
+    let monitor = Monitor::start_on(
+        world.sched.clone(),
         world.procs.clone(),
         world.detector.clone(),
         world.empi_server.clone(),
@@ -252,9 +274,9 @@ where
             let procs = world.procs.clone();
             let clock = ctx.clock.clone();
             let main = Arc::clone(&main);
-            std::thread::Builder::new()
-                .name(format!("rank-{rank}"))
-                .spawn(move || {
+            world
+                .sched
+                .spawn(&format!("rank-{rank}"), move || {
                     let result = catch_unwind(AssertUnwindSafe(|| main(ctx)));
                     clock.finish();
                     let outcome = match result {
@@ -303,10 +325,11 @@ where
                     }
                     outcome
                 })
-                .expect("spawn rank")
         })
         .collect();
 
+    // Event mode: nothing runs until the initial task set is complete.
+    world.sched.start();
     let outcomes: Vec<RankOutcome<T>> = handles
         .into_iter()
         .map(|h| h.join().expect("rank thread must not die unjoined"))

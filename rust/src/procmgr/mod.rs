@@ -25,6 +25,6 @@ pub mod monitor;
 pub mod servers;
 
 pub use cluster::Cluster;
-pub use launcher::{launch_job, JobAbort, JobHandles, RankCtx, RankOutcome};
+pub use launcher::{launch_job, launch_world, JobAbort, JobHandles, JobWorld, RankCtx, RankOutcome};
 pub use monitor::Monitor;
 pub use servers::{EmpiServer, HandshakeFile, PrteServer};

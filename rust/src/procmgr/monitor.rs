@@ -15,6 +15,7 @@ use std::time::Duration;
 use super::servers::EmpiServer;
 use crate::fabric::ProcSet;
 use crate::ompi::FailureDetector;
+use crate::sched::Sched;
 
 /// Detection latency: how often PRTEDs "receive SIGCHLD". Real clusters see
 /// sub-millisecond local detection and multi-ms propagation; one combined
@@ -27,36 +28,47 @@ pub struct Monitor {
 }
 
 impl Monitor {
-    /// Start the pump. It runs until [`Monitor::stop`] (or drop).
+    /// Start the pump on a private threaded clock. It runs until
+    /// [`Monitor::stop`] (or drop).
     pub fn start(
+        procs: Arc<ProcSet>,
+        detector: Arc<FailureDetector>,
+        empi_server: Arc<EmpiServer>,
+    ) -> Self {
+        Self::start_on(Sched::threaded(), procs, detector, empi_server)
+    }
+
+    /// Start the pump as a task of `sched`, so in event mode the detect
+    /// tick is a virtual-clock timer and detection latency is
+    /// deterministic instead of host-load-dependent.
+    pub fn start_on(
+        sched: Arc<Sched>,
         procs: Arc<ProcSet>,
         detector: Arc<FailureDetector>,
         empi_server: Arc<EmpiServer>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let handle = std::thread::Builder::new()
-            .name("prted-monitor".into())
-            .spawn(move || {
-                let mut last_epoch = 0;
-                while !stop2.load(Ordering::Relaxed) {
-                    let epoch = procs.epoch();
-                    if epoch != last_epoch {
-                        last_epoch = epoch;
-                        // PRTED observed exits → PRRTE propagates → every
-                        // PMIx client (the shared detector) learns.
-                        let dead = procs.dead_ranks();
-                        detector.publish_many(&dead);
-                        // The EMPI server also gets its SIGCHLDs — the shim
-                        // decides whether it reacts.
-                        empi_server.waitpid_cycle(&procs);
-                    }
-                    std::thread::sleep(DETECT_TICK);
+        let sched2 = sched.clone();
+        let handle = sched.spawn("prted-monitor", move || {
+            let mut last_epoch = 0;
+            while !stop2.load(Ordering::Relaxed) {
+                let epoch = procs.epoch();
+                if epoch != last_epoch {
+                    last_epoch = epoch;
+                    // PRTED observed exits → PRRTE propagates → every
+                    // PMIx client (the shared detector) learns.
+                    let dead = procs.dead_ranks();
+                    detector.publish_many(&dead);
+                    // The EMPI server also gets its SIGCHLDs — the shim
+                    // decides whether it reacts.
+                    empi_server.waitpid_cycle(&procs);
                 }
-                // Final sweep so post-join state is consistent.
-                detector.publish_many(&procs.dead_ranks());
-            })
-            .expect("spawn monitor");
+                sched2.sleep(DETECT_TICK);
+            }
+            // Final sweep so post-join state is consistent.
+            detector.publish_many(&procs.dead_ranks());
+        });
         Self {
             stop,
             handle: Some(handle),

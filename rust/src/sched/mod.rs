@@ -1,0 +1,526 @@
+//! Execution-mode scheduler: the `Clock`/`Executor` seam between the
+//! threaded fabric and the discrete-event virtual-clock world (DESIGN.md
+//! §8).
+//!
+//! Every blocking point in the runtime — `Fabric::wait_new_mail`, the
+//! rendezvous gate behind `SendHandle`, the request engine's park loop,
+//! OMPI consensus parking, the monitor's detect tick, the fault
+//! injector's Weibull sleeps — is already a *bounded poll*: park for a
+//! tick, re-check a predicate, repeat. [`Sched`] virtualizes exactly
+//! that tick and nothing else:
+//!
+//! * **Threaded mode** (default): every adapter call degrades to the
+//!   identical `Condvar::wait_timeout` / `thread::sleep` /
+//!   `Instant`-arithmetic the call site used before, so the fidelity
+//!   baseline is behaviour-preserving by construction.
+//! * **Event mode**: ranks are cooperatively scheduled tasks. Exactly
+//!   one task runs at a time (a run token passed through per-task
+//!   permits); a park becomes a timer `(deadline_ns, seq, task)` in a
+//!   binary heap, and when no task is ready the virtual clock jumps to
+//!   the earliest deadline. No notify path exists — wakeups are purely
+//!   timer-driven, so the lost-wakeup bug class is impossible and the
+//!   schedule is a deterministic function of the task set alone.
+//!
+//! Tasks are still OS threads (small stacks, [`TASK_STACK_BYTES`]), so
+//! rank code keeps its natural blocking style; the cooperative token
+//! means one process comfortably hosts thousands of ranks. Threads that
+//! are *not* registered tasks (the main thread, PJRT engine threads)
+//! fall back to real waits — they interact with the virtual world only
+//! through atomics and joins, never through its clock.
+
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How ranks execute: one OS thread per rank parked on real condvars
+/// (`Threaded`, the fidelity baseline) or cooperatively scheduled tasks
+/// on a virtual clock (`Event`), selected by the `exec.mode` config key
+/// or the `PARTREPER_EXEC` environment variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Threaded,
+    Event,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "threaded" => Some(ExecMode::Threaded),
+            "event" => Some(ExecMode::Event),
+            _ => None,
+        }
+    }
+
+    /// Default mode, overridable by `PARTREPER_EXEC=event` (how ci.sh
+    /// runs the whole tier-1 suite under the event scheduler).
+    pub fn from_env() -> Self {
+        match std::env::var("PARTREPER_EXEC") {
+            Ok(v) => Self::parse(&v).unwrap_or(ExecMode::Threaded),
+            Err(_) => ExecMode::Threaded,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Threaded => "threaded",
+            ExecMode::Event => "event",
+        }
+    }
+}
+
+/// Cap on a single event-mode park. Callers are predicate loops, so a
+/// long timeout sliced into capped parks is semantically identical —
+/// and no task can oversleep an arrival by more than this much virtual
+/// time, since event mode has no notify path to cut a park short.
+const EVENT_PARK_CAP: Duration = Duration::from_millis(1);
+
+/// Stack size for event-mode task threads. Virtual address space only;
+/// 16k tasks cost 16 GiB of *reservation*, pennies on 64-bit.
+pub const TASK_STACK_BYTES: usize = 1 << 20;
+
+/// One run token slot: granted by the scheduler, consumed by the task.
+struct Permit {
+    granted: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Permit {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            granted: Mutex::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn grant(&self) {
+        let mut g = self.granted.lock().unwrap();
+        *g = true;
+        self.cv.notify_one();
+    }
+
+    fn acquire(&self) {
+        let mut g = self.granted.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g = false;
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum TaskState {
+    Ready,
+    Running,
+    Parked,
+    Done,
+}
+
+/// Event-loop state. Exactly one task is `Running` (or the token is in
+/// flight to the next grantee) at any instant; every `Parked` task owns
+/// exactly one timer, so the heap never starves a sleeper.
+struct Core {
+    now_ns: u64,
+    seq: u64,
+    timers: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    ready: VecDeque<usize>,
+    tasks: Vec<TaskState>,
+    permits: Vec<Arc<Permit>>,
+    started: bool,
+    /// Scheduling decisions taken (grants).
+    events: u64,
+    /// Total virtual time the clock has jumped forward.
+    advanced_ns: u64,
+    /// High-water mark of the ready queue.
+    ready_peak: u64,
+}
+
+/// Scheduler counters for the run summary: `(events_processed,
+/// virtual_ns_advanced, max_ready_queue_depth)`.
+pub type SchedSnapshot = (u64, u64, u64);
+
+static NEXT_SCHED_ID: AtomicUsize = AtomicUsize::new(1);
+
+thread_local! {
+    /// `(sched id, task id)` of the task this thread runs, if any.
+    static CURRENT: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+/// The clock + executor for one job world. Threaded mode is stateless
+/// glue over the std primitives; event mode owns the task registry and
+/// the virtual clock.
+pub struct Sched {
+    mode: ExecMode,
+    id: usize,
+    epoch: Instant,
+    core: Mutex<Core>,
+}
+
+impl Sched {
+    pub fn new(mode: ExecMode) -> Arc<Self> {
+        Arc::new(Self {
+            mode,
+            id: NEXT_SCHED_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            core: Mutex::new(Core {
+                now_ns: 0,
+                seq: 0,
+                timers: BinaryHeap::new(),
+                ready: VecDeque::new(),
+                tasks: Vec::new(),
+                permits: Vec::new(),
+                started: false,
+                events: 0,
+                advanced_ns: 0,
+                ready_peak: 0,
+            }),
+        })
+    }
+
+    /// A fresh threaded-mode clock — the drop-in for every call site
+    /// that predates execution modes.
+    pub fn threaded() -> Arc<Self> {
+        Self::new(ExecMode::Threaded)
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn is_event(&self) -> bool {
+        self.mode == ExecMode::Event
+    }
+
+    /// Monotone nanoseconds: wall-clock since this scheduler's creation
+    /// (threaded) or the virtual clock (event).
+    pub fn now_ns(&self) -> u64 {
+        match self.mode {
+            ExecMode::Threaded => self.epoch.elapsed().as_nanos() as u64,
+            ExecMode::Event => self.core.lock().unwrap().now_ns,
+        }
+    }
+
+    /// The task id of the calling thread, if it is one of ours.
+    fn my_task(&self) -> Option<usize> {
+        CURRENT.with(|c| c.get()).and_then(|(sid, task)| (sid == self.id).then_some(task))
+    }
+
+    /// Scheduler counters (zeros in threaded mode).
+    pub fn snapshot(&self) -> SchedSnapshot {
+        if self.mode == ExecMode::Threaded {
+            return (0, 0, 0);
+        }
+        let core = self.core.lock().unwrap();
+        (core.events, core.advanced_ns, core.ready_peak)
+    }
+
+    // ---------------------------------------------------------- executor
+
+    /// Spawn a rank/service body. Threaded: a plain named OS thread.
+    /// Event: a task thread that blocks until the scheduler grants it
+    /// the run token — nothing runs before [`Sched::start`].
+    pub fn spawn<T: Send + 'static>(
+        self: &Arc<Self>,
+        name: &str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> JoinHandle<T> {
+        let builder = std::thread::Builder::new().name(name.to_string());
+        match self.mode {
+            ExecMode::Threaded => builder.spawn(f).expect("spawn thread"),
+            ExecMode::Event => {
+                let me = {
+                    let mut core = self.core.lock().unwrap();
+                    let me = core.tasks.len();
+                    core.tasks.push(TaskState::Ready);
+                    core.permits.push(Permit::new());
+                    core.ready.push_back(me);
+                    core.ready_peak = core.ready_peak.max(core.ready.len() as u64);
+                    me
+                };
+                let sched = self.clone();
+                builder
+                    .stack_size(TASK_STACK_BYTES)
+                    .spawn(move || {
+                        let permit = {
+                            let core = sched.core.lock().unwrap();
+                            core.permits[me].clone()
+                        };
+                        permit.acquire();
+                        CURRENT.with(|c| c.set(Some((sched.id, me))));
+                        let out = catch_unwind(AssertUnwindSafe(f));
+                        {
+                            let mut core = sched.core.lock().unwrap();
+                            core.tasks[me] = TaskState::Done;
+                            sched.dispatch_locked(&mut core);
+                        }
+                        match out {
+                            Ok(v) => v,
+                            Err(p) => resume_unwind(p),
+                        }
+                    })
+                    .expect("spawn task thread")
+            }
+        }
+    }
+
+    /// Release the first task (event mode; no-op threaded). Call once,
+    /// after the initial task set is spawned.
+    pub fn start(&self) {
+        if self.mode != ExecMode::Event {
+            return;
+        }
+        let mut core = self.core.lock().unwrap();
+        if !core.started {
+            core.started = true;
+            self.dispatch_locked(&mut core);
+        }
+    }
+
+    /// Hand the run token to the next runnable task: ready queue first
+    /// (FIFO — spawn/wake order), else the earliest timer, advancing the
+    /// virtual clock to its deadline. Caller holds the core lock and has
+    /// already retired/parked the current holder, so granting here keeps
+    /// the single-token invariant.
+    fn dispatch_locked(&self, core: &mut Core) {
+        core.events += 1;
+        if let Some(t) = core.ready.pop_front() {
+            core.tasks[t] = TaskState::Running;
+            core.permits[t].grant();
+            return;
+        }
+        while let Some(&Reverse((deadline, _, t))) = core.timers.peek() {
+            core.timers.pop();
+            if core.tasks[t] != TaskState::Parked {
+                continue;
+            }
+            if deadline > core.now_ns {
+                core.advanced_ns += deadline - core.now_ns;
+                core.now_ns = deadline;
+            }
+            core.tasks[t] = TaskState::Running;
+            core.permits[t].grant();
+            return;
+        }
+        // Nothing runnable: every task is Done (or none were spawned).
+        // Parked implies a timer, so this cannot strand a sleeper.
+    }
+
+    /// Park task `me` until virtual `deadline`, yielding the token.
+    fn park_until_locked(&self, me: usize, deadline: u64) {
+        let permit = {
+            let mut core = self.core.lock().unwrap();
+            // Always move time forward: a zero-length park still yields
+            // (and re-acquires) deterministically instead of spinning.
+            let deadline = deadline.max(core.now_ns + 1);
+            core.seq += 1;
+            let seq = core.seq;
+            core.timers.push(Reverse((deadline, seq, me)));
+            core.tasks[me] = TaskState::Parked;
+            let permit = core.permits[me].clone();
+            self.dispatch_locked(&mut core);
+            permit
+        };
+        permit.acquire();
+    }
+
+    // ------------------------------------------------------------- clock
+
+    /// Sleep for `dur`: real sleep (threaded / foreign threads), virtual
+    /// park (event-mode tasks).
+    pub fn sleep(&self, dur: Duration) {
+        match (self.mode, self.my_task()) {
+            (ExecMode::Event, Some(me)) => {
+                let now = self.core.lock().unwrap().now_ns;
+                self.park_until_locked(me, now.saturating_add(dur.as_nanos() as u64));
+            }
+            _ => std::thread::sleep(dur),
+        }
+    }
+
+    /// Wait until the clock reaches `target_ns`. Threaded keeps the
+    /// fabric's historical busy-spin (NIC settle fidelity); event-mode
+    /// tasks park, turning wire time into pure virtual time.
+    pub fn wait_until_ns(&self, target_ns: u64) {
+        match (self.mode, self.my_task()) {
+            (ExecMode::Event, Some(me)) => {
+                if self.core.lock().unwrap().now_ns < target_ns {
+                    self.park_until_locked(me, target_ns);
+                }
+            }
+            (ExecMode::Event, None) => {
+                // A foreign thread settling against the virtual clock:
+                // yield real time until the task world catches up.
+                while self.now_ns() < target_ns {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+            _ => {
+                while self.now_ns() < target_ns {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+
+    /// The universal blocking-point adapter: every `cv.wait_timeout`
+    /// park in a predicate loop routes through here. Threaded mode is
+    /// the exact historical wait; event mode drops the guard, parks on a
+    /// (capped) virtual timer — senders never notify across the mode
+    /// boundary — and re-locks. Callers re-check their predicate on
+    /// return, which is what makes the capped slice legal.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        lock: &'a Mutex<T>,
+        guard: MutexGuard<'a, T>,
+        cv: &Condvar,
+        dur: Duration,
+    ) -> MutexGuard<'a, T> {
+        match (self.mode, self.my_task()) {
+            (ExecMode::Event, Some(me)) => {
+                drop(guard);
+                let slice = dur.min(EVENT_PARK_CAP);
+                let now = self.core.lock().unwrap().now_ns;
+                self.park_until_locked(me, now.saturating_add(slice.as_nanos() as u64));
+                lock.lock().unwrap()
+            }
+            (ExecMode::Event, None) => cv.wait_timeout(guard, dur.min(EVENT_PARK_CAP)).unwrap().0,
+            _ => cv.wait_timeout(guard, dur).unwrap().0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threaded_clock_is_monotone_wall_time() {
+        let s = Sched::threaded();
+        let a = s.now_ns();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = s.now_ns();
+        assert!(b > a, "clock must advance: {a} -> {b}");
+        assert_eq!(s.snapshot(), (0, 0, 0));
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("threaded"), Some(ExecMode::Threaded));
+        assert_eq!(ExecMode::parse("event"), Some(ExecMode::Event));
+        assert_eq!(ExecMode::parse("bogus"), None);
+        assert_eq!(ExecMode::Event.name(), "event");
+    }
+
+    #[test]
+    fn event_tasks_interleave_on_virtual_time() {
+        let s = Sched::new(ExecMode::Event);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for id in 0..3usize {
+            let s2 = s.clone();
+            let log2 = log.clone();
+            handles.push(s.spawn(&format!("task-{id}"), move || {
+                for step in 0..4 {
+                    log2.lock().unwrap().push((id, step));
+                    s2.sleep(Duration::from_micros(100));
+                }
+            }));
+        }
+        s.start();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), 12);
+        // Round-robin: equal sleeps + FIFO seq order keep spawn order.
+        let first_round: Vec<usize> = log[0..3].iter().map(|&(id, _)| id).collect();
+        assert_eq!(first_round, vec![0, 1, 2]);
+        let (events, advanced, _) = s.snapshot();
+        assert!(events >= 12, "events {events}");
+        assert!(advanced >= 300, "virtual time advanced {advanced}");
+        // Virtual time moved ~400us regardless of wall speed.
+        assert!(s.now_ns() >= 4 * 100_000 - EVENT_PARK_CAP.as_nanos() as u64);
+    }
+
+    #[test]
+    fn event_schedule_is_deterministic() {
+        let run = || {
+            let s = Sched::new(ExecMode::Event);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let mut handles = Vec::new();
+            for id in 0..4usize {
+                let s2 = s.clone();
+                let log2 = log.clone();
+                handles.push(s.spawn(&format!("t{id}"), move || {
+                    for step in 0..5 {
+                        log2.lock().unwrap().push((id, step, s2.now_ns()));
+                        // Unequal ticks exercise heap ordering.
+                        s2.sleep(Duration::from_micros(50 + 30 * id as u64));
+                    }
+                }));
+            }
+            s.start();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let order = log.lock().unwrap().clone();
+            (order, s.snapshot())
+        };
+        assert_eq!(run(), run(), "same task set must replay identically");
+    }
+
+    #[test]
+    fn adapter_wait_times_out_in_both_modes() {
+        for mode in [ExecMode::Threaded, ExecMode::Event] {
+            let s = Sched::new(mode);
+            let state: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+            let s2 = s.clone();
+            let st2 = state.clone();
+            let h = s.spawn("waiter", move || {
+                let (m, cv) = &*st2;
+                let mut g = m.lock().unwrap();
+                let mut spins = 0u32;
+                while !*g {
+                    g = s2.wait_timeout(m, g, cv, Duration::from_micros(200));
+                    spins += 1;
+                    if spins > 10 {
+                        // Nobody will ever flip the flag: the capped,
+                        // notify-free park loop still makes progress.
+                        return spins;
+                    }
+                }
+                spins
+            });
+            s.start();
+            let spins = h.join().unwrap();
+            assert!(spins > 10, "mode {mode:?} wedged at {spins}");
+        }
+    }
+
+    #[test]
+    fn tasks_spawned_mid_run_get_scheduled() {
+        let s = Sched::new(ExecMode::Event);
+        let hit = Arc::new(Mutex::new(false));
+        let s2 = s.clone();
+        let hit2 = hit.clone();
+        let h = s.spawn("parent", move || {
+            let hit3 = hit2.clone();
+            let child = s2.spawn("child", move || {
+                *hit3.lock().unwrap() = true;
+            });
+            // Parent parks; token flows to the child.
+            let s3 = s2.clone();
+            while !*hit2.lock().unwrap() {
+                s3.sleep(Duration::from_micros(100));
+            }
+            child.join().unwrap();
+        });
+        s.start();
+        h.join().unwrap();
+        assert!(*hit.lock().unwrap());
+    }
+}

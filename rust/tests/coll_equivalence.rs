@@ -18,6 +18,7 @@ use partreper::fabric::{
     AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, Fabric, NetModel, ProcSet,
     RootedAlg,
 };
+use partreper::sched::{ExecMode, Sched};
 
 /// Run `f(rank, comm)` on `n` threads over a fresh world comm on a fabric
 /// with the given model + collective overrides.
@@ -39,6 +40,35 @@ fn run_ranks<T: Send + 'static>(
         })
         .collect();
     handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// [`run_ranks`] under the event-driven scheduler: ranks are cooperative
+/// tasks dispatched one at a time by the virtual clock, which is what lets
+/// these cases scale well past the threaded suite's n=17.
+fn run_ranks_event<T: Send + 'static>(
+    n: usize,
+    model: NetModel,
+    coll: CollTuning,
+    f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let procs = ProcSet::new(n);
+    let sched = Sched::new(ExecMode::Event);
+    let fabric = Fabric::new_clocked("coll-eq-ev", procs, model, coll, sched.clone());
+    let ctx = fabric.alloc_ctx();
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let f = f.clone();
+            sched.spawn(&format!("rank-{r}"), move || f(r, Comm::world(fabric, ctx, r)))
+        })
+        .collect();
+    // Nothing runs until the full task set exists.
+    sched.start();
+    let out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let (events, _, _) = sched.snapshot();
+    assert!(events > 0, "event mode must actually schedule");
+    out
 }
 
 /// Rank `r`'s reduction input: `elems` elements, exact in every dtype.
@@ -269,6 +299,76 @@ fn gather_scatter_variants_byte_identical() {
                 assert_eq!(got, &vec![r as u8; r % 4 + 1], "scatter {alg:?} n={n}");
             }
         }
+    }
+}
+
+#[test]
+fn event_mode_allreduce_large_worlds_match_naive_baseline() {
+    // Comm sizes far past the threaded suite's 17 — power of two, one past
+    // it, and one past 256 — runnable only because event-mode ranks are
+    // cooperative tasks, not live OS-thread contenders.
+    for (n, alg) in [
+        (64usize, AllreduceAlg::RecursiveDoubling),
+        (65, AllreduceAlg::Ring),
+        (257, AllreduceAlg::RecursiveDoubling),
+    ] {
+        let tuning = CollTuning {
+            allreduce: Some(alg),
+            ..Default::default()
+        };
+        let out = run_ranks_event(n, NetModel::instant(), tuning, move |r, comm| {
+            coll::allreduce(
+                &comm,
+                DType::U64,
+                ReduceOp::Sum,
+                &reduce_input(DType::U64, n, r, 3),
+            )
+            .unwrap()
+        });
+        let want = naive_reduce(DType::U64, ReduceOp::Sum, n, 3);
+        for (r, got) in out.iter().enumerate() {
+            assert_eq!(got, &want, "event allreduce {alg:?} n={n} rank={r}");
+        }
+    }
+}
+
+#[test]
+fn event_mode_bcast_and_allgather_large_worlds() {
+    for n in [64usize, 65] {
+        let out = run_ranks_event(
+            n,
+            NetModel::instant(),
+            CollTuning {
+                allgather: Some(AllgatherAlg::Ring),
+                ..Default::default()
+            },
+            move |r, comm| coll::allgather(&comm, &[r as u8, (n - r) as u8]).unwrap(),
+        );
+        for per_rank in &out {
+            assert_eq!(per_rank.len(), n);
+            for (s, b) in per_rank.iter().enumerate() {
+                assert_eq!(b, &vec![s as u8, (n - s) as u8], "event allgather n={n}");
+            }
+        }
+    }
+    let n = 257usize;
+    let payload: Vec<u8> = (0..997).map(|i| (i * 31 % 251) as u8).collect();
+    let want = payload.clone();
+    let out = run_ranks_event(
+        n,
+        NetModel::instant(),
+        CollTuning {
+            bcast: Some(BcastAlg::Binomial),
+            ..Default::default()
+        },
+        move |r, comm| {
+            let mut data = if r == 0 { want.clone() } else { Vec::new() };
+            coll::bcast(&comm, 0, &mut data).unwrap();
+            data
+        },
+    );
+    for (r, got) in out.iter().enumerate() {
+        assert_eq!(got, &payload, "event bcast n={n} r={r}");
     }
 }
 

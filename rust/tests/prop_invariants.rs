@@ -8,12 +8,10 @@ use partreper::partreper::{Channel, Layout};
 use partreper::procimg::{transfer, ProcessImage};
 use partreper::testutil::{check, gen};
 
-/// Layout/repair: for ANY sequence of survivable failures, the repaired
-/// layout keeps the §V invariants.
-#[test]
-fn prop_repair_preserves_layout_invariants() {
-    check("repair invariants", 200, |rng| {
-        let ncomp = gen::usize_in(rng, 1, 12);
+/// One randomized repair scenario at a given world size — shared by the
+/// small-world sweep and the large-world (n > 17) cases.
+fn repair_rounds(rng: &mut partreper::util::Xoshiro256, ncomp: usize) {
+    {
         let nrep = gen::usize_in(rng, 0, ncomp);
         let nspares = gen::usize_in(rng, 0, 3);
         let mut layout = Layout::initial_with_spares(ncomp, nrep, nspares);
@@ -97,6 +95,28 @@ fn prop_repair_preserves_layout_invariants() {
                 }
             }
         }
+    }
+}
+
+/// Layout/repair: for ANY sequence of survivable failures, the repaired
+/// layout keeps the §V invariants.
+#[test]
+fn prop_repair_preserves_layout_invariants() {
+    check("repair invariants", 200, |rng| {
+        let ncomp = gen::usize_in(rng, 1, 12);
+        repair_rounds(rng, ncomp);
+    });
+}
+
+/// The same §V invariants well past the small-world sweep: the event-mode
+/// scale targets (n ∈ {64, 65, 257}) exercise the repair algebra at sizes
+/// where dense-rank bookkeeping bugs (off-by-one at powers of two, mirror
+/// reindexing) actually show up.
+#[test]
+fn prop_repair_preserves_layout_invariants_large_worlds() {
+    check("repair invariants (large)", 12, |rng| {
+        let ncomp = *rng.choose(&[64usize, 65, 257]);
+        repair_rounds(rng, ncomp);
     });
 }
 
@@ -182,6 +202,47 @@ fn prop_single_survivable_failure_preserves_results() {
             assert!(r.was_interrupted(), "errors: {:?}", r.errors);
             assert_eq!(rdeg, 50.0, "100% replication must survive one kill");
         }
+    });
+}
+
+/// The survivable-kill property under the event-driven scheduler: with
+/// 100% replication, ANY single virtual-clock-timed kill still yields the
+/// failure-free checksum, and the run reports event-mode scheduling.
+#[test]
+fn prop_event_mode_survivable_failure_preserves_results() {
+    use partreper::apps::AppKind;
+    use partreper::harness::{run_app, Backend};
+    use partreper::sched::ExecMode;
+
+    // Reference checksum, failure-free, same mode.
+    let mut cfg0 = JobConfig::new(4, 0.0);
+    cfg0.exec = ExecMode::Event;
+    let want = run_app(&cfg0, AppKind::Ep, Backend::PartReper, 6, None)
+        .checksum
+        .unwrap();
+
+    check("event-mode survivable kill keeps results", 6, |rng| {
+        let mut cfg = JobConfig::new(4, 100.0);
+        cfg.exec = ExecMode::Event;
+        cfg.faults.enabled = true;
+        cfg.faults.weibull_shape = 1.0;
+        // Virtual milliseconds: parks advance the clock in <=1ms slices,
+        // so this lands injections inside the run's virtual lifetime.
+        cfg.faults.weibull_scale_s = 0.002;
+        cfg.faults.max_failures = 1;
+        cfg.faults.seed = rng.next_u64();
+        let r = run_app(&cfg, AppKind::Ep, Backend::PartReper, 6, None);
+        assert!(
+            r.completed(),
+            "100% replication must survive one kill: {:?}",
+            r.errors
+        );
+        assert_eq!(r.exec_mode, "event");
+        let got = r.checksum.unwrap();
+        assert!(
+            (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+            "checksum drift after event-mode failure: {got} vs {want}"
+        );
     });
 }
 

@@ -1,0 +1,157 @@
+//! Cross-mode schedule equivalence: the event-driven scheduler must be a
+//! *faithful* execution mode, not merely a plausible one. The anchor
+//! (ISSUE 6) is byte-identical **wire schedules**: a job mixing p2p rings,
+//! crossover collectives and one replica promotion must enqueue the same
+//! messages, in the same per-channel order, with the same payloads, whether
+//! the ranks run as preemptive OS threads or as cooperatively scheduled
+//! tasks under the virtual clock.
+//!
+//! The recipe that makes the comparison well-defined in *both* modes:
+//!
+//! 1. run the mixed workload, then quiesce the wire with a barrier;
+//! 2. the victim (fabric rank 0 — a replicated comp under rdegree=50)
+//!    self-poisons and dies on its next fabric op, so the failure lands on
+//!    an idle fabric;
+//! 3. survivors wait **off-wire** (polling the ULFM detector through the
+//!    fabric clock) until the failure is known, so the next guarded
+//!    collective raises `ProcFailed` *before* any EMPI send on every rank
+//!    (`failure_check_stride = 1`), in both modes;
+//! 4. the handler's shrink + promotion rebuilds the worlds on
+//!    deterministically derived context ids, and the post-repair traffic
+//!    is compared byte-for-byte via the fabric's wire tap.
+//!
+//! Only the EMPI fabric is tapped: OMPI carries detector/consensus control
+//! chatter whose volume is legitimately timing-dependent.
+
+use std::time::Duration;
+
+use partreper::config::JobConfig;
+use partreper::empi::{DType, ReduceOp};
+use partreper::error::JobError;
+use partreper::metrics::Counters;
+use partreper::partreper::replicate::BlobState;
+use partreper::partreper::{PartReper, Start};
+use partreper::procmgr::{launch_world, JobWorld, RankOutcome};
+use partreper::sched::ExecMode;
+use partreper::util::{u64s_from_bytes, u64s_to_bytes};
+
+/// Fabric rank 0 is comp 0's primary, which owns a replica whenever
+/// nrep >= 1 — dying here exercises the promotion path, not interruption.
+const VICTIM: usize = 0;
+const ITERS: u64 = 3;
+
+fn job_cfg(ncomp: usize, mode: ExecMode) -> JobConfig {
+    let mut cfg = JobConfig::new(ncomp, 50.0);
+    cfg.exec = mode;
+    cfg.seed = 42;
+    // Guard every op: the first post-failure collective must observe the
+    // failure before sending, at the same program point in both modes.
+    cfg.failure_check_stride = 1;
+    cfg
+}
+
+/// Run the mixed p2p/collective/promotion job under `mode` and return the
+/// EMPI wire schedule, every survivor's checksum (sorted), and the
+/// promotion count.
+fn schedule_for(ncomp: usize, mode: ExecMode) -> (String, Vec<u64>, u64) {
+    let cfg = job_cfg(ncomp, mode);
+    let world = JobWorld::build(&cfg);
+    world.empi_fabric.tap_start();
+    let report = launch_world(world, move |ctx| -> Result<Option<u64>, JobError> {
+        // `PartReper::init` consumes the ctx: grab the handles the failure
+        // choreography needs first.
+        let me = ctx.rank;
+        let procs = ctx.procs.clone();
+        let detector = ctx.detector.clone();
+        let clock = ctx.empi_fabric.clock().clone();
+        let pr = PartReper::init(ctx);
+        match pr.start::<BlobState>() {
+            Start::Retired => return Ok(None),
+            Start::Fresh => {}
+            Start::Restored(_) => {
+                return Err(JobError::Runtime("unexpected cold restore".into()));
+            }
+        }
+        let (r, n) = (pr.rank(), pr.size());
+        let mut acc: u64 = r as u64 + 1;
+        // Phase 1: p2p ring + crossover collective, repeated.
+        for iter in 0..ITERS {
+            let right = (r + 1) % n;
+            let left = (r + n - 1) % n;
+            let got = pr.sendrecv(right, left, 10 + iter as i64, &acc.to_le_bytes());
+            let bytes: [u8; 8] = got.try_into().expect("ring payload is 8 bytes");
+            acc = acc.wrapping_add(u64::from_le_bytes(bytes));
+            let sum = pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]));
+            acc ^= u64s_from_bytes(&sum)[0];
+        }
+        // Quiesce so the failure lands on an idle fabric in both modes.
+        pr.barrier();
+        if me == VICTIM {
+            procs.poison(me);
+            // The next fabric op notices the poison and unwinds RankKilled
+            // before enqueueing anything — no stray tap records.
+            pr.barrier();
+            unreachable!("poisoned rank must not survive a fabric op");
+        }
+        // Survivors wait OFF-WIRE until ULFM knows the failure. The wait
+        // must tick through the fabric clock: under event mode a raw
+        // std::thread::sleep would stall the whole virtual world.
+        while !detector.is_known_failed(VICTIM) {
+            clock.sleep(Duration::from_micros(200));
+        }
+        // Phase 2: guarded collectives across the promotion.
+        let sum = pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]));
+        acc ^= u64s_from_bytes(&sum)[0];
+        let root = 1 % n;
+        let mut blob = u64s_to_bytes(&[if r == root { acc } else { 0 }]);
+        pr.bcast(root, &mut blob);
+        acc ^= u64s_from_bytes(&blob)[0];
+        pr.finalize();
+        Ok(Some(acc))
+    });
+    let mut sums = Vec::new();
+    let mut killed = 0;
+    for o in &report.outcomes {
+        match o {
+            RankOutcome::Done(Some(v)) => sums.push(*v),
+            RankOutcome::Done(None) => {}
+            RankOutcome::Killed => killed += 1,
+            other => panic!("{mode:?} ncomp={ncomp}: unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(killed, 1, "{mode:?} ncomp={ncomp}: exactly the victim dies");
+    sums.sort_unstable();
+    let promotions = Counters::get(&report.total_counters().promotions);
+    (report.empi_fabric.tap_dump(), sums, promotions)
+}
+
+fn assert_modes_agree(ncomp: usize) {
+    let (dump_t, sums_t, promo_t) = schedule_for(ncomp, ExecMode::Threaded);
+    let (dump_e, sums_e, promo_e) = schedule_for(ncomp, ExecMode::Event);
+    assert!(promo_t >= 1, "threaded ncomp={ncomp}: promotion must fire");
+    assert!(promo_e >= 1, "event ncomp={ncomp}: promotion must fire");
+    assert!(!dump_t.is_empty(), "tap must have captured EMPI traffic");
+    assert_eq!(
+        sums_t, sums_e,
+        "ncomp={ncomp}: survivor checksums diverged across modes"
+    );
+    assert_eq!(
+        dump_t, dump_e,
+        "ncomp={ncomp}: wire schedules diverged across modes"
+    );
+}
+
+#[test]
+fn wire_schedule_identical_across_modes_n5() {
+    assert_modes_agree(5);
+}
+
+#[test]
+fn wire_schedule_identical_across_modes_n9() {
+    assert_modes_agree(9);
+}
+
+#[test]
+fn wire_schedule_identical_across_modes_n17() {
+    assert_modes_agree(17);
+}
