@@ -15,6 +15,7 @@
 use std::io::Write;
 
 use partreper::config::JobConfig;
+use partreper::obs::Hist;
 use partreper::runtime::ComputeEngine;
 use partreper::util::Summary;
 
@@ -66,21 +67,40 @@ impl BenchReport {
     }
 
     /// Record one case from raw samples (seconds or any consistent unit).
+    /// Besides the scalar summary (p50 = median, p99, ...), each case
+    /// carries a compact log2 distribution — `[bucket, count]` pairs from
+    /// the runtime's own [`Hist`], with seconds scaled to integer ns so
+    /// the buckets are meaningful.
     pub fn case(&mut self, label: &str, unit: &str, s: &Summary) {
         let json_safe = |s: &str| s.chars().all(|c| c != '"' && c != '\\' && c >= ' ');
         assert!(
             json_safe(label) && json_safe(unit),
             "labels must be JSON-safe (no quotes, backslashes, or control chars)"
         );
+        let scale = if unit == "s" { 1e9 } else { 1.0 };
+        let h = Hist::new();
+        for &x in s.samples() {
+            if x.is_finite() && x >= 0.0 {
+                h.record((x * scale) as u64);
+            }
+        }
+        let hist: Vec<String> = h
+            .nonzero_buckets()
+            .iter()
+            .map(|&(b, c)| format!("[{b}, {c}]"))
+            .collect();
         self.cases.push(format!(
             "    {{\"case\": \"{label}\", \"unit\": \"{unit}\", \"n\": {}, \
-             \"median\": {}, \"p99\": {}, \"mean\": {}, \"min\": {}, \"max\": {}}}",
+             \"median\": {}, \"p50\": {}, \"p99\": {}, \"mean\": {}, \"min\": {}, \"max\": {}, \
+             \"hist_log2\": [{}]}}",
             s.n(),
+            json_f64(s.median()),
             json_f64(s.median()),
             json_f64(s.percentile(99.0)),
             json_f64(s.mean()),
             json_f64(s.min()),
             json_f64(s.max()),
+            hist.join(", "),
         ));
     }
 

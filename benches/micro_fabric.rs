@@ -11,6 +11,8 @@ use std::time::Instant;
 
 use partreper::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
 use partreper::fabric::{Envelope, Fabric, MatchSpec, NetModel, ProcSet};
+use partreper::obs::JobObs;
+use partreper::sched::Sched;
 use partreper::util::{f32s_to_bytes, Summary};
 
 fn p2p_roundtrip(model: NetModel, bytes: usize, iters: usize) -> f64 {
@@ -156,6 +158,35 @@ fn linear_match_ns(fill: &[Envelope], drain: &[MatchSpec], reps: usize) -> f64 {
     total / (reps * drain.len()) as f64 * 1e9
 }
 
+/// Overhead of the *disabled* tracer hooks that now sit on the fabric hot
+/// path: each hook is one relaxed `AtomicBool` load (the `tap_on`
+/// pattern), so its per-call cost must be noise — budgeted at <= 1% of
+/// the cheapest fabric op it decorates (a zero-byte EMPI one-way send).
+fn tracer_overhead_bench(report: &mut common::BenchReport) {
+    common::hr("Micro — disabled-tracer overhead (hooks off: one relaxed load)");
+    let obs = JobObs::off(Sched::threaded());
+    let calls: u64 = if common::smoke() { 1_000_000 } else { 10_000_000 };
+    let t = Instant::now();
+    for i in 0..calls {
+        obs.tracer.instant(0, "fabric", "send", std::hint::black_box(i));
+    }
+    let hook_ns = t.elapsed().as_secs_f64() / calls as f64 * 1e9;
+    assert_eq!(obs.tracer.kept(), 0, "disabled tracer must record nothing");
+    let iters = if common::smoke() { 20 } else { 200 };
+    let op_ns = p2p_roundtrip(NetModel::empi_tuned(), 0, iters) * 1e9;
+    let pct = hook_ns / op_ns * 100.0;
+    println!(
+        "disabled instant(): {hook_ns:.2} ns/call   p2p one-way: {op_ns:.0} ns   \
+         overhead: {pct:.4}%"
+    );
+    report.case_value("tracer_off/instant", "ns/call", hook_ns);
+    report.case_value("tracer_off/overhead_vs_p2p", "pct", pct);
+    assert!(
+        pct <= 1.0,
+        "disabled tracer hook must cost <= 1% of a fabric op (got {pct:.4}%)"
+    );
+}
+
 fn deep_queue_bench(report: &mut common::BenchReport) {
     common::hr("Micro — deep-queue tag matching: indexed engine vs linear scan");
     println!("outstanding  tags  linear(ns/op)  indexed(ns/op)  speedup");
@@ -195,6 +226,7 @@ fn deep_queue_bench(report: &mut common::BenchReport) {
 fn main() {
     let mut report = common::BenchReport::new("micro_fabric");
     deep_queue_bench(&mut report);
+    tracer_overhead_bench(&mut report);
 
     common::hr("Micro — fabric p2p latency (EMPI vs OMPI profiles)");
     println!("bytes     EMPI one-way    OMPI one-way    ratio");

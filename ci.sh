@@ -37,6 +37,23 @@ for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
   PARTREPER_BENCH_SMOKE=1 cargo bench --bench "$bench"
 done
 
+echo "== observability exports (Chrome trace + episode schema) =="
+# A traced run must produce Perfetto-loadable Chrome trace JSON and a
+# schema-valid EPISODES.json; the stdlib-python checker validates both.
+# The failure/episode path itself is pinned deterministically by the
+# tier-1 test tests/obs_trace.rs (event mode, byte-identical reruns) —
+# here the injector is wall-clock, so episodes are validated when present
+# rather than required.
+cargo run --release --quiet -- run cg ncomp=4 rdegree=50 iters=10 \
+  faults.enabled=true faults.max_failures=1 faults.target=comps \
+  faults.weibull_shape=0.9 faults.weibull_scale_s=0.02 \
+  log.gc_interval=8 --trace TRACE_ci.json
+python3 python/tools/check_obs_schema.py TRACE_ci.json EPISODES.json
+
+echo "== disabled-tracer overhead budget (asserted inside micro_fabric) =="
+# The micro_fabric smoke above already ran tracer_overhead_bench, which
+# asserts the disabled hook costs <= 1% of a zero-byte fabric op.
+
 echo "== clippy (correctness lints fail CI) =="
 cargo clippy --all-targets -- -D warnings
 

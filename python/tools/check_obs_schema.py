@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Validate the runtime's observability exports (stdlib only).
+
+Usage:
+    check_obs_schema.py TRACE.json [EPISODES.json] [--require-episodes]
+
+Checks that:
+  * the trace file is a Chrome trace-event JSON array (Perfetto /
+    chrome://tracing loadable): every element is an object with a string
+    ``name`` and a ``ph`` in {X, i, M}; non-metadata events carry numeric
+    ``ts`` and integer ``pid``/``tid``; complete events (``X``) carry a
+    numeric ``dur``; instants (``i``) carry a scope ``s``;
+  * the episode file (if given) is ``{"episodes": [...]}`` where every
+    episode has the full field set and its step durations tile the total
+    exactly (``sum(steps[].ns) == total_ns``);
+  * with ``--require-episodes``, at least one episode was recorded.
+
+Exits 0 on success, 1 with a diagnostic on the first violation.
+"""
+
+import json
+import sys
+
+TRACE_PHASES = {"X", "i", "M"}
+
+EPISODE_FIELDS = {
+    "rank": int,
+    "seq": int,
+    "start_ns": int,
+    "total_ns": int,
+    "detect_ns": int,
+    "trigger": int,  # -1 when no failure mark preceded the entry
+    "dead": list,
+    "epoch": int,
+    "promotions": int,
+    "cold_restore": bool,
+    "bytes_resent": int,
+    "resends": int,
+    "requests_reresolved": int,
+    "completed": bool,
+    "steps": list,
+}
+
+
+def fail(msg):
+    print(f"check_obs_schema: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(v):
+    # bool is an int subclass in python; reject it explicitly.
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_trace(path):
+    with open(path, encoding="utf-8") as f:
+        events = json.load(f)
+    if not isinstance(events, list):
+        fail(f"{path}: top level must be a JSON array of trace events")
+    for i, ev in enumerate(events):
+        where = f"{path}: event {i}"
+        if not isinstance(ev, dict):
+            fail(f"{where}: not an object")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            fail(f"{where}: missing string 'name'")
+        ph = ev.get("ph")
+        if ph not in TRACE_PHASES:
+            fail(f"{where}: 'ph' must be one of {sorted(TRACE_PHASES)}, got {ph!r}")
+        if not isinstance(ev.get("pid"), int) or not isinstance(ev.get("tid"), int):
+            fail(f"{where}: 'pid'/'tid' must be integers")
+        if ph == "M":
+            continue
+        if not is_num(ev.get("ts")):
+            fail(f"{where}: '{ph}' event needs a numeric 'ts'")
+        if ph == "X" and not is_num(ev.get("dur")):
+            fail(f"{where}: complete event needs a numeric 'dur'")
+        if ph == "i" and ev.get("s") not in ("t", "p", "g"):
+            fail(f"{where}: instant needs a scope 's' in t/p/g")
+        if not isinstance(ev.get("args", {}), dict):
+            fail(f"{where}: 'args' must be an object when present")
+    kinds = {ev.get("ph") for ev in events}
+    print(
+        f"check_obs_schema: {path}: {len(events)} events OK "
+        f"(phases: {', '.join(sorted(k for k in kinds if k))})"
+    )
+    return events
+
+
+def check_episodes(path, require_episodes):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(doc.get("episodes"), list):
+        fail(f'{path}: top level must be {{"episodes": [...]}}')
+    episodes = doc["episodes"]
+    if require_episodes and not episodes:
+        fail(f"{path}: expected at least one recovery episode")
+    for i, ep in enumerate(episodes):
+        where = f"{path}: episode {i}"
+        if not isinstance(ep, dict):
+            fail(f"{where}: not an object")
+        for field, ty in EPISODE_FIELDS.items():
+            if field not in ep:
+                fail(f"{where}: missing field '{field}'")
+            if not isinstance(ep[field], ty) or (
+                ty is int and isinstance(ep[field], bool)
+            ):
+                fail(f"{where}: '{field}' must be {ty.__name__}")
+        if any(not isinstance(d, int) or isinstance(d, bool) for d in ep["dead"]):
+            fail(f"{where}: 'dead' must hold integers")
+        if ep["dead"] != sorted(ep["dead"]):
+            fail(f"{where}: 'dead' must be sorted (deterministic export)")
+        step_sum = 0
+        for j, step in enumerate(ep["steps"]):
+            if (
+                not isinstance(step, dict)
+                or not isinstance(step.get("name"), str)
+                or not isinstance(step.get("ns"), int)
+                or isinstance(step.get("ns"), bool)
+            ):
+                fail(f"{where}: step {j} must be {{'name': str, 'ns': int}}")
+            step_sum += step["ns"]
+        if step_sum != ep["total_ns"]:
+            fail(
+                f"{where}: steps must tile the episode exactly "
+                f"(sum={step_sum}, total_ns={ep['total_ns']})"
+            )
+    print(f"check_obs_schema: {path}: {len(episodes)} episodes OK")
+
+
+def main(argv):
+    args = [a for a in argv if a != "--require-episodes"]
+    require_episodes = "--require-episodes" in argv
+    if not args:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    check_trace(args[0])
+    if len(args) > 1:
+        check_episodes(args[1], require_episodes)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

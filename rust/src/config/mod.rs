@@ -108,6 +108,28 @@ impl Default for RestorePlan {
     }
 }
 
+/// Observability (`obs.*` keys): the structured event tracer and its ring
+/// sizing (DESIGN.md §9). Histograms and the recovery flight recorder are
+/// always on (relaxed atomics / cold path); only the tracer is opt-in,
+/// because live rings cost memory per rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsPlan {
+    /// Record structured trace events (`--trace out.json` sets this).
+    pub trace: bool,
+    /// Per-rank ring capacity in events; a full ring keeps its first
+    /// `ring_cap` events and counts the overflow.
+    pub ring_cap: usize,
+}
+
+impl Default for ObsPlan {
+    fn default() -> Self {
+        Self {
+            trace: false,
+            ring_cap: 1 << 16,
+        }
+    }
+}
+
 /// Everything needed to launch one job.
 #[derive(Clone, Debug)]
 pub struct JobConfig {
@@ -154,6 +176,8 @@ pub struct JobConfig {
     /// cooperatively scheduled tasks on the virtual clock — DESIGN.md
     /// §8). The default honours `PARTREPER_EXEC=event`.
     pub exec: ExecMode,
+    /// Observability (`obs.*` keys — DESIGN.md §9).
+    pub obs: ObsPlan,
 }
 
 impl Default for JobConfig {
@@ -173,6 +197,7 @@ impl Default for JobConfig {
             failure_check_stride: 8,
             serial_fanout: false,
             exec: ExecMode::from_env(),
+            obs: ObsPlan::default(),
         }
     }
 }
@@ -289,6 +314,14 @@ impl JobConfig {
                 self.serial_fanout = value.parse().map_err(|_| bad(key, value))?
             }
             "exec.mode" => self.exec = ExecMode::parse(value).ok_or_else(|| bad(key, value))?,
+            "obs.trace" => self.obs.trace = value.parse().map_err(|_| bad(key, value))?,
+            "obs.ring_cap" => {
+                let c: usize = value.parse().map_err(|_| bad(key, value))?;
+                if c == 0 {
+                    return Err(bad(key, value));
+                }
+                self.obs.ring_cap = c;
+            }
             "coll.allreduce" => {
                 self.coll.allreduce = match value {
                     "auto" => None,
@@ -404,6 +437,19 @@ mod tests {
         assert!(cfg.set("net.serial_fanout", "maybe").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("ncomp", "abc").is_err());
+    }
+
+    #[test]
+    fn obs_overrides_parse() {
+        let mut cfg = JobConfig::default();
+        assert_eq!(cfg.obs, ObsPlan::default());
+        assert!(!cfg.obs.trace, "tracing is opt-in");
+        cfg.set("obs.trace", "true").unwrap();
+        cfg.set("obs.ring_cap", "1024").unwrap();
+        assert!(cfg.obs.trace);
+        assert_eq!(cfg.obs.ring_cap, 1024);
+        assert!(cfg.set("obs.trace", "maybe").is_err());
+        assert!(cfg.set("obs.ring_cap", "0").is_err());
     }
 
     #[test]

@@ -41,7 +41,19 @@ use crate::fabric::{
     SEL_ALLTOALL_PAIRWISE, SEL_BCAST_BINOMIAL, SEL_BCAST_CHAIN, SEL_GATHER_BINOMIAL,
     SEL_GATHER_LINEAR, SEL_SCATTER_BINOMIAL, SEL_SCATTER_LINEAR,
 };
+use crate::obs::SpanGuard;
 use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Open a collective-execution tracer span on the caller's fabric-rank
+/// track, tagged with the local payload size. Placed in the dispatchers
+/// (not the per-algorithm bodies) so one site covers both the plain EMPI
+/// wrappers and PartRePer's guarded collectives — both funnel through
+/// here. Inert (one relaxed load) unless `obs.trace` is on.
+fn coll_span<'a>(c: &'a Comm, name: &'static str, bytes: usize) -> SpanGuard<'a> {
+    let mut sp = c.fabric.obs.tracer.span(c.my_fabric_rank(), "coll", name);
+    sp.set_arg(bytes as u64);
+    sp
+}
 
 /// The transport a collective algorithm runs over: comm-rank addressed
 /// send/recv plus access to the communicator (for size/rank and the
@@ -103,6 +115,7 @@ pub fn barrier<X: Xfer>(x: &X, tag: i64) -> Result<(), X::Err> {
     let c = x.comm();
     let n = c.size();
     let me = c.rank();
+    let _sp = coll_span(c, "barrier", 0);
     let mut k = 1usize;
     while k < n {
         let to = (me + k) % n;
@@ -131,6 +144,7 @@ pub fn bcast<X: Xfer>(x: &X, tag: i64, root: usize, data: &mut Vec<u8>) -> Resul
     if n <= 1 {
         return Ok(());
     }
+    let _sp = coll_span(c, "bcast", data.len());
     let f = &c.fabric;
     if f.coll.bcast == Some(BcastAlg::Binomial) {
         f.metrics.selects.bump(SEL_BCAST_BINOMIAL);
@@ -162,6 +176,7 @@ pub fn reduce<X: Xfer>(
 ) -> Result<Option<Vec<u8>>, X::Err> {
     let c = x.comm();
     let n = c.size();
+    let _sp = coll_span(c, "reduce", data.len());
     let vrank = (c.rank() + n - root) % n;
     let mut acc = data.to_vec();
     let mut mask = 1usize;
@@ -197,6 +212,7 @@ pub fn allreduce<X: Xfer>(
     if n == 1 {
         return Ok(data.to_vec());
     }
+    let _sp = coll_span(c, "allreduce", data.len());
     let f = &c.fabric;
     match f.model.select_allreduce(&f.coll, n, data.len()) {
         AllreduceAlg::RecursiveDoubling => {
@@ -223,6 +239,7 @@ pub fn gather<X: Xfer>(
     if n == 1 {
         return Ok(Some(vec![data.to_vec()]));
     }
+    let _sp = coll_span(c, "gather", data.len());
     let f = &c.fabric;
     // Neither gather algorithm needs the agreed length for correctness
     // (blocks are length-prefixed); a pinned override therefore skips the
@@ -263,6 +280,11 @@ pub fn scatter<X: Xfer>(
     if n == 1 {
         return Ok(blocks.expect("root must supply blocks")[0].clone());
     }
+    let _sp = coll_span(
+        c,
+        "scatter",
+        blocks.map(|bs| bs.iter().map(Vec::len).sum()).unwrap_or(0),
+    );
     let f = &c.fabric;
     // As with gather: blocks are self-describing on the wire, so a pinned
     // override skips the size-agreement header round.
@@ -297,6 +319,7 @@ pub fn allgather<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>, 
     if n == 1 {
         return Ok(vec![data.to_vec()]);
     }
+    let _sp = coll_span(c, "allgather", data.len());
     let f = &c.fabric;
     match f.model.select_allgather(&f.coll, n, data.len()) {
         AllgatherAlg::Ring => {
@@ -323,6 +346,7 @@ pub fn alltoall<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Vec<
     if n == 1 {
         return Ok(vec![blocks[0].clone()]);
     }
+    let _sp = coll_span(c, "alltoall", blocks.iter().map(Vec::len).sum());
     let f = &c.fabric;
     let uniform = blocks.iter().all(|b| b.len() == blocks[0].len());
     let alg = if f.coll.alltoall.is_none() && !uniform {
@@ -347,8 +371,10 @@ pub fn alltoall<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Vec<
 /// PartRePer routes its alltoallv through the nonblocking
 /// [`super::nbc::IAlltoallv`] anyway (the paper's own design, §VII-A).
 pub fn alltoallv<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Vec<u8>>, X::Err> {
-    let n = x.comm().size();
+    let c = x.comm();
+    let n = c.size();
     assert_eq!(blocks.len(), n, "alltoallv needs one block per rank");
+    let _sp = coll_span(c, "alltoallv", blocks.iter().map(Vec::len).sum());
     alltoall_pairwise(x, tag, blocks)
 }
 

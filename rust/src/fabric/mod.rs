@@ -78,6 +78,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::error::CommError;
+use crate::obs::{HistId, JobObs};
 use crate::sched::Sched;
 
 /// Sender-side completion gate for a rendezvous-sized transmission: opens
@@ -568,6 +569,11 @@ pub struct Fabric {
     tap_on: AtomicBool,
     /// Recorded schedule, keyed by `(ctx, src, dst)` channel.
     tap: Mutex<Option<HashMap<(u64, usize, usize), Vec<TapRecord>>>>,
+    /// Shared observability bundle (tracer, flight recorder, histograms —
+    /// DESIGN.md §9). The inert [`JobObs::off`] bundle unless built via
+    /// [`Fabric::new_instrumented`]; the tracer gate is the same
+    /// one-relaxed-load pattern as `tap_on`.
+    pub obs: Arc<JobObs>,
 }
 
 /// How long a blocking receive waits between liveness re-checks.
@@ -601,6 +607,22 @@ impl Fabric {
         coll: CollTuning,
         clock: Arc<Sched>,
     ) -> Arc<Self> {
+        let obs = JobObs::off(clock.clone());
+        Self::new_instrumented(label, procs, model, coll, clock, obs)
+    }
+
+    /// Build a fabric wired to a shared observability bundle. The launcher
+    /// passes the job's [`JobObs`] here so both fabrics, the flight
+    /// recorder and the histogram registry agree on one clock domain;
+    /// every other constructor embeds the inert [`JobObs::off`] bundle.
+    pub fn new_instrumented(
+        label: &'static str,
+        procs: Arc<ProcSet>,
+        model: NetModel,
+        coll: CollTuning,
+        clock: Arc<Sched>,
+        obs: Arc<JobObs>,
+    ) -> Arc<Self> {
         let n = procs.len();
         Arc::new(Self {
             boxes: (0..n).map(|_| Mailbox::new()).collect(),
@@ -613,6 +635,7 @@ impl Fabric {
             clock,
             tap_on: AtomicBool::new(false),
             tap: Mutex::new(None),
+            obs,
         })
     }
 
@@ -664,6 +687,7 @@ impl Fabric {
             .model
             .wire_ns_between(nbytes as usize, self.boxes.len(), env.src, env.dst);
         self.metrics.virtual_ns.fetch_add(cost, Ordering::Relaxed);
+        self.obs.tracer.instant(env.src, "fabric", "send", nbytes);
         let gate = (env.data.len() >= self.model.rndv_threshold)
             .then(|| Arc::new(RndvGate::new()));
 
@@ -762,6 +786,22 @@ impl Fabric {
         self.clock.wait_until_ns(finish);
     }
 
+    /// Rendezvous observability on a claimed delivery: when the envelope
+    /// carried a gate, the sender stalled from post until this match —
+    /// record that latency. The clock is only read when a gate is present
+    /// (rendezvous-sized payloads), so eager traffic pays one branch.
+    fn note_rndv(&self, me: usize, d: &Delivery) {
+        if d.gate.is_some() {
+            let now = self.clock.now_ns();
+            self.obs
+                .hists
+                .record(HistId::RndvStall, now.saturating_sub(d.sent_at));
+            self.obs
+                .tracer
+                .instant(me, "fabric", "rndv", d.env.data.len() as u64);
+        }
+    }
+
     /// Non-blocking matched receive: removes and returns the earliest
     /// arrival matching `spec`, preserving FIFO order per (src, ctx, tag)
     /// and arrival order across buckets for wildcards.
@@ -772,6 +812,7 @@ impl Fabric {
         drop(inner);
         Ok(got.map(|d| {
             self.settle(me, &d);
+            self.note_rndv(me, &d);
             d.env
         }))
     }
@@ -801,6 +842,7 @@ impl Fabric {
         drop(inner);
         Ok(got.map(|d| {
             self.settle(me, &d);
+            self.note_rndv(me, &d);
             d.env
         }))
     }
@@ -884,8 +926,15 @@ impl Fabric {
         spec: &MatchSpec,
         deadline: Duration,
     ) -> Result<Envelope, CommError> {
+        let t0 = self.clock.now_ns();
         let d = self.recv_delivery(me, spec, deadline)?;
         self.settle(me, &d);
+        self.note_rndv(me, &d);
+        let wait = self.clock.now_ns().saturating_sub(t0);
+        self.obs.hists.record(HistId::RecvWait, wait);
+        self.obs
+            .tracer
+            .complete(me, "fabric", "recv", t0, wait, d.env.data.len() as u64);
         Ok(d.env)
     }
 

@@ -95,6 +95,13 @@ impl FaultInjector {
                     break;
                 }
                 let victim = *rng.choose(&alive);
+                // Kill-time failure mark: the flight recorder measures
+                // detection latency from here (or from the monitor's later
+                // publish mark, whichever an episode sees last).
+                if let Some(f) = fabrics.first() {
+                    f.obs.flight.note_failure(victim, clock2.now_ns());
+                    f.obs.tracer.instant(victim, "ft", "killed", victim as u64);
+                }
                 procs.poison(victim);
                 // Wake blocked receivers so the victim notices promptly
                 // and so peers blocked on the victim re-poll.

@@ -12,6 +12,7 @@ use crate::empi::Comm;
 use crate::error::JobError;
 use crate::faults::{FaultInjector, Injection};
 use crate::metrics::Phase;
+use crate::obs::{Episode, HistSnapshot, JobObs};
 use crate::partreper::PartReper;
 use crate::procmgr::{launch_job, RankOutcome};
 use crate::runtime::ComputeEngine;
@@ -86,6 +87,16 @@ pub struct RunResult {
     pub sched_events: u64,
     pub sched_virtual_ns: u64,
     pub sched_ready_peak: u64,
+    /// Latency histogram snapshots (recv-wait, rendezvous-stall, GC-round,
+    /// recovery-stall), merged over ranks.
+    pub hists: Vec<HistSnapshot>,
+    /// Recovery flight-recorder episodes, ordered by (rank, seq).
+    pub episodes: Vec<Episode>,
+    /// Trace events retained in the ring buffers (0 when tracing is off).
+    pub trace_events: u64,
+    /// The job's observability bundle, for exporters (`--trace`,
+    /// `EPISODES.json`) that outlive the summary numbers above.
+    pub obs: std::sync::Arc<JobObs>,
 }
 
 impl RunResult {
@@ -239,6 +250,10 @@ pub fn run_app(
         sched_events,
         sched_virtual_ns,
         sched_ready_peak,
+        hists: report.obs.hists.snapshot(),
+        episodes: report.obs.flight.episodes(),
+        trace_events: report.obs.tracer.kept(),
+        obs: report.obs.clone(),
     }
 }
 

@@ -26,6 +26,7 @@ pub mod fabric;
 pub mod faults;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod ompi;
 pub mod partreper;
 pub mod procimg;

@@ -48,6 +48,32 @@ fn get<'a>(extra: &'a [(String, String)], key: &str) -> Option<&'a str> {
         .map(|(_, v)| v.as_str())
 }
 
+/// Fold the `--trace <path>` flag into the `key=value` override stream
+/// (as `trace=<path>`), so it parses like every other argument.
+fn normalize_trace_flag(args: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(args.len());
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--trace" {
+            match it.next() {
+                Some(p) => out.push(format!("trace={p}")),
+                None => eprintln!("--trace requires a path"),
+            }
+        } else {
+            out.push(a.clone());
+        }
+    }
+    out
+}
+
+/// `EPISODES.json` lands next to the trace output file.
+fn episodes_path(trace: &str) -> String {
+    match std::path::Path::new(trace).parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.join("EPISODES.json").display().to_string(),
+        _ => "EPISODES.json".to_string(),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().map(|s| s.as_str()) else {
@@ -72,7 +98,12 @@ fn main() {
                     std::process::exit(2);
                 });
             let mut cfg = JobConfig::default();
-            let extra = parse_overrides(&mut cfg, &args[2..]);
+            let norm = normalize_trace_flag(&args[2..]);
+            let extra = parse_overrides(&mut cfg, &norm);
+            let trace_path = get(&extra, "trace").map(str::to_string);
+            if trace_path.is_some() {
+                cfg.obs.trace = true;
+            }
             let iters = get(&extra, "iters")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or_else(|| app.default_iters());
@@ -128,6 +159,28 @@ fn main() {
                 "sched: mode={} events={} virtual_ns={} ready_peak={}",
                 r.exec_mode, r.sched_events, r.sched_virtual_ns, r.sched_ready_peak
             );
+            for h in &r.hists {
+                println!(
+                    "lat {}: n={} p50={}ns p99={}ns max={}ns",
+                    h.name, h.count, h.p50, h.p99, h.max
+                );
+            }
+            println!(
+                "obs: episodes={} trace_events={}",
+                r.episodes.len(),
+                r.trace_events
+            );
+            if let Some(path) = trace_path {
+                match std::fs::write(&path, r.obs.chrome_trace_json()) {
+                    Ok(()) => println!("trace: wrote {path}"),
+                    Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+                }
+                let epath = episodes_path(&path);
+                match std::fs::write(&epath, r.obs.episodes_json()) {
+                    Ok(()) => println!("episodes: wrote {epath}"),
+                    Err(e) => eprintln!("episodes: failed to write {epath}: {e}"),
+                }
+            }
             println!("checksum: {:?}", r.checksum);
         }
         "fig8" => {

@@ -4,11 +4,14 @@
 //! everything else, and its MTTI metric counts only useful (non-handler)
 //! time. [`PhaseClock`] provides exactly that accounting; [`Counters`]
 //! aggregates protocol events (messages logged, replays, resends, ...) that
-//! the harness reports alongside.
+//! the harness reports alongside. Latency *distributions* (p50/p99) live in
+//! the histogram registry (`crate::obs::hist`), which the harness iterates
+//! generically instead of growing a counter field per metric.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+
+use crate::sched::Sched;
 
 // The tuned collective engine's per-algorithm selection tallies live with
 // the fabric (they are per-fabric, like its traffic counters) but belong
@@ -44,11 +47,15 @@ fn idx(p: Phase) -> usize {
     }
 }
 
-/// Wall-clock accounting by phase. Thread-safe; one per rank, aggregated by
-/// the harness at join time.
+/// Per-phase time accounting on the *job clock* ([`Sched`]): wall time
+/// under `exec.mode=threaded`, virtual time under `event` — the same
+/// clock domain as the tracer and the fabric, so phase totals, trace
+/// spans and recovery episodes are directly comparable. Thread-safe; one
+/// per rank, aggregated by the harness at join time.
 pub struct PhaseClock {
     accum_ns: [AtomicU64; NPHASE],
-    current: std::sync::Mutex<(Phase, Instant)>,
+    clock: Arc<Sched>,
+    current: std::sync::Mutex<(Phase, u64)>,
 }
 
 impl Default for PhaseClock {
@@ -58,20 +65,32 @@ impl Default for PhaseClock {
 }
 
 impl PhaseClock {
+    /// A clock on private wall time — the drop-in for call sites outside
+    /// a job world (unit tests, standalone tools).
     pub fn new() -> Self {
+        Self::new_on(Sched::threaded())
+    }
+
+    /// A clock on the job scheduler. Inside a job world this is the only
+    /// correct constructor: with a private `Instant` the per-phase
+    /// seconds of an event-mode run would be host scheduler wall time,
+    /// not job virtual time.
+    pub fn new_on(clock: Arc<Sched>) -> Self {
+        let now = clock.now_ns();
         Self {
             accum_ns: Default::default(),
-            current: std::sync::Mutex::new((Phase::App, Instant::now())),
+            clock,
+            current: std::sync::Mutex::new((Phase::App, now)),
         }
     }
 
     /// Switch to `phase`, attributing elapsed time to the previous phase.
     pub fn enter(&self, phase: Phase) {
         let mut cur = self.current.lock().unwrap();
+        let now = self.clock.now_ns();
         let (prev, since) = *cur;
-        let elapsed = since.elapsed().as_nanos() as u64;
-        self.accum_ns[idx(prev)].fetch_add(elapsed, Ordering::Relaxed);
-        *cur = (phase, Instant::now());
+        self.accum_ns[idx(prev)].fetch_add(now.saturating_sub(since), Ordering::Relaxed);
+        *cur = (phase, now);
     }
 
     /// Close out the currently-running phase (call at rank exit).
@@ -119,57 +138,112 @@ impl Drop for PhaseGuard {
     }
 }
 
-/// Monotone event counters shared across a rank's protocol layers.
-#[derive(Default)]
-pub struct Counters {
+/// How a counter field folds across ranks in [`Counters::merge`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeRule {
+    /// Totals: per-rank values add.
+    Sum,
+    /// Peaks (high-water marks): the job-wide value is the worst rank's.
+    Max,
+}
+
+/// Declares the counter set *once*, field and merge rule together, and
+/// derives the struct, `merge`, and the reflective field table from that
+/// single list — so a new counter cannot be added without stating how it
+/// aggregates, and `merge` cannot silently drop it (the drift that this
+/// replaced: a hand-maintained field list next to a `Max` special case).
+macro_rules! counters {
+    ($($(#[$doc:meta])* $name:ident : $rule:ident,)+) => {
+        /// Monotone event counters shared across a rank's protocol
+        /// layers. Declared via the `counters!` macro: every field
+        /// carries its [`MergeRule`], and [`Counters::merge`] /
+        /// [`Counters::fields`] are generated from the same list.
+        #[derive(Default)]
+        pub struct Counters {
+            $($(#[$doc])* pub $name: AtomicU64,)+
+        }
+
+        impl Counters {
+            /// `(field name, merge rule)` for every declared counter.
+            pub const FIELDS: &'static [(&'static str, MergeRule)] =
+                &[$((stringify!($name), MergeRule::$rule),)+];
+
+            /// Borrow every field with its name and merge rule — the
+            /// reflective surface tests and generic reporters iterate.
+            pub fn fields(&self) -> Vec<(&'static str, &AtomicU64, MergeRule)> {
+                vec![$((stringify!($name), &self.$name, MergeRule::$rule),)+]
+            }
+
+            /// Fold another rank's counters into this aggregate, each
+            /// field by its declared rule.
+            pub fn merge(&self, other: &Counters) {
+                $(
+                    match MergeRule::$rule {
+                        MergeRule::Sum => {
+                            self.$name.fetch_add(
+                                other.$name.load(Ordering::Relaxed),
+                                Ordering::Relaxed,
+                            );
+                        }
+                        MergeRule::Max => {
+                            Self::max_of(&self.$name, other.$name.load(Ordering::Relaxed));
+                        }
+                    }
+                )+
+            }
+        }
+    };
+}
+
+counters! {
     /// P2P sends logged for recovery.
-    pub sends_logged: AtomicU64,
+    sends_logged: Sum,
     /// Collectives logged.
-    pub collectives_logged: AtomicU64,
+    collectives_logged: Sum,
     /// Messages resent during recovery.
-    pub resends: AtomicU64,
+    resends: Sum,
     /// Received-but-not-sent ids marked to be skipped.
-    pub skips: AtomicU64,
+    skips: Sum,
     /// Collectives replayed during recovery.
-    pub collective_replays: AtomicU64,
+    collective_replays: Sum,
     /// ULFM failure checks performed on the hot path.
-    pub failure_checks: AtomicU64,
+    failure_checks: Sum,
     /// Times the error handler ran.
-    pub error_handler_entries: AtomicU64,
+    error_handler_entries: Sum,
     /// Replica promotions (comp died, replica took over).
-    pub promotions: AtomicU64,
+    promotions: Sum,
     /// Replica drops (replica died).
-    pub replica_drops: AtomicU64,
+    replica_drops: Sum,
     /// Image-store refreshes pushed (owner side).
-    pub restore_refreshes: AtomicU64,
+    restore_refreshes: Sum,
     /// Shard payload bytes pushed to holders (owner side).
-    pub restore_shard_bytes: AtomicU64,
+    restore_shard_bytes: Sum,
     /// Shards received and rebuilt into an image during a cold restore.
-    pub restore_shards_rebuilt: AtomicU64,
+    restore_shards_rebuilt: Sum,
     /// Cold restores completed (a spare became a computational rank).
-    pub cold_restores: AtomicU64,
+    cold_restores: Sum,
     /// Nonblocking p2p send requests posted (`isend`, including the ones
     /// backing blocking `send`/`sendrecv`).
-    pub nb_isends: AtomicU64,
+    nb_isends: Sum,
     /// Nonblocking p2p receive requests posted (`irecv`, including the
     /// ones backing blocking `recv`/`sendrecv`).
-    pub nb_irecvs: AtomicU64,
+    nb_irecvs: Sum,
     /// Nonblocking requests completed. In-flight requests at any instant
     /// = `nb_isends + nb_irecvs - nb_completed`.
-    pub nb_completed: AtomicU64,
+    nb_completed: Sum,
     /// Pending requests re-resolved against a repaired world (§VI-B): a
     /// receive re-posted toward a promoted/restored incarnation, or a
     /// send's fan-out re-issued per channel.
-    pub nb_replays: AtomicU64,
+    nb_replays: Sum,
     /// Log-GC passes run (periodic cadence, backpressure-forced, refresh-
     /// triggered, and the §VI-B recovery prune all count).
-    pub gc_rounds: AtomicU64,
+    gc_rounds: Sum,
     /// Log records dropped by GC (send records + collective records).
-    pub records_pruned: AtomicU64,
-    /// High-water mark of the message log's payload bytes. **Max-merged**,
-    /// not summed: per rank it is a peak, and the job-wide aggregate is
-    /// the worst rank's peak (the bounded-memory claim is per rank).
-    pub log_peak_bytes: AtomicU64,
+    records_pruned: Sum,
+    /// High-water mark of the message log's payload bytes. Per rank it is
+    /// a peak, so the job-wide aggregate is the worst rank's peak (the
+    /// bounded-memory claim is per rank).
+    log_peak_bytes: Max,
 }
 
 impl Counters {
@@ -193,46 +267,12 @@ impl Counters {
     pub fn get(field: &AtomicU64) -> u64 {
         field.load(Ordering::Relaxed)
     }
-
-    /// Fold another rank's counters into this aggregate.
-    pub fn merge(&self, other: &Counters) {
-        macro_rules! m {
-            ($($f:ident),+) => {
-                $(self.$f.fetch_add(other.$f.load(Ordering::Relaxed), Ordering::Relaxed);)+
-            };
-        }
-        m!(
-            sends_logged,
-            collectives_logged,
-            resends,
-            skips,
-            collective_replays,
-            failure_checks,
-            error_handler_entries,
-            promotions,
-            replica_drops,
-            restore_refreshes,
-            restore_shard_bytes,
-            restore_shards_rebuilt,
-            cold_restores,
-            nb_isends,
-            nb_irecvs,
-            nb_completed,
-            nb_replays,
-            gc_rounds,
-            records_pruned
-        );
-        // Peaks merge by max: the job-wide high water is the worst rank's.
-        Self::max_of(
-            &self.log_peak_bytes,
-            other.log_peak_bytes.load(Ordering::Relaxed),
-        );
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::ExecMode;
     use std::time::Duration;
 
     #[test]
@@ -246,6 +286,28 @@ mod tests {
         assert!(clock.seconds(Phase::App) >= 0.018);
         assert!(clock.seconds(Phase::ErrorHandler) >= 0.028);
         assert!(clock.seconds(Phase::ErrorHandler) < 0.2);
+    }
+
+    #[test]
+    fn phase_attribution_is_virtual_time_in_event_mode() {
+        // The satellite-1 regression: with a private `Instant`, an
+        // event-mode rank's phase seconds would be host wall time. On the
+        // job clock they are *exact* virtual durations.
+        let s = Sched::new(ExecMode::Event);
+        let clock = Arc::new(PhaseClock::new_on(s.clone()));
+        let s2 = s.clone();
+        let clock2 = clock.clone();
+        let h = s.spawn("rank", move || {
+            clock2.enter(Phase::ErrorHandler);
+            s2.sleep(Duration::from_millis(2));
+            clock2.enter(Phase::App);
+            s2.sleep(Duration::from_millis(1));
+            clock2.finish();
+        });
+        s.start();
+        h.join().unwrap();
+        assert_eq!(clock.ns(Phase::ErrorHandler), 2_000_000);
+        assert_eq!(clock.ns(Phase::App), 1_000_000);
     }
 
     #[test]
@@ -274,6 +336,41 @@ mod tests {
         assert_eq!(Counters::get(&a.resends), 7);
         assert_eq!(Counters::get(&a.promotions), 1);
         assert_eq!(Counters::get(&a.records_pruned), 7, "pruned counts sum");
+    }
+
+    #[test]
+    fn merge_covers_every_declared_field() {
+        // The satellite-2 guarantee: a default-vs-populated merge moves
+        // every field, and a second merge applies each field's rule.
+        let a = Counters::default();
+        let b = Counters::default();
+        for (i, (_, field, _)) in b.fields().iter().enumerate() {
+            field.store(i as u64 + 1, Ordering::Relaxed);
+        }
+        a.merge(&b);
+        assert_eq!(a.fields().len(), Counters::FIELDS.len());
+        for ((name, fa, _), (_, fb, _)) in a.fields().iter().zip(b.fields().iter()) {
+            assert_eq!(
+                fa.load(Ordering::Relaxed),
+                fb.load(Ordering::Relaxed),
+                "field {name} dropped by merge into a default"
+            );
+        }
+        a.merge(&b);
+        for ((name, fa, rule), (_, fb, _)) in a.fields().iter().zip(b.fields().iter()) {
+            let src = fb.load(Ordering::Relaxed);
+            let want = match rule {
+                MergeRule::Sum => 2 * src,
+                MergeRule::Max => src,
+            };
+            assert_eq!(
+                fa.load(Ordering::Relaxed),
+                want,
+                "field {name} violates its {rule:?} rule"
+            );
+        }
+        // The known peak stays declared as a peak.
+        assert!(Counters::FIELDS.contains(&("log_peak_bytes", MergeRule::Max)));
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! The recovery flight recorder: every error-handler entry becomes a
+//! structured *episode* — trigger rank, detection latency, and the
+//! per-step durations of the ULFM repair pipeline (revoke → shrink →
+//! repair/promotion → cold restore → §VI-B exchange/resend/replay → GC),
+//! plus bytes resent and requests re-resolved.
+//!
+//! Steps are measured contiguously: each `step()` call closes the
+//! interval since the previous boundary, and `finish()`/drop closes the
+//! tail, so the step durations *tile* the episode exactly —
+//! `sum(steps) == total_ns` by construction, and under `exec.mode=event`
+//! the episode total equals the rank's `ErrorHandler` (+`Restore`) phase
+//! time for that entry, tick for tick.
+//!
+//! The recorder is job-wide behind one mutex: the handler path is cold by
+//! definition (the paper's whole point is that it is rare), so a shared
+//! lock is simpler and cheaper than per-rank sharding.
+
+use std::sync::{Arc, Mutex};
+
+use crate::sched::Sched;
+
+/// One error-handler entry, as recorded. All times are fabric-clock
+/// nanoseconds (virtual under event mode).
+#[derive(Clone, Debug)]
+pub struct Episode {
+    /// Fabric rank that entered the handler.
+    pub rank: usize,
+    /// Per-rank episode ordinal (0 = this rank's first entry).
+    pub seq: u64,
+    /// Handler entry time.
+    pub start_ns: u64,
+    /// Entry-to-exit duration; equals the sum of `steps` durations.
+    pub total_ns: u64,
+    /// Latency from the most recent known failure mark (injector kill or
+    /// monitor publish) to handler entry; 0 when no mark preceded entry.
+    pub detect_ns: u64,
+    /// Rank of that most recent failure mark, if any.
+    pub trigger: Option<usize>,
+    /// Dead set the shrink step observed (first repair iteration).
+    pub dead: Vec<usize>,
+    /// World epoch after the repair.
+    pub epoch: u64,
+    /// `(step name, duration ns)` in execution order; names repeat when a
+    /// ULFM error re-runs the repair loop within one entry.
+    pub steps: Vec<(&'static str, u64)>,
+    /// Replica promotions this rank performed in this episode.
+    pub promotions: u64,
+    /// Whether a cold restore (spare adoption image gather) ran.
+    pub cold_restore: bool,
+    /// Payload bytes retransmitted in the §VI-B resend step.
+    pub bytes_resent: u64,
+    /// Send records retransmitted.
+    pub resends: u64,
+    /// Pending nonblocking requests re-resolved after this episode.
+    pub requests_reresolved: u64,
+    /// False when the rank unwound (killed / job interrupted) mid-handler.
+    pub completed: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    episodes: Vec<Episode>,
+    /// `(rank, ns)` failure marks, in note order.
+    marks: Vec<(usize, u64)>,
+    /// Latest episode index per rank (for post-hoc attribution).
+    last_by_rank: Vec<Option<usize>>,
+    seq_by_rank: Vec<u64>,
+}
+
+impl Inner {
+    fn ensure_rank(&mut self, rank: usize) {
+        if rank >= self.last_by_rank.len() {
+            self.last_by_rank.resize(rank + 1, None);
+            self.seq_by_rank.resize(rank + 1, 0);
+        }
+    }
+}
+
+/// Job-wide episode store. Cheap when idle: failure-free runs never touch
+/// it beyond construction.
+pub struct FlightRecorder {
+    clock: Arc<Sched>,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    pub fn new(clock: Arc<Sched>) -> Self {
+        Self {
+            clock,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Mark `rank` as failed at `ns` — called by the fault injector at
+    /// kill time and by the PRTED monitor at publish time. Episodes that
+    /// begin later report `detect_ns` relative to the latest mark.
+    pub fn note_failure(&self, rank: usize, ns: u64) {
+        self.inner.lock().unwrap().marks.push((rank, ns));
+    }
+
+    /// Attribute `n` §VI-B request re-resolutions to `rank`'s most recent
+    /// episode (re-resolution runs after the handler returns, so the
+    /// episode guard is already closed).
+    pub fn note_reresolved(&self, rank: usize, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.ensure_rank(rank);
+        if let Some(i) = g.last_by_rank[rank] {
+            g.episodes[i].requests_reresolved += n;
+        }
+    }
+
+    /// Open an episode for `rank`'s handler entry. Close it with
+    /// [`EpisodeGuard::finish`]; an unwind (rank killed, job interrupted)
+    /// closes it via drop with `completed = false`.
+    pub fn begin(&self, rank: usize) -> EpisodeGuard<'_> {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        g.ensure_rank(rank);
+        let (trigger, detect_ns) = g
+            .marks
+            .iter()
+            .rev()
+            .find(|&&(_, ns)| ns <= now)
+            .map(|&(r, ns)| (Some(r), now - ns))
+            .unwrap_or((None, 0));
+        let seq = g.seq_by_rank[rank];
+        g.seq_by_rank[rank] += 1;
+        let idx = g.episodes.len();
+        g.last_by_rank[rank] = Some(idx);
+        g.episodes.push(Episode {
+            rank,
+            seq,
+            start_ns: now,
+            total_ns: 0,
+            detect_ns,
+            trigger,
+            dead: Vec::new(),
+            epoch: 0,
+            steps: Vec::new(),
+            promotions: 0,
+            cold_restore: false,
+            bytes_resent: 0,
+            resends: 0,
+            requests_reresolved: 0,
+            completed: false,
+        });
+        EpisodeGuard {
+            rec: self,
+            idx,
+            last_ns: now,
+            closed: false,
+        }
+    }
+
+    /// Episodes recorded so far, sorted by `(rank, seq)` — the canonical
+    /// export order (the raw append order interleaves ranks).
+    pub fn episodes(&self) -> Vec<Episode> {
+        let mut eps = self.inner.lock().unwrap().episodes.clone();
+        eps.sort_by_key(|e| (e.rank, e.seq));
+        eps
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().episodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Open-episode handle held by the error handler for the duration of one
+/// entry (see [`FlightRecorder::begin`]).
+pub struct EpisodeGuard<'a> {
+    rec: &'a FlightRecorder,
+    idx: usize,
+    last_ns: u64,
+    closed: bool,
+}
+
+impl EpisodeGuard<'_> {
+    fn with_ep(&self, f: impl FnOnce(&mut Episode)) {
+        let mut g = self.rec.inner.lock().unwrap();
+        f(&mut g.episodes[self.idx]);
+    }
+
+    /// Close the interval since the previous boundary under `name`.
+    pub fn step(&mut self, name: &'static str) {
+        let now = self.rec.clock.now_ns();
+        let dur = now.saturating_sub(self.last_ns);
+        self.last_ns = now;
+        self.with_ep(|ep| ep.steps.push((name, dur)));
+    }
+
+    /// Record the dead set the shrink observed (first repair iteration
+    /// wins; later loop iterations append any newly-dead ranks).
+    pub fn note_dead(&mut self, dead: &[usize]) {
+        self.with_ep(|ep| {
+            for &d in dead {
+                if !ep.dead.contains(&d) {
+                    ep.dead.push(d);
+                }
+            }
+        });
+    }
+
+    pub fn note_epoch(&mut self, epoch: u64) {
+        self.with_ep(|ep| ep.epoch = epoch);
+    }
+
+    pub fn note_promotion(&mut self) {
+        self.with_ep(|ep| ep.promotions += 1);
+    }
+
+    pub fn note_cold_restore(&mut self) {
+        self.with_ep(|ep| ep.cold_restore = true);
+    }
+
+    pub fn note_resend(&mut self, bytes: u64) {
+        self.with_ep(|ep| {
+            ep.resends += 1;
+            ep.bytes_resent += bytes;
+        });
+    }
+
+    fn close(&mut self, completed: bool, tail: &'static str) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        let now = self.rec.clock.now_ns();
+        let rem = now.saturating_sub(self.last_ns);
+        let mut g = self.rec.inner.lock().unwrap();
+        let ep = &mut g.episodes[self.idx];
+        if rem > 0 || ep.steps.is_empty() {
+            ep.steps.push((tail, rem));
+        }
+        ep.total_ns = now.saturating_sub(ep.start_ns);
+        ep.completed = completed;
+    }
+
+    /// Close the episode as successfully completed.
+    pub fn finish(mut self) {
+        self.close(true, "wrapup");
+    }
+}
+
+impl Drop for EpisodeGuard<'_> {
+    fn drop(&mut self) {
+        // Unwind path (RankKilled / JobInterrupted): keep the partial
+        // episode rather than losing it, flagged incomplete.
+        self.close(false, "unwound");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn steps_tile_the_episode_exactly() {
+        let clock = Sched::threaded();
+        let rec = FlightRecorder::new(clock.clone());
+        let mut ep = rec.begin(3);
+        clock.sleep(Duration::from_millis(2));
+        ep.step("shrink");
+        clock.sleep(Duration::from_millis(1));
+        ep.step("repair");
+        ep.note_promotion();
+        ep.note_epoch(1);
+        ep.note_dead(&[0]);
+        ep.finish();
+        let eps = rec.episodes();
+        assert_eq!(eps.len(), 1);
+        let e = &eps[0];
+        assert_eq!((e.rank, e.seq), (3, 0));
+        let sum: u64 = e.steps.iter().map(|&(_, d)| d).sum();
+        assert_eq!(sum, e.total_ns, "steps must tile the episode");
+        assert_eq!(e.promotions, 1);
+        assert_eq!(e.dead, vec![0]);
+        assert_eq!(e.epoch, 1);
+        assert!(e.completed);
+    }
+
+    #[test]
+    fn detection_latency_uses_latest_mark() {
+        let clock = Sched::threaded();
+        let rec = FlightRecorder::new(clock.clone());
+        let t_kill = clock.now_ns();
+        rec.note_failure(5, t_kill);
+        clock.sleep(Duration::from_millis(1));
+        let ep = rec.begin(2);
+        ep.finish();
+        let e = &rec.episodes()[0];
+        assert_eq!(e.trigger, Some(5));
+        assert!(e.detect_ns >= 1_000_000, "latency {} too small", e.detect_ns);
+    }
+
+    #[test]
+    fn unwind_keeps_partial_episode() {
+        let rec = FlightRecorder::new(Sched::threaded());
+        {
+            let mut ep = rec.begin(0);
+            ep.step("shrink");
+            // dropped without finish(): the rank unwound
+        }
+        let e = &rec.episodes()[0];
+        assert!(!e.completed);
+        assert_eq!(e.steps.last().unwrap().0, "unwound");
+        let sum: u64 = e.steps.iter().map(|&(_, d)| d).sum();
+        assert_eq!(sum, e.total_ns);
+    }
+
+    #[test]
+    fn reresolution_attributes_to_latest_episode() {
+        let rec = FlightRecorder::new(Sched::threaded());
+        rec.begin(1).finish();
+        rec.begin(1).finish();
+        rec.note_reresolved(1, 3);
+        rec.note_reresolved(9, 5); // rank with no episode: ignored
+        let eps = rec.episodes();
+        assert_eq!(eps[0].requests_reresolved, 0);
+        assert_eq!(eps[1].requests_reresolved, 3);
+        assert_eq!(eps[1].seq, 1);
+    }
+
+    #[test]
+    fn episodes_sort_by_rank_then_seq() {
+        let rec = FlightRecorder::new(Sched::threaded());
+        rec.begin(2).finish();
+        rec.begin(0).finish();
+        rec.begin(2).finish();
+        let order: Vec<(usize, u64)> = rec.episodes().iter().map(|e| (e.rank, e.seq)).collect();
+        assert_eq!(order, vec![(0, 0), (2, 0), (2, 1)]);
+    }
+}

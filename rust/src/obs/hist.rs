@@ -1,0 +1,295 @@
+//! Fixed-bucket log2 latency histograms: the quantile side of the metrics
+//! surface (`Counters` counts events; these distribute durations).
+//!
+//! Each histogram is 64 power-of-two buckets of `AtomicU64` — bucket 0
+//! holds exactly the value 0, bucket `b >= 1` holds `[2^(b-1), 2^b)` — so
+//! recording is a `leading_zeros` plus one relaxed `fetch_add`, cheap
+//! enough to leave permanently on. Like [`crate::metrics::Counters`],
+//! histograms merge by summing buckets; quantiles are then read off the
+//! merged bucket boundaries (a p99 from log2 buckets is exact to within a
+//! factor of 2, which is the resolution the paper's latency claims need).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log2 buckets per histogram: bucket 0 = value 0, bucket b = [2^(b-1), 2^b).
+pub const NBUCKETS: usize = 64;
+
+/// One concurrent log2 histogram.
+pub struct Hist {
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index for a value (see [`NBUCKETS`]).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(NBUCKETS - 1)
+    }
+}
+
+/// Representative value reported for a bucket: its geometric middle (the
+/// midpoint of `[2^(b-1), 2^b)`), so quantile estimates sit inside the
+/// bucket rather than at an edge.
+fn bucket_mid(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        let lo = 1u64 << (b - 1);
+        let hi = lo.saturating_mul(2).saturating_sub(1);
+        lo + (hi - lo) / 2
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (relaxed atomics; safe from any thread).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate (`q` in [0, 1]): the representative value of the
+    /// bucket where the cumulative count crosses `ceil(q * count)`.
+    /// Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (b, slot) in self.buckets.iter().enumerate() {
+            cum += slot.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_mid(b);
+            }
+        }
+        bucket_mid(NBUCKETS - 1)
+    }
+
+    /// Fold another histogram into this one (buckets/count/sum add, max
+    /// maxes) — the same merge-by-sum shape as `Counters::merge`.
+    pub fn merge(&self, other: &Hist) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+
+    /// `(bucket index, count)` for every non-empty bucket — the compact
+    /// form the bench reports embed.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(b, slot)| {
+                let c = slot.load(Ordering::Relaxed);
+                (c > 0).then_some((b, c))
+            })
+            .collect()
+    }
+}
+
+/// The fixed set of runtime latency distributions. Mirrors the
+/// `CollSelects`/`COLL_SELECT_LABELS` idiom: a closed enum plus a parallel
+/// label table, so the harness and CLI iterate the registry generically
+/// instead of growing a named field per metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HistId {
+    /// Blocking-receive latency: post (or wait entry) to payload in hand.
+    RecvWait,
+    /// Rendezvous stall: send posted to receiver claiming the envelope.
+    RndvStall,
+    /// Duration of one log-GC offer/ack/prune round.
+    GcRound,
+    /// Recovery stall: one full error-handler entry (detect to resume).
+    RecoveryStall,
+}
+
+/// Histograms in the registry (and label-table length).
+pub const NHIST: usize = 4;
+
+/// Labels, index-aligned with [`HistId`] discriminants.
+pub const HIST_LABELS: [&str; NHIST] = [
+    "recv_wait_ns",
+    "rndv_stall_ns",
+    "gc_round_ns",
+    "recovery_stall_ns",
+];
+
+fn hist_idx(id: HistId) -> usize {
+    match id {
+        HistId::RecvWait => 0,
+        HistId::RndvStall => 1,
+        HistId::GcRound => 2,
+        HistId::RecoveryStall => 3,
+    }
+}
+
+/// Point-in-time summary of one histogram, copied into `RunResult`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p99: u64,
+}
+
+/// Job-wide histogram registry: one [`Hist`] per [`HistId`], shared by
+/// every rank (recording is relaxed atomics, so no per-rank sharding is
+/// needed; there is nothing to merge at join time).
+pub struct HistRegistry {
+    hists: [Hist; NHIST],
+}
+
+impl Default for HistRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistRegistry {
+    pub fn new() -> Self {
+        Self {
+            hists: std::array::from_fn(|_| Hist::new()),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, id: HistId, v: u64) {
+        self.hists[hist_idx(id)].record(v);
+    }
+
+    pub fn get(&self, id: HistId) -> &Hist {
+        &self.hists[hist_idx(id)]
+    }
+
+    /// Snapshot every histogram, in [`HIST_LABELS`] order — the generic
+    /// iteration surface for the harness and the CLI summary.
+    pub fn snapshot(&self) -> Vec<HistSnapshot> {
+        self.hists
+            .iter()
+            .zip(HIST_LABELS.iter())
+            .map(|(h, &name)| HistSnapshot {
+                name,
+                count: h.count(),
+                sum: h.sum(),
+                max: h.max(),
+                p50: h.quantile(0.50),
+                p99: h.quantile(0.99),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_track_the_distribution() {
+        let h = Hist::new();
+        // 99 fast samples (~100ns) and 1 slow one (~1ms).
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(1_000_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 1_000_000);
+        let p50 = h.quantile(0.50);
+        assert!((64..128).contains(&p50), "p50 in the 100ns bucket: {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 < 1000, "p99 still in the fast bucket: {p99}");
+        let p999 = h.quantile(0.999);
+        assert!(p999 >= 524_288, "p99.9 lands in the slow bucket: {p999}");
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!((h.count(), h.sum(), h.max()), (0, 0, 0));
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn merge_sums_buckets_and_maxes_max() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record(10);
+        b.record(10);
+        b.record(5000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 5020);
+        assert_eq!(a.max(), 5000);
+        let buckets = a.nonzero_buckets();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0], (bucket_of(10), 2));
+    }
+
+    #[test]
+    fn registry_snapshot_is_label_aligned() {
+        let reg = HistRegistry::new();
+        reg.record(HistId::RecvWait, 7);
+        reg.record(HistId::RecoveryStall, 1 << 20);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), NHIST);
+        assert_eq!(snap[0].name, "recv_wait_ns");
+        assert_eq!(snap[0].count, 1);
+        assert_eq!(snap[3].name, "recovery_stall_ns");
+        assert_eq!(snap[3].count, 1);
+        assert_eq!(snap[1].count, 0);
+        assert_eq!(reg.get(HistId::RecvWait).sum(), 7);
+    }
+}

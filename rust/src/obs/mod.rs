@@ -1,0 +1,286 @@
+//! Observability layer: structured event tracing, the recovery flight
+//! recorder, and the latency-histogram registry (DESIGN.md §9).
+//!
+//! One [`JobObs`] bundle exists per job world, created by
+//! `JobWorld::build` *before* the fabrics so both fabrics, every rank's
+//! `RankCtx`, the monitor and the fault injector share it. All three
+//! instruments read the same clock — the job [`Sched`] — so every
+//! timestamp lives in one domain: wall time under `exec.mode=threaded`,
+//! virtual time (deterministic) under `event`.
+//!
+//! Exports are hand-assembled JSON (the crate is dependency-free):
+//! [`JobObs::chrome_trace_json`] emits the Chrome trace-event array
+//! format (loadable in Perfetto / `chrome://tracing`), with rank events
+//! on pid 0 (one track per rank) and recovery episodes as a separate
+//! pid 1 track; [`JobObs::episodes_json`] dumps the flight recorder.
+
+pub mod flight;
+pub mod hist;
+pub mod trace;
+
+use std::fmt;
+use std::sync::Arc;
+
+pub use flight::{Episode, EpisodeGuard, FlightRecorder};
+pub use hist::{Hist, HistId, HistRegistry, HistSnapshot, HIST_LABELS, NHIST};
+pub use trace::{SpanGuard, TraceEvent, Tracer};
+
+use crate::config::ObsPlan;
+use crate::sched::Sched;
+
+/// Open a tracer span through a [`JobObs`] handle; records on scope exit.
+/// Usage: `let _sp = trace_span!(obs, rank, "coll", "allreduce");`
+#[macro_export]
+macro_rules! trace_span {
+    ($obs:expr, $rank:expr, $cat:expr, $name:expr) => {
+        $obs.tracer.span($rank, $cat, $name)
+    };
+}
+
+/// Record an instantaneous tracer marker through a [`JobObs`] handle.
+#[macro_export]
+macro_rules! trace_instant {
+    ($obs:expr, $rank:expr, $cat:expr, $name:expr, $arg:expr) => {
+        $obs.tracer.instant($rank, $cat, $name, $arg)
+    };
+}
+
+/// The per-job observability bundle.
+pub struct JobObs {
+    pub tracer: Tracer,
+    pub flight: FlightRecorder,
+    pub hists: HistRegistry,
+}
+
+impl JobObs {
+    /// Build for a job world: tracer live iff `plan.trace`.
+    pub fn new(plan: &ObsPlan, clock: Arc<Sched>, nranks: usize) -> Arc<Self> {
+        Arc::new(Self {
+            tracer: Tracer::new(clock.clone(), nranks, plan.ring_cap, plan.trace),
+            flight: FlightRecorder::new(clock.clone()),
+            hists: HistRegistry::new(),
+        })
+    }
+
+    /// The disabled bundle standalone fabrics embed (unit tests, benches,
+    /// fabric-only callers): tracer off, recorder and histograms inert
+    /// but functional.
+    pub fn off(clock: Arc<Sched>) -> Arc<Self> {
+        Arc::new(Self {
+            tracer: Tracer::off(clock.clone()),
+            flight: FlightRecorder::new(clock.clone()),
+            hists: HistRegistry::new(),
+        })
+    }
+
+    /// Chrome trace-event JSON (the array form): deterministic ordering —
+    /// metadata, then rank events (ranks ascending, ring order), then the
+    /// recovery-episode track (episodes by `(rank, seq)`, steps in order).
+    pub fn chrome_trace_json(&self) -> String {
+        let mut lines: Vec<String> = Vec::new();
+        lines.push(
+            "{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":0,\"tid\":0,\
+             \"args\":{\"name\":\"ranks\"}}"
+                .to_string(),
+        );
+        lines.push(
+            "{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":1,\"tid\":0,\
+             \"args\":{\"name\":\"recovery\"}}"
+                .to_string(),
+        );
+        self.tracer.for_each(|rank, ev| {
+            lines.push(chrome_event_line(rank, ev));
+        });
+        for ep in self.flight.episodes() {
+            lines.push(format!(
+                "{{\"name\":\"episode\",\"cat\":\"recovery\",\"ph\":\"i\",\"s\":\"t\",\
+                 \"ts\":{},\"pid\":1,\"tid\":{},\"args\":{{\"seq\":{},\"trigger\":{},\
+                 \"detect_us\":{}}}}}",
+                us(ep.start_ns),
+                ep.rank,
+                ep.seq,
+                ep.trigger.map(|r| r as i64).unwrap_or(-1),
+                us(ep.detect_ns),
+            ));
+            let mut at = ep.start_ns;
+            for &(name, dur) in &ep.steps {
+                lines.push(format!(
+                    "{{\"name\":\"{name}\",\"cat\":\"recovery\",\"ph\":\"X\",\"ts\":{},\
+                     \"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"seq\":{}}}}}",
+                    us(at),
+                    us(dur),
+                    ep.rank,
+                    ep.seq,
+                ));
+                at += dur;
+            }
+        }
+        format!("[\n{}\n]\n", lines.join(",\n"))
+    }
+
+    /// `EPISODES.json`: the flight recorder's full structured records.
+    pub fn episodes_json(&self) -> String {
+        let eps = self.flight.episodes();
+        let mut lines: Vec<String> = Vec::new();
+        for ep in &eps {
+            let steps: Vec<String> = ep
+                .steps
+                .iter()
+                .map(|&(name, dur)| format!("{{\"name\":\"{name}\",\"ns\":{dur}}}"))
+                .collect();
+            let dead: Vec<String> = ep.dead.iter().map(|d| d.to_string()).collect();
+            lines.push(format!(
+                "  {{\"rank\":{},\"seq\":{},\"start_ns\":{},\"total_ns\":{},\
+                 \"detect_ns\":{},\"trigger\":{},\"dead\":[{}],\"epoch\":{},\
+                 \"promotions\":{},\"cold_restore\":{},\"bytes_resent\":{},\
+                 \"resends\":{},\"requests_reresolved\":{},\"completed\":{},\
+                 \"steps\":[{}]}}",
+                ep.rank,
+                ep.seq,
+                ep.start_ns,
+                ep.total_ns,
+                ep.detect_ns,
+                ep.trigger.map(|r| r as i64).unwrap_or(-1),
+                dead.join(","),
+                ep.epoch,
+                ep.promotions,
+                ep.cold_restore,
+                ep.bytes_resent,
+                ep.resends,
+                ep.requests_reresolved,
+                ep.completed,
+                steps.join(","),
+            ));
+        }
+        format!("{{\"episodes\":[\n{}\n]}}\n", lines.join(",\n"))
+    }
+}
+
+impl fmt::Debug for JobObs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JobObs")
+            .field("tracer_on", &self.tracer.on())
+            .field("events", &self.tracer.kept())
+            .field("dropped", &self.tracer.dropped())
+            .field("episodes", &self.flight.len())
+            .finish()
+    }
+}
+
+/// Microseconds with nanosecond precision, rendered deterministically
+/// (Chrome trace `ts`/`dur` are in microseconds).
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn chrome_event_line(rank: usize, ev: &TraceEvent) -> String {
+    debug_assert!(
+        !ev.name.contains(['"', '\\']) && !ev.cat.contains(['"', '\\']),
+        "event names/cats must be JSON-safe"
+    );
+    if ev.span {
+        format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":0,\"tid\":{},\"args\":{{\"id\":{},\"v\":{}}}}}",
+            ev.name,
+            ev.cat,
+            us(ev.ts_ns),
+            us(ev.dur_ns),
+            rank,
+            ev.id,
+            ev.arg,
+        )
+    } else {
+        format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\
+             \"pid\":0,\"tid\":{},\"args\":{{\"id\":{},\"v\":{}}}}}",
+            ev.name,
+            ev.cat,
+            us(ev.ts_ns),
+            rank,
+            ev.id,
+            ev.arg,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ObsPlan;
+
+    fn live() -> Arc<JobObs> {
+        let plan = ObsPlan {
+            trace: true,
+            ring_cap: 16,
+        };
+        JobObs::new(&plan, Sched::threaded(), 2)
+    }
+
+    #[test]
+    fn chrome_export_is_an_event_array() {
+        let obs = live();
+        obs.tracer.instant(0, "fabric", "send", 8);
+        {
+            let _sp = trace_span!(obs, 1, "coll", "bcast");
+        }
+        {
+            let mut ep = obs.flight.begin(1);
+            ep.step("shrink");
+            ep.finish();
+        }
+        let json = obs.chrome_trace_json();
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"cat\":\"fabric\""));
+        assert!(json.contains("\"cat\":\"coll\""));
+        assert!(json.contains("\"cat\":\"recovery\""));
+        assert!(json.contains("\"pid\":1"));
+        // Every line after the opener is an object or the closer.
+        for line in json.lines().skip(1) {
+            assert!(
+                line.starts_with('{') || line == "]",
+                "unexpected line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn episodes_export_schema() {
+        let obs = live();
+        {
+            let mut ep = obs.flight.begin(0);
+            ep.note_dead(&[3]);
+            ep.note_promotion();
+            ep.step("repair");
+            ep.finish();
+        }
+        let json = obs.episodes_json();
+        assert!(json.contains("\"episodes\":["));
+        assert!(json.contains("\"rank\":0"));
+        assert!(json.contains("\"dead\":[3]"));
+        assert!(json.contains("\"promotions\":1"));
+        assert!(json.contains("\"completed\":true"));
+        assert!(json.contains("\"name\":\"repair\""));
+    }
+
+    #[test]
+    fn microsecond_rendering_is_exact() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn disabled_bundle_exports_empty_but_valid() {
+        let obs = JobObs::off(Sched::threaded());
+        obs.tracer.instant(0, "fabric", "send", 1);
+        let json = obs.chrome_trace_json();
+        assert!(json.contains("process_name"));
+        assert!(!json.contains("\"cat\":\"fabric\""));
+        assert!(obs.episodes_json().contains("\"episodes\":["));
+        assert!(format!("{obs:?}").contains("tracer_on: false"));
+    }
+}

@@ -22,6 +22,7 @@ use crate::empi::reduce::{DType, ReduceOp};
 use crate::empi::{Comm, IAlltoallv, Recvd, Src, Tag};
 use crate::error::{CommError, UlfmError};
 use crate::metrics::Counters;
+use crate::obs::HistId;
 use crate::ompi::UlfmComm;
 
 /// Error out of one guarded operation.
@@ -88,10 +89,13 @@ impl<'a> Guard<'a> {
         req: &mut crate::empi::RecvReq,
     ) -> Result<Recvd, OpError> {
         let me = comm.my_fabric_rank();
+        let t0 = comm.fabric.clock().now_ns();
         let mut clock = comm.fabric.arrivals(me);
         loop {
             self.check()?;
             if let Some(m) = comm.test(req)? {
+                let wait = comm.fabric.clock().now_ns().saturating_sub(t0);
+                comm.fabric.obs.hists.record(HistId::RecvWait, wait);
                 return Ok(m);
             }
             clock = comm.fabric.wait_new_mail(me, clock, PARK_TICK);

@@ -46,6 +46,7 @@ use std::collections::HashSet;
 use crate::error::{CommError, RankKilled};
 use crate::fabric::{Envelope, MatchSpec};
 use crate::metrics::{Counters, Phase};
+use crate::obs::{EpisodeGuard, HistId};
 use crate::restore::{self, OfferMsg, Snapshot};
 use crate::util::{u64s_from_bytes, u64s_to_bytes};
 
@@ -64,6 +65,15 @@ impl PartReper {
     pub(crate) fn error_handler(&self) {
         let _phase = self.ctx.clock.scoped(Phase::ErrorHandler);
         Counters::bump(&self.ctx.counters.error_handler_entries);
+        // Flight-recorder episode for this handler entry: the step calls
+        // below tile [entry, exit] exactly, so under event mode the
+        // episode total equals this rank's ErrorHandler (+ Restore) phase
+        // time for the entry, tick for tick. An unwind (kill /
+        // interruption) closes the episode via drop, `completed = false`.
+        let obs = &self.ctx.obs;
+        let t0 = obs.tracer.clock().now_ns();
+        let mut sp = obs.tracer.span(self.ctx.rank, "recovery", "error_handler");
+        let mut ep = obs.flight.begin(self.ctx.rank);
         loop {
             // Job already aborted elsewhere: unwind with the same trigger.
             if let Some(dead_rank) = self.ctx.abort.get() {
@@ -76,10 +86,22 @@ impl PartReper {
                     st.oworld.revoke();
                 }
             }
-            match self.repair_and_recover() {
-                Ok(()) => return,
+            ep.step("revoke");
+            match self.repair_and_recover(&mut ep) {
+                Ok(()) => {
+                    ep.finish();
+                    let total = obs.tracer.clock().now_ns().saturating_sub(t0);
+                    obs.hists.record(HistId::RecoveryStall, total);
+                    sp.set_arg(total);
+                    return;
+                }
                 // Another failure during repair/recovery: run it again.
-                Err(OpError::Ulfm(_)) => continue,
+                Err(OpError::Ulfm(_)) => {
+                    // Close the failed attempt's residual interval so the
+                    // re-entered pipeline's steps start a fresh boundary.
+                    ep.step("ulfm_error");
+                    continue;
+                }
                 Err(OpError::Comm(CommError::Killed { rank })) => {
                     std::panic::panic_any(RankKilled { rank })
                 }
@@ -90,7 +112,7 @@ impl PartReper {
         }
     }
 
-    fn repair_and_recover(&self) -> Result<(), OpError> {
+    fn repair_and_recover(&self, ep: &mut EpisodeGuard<'_>) -> Result<(), OpError> {
         // ---- 2+3: shrink and rebuild the world.
         {
             let mut st = self.state.borrow_mut();
@@ -102,6 +124,12 @@ impl PartReper {
                 .copied()
                 .filter(|f| !new_oworld.group.contains(f))
                 .collect();
+            ep.step("shrink");
+            // Sorted so the episode record (and its JSON export) is
+            // deterministic regardless of hash order.
+            let mut dead_sorted: Vec<usize> = dead.iter().copied().collect();
+            dead_sorted.sort_unstable();
+            ep.note_dead(&dead_sorted);
             // Unrecoverable: a computational process died with neither a
             // live replica nor a spare left to adopt. Latch the job-wide
             // abort (so every rank reports the same trigger) and unwind.
@@ -115,6 +143,7 @@ impl PartReper {
             for &(_, fabric) in &outcome.promotions {
                 if fabric == self.ctx.rank {
                     Counters::bump(&self.ctx.counters.promotions);
+                    ep.note_promotion();
                 }
             }
             let dropped_reps =
@@ -122,6 +151,7 @@ impl PartReper {
             Counters::add(&self.ctx.counters.replica_drops, dropped_reps as u64);
 
             let epoch = st.epoch.next();
+            ep.note_epoch(epoch.raw());
             let base = WorldComms::base_ctx_from_oworld(&new_oworld, epoch.raw());
             let is_member = outcome.layout.assign.contains(&self.ctx.rank);
             let comms = is_member.then(|| {
@@ -151,15 +181,17 @@ impl PartReper {
                 }
             }
         }
+        ep.step("repair");
 
         // ---- 3b: ship peer-held shards to adopted spares before recovery
         // needs their logs.
-        self.cold_restore_phase()?;
+        self.cold_restore_phase(ep)?;
+        ep.step("cold_restore");
 
         // ---- 4: message recovery on the repaired world (members only —
         // unadopted spares return to standby).
         if self.state.borrow().is_member() {
-            self.recover()?;
+            self.recover(ep)?;
             // Epoch recovered: every adopted spare has its image, offers
             // need not be repeated. Unadopted spares can't observe this
             // (they skip recovery), so they keep re-offering on later
@@ -174,7 +206,7 @@ impl PartReper {
     /// gathers the offers, reassembles the newest complete generation, and
     /// installs the snapshot (image for [`PartReper::start`], log for
     /// recovery). Redundancy exhausted → job interruption.
-    fn cold_restore_phase(&self) -> Result<(), OpError> {
+    fn cold_restore_phase(&self, ep: &mut EpisodeGuard<'_>) -> Result<(), OpError> {
         let (pending, epoch, my_pending) = {
             let st = self.state.borrow();
             let mine = st
@@ -231,7 +263,7 @@ impl PartReper {
             }
             if awaiting_image {
                 let (comp, _) = my_pending.expect("awaiting_image implies my_pending");
-                self.gather_and_install(&g, &st, comp, epoch)?;
+                self.gather_and_install(&g, &st, comp, epoch, ep)?;
             }
         }
         if awaiting_image {
@@ -253,6 +285,7 @@ impl PartReper {
         st: &super::State,
         comp: usize,
         epoch: WorldEpoch,
+        ep: &mut EpisodeGuard<'_>,
     ) -> Result<(), OpError> {
         let me = self.ctx.rank;
         let fabric = &self.ctx.empi_fabric;
@@ -295,6 +328,7 @@ impl PartReper {
             Some((_gen, bytes, nshards)) => {
                 let snap = Snapshot::from_bytes(&bytes);
                 Counters::add(&self.ctx.counters.restore_shards_rebuilt, nshards as u64);
+                ep.note_cold_restore();
                 *self.log.borrow_mut() = snap.log;
                 *self.pending_image.borrow_mut() = Some(snap.image);
                 Ok(())
@@ -309,7 +343,7 @@ impl PartReper {
     }
 
     /// §VI-B message recovery.
-    fn recover(&self) -> Result<(), OpError> {
+    fn recover(&self, ep: &mut EpisodeGuard<'_>) -> Result<(), OpError> {
         let st = self.state.borrow();
         let g = Guard {
             oworld: &st.oworld,
@@ -342,6 +376,7 @@ impl PartReper {
             .collect();
         let all_last: Vec<u64> = offers.iter().map(|o| o.last_coll).collect();
         let min_cid = all_last.iter().copied().min().unwrap_or(0);
+        ep.step("agree");
 
         // Stale store guard: a cold-restored rank whose snapshot predates
         // my prune floor needs collective records I no longer hold — the
@@ -373,6 +408,7 @@ impl PartReper {
             .map(|&app| u64s_to_bytes(&log.received_wire(app)))
             .collect();
         let exchanged = g.alltoallv(eworld, &rows)?;
+        ep.step("exchange");
 
         // (c) Resend + skip, per destination incarnation I route to.
         for (epos, raw) in exchanged.iter().enumerate() {
@@ -417,10 +453,12 @@ impl PartReper {
                 g.check()?;
                 let _detached = eworld.isend_shared(epos, rec.tag, rec.id, rec.data.clone())?;
                 Counters::bump(&self.ctx.counters.resends);
+                ep.note_resend(rec.data.len() as u64);
             }
             // Skip what it already has but I have not issued yet.
             log.mark_future_skips(d_app, d_channel, &received);
         }
+        ep.step("resend");
 
         // (d) Replay collectives newer than the agreed floor.
         if my_role == Role::Comp {
@@ -432,6 +470,7 @@ impl PartReper {
                 self.replay_collective(&st, &g, &rec, rep_last)?;
             }
         }
+        ep.step("replay");
         // Replicas replay nothing: every collective they completed was
         // relayed by a computational process that logged it too.
 
@@ -448,9 +487,15 @@ impl PartReper {
         let floors = epoch::agree_floors(&offer_refs, &app_of, me_app);
         debug_assert_eq!(floors.replay_floor, min_cid);
         debug_assert!(floors.coll_floor <= min_cid);
+        // This prune counts as a GC round everywhere the periodic pass
+        // does: counter and histogram stay paired one-to-one.
+        let gc_t0 = self.ctx.obs.tracer.clock().now_ns();
         let stats = log.prune(floors.coll_floor, &floors.send_floors);
         Counters::bump(&g.counters.gc_rounds);
         Counters::add(&g.counters.records_pruned, stats.records() as u64);
+        let gc_ns = self.ctx.obs.tracer.clock().now_ns().saturating_sub(gc_t0);
+        self.ctx.obs.hists.record(HistId::GcRound, gc_ns);
+        ep.step("gc");
         Ok(())
     }
 

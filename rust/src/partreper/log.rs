@@ -66,6 +66,23 @@ pub enum CollKind {
     Scatter,
 }
 
+impl CollKind {
+    /// Stable lowercase label (trace span names, tooling).
+    pub fn name(self) -> &'static str {
+        match self {
+            CollKind::Barrier => "barrier",
+            CollKind::Bcast => "bcast",
+            CollKind::Reduce => "reduce",
+            CollKind::Allreduce => "allreduce",
+            CollKind::Allgather => "allgather",
+            CollKind::Alltoall => "alltoall",
+            CollKind::Alltoallv => "alltoallv",
+            CollKind::Gather => "gather",
+            CollKind::Scatter => "scatter",
+        }
+    }
+}
+
 /// One logged collective with everything needed to re-execute it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CollRecord {

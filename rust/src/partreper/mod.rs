@@ -45,6 +45,7 @@ use crate::empi::{DType, ReduceOp};
 use crate::error::{CommError, RankKilled};
 use crate::fabric::{Envelope, MatchSpec};
 use crate::metrics::{Counters, Phase};
+use crate::obs::HistId;
 use crate::ompi::UlfmComm;
 use crate::procimg::{ProcessImage, Replicable};
 use crate::procmgr::RankCtx;
@@ -414,6 +415,7 @@ impl PartReper {
             return;
         }
         let _phase = self.ctx.clock.scoped(Phase::Restore);
+        let mut sp = self.ctx.obs.tracer.span(self.ctx.rank, "store", "refresh");
         let me = self.ctx.rank;
         let me_app = st.comms().app_rank();
         let cfg = &self.ctx.cfg.restore;
@@ -477,6 +479,7 @@ impl PartReper {
         }
         Counters::bump(&self.ctx.counters.restore_refreshes);
         Counters::add(&self.ctx.counters.restore_shard_bytes, pushed_bytes);
+        sp.set_arg(pushed_bytes);
         drop(st);
         // The coverage cap just advanced: run a GC pass so the freshly
         // restorable records prune now rather than at the next cadence
@@ -732,6 +735,9 @@ impl PartReper {
             if !st.is_member() {
                 return;
             }
+            let obs = &self.ctx.obs;
+            let round_t0 = obs.tracer.clock().now_ns();
+            let mut sp = obs.tracer.span(self.ctx.rank, "gc", "gc_pass");
             let me = self.ctx.rank;
             let comms = st.comms();
             let layout = &comms.layout;
@@ -813,6 +819,9 @@ impl PartReper {
                 .prune(floors.coll_floor, &floors.send_floors);
             Counters::bump(&self.ctx.counters.gc_rounds);
             Counters::add(&self.ctx.counters.records_pruned, stats.records() as u64);
+            sp.set_arg(stats.records() as u64);
+            let round = obs.tracer.clock().now_ns().saturating_sub(round_t0);
+            obs.hists.record(HistId::GcRound, round);
         }
         let mut gc = self.gc.borrow_mut();
         gc.ops_since_pass = 0;
@@ -928,7 +937,11 @@ impl PartReper {
         self.reap_relays();
         self.gc_backpressure(input.len() + blocks.iter().map(|b| b.len()).sum::<usize>());
         let cid = self.log.borrow().next_coll_id();
-        let result = self.guarded(|st, g, _log| self.execute_collective(st, g, cid, &exec));
+        let result = {
+            let mut sp = self.ctx.obs.tracer.span(self.ctx.rank, "coll", kind.name());
+            sp.set_arg(cid);
+            self.guarded(|st, g, _log| self.execute_collective(st, g, cid, &exec))
+        };
         self.log.borrow_mut().log_collective(CollRecord {
             id: cid,
             kind,

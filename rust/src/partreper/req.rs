@@ -297,6 +297,8 @@ impl PartReper {
     /// storage, e.g. the `apps::Mpi` adapter).
     pub(crate) fn waitall_mut(&self, reqs: &mut [&mut Request]) {
         let me = self.ctx.rank;
+        let mut sp = self.ctx.obs.tracer.span(me, "req", "waitall");
+        sp.set_arg(reqs.len() as u64);
         // The wedge deadline runs on the fabric clock: virtual time in
         // event mode, wall time in threaded mode.
         let wedge_ns = WEDGE_DEADLINE.as_nanos() as u64;
@@ -322,7 +324,12 @@ impl PartReper {
                 // posted — the halo pattern waits its requests one at a
                 // time, and each must observe the repaired world on its
                 // own wait.
-                Self::reresolve_stale(&st, &g, &mut log, reqs);
+                let stale = Self::reresolve_stale(&st, &g, &mut log, reqs);
+                if stale > 0 {
+                    // Re-resolution happens after the handler episode
+                    // closed; attribute it to the latest one.
+                    self.ctx.obs.flight.note_reresolved(me, stale);
+                }
                 Self::progress_pass(&st, &g, &mut log, reqs)
             };
             match pass {
@@ -432,18 +439,21 @@ impl PartReper {
     /// generation is re-targeted at the repaired world. Runs at the top of
     /// every progress pass, so a repair that happened *outside* this wait
     /// (another request's wait, a blocking collective) is still observed.
+    /// Returns how many requests were re-resolved (flight-recorder food).
     fn reresolve_stale(
         st: &State,
         g: &Guard,
         log: &mut MessageLog,
         reqs: &mut [&mut Request],
-    ) {
+    ) -> u64 {
         let epoch = st.epoch;
+        let mut n = 0u64;
         for r in reqs.iter_mut() {
             let mut settled_send = false;
             match &mut r.inner {
                 Inner::Send(s) if s.epoch != epoch => {
                     Counters::bump(&g.counters.nb_replays);
+                    n += 1;
                     // Per fan-out channel, exactly like the blocking
                     // path's retry: settled channels stay settled; an
                     // in-flight transmit (its pre-repair envelope carries
@@ -477,6 +487,7 @@ impl PartReper {
                 }
                 Inner::Recv(rv) if rv.epoch != epoch => {
                     Counters::bump(&g.counters.nb_replays);
+                    n += 1;
                     // Dropping the stale request cancels its posting; its
                     // (old-context) mail, if any, is garbage by design.
                     rv.req = Some(Self::post_source_recv(st, rv.src, rv.tag));
@@ -489,5 +500,6 @@ impl PartReper {
                 Counters::bump(&g.counters.nb_completed);
             }
         }
+        n
     }
 }

@@ -19,6 +19,7 @@ use crate::config::JobConfig;
 use crate::error::{CommError, JobError, JobInterrupted, RankKilled};
 use crate::fabric::{Fabric, ProcSet};
 use crate::metrics::{Counters, PhaseClock};
+use crate::obs::JobObs;
 use crate::ompi::{CommRegistry, FailureDetector};
 use crate::sched::Sched;
 
@@ -73,6 +74,9 @@ pub struct RankCtx {
     pub clock: Arc<PhaseClock>,
     pub counters: Arc<Counters>,
     pub abort: Arc<JobAbort>,
+    /// The job's shared observability bundle (same instance both fabrics
+    /// carry): tracer, flight recorder, histogram registry.
+    pub obs: Arc<JobObs>,
 }
 
 /// Terminal state of one rank.
@@ -105,6 +109,7 @@ pub struct JobHandles<T> {
     pub ompi_fabric: Arc<Fabric>,
     pub empi_server: Arc<EmpiServer>,
     pub detector: Arc<FailureDetector>,
+    pub obs: Arc<JobObs>,
 }
 
 impl<T> JobHandles<T> {
@@ -152,6 +157,7 @@ pub struct JobWorld {
     pub restore_ctx: u64,
     pub gc_ctx: u64,
     pub abort: Arc<JobAbort>,
+    pub obs: Arc<JobObs>,
 }
 
 impl JobWorld {
@@ -164,10 +170,26 @@ impl JobWorld {
         // One scheduler per job; both fabrics share it so virtual time is
         // a single total order across EMPI and OMPI traffic.
         let sched = Sched::new(cfg.exec);
-        let empi_fabric =
-            Fabric::new_clocked("empi", procs.clone(), cfg.empi_net, cfg.coll, sched.clone());
-        let ompi_fabric =
-            Fabric::new_clocked("ompi", procs.clone(), cfg.ompi_net, cfg.coll, sched.clone());
+        // One observability bundle per job, created before the fabrics so
+        // both embed it: every span, episode and histogram sample is
+        // timestamped by this job's scheduler clock (one domain).
+        let obs = JobObs::new(&cfg.obs, sched.clone(), n);
+        let empi_fabric = Fabric::new_instrumented(
+            "empi",
+            procs.clone(),
+            cfg.empi_net,
+            cfg.coll,
+            sched.clone(),
+            obs.clone(),
+        );
+        let ompi_fabric = Fabric::new_instrumented(
+            "ompi",
+            procs.clone(),
+            cfg.ompi_net,
+            cfg.coll,
+            sched.clone(),
+            obs.clone(),
+        );
         let detector = FailureDetector::new();
         let registry = CommRegistry::new();
         let prte = PrteServer::start(cluster.clone());
@@ -192,6 +214,7 @@ impl JobWorld {
             restore_ctx,
             gc_ctx,
             abort: Arc::new(JobAbort::default()),
+            obs,
         }
     }
 
@@ -209,9 +232,12 @@ impl JobWorld {
             ompi_world_ctx: self.ompi_world_ctx,
             restore_ctx: self.restore_ctx,
             gc_ctx: self.gc_ctx,
-            clock: Arc::new(PhaseClock::new()),
+            // Phase attribution reads the job scheduler, so phase totals
+            // are virtual time under event mode (exact, deterministic).
+            clock: Arc::new(PhaseClock::new_on(self.sched.clone())),
             counters: Arc::new(Counters::default()),
             abort: self.abort.clone(),
+            obs: self.obs.clone(),
         }
     }
 }
@@ -260,6 +286,7 @@ where
         world.procs.clone(),
         world.detector.clone(),
         world.empi_server.clone(),
+        Some(world.obs.clone()),
     );
     let main = Arc::new(main);
     let start = Instant::now();
@@ -347,6 +374,7 @@ where
         ompi_fabric: world.ompi_fabric,
         empi_server: world.empi_server,
         detector: world.detector,
+        obs: world.obs,
     }
 }
 

@@ -14,6 +14,7 @@ use std::time::Duration;
 
 use super::servers::EmpiServer;
 use crate::fabric::ProcSet;
+use crate::obs::JobObs;
 use crate::ompi::FailureDetector;
 use crate::sched::Sched;
 
@@ -35,23 +36,39 @@ impl Monitor {
         detector: Arc<FailureDetector>,
         empi_server: Arc<EmpiServer>,
     ) -> Self {
-        Self::start_on(Sched::threaded(), procs, detector, empi_server)
+        Self::start_on(Sched::threaded(), procs, detector, empi_server, None)
     }
 
     /// Start the pump as a task of `sched`, so in event mode the detect
     /// tick is a virtual-clock timer and detection latency is
-    /// deterministic instead of host-load-dependent.
+    /// deterministic instead of host-load-dependent. When `obs` is given,
+    /// each newly-published death drops a failure mark into the flight
+    /// recorder — the publish-time half of the detection-latency record
+    /// (the injector marks kill time; see `obs::flight`).
     pub fn start_on(
         sched: Arc<Sched>,
         procs: Arc<ProcSet>,
         detector: Arc<FailureDetector>,
         empi_server: Arc<EmpiServer>,
+        obs: Option<Arc<JobObs>>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let sched2 = sched.clone();
         let handle = sched.spawn("prted-monitor", move || {
             let mut last_epoch = 0;
+            let mut known: Vec<bool> = vec![false; procs.len()];
+            let mut note_new = |dead: &[usize]| {
+                for &r in dead {
+                    if !known[r] {
+                        known[r] = true;
+                        if let Some(o) = &obs {
+                            o.flight.note_failure(r, sched2.now_ns());
+                            o.tracer.instant(r, "ft", "death_published", r as u64);
+                        }
+                    }
+                }
+            };
             while !stop2.load(Ordering::Relaxed) {
                 let epoch = procs.epoch();
                 if epoch != last_epoch {
@@ -59,6 +76,7 @@ impl Monitor {
                     // PRTED observed exits → PRRTE propagates → every
                     // PMIx client (the shared detector) learns.
                     let dead = procs.dead_ranks();
+                    note_new(&dead);
                     detector.publish_many(&dead);
                     // The EMPI server also gets its SIGCHLDs — the shim
                     // decides whether it reacts.
@@ -67,7 +85,9 @@ impl Monitor {
                 sched2.sleep(DETECT_TICK);
             }
             // Final sweep so post-join state is consistent.
-            detector.publish_many(&procs.dead_ranks());
+            let dead = procs.dead_ranks();
+            note_new(&dead);
+            detector.publish_many(&dead);
         });
         Self {
             stop,

@@ -28,6 +28,12 @@ impl Summary {
         self.samples.len()
     }
 
+    /// Raw samples in insertion order (the bench reports re-bucket them
+    /// into log2 histograms).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;

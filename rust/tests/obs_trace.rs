@@ -1,0 +1,225 @@
+//! Observability determinism (DESIGN.md §9): under `exec.mode=event` the
+//! tracer, flight recorder and histogram registry are all fed from the
+//! virtual clock, so two runs of the same job — including one injected
+//! failure and a replica promotion — must produce *byte-identical* trace
+//! and episode exports, and the episode records must reconcile exactly
+//! with the protocol counters and phase clocks.
+//!
+//! The failure choreography is the cross-mode equivalence recipe (see
+//! `xmode_equivalence.rs`): quiesce, victim self-poisons, survivors wait
+//! off-wire for ULFM knowledge, then run guarded collectives across the
+//! promotion.
+
+use std::time::Duration;
+
+use partreper::config::JobConfig;
+use partreper::empi::{DType, ReduceOp};
+use partreper::error::JobError;
+use partreper::metrics::{Counters, Phase};
+use partreper::obs::HistId;
+use partreper::partreper::replicate::BlobState;
+use partreper::partreper::{PartReper, Start};
+use partreper::procmgr::{launch_world, JobWorld, RankOutcome};
+use partreper::sched::ExecMode;
+use partreper::util::{u64s_from_bytes, u64s_to_bytes};
+
+const VICTIM: usize = 0;
+const ITERS: u64 = 3;
+
+fn traced_cfg() -> JobConfig {
+    let mut cfg = JobConfig::new(5, 50.0);
+    cfg.exec = ExecMode::Event;
+    cfg.seed = 42;
+    cfg.failure_check_stride = 1;
+    cfg.obs.trace = true;
+    // A short GC cadence so gc_pass spans and GcRound samples appear.
+    cfg.log.gc_interval = 4;
+    cfg
+}
+
+/// Everything one traced run exports and the ground truth to check it
+/// against.
+struct TracedRun {
+    chrome: String,
+    episodes_json: String,
+    episodes: Vec<partreper::obs::Episode>,
+    promotions: u64,
+    cold_restores: u64,
+    gc_rounds: u64,
+    recv_waits: u64,
+    gc_round_samples: u64,
+    recovery_stalls: u64,
+    /// Per-rank `ErrorHandler` / `Restore` / `Replication` phase ns.
+    phase_ns: Vec<(u64, u64, u64)>,
+    trace_events: u64,
+}
+
+fn run_traced() -> TracedRun {
+    let cfg = traced_cfg();
+    let world = JobWorld::build(&cfg);
+    let report = launch_world(world, move |ctx| -> Result<Option<u64>, JobError> {
+        let me = ctx.rank;
+        let procs = ctx.procs.clone();
+        let detector = ctx.detector.clone();
+        let clock = ctx.empi_fabric.clock().clone();
+        let pr = PartReper::init(ctx);
+        match pr.start::<BlobState>() {
+            Start::Retired => return Ok(None),
+            Start::Fresh => {}
+            Start::Restored(_) => {
+                return Err(JobError::Runtime("unexpected cold restore".into()));
+            }
+        }
+        let (r, n) = (pr.rank(), pr.size());
+        let mut acc: u64 = r as u64 + 1;
+        for iter in 0..ITERS {
+            let right = (r + 1) % n;
+            let left = (r + n - 1) % n;
+            let got = pr.sendrecv(right, left, 10 + iter as i64, &acc.to_le_bytes());
+            let bytes: [u8; 8] = got.try_into().expect("ring payload is 8 bytes");
+            acc = acc.wrapping_add(u64::from_le_bytes(bytes));
+            let sum = pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]));
+            acc ^= u64s_from_bytes(&sum)[0];
+        }
+        pr.barrier();
+        if me == VICTIM {
+            procs.poison(me);
+            pr.barrier();
+            unreachable!("poisoned rank must not survive a fabric op");
+        }
+        while !detector.is_known_failed(VICTIM) {
+            clock.sleep(Duration::from_micros(200));
+        }
+        let sum = pr.allreduce(DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]));
+        acc ^= u64s_from_bytes(&sum)[0];
+        pr.finalize();
+        Ok(Some(acc))
+    });
+    let mut killed = 0;
+    for o in &report.outcomes {
+        match o {
+            RankOutcome::Done(_) => {}
+            RankOutcome::Killed => killed += 1,
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(killed, 1, "exactly the victim dies");
+    let totals = report.total_counters();
+    let phase_ns = report
+        .clocks
+        .iter()
+        .map(|c| {
+            (
+                c.ns(Phase::ErrorHandler),
+                c.ns(Phase::Restore),
+                c.ns(Phase::Replication),
+            )
+        })
+        .collect();
+    TracedRun {
+        chrome: report.obs.chrome_trace_json(),
+        episodes_json: report.obs.episodes_json(),
+        episodes: report.obs.flight.episodes(),
+        promotions: Counters::get(&totals.promotions),
+        cold_restores: Counters::get(&totals.cold_restores),
+        gc_rounds: Counters::get(&totals.gc_rounds),
+        recv_waits: report.obs.hists.get(HistId::RecvWait).count(),
+        gc_round_samples: report.obs.hists.get(HistId::GcRound).count(),
+        recovery_stalls: report.obs.hists.get(HistId::RecoveryStall).count(),
+        phase_ns,
+        trace_events: report.obs.tracer.kept(),
+    }
+}
+
+#[test]
+fn event_mode_trace_exports_are_run_to_run_identical() {
+    let a = run_traced();
+    let b = run_traced();
+    assert!(a.trace_events > 0, "tracing was enabled; events must exist");
+    assert_eq!(
+        a.chrome, b.chrome,
+        "event-mode Chrome trace must be byte-identical across runs"
+    );
+    assert_eq!(
+        a.episodes_json, b.episodes_json,
+        "event-mode episode export must be byte-identical across runs"
+    );
+}
+
+#[test]
+fn trace_covers_fabric_collective_gc_and_recovery_tracks() {
+    let r = run_traced();
+    for needle in [
+        "\"cat\":\"fabric\"",
+        "\"cat\":\"coll\"",
+        "\"cat\":\"gc\"",
+        "\"cat\":\"req\"",
+        "\"cat\":\"ft\"",
+        "\"cat\":\"recovery\"",
+        "\"pid\":1", // the recovery-episode track
+        "\"name\":\"error_handler\"",
+    ] {
+        assert!(r.chrome.contains(needle), "trace missing {needle}");
+    }
+    // Both exports parse as single JSON documents line-structured the way
+    // the python checker expects.
+    assert!(r.chrome.starts_with("[\n") && r.chrome.trim_end().ends_with(']'));
+    assert!(r.episodes_json.starts_with("{\"episodes\":["));
+}
+
+#[test]
+fn episodes_reconcile_with_counters_and_phase_clocks() {
+    let r = run_traced();
+    assert!(!r.episodes.is_empty(), "the failure must record episodes");
+
+    // Step durations tile each episode exactly.
+    for ep in &r.episodes {
+        let step_sum: u64 = ep.steps.iter().map(|&(_, d)| d).sum();
+        assert_eq!(
+            step_sum, ep.total_ns,
+            "rank {} seq {}: steps must tile the episode",
+            ep.rank, ep.seq
+        );
+        assert!(ep.completed, "choreographed recovery completes cleanly");
+        assert_eq!(ep.dead, vec![VICTIM], "shrink saw exactly the victim");
+        assert!(ep.trigger.is_some(), "a failure mark preceded the handler");
+    }
+
+    // Episode bookkeeping matches the protocol counters exactly.
+    let ep_promotions: u64 = r.episodes.iter().map(|e| e.promotions).sum();
+    assert_eq!(ep_promotions, r.promotions);
+    assert!(r.promotions >= 1, "rdegree=50 failure promotes a replica");
+    let ep_cold: u64 = r.episodes.iter().filter(|e| e.cold_restore).count() as u64;
+    assert_eq!(ep_cold, r.cold_restores);
+
+    // One RecoveryStall sample per completed handler entry.
+    assert_eq!(r.recovery_stalls, r.episodes.len() as u64);
+
+    // Histograms: every gc_pass recorded a GcRound sample; guarded
+    // receives recorded waits.
+    assert_eq!(r.gc_round_samples, r.gc_rounds);
+    assert!(r.gc_rounds > 0, "gc_interval=4 must run GC passes");
+    assert!(r.recv_waits > 0);
+
+    // Under the virtual clock, phase attribution reconciles tick-for-tick:
+    // `ErrorHandler` ns accrue only inside handler entries, and a nested
+    // `Restore`/`Replication` scope inside an entry suspends them, so per
+    // rank: handler <= sum(episode totals) <= handler + restore + repl.
+    for (rank, &(handler, restore, repl)) in r.phase_ns.iter().enumerate() {
+        let ep_total: u64 = r
+            .episodes
+            .iter()
+            .filter(|e| e.rank == rank)
+            .map(|e| e.total_ns)
+            .sum();
+        assert!(
+            ep_total >= handler,
+            "rank {rank}: episodes ({ep_total}ns) must cover handler time ({handler}ns)"
+        );
+        assert!(
+            ep_total <= handler + restore + repl,
+            "rank {rank}: episodes ({ep_total}ns) exceed handler+restore+replication \
+             ({handler}+{restore}+{repl}ns)"
+        );
+    }
+}

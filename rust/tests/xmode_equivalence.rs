@@ -28,7 +28,7 @@ use std::time::Duration;
 use partreper::config::JobConfig;
 use partreper::empi::{DType, ReduceOp};
 use partreper::error::JobError;
-use partreper::metrics::Counters;
+use partreper::metrics::{Counters, Phase};
 use partreper::partreper::replicate::BlobState;
 use partreper::partreper::{PartReper, Start};
 use partreper::procmgr::{launch_world, JobWorld, RankOutcome};
@@ -50,10 +50,21 @@ fn job_cfg(ncomp: usize, mode: ExecMode) -> JobConfig {
     cfg
 }
 
-/// Run the mixed p2p/collective/promotion job under `mode` and return the
-/// EMPI wire schedule, every survivor's checksum (sorted), and the
-/// promotion count.
-fn schedule_for(ncomp: usize, mode: ExecMode) -> (String, Vec<u64>, u64) {
+/// One mode's observables: the EMPI wire schedule, every survivor's
+/// checksum (sorted), the promotion count, and the phase-clock totals
+/// (fabric-clock domain: wall under threaded, virtual under event).
+struct ModeRun {
+    dump: String,
+    sums: Vec<u64>,
+    promotions: u64,
+    handler_s: f64,
+    app_s: f64,
+    virtual_s: f64,
+    nranks: usize,
+}
+
+/// Run the mixed p2p/collective/promotion job under `mode`.
+fn schedule_for(ncomp: usize, mode: ExecMode) -> ModeRun {
     let cfg = job_cfg(ncomp, mode);
     let world = JobWorld::build(&cfg);
     world.empi_fabric.tap_start();
@@ -122,22 +133,49 @@ fn schedule_for(ncomp: usize, mode: ExecMode) -> (String, Vec<u64>, u64) {
     assert_eq!(killed, 1, "{mode:?} ncomp={ncomp}: exactly the victim dies");
     sums.sort_unstable();
     let promotions = Counters::get(&report.total_counters().promotions);
-    (report.empi_fabric.tap_dump(), sums, promotions)
+    let (_, virtual_ns, _) = report.empi_fabric.clock().snapshot();
+    ModeRun {
+        dump: report.empi_fabric.tap_dump(),
+        sums,
+        promotions,
+        handler_s: report.phase_seconds(Phase::ErrorHandler),
+        app_s: report.phase_seconds(Phase::App),
+        virtual_s: virtual_ns as f64 / 1e9,
+        nranks: report.outcomes.len(),
+    }
 }
 
 fn assert_modes_agree(ncomp: usize) {
-    let (dump_t, sums_t, promo_t) = schedule_for(ncomp, ExecMode::Threaded);
-    let (dump_e, sums_e, promo_e) = schedule_for(ncomp, ExecMode::Event);
-    assert!(promo_t >= 1, "threaded ncomp={ncomp}: promotion must fire");
-    assert!(promo_e >= 1, "event ncomp={ncomp}: promotion must fire");
-    assert!(!dump_t.is_empty(), "tap must have captured EMPI traffic");
+    let t = schedule_for(ncomp, ExecMode::Threaded);
+    let e = schedule_for(ncomp, ExecMode::Event);
+    assert!(t.promotions >= 1, "threaded ncomp={ncomp}: promotion must fire");
+    assert!(e.promotions >= 1, "event ncomp={ncomp}: promotion must fire");
+    assert!(!t.dump.is_empty(), "tap must have captured EMPI traffic");
     assert_eq!(
-        sums_t, sums_e,
+        t.sums, e.sums,
         "ncomp={ncomp}: survivor checksums diverged across modes"
     );
     assert_eq!(
-        dump_t, dump_e,
+        t.dump, e.dump,
         "ncomp={ncomp}: wire schedules diverged across modes"
+    );
+    // Phase attribution must work in both clock domains: every run spends
+    // real time in the app and error-handler phases.
+    assert!(t.handler_s > 0.0, "threaded ncomp={ncomp}: handler phase empty");
+    assert!(e.handler_s > 0.0, "event ncomp={ncomp}: handler phase empty");
+    assert!(t.app_s > 0.0 && e.app_s > 0.0);
+    // And in event mode it must be *virtual* time: per rank, attributed
+    // time cannot exceed the job's total virtual span. (With the old
+    // wall-clock PhaseClock this sum was host wall time — orders of
+    // magnitude past the virtual span.)
+    assert!(
+        e.app_s + e.handler_s <= e.nranks as f64 * e.virtual_s + 1e-9,
+        "ncomp={ncomp}: event-mode phase totals exceed the virtual span \
+         (app={} + handler={} > {} ranks x {}s)",
+        e.app_s,
+        e.handler_s,
+        e.nranks,
+        e.virtual_s
     );
 }
 
