@@ -20,6 +20,17 @@ PARTREPER_EXEC=event cargo test -q
 echo "== cross-mode schedule equivalence (threaded vs event wire taps) =="
 cargo test -q --test xmode_equivalence
 
+echo "== failure-schedule exploration smoke (DESIGN.md §10) =="
+# Bounded model-check of the recovery protocol: 1000+ distinct injection
+# schedules over the tiny world, every safety property (P1-P5) asserted,
+# violations printed as replayable PARTREPER_SCHEDULE tokens. Set
+# PARTREPER_EXPLORE_DEEP=1 for the long multi-shape sweep (worlds to n=9).
+cargo test -q --test explore_schedules
+if [[ "${PARTREPER_EXPLORE_DEEP:-0}" == "1" ]]; then
+  echo "-- deep exploration (PARTREPER_EXPLORE_DEEP=1)"
+  cargo test -q --release --test explore_schedules -- --ignored
+fi
+
 echo "== benches + examples compile =="
 cargo bench --no-run
 cargo build --release --examples

@@ -130,6 +130,34 @@ impl Default for ObsPlan {
     }
 }
 
+/// The deterministic failure-schedule explorer (`explore.*` keys —
+/// `crate::explore`, DESIGN.md §10): sweep budget, sampling seed, and the
+/// per-schedule injection cap. Only the explorer reads this; a normal
+/// job ignores it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExplorePlan {
+    /// Upper bound on explored schedules per sweep. Exhaustive
+    /// single-injection enumeration is used when it fits; past the
+    /// budget the explorer falls back to Xoshiro sampling.
+    pub budget: usize,
+    /// Sampling seed — schedule generation is a pure function of
+    /// (scenario, seed, budget).
+    pub seed: u64,
+    /// Most injections composed into one schedule (bursts, kills during
+    /// recovery).
+    pub max_injections: usize,
+}
+
+impl Default for ExplorePlan {
+    fn default() -> Self {
+        Self {
+            budget: 1200,
+            seed: 0x5EED_0DD5,
+            max_injections: 3,
+        }
+    }
+}
+
 /// Everything needed to launch one job.
 #[derive(Clone, Debug)]
 pub struct JobConfig {
@@ -178,6 +206,8 @@ pub struct JobConfig {
     pub exec: ExecMode,
     /// Observability (`obs.*` keys — DESIGN.md §9).
     pub obs: ObsPlan,
+    /// Failure-schedule explorer (`explore.*` keys — DESIGN.md §10).
+    pub explore: ExplorePlan,
 }
 
 impl Default for JobConfig {
@@ -198,6 +228,7 @@ impl Default for JobConfig {
             serial_fanout: false,
             exec: ExecMode::from_env(),
             obs: ObsPlan::default(),
+            explore: ExplorePlan::default(),
         }
     }
 }
@@ -314,6 +345,23 @@ impl JobConfig {
                 self.serial_fanout = value.parse().map_err(|_| bad(key, value))?
             }
             "exec.mode" => self.exec = ExecMode::parse(value).ok_or_else(|| bad(key, value))?,
+            "explore.budget" => {
+                let b: usize = value.parse().map_err(|_| bad(key, value))?;
+                if b == 0 {
+                    return Err(bad(key, value));
+                }
+                self.explore.budget = b;
+            }
+            "explore.seed" => {
+                self.explore.seed = value.parse().map_err(|_| bad(key, value))?
+            }
+            "explore.max_injections" => {
+                let m: usize = value.parse().map_err(|_| bad(key, value))?;
+                if m == 0 {
+                    return Err(bad(key, value));
+                }
+                self.explore.max_injections = m;
+            }
             "obs.trace" => self.obs.trace = value.parse().map_err(|_| bad(key, value))?,
             "obs.ring_cap" => {
                 let c: usize = value.parse().map_err(|_| bad(key, value))?;
@@ -450,6 +498,21 @@ mod tests {
         assert_eq!(cfg.obs.ring_cap, 1024);
         assert!(cfg.set("obs.trace", "maybe").is_err());
         assert!(cfg.set("obs.ring_cap", "0").is_err());
+    }
+
+    #[test]
+    fn explore_overrides_parse() {
+        let mut cfg = JobConfig::default();
+        assert_eq!(cfg.explore, ExplorePlan::default());
+        cfg.set("explore.budget", "5000").unwrap();
+        cfg.set("explore.seed", "99").unwrap();
+        cfg.set("explore.max_injections", "2").unwrap();
+        assert_eq!(cfg.explore.budget, 5000);
+        assert_eq!(cfg.explore.seed, 99);
+        assert_eq!(cfg.explore.max_injections, 2);
+        assert!(cfg.set("explore.budget", "0").is_err());
+        assert!(cfg.set("explore.max_injections", "0").is_err());
+        assert!(cfg.set("explore.seed", "abc").is_err());
     }
 
     #[test]

@@ -1,0 +1,660 @@
+//! Deterministic failure-schedule explorer: model-check the recovery
+//! protocol over enumerated injection points (DESIGN.md §10).
+//!
+//! Event mode gives every run a single total order of virtual-clock
+//! decisions; [`crate::sched::Sched::set_point_hook`] numbers them
+//! `0, 1, 2, …`. A *schedule* ([`Schedule`]) names a world shape plus a
+//! list of `(point, victim)` kills in that coordinate system, so the
+//! explorer can place a failure at **every distinct protocol step** —
+//! mid-collective, inside a recovery, during a store push or a GC offer
+//! round — and replay any of them byte-identically from a printed
+//! `PARTREPER_SCHEDULE` token.
+//!
+//! After each explored run, [`check_run`] asserts the safety properties
+//! (P1–P5 below) promoted from the DESIGN.md §5–§7 prose and shared with
+//! the property suites through [`crate::testutil::invariants`]. A
+//! violation carries the replay token; [`explore`] prints it as
+//! `PARTREPER_SCHEDULE=<token>`.
+
+pub mod token;
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ExplorePlan;
+use crate::metrics::Counters;
+use crate::obs::Episode;
+use crate::partreper::PartReper;
+use crate::procmgr::{launch_world, JobWorld, RankOutcome};
+use crate::restore::demo::{expected_ring, restorable_ring};
+use crate::testutil::invariants;
+use crate::util::{fnv1a, Xoshiro256};
+
+pub use token::{Injection, Scenario, Schedule, ENV_SCHEDULE};
+
+/// Per-rank terminal state of one explored run ([`RankOutcome`] with the
+/// workload's payload made concrete: `Done(None)` is a retired spare).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Done(Option<u64>),
+    Killed,
+    Interrupted(usize),
+    Error(String),
+}
+
+/// Everything observable about one explored run, in virtual-time
+/// coordinates — under event mode every field is a pure function of the
+/// schedule, which is what makes [`ExploredRun::digest`] a replay check.
+#[derive(Clone, Debug)]
+pub struct ExploredRun {
+    pub schedule: Schedule,
+    pub outcomes: Vec<Outcome>,
+    /// Kills that actually landed, stamped with the point they fired at.
+    pub applied: Vec<Injection>,
+    /// Kills dropped because the victim was already dead/finalized or was
+    /// the last live rank.
+    pub skipped: usize,
+    /// Total schedule points the run produced.
+    pub points: u64,
+    /// Job-wide error-handler entries (episode reconciliation anchor).
+    pub handler_entries: u64,
+    /// The job-abort latch, if an interruption was triggered.
+    pub trigger: Option<usize>,
+    pub episodes: Vec<Episode>,
+    /// Canonical wire-schedule dump of both fabrics.
+    pub wire: String,
+}
+
+impl ExploredRun {
+    /// Canonical render of every deterministic observable. Two runs of the
+    /// same schedule must produce identical renders — the explorer's
+    /// replay spot-checks and the pinned regression tests compare these.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "schedule {}", self.schedule.token());
+        for (r, o) in self.outcomes.iter().enumerate() {
+            let _ = writeln!(s, "rank {r} {o:?}");
+        }
+        for inj in &self.applied {
+            let _ = writeln!(s, "applied {}@{}", inj.victim, inj.point);
+        }
+        let _ = writeln!(
+            s,
+            "skipped {} points {} handler_entries {} trigger {:?}",
+            self.skipped, self.points, self.handler_entries, self.trigger
+        );
+        for ep in &self.episodes {
+            let _ = writeln!(
+                s,
+                "episode rank {} seq {} total {} steps {} completed {}",
+                ep.rank,
+                ep.seq,
+                ep.total_ns,
+                ep.steps.len(),
+                ep.completed
+            );
+        }
+        s.push_str(&self.wire);
+        s
+    }
+
+    /// FNV-1a digest of [`render`](Self::render) — the byte-identity
+    /// anchor for replays.
+    pub fn digest(&self) -> u64 {
+        fnv1a(self.render().as_bytes())
+    }
+}
+
+/// Trigger state shared between the schedule hook and the runner.
+struct TriggerGun {
+    inj: Vec<Injection>,
+    next: usize,
+    applied: Vec<Injection>,
+    skipped: usize,
+}
+
+/// Run one schedule to completion and collect its observables.
+///
+/// The world runs `restorable_ring` under `exec.mode=event` with the
+/// Weibull injector off; the schedule-point hook fires each injection at
+/// the first point `>= its point` (in token order), mirroring the fault
+/// injector's kill sequence: failure mark, trace marker, poison, wake
+/// both fabrics. An injection is *skipped* (not an error) when its victim
+/// is already dead or finalized, or when it would kill the last live
+/// rank — so sampled schedules near the end of the run stay meaningful.
+pub fn run_schedule(schedule: &Schedule) -> ExploredRun {
+    let cfg = schedule.scenario.job_config();
+    let world = JobWorld::build(&cfg);
+    world.empi_fabric.tap_start();
+    world.ompi_fabric.tap_start();
+
+    let gun = Arc::new(Mutex::new(TriggerGun {
+        inj: schedule.injections.clone(),
+        next: 0,
+        applied: Vec::new(),
+        skipped: 0,
+    }));
+    {
+        let gun = Arc::clone(&gun);
+        let procs = world.procs.clone();
+        let obs = world.obs.clone();
+        let sched = world.sched.clone();
+        let fabrics = [world.empi_fabric.clone(), world.ompi_fabric.clone()];
+        // The hook runs on the yielding task's thread *outside* the
+        // scheduler's core lock, so poisoning and fabric wakeups are safe
+        // here (same calls the injector thread makes).
+        world.sched.set_point_hook(move |point| {
+            let mut g = gun.lock().unwrap();
+            while g.next < g.inj.len() && g.inj[g.next].point <= point {
+                let victim = g.inj[g.next].victim;
+                g.next += 1;
+                let live = (0..procs.len())
+                    .filter(|&r| {
+                        !procs.is_poisoned(r) && procs.is_alive(r) && !procs.is_finalized(r)
+                    })
+                    .count();
+                if procs.is_poisoned(victim)
+                    || !procs.is_alive(victim)
+                    || procs.is_finalized(victim)
+                    || live <= 1
+                {
+                    g.skipped += 1;
+                    continue;
+                }
+                obs.flight.note_failure(victim, sched.now_ns());
+                obs.tracer.instant(victim, "ft", "killed", victim as u64);
+                procs.poison(victim);
+                for f in &fabrics {
+                    f.wake_all();
+                }
+                g.applied.push(Injection { point, victim });
+            }
+        });
+    }
+
+    let sched = world.sched.clone();
+    let abort = world.abort.clone();
+    let iters = schedule.scenario.iters;
+    let refresh = schedule.scenario.refresh_every;
+    let report = launch_world(
+        world,
+        move |ctx| -> Result<Option<u64>, crate::error::JobError> {
+            let pr = PartReper::init(ctx);
+            Ok(restorable_ring(&pr, iters, refresh))
+        },
+    );
+
+    let outcomes = report
+        .outcomes
+        .iter()
+        .map(|o| match o {
+            RankOutcome::Done(v) => Outcome::Done(*v),
+            RankOutcome::Killed => Outcome::Killed,
+            RankOutcome::Interrupted { dead_rank } => Outcome::Interrupted(*dead_rank),
+            RankOutcome::Error(e) => Outcome::Error(e.clone()),
+        })
+        .collect();
+    let totals = report.total_counters();
+    let wire = format!(
+        "{}{}",
+        report.empi_fabric.tap_dump(),
+        report.ompi_fabric.tap_dump()
+    );
+    let g = gun.lock().unwrap();
+    ExploredRun {
+        schedule: schedule.clone(),
+        outcomes,
+        applied: g.applied.clone(),
+        skipped: g.skipped,
+        points: sched.points(),
+        handler_entries: Counters::get(&totals.error_handler_entries),
+        trigger: abort.get(),
+        episodes: report.obs.flight.episodes(),
+        wire,
+    }
+}
+
+/// The safety properties checked after every explored run:
+///
+/// - **P1 — no wedges, no protocol errors.** No rank ends in `Error`.
+///   Fabric receives carry virtual-time deadlines, so a wedged schedule
+///   surfaces as a loud timeout error here, never a hung run. Log-floor
+///   and store-generation bugs also land here (a resend from a GC'd
+///   floor or a stale-generation restore wedges or errors its peer).
+/// - **P2 — exact answers.** Every `Done(Some(v))` equals the workload's
+///   closed form `expected_ring(ncomp, iters)` bit-for-bit; `Done(None)`
+///   (a retired spare) only appears on ranks that started as spares.
+/// - **P3 — interruption legality.** Any `Interrupted` outcome requires
+///   at least one applied kill, a single latched trigger value shared by
+///   every interrupted rank, and that trigger must be a rank the
+///   schedule actually killed. Conversely an applied victim never ends
+///   `Done` — its death must be observed.
+/// - **P4 — episode reconciliation.** Exactly one flight-recorder
+///   episode per error-handler entry, per-rank ordinals dense, step
+///   durations tile each episode's total, and ranks that finished have
+///   only completed episodes ([`invariants::check_episodes`]).
+/// - **P5 — quiescent cleanliness.** A run where no kill landed behaves
+///   like a failure-free run: all ranks `Done`, zero handler entries, no
+///   abort trigger.
+pub fn check_run(run: &ExploredRun) -> Result<(), String> {
+    let sc = &run.schedule.scenario;
+    let expect = expected_ring(sc.ncomp as u64, sc.iters);
+    let spare_base = sc.ncomp + sc.nrep;
+
+    // P1: no rank may end in Error.
+    for (r, o) in run.outcomes.iter().enumerate() {
+        if let Outcome::Error(e) = o {
+            return Err(format!("P1: rank {r} errored: {e}"));
+        }
+    }
+
+    // P2: exact checksums; None only from spares.
+    for (r, o) in run.outcomes.iter().enumerate() {
+        match o {
+            Outcome::Done(Some(v)) if *v != expect => {
+                return Err(format!("P2: rank {r} checksum {v} != expected {expect}"));
+            }
+            Outcome::Done(None) if r < spare_base => {
+                return Err(format!("P2: non-spare rank {r} retired without an answer"));
+            }
+            _ => {}
+        }
+    }
+
+    // P3: interruption legality.
+    let interrupted: Vec<usize> = run
+        .outcomes
+        .iter()
+        .filter_map(|o| match o {
+            Outcome::Interrupted(d) => Some(*d),
+            _ => None,
+        })
+        .collect();
+    if !interrupted.is_empty() {
+        if run.applied.is_empty() {
+            return Err("P3: interrupted with no applied kill".into());
+        }
+        let d0 = interrupted[0];
+        if interrupted.iter().any(|&d| d != d0) {
+            return Err(format!("P3: divergent interruption triggers {interrupted:?}"));
+        }
+        if run.trigger != Some(d0) {
+            return Err(format!(
+                "P3: latched trigger {:?} != reported trigger {d0}",
+                run.trigger
+            ));
+        }
+        if !run.applied.iter().any(|i| i.victim == d0) {
+            return Err(format!("P3: trigger {d0} was never killed by the schedule"));
+        }
+    }
+    for inj in &run.applied {
+        if matches!(run.outcomes[inj.victim], Outcome::Done(_)) {
+            return Err(format!(
+                "P3: victim {} killed at point {} but finished Done",
+                inj.victim, inj.point
+            ));
+        }
+    }
+
+    // P4: episode reconciliation.
+    let done_ranks: Vec<usize> = run
+        .outcomes
+        .iter()
+        .enumerate()
+        .filter_map(|(r, o)| matches!(o, Outcome::Done(_)).then_some(r))
+        .collect();
+    invariants::check_episodes(&run.episodes, run.handler_entries, &done_ranks)
+        .map_err(|e| format!("P4: {e}"))?;
+
+    // P5: no landed kill means a clean, quiet run.
+    if run.applied.is_empty() {
+        if !run.outcomes.iter().all(|o| matches!(o, Outcome::Done(_))) {
+            return Err("P5: no kill landed yet a rank did not finish".into());
+        }
+        if run.handler_entries != 0 {
+            return Err(format!(
+                "P5: {} handler entries in a failure-free run",
+                run.handler_entries
+            ));
+        }
+        if run.trigger.is_some() {
+            return Err(format!("P5: abort latched ({:?}) without a kill", run.trigger));
+        }
+    }
+    Ok(())
+}
+
+/// A property failure, carrying the replayable token.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub token: String,
+    pub reason: String,
+    pub digest: u64,
+}
+
+/// Outcome of one [`explore`] sweep.
+#[derive(Debug, Default)]
+pub struct SweepReport {
+    /// Schedule points the failure-free probe produced (the size of the
+    /// single-kill injection space per victim).
+    pub probe_points: u64,
+    /// Distinct schedules run (the probe included).
+    pub explored: usize,
+    /// Generated schedules discarded as duplicates of an explored token.
+    pub duplicates: usize,
+    /// Replay spot-checks performed (each re-runs an explored schedule
+    /// and compares digests).
+    pub replayed: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl SweepReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Sweep bookkeeping: dedup by token, run, check, record.
+struct Sweeper {
+    seen: HashSet<String>,
+    report: SweepReport,
+    /// (schedule, digest) samples kept for replay spot-checks.
+    replays: Vec<(Schedule, u64)>,
+}
+
+impl Sweeper {
+    fn run_one(&mut self, schedule: Schedule) {
+        let token = schedule.token();
+        if !self.seen.insert(token.clone()) {
+            self.report.duplicates += 1;
+            return;
+        }
+        let run = run_schedule(&schedule);
+        self.report.explored += 1;
+        // Keep a thin sample for the determinism spot-check.
+        if self.replays.len() < 4 && !run.applied.is_empty() {
+            self.replays.push((schedule, run.digest()));
+        }
+        if let Err(reason) = check_run(&run) {
+            println!("PARTREPER_SCHEDULE={token}");
+            println!("  violated: {reason}");
+            self.report.violations.push(Violation {
+                token,
+                reason,
+                digest: run.digest(),
+            });
+        }
+    }
+
+    /// Run sampled schedules until `target` more have been explored (or
+    /// the generator keeps producing duplicates — bounded attempts).
+    fn sample(
+        &mut self,
+        target: usize,
+        rng: &mut Xoshiro256,
+        mut generate: impl FnMut(&mut Xoshiro256) -> Option<Schedule>,
+    ) {
+        let goal = self.report.explored + target;
+        let mut attempts = 0usize;
+        while self.report.explored < goal && attempts < target.saturating_mul(8).max(16) {
+            attempts += 1;
+            if let Some(s) = generate(rng) {
+                self.run_one(s);
+            } else {
+                return; // class not applicable to this scenario
+            }
+        }
+    }
+}
+
+/// Model-check `scenario` over up to `plan.budget` distinct schedules.
+///
+/// The sweep first probes the failure-free run to learn the schedule-point
+/// space `N`, then spends the budget across four classes:
+///
+/// 1. **single** (half the budget): one kill at `(p, v)` — exhaustive over
+///    `N × nprocs` when that fits, else Xoshiro-sampled. With
+///    `refresh_every=1` and a small `gc_interval` the point space
+///    saturates store pushes and GC offer rounds, so kills land inside
+///    both windows.
+/// 2. **during_recovery**: a second kill a few points after the first —
+///    correlated failure inside detection/revoke/repair, deliberately
+///    ignoring the injector's mid-recovery guard.
+/// 3. **burst**: 2..=`plan.max_injections` victims at the same point.
+/// 4. **spare_mid_adoption**: kill an unreplicated comp, then the spare
+///    shortly after — spare death racing its own cold-restore adoption.
+///
+/// Every generated schedule is deduplicated by token; a few explored
+/// schedules are re-run at the end and must reproduce their digest
+/// byte-identically (determinism is itself a checked property).
+pub fn explore(scenario: Scenario, plan: &ExplorePlan) -> SweepReport {
+    let mut sw = Sweeper {
+        seen: HashSet::new(),
+        report: SweepReport::default(),
+        replays: Vec::new(),
+    };
+    let mut rng = Xoshiro256::seeded(plan.seed);
+
+    // Probe: the failure-free run defines the point coordinate space and
+    // must itself satisfy P5.
+    let probe = Schedule::probe(scenario);
+    sw.seen.insert(probe.token());
+    let probe_run = run_schedule(&probe);
+    sw.report.explored += 1;
+    sw.report.probe_points = probe_run.points;
+    if let Err(reason) = check_run(&probe_run) {
+        println!("PARTREPER_SCHEDULE={}", probe.token());
+        println!("  violated: {reason}");
+        sw.report.violations.push(Violation {
+            token: probe.token(),
+            reason,
+            digest: probe_run.digest(),
+        });
+    }
+    let n_points = probe_run.points.max(1);
+    let nprocs = scenario.nprocs();
+    let budget = plan.budget.saturating_sub(1); // probe spent one run
+
+    // Class 1: single kills — exhaustive when the space fits.
+    let single_share = budget / 2;
+    let space = (n_points as usize).saturating_mul(nprocs);
+    if space <= single_share {
+        for p in 0..n_points {
+            for v in 0..nprocs {
+                sw.run_one(Schedule {
+                    scenario,
+                    injections: vec![Injection { point: p, victim: v }],
+                });
+            }
+        }
+    } else {
+        sw.sample(single_share, &mut rng, |rng| {
+            Some(Schedule {
+                scenario,
+                injections: vec![Injection {
+                    point: rng.next_below(n_points),
+                    victim: rng.next_usize(nprocs),
+                }],
+            })
+        });
+    }
+
+    // Remaining budget split across the correlated classes.
+    let rest = budget.saturating_sub(sw.report.explored.saturating_sub(1));
+    let per_class = rest / 3;
+
+    // Class 2: kill during recovery.
+    sw.sample(per_class, &mut rng, |rng| {
+        let p1 = rng.next_below(n_points);
+        let v1 = rng.next_usize(nprocs);
+        let mut v2 = rng.next_usize(nprocs);
+        if v2 == v1 {
+            v2 = (v2 + 1) % nprocs;
+        }
+        let p2 = p1 + 1 + rng.next_below(16);
+        Some(Schedule {
+            scenario,
+            injections: vec![
+                Injection { point: p1, victim: v1 },
+                Injection { point: p2, victim: v2 },
+            ],
+        })
+    });
+
+    // Class 3: correlated burst at one point.
+    sw.sample(per_class, &mut rng, |rng| {
+        let k = 2 + rng.next_usize(plan.max_injections.max(2) - 1);
+        let p = rng.next_below(n_points);
+        let mut victims: Vec<usize> = (0..nprocs).collect();
+        rng.shuffle(&mut victims);
+        victims.truncate(k.min(nprocs.saturating_sub(1)));
+        victims.sort_unstable();
+        Some(Schedule {
+            scenario,
+            injections: victims
+                .into_iter()
+                .map(|victim| Injection { point: p, victim })
+                .collect(),
+        })
+    });
+
+    // Class 4: spare death mid-adoption (needs an unreplicated comp and a
+    // spare; otherwise the class is vacuous for this scenario).
+    sw.sample(per_class, &mut rng, |rng| {
+        if scenario.nrep >= scenario.ncomp || scenario.nspares == 0 {
+            return None;
+        }
+        let comp = scenario.nrep + rng.next_usize(scenario.ncomp - scenario.nrep);
+        let spare = scenario.ncomp + scenario.nrep + rng.next_usize(scenario.nspares);
+        let p1 = rng.next_below(n_points);
+        let p2 = p1 + 1 + rng.next_below(10);
+        Some(Schedule {
+            scenario,
+            injections: vec![
+                Injection { point: p1, victim: comp },
+                Injection { point: p2, victim: spare },
+            ],
+        })
+    });
+
+    // Determinism spot-check: replays must reproduce digests exactly.
+    let replays = std::mem::take(&mut sw.replays);
+    for (schedule, digest) in replays {
+        let again = run_schedule(&schedule);
+        sw.report.replayed += 1;
+        if again.digest() != digest {
+            let token = schedule.token();
+            println!("PARTREPER_SCHEDULE={token}");
+            println!("  violated: replay digest mismatch");
+            sw.report.violations.push(Violation {
+                token,
+                reason: format!(
+                    "determinism: replay digest {:#018x} != original {digest:#018x}",
+                    again.digest()
+                ),
+                digest,
+            });
+        }
+    }
+    sw.report
+}
+
+/// Replay the schedule named by `PARTREPER_SCHEDULE`, if set. Returns the
+/// run and its property verdict; panics (loudly, with the parse error) on
+/// a malformed token — this is a debugging entry point.
+pub fn replay_from_env() -> Option<(ExploredRun, Result<(), String>)> {
+    let schedule = match Schedule::from_env()? {
+        Ok(s) => s,
+        Err(e) => panic!("{ENV_SCHEDULE}: {e}"),
+    };
+    let run = run_schedule(&schedule);
+    let verdict = check_run(&run);
+    Some((run, verdict))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_is_clean_and_reruns_byte_identically() {
+        let probe = Schedule::probe(Scenario::tiny());
+        let a = run_schedule(&probe);
+        check_run(&a).unwrap();
+        assert!(a.points > 0, "event mode must produce schedule points");
+        assert!(a.applied.is_empty() && a.skipped == 0);
+        let b = run_schedule(&probe);
+        assert_eq!(a.render(), b.render(), "probe replay diverged");
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn kill_at_first_point_recovers_by_promotion() {
+        // Victim 0 is comp 0, which has a replica (nrep=1): the kill at
+        // the very first schedule point must land, trigger recovery, and
+        // still yield the exact closed-form answer.
+        let s = Schedule {
+            scenario: Scenario::tiny(),
+            injections: vec![Injection { point: 0, victim: 0 }],
+        };
+        let run = run_schedule(&s);
+        check_run(&run).unwrap_or_else(|e| panic!("{e}\ntoken: {}", s.token()));
+        assert_eq!(run.applied.len(), 1, "kill at point 0 must land");
+        assert!(matches!(run.outcomes[0], Outcome::Killed));
+        assert!(run.handler_entries >= 1, "survivors must run the handler");
+        assert!(!run.episodes.is_empty());
+    }
+
+    #[test]
+    fn unreplicated_loss_without_spares_interrupts_legally() {
+        let scenario = Scenario {
+            nrep: 0,
+            nspares: 0,
+            ..Scenario::tiny()
+        };
+        let s = Schedule {
+            scenario,
+            injections: vec![Injection { point: 0, victim: 1 }],
+        };
+        let run = run_schedule(&s);
+        check_run(&run).unwrap_or_else(|e| panic!("{e}\ntoken: {}", s.token()));
+        assert_eq!(run.trigger, Some(1), "abort must latch the killed rank");
+        assert!(run
+            .outcomes
+            .iter()
+            .any(|o| matches!(o, Outcome::Interrupted(1))));
+    }
+
+    #[test]
+    fn check_run_rejects_forged_observations() {
+        let probe = Schedule::probe(Scenario::tiny());
+        let mut run = run_schedule(&probe);
+        check_run(&run).unwrap();
+        // Forge a wrong checksum -> P2.
+        let good = run.outcomes.clone();
+        run.outcomes[0] = Outcome::Done(Some(1));
+        assert!(check_run(&run).unwrap_err().starts_with("P2"));
+        run.outcomes = good;
+        // Forge an error -> P1.
+        run.outcomes[1] = Outcome::Error("wedged".into());
+        assert!(check_run(&run).unwrap_err().starts_with("P1"));
+    }
+
+    #[test]
+    fn replay_from_env_reproduces_a_token() {
+        let s = Schedule {
+            scenario: Scenario::tiny(),
+            injections: vec![Injection { point: 0, victim: 0 }],
+        };
+        // Env vars are process-global: serialize against other tests via
+        // a dedicated lock-free convention — this is the only test in the
+        // unit suite that sets PARTREPER_SCHEDULE.
+        std::env::set_var(ENV_SCHEDULE, s.token());
+        let (run, verdict) = replay_from_env().expect("env var is set");
+        std::env::remove_var(ENV_SCHEDULE);
+        verdict.unwrap();
+        assert_eq!(run.digest(), run_schedule(&s).digest());
+    }
+}

@@ -1,0 +1,293 @@
+//! The replayable schedule token (DESIGN.md §10).
+//!
+//! A schedule is a self-describing `Vec<u64>`: the scenario (world shape
+//! plus workload knobs) followed by the injection list, each injection a
+//! `(schedule point, victim fabric rank)` pair in virtual-decision
+//! coordinates ([`crate::sched::Sched::set_point_hook`]). The token is
+//! the decimal comma-join of those words — exactly what a violation
+//! report prints as `PARTREPER_SCHEDULE=<token>` and what
+//! [`Schedule::parse`] turns back into a byte-identical rerun.
+
+use crate::config::JobConfig;
+use crate::sched::ExecMode;
+
+/// Token format version (first word of every token).
+pub const TOKEN_VERSION: u64 = 1;
+
+/// Environment variable holding a schedule token to replay.
+pub const ENV_SCHEDULE: &str = "PARTREPER_SCHEDULE";
+
+/// World shape + workload knobs for one explored job. Everything the
+/// runner needs to rebuild the exact [`JobConfig`] is in here, so a
+/// token is portable across processes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    /// Computational processes.
+    pub ncomp: usize,
+    /// Replica processes (mirrors of comps `0..nrep`).
+    pub nrep: usize,
+    /// Idle spares adoptable by cold restore.
+    pub nspares: usize,
+    /// Image-store shards per process image.
+    pub shards: usize,
+    /// Copies of each shard.
+    pub redundancy: usize,
+    /// Log-GC cadence (records between passes; 0 = recovery-only GC).
+    pub gc_interval: u64,
+    /// Ring iterations of the [`crate::restore::demo::restorable_ring`]
+    /// workload.
+    pub iters: u64,
+    /// Store refresh cadence in ring steps.
+    pub refresh_every: u64,
+}
+
+impl Scenario {
+    /// A tiny default world: the smallest shape with every protocol
+    /// ingredient live (promotion, cold restore, GC, refresh).
+    pub fn tiny() -> Self {
+        Self {
+            ncomp: 3,
+            nrep: 1,
+            nspares: 1,
+            shards: 2,
+            redundancy: 2,
+            gc_interval: 4,
+            iters: 3,
+            refresh_every: 1,
+        }
+    }
+
+    /// Total fabric ranks this scenario launches.
+    pub fn nprocs(&self) -> usize {
+        self.ncomp + self.nrep + self.nspares
+    }
+
+    /// The [`JobConfig`] an explored run uses: `exec.mode=event` (the
+    /// schedule-point coordinate system only exists there), the Weibull
+    /// injector off (the hook injects instead), and
+    /// `failure_check_stride=1` so poison discovery is as prompt as the
+    /// protocol allows.
+    pub fn job_config(&self) -> JobConfig {
+        // rdegree is stored as a percentage; 100*nrep/ncomp rounds back
+        // to exactly `nrep` replicas through `ReplicationDegree::nrep`.
+        let pct = 100.0 * self.nrep as f64 / self.ncomp as f64;
+        let mut cfg = JobConfig::new(self.ncomp, pct);
+        cfg.exec = ExecMode::Event;
+        cfg.faults.enabled = false;
+        cfg.nspares = self.nspares;
+        cfg.restore.shards = self.shards;
+        cfg.restore.redundancy = self.redundancy;
+        cfg.log.gc_interval = self.gc_interval;
+        cfg.failure_check_stride = 1;
+        debug_assert_eq!(cfg.nrep(), self.nrep, "rdegree round-trip");
+        cfg
+    }
+}
+
+/// One scheduled kill: poison `victim` at the first schedule point
+/// `>= point` (injections fire in token order, so a schedule is replayed
+/// exactly even when an earlier kill shifts later point meanings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Injection {
+    pub point: u64,
+    pub victim: usize,
+}
+
+/// A fully-specified explored run: scenario + ordered injections.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub scenario: Scenario,
+    pub injections: Vec<Injection>,
+}
+
+impl Schedule {
+    /// A failure-free probe of `scenario` (no injections).
+    pub fn probe(scenario: Scenario) -> Self {
+        Self {
+            scenario,
+            injections: Vec::new(),
+        }
+    }
+
+    /// The self-describing word vector.
+    pub fn encode(&self) -> Vec<u64> {
+        let s = &self.scenario;
+        let mut w = vec![
+            TOKEN_VERSION,
+            s.ncomp as u64,
+            s.nrep as u64,
+            s.nspares as u64,
+            s.shards as u64,
+            s.redundancy as u64,
+            s.gc_interval,
+            s.iters,
+            s.refresh_every,
+            self.injections.len() as u64,
+        ];
+        for inj in &self.injections {
+            w.push(inj.point);
+            w.push(inj.victim as u64);
+        }
+        w
+    }
+
+    /// Decode a word vector (strict: trailing words are an error).
+    pub fn decode(words: &[u64]) -> Result<Self, String> {
+        let take = |i: usize| -> Result<u64, String> {
+            words.get(i).copied().ok_or_else(|| {
+                format!("schedule token truncated at word {i} (got {})", words.len())
+            })
+        };
+        if take(0)? != TOKEN_VERSION {
+            return Err(format!(
+                "schedule token version {} (supported: {TOKEN_VERSION})",
+                words[0]
+            ));
+        }
+        let scenario = Scenario {
+            ncomp: take(1)? as usize,
+            nrep: take(2)? as usize,
+            nspares: take(3)? as usize,
+            shards: take(4)? as usize,
+            redundancy: take(5)? as usize,
+            gc_interval: take(6)?,
+            iters: take(7)?,
+            refresh_every: take(8)?,
+        };
+        if scenario.ncomp == 0 || scenario.shards == 0 || scenario.redundancy == 0 {
+            return Err("scenario has a zero shape parameter".into());
+        }
+        if scenario.nrep > scenario.ncomp {
+            return Err(format!("nrep {} > ncomp {}", scenario.nrep, scenario.ncomp));
+        }
+        let n_inj = take(9)? as usize;
+        if words.len() != 10 + 2 * n_inj {
+            return Err(format!(
+                "schedule token length {} != {} for {n_inj} injections",
+                words.len(),
+                10 + 2 * n_inj
+            ));
+        }
+        let mut injections = Vec::with_capacity(n_inj);
+        for k in 0..n_inj {
+            let point = take(10 + 2 * k)?;
+            let victim = take(11 + 2 * k)? as usize;
+            if victim >= scenario.nprocs() {
+                return Err(format!(
+                    "victim {victim} outside world of {} ranks",
+                    scenario.nprocs()
+                ));
+            }
+            injections.push(Injection { point, victim });
+        }
+        // Token order must be fire order.
+        if !injections.windows(2).all(|w| w[0].point <= w[1].point) {
+            return Err("injections not sorted by point".into());
+        }
+        Ok(Self {
+            scenario,
+            injections,
+        })
+    }
+
+    /// The printable replay token (`PARTREPER_SCHEDULE=<this>`).
+    pub fn token(&self) -> String {
+        self.encode()
+            .iter()
+            .map(u64::to_string)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Parse a token string back into a schedule.
+    pub fn parse(token: &str) -> Result<Self, String> {
+        let words: Vec<u64> = token
+            .split(',')
+            .map(|w| {
+                w.trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad token word {w:?}"))
+            })
+            .collect::<Result<_, _>>()?;
+        Self::decode(&words)
+    }
+
+    /// The schedule named by the `PARTREPER_SCHEDULE` environment
+    /// variable, if set.
+    pub fn from_env() -> Option<Result<Self, String>> {
+        std::env::var(ENV_SCHEDULE).ok().map(|t| Self::parse(&t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Schedule {
+        Schedule {
+            scenario: Scenario::tiny(),
+            injections: vec![
+                Injection { point: 120, victim: 0 },
+                Injection { point: 155, victim: 4 },
+            ],
+        }
+    }
+
+    #[test]
+    fn token_roundtrips_byte_identically() {
+        let s = sample();
+        let token = s.token();
+        let back = Schedule::parse(&token).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.token(), token);
+        // Probe roundtrip too.
+        let p = Schedule::probe(Scenario::tiny());
+        assert_eq!(Schedule::parse(&p.token()).unwrap(), p);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_tokens() {
+        let good = sample().encode();
+        // Wrong version.
+        let mut w = good.clone();
+        w[0] = 99;
+        assert!(Schedule::decode(&w).is_err());
+        // Truncated.
+        assert!(Schedule::decode(&good[..good.len() - 1]).is_err());
+        // Trailing garbage.
+        let mut w = good.clone();
+        w.push(7);
+        assert!(Schedule::decode(&w).is_err());
+        // Victim out of range.
+        let mut w = good.clone();
+        let last = w.len() - 1;
+        w[last] = 999;
+        assert!(Schedule::decode(&w).is_err());
+        // Unsorted injections.
+        let mut s = sample();
+        s.injections.reverse();
+        assert!(Schedule::decode(&s.encode()).is_err());
+        // Non-numeric text.
+        assert!(Schedule::parse("1,2,banana").is_err());
+    }
+
+    #[test]
+    fn scenario_config_matches_shape() {
+        let sc = Scenario::tiny();
+        let cfg = sc.job_config();
+        assert_eq!(cfg.nprocs(), sc.nprocs());
+        assert_eq!(cfg.nrep(), sc.nrep);
+        assert_eq!(cfg.spare_base(), sc.ncomp + sc.nrep);
+        assert!(!cfg.faults.enabled, "hook injects, not the Weibull thread");
+        assert_eq!(cfg.exec, ExecMode::Event);
+        // Awkward replication fractions round-trip too.
+        for (ncomp, nrep) in [(3, 2), (5, 1), (7, 6), (9, 4), (4, 0), (6, 6)] {
+            let sc = Scenario {
+                ncomp,
+                nrep,
+                ..Scenario::tiny()
+            };
+            assert_eq!(sc.job_config().nrep(), nrep, "{ncomp}/{nrep}");
+        }
+    }
+}

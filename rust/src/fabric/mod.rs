@@ -536,15 +536,7 @@ impl FabricMetrics {
 /// order — the wire schedule itself.
 type TapRecord = (i64, u64, usize, u64);
 
-/// FNV-1a 64-bit, the standard zero-dependency payload fingerprint.
-fn fnv1a(data: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in data {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
+use crate::util::fnv1a;
 
 /// The interconnect: `n` mailboxes + shared process liveness + cost model
 /// + the collective tuning surface every communicator on the fabric reads.

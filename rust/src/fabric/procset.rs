@@ -23,6 +23,12 @@ pub struct ProcState {
     /// gone but must be *skipped*, not repaired, by fault-tolerance
     /// protocols.
     finalized: AtomicBool,
+    /// Inside the §VI error handler right now. The Weibull fault injector
+    /// consults this so it never targets a rank mid-recovery (a kill there
+    /// models a *correlated* failure, which the injector's independent-
+    /// failure model must not produce by accident; the schedule explorer
+    /// injects such kills deliberately and ignores this flag).
+    recovering: AtomicBool,
 }
 
 pub struct ProcSet {
@@ -101,6 +107,17 @@ impl ProcSet {
         self.procs[rank].finalized.load(Ordering::SeqCst)
     }
 
+    /// Mark/unmark `rank` as inside the error handler. Set and cleared by
+    /// the handler's RAII scope (unwind-safe), read by the fault injector.
+    pub fn set_recovering(&self, rank: usize, on: bool) {
+        self.procs[rank].recovering.store(on, Ordering::SeqCst);
+    }
+
+    #[inline]
+    pub fn is_recovering(&self, rank: usize) -> bool {
+        self.procs[rank].recovering.load(Ordering::SeqCst)
+    }
+
     /// All currently-dead ranks (ascending).
     pub fn dead_ranks(&self) -> Vec<usize> {
         (0..self.len()).filter(|&r| self.is_dead(r)).collect()
@@ -147,6 +164,19 @@ mod tests {
             p.check_poison(0),
             Err(CommError::Killed { rank: 0 })
         ));
+    }
+
+    #[test]
+    fn recovering_flag_toggles_per_rank() {
+        let p = ProcSet::new(3);
+        assert!(!p.is_recovering(1));
+        p.set_recovering(1, true);
+        assert!(p.is_recovering(1));
+        assert!(!p.is_recovering(0) && !p.is_recovering(2));
+        // Recovering is orthogonal to liveness.
+        assert!(p.is_alive(1));
+        p.set_recovering(1, false);
+        assert!(!p.is_recovering(1));
     }
 
     #[test]

@@ -86,10 +86,16 @@ impl FaultInjector {
                     }
                     clock2.sleep(Duration::from_millis(1));
                 }
+                // Never target a rank mid-recovery: a kill inside the
+                // handler is a *correlated* failure, outside this
+                // injector's independent-Weibull model (the schedule
+                // explorer produces those deliberately instead).
                 let alive: Vec<usize> = eligible
                     .iter()
                     .copied()
-                    .filter(|&r| !procs.is_poisoned(r) && procs.is_alive(r))
+                    .filter(|&r| {
+                        !procs.is_poisoned(r) && procs.is_alive(r) && !procs.is_recovering(r)
+                    })
                     .collect();
                 if alive.len() <= 1 {
                     break;
@@ -216,6 +222,29 @@ mod tests {
         for r in 0..4 {
             assert!(!procs.is_poisoned(r));
         }
+    }
+
+    #[test]
+    fn never_selects_a_rank_mid_recovery() {
+        // Rank 1 is inside the error handler for the whole injector run:
+        // with unlimited failures the injector kills everyone else it may
+        // (stopping at one survivor) but must never poison rank 1.
+        let procs = ProcSet::new(3);
+        procs.set_recovering(1, true);
+        let inj = FaultInjector::start(fast_plan(5, 100), procs.clone(), vec![], vec![0, 1, 2]);
+        std::thread::sleep(Duration::from_millis(100));
+        let trace = inj.stop();
+        assert_eq!(trace.len(), 1, "two candidates -> stops at one survivor");
+        assert!(!procs.is_poisoned(1), "mid-recovery rank was targeted");
+        for i in &trace {
+            assert_ne!(i.victim, 1);
+        }
+        // Flag cleared -> the rank is eligible again.
+        procs.set_recovering(1, false);
+        let inj = FaultInjector::start(fast_plan(6, 100), procs.clone(), vec![], vec![0, 1, 2]);
+        std::thread::sleep(Duration::from_millis(100));
+        let trace2 = inj.stop();
+        assert_eq!(trace2.len(), 1, "with the flag cleared a second kill lands");
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod empi;
 pub mod error;
+pub mod explore;
 pub mod fabric;
 pub mod faults;
 pub mod harness;

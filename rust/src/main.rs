@@ -6,6 +6,7 @@
 //!   partreper fig8  [apps=CG,MG,...] [ncomps=8,16] [reps=2]
 //!   partreper fig9a [ncomp=8] [iters=25]
 //!   partreper fig9b [ncomp=8] [runs=4]
+//!   partreper explore [ncomp=3] [rdegree=33] [nspares=1] [iters=3] [explore.budget=1200]
 //!   partreper list
 //!
 //! Any `key=value` accepted by `JobConfig::set` works as an override
@@ -13,6 +14,7 @@
 
 use partreper::apps::AppKind;
 use partreper::config::{JobConfig, ReplicationDegree};
+use partreper::explore::{self, Scenario};
 use partreper::harness::experiments as exp;
 use partreper::harness::{run_app, Backend};
 use partreper::runtime::ComputeEngine;
@@ -77,7 +79,9 @@ fn episodes_path(trace: &str) -> String {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().map(|s| s.as_str()) else {
-        eprintln!("usage: partreper <run|fig8|fig9a|fig9b|list> [args] (see --help in README)");
+        eprintln!(
+            "usage: partreper <run|fig8|fig9a|fig9b|explore|list> [args] (see --help in README)"
+        );
         std::process::exit(2);
     };
 
@@ -238,6 +242,56 @@ fn main() {
                 &cfg,
             );
             print!("{}", exp::format_fig9b(&rows));
+        }
+        "explore" => {
+            // With PARTREPER_SCHEDULE set, replay that one counterexample
+            // instead of sweeping (DESIGN.md §10).
+            if let Some((run, verdict)) = explore::replay_from_env() {
+                println!(
+                    "replay {} -> {} points, digest {:#018x}",
+                    run.schedule.token(),
+                    run.points,
+                    run.digest()
+                );
+                match verdict {
+                    Ok(()) => println!("properties: OK"),
+                    Err(e) => {
+                        println!("VIOLATION: {e}");
+                        std::process::exit(1);
+                    }
+                }
+                return;
+            }
+            let mut cfg = JobConfig::default();
+            cfg.ncomp = 3;
+            cfg.rdegree = ReplicationDegree(100.0 / 3.0);
+            cfg.nspares = 1;
+            cfg.restore.shards = 2;
+            cfg.log.gc_interval = 4;
+            let extra = parse_overrides(&mut cfg, &args[1..]);
+            let scenario = Scenario {
+                ncomp: cfg.ncomp,
+                nrep: cfg.nrep(),
+                nspares: cfg.nspares,
+                shards: cfg.restore.shards,
+                redundancy: cfg.restore.redundancy,
+                gc_interval: cfg.log.gc_interval,
+                iters: get(&extra, "iters").and_then(|v| v.parse().ok()).unwrap_or(3),
+                refresh_every: get(&extra, "refresh_every")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(1),
+            };
+            let report = explore::explore(scenario, &cfg.explore);
+            println!(
+                "explored {} schedules over {} points ({} duplicates, {} replay checks)",
+                report.explored, report.probe_points, report.duplicates, report.replayed
+            );
+            if report.ok() {
+                println!("properties: OK");
+            } else {
+                eprintln!("{} violations (tokens above)", report.violations.len());
+                std::process::exit(1);
+            }
         }
         other => {
             eprintln!("unknown command `{other}`");

@@ -59,12 +59,39 @@ use super::{CollResult, PartReper};
 /// Park interval while a spare gathers shard offers.
 const OFFER_TICK: std::time::Duration = std::time::Duration::from_micros(200);
 
+/// RAII mid-recovery mark on the shared [`crate::fabric::ProcSet`]: set on
+/// handler entry, cleared on every exit path (return, kill unwind, job
+/// interruption) via `Drop`.
+struct RecoveringScope<'a> {
+    procs: &'a crate::fabric::ProcSet,
+    rank: usize,
+}
+
+impl<'a> RecoveringScope<'a> {
+    fn enter(procs: &'a crate::fabric::ProcSet, rank: usize) -> Self {
+        procs.set_recovering(rank, true);
+        Self { procs, rank }
+    }
+}
+
+impl Drop for RecoveringScope<'_> {
+    fn drop(&mut self) {
+        self.procs.set_recovering(self.rank, false);
+    }
+}
+
 impl PartReper {
     /// §VI entry point. Returns only when the world is repaired and
     /// recovery is complete (or unwinds on kill/interruption).
     pub(crate) fn error_handler(&self) {
         let _phase = self.ctx.clock.scoped(Phase::ErrorHandler);
         Counters::bump(&self.ctx.counters.error_handler_entries);
+        // Mid-recovery mark: while set, the Weibull fault injector skips
+        // this rank (its independent-failure model must not kill inside
+        // the handler by accident). RAII so a kill/interruption unwind
+        // clears it too; the schedule explorer ignores the flag and
+        // injects during-recovery failures deliberately.
+        let _recovering = RecoveringScope::enter(&self.ctx.procs, self.ctx.rank);
         // Flight-recorder episode for this handler entry: the step calls
         // below tile [entry, exit] exactly, so under event mode the
         // episode total equals this rank's ErrorHandler (+ Restore) phase

@@ -120,6 +120,11 @@ enum TaskState {
     Done,
 }
 
+/// A schedule-point observer (see [`Sched::set_point_hook`]): called with
+/// the park's ordinal, on the yielding task's thread, outside the core
+/// lock — free to poison ranks and wake fabrics.
+pub type PointHook = Arc<dyn Fn(u64) + Send + Sync>;
+
 /// Event-loop state. Exactly one task is `Running` (or the token is in
 /// flight to the next grantee) at any instant; every `Parked` task owns
 /// exactly one timer, so the heap never starves a sleeper.
@@ -137,6 +142,10 @@ struct Core {
     advanced_ns: u64,
     /// High-water mark of the ready queue.
     ready_peak: u64,
+    /// Schedule points taken (event-mode parks), hook installed or not.
+    points: u64,
+    /// The schedule-point hook, if armed.
+    hook: Option<PointHook>,
 }
 
 /// Scheduler counters for the run summary: `(events_processed,
@@ -177,6 +186,8 @@ impl Sched {
                 events: 0,
                 advanced_ns: 0,
                 ready_peak: 0,
+                points: 0,
+                hook: None,
             }),
         })
     }
@@ -207,6 +218,26 @@ impl Sched {
     /// The task id of the calling thread, if it is one of ours.
     fn my_task(&self) -> Option<usize> {
         CURRENT.with(|c| c.get()).and_then(|(sid, task)| (sid == self.id).then_some(task))
+    }
+
+    /// Install the schedule-point hook: called once per event-mode park
+    /// with that park's ordinal (0, 1, 2, … over the whole run). Event
+    /// mode runs exactly one task at a time and every blocking point
+    /// routes through a park, so the ordinal stream is a total order over
+    /// the run's scheduling decisions — the failure-schedule explorer's
+    /// injection coordinate system (DESIGN.md §10). Threaded mode never
+    /// parks virtually, so the hook never fires there. Arm before
+    /// [`Sched::start`]; the hook runs on the yielding task's thread with
+    /// the core lock *released*, so it may poison ranks and wake fabrics.
+    pub fn set_point_hook(&self, hook: impl Fn(u64) + Send + Sync + 'static) {
+        self.core.lock().unwrap().hook = Some(Arc::new(hook));
+    }
+
+    /// Schedule points taken so far (event-mode parks; 0 in threaded
+    /// mode). A failure-free probe run reads this to learn how many
+    /// distinct injection coordinates the run exposes.
+    pub fn points(&self) -> u64 {
+        self.core.lock().unwrap().points
     }
 
     /// Scheduler counters (zeros in threaded mode).
@@ -311,6 +342,20 @@ impl Sched {
 
     /// Park task `me` until virtual `deadline`, yielding the token.
     fn park_until_locked(&self, me: usize, deadline: u64) {
+        // Schedule point: number this park and run the hook *before*
+        // yielding, outside the lock. Only the current token holder can
+        // be here, so ordinals are a deterministic total order, and a
+        // hook-injected poison lands before any other task observes the
+        // world again — the injection is pinned to this exact decision.
+        let hook = {
+            let mut core = self.core.lock().unwrap();
+            let idx = core.points;
+            core.points += 1;
+            core.hook.as_ref().map(|h| (h.clone(), idx))
+        };
+        if let Some((h, idx)) = hook {
+            h(idx);
+        }
         let permit = {
             let mut core = self.core.lock().unwrap();
             // Always move time forward: a zero-length park still yields
@@ -499,6 +544,51 @@ mod tests {
             let spins = h.join().unwrap();
             assert!(spins > 10, "mode {mode:?} wedged at {spins}");
         }
+    }
+
+    #[test]
+    fn point_hook_sees_a_dense_deterministic_ordinal_stream() {
+        let run = || {
+            let s = Sched::new(ExecMode::Event);
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let seen2 = seen.clone();
+            s.set_point_hook(move |idx| seen2.lock().unwrap().push(idx));
+            let mut handles = Vec::new();
+            for id in 0..3usize {
+                let s2 = s.clone();
+                handles.push(s.spawn(&format!("t{id}"), move || {
+                    for _ in 0..4 {
+                        s2.sleep(Duration::from_micros(70 + 11 * id as u64));
+                    }
+                }));
+            }
+            s.start();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let seen = seen.lock().unwrap().clone();
+            (seen, s.points())
+        };
+        let (seen, total) = run();
+        // Ordinals are dense: 0, 1, 2, … with no gaps or reordering.
+        let want: Vec<u64> = (0..seen.len() as u64).collect();
+        assert_eq!(seen, want);
+        assert_eq!(total, seen.len() as u64);
+        assert!(total >= 12, "each of 12 sleeps parks at least once");
+        assert_eq!(run(), (seen, total), "point stream must replay identically");
+    }
+
+    #[test]
+    fn threaded_mode_exposes_no_schedule_points() {
+        let s = Sched::threaded();
+        s.set_point_hook(|_| panic!("threaded mode must never park virtually"));
+        let h = s.spawn("t", {
+            let s2 = s.clone();
+            move || s2.sleep(Duration::from_micros(50))
+        });
+        s.start();
+        h.join().unwrap();
+        assert_eq!(s.points(), 0);
     }
 
     #[test]

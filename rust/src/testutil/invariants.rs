@@ -1,0 +1,233 @@
+//! Machine-checked safety oracles, shared by the property suites
+//! (`rust/tests/prop_invariants.rs`) and the failure-schedule explorer
+//! (`crate::explore`) — one implementation of each invariant, so the two
+//! suites cannot drift (DESIGN.md §10 property inventory).
+//!
+//! Every oracle returns `Err(reason)` instead of panicking: the property
+//! harness turns that into a failing case with a replay seed, the
+//! explorer into a violation carrying a `PARTREPER_SCHEDULE` token.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::obs::Episode;
+use crate::partreper::{Channel, Layout, RepairOutcome};
+
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+/// §V layout invariants after a successful [`Layout::repair`]: the world
+/// keeps exactly `ncomp` dense computational slots, no dead rank
+/// survives, every replica uniquely mirrors a live comp, promotions and
+/// cold restores landed in the slots they claim, and the spare pool is
+/// disjoint from the world.
+pub fn check_repair_outcome(
+    prev: &Layout,
+    dead: &HashSet<usize>,
+    out: &RepairOutcome,
+) -> Result<(), String> {
+    let l2 = &out.layout;
+    // ncomp is invariant; app ranks stay dense.
+    ensure!(l2.ncomp == prev.ncomp, "ncomp changed {} -> {}", prev.ncomp, l2.ncomp);
+    ensure!(
+        l2.assign.len() == l2.ncomp + l2.nrep(),
+        "assign len {} != ncomp {} + nrep {}",
+        l2.assign.len(),
+        l2.ncomp,
+        l2.nrep()
+    );
+    // No dead fabric rank survives.
+    for &f in &l2.assign {
+        ensure!(!dead.contains(&f), "dead rank {f} kept in the repaired world");
+    }
+    // assign has no duplicates.
+    let set: HashSet<usize> = l2.assign.iter().copied().collect();
+    ensure!(set.len() == l2.assign.len(), "duplicate fabric rank in assign");
+    // Every replica mirrors a valid comp rank, uniquely.
+    let mut seen = HashSet::new();
+    for &m in &l2.rep_mirror {
+        ensure!(m < l2.ncomp, "replica mirrors invalid comp {m}");
+        ensure!(seen.insert(m), "two replicas of comp {m}");
+    }
+    // Promotions moved exactly the dead comps with live reps.
+    for &(c, f) in &out.promotions {
+        ensure!(c < l2.ncomp, "promotion into invalid comp slot {c}");
+        ensure!(l2.assign[c] == f, "promotion of comp {c}: rank {f} not in its slot");
+    }
+    // Cold restores landed on live spares from the old pool.
+    for &(c, f) in &out.restores {
+        ensure!(c < l2.ncomp, "restore into invalid comp slot {c}");
+        ensure!(l2.assign[c] == f, "restore of comp {c}: rank {f} not in its slot");
+        ensure!(prev.spares.contains(&f), "restore target {f} was not a spare");
+        ensure!(!dead.contains(&f), "restore target {f} is dead");
+    }
+    // Spare pool: no dead spares kept, none in the world.
+    for &s in &l2.spares {
+        ensure!(!dead.contains(&s), "dead spare {s} kept in the pool");
+        ensure!(!l2.assign.contains(&s), "spare {s} also assigned to the world");
+    }
+    // epos/rep maps consistent.
+    for c in 0..l2.ncomp {
+        if let Some(e) = l2.epos(c, Channel::Rep) {
+            ensure!(
+                l2.rep_mirror[e - l2.ncomp] == c,
+                "epos/rep_mirror disagree for comp {c}"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Legality of a repair refusal (`Layout::repair -> Err(comp)`):
+/// interruption is only allowed when `comp` and its replica (if any) are
+/// both dead AND the spare pool cannot cover every unreplicated dead
+/// comp — anything else is a recoverable scenario given up on.
+pub fn check_interruption_legal(
+    prev: &Layout,
+    dead: &HashSet<usize>,
+    comp: usize,
+) -> Result<(), String> {
+    ensure!(
+        dead.contains(&prev.assign[comp]),
+        "interrupted on comp {comp} whose rank is alive"
+    );
+    if let Some(rf) = prev.rep_fabric_of(comp) {
+        ensure!(dead.contains(&rf), "interrupted despite live replica of comp {comp}");
+    }
+    let live_spares = prev.spares.iter().filter(|f| !dead.contains(f)).count();
+    let dead_unrep = (0..prev.ncomp)
+        .filter(|&c| {
+            dead.contains(&prev.assign[c])
+                && prev.rep_fabric_of(c).map_or(true, |rf| dead.contains(&rf))
+        })
+        .count();
+    ensure!(
+        live_spares < dead_unrep,
+        "interrupted with {live_spares} live spares for {dead_unrep} unreplicated losses"
+    );
+    Ok(())
+}
+
+/// PR 7 observability reconciliation: every error-handler entry produced
+/// exactly one episode, per-rank ordinals are dense, each episode's step
+/// durations tile its total exactly, and every episode of a rank that
+/// ran to completion is itself `completed` with a non-empty pipeline.
+pub fn check_episodes(
+    episodes: &[Episode],
+    handler_entries: u64,
+    done_ranks: &[usize],
+) -> Result<(), String> {
+    ensure!(
+        episodes.len() as u64 == handler_entries,
+        "{} episodes for {handler_entries} handler entries",
+        episodes.len()
+    );
+    let mut next_seq: HashMap<usize, u64> = HashMap::new();
+    for ep in episodes {
+        let want = next_seq.entry(ep.rank).or_insert(0);
+        ensure!(
+            ep.seq == *want,
+            "rank {} episode seq {} out of order (want {want})",
+            ep.rank,
+            ep.seq
+        );
+        *want += 1;
+        let step_sum: u64 = ep.steps.iter().map(|&(_, d)| d).sum();
+        ensure!(
+            step_sum == ep.total_ns,
+            "rank {} episode {}: steps sum {step_sum} != total {}",
+            ep.rank,
+            ep.seq,
+            ep.total_ns
+        );
+    }
+    for &r in done_ranks {
+        for ep in episodes.iter().filter(|e| e.rank == r) {
+            ensure!(
+                ep.completed,
+                "rank {r} finished the job but episode {} never completed",
+                ep.seq
+            );
+            ensure!(
+                !ep.steps.is_empty(),
+                "rank {r} episode {} recorded no pipeline steps",
+                ep.seq
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_round(ncomp: usize, nrep: usize, nspares: usize, dead: &[usize]) -> Result<(), String> {
+        let layout = Layout::initial_with_spares(ncomp, nrep, nspares);
+        let dead: HashSet<usize> = dead.iter().copied().collect();
+        match layout.repair(&dead) {
+            Ok(out) => check_repair_outcome(&layout, &dead, &out),
+            Err(c) => check_interruption_legal(&layout, &dead, c),
+        }
+    }
+
+    #[test]
+    fn real_repairs_pass_the_oracle() {
+        one_round(4, 2, 1, &[0]).unwrap(); // promotion
+        one_round(4, 2, 1, &[3]).unwrap(); // cold restore onto the spare
+        one_round(4, 2, 0, &[3]).unwrap(); // legal interruption
+        one_round(4, 4, 0, &[0, 4]).unwrap(); // comp + its replica elsewhere
+    }
+
+    #[test]
+    fn forged_outcome_is_rejected() {
+        let layout = Layout::initial_with_spares(4, 2, 0);
+        let dead: HashSet<usize> = [0].into_iter().collect();
+        let mut out = layout.repair(&dead).unwrap();
+        // Tamper: pretend the dead rank kept its slot.
+        out.layout.assign[0] = 0;
+        let err = check_repair_outcome(&layout, &dead, &out).unwrap_err();
+        assert!(err.contains("dead rank 0"), "{err}");
+    }
+
+    #[test]
+    fn episode_reconciliation_checks_tiling_and_count() {
+        let ep = |rank: usize, seq: u64, steps: Vec<(&'static str, u64)>, completed: bool| {
+            Episode {
+                rank,
+                seq,
+                start_ns: 0,
+                total_ns: steps.iter().map(|&(_, d)| d).sum(),
+                detect_ns: 0,
+                trigger: None,
+                dead: vec![],
+                epoch: 1,
+                steps,
+                promotions: 0,
+                cold_restore: false,
+                bytes_resent: 0,
+                resends: 0,
+                requests_reresolved: 0,
+                completed,
+            }
+        };
+        let good = vec![
+            ep(0, 0, vec![("revoke", 5), ("repair", 7)], true),
+            ep(1, 0, vec![("revoke", 12)], true),
+        ];
+        check_episodes(&good, 2, &[0, 1]).unwrap();
+        // Count mismatch.
+        assert!(check_episodes(&good, 3, &[0, 1]).is_err());
+        // A done rank with an uncompleted episode.
+        let bad = vec![ep(0, 0, vec![("revoke", 5)], false)];
+        assert!(check_episodes(&bad, 1, &[0]).is_err());
+        // Broken tiling.
+        let mut torn = ep(0, 0, vec![("revoke", 5)], true);
+        torn.total_ns = 99;
+        assert!(check_episodes(&[torn], 1, &[]).is_err());
+    }
+}

@@ -2,6 +2,8 @@
 //! PRNG-driven case generation with failing-seed reporting. Used by the
 //! `rust/tests/prop_*.rs` suites on coordinator invariants.
 
+pub mod invariants;
+
 use crate::util::Xoshiro256;
 
 /// Run `cases` random trials of `f`, each with a fresh deterministic RNG.

@@ -105,9 +105,30 @@ impl<'a> ByteReader<'a> {
     }
 }
 
+/// FNV-1a 64-bit, the repo's standard zero-dependency content
+/// fingerprint: wire-tap payload hashes and the schedule explorer's
+/// run digests both use it, so a digest mismatch and a tap mismatch
+/// speak the same language.
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
 
     #[test]
     fn f64_roundtrip() {

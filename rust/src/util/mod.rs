@@ -10,6 +10,7 @@ pub mod bytes;
 pub mod prng;
 pub mod stats;
 
+pub use bytes::fnv1a;
 pub use bytes::{f32s_from_bytes, f64s_from_bytes, i64s_from_bytes, u64s_from_bytes};
 pub use bytes::{f32s_to_bytes, f64s_to_bytes, i64s_to_bytes, u64s_to_bytes};
 pub use prng::Xoshiro256;

@@ -1,0 +1,197 @@
+//! Failure-schedule explorer suite (DESIGN.md §10).
+//!
+//! The CI smoke sweeps 1000+ distinct schedules over the tiny world and
+//! requires every safety property (P1–P5) to hold; the pinned regression
+//! tests below replay the two nastiest correlated classes from
+//! programmatically-derived `PARTREPER_SCHEDULE` seeds; the self-test
+//! proves a violation's printed token reproduces its run byte-identically.
+//! Deep multi-shape sweeps (worlds up to n=9) are `#[ignore]`d and run by
+//! `ci.sh` under `PARTREPER_EXPLORE_DEEP=1`.
+
+use partreper::config::ExplorePlan;
+use partreper::explore::{
+    check_run, explore, run_schedule, Injection, Outcome, Scenario, Schedule,
+};
+
+/// Probe a scenario's failure-free point space (the coordinate system the
+/// pinned seeds below are derived from — fractions of the total, so the
+/// seeds survive protocol changes that shift absolute point numbers).
+fn probe_points(scenario: Scenario) -> u64 {
+    let run = run_schedule(&Schedule::probe(scenario));
+    check_run(&run).expect("probe must be clean");
+    assert!(run.points > 0);
+    run.points
+}
+
+#[test]
+fn ci_smoke_explores_a_thousand_schedules_cleanly() {
+    let plan = ExplorePlan::default(); // budget 1200, pinned seed
+    let report = explore(Scenario::tiny(), &plan);
+    for v in &report.violations {
+        eprintln!("PARTREPER_SCHEDULE={}\n  {}", v.token, v.reason);
+    }
+    assert!(report.ok(), "{} safety violations", report.violations.len());
+    assert!(
+        report.explored >= 1000,
+        "only {} distinct schedules explored (budget {})",
+        report.explored,
+        plan.budget
+    );
+    assert!(report.replayed >= 1, "no determinism spot-check ran");
+    assert!(report.probe_points > 0);
+}
+
+/// Pinned regression: spare death racing its own cold-restore adoption.
+/// Kill unreplicated comp (fabric rank 2) a third of the way in, then the
+/// only spare (rank 4) eight points later — inside detection/repair of
+/// the first death. Whatever the protocol decides (finish the adoption or
+/// legally interrupt), every safety property must hold, and the schedule
+/// must replay byte-identically.
+#[test]
+fn pinned_spare_death_mid_adoption() {
+    let scenario = Scenario::tiny(); // comps 0..3 (comp 0 replicated), spare 4
+    let n = probe_points(scenario);
+    let p1 = n / 3;
+    let schedule = Schedule {
+        scenario,
+        injections: vec![
+            Injection { point: p1, victim: 2 },
+            Injection { point: p1 + 8, victim: 4 },
+        ],
+    };
+    println!("PARTREPER_SCHEDULE={}", schedule.token());
+    let run = run_schedule(&schedule);
+    check_run(&run).unwrap_or_else(|e| panic!("{e}\ntoken: {}", schedule.token()));
+    assert!(
+        !run.applied.is_empty(),
+        "mid-run kill of comp 2 must land (points {n})"
+    );
+    let replay = run_schedule(&schedule);
+    assert_eq!(replay.digest(), run.digest(), "replay diverged");
+}
+
+/// Pinned regression: failures inside GC offer rounds / store pushes.
+/// With `gc_interval=2` and `refresh_every=1` the retention gossip and
+/// shard-push traffic densely tile the run, so kills at quarter-fractions
+/// of the point space land in or adjacent to offer/push windows. Victim 1
+/// is unreplicated but a spare exists, forcing the cold-restore path
+/// (store offers) through each kill point.
+#[test]
+fn pinned_failure_in_gc_offer_round() {
+    let scenario = Scenario {
+        gc_interval: 2,
+        ..Scenario::tiny()
+    };
+    let n = probe_points(scenario);
+    for frac in [n / 4, n / 2, 3 * n / 4] {
+        let schedule = Schedule {
+            scenario,
+            injections: vec![Injection { point: frac, victim: 1 }],
+        };
+        println!("PARTREPER_SCHEDULE={}", schedule.token());
+        let run = run_schedule(&schedule);
+        check_run(&run).unwrap_or_else(|e| panic!("{e}\ntoken: {}", schedule.token()));
+        let replay = run_schedule(&schedule);
+        assert_eq!(
+            replay.digest(),
+            run.digest(),
+            "replay diverged at point {frac}"
+        );
+    }
+}
+
+/// Self-test of the violation machinery: forge a wrong observation, check
+/// that the oracle flags it, then prove the printed token line reproduces
+/// the (real) run byte-identically — the counterexample a violation
+/// prints is always actionable.
+#[test]
+fn injected_violation_reproduces_from_its_printed_token() {
+    let schedule = Schedule {
+        scenario: Scenario::tiny(),
+        injections: vec![Injection { point: 0, victim: 0 }],
+    };
+    let run = run_schedule(&schedule);
+    check_run(&run).expect("the real run is clean");
+
+    let mut forged = run.clone();
+    forged.outcomes[2] = Outcome::Done(Some(12345));
+    let reason = check_run(&forged).unwrap_err();
+    assert!(reason.starts_with("P2"), "{reason}");
+
+    // The exact line explore() prints on a violation.
+    let line = format!("PARTREPER_SCHEDULE={}", schedule.token());
+    let token = line.strip_prefix("PARTREPER_SCHEDULE=").unwrap();
+    let parsed = Schedule::parse(token).unwrap();
+    assert_eq!(parsed, schedule);
+    let replay = run_schedule(&parsed);
+    assert_eq!(replay.render(), run.render(), "token replay not byte-identical");
+    assert_eq!(replay.digest(), run.digest());
+}
+
+/// Episode reconciliation (satellite: obs cross-check) is live in every
+/// explored run: a recovery produces exactly one completed episode whose
+/// steps tile its duration, and tearing one step out of a real run's
+/// episodes is caught as a P4 violation.
+#[test]
+fn episode_reconciliation_is_enforced_on_every_run() {
+    let schedule = Schedule {
+        scenario: Scenario::tiny(),
+        injections: vec![Injection { point: 0, victim: 0 }],
+    };
+    let run = run_schedule(&schedule);
+    check_run(&run).unwrap();
+    assert!(run.handler_entries >= 1, "recovery must have run");
+    assert_eq!(run.episodes.len() as u64, run.handler_entries);
+
+    let mut torn = run.clone();
+    let ep = torn
+        .episodes
+        .iter_mut()
+        .find(|e| !e.steps.is_empty())
+        .expect("a recovery episode has pipeline steps");
+    ep.steps.pop();
+    let reason = check_run(&torn).unwrap_err();
+    assert!(reason.starts_with("P4"), "{reason}");
+}
+
+/// Deep sweep across world shapes up to n=9 (mixed replication degrees
+/// and spare counts). Run by `ci.sh` under `PARTREPER_EXPLORE_DEEP=1`:
+/// `cargo test -q --test explore_schedules -- --ignored`.
+#[test]
+#[ignore = "long sweep; enabled by ci.sh under PARTREPER_EXPLORE_DEEP=1"]
+fn deep_sweep_across_world_shapes() {
+    let shapes = [
+        // (ncomp, nrep, nspares) — n = sum, up to 9
+        (3, 0, 0),
+        (3, 3, 1),
+        (4, 2, 2),
+        (5, 2, 2),
+        (4, 4, 1),
+        (6, 2, 1),
+    ];
+    for (i, &(ncomp, nrep, nspares)) in shapes.iter().enumerate() {
+        let scenario = Scenario {
+            ncomp,
+            nrep,
+            nspares,
+            iters: 4,
+            ..Scenario::tiny()
+        };
+        // Decorrelate the sampled classes across shapes.
+        let plan = ExplorePlan {
+            budget: 400,
+            seed: ExplorePlan::default().seed.wrapping_add(i as u64),
+            ..ExplorePlan::default()
+        };
+        let report = explore(scenario, &plan);
+        for v in &report.violations {
+            eprintln!("PARTREPER_SCHEDULE={}\n  {}", v.token, v.reason);
+        }
+        assert!(
+            report.ok(),
+            "shape ({ncomp},{nrep},{nspares}): {} violations",
+            report.violations.len()
+        );
+        assert!(report.explored >= 300, "shape ({ncomp},{nrep},{nspares})");
+    }
+}

@@ -4,95 +4,38 @@
 use std::collections::HashSet;
 
 use partreper::config::JobConfig;
-use partreper::partreper::{Channel, Layout};
+use partreper::partreper::Layout;
 use partreper::procimg::{transfer, ProcessImage};
-use partreper::testutil::{check, gen};
+use partreper::testutil::{check, gen, invariants};
 
 /// One randomized repair scenario at a given world size — shared by the
-/// small-world sweep and the large-world (n > 17) cases.
+/// small-world sweep and the large-world (n > 17) cases. The §V oracles
+/// themselves live in `testutil::invariants`, shared with the failure-
+/// schedule explorer so the two suites check the same algebra.
 fn repair_rounds(rng: &mut partreper::util::Xoshiro256, ncomp: usize) {
-    {
-        let nrep = gen::usize_in(rng, 0, ncomp);
-        let nspares = gen::usize_in(rng, 0, 3);
-        let mut layout = Layout::initial_with_spares(ncomp, nrep, nspares);
-        // Up to 3 failure rounds.
-        for _ in 0..gen::usize_in(rng, 1, 3) {
-            let world: Vec<usize> = layout.assign.clone();
-            let dead: HashSet<usize> = gen::subset(rng, world.len(), 0.25)
-                .into_iter()
-                .map(|i| world[i])
-                .collect();
-            match layout.repair(&dead) {
-                Ok(out) => {
-                    let (l2, promotions) = (out.layout, out.promotions);
-                    // ncomp is invariant; app ranks stay dense.
-                    assert_eq!(l2.ncomp, ncomp);
-                    assert_eq!(l2.assign.len(), ncomp + l2.nrep());
-                    // no dead fabric rank survives
-                    for &f in &l2.assign {
-                        assert!(!dead.contains(&f), "dead rank {f} kept");
-                    }
-                    // assign has no duplicates
-                    let set: HashSet<usize> = l2.assign.iter().copied().collect();
-                    assert_eq!(set.len(), l2.assign.len());
-                    // every replica mirrors a valid comp rank, uniquely
-                    let mut seen = HashSet::new();
-                    for &m in &l2.rep_mirror {
-                        assert!(m < ncomp);
-                        assert!(seen.insert(m), "two replicas of comp {m}");
-                    }
-                    // promotions moved exactly the dead comps with live reps
-                    for (c, f) in promotions {
-                        assert!(c < ncomp);
-                        assert_eq!(l2.assign[c], f);
-                    }
-                    // cold restores landed on spares from the old pool
-                    for &(c, f) in &out.restores {
-                        assert!(c < ncomp);
-                        assert_eq!(l2.assign[c], f);
-                        assert!(layout.spares.contains(&f));
-                        assert!(!dead.contains(&f));
-                    }
-                    // spare pool: no dead spares kept, none in the world
-                    for &s in &l2.spares {
-                        assert!(!dead.contains(&s));
-                        assert!(!l2.assign.contains(&s));
-                    }
-                    // epos/rep maps consistent
-                    for c in 0..ncomp {
-                        if let Some(e) = l2.epos(c, Channel::Rep) {
-                            assert_eq!(l2.rep_mirror[e - ncomp], c);
-                        }
-                    }
-                    layout = l2;
-                }
-                Err(c) => {
-                    // Interruption is only legal when comp c and its rep
-                    // (if any) are both dead AND the spare pool could not
-                    // cover every unreplicated dead comp.
-                    assert!(dead.contains(&layout.assign[c]));
-                    if let Some(rf) = layout.rep_fabric_of(c) {
-                        assert!(dead.contains(&rf), "interrupted despite live replica");
-                    }
-                    let live_spares = layout
-                        .spares
-                        .iter()
-                        .filter(|f| !dead.contains(f))
-                        .count();
-                    let dead_unrep = (0..ncomp)
-                        .filter(|&c| {
-                            dead.contains(&layout.assign[c])
-                                && layout
-                                    .rep_fabric_of(c)
-                                    .map_or(true, |rf| dead.contains(&rf))
-                        })
-                        .count();
-                    assert!(
-                        live_spares < dead_unrep,
-                        "interrupted with {live_spares} live spares for {dead_unrep} losses"
-                    );
-                    return; // job over for this case
-                }
+    let nrep = gen::usize_in(rng, 0, ncomp);
+    let nspares = gen::usize_in(rng, 0, 3);
+    let mut layout = Layout::initial_with_spares(ncomp, nrep, nspares);
+    // Up to 3 failure rounds.
+    for _ in 0..gen::usize_in(rng, 1, 3) {
+        let world: Vec<usize> = layout.assign.clone();
+        let dead: HashSet<usize> = gen::subset(rng, world.len(), 0.25)
+            .into_iter()
+            .map(|i| world[i])
+            .collect();
+        match layout.repair(&dead) {
+            Ok(out) => {
+                invariants::check_repair_outcome(&layout, &dead, &out)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                layout = out.layout;
+            }
+            Err(c) => {
+                // Interruption is only legal when comp c and its rep
+                // (if any) are both dead AND the spare pool could not
+                // cover every unreplicated dead comp.
+                invariants::check_interruption_legal(&layout, &dead, c)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                return; // job over for this case
             }
         }
     }
@@ -250,7 +193,7 @@ fn prop_event_mode_survivable_failure_preserves_results() {
 /// log; skips never target already-sent ids.
 #[test]
 fn prop_log_resend_skip_partition() {
-    use partreper::partreper::{IdSet, MessageLog};
+    use partreper::partreper::{Channel, IdSet, MessageLog};
     use std::sync::Arc;
 
     check("resend/skip partition", 200, |rng| {
