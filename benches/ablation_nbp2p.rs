@@ -78,6 +78,66 @@ fn run_once(cfg: &JobConfig, iters: usize) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// Ring-send-only job (no collectives) for copy accounting: returns the
+/// EMPI fabric's `(payload_copies, payload_copy_bytes)` and the number of
+/// logical sends the job posted (one per incarnation per iteration).
+fn copies_for(cfg: &JobConfig, iters: usize) -> ((u64, u64), u64) {
+    let report = launch_job(cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        let n = pr.size();
+        let me = pr.rank();
+        let data = vec![0xA5u8; PAYLOAD];
+        for _ in 0..iters {
+            if n > 1 {
+                let next = (me + 1) % n;
+                let prev = (me + n - 1) % n;
+                if me % 2 == 0 {
+                    pr.send(next, 43, &data);
+                    assert_eq!(pr.recv(prev, 43).len(), PAYLOAD);
+                } else {
+                    assert_eq!(pr.recv(prev, 43).len(), PAYLOAD);
+                    pr.send(next, 43, &data);
+                }
+            }
+        }
+        pr.finalize();
+        Ok(())
+    });
+    let mut senders = 0u64;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        assert!(matches!(o, RankOutcome::Done(())), "rank {r}: {o:?}");
+        senders += 1;
+    }
+    (
+        report.empi_fabric.metrics.copies_snapshot(),
+        iters as u64 * senders,
+    )
+}
+
+/// The copy budget (DESIGN.md §11): a replicated send materializes exactly
+/// one payload copy per sending incarnation — the log record and both
+/// fan-out envelopes share it. Differenced against an empty job so
+/// init/finalize charges cancel; asserted, so the CI bench smoke *fails*
+/// if fan-out ever regresses to copy-per-channel.
+fn copy_budget_case(report: &mut common::BenchReport, ncomp: usize, iters: usize) {
+    common::hr("Copy budget — one materialized copy per replicated send");
+    for &rd in &[0.0f64, 100.0] {
+        let cfg = JobConfig::new(ncomp, rd);
+        let ((c0, b0), _) = copies_for(&cfg, 0);
+        let ((c1, b1), sends) = copies_for(&cfg, iters);
+        let per_send = (c1 - c0) as f64 / sends as f64;
+        let bytes_per_send = (b1 - b0) as f64 / sends as f64;
+        report.case_value(&format!("copies.r{rd}.per_send"), "copies", per_send);
+        report.case_value(&format!("copies.r{rd}.bytes_per_send"), "B", bytes_per_send);
+        println!("r{rd:<5} copies/send={per_send:.3} bytes/send={bytes_per_send:.0}");
+        assert!(
+            per_send <= 1.0 + 1e-9,
+            "copy budget exceeded at rdegree {rd}: {per_send} copies per send"
+        );
+        assert_eq!(bytes_per_send as usize, PAYLOAD);
+    }
+}
+
 fn main() {
     common::hr("Ablation — nonblocking parallel fan-out vs serial baseline");
     let mut report = common::BenchReport::new("nbp2p");
@@ -120,6 +180,8 @@ fn main() {
             println!("{mode:<10} {rd:>6} {median:>12.4} {overhead:>+14.2}");
         }
     }
+    copy_budget_case(&mut report, ncomp, iters.min(4));
+
     report.write();
     println!(
         "\nshape: at matching replication degrees the parallel fan-out's \

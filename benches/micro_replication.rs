@@ -1,13 +1,23 @@
 //! Microbench: §III-A process-image replication — transfer cost vs image
 //! size and chunk count, plus the repair-branch costs (count/size
-//! mismatches).
+//! mismatches) — and the runtime-level replicated-send cost: ns/op for a
+//! rendezvous-sized p2p send at 0 % vs 100 % replication, the number the
+//! zero-copy fan-out (DESIGN.md §11) is supposed to shrink. Emits
+//! `BENCH_replication.json` for cross-PR tracking.
 
 mod common;
 
 use std::time::Instant;
 
+use partreper::config::JobConfig;
+use partreper::partreper::PartReper;
 use partreper::procimg::{transfer, ProcessImage};
+use partreper::procmgr::{launch_job, RankOutcome};
 use partreper::util::Summary;
+
+/// Past the 64 KiB EMPI rendezvous threshold — the regime where the old
+/// copy-per-channel fan-out paid three ~100 KiB memcpys per logical send.
+const SEND_PAYLOAD: usize = 96 * 1024;
 
 fn image_with(chunks: usize, chunk_bytes: usize) -> ProcessImage {
     let mut img = ProcessImage::new();
@@ -21,7 +31,33 @@ fn image_with(chunks: usize, chunk_bytes: usize) -> ProcessImage {
     img
 }
 
+/// One two-rank job doing `iters` blocking 96 KiB sends rank 0 → rank 1;
+/// returns wall seconds. `iters = 0` gives the init/teardown floor.
+fn send_job_secs(rdegree: f64, iters: usize) -> f64 {
+    let cfg = JobConfig::new(2, rdegree);
+    let t0 = Instant::now();
+    let report = launch_job(&cfg, move |ctx| {
+        let pr = PartReper::init(ctx);
+        let data = vec![0x33u8; SEND_PAYLOAD];
+        for _ in 0..iters {
+            if pr.rank() == 0 {
+                pr.send(1, 7, &data);
+            } else {
+                assert_eq!(pr.recv(0, 7).len(), SEND_PAYLOAD);
+            }
+        }
+        pr.finalize();
+        Ok(())
+    });
+    for (r, o) in report.outcomes.iter().enumerate() {
+        assert!(matches!(o, RankOutcome::Done(())), "rank {r}: {o:?}");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
 fn main() {
+    let mut report = common::BenchReport::new("replication");
+
     common::hr("Micro — process-image replication (§III-A)");
     println!("chunks  chunk_KiB  serialize(us)  transfer(us)  MB/s");
     let cases: &[(usize, usize)] = if common::smoke() {
@@ -45,6 +81,8 @@ fn main() {
             tr.add(t.elapsed().as_secs_f64() * 1e6);
         }
         let total_mb = (chunks * kib) as f64 / 1024.0;
+        report.case(&format!("img.c{chunks}k{kib}.serialize"), "us", &ser);
+        report.case(&format!("img.c{chunks}k{kib}.transfer"), "us", &tr);
         println!(
             "{:>6} {:>10} {:>14.1} {:>13.1} {:>7.0}",
             chunks,
@@ -57,7 +95,11 @@ fn main() {
 
     common::hr("Micro — repair branches (count/size matching)");
     let src = image_with(32, 64 * 1024);
-    for (label, tgt_chunks) in [("equal", 32usize), ("target short", 8), ("target long", 64)] {
+    for (label, tag, tgt_chunks) in [
+        ("equal", "equal", 32usize),
+        ("target short", "short", 8),
+        ("target long", "long", 64),
+    ] {
         let mut s = Summary::new();
         for _ in 0..20 {
             let mut tgt = image_with(tgt_chunks, 64 * 1024);
@@ -66,6 +108,29 @@ fn main() {
             s.add(t.elapsed().as_secs_f64() * 1e6);
             assert_eq!(stats.heap_bytes, 32 * 64 * 1024);
         }
+        report.case(&format!("repair.{tag}"), "us", &s);
         println!("{label:>13}: {:>8.1}us", s.median());
     }
+
+    common::hr("Micro — replicated send ns/op (96 KiB, rendezvous-sized)");
+    // Per-op cost = (job with K sends − empty job) / K, so init, the
+    // replica state transfer and finalize cancel. At 100 % replication a
+    // logical send runs on two incarnations and fans out to two channels;
+    // before the zero-copy plumbing each channel (and the log) re-copied
+    // the payload, which is the regression this case would expose.
+    let k = if common::smoke() { 4 } else { 16 };
+    let send_reps = if common::smoke() { 1 } else { 5 };
+    println!("{:<8} {:>14}", "rdeg%", "ns_per_send");
+    for &rd in &[0.0f64, 100.0] {
+        let mut s = Summary::new();
+        for _ in 0..send_reps {
+            let floor = send_job_secs(rd, 0);
+            let loaded = send_job_secs(rd, k);
+            s.add(((loaded - floor).max(0.0) / k as f64) * 1e9);
+        }
+        report.case(&format!("send96k.r{rd}.ns_per_op"), "ns", &s);
+        println!("{rd:<8} {:>14.0}", s.median());
+    }
+
+    report.write();
 }

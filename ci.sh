@@ -40,6 +40,14 @@ echo "== bench smoke (smallest case per bench, catches runtime rot) =="
 # rep, so a bench that panics, hangs, or regresses pathologically fails CI
 # here instead of rotting until someone runs the full sweep. Each micro
 # bench also emits BENCH_<name>.json for cross-PR perf tracking.
+#
+# Copy-budget gate (DESIGN.md §11): the ablation_nbp2p smoke asserts a
+# replicated send materializes at most ONE payload copy per sending
+# incarnation — the message-log record and both fan-out envelopes must
+# share the allocation. If zero-copy plumbing ever regresses to
+# copy-per-channel, that bench (and this gate) fails. The exact
+# per-algorithm budgets are pinned by tests/copy_accounting.rs in tier-1
+# above, under both exec modes.
 for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
              fig8_apps fig9a_failure_overhead fig9b_mtti \
              ablation_is_alltoallv ablation_mg_threshold ablation_coll_select \

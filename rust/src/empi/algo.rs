@@ -36,7 +36,7 @@
 use super::reduce::{fold, DType, ReduceOp};
 use super::{Comm, Recvd, Src, Tag};
 use crate::fabric::{
-    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, RootedAlg, SEL_ALLGATHER_BRUCK,
+    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, Payload, RootedAlg, SEL_ALLGATHER_BRUCK,
     SEL_ALLGATHER_RING, SEL_ALLREDUCE_RDOUBLE, SEL_ALLREDUCE_RING, SEL_ALLTOALL_BRUCK,
     SEL_ALLTOALL_PAIRWISE, SEL_BCAST_BINOMIAL, SEL_BCAST_CHAIN, SEL_GATHER_BINOMIAL,
     SEL_GATHER_LINEAR, SEL_SCATTER_BINOMIAL, SEL_SCATTER_LINEAR,
@@ -63,8 +63,22 @@ fn coll_span<'a>(c: &'a Comm, name: &'static str, bytes: usize) -> SpanGuard<'a>
 pub trait Xfer {
     type Err: From<crate::error::CommError>;
     fn comm(&self) -> &Comm;
-    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), Self::Err>;
+
+    /// Zero-copy blocking send of an already-materialized [`Payload`] —
+    /// the one required send primitive. The relay legs of the tree and
+    /// chain algorithms ride this to forward a received payload (or a
+    /// slice of one) without materializing another copy.
+    fn send_payload(&self, dst: usize, tag: i64, data: Payload) -> Result<(), Self::Err>;
+
     fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, Self::Err>;
+
+    /// Copying blocking send: materializes (and charges, via
+    /// [`crate::fabric::Fabric::copy_in`]) one copy of a borrowed buffer,
+    /// then rides [`Xfer::send_payload`]. Use it where the bytes genuinely
+    /// leave a caller-owned buffer; forwarding paths use `send_payload`.
+    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), Self::Err> {
+        self.send_payload(dst, tag, self.comm().fabric.copy_in(data))
+    }
 
     /// Simultaneous exchange (the `MPI_Sendrecv` shape): post the receive
     /// from `src`, run the (blocking) send to `dst`, then complete the
@@ -80,9 +94,22 @@ pub trait Xfer {
     /// identical to send-then-recv; only the local posting order differs,
     /// so the §VI-B replay invariant is untouched.
     fn xchg(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Result<Recvd, Self::Err> {
+        self.xchg_payload(dst, src, tag, self.comm().fabric.copy_in(data))
+    }
+
+    /// Zero-copy exchange: same recv-post-then-send shape as [`Xfer::xchg`],
+    /// but the outgoing envelope shares `data` instead of copying it (the
+    /// ring-allgather carry and the packed Bruck rounds use this).
+    fn xchg_payload(
+        &self,
+        dst: usize,
+        src: usize,
+        tag: i64,
+        data: Payload,
+    ) -> Result<Recvd, Self::Err> {
         let c = self.comm();
         let mut req = c.irecv(Src::Rank(src), Tag::Tag(tag));
-        self.send(dst, tag, data)?;
+        self.send_payload(dst, tag, data)?;
         Ok(c.wait_recv(&mut req)?)
     }
 }
@@ -97,8 +124,8 @@ impl Xfer for Plain<'_> {
         self.0
     }
 
-    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), Self::Err> {
-        self.0.send(dst, tag, data)
+    fn send_payload(&self, dst: usize, tag: i64, data: Payload) -> Result<(), Self::Err> {
+        self.0.send_payload(dst, tag, data)
     }
 
     fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, Self::Err> {
@@ -416,7 +443,10 @@ fn agree_root_size<X: Xfer>(
 // ------------------------------------------------------------- broadcast
 
 /// Binomial-tree broadcast: receive from the parent (lowest set bit
-/// cleared), forward to children (set bits above the lowest).
+/// cleared), forward to children (set bits above the lowest). The root
+/// materializes one charged copy of its buffer; every hop below forwards
+/// a share of the payload that arrived, so an n-rank broadcast moves one
+/// allocation, not one per edge.
 fn bcast_binomial<X: Xfer>(
     x: &X,
     tag: i64,
@@ -426,11 +456,14 @@ fn bcast_binomial<X: Xfer>(
     let c = x.comm();
     let n = c.size();
     let vrank = (c.rank() + n - root) % n;
-    if vrank != 0 {
+    let payload = if vrank != 0 {
         let parent = ((vrank & (vrank - 1)) + root) % n;
         let m = x.recv(Src::Rank(parent), Tag::Tag(tag))?;
         *data = m.data.to_vec();
-    }
+        m.data
+    } else {
+        c.fabric.copy_in(data)
+    };
     let mut mask = 1usize;
     while mask < n {
         if vrank & mask != 0 {
@@ -438,7 +471,7 @@ fn bcast_binomial<X: Xfer>(
         }
         let child_v = vrank | mask;
         if child_v < n {
-            x.send((child_v + root) % n, tag, data)?;
+            x.send_payload((child_v + root) % n, tag, payload.clone())?;
         }
         mask <<= 1;
     }
@@ -470,14 +503,22 @@ fn bcast_chain<X: Xfer>(
     let nseg = len.div_ceil(seg);
     let succ = (me + 1) % n;
     let pred = (me + n - 1) % n;
+    // The root charges one copy of the whole payload; each segment on the
+    // wire is a zero-copy slice of it, and middle ranks forward the very
+    // payload that arrived — so the chain moves one allocation end to end
+    // (the middle ranks' copy into `data` is the delivery, not a charge).
+    let payload = (pos == 0).then(|| c.fabric.copy_in(data));
     for k in 0..nseg {
         let range = k * seg..((k + 1) * seg).min(len);
         if pos != 0 {
             let m = x.recv(Src::Rank(pred), Tag::Tag(tag))?;
             data[range.clone()].copy_from_slice(&m.data);
-        }
-        if pos != n - 1 {
-            x.send(succ, tag, &data[range])?;
+            if pos != n - 1 {
+                x.send_payload(succ, tag, m.data)?;
+            }
+        } else if pos != n - 1 {
+            let p = payload.as_ref().expect("root materialized its payload");
+            x.send_payload(succ, tag, p.slice(range))?;
         }
     }
     Ok(())
@@ -644,7 +685,9 @@ fn gather_binomial<X: Xfer>(
     while mask < n {
         if vrank & mask != 0 {
             let parent = ((vrank ^ mask) + root) % n;
-            x.send(parent, tag, &pack_indexed(&have))?;
+            // The pack is the materialization: charge it once and share
+            // the packed buffer with the wire envelope.
+            x.send_payload(parent, tag, c.fabric.pack_in(pack_indexed(&have)))?;
             return Ok(None);
         }
         let child_v = vrank | mask;
@@ -715,7 +758,7 @@ fn scatter_binomial<X: Xfer>(
             let subtree = child_v..child_v + mask;
             let (send, keep): (Vec<_>, Vec<_>) =
                 have.into_iter().partition(|(v, _)| subtree.contains(v));
-            x.send((child_v + root) % n, tag, &pack_indexed(&send))?;
+            x.send_payload((child_v + root) % n, tag, c.fabric.pack_in(pack_indexed(&send)))?;
             have = keep;
         }
         mask <<= 1;
@@ -730,7 +773,9 @@ fn scatter_binomial<X: Xfer>(
 // -------------------------------------------------------------- allgather
 
 /// Ring allgather: n−1 neighbour steps, each forwarding the block received
-/// the step before.
+/// the step before. Each rank charges one copy (its own block); every
+/// later step forwards the payload that just arrived, unshared and
+/// uncopied — the carry travels the whole ring as one allocation.
 fn allgather_ring<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>, X::Err> {
     let c = x.comm();
     let n = c.size();
@@ -740,12 +785,14 @@ fn allgather_ring<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>,
     let right = (me + 1) % n;
     let left = (me + n - 1) % n;
     let mut cur = me;
+    let mut carry = c.fabric.copy_in(data);
     for _ in 0..n - 1 {
         // Whole-ring simultaneous shift: recv-posting exchange.
-        let m = x.xchg(right, left, tag, &out[cur])?;
+        let m = x.xchg_payload(right, left, tag, carry)?;
         cur = (cur + n - 1) % n;
         debug_assert!(out[cur].is_empty());
         out[cur] = m.data.to_vec();
+        carry = m.data;
     }
     Ok(out)
 }
@@ -763,9 +810,10 @@ fn allgather_bruck<X: Xfer>(x: &X, tag: i64, data: &[u8]) -> Result<Vec<Vec<u8>>
     while have.len() < n {
         let cnt = have.len();
         let send_cnt = cnt.min(n - cnt);
-        // Distance-k simultaneous exchange round: recv-posting xchg.
-        let packed = pack_blocks(&have[..send_cnt]);
-        let m = x.xchg((me + n - k) % n, (me + k) % n, tag, &packed)?;
+        // Distance-k simultaneous exchange round: recv-posting xchg. The
+        // pack is the round's one charged copy; the envelope shares it.
+        let packed = c.fabric.pack_in(pack_blocks(&have[..send_cnt]));
+        let m = x.xchg_payload((me + n - k) % n, (me + k) % n, tag, packed)?;
         unpack_blocks_into(&m.data, &mut have);
         k <<= 1;
     }
@@ -818,9 +866,10 @@ fn alltoall_bruck<X: Xfer>(x: &X, tag: i64, blocks: &[Vec<u8>]) -> Result<Vec<Ve
             .filter(|i| i & k != 0)
             .map(|i| (i, std::mem::take(&mut tmp[i])))
             .collect();
-        // Simultaneous bit-k exchange round: recv-posting xchg.
-        let packed = pack_indexed(&entries);
-        let m = x.xchg((me + k) % n, (me + n - k) % n, tag, &packed)?;
+        // Simultaneous bit-k exchange round: recv-posting xchg, sharing
+        // the packed buffer (its pack is the round's one charged copy).
+        let packed = c.fabric.pack_in(pack_indexed(&entries));
+        let m = x.xchg_payload((me + k) % n, (me + n - k) % n, tag, packed)?;
         let mut got = Vec::new();
         unpack_indexed_into(&m.data, &mut got);
         for (i, b) in got {

@@ -31,7 +31,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::CommError;
-use crate::fabric::{Envelope, Fabric, MatchSpec, SendHandle};
+use crate::fabric::{Envelope, Fabric, MatchSpec, Payload, SendHandle};
 
 /// Deadline for internal blocking receives *and* blocking rendezvous
 /// sends. Generous: it only fires on protocol bugs or "native MPI would
@@ -62,7 +62,9 @@ pub struct Recvd {
     pub src: usize,
     pub tag: i64,
     pub send_id: u64,
-    pub data: Arc<Vec<u8>>,
+    /// Shared view of the sender's payload (no receive-side copy; the
+    /// caller copies out only if it needs owned bytes).
+    pub data: Payload,
 }
 
 /// Pending nonblocking receive (MPI_Request for receives).
@@ -288,9 +290,17 @@ impl Comm {
         dst: usize,
         tag: i64,
         send_id: u64,
-        data: Arc<Vec<u8>>,
+        data: impl Into<Payload>,
     ) -> Result<(), CommError> {
         let req = self.isend_shared(dst, tag, send_id, data)?;
+        self.wait_send(&req)
+    }
+
+    /// Blocking zero-copy send of an already-materialized [`Payload`]
+    /// (send_id 0). The transport the collective engine's relay paths use
+    /// to forward a received payload without re-copying it.
+    pub fn send_payload(&self, dst: usize, tag: i64, data: Payload) -> Result<(), CommError> {
+        let req = self.isend_shared(dst, tag, 0, data)?;
         self.wait_send(&req)
     }
 
@@ -301,7 +311,9 @@ impl Comm {
         self.isend_with_id(dst, tag, 0, data)
     }
 
-    /// Nonblocking send with a piggybacked send-id.
+    /// Nonblocking send with a piggybacked send-id. This is where
+    /// caller-owned bytes are materialized into the runtime (MPI buffer
+    /// semantics) — the one charged copy of the eager p2p path.
     pub fn isend_with_id(
         &self,
         dst: usize,
@@ -309,7 +321,7 @@ impl Comm {
         send_id: u64,
         data: &[u8],
     ) -> Result<SendReq, CommError> {
-        self.isend_shared(dst, tag, send_id, Arc::new(data.to_vec()))
+        self.isend_shared(dst, tag, send_id, self.fabric.copy_in(data))
     }
 
     /// Nonblocking zero-copy send.
@@ -318,7 +330,7 @@ impl Comm {
         dst: usize,
         tag: i64,
         send_id: u64,
-        data: Arc<Vec<u8>>,
+        data: impl Into<Payload>,
     ) -> Result<SendReq, CommError> {
         let handle = self.fabric.start_send(Envelope {
             src: self.my_fabric_rank(),
@@ -326,7 +338,7 @@ impl Comm {
             ctx: self.ctx,
             tag,
             send_id,
-            data,
+            data: data.into(),
         })?;
         Ok(SendReq {
             handle,
@@ -526,7 +538,7 @@ impl InterComm {
         remote_rank: usize,
         tag: i64,
         send_id: u64,
-        data: Arc<Vec<u8>>,
+        data: impl Into<Payload>,
     ) -> Result<(), CommError> {
         let req = self.isend_shared(remote_rank, tag, send_id, data)?;
         self.wait_send(&req)
@@ -541,7 +553,7 @@ impl InterComm {
         send_id: u64,
         data: &[u8],
     ) -> Result<SendReq, CommError> {
-        self.isend_shared(remote_rank, tag, send_id, Arc::new(data.to_vec()))
+        self.isend_shared(remote_rank, tag, send_id, self.fabric.copy_in(data))
     }
 
     /// Nonblocking zero-copy send to the remote group.
@@ -550,7 +562,7 @@ impl InterComm {
         remote_rank: usize,
         tag: i64,
         send_id: u64,
-        data: Arc<Vec<u8>>,
+        data: impl Into<Payload>,
     ) -> Result<SendReq, CommError> {
         let handle = self.fabric.start_send(Envelope {
             src: self.my_fabric_rank(),
@@ -558,7 +570,7 @@ impl InterComm {
             ctx: self.ctx,
             tag,
             send_id,
-            data,
+            data: data.into(),
         })?;
         Ok(SendReq {
             handle,

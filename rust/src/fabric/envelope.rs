@@ -1,6 +1,6 @@
 //! Wire envelope and receive-side matching.
 
-use std::sync::Arc;
+use super::Payload;
 
 /// One message on the simulated wire.
 ///
@@ -16,18 +16,28 @@ pub struct Envelope {
     pub ctx: u64,
     pub tag: i64,
     pub send_id: u64,
-    pub data: Arc<Vec<u8>>,
+    /// Shared payload view: envelopes for the same logical send (comp +
+    /// replica fan-out, resends, the MessageLog record) all reference one
+    /// allocation.
+    pub data: Payload,
 }
 
 impl Envelope {
-    pub fn new(src: usize, dst: usize, ctx: u64, tag: i64, send_id: u64, data: Vec<u8>) -> Self {
+    pub fn new(
+        src: usize,
+        dst: usize,
+        ctx: u64,
+        tag: i64,
+        send_id: u64,
+        data: impl Into<Payload>,
+    ) -> Self {
         Self {
             src,
             dst,
             ctx,
             tag,
             send_id,
-            data: Arc::new(data),
+            data: data.into(),
         }
     }
 
@@ -36,7 +46,7 @@ impl Envelope {
     pub fn fanout(&self, dst: usize) -> Self {
         Self {
             dst,
-            data: Arc::clone(&self.data),
+            data: self.data.clone(),
             ..*self
         }
     }
@@ -158,6 +168,6 @@ mod tests {
         let f = e.fanout(5);
         assert_eq!(f.dst, 5);
         assert_eq!(f.send_id, 77);
-        assert!(Arc::ptr_eq(&e.data, &f.data));
+        assert!(e.data.shares_buffer(&f.data));
     }
 }

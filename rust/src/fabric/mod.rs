@@ -63,9 +63,11 @@
 
 pub mod envelope;
 pub mod netmodel;
+pub mod payload;
 pub mod procset;
 
 pub use envelope::{BucketKey, Envelope, MatchSpec};
+pub use payload::Payload;
 pub use netmodel::{
     ceil_log2, AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, NetModel,
     RootedAlg,
@@ -517,6 +519,14 @@ pub struct FabricMetrics {
     /// Virtual wire time in nanoseconds according to the [`NetModel`];
     /// accumulated even when no real delay is injected.
     pub virtual_ns: AtomicU64,
+    /// Payload buffers materialized (memcpy'd) on this fabric's send
+    /// paths via [`Fabric::copy_in`]/[`Fabric::pack_in`]. Every surviving
+    /// copy in the zero-copy plumbing is charged here (DESIGN.md §11);
+    /// the golden tests in `tests/copy_accounting.rs` pin exact counts
+    /// per operation class.
+    pub payload_copies: AtomicU64,
+    /// Bytes covered by [`FabricMetrics::payload_copies`].
+    pub payload_copy_bytes: AtomicU64,
     /// Collective algorithm selections made by the tuned engine.
     pub selects: CollSelects,
 }
@@ -527,6 +537,14 @@ impl FabricMetrics {
             self.messages.load(Ordering::Relaxed),
             self.bytes.load(Ordering::Relaxed),
             self.virtual_ns.load(Ordering::Relaxed),
+        )
+    }
+
+    /// `(payload_copies, payload_copy_bytes)` — the copy-accounting pair.
+    pub fn copies_snapshot(&self) -> (u64, u64) {
+        (
+            self.payload_copies.load(Ordering::Relaxed),
+            self.payload_copy_bytes.load(Ordering::Relaxed),
         )
     }
 }
@@ -647,6 +665,45 @@ impl Fabric {
     /// Allocate a fresh communicator context id (unique per fabric).
     pub fn alloc_ctx(&self) -> u64 {
         self.next_ctx.fetch_add(1, Ordering::Relaxed)
+    }
+
+    // ----------------------------------------------- copy accounting
+
+    /// Bill one materialized payload copy of `n` bytes: bumps the
+    /// `payload_copies`/`payload_copy_bytes` counters and meters
+    /// `ns_per_byte_copy` time into `virtual_ns`. Metering only — the
+    /// scheduler clock is untouched, so charging a copy can never
+    /// perturb a wire schedule. Zero-length copies are free (nothing
+    /// is moved).
+    pub fn charge_copy(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        self.metrics.payload_copies.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .payload_copy_bytes
+            .fetch_add(n as u64, Ordering::Relaxed);
+        self.metrics
+            .virtual_ns
+            .fetch_add(self.model.copy_ns(n) as u64, Ordering::Relaxed);
+    }
+
+    /// Materialize caller-owned bytes into a shared [`Payload`] — the
+    /// one unavoidable memcpy where app data enters the runtime (MPI
+    /// buffer-ownership semantics: the caller may reuse its buffer the
+    /// moment the call returns). Charged via [`Fabric::charge_copy`].
+    pub fn copy_in(&self, data: &[u8]) -> Payload {
+        self.charge_copy(data.len());
+        Payload::from(data.to_vec())
+    }
+
+    /// Adopt an already-built scratch buffer (a pack/encode result) as a
+    /// [`Payload`], charging the copy that filled it. The wrap itself is
+    /// an allocation move; the charge accounts for the bytes the caller
+    /// just wrote into `data`.
+    pub fn pack_in(&self, data: Vec<u8>) -> Payload {
+        self.charge_copy(data.len());
+        Payload::from(data)
     }
 
     /// Fire-and-forget delivery. Sends never fail at the fabric level: a
@@ -1126,6 +1183,28 @@ mod tests {
         assert_eq!(m, 2);
         assert_eq!(b, 150);
         assert!(v >= 2 * 1_500);
+        // The raw fabric path materializes nothing: sending an envelope
+        // is an ownership handoff, not a copy.
+        assert_eq!(f.metrics.copies_snapshot(), (0, 0));
+    }
+
+    #[test]
+    fn copy_accounting_bills_counters_and_copy_time() {
+        let procs = ProcSet::new(2);
+        let f = Fabric::new("test", procs, NetModel::empi_tuned());
+        let (_, _, v0) = f.metrics.snapshot();
+        let p = f.copy_in(&[7u8; 1000]);
+        assert_eq!(&p[..4], &[7, 7, 7, 7]);
+        let q = f.pack_in(vec![1u8; 500]);
+        assert_eq!(q.len(), 500);
+        assert_eq!(f.metrics.copies_snapshot(), (2, 1500));
+        let (_, _, v1) = f.metrics.snapshot();
+        let billed = f.model.copy_ns(1000) as u64 + f.model.copy_ns(500) as u64;
+        assert_eq!(v1 - v0, billed, "copy time meters into virtual_ns");
+        // Zero-length copies are free: nothing moved, nothing billed.
+        let e = f.copy_in(&[]);
+        assert!(e.is_empty());
+        assert_eq!(f.metrics.copies_snapshot(), (2, 1500));
     }
 
     // ------------------------------------------ indexed-engine semantics

@@ -321,8 +321,13 @@ impl NetModel {
         self.gather_binomial_ns(n, m)
     }
 
+    /// Memory-copy time for `bytes` at [`NetModel::ns_per_byte_copy`].
+    /// Used internally by the collective cost estimates and publicly by
+    /// the fabric's copy-accounting meter (`Fabric::charge_copy`), so a
+    /// materialized payload copy is billed at the same rate the tuning
+    /// tables already assume for pack/relay traffic.
     #[inline]
-    fn copy_ns(&self, bytes: usize) -> f64 {
+    pub fn copy_ns(&self, bytes: usize) -> f64 {
         self.ns_per_byte_copy * bytes as f64
     }
 

@@ -1,0 +1,222 @@
+//! Shared, sliceable message payload (DESIGN.md §11).
+//!
+//! `Payload` is the single byte-buffer currency of the hot path: one
+//! heap allocation (`Arc<Vec<u8>>`) plus an offset/length window.
+//! Cloning shares the allocation, and [`Payload::slice`] narrows the
+//! window without copying, so a chain-bcast segment or a restore-store
+//! shard is a *view* into its parent buffer rather than a fresh
+//! allocation. A replicated send therefore materializes one buffer
+//! that is shared by the MessageLog record, the comp-channel envelope,
+//! and the replica-channel envelope.
+//!
+//! Construction from an owned `Vec<u8>` or `Arc<Vec<u8>>` is free (an
+//! allocation *move*, not a memcpy) and deliberately uncharged. Paths
+//! that must memcpy caller bytes go through `Fabric::copy_in`, and
+//! paths that packed/encoded a scratch buffer go through
+//! `Fabric::pack_in`; both bill `ns_per_byte_copy` and bump the
+//! `payload_copies` / `payload_copy_bytes` counters so every remaining
+//! copy is visible, budgeted, and regress-able (the copy-accounting
+//! invariant pinned by `tests/copy_accounting.rs`).
+
+use std::fmt;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+/// A shared, immutable byte payload: an `Arc`'d buffer plus an
+/// offset/len window over it. Clones and [`slice`](Payload::slice)s
+/// share the underlying allocation; [`shares_buffer`](Payload::shares_buffer)
+/// is the test-layer probe for that sharing.
+#[derive(Clone)]
+pub struct Payload {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Payload {
+    /// Empty payload.
+    pub fn empty() -> Self {
+        Vec::new().into()
+    }
+
+    /// The viewed bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// A sub-view sharing the same allocation (zero-copy). `range` is
+    /// relative to this view, so slicing a slice composes.
+    pub fn slice(&self, range: Range<usize>) -> Payload {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "payload slice {range:?} out of bounds (len {})",
+            self.len
+        );
+        Payload {
+            buf: Arc::clone(&self.buf),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// True when both payloads view the same underlying allocation
+    /// (regardless of window) — i.e. cloning/slicing one produced the
+    /// other without a copy.
+    pub fn shares_buffer(&self, other: &Payload) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Self {
+        Payload::empty()
+    }
+}
+
+impl Deref for Payload {
+    type Target = [u8];
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+/// Free: moves the allocation, no memcpy. Copies into fresh `Vec`s
+/// are charged at the call site via `Fabric::copy_in`/`pack_in`.
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Self {
+        let len = v.len();
+        Payload {
+            buf: Arc::new(v),
+            off: 0,
+            len,
+        }
+    }
+}
+
+/// Free: adopts an already-shared buffer.
+impl From<Arc<Vec<u8>>> for Payload {
+    fn from(buf: Arc<Vec<u8>>) -> Self {
+        let len = buf.len();
+        Payload { buf, off: 0, len }
+    }
+}
+
+impl fmt::Debug for Payload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Payload({:?})", self.as_slice())
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for Payload {}
+
+impl PartialEq<[u8]> for Payload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+impl PartialEq<&[u8]> for Payload {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl<const N: usize> PartialEq<[u8; N]> for Payload {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+impl<const N: usize> PartialEq<&[u8; N]> for Payload {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+impl PartialEq<Payload> for Vec<u8> {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl PartialEq<Payload> for [u8] {
+    fn eq(&self, other: &Payload) -> bool {
+        self == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_is_a_move_and_derefs() {
+        let p = Payload::from(vec![1u8, 2, 3, 4]);
+        assert_eq!(p.len(), 4);
+        assert_eq!(&*p, &[1, 2, 3, 4]);
+        assert_eq!(p[2], 3);
+        assert_eq!(p.to_vec(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn clone_and_slice_share_the_allocation() {
+        let p = Payload::from((0u8..100).collect::<Vec<_>>());
+        let c = p.clone();
+        assert!(p.shares_buffer(&c));
+        let s = p.slice(10..20);
+        assert!(p.shares_buffer(&s));
+        assert_eq!(&*s, &(10u8..20).collect::<Vec<_>>()[..]);
+        // Slicing a slice composes (offsets are relative to the view).
+        let ss = s.slice(5..8);
+        assert!(ss.shares_buffer(&p));
+        assert_eq!(&*ss, &[15, 16, 17]);
+    }
+
+    #[test]
+    fn independent_buffers_do_not_share() {
+        let a = Payload::from(vec![1u8, 2]);
+        let b = Payload::from(vec![1u8, 2]);
+        assert_eq!(a, b); // content-equal
+        assert!(!a.shares_buffer(&b)); // but distinct allocations
+    }
+
+    #[test]
+    fn equality_covers_common_rhs_shapes() {
+        let p = Payload::from(vec![9u8; 4]);
+        assert_eq!(p, vec![9u8; 4]);
+        assert_eq!(p, [9u8; 4]);
+        assert_eq!(p, b"\x09\x09\x09\x09");
+        assert_eq!(p, &[9u8, 9, 9, 9][..]);
+        assert_eq!(vec![9u8; 4], p);
+        assert!(p == p.clone());
+    }
+
+    #[test]
+    fn empty_default() {
+        let p = Payload::default();
+        assert!(p.is_empty());
+        assert_eq!(p.as_slice(), &[] as &[u8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_range_slice_panics() {
+        Payload::from(vec![0u8; 4]).slice(2..6);
+    }
+
+    #[test]
+    fn from_arc_adopts_shared_buffer() {
+        let a = Arc::new(vec![5u8, 6, 7]);
+        let p = Payload::from(Arc::clone(&a));
+        let q = Payload::from(a);
+        assert!(p.shares_buffer(&q));
+        assert_eq!(&*p, &[5, 6, 7]);
+    }
+}

@@ -72,6 +72,12 @@ pub struct RunResult {
     pub gc_rounds: u64,
     pub records_pruned: u64,
     pub log_peak_bytes: u64,
+    /// Copy accounting on the EMPI fabric (DESIGN.md §11): payload
+    /// buffers materialized on send paths, and the bytes they moved.
+    /// Everything else travels as shared `Payload` views — `ci.sh` gates
+    /// the replicated-send budget at one copy per send on these numbers.
+    pub payload_copies: u64,
+    pub payload_copy_bytes: u64,
     /// Seconds inside the restore phase (refresh pushes + shard gather),
     /// summed over ranks — the cold-restore latency measure.
     pub restore_s: f64,
@@ -216,6 +222,7 @@ pub fn run_app(
     // whole world (zeros under threaded mode).
     let (sched_events, sched_virtual_ns, sched_ready_peak) =
         report.empi_fabric.clock().snapshot();
+    let (payload_copies, payload_copy_bytes) = report.empi_fabric.metrics.copies_snapshot();
     RunResult {
         app,
         backend,
@@ -244,6 +251,8 @@ pub fn run_app(
         gc_rounds: crate::metrics::Counters::get(&totals.gc_rounds),
         records_pruned: crate::metrics::Counters::get(&totals.records_pruned),
         log_peak_bytes: crate::metrics::Counters::get(&totals.log_peak_bytes),
+        payload_copies,
+        payload_copy_bytes,
         restore_s: report.phase_seconds(Phase::Restore),
         coll_selects: report.empi_fabric.metrics.selects.snapshot(),
         exec_mode: report.empi_fabric.clock().mode().name(),

@@ -160,6 +160,10 @@ fn main() {
                 r.log_peak_bytes, r.gc_rounds, r.records_pruned
             );
             println!(
+                "copies: materialized={} bytes={}",
+                r.payload_copies, r.payload_copy_bytes
+            );
+            println!(
                 "sched: mode={} events={} virtual_ns={} ready_peak={}",
                 r.exec_mode, r.sched_events, r.sched_virtual_ns, r.sched_ready_peak
             );

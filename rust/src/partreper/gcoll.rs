@@ -21,6 +21,7 @@ use crate::empi::algo::{self, Xfer};
 use crate::empi::reduce::{DType, ReduceOp};
 use crate::empi::{Comm, IAlltoallv, Recvd, Src, Tag};
 use crate::error::{CommError, UlfmError};
+use crate::fabric::Payload;
 use crate::metrics::Counters;
 use crate::obs::HistId;
 use crate::ompi::UlfmComm;
@@ -109,6 +110,22 @@ impl<'a> Guard<'a> {
     pub fn send(&self, comm: &Comm, dst: usize, tag: i64, data: &[u8]) -> Result<(), OpError> {
         self.check()?;
         let req = comm.isend(dst, tag, data)?;
+        self.wait_send(&req)
+    }
+
+    /// Guarded zero-copy send of an already-materialized payload: check,
+    /// post the shared buffer nonblocking, then wait with checks
+    /// interleaved. The relay legs of the guarded collectives ride this so
+    /// forwarding a received payload charges no extra copy.
+    pub fn send_payload(
+        &self,
+        comm: &Comm,
+        dst: usize,
+        tag: i64,
+        data: Payload,
+    ) -> Result<(), OpError> {
+        self.check()?;
+        let req = comm.isend_shared(dst, tag, 0, data)?;
         self.wait_send(&req)
     }
 
@@ -272,8 +289,8 @@ impl Xfer for Gx<'_, '_> {
         self.comm
     }
 
-    fn send(&self, dst: usize, tag: i64, data: &[u8]) -> Result<(), OpError> {
-        self.g.send(self.comm, dst, tag, data)
+    fn send_payload(&self, dst: usize, tag: i64, data: Payload) -> Result<(), OpError> {
+        self.g.send_payload(self.comm, dst, tag, data)
     }
 
     fn recv(&self, src: Src, tag: Tag) -> Result<Recvd, OpError> {
@@ -284,9 +301,15 @@ impl Xfer for Gx<'_, '_> {
     /// but with ULFM checks interleaved into both completions, so a
     /// partner dying mid-exchange aborts into the error handler.
     fn xchg(&self, dst: usize, src: usize, tag: i64, data: &[u8]) -> Result<Recvd, OpError> {
+        self.xchg_payload(dst, src, tag, self.comm.fabric.copy_in(data))
+    }
+
+    /// Guarded zero-copy exchange (same shape, payload shared with the
+    /// outgoing envelope instead of copied).
+    fn xchg_payload(&self, dst: usize, src: usize, tag: i64, data: Payload) -> Result<Recvd, OpError> {
         let mut req = self.comm.irecv(Src::Rank(src), Tag::Tag(tag));
         self.g.check()?;
-        let send = self.comm.isend(dst, tag, data)?;
+        let send = self.comm.isend_shared(dst, tag, 0, data)?;
         self.g.wait_send(&send)?;
         self.g.wait_recv(self.comm, &mut req)
     }

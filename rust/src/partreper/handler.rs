@@ -278,7 +278,7 @@ impl PartReper {
                     self.ctx.restore_ctx,
                     restore::TAG_OFFER,
                     0,
-                    msg.encode(),
+                    self.ctx.empi_fabric.pack_in(msg.encode()),
                 );
                 match self.ctx.empi_fabric.send(env) {
                     Ok(()) => {}
@@ -543,7 +543,7 @@ impl PartReper {
                 CollResult::Unit
             }
             CollKind::Bcast => {
-                let mut buf = rec.input.as_ref().clone();
+                let mut buf = rec.input.to_vec();
                 g.bcast(comm, rec.root, &mut buf)?;
                 CollResult::Flat(buf)
             }

@@ -31,6 +31,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::empi::{DType, ReduceOp};
+use crate::fabric::Payload;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 use super::epoch::{IdSet, RetentionOffer, SnapshotMarks, StoreCoverage};
@@ -44,12 +45,15 @@ pub enum Channel {
     Rep,
 }
 
-/// One logged p2p send.
+/// One logged p2p send. `data` shares the allocation of the fan-out
+/// envelopes, so logging a send retains bytes without re-copying them —
+/// and §VI-B resends re-share the very buffer the original transmission
+/// carried.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SendRecord {
     pub id: u64,
     pub tag: i64,
-    pub data: Arc<Vec<u8>>,
+    pub data: Payload,
 }
 
 /// Kinds of logged collectives.
@@ -92,7 +96,7 @@ pub struct CollRecord {
     pub op: ReduceOp,
     pub root: usize,
     /// Flat input (for bcast/reduce/allreduce/allgather) …
-    pub input: Arc<Vec<u8>>,
+    pub input: Payload,
     /// … or per-destination blocks (alltoall/alltoallv/scatter).
     pub blocks: Arc<Vec<Vec<u8>>>,
 }
@@ -156,7 +160,9 @@ impl MessageLog {
     // ------------------------------------------------------------- sends
 
     /// Allocate the next send id for `dst` and log the transmission.
-    pub fn log_send(&mut self, dst: usize, tag: i64, data: Arc<Vec<u8>>) -> u64 {
+    /// Logging shares the caller's payload — no copy is made here.
+    pub fn log_send(&mut self, dst: usize, tag: i64, data: impl Into<Payload>) -> u64 {
+        let data = data.into();
         let id = self.next_id.entry(dst).or_insert(0);
         *id += 1;
         let rec = SendRecord {
@@ -495,7 +501,7 @@ impl MessageLog {
                 .map(|_| SendRecord {
                     id: r.u64(),
                     tag: r.u64() as i64,
-                    data: Arc::new(r.bytes().to_vec()),
+                    data: Payload::from(r.bytes().to_vec()),
                 })
                 .collect();
             payload_bytes += recs.iter().map(|rec| rec.data.len()).sum::<usize>();
@@ -528,7 +534,7 @@ impl MessageLog {
                 let dtype = dtype_from(r.u64());
                 let op = op_from(r.u64());
                 let root = r.usize();
-                let input = Arc::new(r.bytes().to_vec());
+                let input = Payload::from(r.bytes().to_vec());
                 let nb = r.usize();
                 let blocks = Arc::new((0..nb).map(|_| r.bytes().to_vec()).collect());
                 CollRecord {
@@ -656,7 +662,7 @@ mod tests {
         let miss = log.unreceived_sends(1, &received);
         let ids: Vec<u64> = miss.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![3, 5]);
-        assert_eq!(miss[0].data.as_ref(), &vec![2u8]);
+        assert_eq!(miss[0].data, vec![2u8]);
     }
 
     #[test]
@@ -729,7 +735,7 @@ mod tests {
                 dtype: DType::F64,
                 op: ReduceOp::Sum,
                 root: 0,
-                input: Arc::new(vec![i as u8]),
+                input: Payload::from(vec![i as u8]),
                 blocks: Arc::new(vec![]),
             });
         }
@@ -756,7 +762,7 @@ mod tests {
                 dtype: DType::F32,
                 op: ReduceOp::Max,
                 root: 1,
-                input: Arc::new(vec![i as u8]),
+                input: Payload::from(vec![i as u8]),
                 blocks: Arc::new(vec![vec![1], vec![2, 2]]),
             });
         }
@@ -782,7 +788,7 @@ mod tests {
                 dtype: DType::U64,
                 op: ReduceOp::Sum,
                 root: 0,
-                input: Arc::new(vec![0; 4]),
+                input: Payload::from(vec![0; 4]),
                 blocks: Arc::new(vec![]),
             });
         }
@@ -819,7 +825,7 @@ mod tests {
                 dtype: DType::U64,
                 op: ReduceOp::Sum,
                 root: 0,
-                input: Arc::new(vec![]),
+                input: Payload::empty(),
                 blocks: Arc::new(vec![]),
             });
         }

@@ -43,7 +43,7 @@ use std::time::Duration;
 
 use crate::empi::{DType, ReduceOp};
 use crate::error::{CommError, RankKilled};
-use crate::fabric::{Envelope, MatchSpec};
+use crate::fabric::{Envelope, MatchSpec, Payload};
 use crate::metrics::{Counters, Phase};
 use crate::obs::HistId;
 use crate::ompi::UlfmComm;
@@ -421,7 +421,12 @@ impl PartReper {
         let cfg = &self.ctx.cfg.restore;
         let image = state.capture();
         let gen = StoreGen::pack(st.epoch, image.stack.resume_step);
-        let bytes = restore::encode_snapshot(&image, &self.log.borrow());
+        // One charged materialization: the encoded snapshot. The shards
+        // below are zero-copy views into it.
+        let bytes = self
+            .ctx
+            .empi_fabric
+            .pack_in(restore::encode_snapshot(&image, &self.log.borrow()));
         let shards = restore::split_shards(&bytes, cfg.shards);
         let placement = restore::placement::holders(&st.layout, me_app, cfg.shards, cfg.redundancy);
         let Some(changed) = self.owner_push.borrow_mut().plan(gen, &shards, &placement) else {
@@ -439,7 +444,7 @@ impl PartReper {
 
         // One envelope per holder: all its shards for this generation
         // (per-holder atomicity underpins the two-generation protocol).
-        let mut per_holder: std::collections::HashMap<usize, Vec<(usize, Option<Vec<u8>>)>> =
+        let mut per_holder: std::collections::HashMap<usize, Vec<(usize, Option<Payload>)>> =
             std::collections::HashMap::new();
         for (idx, holders) in placement.iter().enumerate() {
             for &h in holders {
@@ -467,7 +472,7 @@ impl PartReper {
                 self.ctx.restore_ctx,
                 restore::TAG_PUSH,
                 0,
-                msg.encode(),
+                self.ctx.empi_fabric.pack_in(msg.encode()),
             );
             match self.ctx.empi_fabric.send(env) {
                 Ok(()) => {}
@@ -582,7 +587,9 @@ impl PartReper {
     fn send_serial(&self, dst: usize, tag: i64, data: &[u8]) {
         assert!(dst < self.size(), "send: bad destination {dst}");
         self.gc_backpressure(data.len());
-        let payload = Arc::new(data.to_vec());
+        // The single materialized copy of the serial-fanout path: every
+        // channel transmit and the log record share it.
+        let payload = self.ctx.empi_fabric.copy_in(data);
         let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
         self.guarded(|st, g, log| {
             let l = &st.comms().layout;
@@ -619,7 +626,7 @@ impl PartReper {
         channel: Channel,
         tag: i64,
         id: u64,
-        payload: &Arc<Vec<u8>>,
+        payload: &Payload,
     ) -> Result<(), OpError> {
         if log.consume_skip(dst_app, channel, id) {
             Counters::bump(&g.counters.skips);
@@ -764,12 +771,16 @@ impl PartReper {
                     gc.seq += 1;
                     gc.seq
                 };
-                let msg = epoch::GcOfferMsg {
-                    seq: my_seq,
-                    app: me_app,
-                    offer: my_offer.clone(),
-                }
-                .encode();
+                // Encode once; every destination's envelope shares the
+                // packed buffer (charged on the control fabric).
+                let msg = self.ctx.ompi_fabric.pack_in(
+                    epoch::GcOfferMsg {
+                        seq: my_seq,
+                        app: me_app,
+                        offer: my_offer.clone(),
+                    }
+                    .encode(),
+                );
                 for &dst in &layout.assign {
                     if dst == me || self.ctx.procs.is_finalized(dst) {
                         continue;
@@ -930,7 +941,7 @@ impl PartReper {
         dtype: DType,
         op: ReduceOp,
         root: usize,
-        input: Arc<Vec<u8>>,
+        input: Payload,
         blocks: Arc<Vec<Vec<u8>>>,
         exec: impl Fn(&Guard, &WorldComms) -> Result<CollResult, OpError>,
     ) -> CollResult {
@@ -948,8 +959,8 @@ impl PartReper {
             dtype,
             op,
             root,
-            input: input.clone(),
-            blocks: blocks.clone(),
+            input,
+            blocks,
         });
         Counters::bump(&self.ctx.counters.collectives_logged);
         self.gc_tick();
@@ -1004,10 +1015,13 @@ impl PartReper {
         relay_tag: i64,
         res: &CollResult,
     ) -> Result<(), OpError> {
+        // Encode once and share the packed buffer with the wire envelope —
+        // the encode itself is the one charged copy of the relay path.
+        let payload = self.ctx.empi_fabric.pack_in(res.encode());
         if self.ctx.cfg.serial_fanout {
-            inter.send_with_id(slot, relay_tag, 0, &res.encode())?;
+            inter.send_shared(slot, relay_tag, 0, payload)?;
         } else {
-            let req = inter.isend_with_id(slot, relay_tag, 0, &res.encode())?;
+            let req = inter.isend_shared(slot, relay_tag, 0, payload)?;
             if !req.is_done() {
                 self.pending_relays.borrow_mut().push(req);
             }
@@ -1021,7 +1035,7 @@ impl PartReper {
             DType::U64,
             ReduceOp::Sum,
             0,
-            Arc::new(vec![]),
+            Payload::empty(),
             Arc::new(vec![]),
             |g, comms| {
                 g.barrier(comms.comm_cmp.as_ref().expect("comp"))?;
@@ -1031,7 +1045,9 @@ impl PartReper {
     }
 
     pub fn bcast(&self, root: usize, data: &mut Vec<u8>) {
-        let input = Arc::new(data.clone());
+        // One charged copy of the caller's buffer, shared between the log
+        // record and the (re-runnable) execution closure.
+        let input = self.ctx.empi_fabric.copy_in(data);
         let input2 = input.clone();
         let out = self.run_collective(
             CollKind::Bcast,
@@ -1041,7 +1057,7 @@ impl PartReper {
             input,
             Arc::new(vec![]),
             move |g, comms| {
-                let mut buf = input2.as_ref().clone();
+                let mut buf = input2.to_vec();
                 g.bcast(comms.comm_cmp.as_ref().expect("comp"), root, &mut buf)?;
                 Ok(CollResult::Flat(buf))
             },
@@ -1050,7 +1066,7 @@ impl PartReper {
     }
 
     pub fn allreduce(&self, dtype: DType, op: ReduceOp, data: &[u8]) -> Vec<u8> {
-        let input = Arc::new(data.to_vec());
+        let input = self.ctx.empi_fabric.copy_in(data);
         let input2 = input.clone();
         self.run_collective(
             CollKind::Allreduce,
@@ -1069,7 +1085,7 @@ impl PartReper {
     }
 
     pub fn reduce(&self, root: usize, dtype: DType, op: ReduceOp, data: &[u8]) -> Option<Vec<u8>> {
-        let input = Arc::new(data.to_vec());
+        let input = self.ctx.empi_fabric.copy_in(data);
         let input2 = input.clone();
         self.run_collective(
             CollKind::Reduce,
@@ -1088,7 +1104,7 @@ impl PartReper {
     }
 
     pub fn allgather(&self, data: &[u8]) -> Vec<Vec<u8>> {
-        let input = Arc::new(data.to_vec());
+        let input = self.ctx.empi_fabric.copy_in(data);
         let input2 = input.clone();
         self.run_collective(
             CollKind::Allgather,
@@ -1115,7 +1131,7 @@ impl PartReper {
             DType::U64,
             ReduceOp::Sum,
             0,
-            Arc::new(vec![]),
+            Payload::empty(),
             blocks,
             move |g, comms| {
                 let out = g.alltoallv(comms.comm_cmp.as_ref().expect("comp"), &blocks2)?;
@@ -1130,7 +1146,7 @@ impl PartReper {
     }
 
     pub fn gather(&self, root: usize, data: &[u8]) -> Option<Vec<Vec<u8>>> {
-        let input = Arc::new(data.to_vec());
+        let input = self.ctx.empi_fabric.copy_in(data);
         let input2 = input.clone();
         let res = self.run_collective(
             CollKind::Gather,

@@ -47,11 +47,11 @@
 //! arithmetic stays exact whether a message was in flight, delivered, or
 //! not yet issued when the failure hit.
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use crate::empi::{RecvReq, SendReq, Src, Tag};
 use crate::error::{CommError, RankKilled};
+use crate::fabric::Payload;
 use crate::metrics::Counters;
 
 use super::comms::Role;
@@ -81,7 +81,9 @@ struct SendState {
     dst: usize,
     tag: i64,
     id: u64,
-    payload: Arc<Vec<u8>>,
+    /// One shared buffer for the whole request: every fan-out ticket and
+    /// the MessageLog record reference this same allocation.
+    payload: Payload,
     /// Repair epoch the tickets were resolved against.
     epoch: WorldEpoch,
     tickets: Vec<Ticket>,
@@ -167,7 +169,7 @@ impl PartReper {
         channel: Channel,
         tag: i64,
         id: u64,
-        payload: &Arc<Vec<u8>>,
+        payload: &Payload,
     ) -> Ticket {
         if log.consume_skip(dst, channel, id) {
             Counters::bump(&counters.skips);
@@ -216,7 +218,9 @@ impl PartReper {
         // `log.max_bytes` backpressure runs before the record is logged,
         // so a capped log forces a synchronous GC round first (DESIGN §7).
         self.gc_backpressure(data.len());
-        let payload = Arc::new(data.to_vec());
+        // The single materialized copy of the replicated-send path: the
+        // log record and every fan-out envelope share this allocation.
+        let payload = self.ctx.empi_fabric.copy_in(data);
         let id = self.log.borrow_mut().log_send(dst, tag, payload.clone());
         let request = {
             let st = self.state.borrow();

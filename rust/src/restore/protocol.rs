@@ -9,6 +9,7 @@
 //!   cold-restore phase: everything the survivor holds for the dead owner,
 //!   stamped with the repair generation so stale epochs are discardable.
 
+use crate::fabric::Payload;
 use crate::partreper::epoch::{StoreGen, WorldEpoch};
 use crate::partreper::MessageLog;
 use crate::procimg::ProcessImage;
@@ -58,7 +59,7 @@ pub struct PushMsg {
     pub owner: usize,
     pub gen: StoreGen,
     pub nshards: usize,
-    pub shards: Vec<(usize, Option<Vec<u8>>)>,
+    pub shards: Vec<(usize, Option<Payload>)>,
 }
 
 impl PushMsg {
@@ -90,7 +91,7 @@ impl PushMsg {
         let shards = (0..n)
             .map(|_| {
                 let idx = r.usize();
-                let data = (r.u64() == 1).then(|| r.bytes().to_vec());
+                let data = (r.u64() == 1).then(|| Payload::from(r.bytes().to_vec()));
                 (idx, data)
             })
             .collect();
@@ -136,7 +137,7 @@ impl OfferMsg {
                 let idx = r.usize();
                 let gen = StoreGen::from_raw(r.u64());
                 let nshards = r.usize();
-                let data = r.bytes().to_vec();
+                let data = Payload::from(r.bytes().to_vec());
                 (idx, ShardCopy { gen, nshards, data })
             })
             .collect();
@@ -175,13 +176,16 @@ mod tests {
             owner: 3,
             gen: StoreGen::from_raw(17),
             nshards: 4,
-            shards: vec![(0, Some(vec![1, 2, 3])), (2, None)],
+            shards: vec![(0, Some(Payload::from(vec![1, 2, 3]))), (2, None)],
         };
         let back = PushMsg::decode(&msg.encode());
         assert_eq!(back.owner, 3);
         assert_eq!(back.gen, StoreGen::from_raw(17));
         assert_eq!(back.nshards, 4);
-        assert_eq!(back.shards, vec![(0, Some(vec![1, 2, 3])), (2, None)]);
+        assert_eq!(
+            back.shards,
+            vec![(0, Some(Payload::from(vec![1, 2, 3]))), (2, None)]
+        );
     }
 
     #[test]
@@ -194,7 +198,7 @@ mod tests {
                 ShardCopy {
                     gen: StoreGen::from_raw(8),
                     nshards: 2,
-                    data: vec![9; 32],
+                    data: Payload::from(vec![9; 32]),
                 },
             )],
         };

@@ -19,15 +19,18 @@
 
 use std::collections::HashMap;
 
+use crate::fabric::Payload;
 use crate::partreper::epoch::StoreGen;
 
-/// One retained shard copy.
+/// One retained shard copy. `data` is a shared view — typically a slice of
+/// the owner's one encoded snapshot, or of the push/offer envelope it
+/// arrived in — so holding a shard retains bytes without re-copying them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardCopy {
     pub gen: StoreGen,
     /// Shard count of the snapshot this copy belongs to (assembly sanity).
     pub nshards: usize,
-    pub data: Vec<u8>,
+    pub data: Payload,
 }
 
 /// Holder-side store: shards this rank keeps for its peers.
@@ -66,7 +69,7 @@ impl RestoreStore {
         shard: usize,
         gen: StoreGen,
         nshards: usize,
-        data: Option<Vec<u8>>,
+        data: Option<Payload>,
     ) {
         let copies = self.held.entry(owner).or_default().entry(shard).or_default();
         if copies.first().is_some_and(|c| c.gen >= gen) {
@@ -122,14 +125,15 @@ impl RestoreStore {
 
 /// Split a snapshot into `nshards` near-equal shards (last shard takes the
 /// remainder). Concatenating in index order restores the exact bytes.
-pub fn split_shards(bytes: &[u8], nshards: usize) -> Vec<Vec<u8>> {
+/// Shards are zero-copy slices of the snapshot payload.
+pub fn split_shards(bytes: &Payload, nshards: usize) -> Vec<Payload> {
     assert!(nshards > 0);
     let per = bytes.len().div_ceil(nshards).max(1);
     (0..nshards)
         .map(|i| {
             let lo = (i * per).min(bytes.len());
             let hi = ((i + 1) * per).min(bytes.len());
-            bytes[lo..hi].to_vec()
+            bytes.slice(lo..hi)
         })
         .collect()
 }
@@ -198,7 +202,7 @@ impl OwnerPushState {
     pub fn plan(
         &mut self,
         gen: StoreGen,
-        shards: &[Vec<u8>],
+        shards: &[Payload],
         placement: &[Vec<usize>],
     ) -> Option<Vec<bool>> {
         if gen <= self.last_gen {
@@ -230,16 +234,21 @@ mod tests {
         ShardCopy {
             gen: sg(gen),
             nshards,
-            data: data.to_vec(),
+            data: Payload::from(data.to_vec()),
         }
     }
 
     #[test]
     fn split_and_assemble_roundtrip() {
         let bytes: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let payload = Payload::from(bytes.clone());
         for nshards in [1usize, 3, 4, 7] {
-            let shards = split_shards(&bytes, nshards);
+            let shards = split_shards(&payload, nshards);
             assert_eq!(shards.len(), nshards);
+            assert!(
+                shards.iter().all(|s| s.shares_buffer(&payload)),
+                "shards must be views, not copies"
+            );
             let entries: Vec<(usize, ShardCopy)> = shards
                 .iter()
                 .enumerate()
@@ -282,7 +291,7 @@ mod tests {
     fn holder_retains_two_generations() {
         let mut st = RestoreStore::new();
         for g in 1..=4u64 {
-            st.ingest(0, 0, sg(g), 1, Some(vec![g as u8]));
+            st.ingest(0, 0, sg(g), 1, Some(vec![g as u8].into()));
         }
         let entries = st.entries_for(0);
         let gens: Vec<StoreGen> = entries.iter().map(|(_, c)| c.gen).collect();
@@ -292,7 +301,7 @@ mod tests {
     #[test]
     fn unchanged_marker_restamps_newest() {
         let mut st = RestoreStore::new();
-        st.ingest(2, 1, sg(5), 3, Some(b"payload".to_vec()));
+        st.ingest(2, 1, sg(5), 3, Some(b"payload".to_vec().into()));
         st.ingest(2, 1, sg(6), 3, None); // marker: same bytes, newer gen
         let entries = st.entries_for(2);
         assert_eq!(entries.len(), 2);
@@ -310,9 +319,9 @@ mod tests {
         // with holders each keeping whichever copy arrived, a mid-push
         // death could otherwise assemble a torn image out of mixed copies.
         let mut st = RestoreStore::new();
-        st.ingest(0, 0, sg(9), 1, Some(b"first".to_vec()));
-        st.ingest(0, 0, sg(9), 1, Some(b"again".to_vec()));
-        st.ingest(0, 0, sg(8), 1, Some(b"older".to_vec()));
+        st.ingest(0, 0, sg(9), 1, Some(b"first".to_vec().into()));
+        st.ingest(0, 0, sg(9), 1, Some(b"again".to_vec().into()));
+        st.ingest(0, 0, sg(8), 1, Some(b"older".to_vec().into()));
         st.ingest(0, 0, sg(9), 1, None); // marker at held gen: dropped too
         let entries = st.entries_for(0);
         assert_eq!(entries.len(), 1);
@@ -324,13 +333,19 @@ mod tests {
     fn owner_plan_marks_only_changed_shards() {
         let mut o = OwnerPushState::new();
         let placement = vec![vec![1, 2], vec![2, 3]];
-        let a = vec![b"aaa".to_vec(), b"bbb".to_vec()];
+        let a = vec![
+            Payload::from(b"aaa".to_vec()),
+            Payload::from(b"bbb".to_vec()),
+        ];
         assert_eq!(
             o.plan(sg(1), &a, &placement),
             Some(vec![true, true]),
             "first push is full"
         );
-        let b = vec![b"aaa".to_vec(), b"BBB".to_vec()];
+        let b = vec![
+            Payload::from(b"aaa".to_vec()),
+            Payload::from(b"BBB".to_vec()),
+        ];
         assert_eq!(o.plan(sg(2), &b, &placement), Some(vec![false, true]));
         // placement change forces a full push
         let moved = vec![vec![1, 3], vec![2, 3]];
@@ -343,8 +358,8 @@ mod tests {
     #[test]
     fn held_bytes_accounting() {
         let mut st = RestoreStore::new();
-        st.ingest(0, 0, sg(1), 1, Some(vec![0; 10]));
-        st.ingest(1, 0, sg(1), 1, Some(vec![0; 5]));
+        st.ingest(0, 0, sg(1), 1, Some(vec![0; 10].into()));
+        st.ingest(1, 0, sg(1), 1, Some(vec![0; 5].into()));
         assert_eq!(st.held_bytes(), 15);
     }
 }

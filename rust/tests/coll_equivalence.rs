@@ -19,6 +19,7 @@ use partreper::fabric::{
     RootedAlg,
 };
 use partreper::sched::{ExecMode, Sched};
+use partreper::util::fnv1a;
 
 /// Run `f(rank, comm)` on `n` threads over a fresh world comm on a fabric
 /// with the given model + collective overrides.
@@ -372,8 +373,144 @@ fn event_mode_bcast_and_allgather_large_worlds() {
     }
 }
 
+/// [`run_ranks`] with the wire tap armed: returns the canonical per-channel
+/// schedule dump alongside the rank results.
+fn run_tapped<T: Send + 'static>(
+    n: usize,
+    coll: CollTuning,
+    f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+) -> (Vec<T>, String) {
+    let procs = ProcSet::new(n);
+    let fabric = Fabric::new_tuned("coll-tap", procs, NetModel::instant(), coll);
+    let ctx = fabric.alloc_ctx();
+    fabric.tap_start();
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let f = f.clone();
+            thread::spawn(move || f(r, Comm::world(fabric, ctx, r)))
+        })
+        .collect();
+    let out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (out, fabric.tap_dump())
+}
+
+/// [`run_tapped`] under the event scheduler.
+fn run_tapped_event<T: Send + 'static>(
+    n: usize,
+    coll: CollTuning,
+    f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+) -> (Vec<T>, String) {
+    let procs = ProcSet::new(n);
+    let sched = Sched::new(ExecMode::Event);
+    let fabric = Fabric::new_clocked("coll-tap-ev", procs, NetModel::instant(), coll, sched.clone());
+    let ctx = fabric.alloc_ctx();
+    fabric.tap_start();
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let f = f.clone();
+            sched.spawn(&format!("rank-{r}"), move || f(r, Comm::world(fabric, ctx, r)))
+        })
+        .collect();
+    sched.start();
+    let out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (out, fabric.tap_dump())
+}
+
 #[test]
-fn auto_selection_end_to_end_around_the_crossovers() {
+fn tap_pins_binomial_bcast_wire_schedule() {
+    // Hand-derived schedule for the smallest interesting case: pinned
+    // binomial bcast, n=2, 9-byte payload. Exactly one envelope — root to
+    // rank 1, the payload itself (the pinned algorithm skips the
+    // size-agreement header), on the first collective tag
+    // −(BCAST·2³² + 1), send-id 0. If the engine ever grows an extra
+    // hop, a header, or a re-pack, this literal breaks.
+    let tuning = CollTuning {
+        bcast: Some(BcastAlg::Binomial),
+        ..Default::default()
+    };
+    let payload = b"zero-copy".to_vec();
+    let want_payload = payload.clone();
+    let (outs, dump) = run_tapped(2, tuning, move |r, comm| {
+        let mut data = if r == 0 { want_payload.clone() } else { Vec::new() };
+        coll::bcast(&comm, 0, &mut data).unwrap();
+        data
+    });
+    assert!(outs.iter().all(|d| d == &payload));
+    // The world ctx is the fabric's first allocation; everything else in
+    // the line is a pinned literal.
+    let want = format!(
+        "ctx1 0->1: t-8589934593/s0/l9/h{:016x}\n",
+        fnv1a(b"zero-copy")
+    );
+    assert_eq!(dump, want, "binomial bcast wire schedule drifted");
+}
+
+#[test]
+fn tap_pins_barrier_wire_schedule() {
+    // Dissemination barrier at n=2: one round, each rank sends one empty
+    // message to its partner on tag −(BARRIER·2³² + 1). Channels render
+    // sorted by (ctx, src, dst).
+    let (_, dump) = run_tapped(2, CollTuning::default(), |_r, comm| {
+        coll::barrier(&comm).unwrap();
+    });
+    let h = fnv1a(b"");
+    let want = format!(
+        "ctx1 0->1: t-4294967297/s0/l0/h{h:016x}\n\
+         ctx1 1->0: t-4294967297/s0/l0/h{h:016x}\n"
+    );
+    assert_eq!(dump, want, "barrier wire schedule drifted");
+}
+
+#[test]
+fn tap_digest_stable_across_runs_and_modes() {
+    // A mixed workload over every collective family, pinned algorithms:
+    // the canonical dump must be byte-identical between two independent
+    // threaded runs (no hidden timing dependence) and between threaded
+    // and event execution (scheduler faithfulness at the EMPI layer, the
+    // collective-engine counterpart of the xmode_equivalence suite).
+    let tuning = CollTuning {
+        bcast: Some(BcastAlg::Chain),
+        bcast_segment: 7,
+        allgather: Some(AllgatherAlg::Bruck),
+        alltoall: Some(AlltoallAlg::Pairwise),
+        allreduce: Some(AllreduceAlg::Ring),
+        gather: Some(RootedAlg::Binomial),
+        ..Default::default()
+    };
+    let n = 5usize;
+    let workload = move |r: usize, comm: Comm| {
+        let mut data = if r == 2 {
+            (0..23u8).collect::<Vec<u8>>()
+        } else {
+            Vec::new()
+        };
+        coll::bcast(&comm, 2, &mut data).unwrap();
+        let gathered = coll::allgather(&comm, &vec![r as u8; 3]).unwrap();
+        let blocks: Vec<Vec<u8>> = (0..n).map(|d| vec![r as u8, d as u8, 0xEE]).collect();
+        let exchanged = coll::alltoall(&comm, &blocks).unwrap();
+        let sum = coll::allreduce(
+            &comm,
+            DType::U64,
+            ReduceOp::Sum,
+            &reduce_input(DType::U64, n, r, 4),
+        )
+        .unwrap();
+        coll::gather(&comm, 1, &sum).unwrap();
+        (data, gathered, exchanged)
+    };
+    let (out_a, dump_a) = run_tapped(n, tuning, workload);
+    let (out_b, dump_b) = run_tapped(n, tuning, workload);
+    let (out_e, dump_e) = run_tapped_event(n, tuning, workload);
+    assert!(!dump_a.is_empty());
+    assert_eq!(out_a, out_b);
+    assert_eq!(out_a, out_e);
+    assert_eq!(dump_a, dump_b, "threaded wire schedule not reproducible");
+    assert_eq!(dump_a, dump_e, "event wire schedule diverged from threaded");
+}
     // No overrides, real tuned profile (virtual costs only — inject stays
     // off): payloads straddling the EMPI crossovers must all produce
     // correct results while the engine switches algorithms underneath.

@@ -1,0 +1,570 @@
+//! Copy-accounting golden tests (DESIGN.md §11): the zero-copy payload
+//! plumbing is proven safe by *counting*. Every unavoidable send-path
+//! materialization is charged through `Fabric::copy_in`/`pack_in` into
+//! `FabricMetrics::{payload_copies, payload_copy_bytes}`; these tests pin
+//! the exact bill per operation class — a fixed (nranks, algorithm,
+//! payload size) matrix at the EMPI level, and differential jobs at the
+//! PartRePer level (baseline init+finalize vs. init+ops+finalize with the
+//! same config, so the per-op delta isolates the op's own charges). A
+//! change that silently reintroduces a copy — or double-charges one —
+//! breaks a golden number here, not a benchmark three PRs later.
+//!
+//! The headline invariant (the paper's zero-copy fan-out, §V-B): one
+//! replicated send materializes exactly **one** payload copy per sending
+//! incarnation, shared by the MessageLog record and every fan-out
+//! envelope — `replicated_isend_fans_out_one_copy_two_envelopes` pins
+//! K charges against 2K wire envelopes.
+
+use std::sync::Arc;
+use std::thread;
+
+use partreper::config::JobConfig;
+use partreper::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
+use partreper::error::JobError;
+use partreper::fabric::{
+    AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, Envelope, Fabric, MatchSpec,
+    NetModel, Payload, ProcSet, RootedAlg,
+};
+use partreper::partreper::replicate::BlobState;
+use partreper::partreper::{PartReper, Start};
+use partreper::procmgr::launch_job;
+
+// ------------------------------------------------------------ EMPI level
+
+/// Run `f(rank, comm)` on `n` threads over a fresh instant-model fabric
+/// and return the fabric's copy-accounting pair after all ranks join.
+fn run_counted<T: Send + 'static>(
+    n: usize,
+    tuning: CollTuning,
+    f: impl Fn(usize, Comm) -> T + Send + Sync + 'static,
+) -> (Vec<T>, (u64, u64)) {
+    let procs = ProcSet::new(n);
+    let fabric = Fabric::new_tuned("copy-acct", procs, NetModel::instant(), tuning);
+    let ctx = fabric.alloc_ctx();
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let f = f.clone();
+            thread::spawn(move || f(r, Comm::world(fabric, ctx, r)))
+        })
+        .collect();
+    let outs = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let copies = fabric.metrics.copies_snapshot();
+    (outs, copies)
+}
+
+#[test]
+fn eager_fabric_delivery_shares_the_senders_allocation() {
+    // The wire itself never materializes: an eager envelope's payload and
+    // the delivered envelope's payload are the same allocation, and the
+    // fabric charges nothing for moving it.
+    let fabric = Fabric::new_tuned(
+        "share",
+        ProcSet::new(2),
+        NetModel::instant(),
+        CollTuning::default(),
+    );
+    let ctx = fabric.alloc_ctx();
+    let payload = Payload::from(vec![0xA5u8; 64]);
+    fabric
+        .send(Envelope::new(0, 1, ctx, 7, 1, payload.clone()))
+        .unwrap();
+    let env = fabric
+        .try_recv(1, &MatchSpec::exact(0, ctx, 7))
+        .unwrap()
+        .expect("eager envelope is immediately claimable");
+    assert!(env.data.shares_buffer(&payload), "delivery copied the payload");
+    assert_eq!(env.data, payload);
+    assert_eq!(fabric.metrics.copies_snapshot(), (0, 0));
+}
+
+#[test]
+fn comm_recv_shares_the_senders_payload() {
+    // Same property through the EMPI p2p API: `send_payload` on one rank,
+    // `recv` on the other — the Recvd's data is a view of the sender's
+    // buffer, not a copy, and no charge lands on the fabric.
+    let source = Payload::from((0u8..100).collect::<Vec<_>>());
+    let sent = source.clone();
+    let (outs, copies) = run_counted(2, CollTuning::default(), move |r, comm| {
+        if r == 0 {
+            comm.send_payload(1, 5, sent.clone()).unwrap();
+            None
+        } else {
+            Some(comm.recv(Src::Rank(0), Tag::Tag(5)).unwrap().data)
+        }
+    });
+    let got = outs[1].as_ref().expect("rank 1 received");
+    assert!(got.shares_buffer(&source), "recv materialized a copy");
+    assert_eq!(*got, source);
+    assert_eq!(copies, (0, 0), "zero-copy path must charge nothing");
+}
+
+#[test]
+fn blocking_send_charges_exactly_one_copy() {
+    // The one unavoidable memcpy: caller-owned bytes entering the runtime.
+    let (_, copies) = run_counted(2, CollTuning::default(), |r, comm| {
+        if r == 0 {
+            comm.send(1, 9, &[0xEE; 100]).unwrap();
+        } else {
+            comm.recv(Src::Rank(0), Tag::Tag(9)).unwrap();
+        }
+    });
+    assert_eq!(copies, (1, 100));
+}
+
+#[test]
+fn isend_charges_exactly_one_copy() {
+    let (_, copies) = run_counted(2, CollTuning::default(), |r, comm| {
+        if r == 0 {
+            let req = comm.isend(1, 9, &[0xEE; 64]).unwrap();
+            comm.wait_send(&req).unwrap();
+        } else {
+            comm.recv(Src::Rank(0), Tag::Tag(9)).unwrap();
+        }
+    });
+    assert_eq!(copies, (1, 64));
+}
+
+#[test]
+fn zero_length_traffic_is_free() {
+    // Empty payloads move nothing, so they charge nothing — which is what
+    // makes the dissemination barrier (3 rounds at n=8, all empty) bill
+    // exactly zero.
+    let (_, copies) = run_counted(2, CollTuning::default(), |r, comm| {
+        if r == 0 {
+            comm.send(1, 1, &[]).unwrap();
+        } else {
+            comm.recv(Src::Rank(0), Tag::Tag(1)).unwrap();
+        }
+    });
+    assert_eq!(copies, (0, 0));
+    let (_, copies) = run_counted(8, CollTuning::default(), |_r, comm| {
+        coll::barrier(&comm).unwrap();
+    });
+    assert_eq!(copies, (0, 0));
+}
+
+#[test]
+fn bcast_binomial_moves_one_allocation() {
+    // Pinned binomial (header skipped): the root materializes one copy;
+    // every tree hop forwards a share of the arriving payload.
+    let tuning = CollTuning {
+        bcast: Some(BcastAlg::Binomial),
+        ..Default::default()
+    };
+    for n in [2usize, 4, 7] {
+        let (outs, copies) = run_counted(n, tuning, |r, comm| {
+            let mut data = if r == 0 { vec![0xB7; 100] } else { Vec::new() };
+            coll::bcast(&comm, 0, &mut data).unwrap();
+            data
+        });
+        assert!(outs.iter().all(|d| d == &vec![0xB7; 100]));
+        assert_eq!(copies, (1, 100), "binomial bcast n={n}");
+    }
+    // Empty broadcast: even the root's copy is free.
+    let (_, copies) = run_counted(4, tuning, |_r, comm| {
+        let mut data = Vec::new();
+        coll::bcast(&comm, 0, &mut data).unwrap();
+    });
+    assert_eq!(copies, (0, 0));
+}
+
+#[test]
+fn bcast_chain_charges_root_copy_plus_header() {
+    // Pinned chain still runs the size-agreement header (n−1 8-byte hops,
+    // each a charged copy of the count); the payload itself is one root
+    // copy whose segments travel as zero-copy slices, forwarded unshared
+    // by the middle ranks.
+    let tuning = CollTuning {
+        bcast: Some(BcastAlg::Chain),
+        bcast_segment: 256,
+        ..Default::default()
+    };
+    let len = 1000usize;
+    let (outs, copies) = run_counted(3, tuning, move |r, comm| {
+        let mut data = if r == 0 {
+            (0..len).map(|i| (i * 31 % 251) as u8).collect()
+        } else {
+            Vec::new()
+        };
+        coll::bcast(&comm, 0, &mut data).unwrap();
+        data
+    });
+    let want: Vec<u8> = (0..len).map(|i| (i * 31 % 251) as u8).collect();
+    assert!(outs.iter().all(|d| d == &want));
+    // 2 header copies of 8 bytes + 1 root copy of the payload.
+    assert_eq!(copies, (3, 16 + len as u64));
+}
+
+#[test]
+fn allgather_ring_charges_one_copy_per_rank() {
+    // Each rank materializes its own block once; the carry then travels
+    // the whole ring as that single allocation.
+    let tuning = CollTuning {
+        allgather: Some(AllgatherAlg::Ring),
+        ..Default::default()
+    };
+    let (_, copies) = run_counted(5, tuning, |r, comm| {
+        coll::allgather(&comm, &vec![r as u8; 10]).unwrap()
+    });
+    assert_eq!(copies, (5, 50));
+}
+
+#[test]
+fn allgather_bruck_charges_one_pack_per_round() {
+    // n=4: every rank packs ⌈log₂ 4⌉ = 2 round buffers. Round 1 ships one
+    // block (8-byte count + 8-byte length + blk), round 2 ships two:
+    // per-rank bytes 26 + 44 = 70 at blk=10.
+    let tuning = CollTuning {
+        allgather: Some(AllgatherAlg::Bruck),
+        ..Default::default()
+    };
+    let (_, copies) = run_counted(4, tuning, |r, comm| {
+        coll::allgather(&comm, &vec![r as u8; 10]).unwrap()
+    });
+    assert_eq!(copies, (8, 280));
+}
+
+#[test]
+fn alltoall_pairwise_charges_each_block_once() {
+    let tuning = CollTuning {
+        alltoall: Some(AlltoallAlg::Pairwise),
+        ..Default::default()
+    };
+    let (_, copies) = run_counted(4, tuning, |r, comm| {
+        let blocks: Vec<Vec<u8>> = (0..4).map(|d| vec![r as u8, d as u8, 0, 0, 0, 0, 0, 0, 0, 0]).collect();
+        coll::alltoall(&comm, &blocks).unwrap()
+    });
+    // n(n−1) = 12 copies of the 10-byte blocks (own block never ships).
+    assert_eq!(copies, (12, 120));
+}
+
+#[test]
+fn alltoall_bruck_charges_one_pack_per_round() {
+    // n=4: 2 bit-rounds per rank, each packing two indexed entries —
+    // 8 + 2·(8 + 8 + blk) = 60 bytes at blk=10, so 120 per rank.
+    let tuning = CollTuning {
+        alltoall: Some(AlltoallAlg::Bruck),
+        ..Default::default()
+    };
+    let (_, copies) = run_counted(4, tuning, |r, comm| {
+        let blocks: Vec<Vec<u8>> = (0..4).map(|d| vec![r as u8, d as u8, 0, 0, 0, 0, 0, 0, 0, 0]).collect();
+        coll::alltoall(&comm, &blocks).unwrap()
+    });
+    assert_eq!(copies, (8, 480));
+}
+
+#[test]
+fn gather_and_scatter_charge_counts() {
+    // Linear: n−1 direct block copies. Binomial: n−1 packed subtree
+    // aggregates — at n=4, root=0, uniform 10-byte blocks the packs are
+    // 34 + 34 + 60 = 128 bytes either direction (gather and scatter walk
+    // the same tree with the same packing).
+    for (alg, want) in [
+        (RootedAlg::Linear, (3u64, 30u64)),
+        (RootedAlg::Binomial, (3, 128)),
+    ] {
+        let tuning = CollTuning {
+            gather: Some(alg),
+            scatter: Some(alg),
+            ..Default::default()
+        };
+        let (_, copies) = run_counted(4, tuning, |r, comm| {
+            coll::gather(&comm, 0, &vec![r as u8; 10]).unwrap()
+        });
+        assert_eq!(copies, want, "gather {alg:?}");
+        let (_, copies) = run_counted(4, tuning, |r, comm| {
+            let blocks: Option<Vec<Vec<u8>>> =
+                (r == 0).then(|| (0..4).map(|d| vec![d as u8; 10]).collect());
+            coll::scatter(&comm, 0, blocks.as_deref()).unwrap()
+        });
+        assert_eq!(copies, want, "scatter {alg:?}");
+    }
+}
+
+#[test]
+fn reduce_charges_one_copy_per_non_root() {
+    let (_, copies) = run_counted(4, CollTuning::default(), |r, comm| {
+        let data = [(r as u64).to_le_bytes(), 1u64.to_le_bytes()].concat();
+        coll::reduce(&comm, 0, DType::U64, ReduceOp::Sum, &data).unwrap()
+    });
+    // Binomial tree: every rank except the root sends its accumulator
+    // exactly once (16 bytes each).
+    assert_eq!(copies, (3, 48));
+}
+
+#[test]
+fn allreduce_rdouble_charges_log_rounds() {
+    let tuning = CollTuning {
+        allreduce: Some(AllreduceAlg::RecursiveDoubling),
+        ..Default::default()
+    };
+    let (_, copies) = run_counted(4, tuning, |r, comm| {
+        let data = [(r as u64).to_le_bytes(), 1u64.to_le_bytes()].concat();
+        coll::allreduce(&comm, DType::U64, ReduceOp::Sum, &data).unwrap()
+    });
+    // Power-of-two world: n ranks × log₂(n) exchanges of the full buffer.
+    assert_eq!(copies, (8, 128));
+}
+
+#[test]
+fn allreduce_ring_charges_two_chunk_passes() {
+    let tuning = CollTuning {
+        allreduce: Some(AllreduceAlg::Ring),
+        ..Default::default()
+    };
+    let (_, copies) = run_counted(4, tuning, |r, comm| {
+        let vals: Vec<u64> = (0..8).map(|j| (r + j) as u64).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        coll::allreduce(&comm, DType::U64, ReduceOp::Sum, &bytes).unwrap()
+    });
+    // Reduce-scatter + allgather: 2(n−1) hops per rank, each shipping one
+    // L/n = 16-byte chunk → 24 copies, 2(n−1)·L = 384 bytes total.
+    assert_eq!(copies, (24, 384));
+}
+
+// ----------------------------------------- NetModel bill pin (regression)
+
+#[test]
+fn chain_bcast_netmodel_bill_is_charged_exactly_once() {
+    // Regression pin for the double-charge hazard: receiver-side wire
+    // billing plus sender-side `ns_per_byte_copy` could bill a packed
+    // segment twice once it crosses the rendezvous threshold. The fix this
+    // pins: relays forward shares at zero copy charge, the root charges
+    // its payload once, segments are slices of it — so the fabric's entire
+    // `virtual_ns` bill is reconstructible as Σ wire_ns_between over the
+    // envelope schedule plus Σ copy_ns over the charged copies, nothing
+    // else. n=3 pinned chain, 1000 bytes in 256-byte segments, rendezvous
+    // at 256 so every full segment is rendezvous-gated.
+    let model = NetModel::empi_tuned().with_rndv(256);
+    let tuning = CollTuning {
+        bcast: Some(BcastAlg::Chain),
+        bcast_segment: 256,
+        ..Default::default()
+    };
+    let n = 3usize;
+    let len = 1000usize;
+    let procs = ProcSet::new(n);
+    let fabric = Fabric::new_tuned("bill-pin", procs, model, tuning);
+    let ctx = fabric.alloc_ctx();
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let fabric = fabric.clone();
+            thread::spawn(move || {
+                let comm = Comm::world(fabric, ctx, r);
+                let mut data = if r == 0 { vec![0x5C; len] } else { Vec::new() };
+                coll::bcast(&comm, 0, &mut data).unwrap();
+                assert_eq!(data, vec![0x5C; len]);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // The complete expected envelope schedule: the size-agreement header
+    // (root → rank1, root → rank2, 8 bytes each), then four segments
+    // (256, 256, 256, 232) each hopping 0→1 and 1→2.
+    let mut want_ns: u64 = 0;
+    want_ns += model.wire_ns_between(8, n, 0, 1);
+    want_ns += model.wire_ns_between(8, n, 0, 2);
+    for seg in [256usize, 256, 256, 232] {
+        want_ns += model.wire_ns_between(seg, n, 0, 1);
+        want_ns += model.wire_ns_between(seg, n, 1, 2);
+    }
+    // The complete expected copy bill: two 8-byte header copies plus the
+    // root's single materialization of the payload. (Each charge is cast
+    // to u64 separately, exactly as Fabric::charge_copy does.)
+    want_ns += (model.copy_ns(8) as u64) * 2;
+    want_ns += model.copy_ns(len) as u64;
+
+    let (messages, wire_bytes, virtual_ns) = fabric.metrics.snapshot();
+    assert_eq!(messages, 10, "2 header + 8 segment envelopes");
+    assert_eq!(wire_bytes, 16 + 2 * len as u64);
+    assert_eq!(fabric.metrics.copies_snapshot(), (3, 16 + len as u64));
+    assert_eq!(
+        virtual_ns, want_ns,
+        "NetModel bill diverged from the envelope schedule + copy charges \
+         (a segment was double-charged or a relay charged a copy)"
+    );
+}
+
+// ------------------------------------------------------- PartRePer level
+
+/// Copies charged on the job's EMPI fabric after running `app` on every
+/// incarnation (plus init/start/finalize around it).
+fn empi_job_bill(
+    cfg: &JobConfig,
+    app: impl Fn(&PartReper) + Send + Sync + 'static,
+) -> (u64, u64, u64) {
+    let report = launch_job(cfg, move |ctx| -> Result<(), JobError> {
+        let pr = PartReper::init(ctx);
+        if let Start::Retired = pr.start::<BlobState>() {
+            return Ok(());
+        }
+        app(&pr);
+        pr.finalize();
+        Ok(())
+    });
+    assert!(
+        report.all_done(),
+        "job failed: {:?}",
+        report.first_error()
+    );
+    let (copies, bytes) = report.empi_fabric.metrics.copies_snapshot();
+    let (messages, _, _) = report.empi_fabric.metrics.snapshot();
+    (copies, bytes, messages)
+}
+
+/// The differential: charges of init+ops+finalize minus init+finalize with
+/// the identical config — init, replication transfer, GC and the finalize
+/// barrier cancel, leaving exactly the ops' own bill.
+fn job_delta(
+    cfg: &JobConfig,
+    app: impl Fn(&PartReper) + Send + Sync + 'static,
+) -> (u64, u64, u64) {
+    let (c0, b0, m0) = empi_job_bill(cfg, |_pr| {});
+    let (c1, b1, m1) = empi_job_bill(cfg, app);
+    (c1 - c0, b1 - b0, m1 - m0)
+}
+
+#[test]
+fn replicated_isend_fans_out_one_copy_two_envelopes() {
+    // The headline pin: at rdegree=50 the sender (comp 1, unreplicated)
+    // fans each send out to comp 0's primary AND replica — two wire
+    // envelopes, one charged copy. K sends: K charges, 2K envelopes.
+    const K: usize = 4;
+    const L: usize = 32;
+    let cfg = JobConfig::new(2, 50.0);
+    let (copies, bytes, messages) = job_delta(&cfg, |pr| {
+        if pr.rank() == 1 {
+            let mut reqs: Vec<_> = (0..K)
+                .map(|i| pr.isend(0, 100 + i as i64, &[0xC3; L]))
+                .collect();
+            pr.waitall(&mut reqs);
+        } else {
+            for i in 0..K {
+                assert_eq!(pr.recv(1, 100 + i as i64), vec![0xC3; L]);
+            }
+        }
+    });
+    assert_eq!(
+        (copies, bytes),
+        (K as u64, (K * L) as u64),
+        "a replicated send must materialize exactly one copy"
+    );
+    assert_eq!(messages, 2 * K as u64, "each send fans out to two channels");
+}
+
+#[test]
+fn full_replication_isend_charges_once_per_incarnation() {
+    // rdegree=100: primary and replica both run the app, each charging its
+    // own single copy per isend (primary→Comp channel, replica→Rep
+    // channel) — so a logical send bills 2 copies and 2 envelopes total,
+    // never 3 or 4 (the log record and fan-out tickets share the copy).
+    const K: usize = 3;
+    const L: usize = 48;
+    let mk_app = || {
+        |pr: &PartReper| {
+            if pr.rank() == 0 {
+                let mut reqs: Vec<_> = (0..K)
+                    .map(|i| pr.isend(1, 200 + i as i64, &[0x6D; L]))
+                    .collect();
+                pr.waitall(&mut reqs);
+            } else {
+                for i in 0..K {
+                    assert_eq!(pr.recv(0, 200 + i as i64), vec![0x6D; L]);
+                }
+            }
+        }
+    };
+    let cfg = JobConfig::new(2, 100.0);
+    let (copies, bytes, _) = job_delta(&cfg, mk_app());
+    assert_eq!((copies, bytes), ((2 * K) as u64, (2 * K * L) as u64));
+
+    // The serial-fanout ablation routes the same sends through the legacy
+    // blocking path — the copy bill must be identical (the ablation varies
+    // scheduling, not materialization).
+    let mut serial = JobConfig::new(2, 100.0);
+    serial.serial_fanout = true;
+    let (copies, bytes, _) = job_delta(&serial, |pr| {
+        if pr.rank() == 0 {
+            for i in 0..K {
+                pr.send(1, 200 + i as i64, &[0x6D; L]);
+            }
+        } else {
+            for i in 0..K {
+                assert_eq!(pr.recv(0, 200 + i as i64), vec![0x6D; L]);
+            }
+        }
+    });
+    assert_eq!((copies, bytes), ((2 * K) as u64, (2 * K * L) as u64));
+}
+
+#[test]
+fn unreplicated_isend_charges_exactly_one() {
+    const K: usize = 5;
+    const L: usize = 16;
+    let cfg = JobConfig::new(2, 0.0);
+    let (copies, bytes, messages) = job_delta(&cfg, |pr| {
+        if pr.rank() == 0 {
+            let mut reqs: Vec<_> = (0..K)
+                .map(|i| pr.isend(1, 300 + i as i64, &[0x11; L]))
+                .collect();
+            pr.waitall(&mut reqs);
+        } else {
+            for i in 0..K {
+                assert_eq!(pr.recv(0, 300 + i as i64), vec![0x11; L]);
+            }
+        }
+    });
+    assert_eq!((copies, bytes), (K as u64, (K * L) as u64));
+    assert_eq!(messages, K as u64);
+}
+
+#[test]
+fn guarded_barrier_bills_only_the_relays() {
+    // Barrier carries no payload (all rounds free); the §V-C relay of the
+    // Unit result to each primary's replica is the only charge: one 8-byte
+    // encode per primary-with-replica.
+    let cfg = JobConfig::new(2, 100.0);
+    let (copies, bytes, _) = job_delta(&cfg, |pr| {
+        pr.barrier();
+    });
+    assert_eq!((copies, bytes), (2, 16));
+}
+
+#[test]
+fn guarded_bcast_bill_is_exact() {
+    // rdegree=100, ncomp=2, 64-byte payload from root 0. The bill:
+    //   wrapper copy_in at each incarnation whose buffer is non-empty
+    //     (root primary + root replica): 2 × 64;
+    //   auto-selection header on the comp comm (1 hop of 8 bytes);
+    //   binomial execution (root's single copy): 1 × 64;
+    //   §V-C relays of Flat(64) (16+64 bytes) to both replicas: 2 × 80.
+    let cfg = JobConfig::new(2, 100.0);
+    let (copies, bytes, _) = job_delta(&cfg, |pr| {
+        let mut data = if pr.rank() == 0 { vec![0xF2; 64] } else { Vec::new() };
+        pr.bcast(0, &mut data);
+        assert_eq!(data, vec![0xF2; 64]);
+    });
+    assert_eq!((copies, bytes), (6, 360));
+}
+
+#[test]
+fn store_refresh_bills_snapshot_plus_pushes() {
+    // One refresh per comp: 1 charged snapshot encode + 1 charged PushMsg
+    // encode per distinct holder. shards=2, redundancy=1 over 3 eligible
+    // peers → 2 distinct holders per owner, so 3 charges per comp. The
+    // shards themselves are zero-copy slices of the snapshot (split_shards
+    // charges nothing).
+    let mut cfg = JobConfig::new(4, 0.0);
+    cfg.restore.shards = 2;
+    cfg.restore.redundancy = 1;
+    let (copies, bytes, _) = job_delta(&cfg, |pr| {
+        pr.store_refresh(&BlobState(vec![0xCD; 256]));
+    });
+    assert_eq!(copies, 4 * 3, "per comp: snapshot + 2 holder pushes");
+    assert!(bytes > 0);
+}

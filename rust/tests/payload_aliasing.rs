@@ -1,0 +1,253 @@
+//! Aliasing-safety property tests for the zero-copy payload plumbing
+//! (DESIGN.md §11): once a send is *posted*, the bytes that travel are the
+//! bytes at post time — no matter what the application does to its buffer
+//! afterwards, and no matter who else is holding the same `Payload`
+//! (message log record, pending replica-channel envelope, unexpected-queue
+//! entry, a second receiver of a shared allocation).
+//!
+//! The runtime's contract has two halves, and each test pins one:
+//!  * `&[u8]` entry points (`isend`, `send`) take their single charged
+//!    copy at post time — the caller may clobber or drop the buffer the
+//!    instant the call returns;
+//!  * everything downstream of that copy is a shared immutable `Payload`,
+//!    so holding a delivery (or fanning one allocation to many receivers)
+//!    can never observe a torn or recycled buffer.
+//!
+//! Schedules are randomized with a seeded LCG (lengths, receive order)
+//! and run under both the threaded and the event-driven scheduler.
+
+use std::sync::Arc;
+use std::thread;
+
+use partreper::config::JobConfig;
+use partreper::empi::{Comm, Src, Tag};
+use partreper::error::JobError;
+use partreper::fabric::{CollTuning, Fabric, NetModel, Payload, ProcSet};
+use partreper::partreper::replicate::BlobState;
+use partreper::partreper::{PartReper, Start};
+use partreper::procmgr::launch_job;
+use partreper::sched::{ExecMode, Sched};
+
+/// Deterministic pseudo-random bytes: both sides of a channel regenerate
+/// the expected payload from (seed, index) instead of shipping oracles.
+fn lcg_bytes(seed: u64, len: usize) -> Vec<u8> {
+    let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
+    (0..len)
+        .map(|_| {
+            x = x
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407);
+            (x >> 56) as u8
+        })
+        .collect()
+}
+
+/// Message `i`'s length under `seed`: 0..=255 bytes, including the empty
+/// edge case, never crossing the tuned rendezvous threshold (so reverse-
+/// order receives cannot deadlock on receiver cooperation).
+fn msg_len(seed: u64, i: usize) -> usize {
+    let mut x = seed.wrapping_add(i as u64).wrapping_mul(0xD134_2543_DE82_EF95);
+    x ^= x >> 29;
+    (x % 256) as usize
+}
+
+const NMSG: usize = 24;
+
+/// Sender half of the property: post `NMSG` isends, clobbering and then
+/// dropping each buffer immediately after the post — before any wait and
+/// long before delivery is claimed.
+fn post_and_clobber(comm: &Comm, dst: usize, seed: u64) {
+    let mut reqs = Vec::new();
+    for i in 0..NMSG {
+        let mut buf = lcg_bytes(seed + i as u64, msg_len(seed, i));
+        let req = comm.isend(dst, i as i64, &buf).unwrap();
+        // The runtime already took its one charged copy; this buffer is
+        // the application's again.
+        buf.iter_mut().for_each(|b| *b = 0xDD);
+        drop(buf);
+        reqs.push(req);
+    }
+    for req in &reqs {
+        comm.wait_send(req).unwrap();
+    }
+}
+
+/// Receiver half: claim the messages in reverse tag order, so every
+/// envelope but the last-posted sits in the unexpected queue while the
+/// sender's buffers are already clobbered and freed.
+fn recv_reversed(comm: &Comm, src: usize, seed: u64) {
+    for i in (0..NMSG).rev() {
+        let got = comm.recv(Src::Rank(src), Tag::Tag(i as i64)).unwrap();
+        assert_eq!(
+            got.data,
+            lcg_bytes(seed + i as u64, msg_len(seed, i)),
+            "message {i} diverged from its post-time bytes"
+        );
+    }
+}
+
+#[test]
+fn isend_buffers_are_free_after_post_threaded() {
+    for seed in [3u64, 41, 2026] {
+        let procs = ProcSet::new(2);
+        let fabric = Fabric::new_tuned(
+            "alias-thr",
+            procs,
+            NetModel::instant(),
+            CollTuning::default(),
+        );
+        let ctx = fabric.alloc_ctx();
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let fabric = fabric.clone();
+                thread::spawn(move || {
+                    let comm = Comm::world(fabric, ctx, r);
+                    if r == 0 {
+                        post_and_clobber(&comm, 1, seed);
+                    } else {
+                        recv_reversed(&comm, 0, seed);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn isend_buffers_are_free_after_post_event_mode() {
+    for seed in [3u64, 41, 2026] {
+        let procs = ProcSet::new(2);
+        let sched = Sched::new(ExecMode::Event);
+        let fabric = Fabric::new_clocked(
+            "alias-ev",
+            procs,
+            NetModel::instant(),
+            CollTuning::default(),
+            sched.clone(),
+        );
+        let ctx = fabric.alloc_ctx();
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let fabric = fabric.clone();
+                sched.spawn(&format!("rank-{r}"), move || {
+                    let comm = Comm::world(fabric, ctx, r);
+                    if r == 0 {
+                        post_and_clobber(&comm, 1, seed);
+                    } else {
+                        recv_reversed(&comm, 0, seed);
+                    }
+                })
+            })
+            .collect();
+        sched.start();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (events, _, _) = sched.snapshot();
+        assert!(events > 0, "event mode must actually schedule");
+    }
+}
+
+#[test]
+fn one_allocation_fanned_to_many_receivers_stays_intact() {
+    // One Payload, two receivers: both deliveries are views of the same
+    // allocation (no per-destination copy), and each receiver holds its
+    // view past the sender's exit without observing interference.
+    let source = Payload::from(lcg_bytes(77, 4096));
+    let expect = source.clone();
+    let procs = ProcSet::new(3);
+    let fabric = Fabric::new_tuned(
+        "alias-fan",
+        procs,
+        NetModel::instant(),
+        CollTuning::default(),
+    );
+    let ctx = fabric.alloc_ctx();
+    let sent = source.clone();
+    let handles: Vec<_> = (0..3)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let sent = sent.clone();
+            thread::spawn(move || -> Option<Payload> {
+                let comm = Comm::world(fabric, ctx, r);
+                if r == 0 {
+                    comm.send_payload(1, 9, sent.clone()).unwrap();
+                    comm.send_payload(2, 9, sent).unwrap();
+                    None
+                } else {
+                    Some(comm.recv(Src::Rank(0), Tag::Tag(9)).unwrap().data)
+                }
+            })
+        })
+        .collect();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in [1usize, 2] {
+        let held = outs[r].as_ref().expect("receiver returned its payload");
+        assert!(held.shares_buffer(&source), "rank {r} got a copy");
+        assert_eq!(*held, expect);
+    }
+    assert_eq!(fabric.metrics.copies_snapshot(), (0, 0));
+}
+
+/// The PartRePer-level property: the message-log record and every fan-out
+/// channel (primary Comp channel, pending replica channel) hold the
+/// post-time bytes, so clobber-after-isend is safe even while replica
+/// deliveries are still in flight — under either scheduler and any
+/// replication degree.
+fn partreper_clobber_job(mode: ExecMode, rdegree: f64, seed: u64) {
+    let mut cfg = JobConfig::new(2, rdegree);
+    cfg.exec = mode;
+    cfg.seed = seed;
+    let report = launch_job(&cfg, move |ctx| -> Result<(), JobError> {
+        let pr = PartReper::init(ctx);
+        if let Start::Retired = pr.start::<BlobState>() {
+            return Ok(());
+        }
+        // Rank 1 sends so that at partial replication (comp 0 replicated,
+        // comp 1 not) each post fans out to both of rank 0's incarnations
+        // from the single charged copy.
+        if pr.rank() == 1 {
+            let mut reqs = Vec::new();
+            for i in 0..NMSG {
+                let mut buf = lcg_bytes(seed + i as u64, msg_len(seed, i));
+                let req = pr.isend(0, 500 + i as i64, &buf);
+                buf.iter_mut().for_each(|b| *b = 0x00);
+                drop(buf);
+                reqs.push(req);
+            }
+            pr.waitall(&mut reqs);
+        } else {
+            for i in (0..NMSG).rev() {
+                assert_eq!(
+                    pr.recv(1, 500 + i as i64),
+                    lcg_bytes(seed + i as u64, msg_len(seed, i)),
+                    "incarnation saw bytes that diverged from post time"
+                );
+            }
+        }
+        pr.finalize();
+        Ok(())
+    });
+    assert!(
+        report.all_done(),
+        "job failed ({mode:?}, rdegree {rdegree}): {:?}",
+        report.first_error()
+    );
+}
+
+#[test]
+fn partreper_isend_clobber_threaded() {
+    for rdegree in [0.0, 50.0, 100.0] {
+        partreper_clobber_job(ExecMode::Threaded, rdegree, 11);
+    }
+}
+
+#[test]
+fn partreper_isend_clobber_event_mode() {
+    for rdegree in [0.0, 50.0, 100.0] {
+        partreper_clobber_job(ExecMode::Event, rdegree, 11);
+    }
+}

@@ -253,6 +253,7 @@ fn prop_log_resend_skip_partition() {
 #[test]
 fn prop_gc_retention_never_drops_needed_records() {
     use partreper::empi::{DType, ReduceOp};
+    use partreper::fabric::Payload;
     use partreper::partreper::epoch::agree_floors;
     use partreper::partreper::{CollKind, CollRecord, MessageLog, RetentionOffer, StoreCoverage};
     use std::sync::Arc;
@@ -306,7 +307,7 @@ fn prop_gc_retention_never_drops_needed_records() {
                                 dtype: DType::U64,
                                 op: ReduceOp::Sum,
                                 root: 0,
-                                input: Arc::new(vec![1, 2, 3]),
+                                input: Payload::from(vec![1, 2, 3]),
                                 blocks: Arc::new(vec![]),
                             });
                         }

@@ -57,6 +57,12 @@ struct ModeRun {
     dump: String,
     sums: Vec<u64>,
     promotions: u64,
+    /// Copy-accounting pair (`payload_copies`, `payload_copy_bytes`) on the
+    /// EMPI fabric: every send-path materialization charges here
+    /// (DESIGN.md §11), so cross-mode equality proves the zero-copy
+    /// plumbing holds under both schedulers — including across the repair,
+    /// whose §VI-B resends re-share logged payloads instead of copying.
+    copies: (u64, u64),
     handler_s: f64,
     app_s: f64,
     virtual_s: f64,
@@ -138,6 +144,7 @@ fn schedule_for(ncomp: usize, mode: ExecMode) -> ModeRun {
         dump: report.empi_fabric.tap_dump(),
         sums,
         promotions,
+        copies: report.empi_fabric.metrics.copies_snapshot(),
         handler_s: report.phase_seconds(Phase::ErrorHandler),
         app_s: report.phase_seconds(Phase::App),
         virtual_s: virtual_ns as f64 / 1e9,
@@ -158,6 +165,14 @@ fn assert_modes_agree(ncomp: usize) {
     assert_eq!(
         t.dump, e.dump,
         "ncomp={ncomp}: wire schedules diverged across modes"
+    );
+    // The copy bill must agree too: same schedule, same materializations.
+    // A scheduler-dependent copy (e.g. a repair path that clones instead
+    // of sharing under one mode's interleaving) diverges here.
+    assert!(t.copies.0 > 0, "the workload must charge some copies");
+    assert_eq!(
+        t.copies, e.copies,
+        "ncomp={ncomp}: copy accounting diverged across modes"
     );
     // Phase attribution must work in both clock domains: every run spends
     // real time in the app and error-handler phases.
@@ -192,4 +207,101 @@ fn wire_schedule_identical_across_modes_n9() {
 #[test]
 fn wire_schedule_identical_across_modes_n17() {
     assert_modes_agree(17);
+}
+
+/// Promotion mid-waitall, cross-mode: every rank posts a full batch of
+/// isends + irecvs, then comp 1's primary dies with the batch outstanding.
+/// Pending requests ride the repair (receives re-resolve to the promoted
+/// incarnation, sends re-issue per channel) and the §VI-B resends re-share
+/// the original logged allocations — so although *how many* requests are
+/// pending at the failure instant is scheduler-dependent, the copy bill is
+/// not: re-issues and resends charge nothing, leaving only the
+/// deterministic post-time and repair-protocol charges, identical across
+/// modes.
+fn waitall_promotion_run(mode: ExecMode) -> ((u64, u64), u64, u64) {
+    let mut cfg = JobConfig::new(4, 100.0);
+    cfg.exec = mode;
+    cfg.seed = 42;
+    let iters = 8u64;
+    let report = launch_world(JobWorld::build(&cfg), move |ctx| -> Result<Option<u64>, JobError> {
+        let rank = ctx.rank;
+        let procs = ctx.procs.clone();
+        let pr = PartReper::init(ctx);
+        if let Start::Retired = pr.start::<BlobState>() {
+            return Ok(None);
+        }
+        let n = pr.size();
+        let me = pr.rank();
+        let mut sum = 0u64;
+        for it in 0..iters {
+            let mut reqs = Vec::new();
+            let mut sources = Vec::new();
+            for other in 0..n {
+                if other != me {
+                    reqs.push(pr.irecv(other, 11));
+                    sources.push(other);
+                }
+            }
+            for other in 0..n {
+                if other != me {
+                    reqs.push(pr.isend(other, 11, &u64s_to_bytes(&[(me as u64) << 32 | it])));
+                }
+            }
+            if rank == 1 && it == 4 {
+                // Die with the whole batch outstanding: waitall is the
+                // next fabric op, so the batch crosses the promotion.
+                procs.poison(1);
+            }
+            pr.waitall(&mut reqs);
+            for (slot, &src) in sources.iter().enumerate() {
+                let v = u64s_from_bytes(&reqs[slot].take_data().expect("recv payload"))[0];
+                assert_eq!(v, (src as u64) << 32 | it, "round {it} from {src}");
+                sum = sum.wrapping_add(v);
+            }
+        }
+        pr.finalize();
+        Ok(Some(sum))
+    });
+    let expect_for = |k: u64| -> u64 {
+        (0..iters)
+            .flat_map(|it| (0..4u64).filter(move |&o| o != k).map(move |o| o << 32 | it))
+            .fold(0u64, u64::wrapping_add)
+    };
+    let mut done = 0;
+    let mut killed = 0;
+    for (r, o) in report.outcomes.iter().enumerate() {
+        match (r, o) {
+            (1, RankOutcome::Killed) => killed += 1,
+            (_, RankOutcome::Done(Some(v))) => {
+                done += 1;
+                assert_eq!(*v, expect_for((r % 4) as u64), "{mode:?} rank {r}");
+            }
+            (_, RankOutcome::Done(None)) => {}
+            (_, other) => panic!("{mode:?} rank {r}: {other:?}"),
+        }
+    }
+    assert_eq!((killed, done), (1, 7), "{mode:?}: one victim, seven finishers");
+    let totals = report.total_counters();
+    (
+        report.empi_fabric.metrics.copies_snapshot(),
+        Counters::get(&totals.promotions),
+        Counters::get(&totals.nb_replays),
+    )
+}
+
+#[test]
+fn promotion_mid_waitall_copy_bill_identical_across_modes() {
+    let (t_copies, t_promotions, t_replays) = waitall_promotion_run(ExecMode::Threaded);
+    let (e_copies, e_promotions, e_replays) = waitall_promotion_run(ExecMode::Event);
+    assert_eq!(t_promotions, 1, "threaded: exactly one promotion");
+    assert_eq!(e_promotions, 1, "event: exactly one promotion");
+    assert!(t_replays > 0, "threaded: pending requests must ride the repair");
+    assert!(e_replays > 0, "event: pending requests must ride the repair");
+    assert!(t_copies.0 > 0);
+    assert_eq!(
+        t_copies, e_copies,
+        "a scheduler-dependent number of requests crossed the promotion, \
+         yet re-issued sends materialized copies (they must re-share the \
+         original allocations)"
+    );
 }
