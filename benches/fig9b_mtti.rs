@@ -17,7 +17,7 @@ use partreper::config::ReplicationDegree;
 use partreper::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
 use partreper::fabric::{AllreduceAlg, CollTuning, Fabric, NetModel, ProcSet};
 use partreper::harness::experiments::{fig9b, format_fig9b};
-use partreper::sched::{ExecMode, Sched};
+use partreper::sched::{ExecMode, Sched, TASK_STACK_BYTES};
 use partreper::util::{u64s_from_bytes, u64s_to_bytes};
 
 /// One event-mode scale world: `n` cooperatively scheduled ranks on a
@@ -33,7 +33,11 @@ fn sched_scale_case(report: &mut common::BenchReport, n: usize) {
         ..Default::default()
     };
     let procs = ProcSet::new(n);
-    let sched = Sched::new(ExecMode::Event);
+    // ≥32k-rank worlds shrink task stacks to fit under the OS thread and
+    // vm.max_map_count ceilings (README "Scaling event worlds"); the
+    // workload here is a shallow bench closure, so 256 KiB is plenty.
+    let stack = if n >= 32768 { 256 << 10 } else { TASK_STACK_BYTES };
+    let sched = Sched::with_stack_bytes(ExecMode::Event, stack);
     let fabric = Fabric::new_clocked(
         "sched-scale",
         procs.clone(),
@@ -51,7 +55,6 @@ fn sched_scale_case(report: &mut common::BenchReport, n: usize) {
         .map(|r| {
             let fabric = fabric.clone();
             let procs = procs.clone();
-            let clock = sched.clone();
             sched.spawn(&format!("rank-{r}"), move || {
                 let comm = Comm::world(fabric.clone(), world_ctx, r);
                 let mut acc = r as u64 + 1;
@@ -67,14 +70,20 @@ fn sched_scale_case(report: &mut common::BenchReport, n: usize) {
                 acc ^= u64s_from_bytes(&sum)[0];
                 if r == victim {
                     // Die quiesced: ground-truth death only — nobody
-                    // targets the victim after this point.
+                    // targets the victim after this point. Ring every
+                    // survivor (the failure-publish wake edge a monitor
+                    // would fire; a bare world has no monitor).
                     procs.mark_dead(r);
+                    fabric.wake_all();
                     return acc;
                 }
-                // Survivors notice OFF-WIRE; the wait must tick through
-                // the virtual clock (a std sleep would stall the world).
+                // Survivors notice OFF-WIRE, parked on their mailbox: the
+                // victim's wake_all retimes them at death-time, and the
+                // fallback tick only covers a (never-expected) missed
+                // edge. A std sleep would stall the world.
+                let mut mail = fabric.arrivals(r);
                 while !procs.is_dead(victim) {
-                    clock.sleep(Duration::from_micros(500));
+                    mail = fabric.wait_new_mail(r, mail, Duration::from_micros(500));
                 }
                 // Regroup densely over the survivors and finish.
                 let group: Vec<usize> = (0..n).filter(|&x| x != victim).collect();
@@ -90,7 +99,8 @@ fn sched_scale_case(report: &mut common::BenchReport, n: usize) {
     sched.start();
     let outs: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
     let wall = wall_start.elapsed();
-    let (events, virtual_ns, ready_peak) = sched.snapshot();
+    let snap = sched.snapshot();
+    let (events, virtual_ns, ready_peak) = (snap.events, snap.advanced_ns, snap.ready_peak);
     let survivors: Vec<u64> = outs
         .iter()
         .enumerate()
@@ -102,16 +112,37 @@ fn sched_scale_case(report: &mut common::BenchReport, n: usize) {
         "survivors disagree on the post-repair reduction"
     );
     let rate = events as f64 / wall.as_secs_f64().max(1e-9);
+    // Events per *virtual* second: the simulated world's density — how
+    // much scheduling one simulated second costs. With wake edges it
+    // tracks message traffic, not elapsed virtual idle time.
+    let per_vsec = events as f64 / (virtual_ns as f64 / 1e9).max(1e-12);
+    // Fraction of dispatches that were a wakable task's fallback timer
+    // expiring with nothing to do — the polling waste wake edges remove.
+    let empty_ratio = snap.empty_parks as f64 / (events as f64).max(1.0);
     println!(
-        "sched scale n={n}: events={events} virtual_ms={:.3} ready_peak={ready_peak} \
-         wall={:.3}s -> {:.0} events/s",
+        "sched scale n={n}: events={events} wake_edges={} empty_parks={} \
+         (ratio={empty_ratio:.4}) virtual_ms={:.3} ready_peak={ready_peak} \
+         wall={:.3}s -> {:.0} events/s, {:.0} events/vsec",
+        snap.wake_edges,
+        snap.empty_parks,
         virtual_ns as f64 / 1e6,
         wall.as_secs_f64(),
-        rate
+        rate,
+        per_vsec
     );
     report.case_value(&format!("sched_scale n={n} events"), "events", events as f64);
     report.case_value(&format!("sched_scale n={n} throughput"), "events/s", rate);
     report.case_value(&format!("sched_scale n={n} wall"), "s", wall.as_secs_f64());
+    report.case_value(
+        &format!("sched_scale n={n} events_per_vsec"),
+        "events/vsec",
+        per_vsec,
+    );
+    report.case_value(
+        &format!("sched_scale n={n} empty_park_ratio"),
+        "ratio",
+        empty_ratio,
+    );
 }
 
 fn main() {
@@ -180,8 +211,11 @@ fn main() {
     }
 
     common::hr("Event-mode scheduler scale (virtual-clock worlds)");
+    // The 65k/131k worlds need OS headroom: ~2 maps per thread stack
+    // against the vm.max_map_count default of 65530, plus the pid/thread
+    // ceilings — see README "Scaling event worlds" for the sysctls.
     let sizes: Vec<usize> = if common::full() {
-        vec![4096, 16384]
+        vec![4096, 16384, 65536, 131072]
     } else if common::smoke() {
         vec![4096]
     } else {

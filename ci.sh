@@ -56,6 +56,18 @@ for bench in micro_fabric micro_recovery micro_replication fig8_failure_free \
   PARTREPER_BENCH_SMOKE=1 cargo bench --bench "$bench"
 done
 
+echo "== scheduler throughput gate (DESIGN.md §8 wake edges) =="
+# The fig9b smoke above wrote BENCH_fig9b.json. The 4096-rank event world
+# must sustain a (deliberately conservative, slow-CI-safe) events/sec
+# floor — a return to capped-park polling tanks it by orders of
+# magnitude. With a checked-in or operator-provided baseline, medians are
+# also diffed case-by-case: >10% throughput regression fails.
+python3 python/tools/bench_diff.py floor BENCH_fig9b.json \
+  --case "n=4096 throughput" --min 10000
+if [[ -f BENCH_fig9b.baseline.json ]]; then
+  python3 python/tools/bench_diff.py diff BENCH_fig9b.baseline.json BENCH_fig9b.json
+fi
+
 echo "== observability exports (Chrome trace + episode schema) =="
 # A traced run must produce Perfetto-loadable Chrome trace JSON and a
 # schema-valid EPISODES.json; the stdlib-python checker validates both.

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_<name>.json files, or gate one against a floor
+(stdlib only).
+
+Usage:
+    bench_diff.py diff BASELINE.json CURRENT.json [--tolerance 0.10]
+    bench_diff.py floor CURRENT.json --case SUBSTRING --min VALUE
+
+``diff`` compares the median of every case present in both files whose
+unit is a throughput rate (higher is better: ``events/s``,
+``events/vsec``, ``ops/s``, ``MB/s``) and fails if any regresses by more
+than ``--tolerance`` (default 10%). Non-rate cases (seconds, ratios,
+raw counts) are printed for context but never gate: their medians move
+legitimately when the workload changes shape, and the time-like ones
+already gate through the rate they feed.
+
+``floor`` asserts that the single case whose label contains ``--case``
+sustains at least ``--min`` (in the case's own unit) — the CI smoke gate
+that the 4096-rank event world keeps its wake-edge throughput.
+
+Exits 0 on success, 1 with a diagnostic on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+RATE_UNITS = {"events/s", "events/vsec", "ops/s", "MB/s"}
+
+
+def fail(msg):
+    print(f"bench_diff: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_cases(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+    cases = doc.get("cases")
+    if not isinstance(cases, list):
+        fail(f"{path}: missing 'cases' array")
+    out = {}
+    for c in cases:
+        label, unit, median = c.get("case"), c.get("unit"), c.get("median")
+        if not isinstance(label, str) or not isinstance(unit, str):
+            fail(f"{path}: case entry without string 'case'/'unit': {c!r}")
+        if median is None:  # NaN/Inf are serialized as null
+            continue
+        if not isinstance(median, (int, float)) or isinstance(median, bool):
+            fail(f"{path}: case {label!r} has non-numeric median: {median!r}")
+        out[label] = (unit, float(median))
+    return out
+
+
+def cmd_diff(args):
+    base = load_cases(args.baseline)
+    cur = load_cases(args.current)
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        fail(f"no shared cases between {args.baseline} and {args.current}")
+    gated = 0
+    worst = None  # (regression_fraction, label)
+    for label in shared:
+        bunit, bmed = base[label]
+        cunit, cmed = cur[label]
+        if bunit != cunit:
+            fail(f"case {label!r}: unit changed {bunit!r} -> {cunit!r}")
+        if bunit not in RATE_UNITS:
+            print(f"  info  {label}: {bmed:g} -> {cmed:g} {bunit}")
+            continue
+        gated += 1
+        change = (cmed - bmed) / bmed if bmed > 0 else 0.0
+        mark = "ok   " if change >= -args.tolerance else "REGR "
+        print(f"  {mark} {label}: {bmed:.0f} -> {cmed:.0f} {bunit} ({change:+.1%})")
+        if change < 0 and (worst is None or change < worst[0]):
+            worst = (change, label)
+    if gated == 0:
+        fail("no shared rate-unit cases to gate on")
+    if worst is not None and worst[0] < -args.tolerance:
+        fail(
+            f"{worst[1]!r} regressed {worst[0]:+.1%} "
+            f"(tolerance {-args.tolerance:.0%})"
+        )
+    print(f"bench_diff: OK ({gated} rate cases within {args.tolerance:.0%})")
+
+
+def cmd_floor(args):
+    cur = load_cases(args.current)
+    hits = [l for l in cur if args.case in l]
+    if not hits:
+        fail(f"no case matching {args.case!r} in {args.current}")
+    if len(hits) > 1:
+        fail(f"{args.case!r} is ambiguous: {hits}")
+    unit, median = cur[hits[0]]
+    if median < args.min:
+        fail(f"{hits[0]!r} = {median:g} {unit}, below floor {args.min:g}")
+    print(f"bench_diff: OK ({hits[0]!r} = {median:g} {unit} >= {args.min:g})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    d = sub.add_parser("diff", help="gate CURRENT against BASELINE medians")
+    d.add_argument("baseline")
+    d.add_argument("current")
+    d.add_argument("--tolerance", type=float, default=0.10)
+    d.set_defaults(run=cmd_diff)
+    f = sub.add_parser("floor", help="gate one case against an absolute floor")
+    f.add_argument("current")
+    f.add_argument("--case", required=True)
+    f.add_argument("--min", type=float, required=True)
+    f.set_defaults(run=cmd_floor)
+    args = ap.parse_args()
+    args.run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ use crate::fabric::{
     AllgatherAlg, AlltoallAlg, AllreduceAlg, BcastAlg, CollTuning, NetModel, RootedAlg,
 };
 pub use crate::sched::ExecMode;
+use crate::sched::{MIN_STACK_BYTES, TASK_STACK_BYTES};
 
 /// Replication degree: the *percentage of computational processes that have
 /// replicas* (paper §VII-A). The paper sweeps {0, 6.25, 12.5, 25, 50, 100}.
@@ -130,6 +131,26 @@ impl Default for ObsPlan {
     }
 }
 
+/// Event-scheduler tuning (`sched.*` keys — DESIGN.md §8). Only event
+/// mode reads this; threaded ranks use the platform default stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedPlan {
+    /// Stack bytes per event-mode task thread. The 1 MiB default is
+    /// comfortable for every workload in this repo; ≥64k-rank worlds
+    /// shrink it (e.g. 256 KiB) to fit under the OS thread-count and
+    /// `vm.max_map_count` ceilings (README "Scaling event worlds").
+    /// Floored at [`crate::sched::MIN_STACK_BYTES`].
+    pub stack_bytes: usize,
+}
+
+impl Default for SchedPlan {
+    fn default() -> Self {
+        Self {
+            stack_bytes: TASK_STACK_BYTES,
+        }
+    }
+}
+
 /// The deterministic failure-schedule explorer (`explore.*` keys —
 /// `crate::explore`, DESIGN.md §10): sweep budget, sampling seed, and the
 /// per-schedule injection cap. Only the explorer reads this; a normal
@@ -204,6 +225,8 @@ pub struct JobConfig {
     /// cooperatively scheduled tasks on the virtual clock — DESIGN.md
     /// §8). The default honours `PARTREPER_EXEC=event`.
     pub exec: ExecMode,
+    /// Event-scheduler tuning (`sched.*` keys — DESIGN.md §8).
+    pub sched: SchedPlan,
     /// Observability (`obs.*` keys — DESIGN.md §9).
     pub obs: ObsPlan,
     /// Failure-schedule explorer (`explore.*` keys — DESIGN.md §10).
@@ -227,6 +250,7 @@ impl Default for JobConfig {
             failure_check_stride: 8,
             serial_fanout: false,
             exec: ExecMode::from_env(),
+            sched: SchedPlan::default(),
             obs: ObsPlan::default(),
             explore: ExplorePlan::default(),
         }
@@ -345,6 +369,13 @@ impl JobConfig {
                 self.serial_fanout = value.parse().map_err(|_| bad(key, value))?
             }
             "exec.mode" => self.exec = ExecMode::parse(value).ok_or_else(|| bad(key, value))?,
+            "sched.stack_bytes" => {
+                let s: usize = value.parse().map_err(|_| bad(key, value))?;
+                if s < MIN_STACK_BYTES {
+                    return Err(bad(key, value));
+                }
+                self.sched.stack_bytes = s;
+            }
             "explore.budget" => {
                 let b: usize = value.parse().map_err(|_| bad(key, value))?;
                 if b == 0 {
@@ -513,6 +544,18 @@ mod tests {
         assert!(cfg.set("explore.budget", "0").is_err());
         assert!(cfg.set("explore.max_injections", "0").is_err());
         assert!(cfg.set("explore.seed", "abc").is_err());
+    }
+
+    #[test]
+    fn sched_overrides_parse() {
+        let mut cfg = JobConfig::default();
+        assert_eq!(cfg.sched, SchedPlan::default());
+        assert_eq!(cfg.sched.stack_bytes, TASK_STACK_BYTES);
+        cfg.set("sched.stack_bytes", "262144").unwrap();
+        assert_eq!(cfg.sched.stack_bytes, 256 << 10);
+        // Below the floor the key is rejected rather than silently clamped.
+        assert!(cfg.set("sched.stack_bytes", "4096").is_err());
+        assert!(cfg.set("sched.stack_bytes", "lots").is_err());
     }
 
     #[test]

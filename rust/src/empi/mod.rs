@@ -40,6 +40,8 @@ pub const RECV_DEADLINE: Duration = Duration::from_secs(60);
 
 /// Park interval while blocking on a rendezvous send gate or a posted
 /// receive (bounds poison-detection latency without busy-waiting).
+/// Event mode floors it to the 10 ms fallback tick — gate opens, mail
+/// deliveries and `wake_all` all land as §8 wake edges.
 const SEND_PARK: Duration = Duration::from_micros(200);
 
 /// MPI_ANY_SOURCE analogue at the comm-rank level.

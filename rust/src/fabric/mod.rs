@@ -81,51 +81,79 @@ use std::time::Duration;
 
 use crate::error::CommError;
 use crate::obs::{HistId, JobObs};
-use crate::sched::Sched;
+use crate::sched::{Sched, WakeHandle};
+
+/// State behind the rendezvous gate's mutex: the open flag plus the wake
+/// edges of event-mode tasks currently parked on the gate.
+#[derive(Default)]
+struct GateState {
+    open: bool,
+    wakers: Vec<WakeHandle>,
+}
 
 /// Sender-side completion gate for a rendezvous-sized transmission: opens
 /// at the moment a receive *matches* the envelope (the CTS of the RTS/CTS
-/// handshake). Idempotent; once open it stays open.
+/// handshake). Idempotent; once open it stays open. Event-mode waiters
+/// register a [`WakeHandle`] so the CTS retimes their park to the match
+/// instant instead of letting the fallback tick expire (DESIGN.md §8).
 pub struct RndvGate {
-    open: Mutex<bool>,
+    state: Mutex<GateState>,
     cv: Condvar,
 }
 
 impl RndvGate {
     fn new() -> Self {
         Self {
-            open: Mutex::new(false),
+            state: Mutex::new(GateState::default()),
             cv: Condvar::new(),
         }
     }
 
     fn open(&self) {
-        let mut g = self.open.lock().unwrap();
-        if !*g {
-            *g = true;
+        let woken = {
+            let mut g = self.state.lock().unwrap();
+            if g.open {
+                return;
+            }
+            g.open = true;
             self.cv.notify_all();
+            std::mem::take(&mut g.wakers)
+        };
+        // Fire outside the gate lock; the scheduler core is a leaf lock,
+        // so this is also safe under a mailbox lock (claim paths).
+        for w in &woken {
+            w.wake();
         }
     }
 
     fn is_open(&self) -> bool {
-        *self.open.lock().unwrap()
+        self.state.lock().unwrap().open
     }
 
     /// Park up to `timeout` for the gate; returns whether it is open.
     /// Parks route through `clock` so an event-mode task yields virtual
-    /// time instead of wedging its thread on the condvar.
-    fn wait_timeout(&self, clock: &Sched, timeout: Duration) -> bool {
+    /// time instead of wedging its thread on the condvar; the park
+    /// registers a wake edge and lengthens its fallback via
+    /// [`Sched::fallback_tick`] — the CTS does the waking, the timer
+    /// only catches missed edges.
+    fn wait_timeout(&self, clock: &Arc<Sched>, timeout: Duration) -> bool {
+        let timeout = clock.fallback_tick(timeout);
         let start = clock.now_ns();
         let budget = timeout.as_nanos() as u64;
-        let mut g = self.open.lock().unwrap();
-        while !*g {
+        let mut g = self.state.lock().unwrap();
+        while !g.open {
             let elapsed = clock.now_ns().saturating_sub(start);
             if elapsed >= budget {
                 break;
             }
-            g = clock.wait_timeout(&self.open, g, &self.cv, Duration::from_nanos(budget - elapsed));
+            if let Some(h) = clock.wake_handle() {
+                if !g.wakers.iter().any(|w| w.task() == h.task()) {
+                    g.wakers.push(h);
+                }
+            }
+            g = clock.wait_timeout(&self.state, g, &self.cv, Duration::from_nanos(budget - elapsed));
         }
-        *g
+        g.open
     }
 }
 
@@ -273,6 +301,10 @@ struct PostedEntry {
     slot: Option<Delivery>,
     /// Private wakeup for this waiter (paired with the mailbox mutex).
     cv: Arc<Condvar>,
+    /// Wake edge of the event-mode task parked on this entry, if any —
+    /// fired (and consumed) when a send fills the slot, so the waiter's
+    /// park is retimed to the delivery instant.
+    waker: Option<WakeHandle>,
 }
 
 /// Pending receives, indexed like the unexpected queue: exact specs live in
@@ -304,6 +336,7 @@ impl PostedQueue {
                 spec,
                 slot: None,
                 cv: cv.clone(),
+                waker: None,
             },
         );
         (id, cv)
@@ -320,6 +353,7 @@ impl PostedQueue {
                 spec,
                 slot: Some(got),
                 cv: Arc::new(Condvar::new()),
+                waker: None,
             },
         );
         id
@@ -344,14 +378,28 @@ impl PostedQueue {
     }
 
     /// Deliver `d` into entry `id`, unlist it, release the rendezvous
-    /// sender (the receive matched), and wake exactly that waiter.
+    /// sender (the receive matched), and wake exactly that waiter — its
+    /// registered wake edge is retimed to the delivery's post instant.
     fn fill(&mut self, id: u64, d: Delivery) {
         let key = self.entries.get(&id).expect("filled entry exists").spec.exact_key();
         Self::unlist_from(&mut self.exact, &mut self.wild, key, id);
         let e = self.entries.get_mut(&id).expect("filled entry exists");
         d.claim();
+        let at = d.sent_at;
         e.slot = Some(d);
         e.cv.notify_all();
+        if let Some(w) = e.waker.take() {
+            w.wake_at(at);
+        }
+    }
+
+    /// Register (or refresh) the wake edge of the task about to park on
+    /// entry `id`. Consumed by [`PostedQueue::fill`]; the waiter
+    /// re-registers before every park.
+    fn set_waker(&mut self, id: u64, h: WakeHandle) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.waker = Some(h);
+        }
     }
 
     fn unlist_from(
@@ -397,10 +445,15 @@ impl PostedQueue {
         e.slot
     }
 
-    /// Wake every pending waiter (kill/revoke/finalize paths).
-    fn notify_all_waiters(&self) {
-        for e in self.entries.values() {
+    /// Wake every pending waiter (kill/revoke/finalize paths), firing
+    /// and consuming any registered wake edges so event-mode waiters
+    /// observe the state change now instead of at their fallback tick.
+    fn notify_all_waiters(&mut self) {
+        for e in self.entries.values_mut() {
             e.cv.notify_all();
+            if let Some(w) = e.waker.take() {
+                w.wake();
+            }
         }
     }
 }
@@ -429,6 +482,11 @@ struct MailboxInner {
     /// Threads currently parked in [`Fabric::wait_new_mail`]; the bell is
     /// only rung when somebody is listening.
     bell_waiters: usize,
+    /// Wake edges of event-mode tasks parked in
+    /// [`Fabric::wait_new_mail`]: drained and retimed to the delivery
+    /// instant by every arrival (and by [`Fabric::wake_all`]). Waiters
+    /// re-register before each park, so a drained edge costs one push.
+    wakers: Vec<WakeHandle>,
 }
 
 /// Per-rank mailbox: the two matching queues plus a bell for clock-parked
@@ -760,7 +818,14 @@ impl Fabric {
             None => inner.unexpected.push(d),
         }
         let ring = inner.bell_waiters > 0;
+        let woken = std::mem::take(&mut inner.wakers);
         drop(guard);
+        // Wake edges: retime parked pollers to this delivery's post
+        // instant. In event mode the sender holds the run token, so the
+        // retime is ordered before any other task can observe the mail.
+        for w in &woken {
+            w.wake_at(sent_at);
+        }
         if ring {
             mb.bell.notify_all();
         }
@@ -916,7 +981,11 @@ impl Fabric {
         // an arrival once, but parked pollers compare, not count).
         inner.arrivals += 1;
         let ring = inner.bell_waiters > 0;
+        let woken = std::mem::take(&mut inner.wakers);
         drop(guard);
+        for w in &woken {
+            w.wake();
+        }
         if ring {
             mb.bell.notify_all();
         }
@@ -935,7 +1004,15 @@ impl Fabric {
     /// remaining budget instead of returning early. Returns the current
     /// clock. Replaces hot-path spinning: pollers alternate try_recv /
     /// failure-check / `wait_new_mail`.
+    ///
+    /// Event-mode tasks register a wake edge on the mailbox before each
+    /// park, so a delivery retimes them to its post instant; the
+    /// caller's tick is floored via [`Sched::fallback_tick`] — it only
+    /// bounds missed-edge recovery, and the callers are predicate loops,
+    /// so a longer fallback changes latency by nothing and liveness not
+    /// at all.
     pub fn wait_new_mail(&self, me: usize, last: u64, timeout: Duration) -> u64 {
+        let timeout = self.clock.fallback_tick(timeout);
         let start = self.clock.now_ns();
         let budget = timeout.as_nanos() as u64;
         let mb = &self.boxes[me];
@@ -945,6 +1022,11 @@ impl Fabric {
             let elapsed = self.clock.now_ns().saturating_sub(start);
             if elapsed >= budget {
                 break;
+            }
+            if let Some(h) = self.clock.wake_handle() {
+                if !guard.wakers.iter().any(|w| w.task() == h.task()) {
+                    guard.wakers.push(h);
+                }
             }
             guard.bell_waiters += 1;
             guard = self.clock.wait_timeout(
@@ -1014,7 +1096,16 @@ impl Fabric {
                     detail: format!("{} recv {:?}", self.label, spec),
                 });
             }
-            let wait = POLL_TICK.min(Duration::from_nanos(budget - elapsed));
+            // The fill path fires this entry's wake edge, so the poll
+            // tick is only missed-edge/poison-observation insurance and
+            // runs at the lazy event-mode floor.
+            let wait = self
+                .clock
+                .fallback_tick(POLL_TICK)
+                .min(Duration::from_nanos(budget - elapsed));
+            if let Some(h) = self.clock.wake_handle() {
+                guard.posted.set_waker(id, h);
+            }
             guard = self.clock.wait_timeout(&mb.inner, guard, &cv, wait);
             if let Err(e) = self.procs.check_poison(me) {
                 let inner = &mut *guard;
@@ -1048,16 +1139,23 @@ impl Fabric {
         self.boxes[rank].inner.lock().unwrap().unexpected.clear();
     }
 
-    /// Wake all blocked receivers and parked pollers (invoked by the kill
-    /// and revoke paths so poisoned ranks notice promptly instead of
-    /// waiting out their poll tick).
+    /// Wake all blocked receivers and parked pollers (invoked by the
+    /// kill, revoke, and failure-publish paths so poisoned ranks — and
+    /// ranks waiting on a dead peer — notice promptly instead of waiting
+    /// out their poll tick). Fires every registered wake edge, which is
+    /// what lets the event-mode fallback ticks be lazy: state changes
+    /// that matter always ring here.
     pub fn wake_all(&self) {
         for mb in &self.boxes {
             let mut inner = mb.inner.lock().unwrap();
             inner.wakes += 1;
             inner.posted.notify_all_waiters();
             let ring = inner.bell_waiters > 0;
+            let woken = std::mem::take(&mut inner.wakers);
             drop(inner);
+            for w in &woken {
+                w.wake();
+            }
             if ring {
                 mb.bell.notify_all();
             }

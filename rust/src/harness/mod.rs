@@ -89,10 +89,14 @@ pub struct RunResult {
     pub exec_mode: &'static str,
     /// Event-scheduler counters (all zero under threaded mode):
     /// scheduling decisions taken, virtual nanoseconds the clock jumped,
-    /// and the ready-queue high-water mark.
+    /// the ready-queue high-water mark, wake edges delivered (retimes of
+    /// parked waiters — DESIGN.md §8), and empty parks (a wakable task's
+    /// fallback timer expired with no edge: pure polling waste).
     pub sched_events: u64,
     pub sched_virtual_ns: u64,
     pub sched_ready_peak: u64,
+    pub sched_wake_edges: u64,
+    pub sched_empty_parks: u64,
     /// Latency histogram snapshots (recv-wait, rendezvous-stall, GC-round,
     /// recovery-stall), merged over ranks.
     pub hists: Vec<HistSnapshot>,
@@ -220,8 +224,7 @@ pub fn run_app(
     let app_s = report.phase_seconds(Phase::App);
     // Both fabrics share the job's scheduler, so one snapshot covers the
     // whole world (zeros under threaded mode).
-    let (sched_events, sched_virtual_ns, sched_ready_peak) =
-        report.empi_fabric.clock().snapshot();
+    let sched = report.empi_fabric.clock().snapshot();
     let (payload_copies, payload_copy_bytes) = report.empi_fabric.metrics.copies_snapshot();
     RunResult {
         app,
@@ -256,9 +259,11 @@ pub fn run_app(
         restore_s: report.phase_seconds(Phase::Restore),
         coll_selects: report.empi_fabric.metrics.selects.snapshot(),
         exec_mode: report.empi_fabric.clock().mode().name(),
-        sched_events,
-        sched_virtual_ns,
-        sched_ready_peak,
+        sched_events: sched.events,
+        sched_virtual_ns: sched.advanced_ns,
+        sched_ready_peak: sched.ready_peak,
+        sched_wake_edges: sched.wake_edges,
+        sched_empty_parks: sched.empty_parks,
         hists: report.obs.hists.snapshot(),
         episodes: report.obs.flight.episodes(),
         trace_events: report.obs.tracer.kept(),
@@ -310,12 +315,25 @@ mod tests {
         assert!(r.sched_events > 0, "event mode must count dispatches");
         assert!(r.sched_virtual_ns > 0, "virtual clock must have advanced");
         assert!(r.sched_ready_peak > 0);
+        assert!(
+            r.sched_wake_edges > 0,
+            "a PartRePer run parks on mail; deliveries must fire wake edges"
+        );
         // Threaded runs report zeros (counters are event-scheduler-only).
         cfg.set("exec.mode", "threaded").unwrap();
         let t = run_app(&cfg, AppKind::Ep, Backend::PartReper, 2, None);
         assert!(t.completed(), "{:?}", t.errors);
         assert_eq!(t.exec_mode, "threaded");
-        assert_eq!((t.sched_events, t.sched_virtual_ns, t.sched_ready_peak), (0, 0, 0));
+        assert_eq!(
+            (
+                t.sched_events,
+                t.sched_virtual_ns,
+                t.sched_ready_peak,
+                t.sched_wake_edges,
+                t.sched_empty_parks,
+            ),
+            (0, 0, 0, 0, 0)
+        );
     }
 
     #[test]

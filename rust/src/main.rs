@@ -163,9 +163,17 @@ fn main() {
                 "copies: materialized={} bytes={}",
                 r.payload_copies, r.payload_copy_bytes
             );
+            // Split total dispatches into productive grants vs empty timer
+            // parks so polling waste is visible in before/after runs.
             println!(
-                "sched: mode={} events={} virtual_ns={} ready_peak={}",
-                r.exec_mode, r.sched_events, r.sched_virtual_ns, r.sched_ready_peak
+                "sched: mode={} events={} productive={} empty_parks={} wake_edges={} virtual_ns={} ready_peak={}",
+                r.exec_mode,
+                r.sched_events,
+                r.sched_events.saturating_sub(r.sched_empty_parks),
+                r.sched_empty_parks,
+                r.sched_wake_edges,
+                r.sched_virtual_ns,
+                r.sched_ready_peak
             );
             for h in &r.hists {
                 println!(

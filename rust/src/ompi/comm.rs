@@ -58,10 +58,15 @@ impl CommRegistry {
     }
 }
 
-/// Per-poll wait while blocked in consensus.
+/// Per-poll wait while blocked in consensus. Event mode floors it to the
+/// 10 ms fallback tick: proposals/decisions are mail, so they retime the
+/// parked participant at delivery (§8 wake edges) and the timer only
+/// covers a missed edge.
 const CONSENSUS_TICK: Duration = Duration::from_millis(1);
 /// Bound on consensus iterations before declaring a wedge (protocol bug or
-/// everything died) — surfaces as a loud timeout, not a hang.
+/// everything died) — surfaces as a loud timeout, not a hang. With the
+/// event-mode fallback floor the bound is up to 300 virtual seconds; a
+/// wedged consensus still surfaces, just measured on the virtual clock.
 const MAX_SPINS: u64 = 30_000;
 
 // Tag layout for internal ops: op * 2^40 + seq. Negative space is fine —

@@ -47,7 +47,8 @@ impl From<CommError> for OpError {
 
 /// Park interval while waiting for mail: bounds failure-detection latency
 /// on the hot path (the paper's interleaved test+check loop, without the
-/// busy-wait).
+/// busy-wait). Event mode floors it to the 10 ms fallback tick — mail
+/// and failure publishes retime the waiter directly (§8 wake edges).
 const PARK_TICK: std::time::Duration = std::time::Duration::from_micros(200);
 
 /// The failure-check context threaded through guarded operations.

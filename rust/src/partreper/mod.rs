@@ -52,7 +52,9 @@ use crate::procmgr::RankCtx;
 use crate::restore::{self, OwnerPushState, PushMsg, RestoreStore};
 use crate::util::bytes::{ByteReader, ByteWriter};
 
-/// Park interval for a spare's standby loop.
+/// Park interval for a spare's standby loop. Event mode floors it to the
+/// 10 ms fallback tick; adoption mail retimes the spare at delivery time
+/// (§8 wake edges), so the longer timer costs no latency.
 const STANDBY_TICK: Duration = Duration::from_micros(500);
 
 /// Fabric tag for log-GC acknowledgment gossip (on the OMPI control
@@ -64,7 +66,9 @@ pub(crate) const TAG_GC_OFFER: i64 = 1;
 /// rather than wedge (peers emit offers at their own cadence; an idle peer
 /// may have nothing new to acknowledge).
 const BACKPRESSURE_TRIES: usize = 50;
-/// Park interval between backpressure retries.
+/// Park interval between backpressure retries. Event mode floors it to
+/// the 10 ms fallback tick; acknowledgment gossip arrives as wake edges,
+/// so the worst case is 50 × 10 ms of *virtual* time with no wall cost.
 const BACKPRESSURE_TICK: Duration = Duration::from_micros(200);
 
 /// Mutable world state, rebuilt by the error handler.

@@ -61,7 +61,9 @@ use super::log::{Channel, MessageLog};
 use super::{PartReper, State};
 
 /// Park interval between progress passes (same bound as the blocking
-/// paths' poll ticks).
+/// paths' poll ticks). Under event mode the fabric floors this to the
+/// 10 ms fallback tick — completions and repairs arrive as §8 wake
+/// edges, so the timer only covers a missed edge.
 const PARK_TICK: Duration = Duration::from_micros(200);
 
 /// A batch that makes no progress for this long — no completion, no

@@ -168,8 +168,10 @@ impl JobWorld {
         let cluster = Cluster::new(n, cfg.cores_per_node);
         let procs = ProcSet::new(n);
         // One scheduler per job; both fabrics share it so virtual time is
-        // a single total order across EMPI and OMPI traffic.
-        let sched = Sched::new(cfg.exec);
+        // a single total order across EMPI and OMPI traffic. Task stacks
+        // are configurable (`sched.stack_bytes`) so huge event-mode
+        // worlds can fit under the OS thread/map ceilings (README).
+        let sched = Sched::with_stack_bytes(cfg.exec, cfg.sched.stack_bytes);
         // One observability bundle per job, created before the fabrics so
         // both embed it: every span, episode and histogram sample is
         // timestamped by this job's scheduler clock (one domain).
@@ -287,6 +289,9 @@ where
         world.detector.clone(),
         world.empi_server.clone(),
         Some(world.obs.clone()),
+        // Failure publishes ring both fabrics (wake edges) so parked
+        // survivors observe a death at publish time, not a tick later.
+        vec![world.empi_fabric.clone(), world.ompi_fabric.clone()],
     );
     let main = Arc::new(main);
     let start = Instant::now();

@@ -36,7 +36,7 @@ impl Monitor {
         detector: Arc<FailureDetector>,
         empi_server: Arc<EmpiServer>,
     ) -> Self {
-        Self::start_on(Sched::threaded(), procs, detector, empi_server, None)
+        Self::start_on(Sched::threaded(), procs, detector, empi_server, None, Vec::new())
     }
 
     /// Start the pump as a task of `sched`, so in event mode the detect
@@ -44,13 +44,18 @@ impl Monitor {
     /// deterministic instead of host-load-dependent. When `obs` is given,
     /// each newly-published death drops a failure mark into the flight
     /// recorder — the publish-time half of the detection-latency record
-    /// (the injector marks kill time; see `obs::flight`).
+    /// (the injector marks kill time; see `obs::flight`). `fabrics` are
+    /// woken after every publish so event-mode ranks parked on a dead
+    /// peer's traffic observe the failure via a wake edge instead of
+    /// waiting out their (lazy) fallback tick — the failure-publish leg
+    /// of the DESIGN.md §8 wake-edge contract.
     pub fn start_on(
         sched: Arc<Sched>,
         procs: Arc<ProcSet>,
         detector: Arc<FailureDetector>,
         empi_server: Arc<EmpiServer>,
         obs: Option<Arc<JobObs>>,
+        fabrics: Vec<Arc<crate::fabric::Fabric>>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -81,6 +86,11 @@ impl Monitor {
                     // The EMPI server also gets its SIGCHLDs — the shim
                     // decides whether it reacts.
                     empi_server.waitpid_cycle(&procs);
+                    // Ring every fabric: ranks parked on traffic from the
+                    // dead peer re-check their guards now.
+                    for f in &fabrics {
+                        f.wake_all();
+                    }
                 }
                 sched2.sleep(DETECT_TICK);
             }
@@ -88,6 +98,9 @@ impl Monitor {
             let dead = procs.dead_ranks();
             note_new(&dead);
             detector.publish_many(&dead);
+            for f in &fabrics {
+                f.wake_all();
+            }
         });
         Self {
             stop,

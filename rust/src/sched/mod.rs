@@ -15,25 +15,32 @@
 //!   baseline is behaviour-preserving by construction.
 //! * **Event mode**: ranks are cooperatively scheduled tasks. Exactly
 //!   one task runs at a time (a run token passed through per-task
-//!   permits); a park becomes a timer `(deadline_ns, seq, task)` in a
-//!   binary heap, and when no task is ready the virtual clock jumps to
-//!   the earliest deadline. No notify path exists — wakeups are purely
-//!   timer-driven, so the lost-wakeup bug class is impossible and the
-//!   schedule is a deterministic function of the task set alone.
+//!   permits); a park becomes a timer entry in a binary heap, and when
+//!   no task is ready the virtual clock jumps to the earliest deadline.
+//!   Wakeups are timer-driven, but producers may *retime* a parked
+//!   consumer's entry to the delivery instant through a [`WakeHandle`]
+//!   (a **wake edge**): the heap is lazy-deletion (stale entries carry
+//!   an old per-task generation and are skipped on pop), so a retime is
+//!   one O(log n) push, and because only the single running task can
+//!   fire it, the retime is itself a deterministic event on the virtual
+//!   clock. A missed edge is never fatal — every wakable park keeps a
+//!   fallback timer and its caller re-checks a predicate, so the worst
+//!   case degrades to polling, it never wedges.
 //!
-//! Tasks are still OS threads (small stacks, [`TASK_STACK_BYTES`]), so
-//! rank code keeps its natural blocking style; the cooperative token
-//! means one process comfortably hosts thousands of ranks. Threads that
-//! are *not* registered tasks (the main thread, PJRT engine threads)
-//! fall back to real waits — they interact with the virtual world only
-//! through atomics and joins, never through its clock.
+//! Tasks are still OS threads (small stacks, [`TASK_STACK_BYTES`] by
+//! default, `sched.stack_bytes` to override), so rank code keeps its
+//! natural blocking style; the cooperative token means one process
+//! comfortably hosts tens of thousands of ranks. Threads that are *not*
+//! registered tasks (the main thread, PJRT engine threads) fall back to
+//! real waits — they interact with the virtual world only through
+//! atomics and joins, never through its clock.
 
 use std::cell::Cell;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -73,42 +80,68 @@ impl ExecMode {
     }
 }
 
-/// Cap on a single event-mode park. Callers are predicate loops, so a
-/// long timeout sliced into capped parks is semantically identical —
-/// and no task can oversleep an arrival by more than this much virtual
-/// time, since event mode has no notify path to cut a park short.
+/// Cap on a *foreign* (non-task) thread's real condvar wait against the
+/// virtual world: such a thread polls virtual state at real intervals,
+/// so the cap bounds how stale its view can get. Task parks are NOT
+/// capped — they run their full requested duration and rely on wake
+/// edges (or their predicate loop's fallback tick) for liveness.
 const EVENT_PARK_CAP: Duration = Duration::from_millis(1);
 
-/// Stack size for event-mode task threads. Virtual address space only;
-/// 16k tasks cost 16 GiB of *reservation*, pennies on 64-bit.
+/// Fallback floor applied by [`Sched::fallback_tick`] to event-mode
+/// predicate-loop parks that have a registered wake edge: the edge does
+/// the waking, so the poll tick only bounds recovery from a missed edge
+/// and can be two orders of magnitude lazier than the threaded-mode
+/// tick without costing latency.
+const EVENT_FALLBACK_TICK: Duration = Duration::from_millis(10);
+
+/// Default stack size for event-mode task threads. Virtual address
+/// space only; 16k tasks cost 16 GiB of *reservation*, pennies on
+/// 64-bit. Override per job via `sched.stack_bytes` (the 64k+-rank
+/// fig9b worlds shrink it to fit OS map-count ceilings — see README).
 pub const TASK_STACK_BYTES: usize = 1 << 20;
 
+/// Smallest stack [`Sched::with_stack_bytes`] will accept: enough for
+/// the deepest runtime path (collective recursion + error handler) with
+/// guard-page headroom.
+pub const MIN_STACK_BYTES: usize = 64 << 10;
+
 /// One run token slot: granted by the scheduler, consumed by the task.
+/// Lock-free hot path — a grant is one release store + `unpark`, an
+/// acquire is one CAS (the unpark token makes the register/park race
+/// benign: an unpark delivered before the park buffers and the park
+/// returns immediately). The scheduler's single-token invariant means
+/// at most one grant is ever outstanding per permit.
 struct Permit {
-    granted: Mutex<bool>,
-    cv: Condvar,
+    granted: AtomicBool,
+    /// The owning task's thread, registered on first acquire. Tasks are
+    /// pinned to their thread for life, so one registration suffices.
+    waiter: OnceLock<std::thread::Thread>,
 }
 
 impl Permit {
     fn new() -> Arc<Self> {
         Arc::new(Self {
-            granted: Mutex::new(false),
-            cv: Condvar::new(),
+            granted: AtomicBool::new(false),
+            waiter: OnceLock::new(),
         })
     }
 
     fn grant(&self) {
-        let mut g = self.granted.lock().unwrap();
-        *g = true;
-        self.cv.notify_one();
+        self.granted.store(true, Ordering::Release);
+        if let Some(t) = self.waiter.get() {
+            t.unpark();
+        }
     }
 
     fn acquire(&self) {
-        let mut g = self.granted.lock().unwrap();
-        while !*g {
-            g = self.cv.wait(g).unwrap();
+        let _ = self.waiter.set(std::thread::current());
+        while self
+            .granted
+            .compare_exchange(true, false, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            std::thread::park();
         }
-        *g = false;
     }
 }
 
@@ -120,6 +153,22 @@ enum TaskState {
     Done,
 }
 
+/// One timer-heap entry. The heap is min-ordered by `(deadline, seq)`
+/// (derive order — later fields never tie because `seq` is unique);
+/// `gen` implements lazy deletion: a pop whose `gen` doesn't match the
+/// task's current generation is a leftover from an earlier park (or an
+/// already-serviced retime) and is skipped. `edge` marks retime entries
+/// so the empty-park accounting can tell a productive wake from a
+/// fallback timeout.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TimerEntry {
+    deadline: u64,
+    seq: u64,
+    task: usize,
+    gen: u64,
+    edge: bool,
+}
+
 /// A schedule-point observer (see [`Sched::set_point_hook`]): called with
 /// the park's ordinal, on the yielding task's thread, outside the core
 /// lock — free to poison ranks and wake fabrics.
@@ -127,14 +176,22 @@ pub type PointHook = Arc<dyn Fn(u64) + Send + Sync>;
 
 /// Event-loop state. Exactly one task is `Running` (or the token is in
 /// flight to the next grantee) at any instant; every `Parked` task owns
-/// exactly one timer, so the heap never starves a sleeper.
+/// at least one live timer, so the heap never starves a sleeper.
 struct Core {
     now_ns: u64,
     seq: u64,
-    timers: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    timers: BinaryHeap<Reverse<TimerEntry>>,
     ready: VecDeque<usize>,
     tasks: Vec<TaskState>,
     permits: Vec<Arc<Permit>>,
+    /// Per-task timer generation; bumped on every grant so all entries
+    /// pushed for earlier parks (or duplicate retimes of this one) go
+    /// stale at once.
+    gens: Vec<u64>,
+    /// Whether the task's current park may legally be cut short by a
+    /// retime (predicate-loop fallback ticks: yes; `sleep` /
+    /// `wait_until_ns` exact waits: no — they ARE the time model).
+    wakable: Vec<bool>,
     started: bool,
     /// Scheduling decisions taken (grants).
     events: u64,
@@ -142,21 +199,71 @@ struct Core {
     advanced_ns: u64,
     /// High-water mark of the ready queue.
     ready_peak: u64,
+    /// Retime pushes taken through [`WakeHandle`]s.
+    wake_edges: u64,
+    /// Wakable parks that expired on their fallback timer instead of a
+    /// wake edge — the polling waste the edges exist to remove.
+    empty_parks: u64,
     /// Schedule points taken (event-mode parks), hook installed or not.
     points: u64,
     /// The schedule-point hook, if armed.
     hook: Option<PointHook>,
 }
 
-/// Scheduler counters for the run summary: `(events_processed,
-/// virtual_ns_advanced, max_ready_queue_depth)`.
-pub type SchedSnapshot = (u64, u64, u64);
+/// Scheduler counters for the run summary. All zeros in threaded mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedSnapshot {
+    /// Scheduling decisions taken (grants).
+    pub events: u64,
+    /// Total virtual nanoseconds the clock advanced.
+    pub advanced_ns: u64,
+    /// High-water mark of the ready queue.
+    pub ready_peak: u64,
+    /// Wake edges fired (retimes of parked waiters to delivery instants).
+    pub wake_edges: u64,
+    /// Wakable parks that ran to their fallback timeout with nothing to
+    /// do — the empty-poll waste; `empty_parks / events` is fig9b's
+    /// empty-park ratio.
+    pub empty_parks: u64,
+}
 
 static NEXT_SCHED_ID: AtomicUsize = AtomicUsize::new(1);
 
 thread_local! {
     /// `(sched id, task id)` of the task this thread runs, if any.
     static CURRENT: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+/// A producer-side handle to one parked consumer task: calling
+/// [`WakeHandle::wake_at`] retimes the consumer's fallback timer to the
+/// delivery instant (a wake edge). Cheap to clone and to fire on a task
+/// that is no longer parked (the retime is dropped). Handles are minted
+/// by the consumer itself via [`Sched::wake_handle`] and registered
+/// with its wake source (a mailbox, a rendezvous gate) before parking.
+#[derive(Clone)]
+pub struct WakeHandle {
+    sched: Arc<Sched>,
+    task: usize,
+}
+
+impl WakeHandle {
+    /// The task this handle wakes (used by wake sources to deduplicate
+    /// registrations).
+    pub fn task(&self) -> usize {
+        self.task
+    }
+
+    /// Wake the task now (virtual now — the retime clamps to the
+    /// current clock).
+    pub fn wake(&self) {
+        self.sched.retime(self.task, 0);
+    }
+
+    /// Retime the task's park to virtual instant `ns` (clamped to the
+    /// current clock so time never rewinds).
+    pub fn wake_at(&self, ns: u64) {
+        self.sched.retime(self.task, ns);
+    }
 }
 
 /// The clock + executor for one job world. Threaded mode is stateless
@@ -166,15 +273,27 @@ pub struct Sched {
     mode: ExecMode,
     id: usize,
     epoch: Instant,
+    /// Stack reservation per event-mode task thread (`sched.stack_bytes`).
+    stack_bytes: usize,
     core: Mutex<Core>,
 }
 
 impl Sched {
     pub fn new(mode: ExecMode) -> Arc<Self> {
+        Self::with_stack_bytes(mode, TASK_STACK_BYTES)
+    }
+
+    /// Build a scheduler with an explicit per-task stack reservation
+    /// (event mode only; threaded spawns use the platform default).
+    /// Floored at [`MIN_STACK_BYTES`]. The ≥64k-rank fig9b worlds pass
+    /// small stacks here to stay under the OS thread/map ceilings
+    /// documented in the README.
+    pub fn with_stack_bytes(mode: ExecMode, stack_bytes: usize) -> Arc<Self> {
         Arc::new(Self {
             mode,
             id: NEXT_SCHED_ID.fetch_add(1, Ordering::Relaxed),
             epoch: Instant::now(),
+            stack_bytes: stack_bytes.max(MIN_STACK_BYTES),
             core: Mutex::new(Core {
                 now_ns: 0,
                 seq: 0,
@@ -182,10 +301,14 @@ impl Sched {
                 ready: VecDeque::new(),
                 tasks: Vec::new(),
                 permits: Vec::new(),
+                gens: Vec::new(),
+                wakable: Vec::new(),
                 started: false,
                 events: 0,
                 advanced_ns: 0,
                 ready_peak: 0,
+                wake_edges: 0,
+                empty_parks: 0,
                 points: 0,
                 hook: None,
             }),
@@ -220,13 +343,71 @@ impl Sched {
         CURRENT.with(|c| c.get()).and_then(|(sid, task)| (sid == self.id).then_some(task))
     }
 
+    /// A [`WakeHandle`] for the calling task, or `None` when the caller
+    /// is not an event-mode task (threaded mode, foreign threads) —
+    /// wake sources treat `None` as "nothing to register", which keeps
+    /// threaded behaviour untouched.
+    pub fn wake_handle(self: &Arc<Self>) -> Option<WakeHandle> {
+        if self.mode != ExecMode::Event {
+            return None;
+        }
+        self.my_task().map(|task| WakeHandle {
+            sched: self.clone(),
+            task,
+        })
+    }
+
+    /// Lengthen a predicate-loop fallback tick in event mode (identity
+    /// in threaded mode): parks that registered a wake edge are woken at
+    /// delivery time, so their poll tick only bounds missed-edge
+    /// recovery and failure/poison observation latency — both of which
+    /// also fire `Fabric::wake_all`-style edges on the hot paths.
+    pub fn fallback_tick(&self, tick: Duration) -> Duration {
+        if self.is_event() {
+            tick.max(EVENT_FALLBACK_TICK)
+        } else {
+            tick
+        }
+    }
+
+    /// Retime `task`'s current park to virtual instant `target_ns`
+    /// (clamped to now): one lazy-deletion heap push, O(log n). A no-op
+    /// unless the task is parked *wakably* — exact waits (`sleep`,
+    /// `wait_until_ns`, NIC settles) are the time model itself and must
+    /// never be cut short. Only the running task (or a foreign thread
+    /// that the running task is synchronizing with) can call this, so
+    /// the retime is totally ordered on the virtual clock — the §8
+    /// determinism argument.
+    pub fn retime(&self, task: usize, target_ns: u64) {
+        if self.mode != ExecMode::Event {
+            return;
+        }
+        let mut core = self.core.lock().unwrap();
+        if task >= core.tasks.len() || core.tasks[task] != TaskState::Parked || !core.wakable[task]
+        {
+            return;
+        }
+        let deadline = target_ns.max(core.now_ns);
+        core.seq += 1;
+        let entry = TimerEntry {
+            deadline,
+            seq: core.seq,
+            task,
+            gen: core.gens[task],
+            edge: true,
+        };
+        core.timers.push(Reverse(entry));
+        core.wake_edges += 1;
+    }
+
     /// Install the schedule-point hook: called once per event-mode park
     /// with that park's ordinal (0, 1, 2, … over the whole run). Event
     /// mode runs exactly one task at a time and every blocking point
     /// routes through a park, so the ordinal stream is a total order over
     /// the run's scheduling decisions — the failure-schedule explorer's
-    /// injection coordinate system (DESIGN.md §10). Threaded mode never
-    /// parks virtually, so the hook never fires there. Arm before
+    /// injection coordinate system (DESIGN.md §10). Wake-edge retimes
+    /// are not parks and take no ordinal. Threaded mode never parks
+    /// virtually, so the hook never fires there. Arm before
     /// [`Sched::start`]; the hook runs on the yielding task's thread with
     /// the core lock *released*, so it may poison ranks and wake fabrics.
     pub fn set_point_hook(&self, hook: impl Fn(u64) + Send + Sync + 'static) {
@@ -243,17 +424,24 @@ impl Sched {
     /// Scheduler counters (zeros in threaded mode).
     pub fn snapshot(&self) -> SchedSnapshot {
         if self.mode == ExecMode::Threaded {
-            return (0, 0, 0);
+            return SchedSnapshot::default();
         }
         let core = self.core.lock().unwrap();
-        (core.events, core.advanced_ns, core.ready_peak)
+        SchedSnapshot {
+            events: core.events,
+            advanced_ns: core.advanced_ns,
+            ready_peak: core.ready_peak,
+            wake_edges: core.wake_edges,
+            empty_parks: core.empty_parks,
+        }
     }
 
     // ---------------------------------------------------------- executor
 
     /// Spawn a rank/service body. Threaded: a plain named OS thread.
-    /// Event: a task thread that blocks until the scheduler grants it
-    /// the run token — nothing runs before [`Sched::start`].
+    /// Event: a task thread (stack per [`Sched::with_stack_bytes`]) that
+    /// blocks until the scheduler grants it the run token — nothing runs
+    /// before [`Sched::start`].
     pub fn spawn<T: Send + 'static>(
         self: &Arc<Self>,
         name: &str,
@@ -268,13 +456,15 @@ impl Sched {
                     let me = core.tasks.len();
                     core.tasks.push(TaskState::Ready);
                     core.permits.push(Permit::new());
+                    core.gens.push(0);
+                    core.wakable.push(false);
                     core.ready.push_back(me);
                     core.ready_peak = core.ready_peak.max(core.ready.len() as u64);
                     me
                 };
                 let sched = self.clone();
                 builder
-                    .stack_size(TASK_STACK_BYTES)
+                    .stack_size(self.stack_bytes)
                     .spawn(move || {
                         let permit = {
                             let core = sched.core.lock().unwrap();
@@ -312,36 +502,51 @@ impl Sched {
     }
 
     /// Hand the run token to the next runnable task: ready queue first
-    /// (FIFO — spawn/wake order), else the earliest timer, advancing the
-    /// virtual clock to its deadline. Caller holds the core lock and has
-    /// already retired/parked the current holder, so granting here keeps
-    /// the single-token invariant.
+    /// (FIFO — spawn/wake order), else the earliest live timer, advancing
+    /// the virtual clock to its deadline. Stale heap entries (old
+    /// generation, or their task not parked) are popped and dropped —
+    /// lazy deletion. Granting bumps the task's generation so every
+    /// remaining entry for the ending park goes stale at once. Caller
+    /// holds the core lock and has already retired/parked the current
+    /// holder, so granting here keeps the single-token invariant.
     fn dispatch_locked(&self, core: &mut Core) {
         core.events += 1;
         if let Some(t) = core.ready.pop_front() {
             core.tasks[t] = TaskState::Running;
+            core.gens[t] = core.gens[t].wrapping_add(1);
             core.permits[t].grant();
             return;
         }
-        while let Some(&Reverse((deadline, _, t))) = core.timers.peek() {
+        while let Some(&Reverse(e)) = core.timers.peek() {
             core.timers.pop();
-            if core.tasks[t] != TaskState::Parked {
+            let t = e.task;
+            if core.tasks[t] != TaskState::Parked || e.gen != core.gens[t] {
                 continue;
             }
-            if deadline > core.now_ns {
-                core.advanced_ns += deadline - core.now_ns;
-                core.now_ns = deadline;
+            if e.deadline > core.now_ns {
+                core.advanced_ns += e.deadline - core.now_ns;
+                core.now_ns = e.deadline;
+            }
+            if !e.edge && core.wakable[t] {
+                // A fallback poll tick ran to completion with no edge:
+                // either nothing happened (idle poll) or an edge was
+                // missed — both are the waste this counter surfaces.
+                core.empty_parks += 1;
             }
             core.tasks[t] = TaskState::Running;
+            core.gens[t] = core.gens[t].wrapping_add(1);
             core.permits[t].grant();
             return;
         }
         // Nothing runnable: every task is Done (or none were spawned).
-        // Parked implies a timer, so this cannot strand a sleeper.
+        // Parked implies a live timer, so this cannot strand a sleeper.
     }
 
     /// Park task `me` until virtual `deadline`, yielding the token.
-    fn park_until_locked(&self, me: usize, deadline: u64) {
+    /// `wakable` marks whether a [`WakeHandle::wake_at`] may legally cut
+    /// the park short (predicate-loop fallback ticks) or the deadline is
+    /// exact (`sleep`, `wait_until_ns` — the time model itself).
+    fn park_until_locked(&self, me: usize, deadline: u64, wakable: bool) {
         // Schedule point: number this park and run the hook *before*
         // yielding, outside the lock. Only the current token holder can
         // be here, so ordinals are a deterministic total order, and a
@@ -362,9 +567,16 @@ impl Sched {
             // (and re-acquires) deterministically instead of spinning.
             let deadline = deadline.max(core.now_ns + 1);
             core.seq += 1;
-            let seq = core.seq;
-            core.timers.push(Reverse((deadline, seq, me)));
+            let entry = TimerEntry {
+                deadline,
+                seq: core.seq,
+                task: me,
+                gen: core.gens[me],
+                edge: false,
+            };
+            core.timers.push(Reverse(entry));
             core.tasks[me] = TaskState::Parked;
+            core.wakable[me] = wakable;
             let permit = core.permits[me].clone();
             self.dispatch_locked(&mut core);
             permit
@@ -375,12 +587,13 @@ impl Sched {
     // ------------------------------------------------------------- clock
 
     /// Sleep for `dur`: real sleep (threaded / foreign threads), virtual
-    /// park (event-mode tasks).
+    /// park (event-mode tasks). Exact — never cut short by a wake edge
+    /// (the injector's Weibull gaps and tick cadences depend on it).
     pub fn sleep(&self, dur: Duration) {
         match (self.mode, self.my_task()) {
             (ExecMode::Event, Some(me)) => {
                 let now = self.core.lock().unwrap().now_ns;
-                self.park_until_locked(me, now.saturating_add(dur.as_nanos() as u64));
+                self.park_until_locked(me, now.saturating_add(dur.as_nanos() as u64), false);
             }
             _ => std::thread::sleep(dur),
         }
@@ -388,12 +601,14 @@ impl Sched {
 
     /// Wait until the clock reaches `target_ns`. Threaded keeps the
     /// fabric's historical busy-spin (NIC settle fidelity); event-mode
-    /// tasks park, turning wire time into pure virtual time.
+    /// tasks park exactly (the NIC settle IS the time model — a wake
+    /// edge must never cut it short), turning wire time into pure
+    /// virtual time.
     pub fn wait_until_ns(&self, target_ns: u64) {
         match (self.mode, self.my_task()) {
             (ExecMode::Event, Some(me)) => {
                 if self.core.lock().unwrap().now_ns < target_ns {
-                    self.park_until_locked(me, target_ns);
+                    self.park_until_locked(me, target_ns, false);
                 }
             }
             (ExecMode::Event, None) => {
@@ -413,10 +628,13 @@ impl Sched {
 
     /// The universal blocking-point adapter: every `cv.wait_timeout`
     /// park in a predicate loop routes through here. Threaded mode is
-    /// the exact historical wait; event mode drops the guard, parks on a
-    /// (capped) virtual timer — senders never notify across the mode
-    /// boundary — and re-locks. Callers re-check their predicate on
-    /// return, which is what makes the capped slice legal.
+    /// the exact historical wait; an event-mode task drops the guard,
+    /// parks on a *wakable* virtual timer for the full duration — a
+    /// registered wake edge retimes it to the delivery instant, and the
+    /// caller's predicate re-check on return is what makes both the
+    /// edge-wake and the fallback-timeout paths legal. Foreign threads
+    /// keep a capped real wait so their view of the virtual world is
+    /// bounded-stale.
     pub fn wait_timeout<'a, T>(
         &self,
         lock: &'a Mutex<T>,
@@ -427,9 +645,8 @@ impl Sched {
         match (self.mode, self.my_task()) {
             (ExecMode::Event, Some(me)) => {
                 drop(guard);
-                let slice = dur.min(EVENT_PARK_CAP);
                 let now = self.core.lock().unwrap().now_ns;
-                self.park_until_locked(me, now.saturating_add(slice.as_nanos() as u64));
+                self.park_until_locked(me, now.saturating_add(dur.as_nanos() as u64), true);
                 lock.lock().unwrap()
             }
             (ExecMode::Event, None) => cv.wait_timeout(guard, dur.min(EVENT_PARK_CAP)).unwrap().0,
@@ -449,7 +666,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         let b = s.now_ns();
         assert!(b > a, "clock must advance: {a} -> {b}");
-        assert_eq!(s.snapshot(), (0, 0, 0));
+        assert_eq!(s.snapshot(), SchedSnapshot::default());
     }
 
     #[test]
@@ -484,11 +701,11 @@ mod tests {
         // Round-robin: equal sleeps + FIFO seq order keep spawn order.
         let first_round: Vec<usize> = log[0..3].iter().map(|&(id, _)| id).collect();
         assert_eq!(first_round, vec![0, 1, 2]);
-        let (events, advanced, _) = s.snapshot();
-        assert!(events >= 12, "events {events}");
-        assert!(advanced >= 300, "virtual time advanced {advanced}");
-        // Virtual time moved ~400us regardless of wall speed.
-        assert!(s.now_ns() >= 4 * 100_000 - EVENT_PARK_CAP.as_nanos() as u64);
+        let snap = s.snapshot();
+        assert!(snap.events >= 12, "events {}", snap.events);
+        assert!(snap.advanced_ns >= 300, "virtual time advanced {}", snap.advanced_ns);
+        // Sleeps are exact timers: virtual time covers all 4 rounds.
+        assert!(s.now_ns() >= 4 * 100_000);
     }
 
     #[test]
@@ -533,8 +750,9 @@ mod tests {
                     g = s2.wait_timeout(m, g, cv, Duration::from_micros(200));
                     spins += 1;
                     if spins > 10 {
-                        // Nobody will ever flip the flag: the capped,
-                        // notify-free park loop still makes progress.
+                        // Nobody will ever flip the flag (and no wake
+                        // edge is registered): the fallback-timer park
+                        // loop still makes progress on its own.
                         return spins;
                     }
                 }
@@ -544,6 +762,90 @@ mod tests {
             let spins = h.join().unwrap();
             assert!(spins > 10, "mode {mode:?} wedged at {spins}");
         }
+    }
+
+    #[test]
+    fn wake_edges_cut_parks_short_but_never_early() {
+        let s = Sched::new(ExecMode::Event);
+        let slot: Arc<Mutex<Option<WakeHandle>>> = Arc::new(Mutex::new(None));
+        let state: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+        let woke_at = Arc::new(Mutex::new(0u64));
+        let (s2, slot2, st2, woke2) = (s.clone(), slot.clone(), state.clone(), woke_at.clone());
+        let hw = s.spawn("waiter", move || {
+            *slot2.lock().unwrap() = Some(s2.wake_handle().unwrap());
+            let (m, cv) = &*st2;
+            let mut g = m.lock().unwrap();
+            while !*g {
+                // Long fallback: without the edge this would oversleep
+                // the delivery by ~100ms of virtual time.
+                g = s2.wait_timeout(m, g, cv, Duration::from_millis(100));
+            }
+            *woke2.lock().unwrap() = s2.now_ns();
+        });
+        let (s3, slot3, st3) = (s.clone(), slot.clone(), state.clone());
+        let hk = s.spawn("waker", move || {
+            s3.sleep(Duration::from_micros(5));
+            *st3.0.lock().unwrap() = true;
+            let target = s3.now_ns() + 3_000;
+            slot3.lock().unwrap().take().unwrap().wake_at(target);
+            target
+        });
+        s.start();
+        let target = hk.join().unwrap();
+        hw.join().unwrap();
+        let woke = *woke_at.lock().unwrap();
+        // Never before the delivery timestamp, and exactly at it — the
+        // edge, not the 100ms fallback, decided the wake.
+        assert_eq!(woke, target, "wake must land exactly on the retime target");
+        let snap = s.snapshot();
+        assert!(snap.wake_edges >= 1, "edge not counted: {snap:?}");
+    }
+
+    #[test]
+    fn retime_storms_keep_the_clock_monotone_and_skip_stale_entries() {
+        let s = Sched::new(ExecMode::Event);
+        let slot: Arc<Mutex<Option<WakeHandle>>> = Arc::new(Mutex::new(None));
+        let state: Arc<(Mutex<u32>, Condvar)> = Arc::new((Mutex::new(0), Condvar::new()));
+        let stamps = Arc::new(Mutex::new(Vec::new()));
+        let (s2, slot2, st2, stamps2) = (s.clone(), slot.clone(), state.clone(), stamps.clone());
+        let hw = s.spawn("waiter", move || {
+            *slot2.lock().unwrap() = Some(s2.wake_handle().unwrap());
+            let (m, cv) = &*st2;
+            let mut g = m.lock().unwrap();
+            while *g < 4 {
+                g = s2.wait_timeout(m, g, cv, Duration::from_secs(1));
+                stamps2.lock().unwrap().push(s2.now_ns());
+            }
+        });
+        let (s3, slot3, st3) = (s.clone(), slot.clone(), state.clone());
+        let hs = s.spawn("storm", move || {
+            for _round in 0..4u32 {
+                s3.sleep(Duration::from_micros(50));
+                *st3.0.lock().unwrap() += 1;
+                let h = slot3.lock().unwrap().clone().unwrap();
+                let now = s3.now_ns();
+                // A burst per round: a past instant (clamps to now), the
+                // real target, and a late duplicate that must go stale
+                // once the earliest edge wins the grant.
+                h.wake_at(now.saturating_sub(10_000));
+                h.wake_at(now + 2_000);
+                h.wake_at(now + 900_000);
+            }
+        });
+        s.start();
+        hs.join().unwrap();
+        hw.join().unwrap();
+        let st = stamps.lock().unwrap();
+        assert!(
+            st.windows(2).all(|w| w[0] <= w[1]),
+            "virtual clock rewound under retime storm: {st:?}"
+        );
+        // Exactly one wake per round: the earliest valid edge wins and
+        // the grant's generation bump lazily deletes the other two.
+        assert_eq!(st.len(), 4, "stale entries must not re-wake: {st:?}");
+        let snap = s.snapshot();
+        assert_eq!(snap.wake_edges, 12, "3 retimes per round: {snap:?}");
+        assert_eq!(snap.empty_parks, 0, "every wake was an edge: {snap:?}");
     }
 
     #[test]

@@ -67,8 +67,10 @@ fn run_ranks_event<T: Send + 'static>(
     // Nothing runs until the full task set exists.
     sched.start();
     let out = handles.into_iter().map(|h| h.join().unwrap()).collect();
-    let (events, _, _) = sched.snapshot();
-    assert!(events > 0, "event mode must actually schedule");
+    assert!(
+        sched.snapshot().events > 0,
+        "event mode must actually schedule"
+    );
     out
 }
 

@@ -1,0 +1,118 @@
+//! Wake-edge determinism at scale (DESIGN.md §8): a 4096-rank bare-EMPI
+//! event world — ring exchange, allreduce, one mid-run death noticed
+//! off-wire via the failure wake edge, survivor regroup — must be
+//! *digest-identical across repeated runs*: same scheduler snapshot
+//! (event count, virtual time, wake edges, empty parks), same survivor
+//! reductions, same final clock. Retimes are fired while the firing task
+//! holds the run token, so each one is a pure function of the schedule
+//! prefix; this test is the cross-run half of that argument (the
+//! cross-mode half lives in `tests/xmode_equivalence.rs`).
+
+use std::time::Duration;
+
+use partreper::empi::{coll, Comm, DType, ReduceOp, Src, Tag};
+use partreper::fabric::{AllreduceAlg, CollTuning, Fabric, NetModel, ProcSet};
+use partreper::sched::{ExecMode, Sched, SchedSnapshot};
+use partreper::util::{u64s_from_bytes, u64s_to_bytes};
+
+const N: usize = 4096;
+
+struct RunDigest {
+    sched: SchedSnapshot,
+    final_ns: u64,
+    survivor_sums: Vec<u64>,
+}
+
+/// One world, same shape as the fig9b scale bench: small stacks keep
+/// 4096 threads cheap, and the victim's `wake_all` is the only thing
+/// standing between the survivors and a 10 ms fallback park each.
+fn run_world() -> RunDigest {
+    let tuning = CollTuning {
+        // O(log n) rounds; a ring allreduce is O(n) rounds at this scale.
+        allreduce: Some(AllreduceAlg::RecursiveDoubling),
+        ..Default::default()
+    };
+    let procs = ProcSet::new(N);
+    let sched = Sched::with_stack_bytes(ExecMode::Event, 256 << 10);
+    let fabric = Fabric::new_clocked(
+        "event-scale",
+        procs.clone(),
+        NetModel::instant(),
+        tuning,
+        sched.clone(),
+    );
+    let world_ctx = fabric.alloc_ctx();
+    let repair_ctx = fabric.alloc_ctx();
+    let victim = N / 2;
+    let handles: Vec<_> = (0..N)
+        .map(|r| {
+            let fabric = fabric.clone();
+            let procs = procs.clone();
+            sched.spawn(&format!("rank-{r}"), move || {
+                let comm = Comm::world(fabric.clone(), world_ctx, r);
+                let mut acc = r as u64 + 1;
+                let (right, left) = ((r + 1) % N, (r + N - 1) % N);
+                comm.send(right, 1, &acc.to_le_bytes()).unwrap();
+                let got = comm.recv(Src::Rank(left), Tag::Tag(1)).unwrap();
+                let bytes: [u8; 8] = got.data.as_slice().try_into().unwrap();
+                acc = acc.wrapping_add(u64::from_le_bytes(bytes));
+                let sum =
+                    coll::allreduce(&comm, DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]))
+                        .unwrap();
+                acc ^= u64s_from_bytes(&sum)[0];
+                if r == victim {
+                    procs.mark_dead(r);
+                    fabric.wake_all();
+                    return acc;
+                }
+                let mut mail = fabric.arrivals(r);
+                while !procs.is_dead(victim) {
+                    mail = fabric.wait_new_mail(r, mail, Duration::from_micros(500));
+                }
+                let group: Vec<usize> = (0..N).filter(|&x| x != victim).collect();
+                let me = if r < victim { r } else { r - 1 };
+                let comm = Comm::from_group(fabric, repair_ctx, group, me);
+                let sum =
+                    coll::allreduce(&comm, DType::U64, ReduceOp::Sum, &u64s_to_bytes(&[acc]))
+                        .unwrap();
+                u64s_from_bytes(&sum)[0]
+            })
+        })
+        .collect();
+    sched.start();
+    let outs: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    RunDigest {
+        sched: sched.snapshot(),
+        final_ns: sched.now_ns(),
+        survivor_sums: outs
+            .iter()
+            .enumerate()
+            .filter(|&(r, _)| r != victim)
+            .map(|(_, &v)| v)
+            .collect(),
+    }
+}
+
+#[test]
+fn four_k_rank_event_world_is_digest_identical_across_runs() {
+    let a = run_world();
+    let b = run_world();
+
+    // The run did real work and the wake edges actually fired.
+    assert!(a.sched.events > 0);
+    assert!(a.sched.advanced_ns > 0);
+    assert!(
+        a.sched.wake_edges > 0,
+        "mail deliveries and the death broadcast must retime parked waiters"
+    );
+    assert!(
+        a.survivor_sums.windows(2).all(|w| w[0] == w[1]),
+        "survivors disagree on the post-repair reduction"
+    );
+
+    // Determinism: every counter, the virtual clock, and every rank's
+    // result replays byte-for-byte.
+    assert_eq!(a.sched, b.sched, "scheduler snapshots diverged across runs");
+    assert_eq!(a.final_ns, b.final_ns, "virtual clocks diverged");
+    assert_eq!(a.survivor_sums, b.survivor_sums, "results diverged");
+}

@@ -16,6 +16,11 @@ use partreper::explore::{
 /// Probe a scenario's failure-free point space (the coordinate system the
 /// pinned seeds below are derived from — fractions of the total, so the
 /// seeds survive protocol changes that shift absolute point numbers).
+/// Re-derived for the §8 wake-edge engine: parks that used to re-fire
+/// every 1 ms of virtual time now mostly resolve on their first edge, so
+/// the ordinal stream is shorter and denser in *productive* parks — the
+/// same fractions land in the same protocol windows, and the explorer's
+/// tokens stay self-describing either way.
 fn probe_points(scenario: Scenario) -> u64 {
     let run = run_schedule(&Schedule::probe(scenario));
     check_run(&run).expect("probe must be clean");

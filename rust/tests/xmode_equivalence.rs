@@ -139,7 +139,7 @@ fn schedule_for(ncomp: usize, mode: ExecMode) -> ModeRun {
     assert_eq!(killed, 1, "{mode:?} ncomp={ncomp}: exactly the victim dies");
     sums.sort_unstable();
     let promotions = Counters::get(&report.total_counters().promotions);
-    let (_, virtual_ns, _) = report.empi_fabric.clock().snapshot();
+    let virtual_ns = report.empi_fabric.clock().snapshot().advanced_ns;
     ModeRun {
         dump: report.empi_fabric.tap_dump(),
         sums,
